@@ -1,0 +1,63 @@
+//! Ablation of the paper's two contributions: the validity model (V) and
+//! the hidden-feature model (A). Four variants on two layers:
+//!   ml2tuner       = P + V + A   (the paper's system)
+//!   ml2tuner-noV   = P + A       (no validity filter)
+//!   ml2tuner-noA   = P + V       (no hidden-feature re-rank)
+//!   ml2tuner-Ponly = P           (valid-only P, still not TVM's penalty P)
+
+use ml2tuner::prelude::*;
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::stats::mean;
+use ml2tuner::util::table::{f, Table};
+
+fn main() {
+    let repeats = 3;
+    let sim = Simulator::new(VtaConfig::zcu102());
+    for layer_name in ["conv1", "conv4"] {
+        let layer = resnet18::layer(layer_name).unwrap();
+        let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+        let mut table = Table::new(&[
+            "variant",
+            "best (ms, avg)",
+            "invalidity (avg)",
+            "trials-to-best (avg)",
+        ]);
+        let build: Vec<(&str, Box<dyn Fn(TunerConfig) -> Ml2Tuner>)> = vec![
+            ("ml2tuner", Box::new(Ml2Tuner::new)),
+            ("ml2tuner-noV", Box::new(|c| Ml2Tuner::new(c).without_v())),
+            ("ml2tuner-noA", Box::new(|c| Ml2Tuner::new(c).without_a())),
+            ("ml2tuner-Ponly",
+             Box::new(|c| Ml2Tuner::new(c).without_v().without_a())),
+        ];
+        for (name, mk) in build {
+            let mut best = Vec::new();
+            let mut inval = Vec::new();
+            let mut to_best = Vec::new();
+            for r in 0..repeats {
+                let cfg = TunerConfig {
+                    max_trials: 250,
+                    seed: 100 + r,
+                    ..Default::default()
+                };
+                let trace = mk(cfg).tune(&env);
+                if let Some(c) = trace.best_cycles() {
+                    best.push(sim.cycles_to_ms(c));
+                    to_best.push(
+                        trace.trials_to_reach(c as f64).unwrap() as f64,
+                    );
+                }
+                inval.push(trace.invalidity_ratio());
+            }
+            table.row(&[
+                name.to_string(),
+                f(mean(&best), 3),
+                f(mean(&inval), 3),
+                f(mean(&to_best), 0),
+            ]);
+        }
+        println!("--- ablation on {layer_name} ({repeats} repeats) ---");
+        table.print();
+        println!();
+    }
+}

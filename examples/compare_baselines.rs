@@ -1,0 +1,57 @@
+//! Baseline comparison on one layer: ML²Tuner vs the TVM approach vs
+//! random sampling — tuning curve, invalidity, convergence, estimated
+//! board wall-clock (the quantity invalid-filtering saves).
+
+use ml2tuner::prelude::*;
+use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::report::ProfilingCostModel;
+use ml2tuner::tuner::tvm_baseline::TvmTuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::table::{ascii_curve, f, Table};
+
+fn main() {
+    let layer_name = std::env::args().nth(1).unwrap_or("conv3".into());
+    let layer = resnet18::layer(&layer_name).expect("layer name");
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let cfg = TunerConfig { max_trials: 300, seed: 11, ..Default::default() };
+    let cost = ProfilingCostModel::default();
+    let sim = Simulator::new(VtaConfig::zcu102());
+
+    let mut table = Table::new(&[
+        "tuner",
+        "best (ms)",
+        "trials to converge",
+        "invalidity",
+        "est. board time (s)",
+    ]);
+    let tuners: Vec<Box<dyn Tuner>> = vec![
+        Box::new(ml2tuner::tuner::ml2tuner::Ml2Tuner::new(cfg.clone())),
+        Box::new(TvmTuner::new(cfg.clone())),
+        Box::new(RandomTuner::new(cfg.clone())),
+    ];
+    for mut t in tuners {
+        let trace = t.tune(&env);
+        let conv = trace.convergence(100);
+        table.row(&[
+            trace.tuner.clone(),
+            trace
+                .best_cycles()
+                .map(|c| f(sim.cycles_to_ms(c), 3))
+                .unwrap_or("-".into()),
+            conv.map(|(n, _)| n.to_string()).unwrap_or("-".into()),
+            f(trace.invalidity_ratio(), 3),
+            f(trace.estimated_wall_clock(&cost), 0),
+        ]);
+        if trace.tuner == "ml2tuner" {
+            println!("{} best-so-far curve (ms):", trace.tuner);
+            let ms: Vec<f64> = trace
+                .best_curve()
+                .iter()
+                .map(|&c| sim.cycles_to_ms(c.min(1e12) as u64))
+                .collect();
+            println!("{}", ascii_curve(&ms, 60, 8));
+        }
+    }
+    println!("--- {layer_name} ---");
+    table.print();
+}

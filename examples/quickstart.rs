@@ -1,0 +1,77 @@
+//! Quickstart: tune one ResNet18 conv layer on the simulated extended VTA
+//! with ML²Tuner, then validate the best schedule bit-exactly against the
+//! AOT-compiled JAX/Pallas golden model through PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ml2tuner::prelude::*;
+use ml2tuner::runtime::{golden, Runtime};
+use ml2tuner::tuner::{TuningEnv, TunerConfig};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::Tuner;
+use ml2tuner::vta::{functional, layout};
+use ml2tuner::workloads::synth;
+
+fn main() -> anyhow::Result<()> {
+    let layer = resnet18::layer("conv1").expect("conv1");
+    println!(
+        "tuning {} ({}x{}x{} -> {} filters, {} schedules in the space)",
+        layer.name, layer.h, layer.w, layer.c, layer.kc,
+        ml2tuner::compiler::schedule::candidates(&layer).len()
+    );
+
+    // 1. tune with ML²Tuner (N=10, α=1, paper defaults)
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let cfg = TunerConfig { max_trials: 200, seed: 1, ..Default::default() };
+    let trace = Ml2Tuner::new(cfg).tune(&env);
+    let best_cycles = trace.best_cycles().expect("found a valid schedule");
+    let best = trace
+        .trials
+        .iter()
+        .find(|t| t.outcome.cycles() == Some(best_cycles))
+        .unwrap();
+    let sim = Simulator::new(VtaConfig::zcu102());
+    println!(
+        "best schedule: {}  ->  {:.3} ms (estimated @ {} MHz), \
+         invalidity ratio {:.3}",
+        best.schedule,
+        sim.cycles_to_ms(best_cycles),
+        sim.cfg.clock_mhz,
+        trace.invalidity_ratio()
+    );
+
+    // 2. deploy-check: execute the winning program numerically and compare
+    //    bit-for-bit with the AOT JAX/Pallas golden conv.
+    let compiler = Compiler::new(VtaConfig::zcu102());
+    let compiled = compiler.compile(&layer, &best.schedule);
+    let x = synth::input_data(&layer, 7);
+    let w = synth::weight_data(&layer, 7);
+    let dram = functional::Dram {
+        inp: layout::pack_input(&sim.cfg, &x, layer.h, layer.w, layer.c),
+        wgt: layout::pack_weights(&sim.cfg, &w, layer.kh, layer.kw,
+                                  layer.c, layer.kc),
+        out_vecs: compiled.program.dram_out_vecs,
+    };
+    let out = sim
+        .execute(&compiled.program, &dram)
+        .map_err(|f| anyhow::anyhow!("{f:?}"))?;
+    match Runtime::open_default() {
+        Ok(mut rt) => {
+            let gold = golden::golden_output(&mut rt, &layer, 7)?;
+            assert_eq!(out, gold, "simulator vs golden mismatch");
+            println!("deploy check: output BIT-EXACT vs AOT JAX/Pallas \
+                      golden model (PJRT)");
+        }
+        Err(e) => {
+            // artifacts not built: fall back to the pure-rust oracle
+            let gold =
+                golden::reference_conv(&layer, &x, &w, sim.cfg.shift);
+            assert_eq!(out, gold, "simulator vs reference mismatch");
+            println!("deploy check: BIT-EXACT vs rust reference (PJRT \
+                      artifacts unavailable: {e})");
+        }
+    }
+    Ok(())
+}

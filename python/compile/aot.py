@@ -1,0 +1,79 @@
+"""AOT export: lower every ResNet18 conv layer graph to HLO text + manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Identical layer shapes are deduplicated (the paper's Table 2a repeats shapes:
+conv6 == conv2, conv7 == conv9 == conv3, conv8 == conv10 == conv4); the
+manifest maps every layer name to its artifact.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered_fn) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered_fn.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"shift": model.SHIFT, "layers": {}, "artifacts": {}}
+    by_shape = {}
+    for layer in model.RESNET18_LAYERS:
+        key = layer.shape_key()
+        if key not in by_shape:
+            fname = f"{layer.name}.hlo.txt"
+            text = to_hlo_text(model.lowered(layer.name))
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            by_shape[key] = fname
+            manifest["artifacts"][fname] = {
+                "shape_key": key,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+            print(f"lowered {layer.name:8s} -> {fname} ({len(text)} chars)")
+        manifest["layers"][layer.name] = {
+            "artifact": by_shape[key],
+            "h": layer.h, "w": layer.w, "c": layer.c,
+            "kc": layer.kc, "kh": layer.kh, "kw": layer.kw,
+            "oh": layer.oh, "ow": layer.ow,
+            "pad": layer.pad, "stride": layer.stride,
+            "shift": model.SHIFT,
+        }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}: {len(manifest['layers'])} layers, "
+          f"{len(manifest['artifacts'])} unique artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

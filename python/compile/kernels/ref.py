@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracle for the VTA-semantics quantized conv kernel.
+
+This is the *reference* implementation the Pallas kernel (vta_conv.py) is
+tested against at build time, and the semantics the rust VTA functional
+simulator must match bit-exactly for valid configurations.
+
+Extended-VTA GEMM-core semantics (paper Table 1: LOG_INP_WIDTH=3,
+LOG_WGT_WIDTH=3, LOG_ACC_WIDTH=5):
+
+  * inputs  : signed 8-bit
+  * weights : signed 8-bit
+  * accum   : signed 32-bit, exact integer accumulation
+  * output  : arithmetic right shift by `shift`, clipped to [-128, 127],
+              stored back as signed 8-bit
+
+All arithmetic is integer-exact, so any correct tiling produces bit-identical
+outputs -- which is what makes "output differs from expected" a meaningful
+validity signal in the paper's profiling step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def requantize(acc_i32: jax.Array, shift: int) -> jax.Array:
+    """VTA ALU store path: arithmetic shift right then clip to int8."""
+    shifted = jax.lax.shift_right_arithmetic(acc_i32, jnp.int32(shift))
+    return jnp.clip(shifted, -128, 127).astype(jnp.int8)
+
+
+def conv2d_ref(
+    x_i8: jax.Array,  # (H, W, C) int8
+    w_i8: jax.Array,  # (KH, KW, C, KC) int8
+    *,
+    pad: int,
+    stride: int,
+    shift: int,
+) -> jax.Array:  # (OH, OW, KC) int8
+    """Quantized conv2d via XLA's convolution, int32 accumulation."""
+    lhs = x_i8.astype(jnp.int32)[None]  # NHWC
+    rhs = w_i8.astype(jnp.int32)  # HWIO
+    acc = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )[0]
+    return requantize(acc, shift)
+
+
+def gemm_ref(x_i8: jax.Array, w_i8: jax.Array, *, shift: int) -> jax.Array:
+    """Quantized (M,K)x(K,N) GEMM oracle with the same requantize path."""
+    acc = jnp.dot(
+        x_i8.astype(jnp.int32),
+        w_i8.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return requantize(acc, shift)

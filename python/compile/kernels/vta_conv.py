@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: extended-VTA GEMM core as a blocked Pallas matmul.
+
+The profiling hot-spot of the ML2Tuner reproduction is executing a conv layer
+with extended-VTA semantics (int8 x int8 -> int32 accumulate -> shift + clip
+-> int8). We express it as an im2col GEMM whose inner blocked matmul is a
+Pallas kernel.
+
+Hardware-adaptation notes (DESIGN.md SS Hardware-Adaptation):
+
+  * VTA stages (block=16)-sized input/weight tiles in its INP/WGT scratchpads
+    and accumulates in the ACC scratchpad. The Pallas BlockSpec plays the same
+    role for VMEM: the grid walks (M/BM, N/BN) output tiles; each step keeps a
+    (BM, K) input strip, a (K, BN) weight strip and a (BM, BN) int32
+    accumulator resident -- the same HBM<->scratchpad schedule VTA's LOAD/GEMM
+    /STORE queues implement, with K kept whole because every layer in the
+    paper fits (K <= 1152, strip <= BM*K = 144 KiB of int8).
+  * Block sizes default to BM=128, BN=min(N,128): multiples of the MXU
+    systolic tile in the M/N dims while keeping VTA's native block (16) as an
+    exact divisor.
+  * interpret=True is REQUIRED here: the artifacts run on the CPU PJRT plugin
+    from rust, and real-TPU Pallas lowering emits Mosaic custom-calls that
+    plugin cannot execute. Numerics are integer-exact either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VTA native GEMM block (paper Table 1: LOG_BLOCK=4 -> 16).
+VTA_BLOCK = 16
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, shift):
+    """One (BM, BN) output tile: int8 strips -> int32 MXU dot -> requantize.
+
+    Mirrors one VTA GEMM+ALU uop sequence: multiply-accumulate into the ACC
+    scratchpad (int32), then the store path shifts and clips back to int8.
+    """
+    x = x_ref[...].astype(jnp.int32)  # (BM, K) int8 strip in VMEM
+    w = w_ref[...].astype(jnp.int32)  # (K, BN) int8 strip in VMEM
+    acc = jnp.dot(x, w, preferred_element_type=jnp.int32)  # ACC tile
+    shifted = jax.lax.shift_right_arithmetic(acc, jnp.int32(shift))
+    o_ref[...] = jnp.clip(shifted, -128, 127).astype(jnp.int8)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bm", "bn"))
+def gemm_q(
+    x_i8: jax.Array,  # (M, K) int8
+    w_i8: jax.Array,  # (K, N) int8
+    *,
+    shift: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:  # (M, N) int8
+    """Quantized blocked GEMM via pallas_call; pads M/N up to block multiples."""
+    m, k = x_i8.shape
+    k2, n = w_i8.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bn = min(bn, _round_up(n, VTA_BLOCK))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    if mp != m:
+        x_i8 = jnp.pad(x_i8, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        w_i8 = jnp.pad(w_i8, ((0, 0), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+        interpret=True,  # CPU-PJRT target; see module docstring
+    )(x_i8, w_i8)
+    return out[:m, :n]
+
+
+def im2col(x_i8: jax.Array, *, kh: int, kw: int, pad: int, stride: int):
+    """(H, W, C) -> (OH*OW, KH*KW*C) patch matrix, K ordered (kh, kw, c).
+
+    This is the layout VTA's LOAD queue produces when staging input tiles for
+    the GEMM core; the rust functional simulator uses the identical ordering.
+    """
+    h, w, c = x_i8.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x_i8, ((pad, pad), (pad, pad), (0, 0)))
+    rows = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[i : i + stride * (oh - 1) + 1 : stride,
+                    j : j + stride * (ow - 1) + 1 : stride, :]
+            rows.append(sl.reshape(oh * ow, c))
+    return jnp.concatenate(rows, axis=1), (oh, ow)
+
+
+def conv2d_q(
+    x_i8: jax.Array,  # (H, W, C) int8
+    w_i8: jax.Array,  # (KH, KW, C, KC) int8
+    *,
+    pad: int,
+    stride: int,
+    shift: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:  # (OH, OW, KC) int8
+    """VTA-semantics quantized conv2d = im2col + Pallas blocked GEMM."""
+    kh, kw, c, kc = w_i8.shape
+    patches, (oh, ow) = im2col(x_i8, kh=kh, kw=kw, pad=pad, stride=stride)
+    wmat = w_i8.reshape(kh * kw * c, kc)
+    out = gemm_q(patches, wmat, shift=shift, bm=bm, bn=bn)
+    return out.reshape(oh, ow, kc)

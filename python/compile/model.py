@@ -1,0 +1,113 @@
+"""L2: the per-layer compute graphs that get AOT-lowered for the rust runtime.
+
+Each ResNet18 conv layer (paper Table 2a) becomes one jitted function
+
+    (x: i32[H,W,C], w: i32[KH,KW,C,KC]) -> (y: i32[OH,OW,KC],)
+
+wrapping the L1 Pallas kernel. The i32 boundary exists because the rust `xla`
+crate (0.1.6) only exposes i32/i64/u32/u64/f32/f64 literals; values are always
+int8-range, conversion is exact, and all internal arithmetic stays in the VTA
+int8/int32 domain.
+
+This module is build-time only: `aot.py` lowers it once into
+`artifacts/*.hlo.txt` and rust never imports Python again.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import vta_conv
+
+# Global requantization shift used by every layer (and by the rust VTA
+# functional simulator; keep in sync with rust/src/vta/config.rs).
+SHIFT = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One conv workload: paper Table 2(a) row."""
+
+    name: str
+    h: int
+    w: int
+    c: int
+    kc: int
+    kh: int
+    kw: int
+    oh: int
+    ow: int
+    pad: int
+    stride: int
+
+    @property
+    def m(self) -> int:  # GEMM rows (output pixels)
+        return self.oh * self.ow
+
+    @property
+    def k(self) -> int:  # GEMM contraction
+        return self.kh * self.kw * self.c
+
+    @property
+    def n(self) -> int:  # GEMM cols (output channels)
+        return self.kc
+
+    def shape_key(self) -> str:
+        """Unique key for artifact dedup (paper repeats several shapes)."""
+        return (
+            f"h{self.h}w{self.w}c{self.c}kc{self.kc}kh{self.kh}kw{self.kw}"
+            f"p{self.pad}s{self.stride}"
+        )
+
+
+# Paper Table 2(a): the 10 profiled ResNet18 conv layers. Keep in sync with
+# rust/src/workloads/resnet18.rs.
+RESNET18_LAYERS = [
+    ConvLayer("conv1", 56, 56, 64, 64, 3, 3, 56, 56, 1, 1),
+    ConvLayer("conv2", 56, 56, 64, 128, 1, 1, 28, 28, 0, 2),
+    ConvLayer("conv3", 56, 56, 64, 128, 3, 3, 28, 28, 1, 2),
+    ConvLayer("conv4", 28, 28, 128, 128, 3, 3, 28, 28, 1, 1),
+    ConvLayer("conv5", 28, 28, 128, 256, 1, 1, 14, 14, 0, 2),
+    ConvLayer("conv6", 56, 56, 64, 128, 1, 1, 28, 28, 0, 2),
+    ConvLayer("conv7", 56, 56, 64, 128, 3, 3, 28, 28, 1, 2),
+    ConvLayer("conv8", 28, 28, 128, 128, 3, 3, 28, 28, 1, 1),
+    ConvLayer("conv9", 56, 56, 64, 128, 3, 3, 28, 28, 1, 2),
+    ConvLayer("conv10", 28, 28, 128, 128, 3, 3, 28, 28, 1, 1),
+]
+
+
+def layer_by_name(name: str) -> ConvLayer:
+    for layer in RESNET18_LAYERS:
+        if layer.name == name:
+            return layer
+    raise KeyError(name)
+
+
+def conv_fn(layer: ConvLayer):
+    """Build the AOT entry point for one layer (i32 boundary, 1-tuple out)."""
+
+    def fn(x_i32, w_i32):
+        x = x_i32.astype(jnp.int8)
+        w = w_i32.astype(jnp.int8)
+        y = vta_conv.conv2d_q(
+            x, w, pad=layer.pad, stride=layer.stride, shift=SHIFT
+        )
+        return (y.astype(jnp.int32),)
+
+    return fn
+
+
+def example_args(layer: ConvLayer):
+    """abstract args for jax.jit(...).lower()."""
+    return (
+        jax.ShapeDtypeStruct((layer.h, layer.w, layer.c), jnp.int32),
+        jax.ShapeDtypeStruct((layer.kh, layer.kw, layer.c, layer.kc), jnp.int32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def lowered(name: str):
+    layer = layer_by_name(name)
+    return jax.jit(conv_fn(layer)).lower(*example_args(layer))

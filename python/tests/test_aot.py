@@ -1,0 +1,52 @@
+"""AOT export tests: HLO text round-trip, manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_all(str(out))
+    return out, manifest
+
+
+class TestExport:
+    def test_manifest_covers_all_layers(self, exported):
+        _, manifest = exported
+        assert set(manifest["layers"]) == {f"conv{i}" for i in range(1, 11)}
+        assert len(manifest["artifacts"]) == 5  # deduped shapes
+
+    def test_artifacts_exist_and_parse_as_hlo(self, exported):
+        out, manifest = exported
+        for fname in manifest["artifacts"]:
+            text = open(os.path.join(out, fname)).read()
+            assert text.startswith("HloModule"), fname
+            # i32 interface (rust literal limitation) and int8 internals
+            assert "s32[" in text and "s8[" in text, fname
+
+    def test_entry_shapes_match_layer(self, exported):
+        out, manifest = exported
+        info = manifest["layers"]["conv1"]
+        text = open(os.path.join(out, info["artifact"])).read()
+        assert f"s32[{info['h']},{info['w']},{info['c']}]" in text
+        assert (
+            f"s32[{info['kh']},{info['kw']},{info['c']},{info['kc']}]" in text
+        )
+
+    def test_manifest_json_round_trip(self, exported):
+        out, manifest = exported
+        loaded = json.load(open(os.path.join(out, "manifest.json")))
+        assert loaded == json.loads(json.dumps(manifest))
+        assert loaded["shift"] == model.SHIFT
+
+    def test_dedup_targets_shared_artifact(self, exported):
+        _, manifest = exported
+        layers = manifest["layers"]
+        assert layers["conv6"]["artifact"] == layers["conv2"]["artifact"]
+        assert layers["conv9"]["artifact"] == layers["conv3"]["artifact"]
+        assert layers["conv10"]["artifact"] == layers["conv4"]["artifact"]

@@ -1,0 +1,156 @@
+"""L1 kernel correctness: Pallas VTA GEMM/conv vs the pure-jnp oracle.
+
+Integer semantics mean *bit-exact* equality, not allclose. Hypothesis sweeps
+shapes, strides, pads, shifts and block sizes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vta_conv
+from compile import model
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_i8(shape):
+    return RNG.integers(-128, 128, shape, dtype=np.int8)
+
+
+def assert_bitexact(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- gemm ----
+
+
+class TestGemmQ:
+    @pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 5, 3), (128, 64, 16),
+                                       (130, 576, 64), (256, 128, 256)])
+    def test_matches_oracle(self, m, k, n):
+        x, w = rand_i8((m, k)), rand_i8((k, n))
+        got = vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w), shift=8)
+        want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(w), shift=8)
+        assert_bitexact(got, want)
+
+    @pytest.mark.parametrize("shift", [0, 1, 4, 8, 15, 31])
+    def test_shift_sweep(self, shift):
+        x, w = rand_i8((33, 48)), rand_i8((48, 17))
+        got = vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w), shift=shift)
+        want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(w), shift=shift)
+        assert_bitexact(got, want)
+
+    @pytest.mark.parametrize("bm,bn", [(16, 16), (32, 128), (128, 32),
+                                       (256, 256)])
+    def test_block_shape_invariance(self, bm, bn):
+        """Tiling must never change integer results (the property that makes
+        output-mismatch a genuine invalidity signal on VTA)."""
+        x, w = rand_i8((100, 72)), rand_i8((72, 40))
+        got = vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w), shift=8,
+                              bm=bm, bn=bn)
+        want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(w), shift=8)
+        assert_bitexact(got, want)
+
+    def test_saturation_clips_to_int8(self):
+        x = np.full((8, 64), 127, dtype=np.int8)
+        w = np.full((64, 8), 127, dtype=np.int8)
+        got = np.asarray(vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w),
+                                         shift=0))
+        assert (got == 127).all()
+        w_neg = np.full((64, 8), -128, dtype=np.int8)
+        got = np.asarray(vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w_neg),
+                                         shift=0))
+        assert (got == -128).all()
+
+    def test_negative_shift_floor_semantics(self):
+        """Arithmetic >> floors toward -inf: (-1 >> 8) == -1, not 0."""
+        x = np.full((1, 1), -1, dtype=np.int8)
+        w = np.full((1, 1), 1, dtype=np.int8)
+        got = np.asarray(vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w),
+                                         shift=8))
+        assert got[0, 0] == -1
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+        shift=st.integers(0, 16), seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_gemm(self, m, k, n, shift, seed):
+        r = np.random.default_rng(seed)
+        x = r.integers(-128, 128, (m, k), dtype=np.int8)
+        w = r.integers(-128, 128, (k, n), dtype=np.int8)
+        got = vta_conv.gemm_q(jnp.asarray(x), jnp.asarray(w), shift=shift)
+        want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(w), shift=shift)
+        assert_bitexact(got, want)
+
+
+# ---------------------------------------------------------------- conv ----
+
+
+class TestConv2dQ:
+    @pytest.mark.parametrize("layer", model.RESNET18_LAYERS,
+                             ids=lambda l: l.name)
+    def test_resnet18_layers_match_oracle(self, layer):
+        x = rand_i8((layer.h, layer.w, layer.c))
+        w = rand_i8((layer.kh, layer.kw, layer.c, layer.kc))
+        got = vta_conv.conv2d_q(jnp.asarray(x), jnp.asarray(w),
+                                pad=layer.pad, stride=layer.stride,
+                                shift=model.SHIFT)
+        want = ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w),
+                              pad=layer.pad, stride=layer.stride,
+                              shift=model.SHIFT)
+        assert got.shape == (layer.oh, layer.ow, layer.kc)
+        assert_bitexact(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(3, 20), w=st.integers(3, 20),
+        c=st.integers(1, 16), kc=st.integers(1, 24),
+        ksz=st.sampled_from([1, 3, 5]),
+        pad=st.integers(0, 2), stride=st.sampled_from([1, 2]),
+        shift=st.integers(0, 12), seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_conv(self, h, w, c, kc, ksz, pad, stride, shift,
+                             seed):
+        if h + 2 * pad < ksz or w + 2 * pad < ksz:
+            return  # degenerate: kernel larger than padded input
+        r = np.random.default_rng(seed)
+        x = r.integers(-128, 128, (h, w, c), dtype=np.int8)
+        wt = r.integers(-128, 128, (ksz, ksz, c, kc), dtype=np.int8)
+        got = vta_conv.conv2d_q(jnp.asarray(x), jnp.asarray(wt),
+                                pad=pad, stride=stride, shift=shift)
+        want = ref.conv2d_ref(jnp.asarray(x), jnp.asarray(wt),
+                              pad=pad, stride=stride, shift=shift)
+        assert_bitexact(got, want)
+
+
+# -------------------------------------------------------------- im2col ----
+
+
+class TestIm2col:
+    def test_identity_1x1(self):
+        x = rand_i8((5, 7, 3))
+        patches, (oh, ow) = vta_conv.im2col(jnp.asarray(x), kh=1, kw=1,
+                                            pad=0, stride=1)
+        assert (oh, ow) == (5, 7)
+        assert_bitexact(patches, x.reshape(35, 3))
+
+    def test_k_ordering_is_khkwc(self):
+        """K axis must be ordered (kh, kw, c) -- the weight reshape and the
+        rust simulator's LOAD staging both assume it."""
+        x = np.arange(16, dtype=np.int8).reshape(4, 4, 1)
+        patches, _ = vta_conv.im2col(jnp.asarray(x), kh=3, kw=3, pad=1,
+                                     stride=1)
+        # centre pixel (1,1): rows of the 3x3 neighbourhood in scan order
+        got = np.asarray(patches)[1 * 4 + 1]
+        want = np.array([0, 1, 2, 4, 5, 6, 8, 9, 10], dtype=np.int8)
+        assert_bitexact(got, want)
+
+    def test_stride_and_pad_shapes(self):
+        x = rand_i8((9, 9, 2))
+        patches, (oh, ow) = vta_conv.im2col(jnp.asarray(x), kh=3, kw=3,
+                                            pad=1, stride=2)
+        assert (oh, ow) == (5, 5)
+        assert patches.shape == (25, 18)

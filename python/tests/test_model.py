@@ -1,0 +1,66 @@
+"""L2 model graph tests: i32 boundary, layer table integrity, lowering."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestLayerTable:
+    def test_ten_layers(self):
+        assert len(model.RESNET18_LAYERS) == 10
+        assert [l.name for l in model.RESNET18_LAYERS] == [
+            f"conv{i}" for i in range(1, 11)
+        ]
+
+    @pytest.mark.parametrize("layer", model.RESNET18_LAYERS,
+                             ids=lambda l: l.name)
+    def test_output_shape_consistent(self, layer):
+        """Table 2a's OH/OW columns must match the conv arithmetic."""
+        oh = (layer.h + 2 * layer.pad - layer.kh) // layer.stride + 1
+        ow = (layer.w + 2 * layer.pad - layer.kw) // layer.stride + 1
+        assert (oh, ow) == (layer.oh, layer.ow), layer.name
+
+    def test_shape_dedup_groups(self):
+        """Paper repeats shapes: conv6==conv2, conv7==conv9==conv3,
+        conv8==conv10==conv4."""
+        key = {l.name: l.shape_key() for l in model.RESNET18_LAYERS}
+        assert key["conv6"] == key["conv2"]
+        assert key["conv7"] == key["conv3"] == key["conv9"]
+        assert key["conv8"] == key["conv4"] == key["conv10"]
+        assert len(set(key.values())) == 5
+
+    def test_gemm_dims(self):
+        c1 = model.layer_by_name("conv1")
+        assert (c1.m, c1.k, c1.n) == (3136, 576, 64)
+
+
+class TestConvFn:
+    @pytest.mark.parametrize("name", ["conv1", "conv5"])
+    def test_i32_boundary_matches_oracle(self, name):
+        layer = model.layer_by_name(name)
+        r = np.random.default_rng(7)
+        x8 = r.integers(-128, 128, (layer.h, layer.w, layer.c), dtype=np.int8)
+        w8 = r.integers(-128, 128,
+                        (layer.kh, layer.kw, layer.c, layer.kc),
+                        dtype=np.int8)
+        fn = model.conv_fn(layer)
+        (y_i32,) = fn(jnp.asarray(x8, jnp.int32), jnp.asarray(w8, jnp.int32))
+        assert y_i32.dtype == jnp.int32
+        want = ref.conv2d_ref(jnp.asarray(x8), jnp.asarray(w8),
+                              pad=layer.pad, stride=layer.stride,
+                              shift=model.SHIFT)
+        np.testing.assert_array_equal(np.asarray(y_i32, np.int8),
+                                      np.asarray(want))
+
+    def test_lowering_all_unique_shapes(self):
+        seen = set()
+        for layer in model.RESNET18_LAYERS:
+            if layer.shape_key() in seen:
+                continue
+            seen.add(layer.shape_key())
+            low = model.lowered(layer.name)
+            mod = low.compiler_ir("stablehlo")
+            assert "func" in str(mod)

@@ -1,0 +1,63 @@
+//! GBDT substrate benchmarks: training + batched prediction throughput
+//! (the explorer scores the entire space every tuning round — predict
+//! throughput is the L3 hot path, see EXPERIMENTS.md §Perf).
+use ml2tuner::gbdt::{Booster, Dataset, GbdtParams, Objective};
+use ml2tuner::util::bench::Bench;
+use ml2tuner::util::rng::Rng;
+
+fn synth(n: usize, nf: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut r = Rng::new(seed);
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..nf).map(|_| r.range_f64(0.0, 10.0)).collect())
+        .collect();
+    let labels: Vec<f64> = rows
+        .iter()
+        .map(|x| x[0] * x[0] + 3.0 * x[1] - x[2] * x[3])
+        .collect();
+    (rows, labels)
+}
+
+fn main() {
+    let mut b = Bench::with_budget(2.0);
+    let (rows, labels) = synth(300, 11, 1);
+    let d = Dataset::from_rows(&rows, &labels);
+
+    // in-loop retrain cost (ModelP during tuning: 120 rounds, depth 14)
+    let p_loop = GbdtParams::model_p().with_rounds(120);
+    b.run("train P (300 rows, 120 rounds)", || {
+        Booster::train(&p_loop, &d)
+    });
+    let v = GbdtParams::model_v().with_rounds(120);
+    b.run("train V (300 rows, 120 rounds)", || {
+        Booster::train(&v, &d)
+    });
+    let rank = GbdtParams::model_p()
+        .with_rounds(60)
+        .with_objective(Objective::RankPairwise);
+    b.run("train rank:pairwise (300 rows, 60 rounds)", || {
+        Booster::train(&rank, &d)
+    });
+
+    // batched predict: the explorer scores ~20k configs per round
+    let model = Booster::train(&p_loop, &d);
+    let (space, _) = synth(20_000, 11, 2);
+    b.run_items("predict 20k rows (Vec<f64> path)", 20_000.0, || {
+        let mut acc = 0.0;
+        for row in &space {
+            acc += model.predict_row(row);
+        }
+        acc
+    });
+    let space_f32: Vec<Vec<f32>> = space
+        .iter()
+        .map(|r| r.iter().map(|&v| v as f32).collect())
+        .collect();
+    b.run_items("predict 20k rows (f32 fast path)", 20_000.0, || {
+        let mut acc = 0.0;
+        for row in &space_f32 {
+            acc += model.predict_row_f32(row);
+        }
+        acc
+    });
+    print!("{}", b.summary());
+}

@@ -1,0 +1,32 @@
+//! PJRT runtime benchmarks: artifact compile (once, cached) and golden
+//! conv execution latency (the per-profile validity check on the real
+//! system). Requires `make artifacts`.
+use ml2tuner::runtime::Runtime;
+use ml2tuner::util::bench::Bench;
+use ml2tuner::workloads::{resnet18, synth};
+
+fn main() {
+    let mut rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime bench (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut b = Bench::with_budget(2.0);
+    for name in ["conv1", "conv4", "conv5"] {
+        let layer = resnet18::layer(name).unwrap();
+        let x: Vec<i32> = synth::input_data(&layer, 1)
+            .iter().map(|&v| v as i32).collect();
+        let w: Vec<i32> = synth::weight_data(&layer, 1)
+            .iter().map(|&v| v as i32).collect();
+        // first call compiles (cache miss) — measure separately
+        let t0 = std::time::Instant::now();
+        rt.execute_conv(&layer, &x, &w).unwrap();
+        println!("{name}: first-call (compile+run) {:?}", t0.elapsed());
+        b.run(&format!("golden conv {name} (cached exe)"), || {
+            rt.execute_conv(&layer, &x, &w).unwrap()
+        });
+    }
+    print!("{}", b.summary());
+}

@@ -1,0 +1,33 @@
+//! Tuning-loop benchmarks: full trials/second per tuner — the end-to-end
+//! rate every experiment (fig2a/fig5/headline) is built on.
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::tvm_baseline::TvmTuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::bench::Bench;
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::resnet18;
+
+fn main() {
+    let mut b = Bench::with_budget(3.0);
+    for layer in ["conv1", "conv5"] {
+        let env = TuningEnv::new(VtaConfig::zcu102(),
+                                 resnet18::layer(layer).unwrap());
+        let trials = 100usize;
+        let mut seed = 0u64;
+        let mut cfgs = move || {
+            seed += 1;
+            TunerConfig { max_trials: trials, seed, ..Default::default() }
+        };
+        b.run_items(&format!("ml2tuner {layer} ({trials} trials)"),
+                    trials as f64,
+                    || Ml2Tuner::new(cfgs()).tune(&env));
+        b.run_items(&format!("tvm {layer} ({trials} trials)"),
+                    trials as f64,
+                    || TvmTuner::new(cfgs()).tune(&env));
+        b.run_items(&format!("random {layer} ({trials} trials)"),
+                    trials as f64,
+                    || RandomTuner::new(cfgs()).tune(&env));
+    }
+    print!("{}", b.summary());
+}

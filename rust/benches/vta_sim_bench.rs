@@ -1,0 +1,53 @@
+//! VTA simulator benchmarks: compile + check() is the profiling fast path
+//! (one per tuning trial); numeric execution is the validation slow path.
+use ml2tuner::compiler::{schedule::Schedule, Compiler};
+use ml2tuner::util::bench::Bench;
+use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::workloads::{resnet18, synth};
+
+fn main() {
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let mut b = Bench::with_budget(2.0);
+
+    for (name, sched) in [
+        ("conv1 8x8", Schedule { tile_h: 8, tile_w: 8, tile_oc: 64,
+                                 tile_ic: 64, n_vthreads: 2 }),
+        ("conv1 2x2 (many instrs)", Schedule { tile_h: 2, tile_w: 2,
+            tile_oc: 16, tile_ic: 16, n_vthreads: 1 }),
+        ("conv5 7x7", Schedule { tile_h: 7, tile_w: 7, tile_oc: 64,
+                                 tile_ic: 64, n_vthreads: 1 }),
+    ] {
+        let layer = if name.starts_with("conv1") {
+            resnet18::layer("conv1").unwrap()
+        } else {
+            resnet18::layer("conv5").unwrap()
+        };
+        b.run(&format!("compile {name}"), || {
+            compiler.compile(&layer, &sched)
+        });
+        let compiled = compiler.compile(&layer, &sched);
+        b.run(&format!("check {name} ({} instrs)",
+                       compiled.program.len()),
+              || sim.check(&compiled.program));
+    }
+
+    // full numeric execution (validation path)
+    let layer = resnet18::layer("conv5").unwrap();
+    let sched = Schedule { tile_h: 7, tile_w: 7, tile_oc: 64,
+                           tile_ic: 64, n_vthreads: 1 };
+    let compiled = compiler.compile(&layer, &sched);
+    let x = synth::input_data(&layer, 1);
+    let w = synth::weight_data(&layer, 1);
+    let dram = functional::Dram {
+        inp: layout::pack_input(&cfg, &x, layer.h, layer.w, layer.c),
+        wgt: layout::pack_weights(&cfg, &w, layer.kh, layer.kw, layer.c,
+                                  layer.kc),
+        out_vecs: compiled.program.dram_out_vecs,
+    };
+    b.run("numeric execute conv5 (25M MACs)", || {
+        sim.execute(&compiled.program, &dram).unwrap()
+    });
+    print!("{}", b.summary());
+}

@@ -1,0 +1,479 @@
+//! Code generation: conv2d + schedule → VTA instruction stream.
+//!
+//! Lowering structure (one output tile at a time, tiles round-robin across
+//! virtual threads, double-buffered INP/WGT slots per thread):
+//!
+//! ```text
+//! LoadUop (whole uop table, shared)
+//! for tile (oh0, ow0, oc0):                  # thread t = tile_idx % nVT
+//!   GEMM(reset)  over the tile's ACC region  # pops s2g after 1st tile/thread
+//!   for ci in 0..C/tic:                      # load group (tile, ci)
+//!     Memset/Load input halo rows → INP slot # pops g2l after 2 groups/thread
+//!     Load weight chunk          → WGT slot  # last load pushes l2g
+//!     for (kh, kw):
+//!       GEMM accumulate                      # 1st pops l2g, last pushes g2l
+//!   ALU shift-clip over ACC region           # pushes g2s
+//!   Store tile rows                          # 1st pops g2s, last pushes s2g
+//! Finish
+//! ```
+//!
+//! The compiler *assumes* each thread owns `capacity / nVT` of every
+//! scratchpad and never verifies it (the paper's premise: VTA-class backends
+//! "lack the capacity for sophisticated back-end compilers"). Oversubscribed
+//! schedules therefore produce real register errors or cross-thread aliasing
+//! at (simulated) runtime — the invalid configurations ML²Tuner exists to
+//! avoid.
+
+use super::passes::TileAnalysis;
+use crate::vta::config::VtaConfig;
+use crate::vta::isa::{
+    AluOp, Buffer, Dep, Dma, GemmLoop, Instr, Program, Uop,
+};
+use crate::workloads::ConvLayer;
+
+/// Dynamic emission statistics — the "collected through internal branching"
+/// half of the hidden features (paper §B.2), plus cost accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CompileStats {
+    pub n_instrs: usize,
+    pub n_loads: usize,
+    pub n_memsets: usize,
+    pub n_gemms: usize,
+    pub n_alus: usize,
+    pub n_stores: usize,
+    /// Dummy (zero-fill) vectors emitted for interior tiles / boundary tiles
+    /// — the paper's `outDummyH(b0==0)` / `outDummyH(b0!=0)`.
+    pub dummy_vecs_interior: u64,
+    pub dummy_vecs_boundary: u64,
+    /// Dummy halo *rows* per tile class.
+    pub dummy_rows_interior: u64,
+    pub dummy_rows_boundary: u64,
+    pub tiles_interior: usize,
+    pub tiles_boundary: usize,
+    pub gemm_block_ops: u64,
+    /// Block-ops spent in reset (zero-fill) passes — not real MACs.
+    pub reset_block_ops: u64,
+    pub dma_bytes: u64,
+    /// Branch flags observed during lowering.
+    pub vthread_branch_taken: bool,
+    pub uneven_thread_split: bool,
+}
+
+/// Output of one compilation.
+#[derive(Clone, Debug)]
+pub struct Compiled {
+    pub program: Program,
+    pub stats: CompileStats,
+    pub analysis: TileAnalysis,
+}
+
+/// Lower `layer` under `sched`'s resolved analysis into a VTA program.
+pub fn lower(
+    cfg: &VtaConfig,
+    layer: &ConvLayer,
+    a: &TileAnalysis,
+) -> Compiled {
+    let blk = cfg.block();
+    let mut prog = Program {
+        dram_inp_vecs: layer.h * layer.w * a.cb_total,
+        dram_wgt_blocks: a.kcb * layer.kh * layer.kw * a.cb_total,
+        dram_out_vecs: layer.oh * layer.ow * a.kcb,
+        ..Default::default()
+    };
+    let mut st = CompileStats::default();
+    st.vthread_branch_taken = a.nvt > 1;
+
+    // ---- uop table: gemm uops (nb-major) then reset uops --------------
+    for nb in 0..a.nbc {
+        for cb in 0..a.cbc {
+            prog.uops.push(Uop {
+                acc: nb,
+                inp: cb,
+                wgt: nb * layer.kh * layer.kw * a.cbc + cb,
+            });
+        }
+    }
+    for nb in 0..a.nbc {
+        prog.uops.push(Uop { acc: nb, inp: 0, wgt: 0 });
+    }
+    let reset_off = a.nbc * a.cbc;
+    prog.instrs.push(Instr::LoadUop {
+        sram_base: 0,
+        uop_begin: 0,
+        uop_end: prog.uops.len(),
+        dep: Dep::push_next(), // first compute instr pops
+    });
+
+    // ---- tile enumeration, round-robin over virtual threads -----------
+    let n_tiles = a.n_tiles();
+    st.uneven_thread_split = a.nvt > 1 && n_tiles % a.nvt != 0;
+    // per-thread counters for dep-token priming
+    let mut groups_per_thread = vec![0usize; a.nvt];
+    let mut tiles_per_thread = vec![0usize; a.nvt];
+
+    // per-thread scratch bases (the compiler's *assumed* partitioning)
+    let inp_base_t = |t: usize| t * a.inp_slice;
+    let wgt_base_t = |t: usize| t * a.wgt_slice;
+    let acc_base_t = |t: usize| t * a.acc_slice;
+
+    let mut first_compute = true;
+    for tile_idx in 0..n_tiles {
+        let t = tile_idx % a.nvt;
+        // decompose: oc-major, then th, then tw (oc outermost reuses input)
+        let ti_w = tile_idx % a.tiles_w;
+        let ti_h = (tile_idx / a.tiles_w) % a.tiles_h;
+        let ti_oc = tile_idx / (a.tiles_w * a.tiles_h);
+
+        let oh0 = ti_h * a.th;
+        let ow0 = ti_w * a.tw;
+        let oc0b = ti_oc * a.nbc;
+
+        // effective (boundary-resized) extents
+        let th_e = a.th.min(layer.oh - oh0);
+        let tw_e = a.tw.min(layer.ow - ow0);
+        let nbc_e = a.nbc.min(a.kcb - oc0b);
+        let in_h = (th_e - 1) * layer.stride + layer.kh;
+        let in_w = (tw_e - 1) * layer.stride + layer.kw;
+        let in_h0 = oh0 as isize * layer.stride as isize
+            - layer.pad as isize;
+        let in_w0 = ow0 as isize * layer.stride as isize
+            - layer.pad as isize;
+
+        let spatial_boundary = ti_h == 0
+            || ti_w == 0
+            || ti_h + 1 == a.tiles_h
+            || ti_w + 1 == a.tiles_w;
+        if spatial_boundary {
+            st.tiles_boundary += 1;
+        } else {
+            st.tiles_interior += 1;
+        }
+
+        // ---- reset pass over the tile's ACC region --------------------
+        let acc_b = acc_base_t(t);
+        let tile_acc = th_e * tw_e * nbc_e;
+        let mut dep = Dep::NONE;
+        if first_compute {
+            dep.pop_prev = true; // wait for LoadUop
+            first_compute = false;
+        }
+        if tiles_per_thread[t] >= 1 {
+            dep.pop_next = true; // wait for this thread's previous store
+        }
+        prog.instrs.push(Instr::Gemm {
+            ubuf_begin: reset_off,
+            ubuf_end: reset_off + nbc_e,
+            lp0: GemmLoop {
+                extent: th_e * tw_e,
+                acc_off: nbc_e,
+                inp_off: 0,
+                wgt_off: 0,
+            },
+            lp1: GemmLoop { extent: 1, ..Default::default() },
+            acc_base: acc_b,
+            inp_base: 0,
+            wgt_base: 0,
+            reset: true,
+            dep,
+        });
+        st.n_gemms += 1;
+        st.reset_block_ops += (nbc_e * th_e * tw_e) as u64;
+
+        // ---- channel chunks -------------------------------------------
+        for ci in 0..a.n_ci {
+            let slot = groups_per_thread[t] % 2;
+            let pop_credit = groups_per_thread[t] >= 2;
+            groups_per_thread[t] += 1;
+            let cb0 = ci * a.cbc;
+            let inp_s = inp_base_t(t) + slot * a.inp_tile;
+            let wgt_s = wgt_base_t(t) + slot * a.wgt_chunk;
+
+            // load-group instructions collected, then flags applied
+            let mut group: Vec<Instr> = Vec::new();
+
+            // input halo rows (with padding memsets)
+            for ih in 0..in_h {
+                let src = in_h0 + ih as isize;
+                let row_sram = inp_s + ih * in_w * a.cbc;
+                if src < 0 || src >= layer.h as isize {
+                    group.push(Instr::Memset {
+                        buf: Buffer::Inp,
+                        sram_base: row_sram,
+                        count: in_w * a.cbc,
+                        dep: Dep::NONE,
+                    });
+                    track_dummy(&mut st, spatial_boundary,
+                                (in_w * a.cbc) as u64, 1);
+                    continue;
+                }
+                let lead = (-in_w0).max(0) as usize;
+                let lead = lead.min(in_w);
+                let trail = ((in_w0 + in_w as isize)
+                    - layer.w as isize)
+                    .max(0) as usize;
+                let trail = trail.min(in_w - lead);
+                let valid = in_w - lead - trail;
+                if lead > 0 {
+                    group.push(Instr::Memset {
+                        buf: Buffer::Inp,
+                        sram_base: row_sram,
+                        count: lead * a.cbc,
+                        dep: Dep::NONE,
+                    });
+                    track_dummy(&mut st, spatial_boundary,
+                                (lead * a.cbc) as u64, 0);
+                }
+                if valid > 0 {
+                    let dram = (src as usize * layer.w
+                        + (in_w0 + lead as isize) as usize)
+                        * a.cb_total
+                        + cb0;
+                    group.push(Instr::Load {
+                        buf: Buffer::Inp,
+                        dma: Dma {
+                            sram_base: row_sram + lead * a.cbc,
+                            dram_base: dram,
+                            rows: valid,
+                            cols: a.cbc,
+                            dram_stride: a.cb_total,
+                        },
+                        dep: Dep::NONE,
+                    });
+                }
+                if trail > 0 {
+                    group.push(Instr::Memset {
+                        buf: Buffer::Inp,
+                        sram_base: row_sram + (lead + valid) * a.cbc,
+                        count: trail * a.cbc,
+                        dep: Dep::NONE,
+                    });
+                    track_dummy(&mut st, spatial_boundary,
+                                (trail * a.cbc) as u64, 0);
+                }
+            }
+
+            // weight chunk: rows over (nb, kh, kw), cols over cb
+            group.push(Instr::Load {
+                buf: Buffer::Wgt,
+                dma: Dma {
+                    sram_base: wgt_s,
+                    dram_base: (oc0b * layer.kh * layer.kw) * a.cb_total
+                        + cb0,
+                    rows: nbc_e * layer.kh * layer.kw,
+                    cols: a.cbc,
+                    dram_stride: a.cb_total,
+                },
+                dep: Dep::NONE,
+            });
+
+            // dep flags: first instr pops the slot credit, last pushes data
+            if pop_credit {
+                set_dep(&mut group, 0, |d| d.pop_next = true);
+            }
+            let last = group.len() - 1;
+            set_dep(&mut group, last, |d| d.push_next = true);
+            for ins in &group {
+                match ins {
+                    Instr::Load { .. } => st.n_loads += 1,
+                    Instr::Memset { .. } => st.n_memsets += 1,
+                    _ => {}
+                }
+            }
+            prog.instrs.extend(group);
+
+            // gemm per kernel position
+            for kh in 0..layer.kh {
+                for kw in 0..layer.kw {
+                    let first = kh == 0 && kw == 0;
+                    let last = kh + 1 == layer.kh && kw + 1 == layer.kw;
+                    prog.instrs.push(Instr::Gemm {
+                        ubuf_begin: 0,
+                        ubuf_end: nbc_e * a.cbc,
+                        lp0: GemmLoop {
+                            extent: th_e,
+                            acc_off: tw_e * nbc_e,
+                            inp_off: layer.stride * in_w * a.cbc,
+                            wgt_off: 0,
+                        },
+                        lp1: GemmLoop {
+                            extent: tw_e,
+                            acc_off: nbc_e,
+                            inp_off: layer.stride * a.cbc,
+                            wgt_off: 0,
+                        },
+                        acc_base: acc_b,
+                        inp_base: inp_s + (kh * in_w + kw) * a.cbc,
+                        wgt_base: wgt_s + (kh * layer.kw + kw) * a.cbc,
+                        reset: false,
+                        dep: Dep {
+                            pop_prev: first,
+                            push_prev: last,
+                            ..Dep::NONE
+                        },
+                    });
+                    st.n_gemms += 1;
+                }
+            }
+        }
+
+        // NOTE on the uop sub-range: uops are nb-major, so
+        // `[0, nbc_e*cbc)` covers exactly nb < nbc_e when cbc == a.cbc.
+
+        // ---- requantize + store ---------------------------------------
+        prog.instrs.push(Instr::Alu {
+            op: AluOp::ShiftClip { shift: cfg.shift },
+            acc_base: acc_b,
+            count: tile_acc,
+            dep: Dep::push_next(),
+        });
+        st.n_alus += 1;
+        for r in 0..th_e {
+            let first = r == 0;
+            let last = r + 1 == th_e;
+            prog.instrs.push(Instr::Store {
+                dma: Dma {
+                    sram_base: acc_b + r * tw_e * nbc_e,
+                    dram_base: ((oh0 + r) * layer.ow + ow0) * a.kcb + oc0b,
+                    rows: tw_e,
+                    cols: nbc_e,
+                    dram_stride: a.kcb,
+                },
+                dep: Dep {
+                    pop_prev: first,
+                    push_prev: last,
+                    ..Dep::NONE
+                },
+            });
+            st.n_stores += 1;
+        }
+        tiles_per_thread[t] += 1;
+    }
+    prog.instrs.push(Instr::Finish);
+
+    st.n_instrs = prog.instrs.len();
+    st.gemm_block_ops = prog.gemm_block_ops();
+    st.dma_bytes = prog.dma_bytes(cfg);
+    let _ = blk;
+    Compiled { program: prog, stats: st, analysis: a.clone() }
+}
+
+fn track_dummy(
+    st: &mut CompileStats,
+    boundary: bool,
+    vecs: u64,
+    rows: u64,
+) {
+    if boundary {
+        st.dummy_vecs_boundary += vecs;
+        st.dummy_rows_boundary += rows;
+    } else {
+        st.dummy_vecs_interior += vecs;
+        st.dummy_rows_interior += rows;
+    }
+}
+
+fn set_dep(group: &mut [Instr], idx: usize, f: impl FnOnce(&mut Dep)) {
+    let dep = match &mut group[idx] {
+        Instr::Load { dep, .. }
+        | Instr::Memset { dep, .. }
+        | Instr::LoadUop { dep, .. }
+        | Instr::Gemm { dep, .. }
+        | Instr::Alu { dep, .. }
+        | Instr::Store { dep, .. } => dep,
+        Instr::Finish => return,
+    };
+    f(dep);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::analyze;
+    use crate::compiler::schedule::Schedule;
+    use crate::workloads::resnet18;
+
+    fn compile(name: &str, s: Schedule) -> Compiled {
+        let cfg = VtaConfig::zcu102();
+        let layer = resnet18::layer(name).unwrap();
+        let a = analyze(&cfg, &layer, &s);
+        lower(&cfg, &layer, &a)
+    }
+
+    fn sched(th: usize, tw: usize, oc: usize, ic: usize, vt: usize)
+        -> Schedule
+    {
+        Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
+                   n_vthreads: vt }
+    }
+
+    #[test]
+    fn gemm_block_ops_cover_all_macs() {
+        // every MAC of the convolution must be issued exactly once: each
+        // block-op is a 1×16 vector · 16×16 block = 256 MACs
+        let c = compile("conv1", sched(8, 8, 64, 64, 1));
+        let l = resnet18::layer("conv1").unwrap();
+        let data_ops = c.stats.gemm_block_ops - c.stats.reset_block_ops;
+        assert_eq!(data_ops * 256, l.macs());
+    }
+
+    #[test]
+    fn gemm_block_ops_cover_all_macs_with_boundaries() {
+        // 24 does not divide 56; boundary tiles are resized, not padded —
+        // the MAC count must still be exact.
+        let c = compile("conv1", sched(24, 24, 48, 32, 2));
+        let l = resnet18::layer("conv1").unwrap();
+        let data_ops = c.stats.gemm_block_ops - c.stats.reset_block_ops;
+        assert_eq!(data_ops * 256, l.macs());
+    }
+
+    #[test]
+    fn instruction_mix_counts() {
+        let c = compile("conv5", sched(7, 7, 64, 64, 1));
+        let st = &c.stats;
+        assert_eq!(
+            st.n_instrs,
+            1 + st.n_loads + st.n_memsets + st.n_gemms + st.n_alus
+                + st.n_stores + 1, // LoadUop + Finish
+        );
+        // conv5 is 1×1/pad0: no dummy halo at all
+        assert_eq!(st.dummy_vecs_interior + st.dummy_vecs_boundary, 0);
+    }
+
+    #[test]
+    fn padding_emits_dummy_rows_on_boundary_tiles_only() {
+        let c = compile("conv1", sched(8, 8, 64, 64, 1)); // pad=1
+        assert!(c.stats.dummy_vecs_boundary > 0);
+        assert_eq!(c.stats.dummy_vecs_interior, 0);
+    }
+
+    #[test]
+    fn one_alu_and_th_stores_per_tile() {
+        let c = compile("conv4", sched(7, 7, 128, 128, 1));
+        let a = &c.analysis;
+        assert_eq!(c.stats.n_alus, a.n_tiles());
+        assert_eq!(c.stats.n_stores, a.n_tiles() * a.th);
+    }
+
+    #[test]
+    fn vthread_branch_flags() {
+        assert!(!compile("conv5", sched(7, 7, 64, 64, 1))
+            .stats
+            .vthread_branch_taken);
+        let c = compile("conv5", sched(7, 7, 64, 64, 2));
+        assert!(c.stats.vthread_branch_taken);
+        // 2×2×4 tiles = 16 tiles % 2 == 0 → even split
+        assert!(!c.stats.uneven_thread_split);
+    }
+
+    #[test]
+    fn dram_descriptor_sizes() {
+        let c = compile("conv2", sched(4, 4, 32, 64, 1));
+        let l = resnet18::layer("conv2").unwrap();
+        assert_eq!(c.program.dram_inp_vecs, l.h * l.w * l.c / 16);
+        assert_eq!(c.program.dram_out_vecs, l.oh * l.ow * l.kc / 16);
+        assert_eq!(
+            c.program.dram_wgt_blocks,
+            (l.kc / 16) * l.kh * l.kw * (l.c / 16)
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Feature extraction for the cost models.
+//!
+//! * **Visible features** (models P and V): the raw schedule knobs —
+//!   `Schedule::visible_features`.
+//! * **Hidden features** (model A only): quantities that exist only after
+//!   the backend compiler has run — resolved/boundary tile geometry, dummy
+//!   regions, branch decisions, instruction/DMA/uop statistics. Names follow
+//!   paper Table 5 where the quantity matches; the compiler-statistics tail
+//!   is our honest extension of "details about the optimization and internal
+//!   tiling strategies during the code generation process" (§3).
+
+use super::codegen::{CompileStats, Compiled};
+use super::passes::TileAnalysis;
+
+/// Hidden feature names, aligned with [`hidden_features`].
+///
+/// Exactly the paper's Table 5 hidden-feature list: geometry resolved by
+/// legalization, boundary/dummy regions, and branch flags. Raw codegen
+/// statistics (instruction counts, DMA bytes, …) stay in `CompileStats`
+/// for diagnostics but are NOT model inputs — the paper's extractor
+/// collects "values affected by conditional expressions and variations
+/// resulting from branch statements", not whole-program cost counters
+/// (feeding those in makes model A trivially strong and collapses the
+/// Table 5 importance distribution).
+pub const HIDDEN_NAMES: [&'static str; 21] = [
+    "nVirtualThread > 0 (threadIdx)",
+    "nVirtualThread > 0 (threadIdx)2",
+    "nFilterInLoop",
+    "nFilterInLoop (b0!=0)",
+    "sizeOutTileH",
+    "sizeOutTileW",
+    "sizeOutTileBoundaryW",
+    "outDummyH (b0==0)",
+    "outDummyH (b0!=0)",
+    "resizedOutTileH (b0==0)",
+    "resizedOutTileH (b0!=0)",
+    "Kn / nFilterInLoop / nVirtualThread / 16",
+    "sizeInTileW",
+    "sizeInTileH",
+    "resizedInTileH (b0==0)",
+    "resizedInTileH (b0!=0)",
+    // "iteration counts from configurations" (paper §3) — loop trip
+    // counts and scratchpad footprints resolved during lowering
+    "numTiles",
+    "numCiChunks",
+    "numDummyVecsPerTile",
+    "inpTileVecs",
+    "accTileVecs",
+];
+
+/// Extract the hidden feature vector from a compilation.
+pub fn hidden_features(c: &Compiled) -> Vec<f64> {
+    let a: &TileAnalysis = &c.analysis;
+    let st: &CompileStats = &c.stats;
+    let per_tile = |v: u64, tiles: usize| {
+        if tiles == 0 { 0.0 } else { v as f64 / tiles as f64 }
+    };
+    vec![
+        st.vthread_branch_taken as u8 as f64,
+        st.uneven_thread_split as u8 as f64,
+        a.nbc as f64,
+        a.nbc_last as f64,
+        a.th as f64,
+        a.tw as f64,
+        (a.tw != a.tw_last) as u8 as f64 * a.tw_last as f64,
+        per_tile(st.dummy_rows_interior, st.tiles_interior),
+        per_tile(st.dummy_rows_boundary, st.tiles_boundary),
+        a.th as f64,
+        a.th_last as f64,
+        a.kcb as f64 / a.nbc as f64 / a.nvt as f64,
+        a.in_tile_w as f64,
+        a.in_tile_h as f64,
+        a.in_tile_h as f64,
+        a.in_tile_h_last as f64,
+        a.n_tiles() as f64,
+        a.n_ci as f64,
+        per_tile(
+            st.dummy_vecs_interior + st.dummy_vecs_boundary,
+            a.n_tiles(),
+        ),
+        a.inp_tile as f64,
+        a.acc_tile as f64,
+    ]
+}
+
+/// `visible ⊕ hidden` — the input of model A.
+pub fn combined_features(visible: &[f64], hidden: &[f64]) -> Vec<f64> {
+    let mut v = visible.to_vec();
+    v.extend_from_slice(hidden);
+    v
+}
+
+/// Names for the combined feature space (for Table 5 importance reports).
+pub fn combined_names() -> Vec<&'static str> {
+    let mut v = crate::compiler::schedule::Schedule::VISIBLE_NAMES.to_vec();
+    v.extend_from_slice(&HIDDEN_NAMES);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::analyze;
+    use crate::compiler::schedule::Schedule;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    fn compiled(th: usize, tw: usize) -> Compiled {
+        let cfg = VtaConfig::zcu102();
+        let layer = resnet18::layer("conv1").unwrap();
+        let s = Schedule { tile_h: th, tile_w: tw, tile_oc: 32,
+                           tile_ic: 32, n_vthreads: 2 };
+        let a = analyze(&cfg, &layer, &s);
+        super::super::codegen::lower(&cfg, &layer, &a)
+    }
+
+    #[test]
+    fn names_align_with_values() {
+        let c = compiled(8, 8);
+        let h = hidden_features(&c);
+        assert_eq!(h.len(), HIDDEN_NAMES.len());
+    }
+
+    #[test]
+    fn boundary_features_fire_on_non_divisor_tiles() {
+        let exact = hidden_features(&compiled(8, 8)); // 8 | 56
+        let ragged = hidden_features(&compiled(24, 24)); // 56 = 24+24+8
+        let idx = HIDDEN_NAMES
+            .iter()
+            .position(|n| *n == "sizeOutTileBoundaryW")
+            .unwrap();
+        assert_eq!(exact[idx], 0.0);
+        assert_eq!(ragged[idx], 8.0);
+        let idx_h = HIDDEN_NAMES
+            .iter()
+            .position(|n| *n == "resizedOutTileH (b0!=0)")
+            .unwrap();
+        assert_eq!(ragged[idx_h], 8.0);
+    }
+
+    #[test]
+    fn combined_concatenates() {
+        let c = compiled(8, 8);
+        let h = hidden_features(&c);
+        let nv = crate::compiler::schedule::Schedule::VISIBLE_NAMES.len();
+        let v = vec![1.0; nv];
+        let comb = combined_features(&v, &h);
+        assert_eq!(comb.len(), nv + h.len());
+        assert_eq!(combined_names().len(), comb.len());
+    }
+}

@@ -1,0 +1,86 @@
+//! Backend compiler substrate — the paper's Glow/nest-compiler analogue.
+//!
+//! Pipeline: [`schedule::Schedule`] → [`passes::analyze`] (legalize +
+//! resolve tile geometry) → [`codegen::lower`] (emit the VTA instruction
+//! stream, collecting branch/emission statistics) → [`features`] (hidden
+//! feature vector for cost model A). [`validity`] is the deliberately weak
+//! static check a VTA-class backend can actually perform.
+
+pub mod codegen;
+pub mod features;
+pub mod passes;
+pub mod schedule;
+pub mod validity;
+
+use crate::vta::config::VtaConfig;
+use crate::workloads::ConvLayer;
+pub use codegen::Compiled;
+use schedule::Schedule;
+
+/// Compiler facade: owns the hardware config, compiles (layer, schedule)
+/// pairs, and exposes visible/hidden features.
+#[derive(Clone, Debug)]
+pub struct Compiler {
+    pub cfg: VtaConfig,
+}
+
+impl Compiler {
+    pub fn new(cfg: VtaConfig) -> Self {
+        Compiler { cfg }
+    }
+
+    /// Full compilation: analysis + lowering + stats. This is the step the
+    /// ML²Tuner explorer pays `(α+1)·N` times per iteration to harvest
+    /// hidden features (paper §2, "Hidden Feature Extractor").
+    pub fn compile(&self, layer: &ConvLayer, sched: &Schedule) -> Compiled {
+        let a = passes::analyze(&self.cfg, layer, sched);
+        codegen::lower(&self.cfg, layer, &a)
+    }
+
+    /// Hidden features of a compilation (model A's extra inputs).
+    pub fn hidden_features(&self, compiled: &Compiled) -> Vec<f64> {
+        features::hidden_features(compiled)
+    }
+
+    /// The weak static check (not used to prune the search space — the
+    /// paper's search spaces contain the invalid configurations).
+    pub fn static_check(
+        &self,
+        layer: &ConvLayer,
+        sched: &Schedule,
+    ) -> validity::StaticCheck {
+        let a = passes::analyze(&self.cfg, layer, sched);
+        validity::static_check(&self.cfg, &a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn facade_compiles_and_extracts() {
+        let c = Compiler::new(VtaConfig::zcu102());
+        let l = resnet18::layer("conv3").unwrap();
+        let s = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32, tile_ic: 32,
+                           n_vthreads: 2 };
+        let out = c.compile(&l, &s);
+        assert!(!out.program.is_empty());
+        let h = c.hidden_features(&out);
+        assert_eq!(h.len(), features::HIDDEN_NAMES.len());
+        assert!(c.static_check(&l, &s).is_plausible());
+    }
+
+    #[test]
+    fn compilation_is_deterministic() {
+        let c = Compiler::new(VtaConfig::zcu102());
+        let l = resnet18::layer("conv8").unwrap();
+        let s = Schedule { tile_h: 7, tile_w: 14, tile_oc: 64, tile_ic: 64,
+                           n_vthreads: 4 };
+        let a = c.compile(&l, &s);
+        let b = c.compile(&l, &s);
+        assert_eq!(a.program, b.program);
+        assert_eq!(a.stats, b.stats);
+    }
+}

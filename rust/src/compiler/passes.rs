@@ -1,0 +1,218 @@
+//! Analysis passes: schedule legalization and tile-geometry resolution.
+//!
+//! This is where the paper's *hidden features* come from — "values derived
+//! from visible features or collected through internal branching mechanisms"
+//! (§B.2): resolved tile sizes, boundary/remainder geometry, halo extents,
+//! per-thread scratchpad slices. The backend compiler (codegen) consumes the
+//! analysis; `features.rs` exports it to Model A.
+
+use super::schedule::Schedule;
+use crate::vta::config::VtaConfig;
+use crate::workloads::ConvLayer;
+
+/// Resolved tile geometry for one (layer, schedule) pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileAnalysis {
+    /// Legalized knobs (clamped to the layer, `tile_ic` snapped to a
+    /// divisor of `C`).
+    pub th: usize,
+    pub tw: usize,
+    pub toc: usize,
+    pub tic: usize,
+    pub nvt: usize,
+
+    /// Tile grid.
+    pub tiles_h: usize,
+    pub tiles_w: usize,
+    pub tiles_oc: usize,
+    /// Channel chunks per tile (`C / tic`).
+    pub n_ci: usize,
+
+    /// Block counts: `toc/16`, `tic/16`, `KC/16`, `C/16`.
+    pub nbc: usize,
+    pub cbc: usize,
+    pub kcb: usize,
+    pub cb_total: usize,
+
+    /// Boundary remainders (0 ⇒ exact division; the `b0 != 0` branch of the
+    /// paper's feature names is "this tile is a boundary tile").
+    pub th_last: usize,
+    pub tw_last: usize,
+    pub nbc_last: usize,
+
+    /// Input halo extents for an interior (full-size) tile.
+    pub in_tile_h: usize,
+    pub in_tile_w: usize,
+    /// …and for the boundary (remainder) tile.
+    pub in_tile_h_last: usize,
+    pub in_tile_w_last: usize,
+
+    /// Scratchpad footprints (element units) for a full-size tile.
+    pub acc_tile: usize,
+    pub inp_tile: usize,
+    pub wgt_chunk: usize,
+    pub uop_count: usize,
+
+    /// Per-virtual-thread scratchpad slices the compiler *assumes*.
+    pub inp_slice: usize,
+    pub wgt_slice: usize,
+    pub acc_slice: usize,
+}
+
+impl TileAnalysis {
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_h * self.tiles_w * self.tiles_oc
+    }
+}
+
+/// Legalize a schedule against a layer and resolve the tile geometry.
+pub fn analyze(
+    cfg: &VtaConfig,
+    layer: &ConvLayer,
+    sched: &Schedule,
+) -> TileAnalysis {
+    let blk = cfg.block();
+    assert_eq!(layer.c % blk, 0, "C must be a block multiple");
+    assert_eq!(layer.kc % blk, 0, "KC must be a block multiple");
+
+    let th = sched.tile_h.clamp(1, layer.oh);
+    let tw = sched.tile_w.clamp(1, layer.ow);
+    let toc = snap_block(sched.tile_oc.clamp(blk, layer.kc), blk);
+    // tic must divide C so channel chunks tile exactly: snap to the largest
+    // block-multiple divisor ≤ requested.
+    let tic = largest_divisor_le(
+        layer.c,
+        snap_block(sched.tile_ic.clamp(blk, layer.c), blk),
+        blk,
+    );
+    let nvt = sched.n_vthreads.max(1);
+
+    let tiles_h = layer.oh.div_ceil(th);
+    let tiles_w = layer.ow.div_ceil(tw);
+    let tiles_oc = layer.kc.div_ceil(toc);
+    let n_ci = layer.c / tic;
+
+    let nbc = toc / blk;
+    let cbc = tic / blk;
+    let kcb = layer.kc / blk;
+    let cb_total = layer.c / blk;
+
+    let rem = |total: usize, tile: usize| {
+        let r = total % tile;
+        if r == 0 { tile } else { r }
+    };
+    let th_last = rem(layer.oh, th);
+    let tw_last = rem(layer.ow, tw);
+    let nbc_last = rem(kcb, nbc);
+
+    let halo = |t: usize, k: usize| (t - 1) * layer.stride + k;
+    let in_tile_h = halo(th, layer.kh);
+    let in_tile_w = halo(tw, layer.kw);
+    let in_tile_h_last = halo(th_last, layer.kh);
+    let in_tile_w_last = halo(tw_last, layer.kw);
+
+    TileAnalysis {
+        th, tw, toc, tic, nvt,
+        tiles_h, tiles_w, tiles_oc, n_ci,
+        nbc, cbc, kcb, cb_total,
+        th_last, tw_last, nbc_last,
+        in_tile_h, in_tile_w, in_tile_h_last, in_tile_w_last,
+        acc_tile: th * tw * nbc,
+        inp_tile: in_tile_h * in_tile_w * cbc,
+        wgt_chunk: nbc * layer.kh * layer.kw * cbc,
+        uop_count: nbc * cbc + nbc, // gemm uops + reset uops
+        inp_slice: cfg.inp_capacity() / nvt,
+        wgt_slice: cfg.wgt_capacity() / nvt,
+        acc_slice: cfg.acc_capacity() / nvt,
+    }
+}
+
+fn snap_block(v: usize, blk: usize) -> usize {
+    (v / blk).max(1) * blk
+}
+
+/// Largest divisor of `c` that is a multiple of `blk` and ≤ `want`.
+fn largest_divisor_le(c: usize, want: usize, blk: usize) -> usize {
+    let mut best = blk;
+    let mut d = blk;
+    while d <= c {
+        if c % d == 0 && d <= want {
+            best = d;
+        }
+        d += blk;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    fn sched(th: usize, tw: usize, oc: usize, ic: usize, vt: usize)
+        -> Schedule
+    {
+        Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
+                   n_vthreads: vt }
+    }
+
+    #[test]
+    fn exact_division_no_remainder() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap(); // 56×56, KC=64
+        let a = analyze(&cfg, &l, &sched(8, 8, 32, 32, 2));
+        assert_eq!((a.tiles_h, a.tiles_w, a.tiles_oc), (7, 7, 2));
+        assert_eq!((a.th_last, a.tw_last), (8, 8)); // exact → full size
+        assert_eq!(a.n_ci, 2);
+        assert_eq!(a.in_tile_h, (8 - 1) * 1 + 3);
+    }
+
+    #[test]
+    fn boundary_remainders() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        let a = analyze(&cfg, &l, &sched(24, 24, 48, 64, 1));
+        assert_eq!(a.tiles_h, 3); // 24+24+8
+        assert_eq!(a.th_last, 8);
+        assert_eq!(a.tiles_oc, 2); // 48+16
+        assert_eq!(a.nbc_last, 1);
+    }
+
+    #[test]
+    fn tic_snaps_to_divisor() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv4").unwrap(); // C=128
+        let a = analyze(&cfg, &l, &sched(4, 4, 32, 48, 1));
+        assert_eq!(a.tic, 32, "48 does not divide 128 → snap down to 32");
+        assert_eq!(l.c % a.tic, 0);
+    }
+
+    #[test]
+    fn clamps_oversized_tiles() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv5").unwrap(); // 14×14
+        let a = analyze(&cfg, &l, &sched(100, 100, 512, 512, 4));
+        assert_eq!((a.th, a.tw), (14, 14));
+        assert_eq!(a.toc, l.kc);
+        assert_eq!(a.tic, l.c);
+        assert_eq!(a.n_tiles(), 1);
+    }
+
+    #[test]
+    fn stride_widens_halo() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv3").unwrap(); // 3×3 stride 2
+        let a = analyze(&cfg, &l, &sched(4, 4, 32, 32, 1));
+        assert_eq!(a.in_tile_h, (4 - 1) * 2 + 3); // = 9
+        assert_eq!(a.in_tile_w, 9);
+    }
+
+    #[test]
+    fn slices_divide_capacity() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        let a = analyze(&cfg, &l, &sched(8, 8, 32, 32, 4));
+        assert_eq!(a.inp_slice, cfg.inp_capacity() / 4);
+        assert_eq!(a.acc_slice, cfg.acc_capacity() / 4);
+    }
+}

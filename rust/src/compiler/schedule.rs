@@ -1,0 +1,227 @@
+//! Schedule knobs — the tuner's *visible features* (paper §B.2: "the
+//! optimizable features in our VTA implementation and backend compiler are
+//! based on tiling and the number of virtual threads").
+
+use crate::workloads::ConvLayer;
+
+/// One point in the per-layer search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    /// Output-tile height (`TH` in paper Table 5).
+    pub tile_h: usize,
+    /// Output-tile width (`TW`).
+    pub tile_w: usize,
+    /// Output channels per tile (multiple of the GEMM block).
+    pub tile_oc: usize,
+    /// Input channels per chunk (multiple of the GEMM block).
+    pub tile_ic: usize,
+    /// Virtual threads (`nVirtualThread`): software pipelining depth; the
+    /// scratchpads are partitioned `1/n` per thread.
+    pub n_vthreads: usize,
+}
+
+impl Schedule {
+    /// Visible feature names, aligned with [`Schedule::visible_features`].
+    pub const VISIBLE_NAMES: [&'static str; 11] = [
+        "TW",
+        "TH",
+        "tileIC",
+        "tileOC",
+        "nVirtualThread",
+        "TW*TH",
+        "TW*TH*tileOC",
+        "TW*TH*tileOC*nVT",
+        "tileIC*nVT",
+        "TW*TH*tileIC*nVT",
+        "tileOC*tileIC*nVT",
+    ];
+
+    /// The visible feature vector models P and V consume (paper: layer and
+    /// kernel information is *not* included — models are per-layer).
+    ///
+    /// Alongside the raw knobs, AutoTVM-style derived products are included:
+    /// they are computable from the schedule alone (no compilation — still
+    /// "visible"), and they turn the multiplicative scratchpad-pressure
+    /// boundaries into near-axis-aligned thresholds that tree models can
+    /// actually represent (the paper's model V reaches 99.4% accuracy,
+    /// Table 4; raw knobs alone cap far below that).
+    pub fn visible_features(&self) -> Vec<f64> {
+        let (tw, th) = (self.tile_w as f64, self.tile_h as f64);
+        let (ic, oc) = (self.tile_ic as f64, self.tile_oc as f64);
+        let vt = self.n_vthreads as f64;
+        vec![
+            tw,
+            th,
+            ic,
+            oc,
+            vt,
+            tw * th,
+            tw * th * oc,
+            tw * th * oc * vt,
+            ic * vt,
+            tw * th * ic * vt,
+            oc * ic * vt,
+        ]
+    }
+
+    /// Stable identity key for databases / dedup.
+    pub fn key(&self) -> u64 {
+        // fields are small; pack into a u64
+        (self.tile_h as u64) << 48
+            | (self.tile_w as u64) << 32
+            | (self.tile_oc as u64) << 20
+            | (self.tile_ic as u64) << 8
+            | self.n_vthreads as u64
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "th{}_tw{}_oc{}_ic{}_vt{}",
+            self.tile_h, self.tile_w, self.tile_oc, self.tile_ic,
+            self.n_vthreads
+        )
+    }
+}
+
+/// Per-layer candidate lists (DESIGN.md §Search space): divisors of the
+/// output extent plus multiples of 8, channel-block multiples, 1/2/4
+/// virtual threads. The full space is their cross product.
+pub fn candidates(layer: &ConvLayer) -> ScheduleSpace {
+    ScheduleSpace {
+        tile_h: spatial_candidates(layer.oh),
+        tile_w: spatial_candidates(layer.ow),
+        tile_oc: oc_candidates(layer.kc),
+        tile_ic: ic_candidates(layer.c),
+        // the extended VTA exposes deeper virtual threading; each level
+        // halves the per-thread scratchpad slice (capacity pressure is the
+        // main source of the paper's 0.50–0.93 random invalidity)
+        n_vthreads: vec![1, 2, 4, 8, 16],
+    }
+}
+
+/// The cross-product search space for one layer.
+#[derive(Clone, Debug)]
+pub struct ScheduleSpace {
+    pub tile_h: Vec<usize>,
+    pub tile_w: Vec<usize>,
+    pub tile_oc: Vec<usize>,
+    pub tile_ic: Vec<usize>,
+    pub n_vthreads: Vec<usize>,
+}
+
+impl ScheduleSpace {
+    pub fn len(&self) -> usize {
+        self.tile_h.len()
+            * self.tile_w.len()
+            * self.tile_oc.len()
+            * self.tile_ic.len()
+            * self.n_vthreads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate the `i`-th schedule (row-major over the candidate lists).
+    pub fn nth(&self, i: usize) -> Schedule {
+        let mut r = i;
+        let pick = |r: &mut usize, xs: &[usize]| {
+            let v = xs[*r % xs.len()];
+            *r /= xs.len();
+            v
+        };
+        let n_vthreads = pick(&mut r, &self.n_vthreads);
+        let tile_ic = pick(&mut r, &self.tile_ic);
+        let tile_oc = pick(&mut r, &self.tile_oc);
+        let tile_w = pick(&mut r, &self.tile_w);
+        let tile_h = pick(&mut r, &self.tile_h);
+        assert!(r == 0 || i < self.len(), "index out of range");
+        Schedule { tile_h, tile_w, tile_oc, tile_ic, n_vthreads }
+    }
+
+    /// All schedules, enumeration order.
+    pub fn all(&self) -> Vec<Schedule> {
+        (0..self.len()).map(|i| self.nth(i)).collect()
+    }
+}
+
+/// Divisors of `n` union multiples of 4 up to `n` (boundary-exercising;
+/// the multiples keep the large-tile — mostly invalid — region densely
+/// represented, mirroring the paper's 0.50–0.93 random invalidity band).
+fn spatial_candidates(n: usize) -> Vec<usize> {
+    let mut v: Vec<usize> =
+        (1..=n).filter(|d| n % d == 0 || d % 4 == 0).collect();
+    v.dedup();
+    v
+}
+
+/// Multiples of 16 up to `kc`, thinned above 64 to keep spaces tractable.
+fn oc_candidates(kc: usize) -> Vec<usize> {
+    (1..=kc / 16)
+        .map(|b| b * 16)
+        .filter(|&v| v <= 64 || v % 32 == 0)
+        .collect()
+}
+
+/// Divisors of `c` that are multiples of 16 (channel chunks must tile C
+/// exactly; see `compiler::passes`).
+fn ic_candidates(c: usize) -> Vec<usize> {
+    (1..=c / 16)
+        .map(|b| b * 16)
+        .filter(|v| c % v == 0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn space_sizes_are_sane() {
+        for l in resnet18::LAYERS {
+            let s = candidates(&l);
+            assert!(
+                (500..20_000).contains(&s.len()),
+                "{}: {}",
+                l.name,
+                s.len()
+            );
+        }
+    }
+
+    #[test]
+    fn nth_enumerates_all_distinct() {
+        let l = resnet18::layer("conv5").unwrap();
+        let s = candidates(&l);
+        let all = s.all();
+        assert_eq!(all.len(), s.len());
+        let mut keys: Vec<u64> = all.iter().map(|s| s.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), all.len(), "schedules must be distinct");
+    }
+
+    #[test]
+    fn ic_candidates_divide_c() {
+        for l in resnet18::LAYERS {
+            for ic in candidates(&l).tile_ic {
+                assert_eq!(l.c % ic, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn visible_features_order() {
+        let s = Schedule { tile_h: 4, tile_w: 8, tile_oc: 32, tile_ic: 16,
+                           n_vthreads: 2 };
+        let f = s.visible_features();
+        assert_eq!(&f[..5], &[8.0, 4.0, 16.0, 32.0, 2.0]);
+        assert_eq!(f.len(), Schedule::VISIBLE_NAMES.len());
+        assert_eq!(f[5], 32.0); // TW*TH
+        assert_eq!(f[7], 8.0 * 4.0 * 32.0 * 2.0);
+    }
+}

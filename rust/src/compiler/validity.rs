@@ -1,0 +1,101 @@
+//! Static validity analysis — deliberately *incomplete*, mirroring the
+//! paper's premise.
+//!
+//! Real VTA backends (the Glow integration the paper extends) can reject
+//! only the grossest scheduling mistakes; the hard failures (per-thread
+//! slice overflow under virtual threading, double-buffer spill, ACC wrap)
+//! surface at runtime. This pass checks a *single-buffered, single-thread*
+//! footprint against the *full* capacity — so everything it accepts can
+//! still crash or corrupt on the device, and that residue is exactly what
+//! cost model V has to learn.
+
+use super::passes::TileAnalysis;
+use crate::vta::config::VtaConfig;
+
+/// Outcome of the static check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StaticCheck {
+    /// Nothing obviously wrong (may still be invalid at runtime!).
+    Plausible,
+    /// Rejected: the footprint can never fit even ideally.
+    Hopeless(String),
+}
+
+impl StaticCheck {
+    pub fn is_plausible(&self) -> bool {
+        matches!(self, StaticCheck::Plausible)
+    }
+}
+
+/// The weak static check (see module docs).
+pub fn static_check(cfg: &VtaConfig, a: &TileAnalysis) -> StaticCheck {
+    if a.acc_tile > cfg.acc_capacity() {
+        return StaticCheck::Hopeless(format!(
+            "ACC tile {} vectors exceeds the whole buffer ({})",
+            a.acc_tile,
+            cfg.acc_capacity()
+        ));
+    }
+    if a.inp_tile > cfg.inp_capacity() {
+        return StaticCheck::Hopeless(format!(
+            "input halo tile {} vectors exceeds the whole buffer ({})",
+            a.inp_tile,
+            cfg.inp_capacity()
+        ));
+    }
+    if a.wgt_chunk > cfg.wgt_capacity() {
+        return StaticCheck::Hopeless(format!(
+            "weight chunk {} blocks exceeds the whole buffer ({})",
+            a.wgt_chunk,
+            cfg.wgt_capacity()
+        ));
+    }
+    if a.uop_count > cfg.uop_capacity() {
+        return StaticCheck::Hopeless(format!(
+            "uop table {} exceeds the uop buffer ({})",
+            a.uop_count,
+            cfg.uop_capacity()
+        ));
+    }
+    StaticCheck::Plausible
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::analyze;
+    use crate::compiler::schedule::Schedule;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn small_tiles_plausible() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        let s = Schedule { tile_h: 8, tile_w: 8, tile_oc: 32, tile_ic: 32,
+                           n_vthreads: 1 };
+        assert!(static_check(&cfg, &analyze(&cfg, &l, &s)).is_plausible());
+    }
+
+    #[test]
+    fn whole_image_tile_is_hopeless_on_conv1() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        // 56×56 output tile, full channels: acc = 56*56*4 = 12544 > 4096
+        let s = Schedule { tile_h: 56, tile_w: 56, tile_oc: 64, tile_ic: 64,
+                           n_vthreads: 1 };
+        let chk = static_check(&cfg, &analyze(&cfg, &l, &s));
+        assert!(!chk.is_plausible(), "{chk:?}");
+    }
+
+    #[test]
+    fn static_check_is_weaker_than_runtime() {
+        // The whole point: a schedule whose *double-buffered, per-thread*
+        // footprint overflows still passes the static check.
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        // inp_tile = 30*30*4 = 3600 ≤ 4096, but 2 slots × nvt=4 is 7× over
+        let s = Schedule { tile_h: 28, tile_w: 28, tile_oc: 16, tile_ic: 64,
+                           n_vthreads: 4 };
+        assert!(static_check(&cfg, &analyze(&cfg, &l, &s)).is_plausible());
+    }
+}

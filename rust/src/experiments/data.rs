@@ -1,0 +1,145 @@
+//! Shared experiment data: full/sampled space profiles and tuning-run
+//! bundles, with an in-process cache keyed by layer shape (the paper's
+//! Table 2a repeats shapes; profiling is deterministic, so duplicates are
+//! free).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::tuner::database::TrialRecord;
+use crate::tuner::ml2tuner::Ml2Tuner;
+use crate::tuner::random_baseline::RandomTuner;
+use crate::tuner::report::TuningTrace;
+use crate::tuner::tvm_baseline::TvmTuner;
+use crate::tuner::{Tuner, TunerConfig, TuningEnv};
+use crate::util::rng::Rng;
+use crate::vta::config::VtaConfig;
+use crate::workloads::{resnet18, ConvLayer};
+
+/// Deterministically profile up to `limit` configurations of a layer's
+/// space (uniform subsample when the space is larger). Cached per
+/// (shape, limit).
+pub fn space_profile(layer: &ConvLayer, limit: usize, seed: u64)
+    -> Vec<TrialRecord>
+{
+    static CACHE: Mutex<Option<HashMap<String, Vec<TrialRecord>>>> =
+        Mutex::new(None);
+    let key = format!(
+        "h{}w{}c{}kc{}kh{}kw{}p{}s{}-{limit}-{seed}",
+        layer.h, layer.w, layer.c, layer.kc, layer.kh, layer.kw,
+        layer.pad, layer.stride
+    );
+    {
+        let guard = CACHE.lock().unwrap();
+        if let Some(map) = guard.as_ref() {
+            if let Some(v) = map.get(&key) {
+                return v.clone();
+            }
+        }
+    }
+    let env = TuningEnv::new(VtaConfig::zcu102(), *layer);
+    let n = env.space.len();
+    let indices: Vec<usize> = if n <= limit {
+        (0..n).collect()
+    } else {
+        let mut rng = Rng::new(seed ^ 0xda7a);
+        rng.sample_indices(n, limit)
+    };
+    let records: Vec<TrialRecord> =
+        indices.iter().map(|&i| env.profile(i)).collect();
+    let mut guard = CACHE.lock().unwrap();
+    guard
+        .get_or_insert_with(HashMap::new)
+        .insert(key, records.clone());
+    records
+}
+
+/// One repeated tuning comparison on a layer: (ml2tuner, tvm, random)
+/// traces per repeat.
+pub struct ComparisonRuns {
+    pub layer: ConvLayer,
+    pub ml2: Vec<TuningTrace>,
+    pub tvm: Vec<TuningTrace>,
+    pub random: Vec<TuningTrace>,
+}
+
+/// Run the three tuners `repeats` times each (different seeds) with the
+/// given budgets (paper: N=10, α=1, 10 repeats, averaged).
+pub fn compare_on_layer(
+    layer_name: &str,
+    repeats: usize,
+    ml2_trials: usize,
+    tvm_trials: usize,
+    seed: u64,
+) -> ComparisonRuns {
+    let layer = resnet18::layer(layer_name).expect("layer");
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let mut runs = ComparisonRuns {
+        layer,
+        ml2: Vec::new(),
+        tvm: Vec::new(),
+        random: Vec::new(),
+    };
+    for r in 0..repeats {
+        let s = seed ^ (r as u64).wrapping_mul(0x9e37_79b9);
+        let cfg = TunerConfig { seed: s, ..Default::default() };
+        runs.ml2.push(
+            Ml2Tuner::new(cfg.clone().with_trials(ml2_trials)).tune(&env),
+        );
+        runs.tvm.push(
+            TvmTuner::new(cfg.clone().with_trials(tvm_trials)).tune(&env),
+        );
+        runs.random.push(
+            RandomTuner::new(cfg.with_trials(tvm_trials)).tune(&env),
+        );
+    }
+    runs
+}
+
+/// Mean invalidity ratio across traces.
+pub fn mean_invalidity(traces: &[TuningTrace]) -> f64 {
+    crate::util::stats::mean(
+        &traces.iter().map(|t| t.invalidity_ratio()).collect::<Vec<_>>(),
+    )
+}
+
+/// Paper's sample-efficiency metric for one repeat pair: trials ML²Tuner
+/// needs to reach the TVM run's converged best, over TVM's trials to
+/// converge. `None` when ML²Tuner never reaches the target.
+pub fn sample_efficiency(
+    ml2: &TuningTrace,
+    tvm: &TuningTrace,
+    window: usize,
+) -> Option<f64> {
+    let (tvm_trials, tvm_best) = tvm.convergence(window)?;
+    let ml2_trials = ml2.trials_to_reach(tvm_best)?;
+    Some(ml2_trials as f64 / tvm_trials as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_profile_cached_and_deterministic() {
+        let layer = resnet18::layer("conv5").unwrap();
+        let a = space_profile(&layer, 50, 1);
+        let b = space_profile(&layer, 50, 1);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a[0].space_index, b[0].space_index);
+        // shape-duplicate layer hits the same cache entry
+        let layer2 = resnet18::layer("conv6").unwrap();
+        let c = space_profile(&resnet18::layer("conv2").unwrap(), 50, 1);
+        let d = space_profile(&layer2, 50, 1);
+        assert_eq!(c[0].space_index, d[0].space_index);
+    }
+
+    #[test]
+    fn comparison_runs_shape() {
+        let runs = compare_on_layer("conv5", 2, 30, 30, 7);
+        assert_eq!(runs.ml2.len(), 2);
+        assert_eq!(runs.tvm.len(), 2);
+        assert_eq!(runs.random.len(), 2);
+        assert!(runs.ml2.iter().all(|t| t.len() == 30));
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 2(b): invalidity ratio of proposed configurations (left) and
+//! normalized histogram of execution times for the valid configurations
+//! (right), ML²Tuner vs TVM vs random, Conv1 and Conv2.
+
+use super::{data, ExpConfig};
+use crate::util::stats::normalized_histogram;
+use crate::util::table::{f, Table};
+use crate::vta::config::VtaConfig;
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let (repeats, ml2_t, tvm_t) =
+        if cfg.quick { (cfg.repeats, 120, 120) } else { (cfg.repeats, 300, 300) };
+    let clock = VtaConfig::zcu102().clock_mhz;
+    let mut out = String::from(
+        "== Fig 2(b): invalidity ratio + execution-time histogram ==\n\
+         (paper Conv1: random 0.926, TVM 0.492, ML2Tuner 0.176)\n\n",
+    );
+    for layer in ["conv1", "conv2"] {
+        let runs =
+            data::compare_on_layer(layer, repeats, ml2_t, tvm_t, cfg.seed);
+        let mut t = Table::new(&["tuner", "invalidity ratio"]);
+        t.row(&["random".into(), f(data::mean_invalidity(&runs.random), 3)]);
+        t.row(&["tvm".into(), f(data::mean_invalidity(&runs.tvm), 3)]);
+        t.row(&["ml2tuner".into(), f(data::mean_invalidity(&runs.ml2), 3)]);
+        out.push_str(&format!("--- {layer} ---\n"));
+        out.push_str(&t.render());
+
+        // normalized histogram over valid execution times (both tuners
+        // binned on the shared range, as in the paper's overlay)
+        let ms = |traces: &[crate::tuner::report::TuningTrace]| {
+            traces
+                .iter()
+                .flat_map(|t| t.valid_cycles())
+                .map(|c| c / (clock * 1e3))
+                .collect::<Vec<f64>>()
+        };
+        let mut all = ms(&runs.ml2);
+        all.extend(ms(&runs.tvm));
+        if !all.is_empty() {
+            let bins = 10;
+            let hist = |xs: &[f64]| {
+                // bin on the combined range for comparability
+                let lo = crate::util::stats::min(&all);
+                let hi = crate::util::stats::max(&all);
+                let w = ((hi - lo) / bins as f64).max(1e-12);
+                let mut counts = vec![0usize; bins];
+                for &x in xs {
+                    counts[(((x - lo) / w) as usize).min(bins - 1)] += 1;
+                }
+                counts
+                    .iter()
+                    .map(|&c| c as f64 / xs.len().max(1) as f64)
+                    .collect::<Vec<f64>>()
+            };
+            let hm = hist(&ms(&runs.ml2));
+            let ht = hist(&ms(&runs.tvm));
+            let mut ht_t = Table::new(&["bin", "ml2tuner", "tvm"]);
+            for b in 0..bins {
+                ht_t.row(&[format!("{b}"), f(hm[b], 3), f(ht[b], 3)]);
+            }
+            out.push_str("\nnormalized exec-time histogram (valid \
+                          configs, shared bins low→high):\n");
+            out.push_str(&ht_t.render());
+            let mass_low_ml2: f64 = hm[..bins / 2].iter().sum();
+            let mass_low_tvm: f64 = ht[..bins / 2].iter().sum();
+            out.push_str(&format!(
+                "low-half mass: ml2tuner {:.3} vs tvm {:.3} (paper: \
+                 ML2Tuner histogram is left-shifted)\n\n",
+                mass_low_ml2, mass_low_tvm
+            ));
+        }
+        let _ = normalized_histogram(&all, 10); // (shared util exercised)
+    }
+    out
+}

@@ -1,0 +1,105 @@
+//! Fig. 3: ratio of RMSE values of model A compared to model P across the
+//! ResNet18 layers (paper: average 0.919 — A predicts better thanks to the
+//! hidden features).
+
+use super::{data, ExpConfig};
+use crate::compiler::features::combined_features;
+use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::tuner::database::TrialRecord;
+use crate::util::rng::Rng;
+use crate::util::stats::{geomean, mean, rmse};
+use crate::util::table::{f, Table};
+use crate::workloads::resnet18;
+
+/// Train P and A on a split of `records` and return (rmse_p, rmse_a) on
+/// the held-out valid rows.
+pub fn rmse_pair(
+    records: &[TrialRecord],
+    rounds: usize,
+    train_n: usize,
+    seed: u64,
+) -> Option<(f64, f64)> {
+    let valid: Vec<&TrialRecord> =
+        records.iter().filter(|r| r.outcome.is_valid()).collect();
+    if valid.len() < 20 {
+        return None;
+    }
+    let mut idx: Vec<usize> = (0..valid.len()).collect();
+    let mut rng = Rng::new(seed ^ 0xf16_3);
+    rng.shuffle(&mut idx);
+    let train_n = train_n.min(idx.len() * 7 / 10);
+    let (tr, te) = idx.split_at(train_n);
+    if te.is_empty() {
+        return None;
+    }
+    let label = |r: &TrialRecord| r.perf_label().unwrap();
+    let params = GbdtParams::model_p().with_rounds(rounds).with_seed(seed);
+    // model P: visible features
+    let xp: Vec<Vec<f64>> =
+        tr.iter().map(|&i| valid[i].visible.clone()).collect();
+    let yp: Vec<f64> = tr.iter().map(|&i| label(valid[i])).collect();
+    let p = Booster::train(&params, &Dataset::from_rows(&xp, &yp));
+    // model A: visible ⊕ hidden
+    let xa: Vec<Vec<f64>> = tr
+        .iter()
+        .map(|&i| combined_features(&valid[i].visible, &valid[i].hidden))
+        .collect();
+    let a = Booster::train(&params, &Dataset::from_rows(&xa, &yp));
+    let y_te: Vec<f64> = te.iter().map(|&i| label(valid[i])).collect();
+    let pred_p: Vec<f64> = te
+        .iter()
+        .map(|&i| p.predict_row(&valid[i].visible))
+        .collect();
+    let pred_a: Vec<f64> = te
+        .iter()
+        .map(|&i| {
+            a.predict_row(&combined_features(
+                &valid[i].visible,
+                &valid[i].hidden,
+            ))
+        })
+        .collect();
+    Some((rmse(&pred_p, &y_te), rmse(&pred_a, &y_te)))
+}
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let (limit, rounds, train_n) =
+        if cfg.quick { (500, 100, 150) } else { (3000, 300, 600) };
+    let mut out = String::from(
+        "== Fig 3: RMSE(model A) / RMSE(model P) per layer ==\n\
+         (paper: average ratio 0.919; < 1 means hidden features help)\n\n",
+    );
+    let mut t = Table::new(&["layer", "RMSE P", "RMSE A", "ratio A/P"]);
+    let mut ratios = Vec::new();
+    for layer in resnet18::LAYERS {
+        let records = data::space_profile(&layer, limit, cfg.seed);
+        let mut rp = Vec::new();
+        let mut ra = Vec::new();
+        for r in 0..cfg.repeats {
+            if let Some((p, a)) =
+                rmse_pair(&records, rounds, train_n, cfg.seed ^ r as u64)
+            {
+                rp.push(p);
+                ra.push(a);
+            }
+        }
+        if rp.is_empty() {
+            continue;
+        }
+        let (mp, ma) = (mean(&rp), mean(&ra));
+        ratios.push(ma / mp);
+        t.row(&[
+            layer.name.to_string(),
+            f(mp, 4),
+            f(ma, 4),
+            f(ma / mp, 3),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\naverage ratio: {:.3} (geomean {:.3}); paper reports 0.919\n",
+        mean(&ratios),
+        geomean(&ratios)
+    ));
+    out
+}

@@ -1,0 +1,68 @@
+//! Fig. 5 (Appendix B.3): per-layer tuning results for all of Conv1–Conv10
+//! — ML²Tuner vs the TVM approach: best found, trials to reach parity,
+//! invalidity ratios.
+
+use super::{data, ExpConfig};
+use crate::util::stats::mean;
+use crate::util::table::{f, Table};
+use crate::vta::config::VtaConfig;
+use crate::workloads::resnet18;
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let (repeats, ml2_t, tvm_t) = if cfg.quick {
+        (cfg.repeats.min(2), 100, 200)
+    } else {
+        (cfg.repeats.min(5), 300, 700)
+    };
+    let clock = VtaConfig::zcu102().clock_mhz;
+    let mut out = String::from(
+        "== Fig 5: per-layer tuning results, ML2Tuner vs TVM approach ==\n\n",
+    );
+    let mut t = Table::new(&[
+        "layer",
+        "ml2 best (ms)",
+        "tvm best (ms)",
+        "samples vs tvm (%)",
+        "ml2 invalid",
+        "tvm invalid",
+    ]);
+    let mut effs = Vec::new();
+    for layer in resnet18::LAYERS {
+        let runs = data::compare_on_layer(layer.name, repeats, ml2_t,
+                                          tvm_t, cfg.seed);
+        let best_ms = |traces: &[crate::tuner::report::TuningTrace]| {
+            let bests: Vec<f64> = traces
+                .iter()
+                .filter_map(|t| t.best_cycles())
+                .map(|c| c as f64 / (clock * 1e3))
+                .collect();
+            mean(&bests)
+        };
+        let eff: Vec<f64> = runs
+            .ml2
+            .iter()
+            .zip(&runs.tvm)
+            .filter_map(|(m, t)| data::sample_efficiency(m, t, 100))
+            .map(|e| e * 100.0)
+            .collect();
+        if !eff.is_empty() {
+            effs.push(mean(&eff));
+        }
+        t.row(&[
+            layer.name.to_string(),
+            f(best_ms(&runs.ml2), 3),
+            f(best_ms(&runs.tvm), 3),
+            if eff.is_empty() { "-".into() } else { f(mean(&eff), 1) },
+            f(data::mean_invalidity(&runs.ml2), 3),
+            f(data::mean_invalidity(&runs.tvm), 3),
+        ]);
+    }
+    out.push_str(&t.render());
+    if !effs.is_empty() {
+        out.push_str(&format!(
+            "\naverage samples-to-TVM-parity: {:.1}% (paper: 12.3%)\n",
+            mean(&effs)
+        ));
+    }
+    out
+}

@@ -1,0 +1,65 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md
+//! §Experiment index). Each prints the same rows/series the paper reports;
+//! absolute values come from our simulated testbed, the paper's values are
+//! shown alongside where the paper states them.
+//!
+//! `quick` mode shrinks repeats/budgets so the whole suite runs in minutes
+//! (used by integration tests); full mode is what EXPERIMENTS.md records.
+
+pub mod data;
+pub mod fig2a;
+pub mod fig2b;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod headline;
+pub mod table2;
+pub mod table4;
+pub mod table5;
+
+use anyhow::{bail, Result};
+
+/// Shared experiment knobs.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Repeats for averaging (paper: 10).
+    pub repeats: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Shrunk-scale run for tests.
+    pub quick: bool,
+}
+
+impl ExpConfig {
+    pub fn full() -> Self {
+        ExpConfig { repeats: 10, seed: 2024, quick: false }
+    }
+
+    pub fn quick() -> Self {
+        ExpConfig { repeats: 2, seed: 2024, quick: true }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 9] = [
+    "fig2a", "fig2b", "fig3", "fig4", "fig5", "table2", "table4", "table5",
+    "headline",
+];
+
+/// Dispatch an experiment by id; returns the printed report.
+pub fn run(id: &str, cfg: &ExpConfig) -> Result<String> {
+    let report = match id {
+        "fig2a" => fig2a::run(cfg),
+        "fig2b" => fig2b::run(cfg),
+        "fig3" => fig3::run(cfg),
+        "fig4" => fig4::run(cfg),
+        "fig5" => fig5::run(cfg),
+        "table2" => table2::run(cfg),
+        "table4" => table4::run(cfg),
+        "table5" => table5::run(cfg),
+        "headline" => headline::run(cfg),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?}"),
+    };
+    println!("{report}");
+    Ok(report)
+}

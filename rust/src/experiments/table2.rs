@@ -1,0 +1,55 @@
+//! Table 2(b): invalidity ratio of configurations per layer under random
+//! sampling, side by side with the paper's board measurements.
+
+use super::{data, ExpConfig};
+use crate::util::table::{f, Table};
+use crate::workloads::resnet18;
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let limit = if cfg.quick { 400 } else { 2000 };
+    let mut out = String::from(
+        "== Table 2(b): invalidity ratio under random sampling ==\n\n",
+    );
+    let mut t = Table::new(&[
+        "layer",
+        "ours (sim)",
+        "crash",
+        "wrong-output",
+        "paper (board)",
+    ]);
+    for (layer, (pname, pval)) in
+        resnet18::LAYERS.iter().zip(resnet18::PAPER_INVALIDITY)
+    {
+        assert_eq!(layer.name, pname);
+        let records = data::space_profile(layer, limit, cfg.seed);
+        let n = records.len() as f64;
+        let crash = records
+            .iter()
+            .filter(|r| {
+                r.outcome == crate::tuner::database::Outcome::Crash
+            })
+            .count() as f64;
+        let wrong = records
+            .iter()
+            .filter(|r| {
+                r.outcome
+                    == crate::tuner::database::Outcome::WrongOutput
+            })
+            .count() as f64;
+        t.row(&[
+            layer.name.to_string(),
+            f((crash + wrong) / n, 4),
+            f(crash / n, 4),
+            f(wrong / n, 4),
+            f(pval, 4),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\n(ordering across layers should match the paper — conv1-class \
+         layers hardest; absolute level is lower because the simulated \
+         fault model is more regular than the authors' board, see \
+         EXPERIMENTS.md)\n",
+    );
+    out
+}

@@ -1,0 +1,147 @@
+//! Table 4 (Appendix B.1): objective-function / loss comparison.
+//!
+//! Models P and A: Regression (squared error) vs Rank (pairwise logistic).
+//! Model V: Regression vs Binary (hinge / logistic).
+//! Reported: accuracy (pairwise ordering accuracy for P/A, classification
+//! accuracy for V, ×100) and training time in seconds, aggregated over the
+//! ResNet18 layers (paper trains on all 10 layers' data).
+
+use std::time::Instant;
+
+use super::{data, ExpConfig};
+use crate::gbdt::booster::{binary_accuracy, pairwise_accuracy};
+use crate::gbdt::{Booster, Dataset, GbdtParams, Objective};
+use crate::tuner::database::TrialRecord;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::util::table::{f, Table};
+use crate::workloads::resnet18;
+
+struct Split {
+    xs_tr: Vec<Vec<f64>>,
+    ys_tr: Vec<f64>,
+    xs_te: Vec<Vec<f64>>,
+    ys_te: Vec<f64>,
+}
+
+fn perf_split(records: &[TrialRecord], seed: u64) -> Split {
+    let valid: Vec<&TrialRecord> =
+        records.iter().filter(|r| r.outcome.is_valid()).collect();
+    split(
+        valid.iter().map(|r| r.visible.clone()).collect(),
+        valid.iter().map(|r| r.perf_label().unwrap()).collect(),
+        seed,
+    )
+}
+
+fn valid_split(records: &[TrialRecord], seed: u64) -> Split {
+    split(
+        records.iter().map(|r| r.visible.clone()).collect(),
+        records.iter().map(|r| r.valid_label()).collect(),
+        seed,
+    )
+}
+
+fn split(xs: Vec<Vec<f64>>, ys: Vec<f64>, seed: u64) -> Split {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let cut = xs.len() * 7 / 10;
+    let pick = |range: &[usize]| {
+        (
+            range.iter().map(|&i| xs[i].clone()).collect::<Vec<_>>(),
+            range.iter().map(|&i| ys[i]).collect::<Vec<_>>(),
+        )
+    };
+    let (xs_tr, ys_tr) = pick(&idx[..cut]);
+    let (xs_te, ys_te) = pick(&idx[cut..]);
+    Split { xs_tr, ys_tr, xs_te, ys_te }
+}
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let limit = if cfg.quick { 400 } else { 1500 };
+    let rounds = if cfg.quick { 100 } else { 300 };
+    let mut out = String::from(
+        "== Table 4: objective function / loss comparison ==\n\
+         (paper: P/A regression 99.55 acc @320s vs rank 99.49 @538s; \
+         V hinge 99.41 @177s)\n\n",
+    );
+    // aggregate records over the unique layer shapes
+    let mut per_layer: Vec<Vec<TrialRecord>> = Vec::new();
+    for layer in resnet18::LAYERS.iter().take(5) {
+        per_layer.push(data::space_profile(layer, limit, cfg.seed));
+    }
+    let mut t = Table::new(&[
+        "model",
+        "objective",
+        "loss",
+        "accuracy",
+        "time (sec)",
+    ]);
+    // ---- P and A family: regression vs rank -------------------------
+    for (obj, obj_name, loss) in [
+        (Objective::SquaredError, "Regression", "Squared Error"),
+        (Objective::RankPairwise, "Rank", "Logistic"),
+    ] {
+        let mut accs = Vec::new();
+        let t0 = Instant::now();
+        for (li, records) in per_layer.iter().enumerate() {
+            let s = perf_split(records, cfg.seed ^ li as u64);
+            if s.xs_tr.len() < 10 || s.ys_te.len() < 5 {
+                continue;
+            }
+            let params = GbdtParams::model_p()
+                .with_rounds(rounds)
+                .with_objective(obj)
+                .with_seed(cfg.seed);
+            let b = Booster::train(
+                &params,
+                &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
+            );
+            let preds = b.predict(&s.xs_te);
+            // ranking accuracy: correct pairwise ordering (note rank
+            // objective maximizes score for FAST configs, i.e. inverse
+            // ordering of the log-cycles label)
+            let acc = pairwise_accuracy(&preds, &s.ys_te)
+                .max(1.0 - pairwise_accuracy(&preds, &s.ys_te));
+            accs.push(acc * 100.0);
+        }
+        t.row(&[
+            "Model P and A".into(),
+            obj_name.into(),
+            loss.into(),
+            f(mean(&accs), 2),
+            f(t0.elapsed().as_secs_f64(), 2),
+        ]);
+    }
+    // ---- V family: regression vs binary -----------------------------
+    for (obj, obj_name, loss) in [
+        (Objective::SquaredError, "Regression", "Squared Error"),
+        (Objective::Hinge, "Binary", "Hinge"),
+        (Objective::Logistic, "Binary", "Logistic"),
+    ] {
+        let mut accs = Vec::new();
+        let t0 = Instant::now();
+        for (li, records) in per_layer.iter().enumerate() {
+            let s = valid_split(records, cfg.seed ^ (li as u64) << 4);
+            let params = GbdtParams::model_v()
+                .with_rounds(rounds)
+                .with_objective(obj)
+                .with_seed(cfg.seed);
+            let b = Booster::train(
+                &params,
+                &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
+            );
+            let preds = b.predict(&s.xs_te);
+            accs.push(binary_accuracy(obj, &preds, &s.ys_te) * 100.0);
+        }
+        t.row(&[
+            "Model V".into(),
+            obj_name.into(),
+            loss.into(),
+            f(mean(&accs), 2),
+            f(t0.elapsed().as_secs_f64(), 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}

@@ -1,0 +1,100 @@
+//! Table 5 (Appendix B.2): normalized feature-importance scores of model A
+//! across the layers — visible features (TW, TH, nVirtualThread, …) vs
+//! hidden features (resolved tile geometry, dummy regions, branch flags).
+
+use super::{data, ExpConfig};
+use crate::compiler::features::{combined_names, HIDDEN_NAMES};
+use crate::compiler::schedule::Schedule;
+use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::tuner::database::TrialRecord;
+use crate::util::stats::geomean;
+use crate::util::table::{f, Table};
+use crate::workloads::resnet18;
+
+fn importance_for(records: &[TrialRecord], rounds: usize, seed: u64)
+    -> Option<Vec<f64>>
+{
+    let valid: Vec<&TrialRecord> =
+        records.iter().filter(|r| r.outcome.is_valid()).collect();
+    if valid.len() < 30 {
+        return None;
+    }
+    let xs: Vec<Vec<f64>> = valid
+        .iter()
+        .map(|r| {
+            crate::compiler::features::combined_features(
+                &r.visible, &r.hidden,
+            )
+        })
+        .collect();
+    let ys: Vec<f64> =
+        valid.iter().map(|r| r.perf_label().unwrap()).collect();
+    let params = GbdtParams::model_a().with_rounds(rounds).with_seed(seed);
+    let b = Booster::train(&params, &Dataset::from_rows(&xs, &ys));
+    Some(b.feature_importance())
+}
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let (limit, rounds) = if cfg.quick { (500, 100) } else { (2500, 300) };
+    let names = combined_names();
+    let n_visible = Schedule::VISIBLE_NAMES.len();
+    let layers: Vec<_> = if cfg.quick {
+        vec![resnet18::layer("conv1").unwrap(),
+             resnet18::layer("conv4").unwrap()]
+    } else {
+        resnet18::LAYERS.to_vec()
+    };
+    let mut per_layer: Vec<(String, Vec<f64>)> = Vec::new();
+    for layer in &layers {
+        let records = data::space_profile(layer, limit, cfg.seed);
+        if let Some(imp) = importance_for(&records, rounds, cfg.seed) {
+            per_layer.push((layer.name.to_string(), imp));
+        }
+    }
+    // geometric average across layers (paper's GeoAVG column)
+    let geo: Vec<f64> = (0..names.len())
+        .map(|fi| {
+            geomean(
+                &per_layer
+                    .iter()
+                    .map(|(_, imp)| imp[fi].max(1e-3))
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..names.len()).collect();
+    order.sort_by(|&a, &b| geo[b].partial_cmp(&geo[a]).unwrap());
+
+    let mut out = String::from(
+        "== Table 5: normalized feature importance of model A (%) ==\n\
+         ([v] = visible feature, [h] = hidden feature; paper: TW/TH \
+         dominate, hidden features like nFilterInLoop and sizeOutTile* \
+         follow)\n\n",
+    );
+    let mut header: Vec<String> =
+        vec!["feature".into(), "GeoAVG".into()];
+    header.extend(per_layer.iter().map(|(n, _)| n.clone()));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&hdr);
+    for &fi in &order {
+        if geo[fi] < 0.01 {
+            continue;
+        }
+        let kind = if fi < n_visible { "[v]" } else { "[h]" };
+        let mut row =
+            vec![format!("{kind} {}", names[fi]), f(geo[fi], 3)];
+        row.extend(per_layer.iter().map(|(_, imp)| f(imp[fi], 3)));
+        t.row(&row);
+    }
+    out.push_str(&t.render());
+    let hidden_share: f64 = (n_visible..names.len())
+        .map(|fi| geo[fi])
+        .sum::<f64>()
+        / geo.iter().sum::<f64>()
+        * 100.0;
+    out.push_str(&format!(
+        "\nhidden-feature share of total importance (geo): {hidden_share:.1}%\n"
+    ));
+    let _ = HIDDEN_NAMES; // names come from combined_names()
+    out
+}

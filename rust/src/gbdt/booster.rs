@@ -1,0 +1,346 @@
+//! Gradient boosting driver + evaluation metrics.
+
+use super::dataset::{BinnedDataset, Dataset};
+use super::objective::Objective;
+use super::params::GbdtParams;
+use super::tree::{grow, GrowCfg, Tree};
+use crate::util::rng::Rng;
+
+/// A trained ensemble.
+#[derive(Clone, Debug)]
+pub struct Booster {
+    pub params: GbdtParams,
+    pub base_score: f64,
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+}
+
+impl Booster {
+    /// Train on `data` (optionally with ranking groups).
+    pub fn train(params: &GbdtParams, data: &Dataset) -> Booster {
+        Self::train_grouped(params, data, None)
+    }
+
+    /// Train with explicit ranking query groups (sizes summing to n_rows).
+    pub fn train_grouped(
+        params: &GbdtParams,
+        data: &Dataset,
+        groups: Option<&[usize]>,
+    ) -> Booster {
+        assert!(data.n_rows > 0, "empty training set");
+        let binned = BinnedDataset::bin(data, params.max_bins);
+        let mut rng = Rng::new(params.seed ^ 0x9bd1_77c3);
+        let base = params.objective.base_score(&data.labels);
+        let mut preds = vec![base; data.n_rows];
+        let mut grad: Vec<f64> = Vec::new();
+        let mut hess: Vec<f64> = Vec::new();
+        let grow_cfg = GrowCfg {
+            max_depth: params.max_depth,
+            min_child_weight: params.min_child_weight,
+            gamma: params.gamma,
+            reg_alpha: params.reg_alpha,
+            reg_lambda: params.reg_lambda,
+            learning_rate: params.learning_rate,
+        };
+        let all_rows: Vec<u32> = (0..data.n_rows as u32).collect();
+        let all_feats: Vec<u32> = (0..data.n_features as u32).collect();
+        let mut trees = Vec::with_capacity(params.boost_rounds);
+        for _round in 0..params.boost_rounds {
+            params.objective.grad_hess(
+                &preds, &data.labels, groups, &mut grad, &mut hess,
+            );
+            // row subsampling
+            let rows: Vec<u32> = if params.subsample < 1.0 {
+                let k = ((data.n_rows as f64 * params.subsample).ceil()
+                    as usize)
+                    .clamp(1, data.n_rows);
+                rng.sample_indices(data.n_rows, k)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect()
+            } else {
+                all_rows.clone()
+            };
+            // feature subsampling
+            let feats: Vec<u32> = if params.colsample_bytree < 1.0 {
+                let k = ((data.n_features as f64
+                    * params.colsample_bytree)
+                    .ceil() as usize)
+                    .clamp(1, data.n_features);
+                rng.sample_indices(data.n_features, k)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect()
+            } else {
+                all_feats.clone()
+            };
+            let tree = grow(&binned, &grad, &hess, &rows, &feats,
+                            &grow_cfg);
+            for i in 0..data.n_rows {
+                preds[i] += tree.predict_row(data.row(i));
+            }
+            trees.push(tree);
+        }
+        Booster {
+            params: params.clone(),
+            base_score: base,
+            trees,
+            n_features: data.n_features,
+        }
+    }
+
+    /// Raw score for one feature row.
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        let rowf: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+        self.predict_row_f32(&rowf)
+    }
+
+    #[inline]
+    pub fn predict_row_f32(&self, row: &[f32]) -> f64 {
+        let mut s = self.base_score;
+        for t in &self.trees {
+            s += t.predict_row(row);
+        }
+        s
+    }
+
+    /// Raw scores for many rows.
+    pub fn predict(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict_row(r)).collect()
+    }
+
+    /// Probability/transformed output (sigmoid for logistic).
+    pub fn predict_transformed(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter()
+            .map(|r| self.params.objective.transform(self.predict_row(r)))
+            .collect()
+    }
+
+    /// Binary decision using the objective's raw-score threshold.
+    pub fn predict_binary(&self, row: &[f64]) -> bool {
+        self.predict_row(row) > self.params.objective.decision_threshold()
+    }
+
+    /// Gain-based feature importance, normalized to percentages
+    /// (paper Table 5's "Normalized Feature Importance Score (%)").
+    pub fn feature_importance(&self) -> Vec<f64> {
+        let mut gains = vec![0.0; self.n_features];
+        for t in &self.trees {
+            t.add_gains(&mut gains);
+        }
+        let total: f64 = gains.iter().sum();
+        if total > 0.0 {
+            for g in gains.iter_mut() {
+                *g *= 100.0 / total;
+            }
+        }
+        gains
+    }
+}
+
+// ------------------------------------------------------------- metrics ---
+
+/// Fraction of test pairs ordered consistently with the labels — the
+/// "accuracy" we report for regression/ranking models in Table 4.
+pub fn pairwise_accuracy(preds: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let n = preds.len();
+    let mut ok = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in i + 1..n {
+            if labels[i] == labels[j] {
+                continue;
+            }
+            total += 1;
+            if (labels[i] > labels[j]) == (preds[i] > preds[j]) {
+                ok += 1;
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        ok as f64 / total as f64
+    }
+}
+
+/// Binary classification accuracy at the objective's raw threshold.
+pub fn binary_accuracy(
+    obj: Objective,
+    preds_raw: &[f64],
+    labels: &[f64],
+) -> f64 {
+    assert_eq!(preds_raw.len(), labels.len());
+    if preds_raw.is_empty() {
+        return 1.0;
+    }
+    let thr = obj.decision_threshold();
+    let ok = preds_raw
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| (p > thr) == (y > 0.5))
+        .count();
+    ok as f64 / preds_raw.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn synth_regression(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut r = Rng::new(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![r.range_f64(0.0, 4.0), r.range_f64(0.0, 4.0),
+                          r.range_f64(0.0, 1.0)])
+            .collect();
+        let labels: Vec<f64> = rows
+            .iter()
+            .map(|x| x[0] * x[0] + 3.0 * x[1] + 0.05 * x[2])
+            .collect();
+        (rows, labels)
+    }
+
+    #[test]
+    fn regression_fits_smooth_function() {
+        let (rows, labels) = synth_regression(400, 1);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            boost_rounds: 120,
+            max_depth: 5,
+            learning_rate: 0.2,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let (test_rows, test_labels) = synth_regression(200, 2);
+        let preds = b.predict(&test_rows);
+        let rmse = stats::rmse(&preds, &test_labels);
+        let spread = stats::std_dev(&test_labels);
+        assert!(rmse < 0.25 * spread, "rmse={rmse}, spread={spread}");
+    }
+
+    #[test]
+    fn logistic_classifies() {
+        let mut r = Rng::new(3);
+        let rows: Vec<Vec<f64>> = (0..500)
+            .map(|_| vec![r.range_f64(-2.0, 2.0), r.range_f64(-2.0, 2.0)])
+            .collect();
+        let labels: Vec<f64> = rows
+            .iter()
+            .map(|x| (x[0] + x[1] > 0.0) as u8 as f64)
+            .collect();
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            objective: Objective::Logistic,
+            boost_rounds: 60,
+            max_depth: 4,
+            learning_rate: 0.3,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let preds = b.predict(&rows);
+        let acc = binary_accuracy(Objective::Logistic, &preds, &labels);
+        assert!(acc > 0.95, "acc={acc}");
+        // transformed outputs are probabilities
+        let probs = b.predict_transformed(&rows);
+        assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn hinge_classifies() {
+        let mut r = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..400)
+            .map(|_| vec![r.range_f64(0.0, 10.0)])
+            .collect();
+        let labels: Vec<f64> =
+            rows.iter().map(|x| (x[0] > 6.0) as u8 as f64).collect();
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            objective: Objective::Hinge,
+            boost_rounds: 40,
+            max_depth: 3,
+            learning_rate: 0.3,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let preds = b.predict(&rows);
+        let acc = binary_accuracy(Objective::Hinge, &preds, &labels);
+        assert!(acc > 0.97, "acc={acc}");
+    }
+
+    #[test]
+    fn rank_orders_items() {
+        let mut r = Rng::new(7);
+        let rows: Vec<Vec<f64>> = (0..300)
+            .map(|_| vec![r.range_f64(0.0, 1.0), r.range_f64(0.0, 1.0)])
+            .collect();
+        let labels: Vec<f64> =
+            rows.iter().map(|x| 5.0 * x[0] + x[1]).collect();
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            objective: Objective::RankPairwise,
+            boost_rounds: 40,
+            max_depth: 4,
+            learning_rate: 0.2,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let preds = b.predict(&rows);
+        let acc = pairwise_accuracy(&preds, &labels);
+        assert!(acc > 0.9, "pairwise acc={acc}");
+    }
+
+    #[test]
+    fn subsampling_still_learns() {
+        let (rows, labels) = synth_regression(500, 11);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            boost_rounds: 150,
+            max_depth: 5,
+            learning_rate: 0.2,
+            subsample: 0.6,
+            colsample_bytree: 0.6,
+            seed: 4,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let preds = b.predict(&rows);
+        let acc = pairwise_accuracy(&preds, &labels);
+        assert!(acc > 0.93, "acc={acc}");
+    }
+
+    #[test]
+    fn importance_finds_the_signal_feature() {
+        let (rows, labels) = synth_regression(400, 13);
+        let d = Dataset::from_rows(&rows, &labels);
+        let b = Booster::train(
+            &GbdtParams { boost_rounds: 50, max_depth: 4,
+                          learning_rate: 0.2, ..Default::default() },
+            &d,
+        );
+        let imp = b.feature_importance();
+        assert_eq!(imp.len(), 3);
+        assert!((imp.iter().sum::<f64>() - 100.0).abs() < 1e-6);
+        // feature 2 has coefficient 0.05 — near-noise
+        assert!(imp[0] > imp[2] && imp[1] > imp[2], "{imp:?}");
+    }
+
+    #[test]
+    fn training_is_deterministic_per_seed() {
+        let (rows, labels) = synth_regression(100, 17);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams { boost_rounds: 10, subsample: 0.7, seed: 9,
+                             ..Default::default() };
+        let a = Booster::train(&p, &d);
+        let b = Booster::train(&p, &d);
+        assert_eq!(a.predict(&rows), b.predict(&rows));
+    }
+
+    #[test]
+    fn pairwise_accuracy_bounds() {
+        assert_eq!(pairwise_accuracy(&[1.0, 2.0], &[1.0, 2.0]), 1.0);
+        assert_eq!(pairwise_accuracy(&[2.0, 1.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(pairwise_accuracy(&[], &[]), 1.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tabular dataset + quantile binning for histogram split finding.
+
+/// Row-major float feature matrix with labels.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// `values[row * n_features + f]`.
+    pub values: Vec<f32>,
+    pub labels: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(n_features: usize) -> Self {
+        Dataset { n_rows: 0, n_features, values: Vec::new(),
+                  labels: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: &[f64], label: f64) {
+        assert_eq!(row.len(), self.n_features);
+        self.values.extend(row.iter().map(|&v| v as f32));
+        self.labels.push(label);
+        self.n_rows += 1;
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>], labels: &[f64]) -> Self {
+        assert_eq!(rows.len(), labels.len());
+        let nf = rows.first().map_or(0, |r| r.len());
+        let mut d = Dataset::new(nf);
+        for (r, &l) in rows.iter().zip(labels) {
+            d.push(r, l);
+        }
+        d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.n_features..(i + 1) * self.n_features]
+    }
+}
+
+/// Quantile-binned view of a dataset (feature-major u8 bin matrix).
+#[derive(Clone, Debug)]
+pub struct BinnedDataset {
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// `bins[f * n_rows + row]` — feature-major for histogram locality.
+    pub bins: Vec<u8>,
+    /// Per-feature ascending cut points; bin `b` ⇔ `x > cuts[b-1] && x <=
+    /// cuts[b]`-ish: `bin(x) = #{c in cuts : x > c}`.
+    pub cuts: Vec<Vec<f32>>,
+}
+
+impl BinnedDataset {
+    /// Bin with at most `max_bins` bins per feature (≤ 256).
+    pub fn bin(data: &Dataset, max_bins: usize) -> Self {
+        assert!((2..=256).contains(&max_bins));
+        let (n, nf) = (data.n_rows, data.n_features);
+        let mut cuts = Vec::with_capacity(nf);
+        let mut bins = vec![0u8; nf * n];
+        let mut col: Vec<f32> = Vec::with_capacity(n);
+        for f in 0..nf {
+            col.clear();
+            col.extend((0..n).map(|r| data.values[r * nf + f]));
+            let c = quantile_cuts(&mut col.clone(), max_bins - 1);
+            for r in 0..n {
+                bins[f * n + r] = bin_of(&c, data.values[r * nf + f]);
+            }
+            cuts.push(c);
+        }
+        BinnedDataset { n_rows: n, n_features: nf, bins, cuts }
+    }
+
+    #[inline]
+    pub fn feature_bins(&self, f: usize) -> &[u8] {
+        &self.bins[f * self.n_rows..(f + 1) * self.n_rows]
+    }
+
+    /// Number of bins actually used for feature `f`.
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.cuts[f].len() + 1
+    }
+}
+
+/// `#{c in cuts : x > c}` — the bin index of a raw value.
+#[inline]
+pub fn bin_of(cuts: &[f32], x: f32) -> u8 {
+    // cuts are short (≤255); linear scan beats binary search at this size
+    let mut b = 0u8;
+    for &c in cuts {
+        if x > c {
+            b += 1;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+/// Up to `k` cut points between distinct quantiles of `col`.
+fn quantile_cuts(col: &mut [f32], k: usize) -> Vec<f32> {
+    if col.is_empty() {
+        return Vec::new();
+    }
+    col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut distinct: Vec<f32> = Vec::new();
+    for &v in col.iter() {
+        if distinct.last() != Some(&v) {
+            distinct.push(v);
+        }
+    }
+    if distinct.len() <= 1 {
+        return Vec::new();
+    }
+    let n_cuts = k.min(distinct.len() - 1);
+    let mut cuts = Vec::with_capacity(n_cuts);
+    if distinct.len() - 1 <= k {
+        // one cut between every pair of adjacent distinct values
+        for w in distinct.windows(2) {
+            cuts.push((w[0] + w[1]) * 0.5);
+        }
+    } else {
+        for i in 1..=n_cuts {
+            let pos = i * (distinct.len() - 1) / (n_cuts + 1);
+            cuts.push((distinct[pos] + distinct[pos + 1]) * 0.5);
+        }
+        cuts.dedup();
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_row() {
+        let mut d = Dataset::new(2);
+        d.push(&[1.0, 2.0], 0.5);
+        d.push(&[3.0, 4.0], 1.5);
+        assert_eq!(d.n_rows, 2);
+        assert_eq!(d.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn binning_separates_distinct_values() {
+        let rows: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![i as f64]).collect();
+        let labels = vec![0.0; 10];
+        let d = Dataset::from_rows(&rows, &labels);
+        let b = BinnedDataset::bin(&d, 256);
+        // 10 distinct values → 10 bins, each row its own bin
+        let bins = b.feature_bins(0);
+        let mut sorted = bins.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+
+    #[test]
+    fn binning_respects_max_bins() {
+        let rows: Vec<Vec<f64>> =
+            (0..1000).map(|i| vec![i as f64]).collect();
+        let d = Dataset::from_rows(&rows, &vec![0.0; 1000]);
+        let b = BinnedDataset::bin(&d, 16);
+        assert!(b.n_bins(0) <= 16);
+        // bins are monotone in the raw value
+        let bins = b.feature_bins(0);
+        for w in bins.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn constant_feature_single_bin() {
+        let d = Dataset::from_rows(
+            &(0..5).map(|_| vec![7.0]).collect::<Vec<_>>(),
+            &vec![0.0; 5],
+        );
+        let b = BinnedDataset::bin(&d, 256);
+        assert_eq!(b.n_bins(0), 1);
+        assert!(b.feature_bins(0).iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn bin_of_matches_threshold_semantics() {
+        let cuts = vec![1.0f32, 3.0, 5.0];
+        assert_eq!(bin_of(&cuts, 0.5), 0);
+        assert_eq!(bin_of(&cuts, 1.0), 0); // x <= cut → left
+        assert_eq!(bin_of(&cuts, 2.0), 1);
+        assert_eq!(bin_of(&cuts, 9.0), 3);
+    }
+}

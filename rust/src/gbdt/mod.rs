@@ -1,0 +1,23 @@
+//! From-scratch gradient-boosted decision trees — the paper's cost-model
+//! family (XGBoost v2.1.1, paper §3) rebuilt on the second-order boosting
+//! formulation:
+//!
+//! * histogram split finding over quantile-binned features
+//!   ([`dataset::BinnedDataset`]);
+//! * objectives `reg:squarederror`, `binary:logistic`, `binary:hinge`,
+//!   `rank:pairwise` ([`objective::Objective`] — the Table 3/4 surface);
+//! * regularization: `max_depth`, `min_child_weight`, `gamma`, `subsample`,
+//!   `colsample_bytree`, `learning_rate`, `reg_alpha` (L1 on leaves, via
+//!   soft thresholding) and `reg_lambda` ([`params::GbdtParams`]);
+//! * gain-based feature importance for the Table 5 report.
+
+pub mod booster;
+pub mod dataset;
+pub mod objective;
+pub mod params;
+pub mod tree;
+
+pub use booster::Booster;
+pub use dataset::Dataset;
+pub use objective::Objective;
+pub use params::GbdtParams;

@@ -1,0 +1,227 @@
+//! Training objectives — paper Tables 3/4: regression (squared error),
+//! binary classification (hinge / logistic), pairwise ranking.
+
+/// Supported objective functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// `reg:squarederror` — models P and A.
+    SquaredError,
+    /// `binary:logistic` — model V variant (Table 4).
+    Logistic,
+    /// `binary:hinge` — model V (Table 3).
+    Hinge,
+    /// `rank:pairwise` — P/A variant compared in Table 4 ([41] LambdaMART
+    /// style, single query group unless groups are given).
+    RankPairwise,
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl Objective {
+    /// Initial raw prediction.
+    pub fn base_score(&self, labels: &[f64]) -> f64 {
+        match self {
+            Objective::SquaredError => {
+                if labels.is_empty() {
+                    0.0
+                } else {
+                    labels.iter().sum::<f64>() / labels.len() as f64
+                }
+            }
+            Objective::Logistic => {
+                let p = (labels.iter().sum::<f64>()
+                    / labels.len().max(1) as f64)
+                    .clamp(1e-6, 1.0 - 1e-6);
+                (p / (1.0 - p)).ln()
+            }
+            Objective::Hinge | Objective::RankPairwise => 0.0,
+        }
+    }
+
+    /// Gradient/hessian of the loss at current raw predictions.
+    /// `groups`: query-group sizes for ranking (None ⇒ one group).
+    pub fn grad_hess(
+        &self,
+        preds: &[f64],
+        labels: &[f64],
+        groups: Option<&[usize]>,
+        grad: &mut Vec<f64>,
+        hess: &mut Vec<f64>,
+    ) {
+        let n = preds.len();
+        grad.clear();
+        hess.clear();
+        grad.resize(n, 0.0);
+        hess.resize(n, 0.0);
+        match self {
+            Objective::SquaredError => {
+                for i in 0..n {
+                    grad[i] = preds[i] - labels[i];
+                    hess[i] = 1.0;
+                }
+            }
+            Objective::Logistic => {
+                for i in 0..n {
+                    let p = sigmoid(preds[i]);
+                    grad[i] = p - labels[i];
+                    hess[i] = (p * (1.0 - p)).max(1e-16);
+                }
+            }
+            Objective::Hinge => {
+                for i in 0..n {
+                    let y = 2.0 * labels[i] - 1.0; // {0,1} → {-1,+1}
+                    if y * preds[i] < 1.0 {
+                        grad[i] = -y;
+                    } else {
+                        grad[i] = 0.0;
+                    }
+                    hess[i] = 1.0;
+                }
+            }
+            Objective::RankPairwise => {
+                let one_group = [n];
+                let groups = groups.unwrap_or(&one_group);
+                let mut start = 0usize;
+                for &len in groups {
+                    let end = start + len;
+                    for i in start..end {
+                        for j in start..end {
+                            if labels[i] <= labels[j] {
+                                continue; // want pairs where i beats j
+                            }
+                            // P(i beats j) should → 1
+                            let s = sigmoid(preds[i] - preds[j]);
+                            let g = s - 1.0;
+                            let h = (s * (1.0 - s)).max(1e-16);
+                            grad[i] += g;
+                            grad[j] -= g;
+                            hess[i] += h;
+                            hess[j] += h;
+                        }
+                    }
+                    start = end;
+                }
+                for h in hess.iter_mut() {
+                    if *h == 0.0 {
+                        *h = 1e-16;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Transform a raw prediction into the reporting domain
+    /// (probability for logistic; identity otherwise).
+    pub fn transform(&self, raw: f64) -> f64 {
+        match self {
+            Objective::Logistic => sigmoid(raw),
+            _ => raw,
+        }
+    }
+
+    /// Decision threshold on the *raw* score for binary objectives.
+    pub fn decision_threshold(&self) -> f64 {
+        match self {
+            Objective::Logistic => 0.0, // sigmoid(0) = 0.5
+            Objective::Hinge => 0.0,
+            Objective::SquaredError => 0.5, // regression-on-{0,1} trick
+            Objective::RankPairwise => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_error_grad() {
+        let mut g = vec![];
+        let mut h = vec![];
+        Objective::SquaredError.grad_hess(
+            &[2.0, -1.0],
+            &[1.0, 1.0],
+            None,
+            &mut g,
+            &mut h,
+        );
+        assert_eq!(g, vec![1.0, -2.0]);
+        assert_eq!(h, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn logistic_grad_signs() {
+        let mut g = vec![];
+        let mut h = vec![];
+        Objective::Logistic.grad_hess(
+            &[0.0, 0.0],
+            &[1.0, 0.0],
+            None,
+            &mut g,
+            &mut h,
+        );
+        assert!(g[0] < 0.0 && g[1] > 0.0);
+        assert!(h.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn hinge_zero_grad_outside_margin() {
+        let mut g = vec![];
+        let mut h = vec![];
+        Objective::Hinge.grad_hess(
+            &[2.0, 0.5, -2.0],
+            &[1.0, 1.0, 0.0],
+            None,
+            &mut g,
+            &mut h,
+        );
+        assert_eq!(g[0], 0.0); // margin satisfied
+        assert_eq!(g[1], -1.0); // inside margin, pushes up
+        assert_eq!(g[2], 0.0); // y=-1, pred=-2 → margin satisfied
+    }
+
+    #[test]
+    fn rank_pushes_winner_up() {
+        let mut g = vec![];
+        let mut h = vec![];
+        Objective::RankPairwise.grad_hess(
+            &[0.0, 0.0],
+            &[2.0, 1.0],
+            None,
+            &mut g,
+            &mut h,
+        );
+        assert!(g[0] < 0.0, "winner gradient must push score up");
+        assert!(g[1] > 0.0);
+        assert_eq!(g[0], -g[1]);
+    }
+
+    #[test]
+    fn rank_respects_groups() {
+        let mut g = vec![];
+        let mut h = vec![];
+        // two groups; cross-group pairs must not contribute
+        Objective::RankPairwise.grad_hess(
+            &[0.0, 0.0],
+            &[2.0, 1.0],
+            Some(&[1, 1]),
+            &mut g,
+            &mut h,
+        );
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn base_scores() {
+        assert_eq!(
+            Objective::SquaredError.base_score(&[1.0, 3.0]),
+            2.0
+        );
+        let b = Objective::Logistic.base_score(&[1.0, 1.0, 0.0, 0.0]);
+        assert!(b.abs() < 1e-9); // logit(0.5) = 0
+        assert_eq!(Objective::Hinge.base_score(&[1.0]), 0.0);
+    }
+}

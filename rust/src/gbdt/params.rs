@@ -1,0 +1,125 @@
+//! Hyper-parameters — paper Table 3 (search space and tuned values).
+
+use super::objective::Objective;
+
+/// XGBoost-style boosting hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GbdtParams {
+    pub objective: Objective,
+    /// `boost round` (Table 3: 300 for all models).
+    pub boost_rounds: usize,
+    /// `max depth` (P/A: 14, V: 5).
+    pub max_depth: usize,
+    /// `min child weight` (3).
+    pub min_child_weight: f64,
+    /// `gamma` — minimum split gain (0.0).
+    pub gamma: f64,
+    /// `subsample` — row sampling per tree (P/A: 1.0, V: 0.6).
+    pub subsample: f64,
+    /// `colsample bytree` (P/A: 1.0, V: 0.6).
+    pub colsample_bytree: f64,
+    /// `learning rate` (P/A: 0.01, V: 0.1).
+    pub learning_rate: f64,
+    /// `reg alpha` — L1 on leaf weights (P/A: 1e-5, V: 1e-2).
+    pub reg_alpha: f64,
+    /// L2 on leaf weights (XGBoost default 1.0; not swept in the paper).
+    pub reg_lambda: f64,
+    /// Histogram bins per feature.
+    pub max_bins: usize,
+    pub seed: u64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            objective: Objective::SquaredError,
+            boost_rounds: 100,
+            max_depth: 6,
+            min_child_weight: 1.0,
+            gamma: 0.0,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            learning_rate: 0.1,
+            reg_alpha: 0.0,
+            reg_lambda: 1.0,
+            max_bins: 256,
+            seed: 0,
+        }
+    }
+}
+
+impl GbdtParams {
+    /// Paper Table 3, "Model P" column.
+    pub fn model_p() -> Self {
+        GbdtParams {
+            objective: Objective::SquaredError,
+            boost_rounds: 300,
+            max_depth: 14,
+            min_child_weight: 3.0,
+            gamma: 0.0,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            learning_rate: 0.01,
+            reg_alpha: 1e-5,
+            ..Default::default()
+        }
+    }
+
+    /// Paper Table 3, "Model V" column (binary:hinge).
+    pub fn model_v() -> Self {
+        GbdtParams {
+            objective: Objective::Hinge,
+            boost_rounds: 300,
+            max_depth: 5,
+            min_child_weight: 3.0,
+            gamma: 0.0,
+            subsample: 0.6,
+            colsample_bytree: 0.6,
+            learning_rate: 0.1,
+            reg_alpha: 1e-2,
+            ..Default::default()
+        }
+    }
+
+    /// Paper Table 3, "Model A" column (same as P; wider feature input).
+    pub fn model_a() -> Self {
+        Self::model_p()
+    }
+
+    /// Tuning-loop variant: fewer rounds so each iteration retrain stays
+    /// cheap (the paper retrains per iteration; round count is an
+    /// experiment axis in Fig. 4).
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        self.boost_rounds = rounds;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_objective(mut self, obj: Objective) -> Self {
+        self.objective = obj;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_presets() {
+        let p = GbdtParams::model_p();
+        assert_eq!(p.boost_rounds, 300);
+        assert_eq!(p.max_depth, 14);
+        assert_eq!(p.learning_rate, 0.01);
+        assert_eq!(p.reg_alpha, 1e-5);
+        let v = GbdtParams::model_v();
+        assert_eq!(v.max_depth, 5);
+        assert_eq!(v.subsample, 0.6);
+        assert_eq!(v.objective, Objective::Hinge);
+        assert_eq!(GbdtParams::model_a(), GbdtParams::model_p());
+    }
+}

@@ -1,0 +1,341 @@
+//! Regression tree: histogram-grown, stored flat for fast traversal.
+
+use super::dataset::{BinnedDataset, Dataset};
+
+/// Flat node. Leaves have `feature == u32::MAX`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    /// Split feature, or `u32::MAX` for a leaf.
+    pub feature: u32,
+    /// Raw-value threshold: `x <= threshold` goes left.
+    pub threshold: f32,
+    /// Children indices (leaf: unused).
+    pub left: u32,
+    pub right: u32,
+    /// Leaf output (already scaled by the learning rate).
+    pub value: f64,
+    /// Split gain (importance accounting).
+    pub gain: f64,
+}
+
+impl Node {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.feature == u32::MAX
+    }
+
+    pub fn leaf(value: f64) -> Node {
+        Node { feature: u32::MAX, threshold: 0.0, left: 0, right: 0,
+               value, gain: 0.0 }
+    }
+}
+
+/// One boosted tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Predict a single raw feature row.
+    #[inline]
+    pub fn predict_row(&self, row: &[f32]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return n.value;
+            }
+            i = if row[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    /// Accumulate split gains per feature into `out`.
+    pub fn add_gains(&self, out: &mut [f64]) {
+        for n in &self.nodes {
+            if !n.is_leaf() {
+                out[n.feature as usize] += n.gain;
+            }
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(t: &Tree, i: usize) -> usize {
+            let n = &t.nodes[i];
+            if n.is_leaf() {
+                0
+            } else {
+                1 + rec(t, n.left as usize).max(rec(t, n.right as usize))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            rec(self, 0)
+        }
+    }
+}
+
+/// Split-finding configuration (subset of `GbdtParams` the grower needs).
+pub struct GrowCfg {
+    pub max_depth: usize,
+    pub min_child_weight: f64,
+    pub gamma: f64,
+    pub reg_alpha: f64,
+    pub reg_lambda: f64,
+    pub learning_rate: f64,
+}
+
+/// L1 soft threshold on the gradient sum.
+#[inline]
+fn soft_threshold(g: f64, alpha: f64) -> f64 {
+    if g > alpha {
+        g - alpha
+    } else if g < -alpha {
+        g + alpha
+    } else {
+        0.0
+    }
+}
+
+#[inline]
+fn leaf_objective(g: f64, h: f64, cfg: &GrowCfg) -> f64 {
+    let t = soft_threshold(g, cfg.reg_alpha);
+    t * t / (h + cfg.reg_lambda)
+}
+
+#[inline]
+fn leaf_weight(g: f64, h: f64, cfg: &GrowCfg) -> f64 {
+    -soft_threshold(g, cfg.reg_alpha) / (h + cfg.reg_lambda)
+}
+
+/// Grow one tree on `rows` (indices into the binned data) with per-row
+/// gradient/hessian, considering only `features`. Depth-wise expansion.
+pub fn grow(
+    binned: &BinnedDataset,
+    grad: &[f64],
+    hess: &[f64],
+    rows: &[u32],
+    features: &[u32],
+    cfg: &GrowCfg,
+) -> Tree {
+    let mut tree = Tree::default();
+    let mut row_buf: Vec<u32> = rows.to_vec();
+    // node → (segment in row_buf, depth)
+    struct Work {
+        node: usize,
+        lo: usize,
+        hi: usize,
+        depth: usize,
+        g: f64,
+        h: f64,
+    }
+    let (g0, h0) = sum_gh(grad, hess, &row_buf);
+    tree.nodes.push(Node::leaf(0.0));
+    let mut stack = vec![Work { node: 0, lo: 0, hi: row_buf.len(),
+                                depth: 0, g: g0, h: h0 }];
+    // scratch histograms: (sum_g, sum_h) per bin
+    let mut hist_g = vec![0.0f64; 256];
+    let mut hist_h = vec![0.0f64; 256];
+    while let Some(w) = stack.pop() {
+        let seg = &row_buf[w.lo..w.hi];
+        let parent_obj = leaf_objective(w.g, w.h, cfg);
+        let mut best: Option<(f64, u32, u8, f64, f64)> = None;
+        // (gain, feature, bin, gl, hl)
+        if w.depth < cfg.max_depth && seg.len() >= 2 {
+            for &f in features {
+                let bins = binned.feature_bins(f as usize);
+                let nb = binned.n_bins(f as usize);
+                if nb < 2 {
+                    continue;
+                }
+                hist_g[..nb].fill(0.0);
+                hist_h[..nb].fill(0.0);
+                for &r in seg {
+                    let b = bins[r as usize] as usize;
+                    hist_g[b] += grad[r as usize];
+                    hist_h[b] += hess[r as usize];
+                }
+                let mut gl = 0.0;
+                let mut hl = 0.0;
+                for b in 0..nb - 1 {
+                    gl += hist_g[b];
+                    hl += hist_h[b];
+                    let gr = w.g - gl;
+                    let hr = w.h - hl;
+                    if hl < cfg.min_child_weight
+                        || hr < cfg.min_child_weight
+                    {
+                        continue;
+                    }
+                    let gain = 0.5
+                        * (leaf_objective(gl, hl, cfg)
+                            + leaf_objective(gr, hr, cfg)
+                            - parent_obj)
+                        - cfg.gamma;
+                    if gain > 0.0
+                        && best.map_or(true, |(bg, ..)| gain > bg)
+                    {
+                        best = Some((gain, f, b as u8, gl, hl));
+                    }
+                }
+            }
+        }
+        match best {
+            None => {
+                tree.nodes[w.node] =
+                    Node::leaf(cfg.learning_rate * leaf_weight(w.g, w.h, cfg));
+            }
+            Some((gain, f, bin, gl, hl)) => {
+                // partition the segment in place
+                let bins = binned.feature_bins(f as usize);
+                let seg = &mut row_buf[w.lo..w.hi];
+                let mut i = 0usize;
+                let mut j = seg.len();
+                while i < j {
+                    if bins[seg[i] as usize] <= bin {
+                        i += 1;
+                    } else {
+                        j -= 1;
+                        seg.swap(i, j);
+                    }
+                }
+                let mid = w.lo + i;
+                let left = tree.nodes.len();
+                tree.nodes.push(Node::leaf(0.0));
+                let right = tree.nodes.len();
+                tree.nodes.push(Node::leaf(0.0));
+                tree.nodes[w.node] = Node {
+                    feature: f,
+                    threshold: binned.cuts[f as usize][bin as usize],
+                    left: left as u32,
+                    right: right as u32,
+                    value: 0.0,
+                    gain,
+                };
+                stack.push(Work { node: left, lo: w.lo, hi: mid,
+                                  depth: w.depth + 1, g: gl, h: hl });
+                stack.push(Work { node: right, lo: mid, hi: w.hi,
+                                  depth: w.depth + 1, g: w.g - gl,
+                                  h: w.h - hl });
+            }
+        }
+    }
+    tree
+}
+
+fn sum_gh(grad: &[f64], hess: &[f64], rows: &[u32]) -> (f64, f64) {
+    let mut g = 0.0;
+    let mut h = 0.0;
+    for &r in rows {
+        g += grad[r as usize];
+        h += hess[r as usize];
+    }
+    (g, h)
+}
+
+/// Predict a whole dataset with one tree (adds into `out`).
+pub fn predict_into(tree: &Tree, data: &Dataset, out: &mut [f64]) {
+    for i in 0..data.n_rows {
+        out[i] += tree.predict_row(data.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::dataset::{BinnedDataset, Dataset};
+
+    fn cfg() -> GrowCfg {
+        GrowCfg { max_depth: 6, min_child_weight: 1e-9, gamma: 0.0,
+                  reg_alpha: 0.0, reg_lambda: 1.0, learning_rate: 1.0 }
+    }
+
+    #[test]
+    fn splits_a_step_function() {
+        // y = 1 if x > 5 else 0; squared error grads at pred=0: g = -y
+        let rows: Vec<Vec<f64>> = (0..12).map(|i| vec![i as f64]).collect();
+        let labels: Vec<f64> =
+            (0..12).map(|i| if i > 5 { 1.0 } else { 0.0 }).collect();
+        let d = Dataset::from_rows(&rows, &labels);
+        let b = BinnedDataset::bin(&d, 256);
+        let grad: Vec<f64> = labels.iter().map(|&y| -y).collect();
+        let hess = vec![1.0; 12];
+        let rows_idx: Vec<u32> = (0..12).collect();
+        let feats = [0u32];
+        let t = grow(&b, &grad, &hess, &rows_idx, &feats, &cfg());
+        // root split near 5.5; left→~0, right→~1 (shrunk by lambda)
+        assert!(!t.nodes[0].is_leaf());
+        let lo = t.predict_row(&[0.0]);
+        let hi = t.predict_row(&[11.0]);
+        assert!(lo < 0.2, "{lo}");
+        assert!(hi > 0.5, "{hi}");
+    }
+
+    #[test]
+    fn max_depth_zero_is_single_leaf() {
+        let d = Dataset::from_rows(
+            &(0..4).map(|i| vec![i as f64]).collect::<Vec<_>>(),
+            &[0.0, 0.0, 1.0, 1.0],
+        );
+        let b = BinnedDataset::bin(&d, 256);
+        let mut c = cfg();
+        c.max_depth = 0;
+        let t = grow(&b, &[-0.0, -0.0, -1.0, -1.0], &[1.0; 4],
+                     &[0, 1, 2, 3], &[0], &c);
+        assert_eq!(t.nodes.len(), 1);
+        assert!(t.nodes[0].is_leaf());
+        // leaf = -G/(H+λ) = 2/(4+1)
+        assert!((t.nodes[0].value - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_child_weight_blocks_tiny_splits() {
+        let d = Dataset::from_rows(
+            &(0..4).map(|i| vec![i as f64]).collect::<Vec<_>>(),
+            &[0.0, 0.0, 0.0, 1.0],
+        );
+        let b = BinnedDataset::bin(&d, 256);
+        let mut c = cfg();
+        c.min_child_weight = 3.0; // each side needs ≥3 rows (hess=1)
+        let t = grow(&b, &[0.0, 0.0, 0.0, -1.0], &[1.0; 4],
+                     &[0, 1, 2, 3], &[0], &c);
+        assert!(t.nodes[0].is_leaf(), "no split can satisfy min_child");
+    }
+
+    #[test]
+    fn l1_shrinks_leaves_to_zero() {
+        let d = Dataset::from_rows(&[vec![0.0], vec![1.0]], &[0.1, 0.1]);
+        let b = BinnedDataset::bin(&d, 256);
+        let mut c = cfg();
+        c.reg_alpha = 10.0; // |G| < alpha everywhere → 0 leaves
+        c.max_depth = 0;
+        let t = grow(&b, &[-0.1, -0.1], &[1.0; 2], &[0, 1], &[0], &c);
+        assert_eq!(t.nodes[0].value, 0.0);
+    }
+
+    #[test]
+    fn gains_accumulate_per_feature() {
+        let rows: Vec<Vec<f64>> =
+            (0..20).map(|i| vec![i as f64, 0.0]).collect();
+        let labels: Vec<f64> =
+            (0..20).map(|i| if i >= 10 { 1.0 } else { 0.0 }).collect();
+        let d = Dataset::from_rows(&rows, &labels);
+        let b = BinnedDataset::bin(&d, 256);
+        let grad: Vec<f64> = labels.iter().map(|&y| -y).collect();
+        let t = grow(&b, &grad, &vec![1.0; 20],
+                     &(0..20).collect::<Vec<u32>>(), &[0, 1], &cfg());
+        let mut gains = vec![0.0; 2];
+        t.add_gains(&mut gains);
+        assert!(gains[0] > 0.0);
+        assert_eq!(gains[1], 0.0, "constant feature never splits");
+    }
+}

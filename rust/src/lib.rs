@@ -1,0 +1,49 @@
+//! # ML²Tuner — multi-level machine-learning autotuning for DL accelerators
+//!
+//! Reproduction of *ML²Tuner: Efficient Code Tuning via Multi-Level Machine
+//! Learning Models* (Cha et al., 2024) on a simulated extended-VTA
+//! accelerator. See `DESIGN.md` for the system inventory and the
+//! paper-to-module mapping.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — deterministic RNG, minimal JSON, statistics, table printing,
+//!   and the in-tree property-test / micro-bench harnesses (the offline
+//!   vendor set has no `proptest`/`criterion`).
+//! * [`vta`] — the hardware substrate: a functional **and** cycle-approximate
+//!   simulator of the extended VTA of paper Appendix A.1 (Table 1), including
+//!   the runtime fault model that makes configurations *invalid*.
+//! * [`compiler`] — the backend compiler substrate: schedule-driven code
+//!   generation (conv → tiled loop nest → VTA instruction stream) whose
+//!   analysis passes emit the paper's *hidden features* (Table 5).
+//! * [`gbdt`] — from-scratch XGBoost-style gradient-boosted trees (the
+//!   paper's cost-model family), with the Table 3 hyper-parameter surface.
+//! * [`workloads`] — ResNet18 conv layers (paper Table 2a) and synthetic
+//!   workload generators.
+//! * [`runtime`] — PJRT wrapper executing the AOT-compiled JAX/Pallas golden
+//!   models from `artifacts/*.hlo.txt` (Python never runs at tuning time).
+//! * [`tuner`] — the paper's contribution: configuration explorer, cost
+//!   models P/V/A, profiling database, the ML²Tuner loop and the
+//!   TVM-approach / random baselines.
+//! * [`experiments`] — one harness per paper table/figure (Fig 2–5,
+//!   Table 2b/4/5, headline metrics).
+
+pub mod compiler;
+pub mod experiments;
+pub mod gbdt;
+pub mod runtime;
+pub mod tuner;
+pub mod util;
+pub mod vta;
+pub mod workloads;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::compiler::schedule::Schedule;
+    pub use crate::compiler::Compiler;
+    pub use crate::gbdt::params::GbdtParams;
+    pub use crate::gbdt::Booster;
+    pub use crate::util::rng::Rng;
+    pub use crate::vta::{config::VtaConfig, Simulator};
+    pub use crate::workloads::resnet18::{self, ConvLayer};
+}

@@ -1,0 +1,416 @@
+//! ml2tuner CLI — the L3 coordinator entrypoint.
+//!
+//! ```text
+//! ml2tuner info                         hardware config, spaces, artifacts
+//! ml2tuner tune --layer conv1 [--tuner ml2tuner|tvm|random]
+//!               [--trials N] [--seed S] [--db out.json]
+//! ml2tuner simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]
+//! ml2tuner validate [--layer conv1] [--samples N] [--seed S]
+//!               (simulator vs AOT JAX/Pallas golden, bit-exact)
+//! ml2tuner experiment <id>|all [--quick] [--repeats N] [--seed S]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ml2tuner::compiler::schedule::Schedule;
+use ml2tuner::compiler::Compiler;
+use ml2tuner::experiments::{self, ExpConfig};
+use ml2tuner::runtime::{golden, Runtime};
+use ml2tuner::tuner::database::Database;
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::report::ProfilingCostModel;
+use ml2tuner::tuner::tvm_baseline::TvmTuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::rng::Rng;
+use ml2tuner::util::table::Table;
+use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::workloads::{resnet18, synth};
+
+/// Tiny flag parser: `--key value` pairs + positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        it.next().unwrap().clone()
+                    }
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer")),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "tune" => cmd_tune(&args),
+        "simulate" => cmd_simulate(&args),
+        "validate" => cmd_validate(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `ml2tuner help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ml2tuner — multi-level ML autotuning for a simulated extended \
+         VTA\n\n\
+         commands:\n  \
+         info\n  \
+         tune --layer conv1 [--tuner ml2tuner|tvm|random] [--trials N] \
+         [--seed S] [--db out.json]\n  \
+         simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]\n  \
+         validate [--layer conv1] [--samples N] [--seed S]\n  \
+         experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
+         headline|all> [--quick] [--repeats N] [--seed S]"
+    );
+}
+
+fn layer_arg(args: &Args) -> Result<resnet18::ConvLayer> {
+    let name = args.get("layer").unwrap_or("conv1");
+    resnet18::layer(name)
+        .ok_or_else(|| anyhow!("unknown layer '{name}' (conv1..conv10)"))
+}
+
+fn cmd_info() -> Result<()> {
+    let cfg = VtaConfig::zcu102();
+    println!("ml2tuner — extended-VTA ({}) simulated testbed", cfg.target);
+    println!(
+        "  GEMM block {}x{}  INP {} vecs  WGT {} blocks  ACC {} vecs  \
+         UOP {} uops  clock {} MHz  shift {}",
+        cfg.block(),
+        cfg.block(),
+        cfg.inp_capacity(),
+        cfg.wgt_capacity(),
+        cfg.acc_capacity(),
+        cfg.uop_capacity(),
+        cfg.clock_mhz,
+        cfg.shift
+    );
+    let mut t = Table::new(&["layer", "H,W,C", "KC,KH,KW", "OH,OW",
+                             "pad,stride", "space size"]);
+    for l in resnet18::LAYERS {
+        let space = ml2tuner::compiler::schedule::candidates(&l);
+        t.row(&[
+            l.name.to_string(),
+            format!("{},{},{}", l.h, l.w, l.c),
+            format!("{},{},{}", l.kc, l.kh, l.kw),
+            format!("{},{}", l.oh, l.ow),
+            format!("{},{}", l.pad, l.stride),
+            format!("{}", space.len()),
+        ]);
+    }
+    t.print();
+    match Runtime::open_default() {
+        Ok(rt) => println!(
+            "artifacts: OK ({} layers, platform {})",
+            rt.layer_names().len(),
+            rt.platform()
+        ),
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make \
+                            artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let layer = layer_arg(args)?;
+    let trials = args.get_usize("trials", 300)?;
+    let seed = args.get_u64("seed", 0)?;
+    let cfg = TunerConfig { seed, max_trials: trials, ..Default::default() };
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
+    let mut tuner: Box<dyn Tuner> = match tuner_name {
+        "ml2tuner" => Box::new(Ml2Tuner::new(cfg)),
+        "tvm" => Box::new(TvmTuner::new(cfg)),
+        "random" => Box::new(RandomTuner::new(cfg)),
+        other => bail!("unknown tuner '{other}'"),
+    };
+    let t0 = std::time::Instant::now();
+    let trace = tuner.tune(&env);
+    let sim = Simulator::new(VtaConfig::zcu102());
+    println!(
+        "{} on {}: {} trials in {:.1}s",
+        trace.tuner,
+        layer.name,
+        trace.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    match trace.best_cycles() {
+        Some(c) => {
+            let best = trace
+                .trials
+                .iter()
+                .find(|t| t.outcome.cycles() == Some(c))
+                .unwrap();
+            println!(
+                "best: {} = {} cycles ({:.3} ms @ {} MHz)",
+                best.schedule,
+                c,
+                sim.cycles_to_ms(c),
+                sim.cfg.clock_mhz
+            );
+        }
+        None => println!("no valid configuration found"),
+    }
+    println!(
+        "invalidity ratio: {:.3} (crash/wrong: {:?})",
+        trace.invalidity_ratio(),
+        trace.invalid_counts()
+    );
+    println!(
+        "estimated board wall-clock: {:.0}s",
+        trace.estimated_wall_clock(&ProfilingCostModel::default())
+    );
+    if let Some(path) = args.get("db") {
+        let mut db = Database::new(layer.name);
+        for r in &trace.trials {
+            db.push(r.clone());
+        }
+        db.save(path)?;
+        println!("tuning log saved to {path}");
+    }
+    Ok(())
+}
+
+fn parse_schedule(text: &str) -> Result<Schedule> {
+    let parts: Vec<usize> = text
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .context("--schedule expects TH,TW,OC,IC,VT integers")?;
+    if parts.len() != 5 {
+        bail!("--schedule expects exactly 5 comma-separated values");
+    }
+    Ok(Schedule {
+        tile_h: parts[0],
+        tile_w: parts[1],
+        tile_oc: parts[2],
+        tile_ic: parts[3],
+        n_vthreads: parts[4],
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let layer = layer_arg(args)?;
+    let sched = parse_schedule(
+        args.get("schedule").ok_or_else(|| anyhow!("--schedule required"))?,
+    )?;
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let compiled = compiler.compile(&layer, &sched);
+    println!(
+        "{} {}: {} instrs, {} gemm block-ops, {} dma bytes",
+        layer.name,
+        sched,
+        compiled.program.len(),
+        compiled.stats.gemm_block_ops,
+        compiled.stats.dma_bytes
+    );
+    let verdict = sim.check(&compiled.program);
+    println!("verdict: {verdict:?}");
+    if verdict.is_valid() {
+        println!(
+            "execution time: {:.3} ms",
+            sim.cycles_to_ms(verdict.cycles())
+        );
+    }
+    let names = ml2tuner::compiler::features::HIDDEN_NAMES;
+    let hidden = compiler.hidden_features(&compiled);
+    let mut t = Table::new(&["hidden feature", "value"]);
+    for (n, v) in names.iter().zip(&hidden) {
+        t.row(&[n.to_string(), format!("{v}")]);
+    }
+    t.print();
+    if args.has("numeric") && verdict.is_valid() {
+        let mut rt = Runtime::open_default()?;
+        let seed = args.get_u64("seed", 1)?;
+        let ok = numeric_vs_golden(&mut rt, &sim, &layer, &compiled, seed)?;
+        println!("numeric vs golden: {}", if ok { "BIT-EXACT" } else {
+            "MISMATCH"
+        });
+    }
+    Ok(())
+}
+
+/// Run the compiled program numerically and compare against the PJRT
+/// golden output. Returns bit-exactness.
+fn numeric_vs_golden(
+    rt: &mut Runtime,
+    sim: &Simulator,
+    layer: &resnet18::ConvLayer,
+    compiled: &ml2tuner::compiler::Compiled,
+    seed: u64,
+) -> Result<bool> {
+    let x = synth::input_data(layer, seed);
+    let w = synth::weight_data(layer, seed);
+    let dram = functional::Dram {
+        inp: layout::pack_input(&sim.cfg, &x, layer.h, layer.w, layer.c),
+        wgt: layout::pack_weights(&sim.cfg, &w, layer.kh, layer.kw,
+                                  layer.c, layer.kc),
+        out_vecs: compiled.program.dram_out_vecs,
+    };
+    let out = sim
+        .execute(&compiled.program, &dram)
+        .map_err(|f| anyhow!("simulator fault: {f:?}"))?;
+    let gold = golden::golden_output(rt, layer, seed)?;
+    Ok(out == gold)
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let mut rt = Runtime::open_default()?;
+    let samples = args.get_usize("samples", 5)?;
+    let seed = args.get_u64("seed", 42)?;
+    let layers: Vec<resnet18::ConvLayer> = match args.get("layer") {
+        Some(_) => vec![layer_arg(args)?],
+        None => resnet18::LAYERS.to_vec(),
+    };
+    let mut rng = Rng::new(seed);
+    let mut checked = 0usize;
+    for layer in layers {
+        rt.check_layer(&layer)?;
+        let space = ml2tuner::compiler::schedule::candidates(&layer);
+        let mut found = 0usize;
+        let mut attempts = 0usize;
+        while found < samples && attempts < samples * 60 {
+            attempts += 1;
+            let sched = space.nth(rng.below(space.len()));
+            let compiled = compiler.compile(&layer, &sched);
+            if !sim.check(&compiled.program).is_valid() {
+                continue;
+            }
+            found += 1;
+            let ok = numeric_vs_golden(&mut rt, &sim, &layer, &compiled,
+                                       seed ^ found as u64)?;
+            checked += 1;
+            println!(
+                "{} {} -> {}",
+                layer.name,
+                sched,
+                if ok { "BIT-EXACT vs golden" } else { "MISMATCH" }
+            );
+            if !ok {
+                bail!("golden mismatch on a check()-valid config — \
+                       simulator/compiler bug");
+            }
+        }
+    }
+    println!("validate: {checked} valid configs bit-exact vs the AOT \
+              JAX/Pallas golden model");
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut cfg = if args.has("quick") {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::full()
+    };
+    cfg.repeats = args.get_usize("repeats", cfg.repeats)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if id == "all" {
+        for id in experiments::ALL {
+            experiments::run(id, &cfg)?;
+        }
+        Ok(())
+    } else {
+        experiments::run(id, &cfg).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let argv: Vec<String> = ["fig2a", "--quick", "--seed", "7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["fig2a"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        let s = parse_schedule("8,14,32,64,2").unwrap();
+        assert_eq!(s.tile_h, 8);
+        assert_eq!(s.tile_w, 14);
+        assert_eq!(s.n_vthreads, 2);
+        assert!(parse_schedule("1,2,3").is_err());
+        assert!(parse_schedule("a,b,c,d,e").is_err());
+    }
+}

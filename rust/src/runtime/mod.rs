@@ -1,0 +1,16 @@
+//! PJRT runtime — executes the AOT-compiled JAX/Pallas golden models.
+//!
+//! `make artifacts` lowers each ResNet18 conv layer to HLO *text*
+//! (`artifacts/*.hlo.txt` + `manifest.json`); this module loads the text,
+//! compiles it once on the PJRT CPU client and executes it with concrete
+//! tensors. Python never runs on the tuning path — the rust binary is
+//! self-contained once artifacts exist.
+//!
+//! During profiling the golden output is the "expected result" of the
+//! paper's validity check: a simulated run is *valid* iff it neither
+//! crashed nor differs bit-wise from the golden model.
+
+pub mod golden;
+pub mod pjrt;
+
+pub use pjrt::Runtime;

@@ -1,0 +1,161 @@
+//! PJRT CPU client wrapper: HLO-text load, compile cache, execution.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::workloads::ConvLayer;
+
+/// Per-layer artifact metadata from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct LayerArtifact {
+    pub artifact: String,
+    pub shift: u32,
+    pub layer: ConvLayer,
+}
+
+/// The runtime: PJRT client + compiled-executable cache + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `artifacts_dir` (must contain `manifest.json`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {mpath:?}: {e}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifacts location (repo-root `artifacts/`).
+    pub fn open_default() -> Result<Self> {
+        Self::new("artifacts")
+    }
+
+    /// Requantization shift the artifacts were lowered with.
+    pub fn shift(&self) -> u32 {
+        self.manifest
+            .at(&["shift"])
+            .and_then(Json::as_i64)
+            .unwrap_or(8) as u32
+    }
+
+    /// Layer names present in the manifest.
+    pub fn layer_names(&self) -> Vec<String> {
+        self.manifest
+            .at(&["layers"])
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Cross-check a rust-side layer against the manifest entry.
+    pub fn check_layer(&self, layer: &ConvLayer) -> Result<()> {
+        let entry = self
+            .manifest
+            .at(&["layers", layer.name])
+            .ok_or_else(|| anyhow!("{} not in manifest", layer.name))?;
+        let get = |k: &str| entry.get(k).and_then(Json::as_usize);
+        let fields = [
+            ("h", layer.h), ("w", layer.w), ("c", layer.c),
+            ("kc", layer.kc), ("kh", layer.kh), ("kw", layer.kw),
+            ("oh", layer.oh), ("ow", layer.ow),
+            ("pad", layer.pad), ("stride", layer.stride),
+        ];
+        for (k, v) in fields {
+            if get(k) != Some(v) {
+                bail!(
+                    "manifest/{}: field {k} mismatch (manifest {:?}, rust {v})",
+                    layer.name,
+                    get(k)
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn executable(
+        &mut self,
+        layer: &ConvLayer,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let artifact = self
+            .manifest
+            .at(&["layers", layer.name, "artifact"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{}: no artifact in manifest", layer.name))?
+            .to_string();
+        if !self.cache.contains_key(&artifact) {
+            let path = self.dir.join(&artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {artifact}: {e:?}"))?;
+            self.cache.insert(artifact.clone(), exe);
+        }
+        Ok(&self.cache[&artifact])
+    }
+
+    /// Execute the golden conv for `layer`: `(x: i32[H,W,C], w: i32[KH,KW,
+    /// C,KC]) → i32[OH,OW,KC]`. Values must be int8-range (the graph casts).
+    pub fn execute_conv(
+        &mut self,
+        layer: &ConvLayer,
+        x_i32: &[i32],
+        w_i32: &[i32],
+    ) -> Result<Vec<i32>> {
+        assert_eq!(x_i32.len(), layer.input_len());
+        assert_eq!(w_i32.len(), layer.weight_len());
+        let x = xla::Literal::vec1(x_i32)
+            .reshape(&[layer.h as i64, layer.w as i64, layer.c as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let w = xla::Literal::vec1(w_i32)
+            .reshape(&[
+                layer.kh as i64,
+                layer.kw as i64,
+                layer.c as i64,
+                layer.kc as i64,
+            ])
+            .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+        let exe = self.executable(layer)?;
+        let result = exe
+            .execute::<xla::Literal>(&[x, w])
+            .map_err(|e| anyhow!("execute {}: {e:?}", layer.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // lowered with return_tuple=True → 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,314 @@
+//! Profiling database — the "Database" box of paper Fig. 1.
+//!
+//! Stores every profiling attempt with its features and outcome, feeds the
+//! three models' training sets, and persists as a JSON tuning log
+//! (TVM-style) so runs can be resumed or analyzed offline.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compiler::schedule::Schedule;
+use crate::util::json::Json;
+
+/// Profiling outcome classes (paper §A.2: register-error crash vs
+/// wrong-result; both are invalid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Valid { cycles: u64 },
+    /// Register error — on the real board this needs a manual reboot.
+    Crash,
+    /// Runs to completion but the output differs from the golden model.
+    WrongOutput,
+}
+
+impl Outcome {
+    pub fn is_valid(&self) -> bool {
+        matches!(self, Outcome::Valid { .. })
+    }
+
+    pub fn cycles(&self) -> Option<u64> {
+        match self {
+            Outcome::Valid { cycles } => Some(*cycles),
+            _ => None,
+        }
+    }
+}
+
+/// One profiling attempt.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub space_index: usize,
+    pub schedule: Schedule,
+    pub visible: Vec<f64>,
+    pub hidden: Vec<f64>,
+    pub outcome: Outcome,
+}
+
+impl TrialRecord {
+    /// Training label for the performance models: `log2(cycles)`
+    /// (scale-free; RMSE ratios in Fig. 3/4 are computed on this).
+    pub fn perf_label(&self) -> Option<f64> {
+        self.outcome.cycles().map(|c| (c.max(1) as f64).log2())
+    }
+
+    /// Training label for model V: 1.0 valid, 0.0 invalid.
+    pub fn valid_label(&self) -> f64 {
+        self.outcome.is_valid() as u8 as f64
+    }
+}
+
+/// The profiling database.
+#[derive(Clone, Debug, Default)]
+pub struct Database {
+    pub layer: String,
+    pub records: Vec<TrialRecord>,
+}
+
+impl Database {
+    pub fn new(layer: &str) -> Self {
+        Database { layer: layer.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: TrialRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn n_valid(&self) -> usize {
+        self.records.iter().filter(|r| r.outcome.is_valid()).count()
+    }
+
+    /// Training set for P: visible features of *valid* records only
+    /// (the paper trains P exclusively on valid configurations).
+    pub fn train_p(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for r in &self.records {
+            if let Some(y) = r.perf_label() {
+                xs.push(r.visible.clone());
+                ys.push(y);
+            }
+        }
+        (xs, ys)
+    }
+
+    /// Training set for V: visible features of *all* records,
+    /// label = validity.
+    pub fn train_v(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs = self.records.iter().map(|r| r.visible.clone()).collect();
+        let ys = self.records.iter().map(|r| r.valid_label()).collect();
+        (xs, ys)
+    }
+
+    /// Training set for A: visible ⊕ hidden features of valid records.
+    pub fn train_a(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for r in &self.records {
+            if let Some(y) = r.perf_label() {
+                xs.push(crate::compiler::features::combined_features(
+                    &r.visible, &r.hidden,
+                ));
+                ys.push(y);
+            }
+        }
+        (xs, ys)
+    }
+
+    /// TVM-approach training set: ALL records; invalid ones get a penalty
+    /// label (worst observed + 1, i.e. "slower than anything seen").
+    pub fn train_p_with_penalty(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let worst = self
+            .records
+            .iter()
+            .filter_map(|r| r.perf_label())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let penalty = if worst.is_finite() { worst + 1.0 } else { 30.0 };
+        let xs = self.records.iter().map(|r| r.visible.clone()).collect();
+        let ys = self
+            .records
+            .iter()
+            .map(|r| r.perf_label().unwrap_or(penalty))
+            .collect();
+        (xs, ys)
+    }
+
+    /// Best valid cycles so far.
+    pub fn best_cycles(&self) -> Option<u64> {
+        self.records.iter().filter_map(|r| r.outcome.cycles()).min()
+    }
+
+    // ------------------------------------------------------------- JSON --
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("layer", self.layer.as_str());
+        let recs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("i", r.space_index)
+                    .set("th", r.schedule.tile_h)
+                    .set("tw", r.schedule.tile_w)
+                    .set("oc", r.schedule.tile_oc)
+                    .set("ic", r.schedule.tile_ic)
+                    .set("vt", r.schedule.n_vthreads)
+                    .set("hidden", r.hidden.clone());
+                match r.outcome {
+                    Outcome::Valid { cycles } => {
+                        o.set("outcome", "valid").set("cycles", cycles);
+                    }
+                    Outcome::Crash => {
+                        o.set("outcome", "crash");
+                    }
+                    Outcome::WrongOutput => {
+                        o.set("outcome", "wrong");
+                    }
+                }
+                o
+            })
+            .collect();
+        root.set("records", recs);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let layer = j
+            .get("layer")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing layer"))?
+            .to_string();
+        let mut db = Database::new(&layer);
+        for r in j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing records"))?
+        {
+            let geti = |k: &str| {
+                r.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("missing {k}"))
+            };
+            let schedule = Schedule {
+                tile_h: geti("th")?,
+                tile_w: geti("tw")?,
+                tile_oc: geti("oc")?,
+                tile_ic: geti("ic")?,
+                n_vthreads: geti("vt")?,
+            };
+            let hidden: Vec<f64> = r
+                .get("hidden")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let outcome = match r.get("outcome").and_then(Json::as_str) {
+                Some("valid") => Outcome::Valid {
+                    cycles: r
+                        .get("cycles")
+                        .and_then(Json::as_i64)
+                        .ok_or_else(|| anyhow!("missing cycles"))?
+                        as u64,
+                },
+                Some("crash") => Outcome::Crash,
+                Some("wrong") => Outcome::WrongOutput,
+                other => return Err(anyhow!("bad outcome {other:?}")),
+            };
+            db.push(TrialRecord {
+                space_index: geti("i")?,
+                schedule,
+                visible: schedule.visible_features(),
+                hidden,
+                outcome,
+            });
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: usize, outcome: Outcome) -> TrialRecord {
+        let schedule = Schedule { tile_h: i + 1, tile_w: 2, tile_oc: 16,
+                                  tile_ic: 16, n_vthreads: 1 };
+        TrialRecord {
+            space_index: i,
+            schedule,
+            visible: schedule.visible_features(),
+            hidden: vec![1.0, 2.0, 3.0],
+            outcome,
+        }
+    }
+
+    #[test]
+    fn training_set_views() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Crash));
+        db.push(rec(2, Outcome::Valid { cycles: 2048 }));
+        db.push(rec(3, Outcome::WrongOutput));
+        assert_eq!(db.n_valid(), 2);
+        let (xs, ys) = db.train_p();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(ys, vec![10.0, 11.0]); // log2
+        let (xv, yv) = db.train_v();
+        assert_eq!(xv.len(), 4);
+        assert_eq!(yv, vec![1.0, 0.0, 1.0, 0.0]);
+        let (xa, _) = db.train_a();
+        assert_eq!(xa[0].len(), rec(0, Outcome::Crash).visible.len() + 3);
+        let (_, yp) = db.train_p_with_penalty();
+        assert_eq!(yp.len(), 4);
+        assert_eq!(yp[1], 12.0); // worst (11) + 1
+        assert_eq!(db.best_cycles(), Some(1024));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut db = Database::new("conv3");
+        db.push(rec(0, Outcome::Valid { cycles: 5000 }));
+        db.push(rec(7, Outcome::Crash));
+        db.push(rec(9, Outcome::WrongOutput));
+        let j = db.to_json();
+        let back = Database::from_json(&j).unwrap();
+        assert_eq!(back.layer, "conv3");
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.records[0].outcome,
+                   Outcome::Valid { cycles: 5000 });
+        assert_eq!(back.records[1].schedule.tile_h, 8);
+        assert_eq!(back.records[2].outcome, Outcome::WrongOutput);
+        assert_eq!(back.records[0].hidden, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 123 }));
+        let path = std::env::temp_dir().join("ml2tuner_db_test.json");
+        db.save(&path).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,211 @@
+//! Configuration explorer — the candidate-selection core of paper Fig. 1.
+//!
+//! Ranks unmeasured configurations by model P (ascending predicted
+//! log-cycles), mixes in ε-greedy random exploration, and optionally vetoes
+//! candidates model V predicts invalid ("Even if Model P predicts a
+//! configuration as highly optimal, ML²Tuner avoids profiling it if Model V
+//! predicts it to be invalid", §2).
+
+use super::models::{ModelP, ModelV};
+use super::space::SearchSpace;
+use crate::util::rng::Rng;
+
+/// Explorer policy knobs.
+pub struct Explorer {
+    pub epsilon: f64,
+}
+
+impl Explorer {
+    pub fn new(epsilon: f64) -> Self {
+        Explorer { epsilon }
+    }
+
+    /// Select up to `count` unmeasured candidates.
+    ///
+    /// Walks the P-ranking best-first; each slot is replaced by a uniform
+    /// random unmeasured candidate with probability ε. With a V model,
+    /// predicted-invalid candidates are skipped; if the ranking is
+    /// exhausted before `count` survivors are found, the best skipped ones
+    /// fill the remainder (the explorer must always make progress).
+    pub fn select(
+        &self,
+        space: &SearchSpace,
+        p: &ModelP,
+        v: Option<&ModelV>,
+        count: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let unmeasured = space.unmeasured();
+        if unmeasured.len() <= count {
+            return unmeasured;
+        }
+        // Rank by predicted log-cycles ascending. Tree ensembles cannot
+        // extrapolate, so large swaths of the space tie at the best leaf
+        // value — including invalid regions adjacent to the optimum. Ties
+        // are broken by V's margin (most-confidently-valid first), which is
+        // the "iteratively applies models P and V" of paper §2 and avoids
+        // the degenerate behaviour of walking an invalid-dominated tie
+        // front and harvesting exactly V's false positives.
+        let mut scored: Vec<(f64, f64, usize)> = unmeasured
+            .iter()
+            .map(|&i| {
+                let feats = space.schedule(i).visible_features();
+                let tie = v.map_or(0.0, |m| -m.margin(&feats));
+                (p.predict(&feats), tie, i)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap()
+        });
+        let scored: Vec<(f64, usize)> =
+            scored.into_iter().map(|(s, _, i)| (s, i)).collect();
+        let mut picked: Vec<usize> = Vec::with_capacity(count);
+        let mut taken = vec![false; scored.len()];
+        let mut skipped: Vec<usize> = Vec::new(); // rank positions V vetoed
+        let mut pos = 0usize;
+        while picked.len() < count && pos < scored.len() {
+            if rng.bool(self.epsilon) {
+                // ε-exploration: uniform random untaken candidate
+                let free: Vec<usize> = (0..scored.len())
+                    .filter(|&k| !taken[k])
+                    .collect();
+                if let Some(&k) = free.get(rng.below(free.len())) {
+                    taken[k] = true;
+                    picked.push(scored[k].1);
+                }
+                continue;
+            }
+            // next untaken position in the ranking
+            while pos < scored.len() && taken[pos] {
+                pos += 1;
+            }
+            if pos >= scored.len() {
+                break;
+            }
+            let idx = scored[pos].1;
+            taken[pos] = true;
+            let vetoed = v.map_or(false, |m| {
+                !m.predict_valid(&space.schedule(idx).visible_features())
+            });
+            if vetoed {
+                skipped.push(pos);
+            } else {
+                picked.push(idx);
+            }
+            pos += 1;
+        }
+        // not enough survivors: fall back to the best vetoed candidates
+        for k in skipped {
+            if picked.len() >= count {
+                break;
+            }
+            picked.push(scored[k].1);
+        }
+        // still short (tiny spaces): fill with remaining ranking order
+        if picked.len() < count {
+            for k in 0..scored.len() {
+                if picked.len() >= count {
+                    break;
+                }
+                if !taken[k] {
+                    taken[k] = true;
+                    picked.push(scored[k].1);
+                }
+            }
+        }
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::Schedule;
+    use crate::tuner::database::{Database, Outcome, TrialRecord};
+    use crate::workloads::resnet18;
+
+    /// Train P/V on a synthetic labelling of the real conv5 space.
+    fn trained_models() -> (SearchSpace, ModelP, ModelV) {
+        let layer = resnet18::layer("conv5").unwrap();
+        let space = SearchSpace::new(&layer);
+        let mut db = Database::new("conv5");
+        for i in (0..space.len()).step_by(3) {
+            let s: Schedule = space.schedule(i);
+            let valid = s.tile_h * s.n_vthreads <= 28;
+            let cycles = (1_000_000 / (s.tile_h * s.tile_w)
+                + 5_000 * s.n_vthreads) as u64;
+            db.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: s.visible_features(),
+                hidden: vec![],
+                outcome: if valid {
+                    Outcome::Valid { cycles }
+                } else {
+                    Outcome::Crash
+                },
+            });
+        }
+        let p = ModelP::train(&db, 60, 1).unwrap();
+        let v = ModelV::train(&db, 60, 1).unwrap();
+        (space, p, v)
+    }
+
+    #[test]
+    fn selects_requested_count_without_duplicates() {
+        let (space, p, v) = trained_models();
+        let mut rng = Rng::new(1);
+        let e = Explorer::new(0.05);
+        let picks = e.select(&space, &p, Some(&v), 20, &mut rng);
+        assert_eq!(picks.len(), 20);
+        let mut u = picks.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 20, "no duplicates");
+    }
+
+    #[test]
+    fn v_filter_shifts_selection_toward_valid() {
+        let (space, p, v) = trained_models();
+        let mut rng = Rng::new(2);
+        let e = Explorer::new(0.0);
+        let with_v = e.select(&space, &p, Some(&v), 30, &mut rng);
+        let without_v = e.select(&space, &p, None, 30, &mut rng);
+        let count_pred_valid = |picks: &[usize]| {
+            picks
+                .iter()
+                .filter(|&&i| {
+                    v.predict_valid(
+                        &space.schedule(i).visible_features(),
+                    )
+                })
+                .count()
+        };
+        assert!(count_pred_valid(&with_v) >= count_pred_valid(&without_v));
+        assert_eq!(count_pred_valid(&with_v), 30);
+    }
+
+    #[test]
+    fn respects_measured_mask() {
+        let (mut space, p, v) = trained_models();
+        let mut rng = Rng::new(3);
+        let e = Explorer::new(0.1);
+        let first = e.select(&space, &p, Some(&v), 10, &mut rng);
+        for &i in &first {
+            space.mark_measured(i);
+        }
+        let second = e.select(&space, &p, Some(&v), 10, &mut rng);
+        for i in &second {
+            assert!(!first.contains(i), "re-proposed measured config");
+        }
+    }
+
+    #[test]
+    fn epsilon_one_is_fully_random_but_valid_count() {
+        let (space, p, v) = trained_models();
+        let mut rng = Rng::new(4);
+        let e = Explorer::new(1.0);
+        let picks = e.select(&space, &p, Some(&v), 15, &mut rng);
+        assert_eq!(picks.len(), 15);
+    }
+}

@@ -1,0 +1,197 @@
+//! The ML²Tuner loop (paper §2, Fig. 1).
+//!
+//! Per iteration:
+//! 1. train **P** on the valid records and **V** on all records;
+//! 2. explorer accumulates `(α+1)·N` candidates — P-ranked, V-filtered,
+//!    ε-greedy;
+//! 3. compile all of them, extract hidden features;
+//! 4. train **A** (visible ⊕ hidden) and keep the `N` best re-ranked
+//!    candidates;
+//! 5. profile them; outcomes train V, execution times train P/A.
+//!
+//! Ablation switches (`use_v`, `use_a`) expose the paper's design levers:
+//! `use_v=false, use_a=false` degenerates to the TVM approach with a
+//! valid-only P (an intermediate the ablation bench reports).
+
+use super::database::Database;
+use super::explorer::Explorer;
+use super::models::{ModelA, ModelP, ModelV};
+use super::report::TuningTrace;
+use super::{Tuner, TunerConfig, TuningEnv};
+use crate::compiler::features::combined_features;
+use crate::util::rng::Rng;
+
+/// The multi-level tuner.
+pub struct Ml2Tuner {
+    pub cfg: TunerConfig,
+    /// Ablation: apply the validity filter (model V).
+    pub use_v: bool,
+    /// Ablation: apply hidden-feature re-ranking (model A).
+    pub use_a: bool,
+}
+
+impl Ml2Tuner {
+    pub fn new(cfg: TunerConfig) -> Self {
+        Ml2Tuner { cfg, use_v: true, use_a: true }
+    }
+
+    pub fn without_v(mut self) -> Self {
+        self.use_v = false;
+        self
+    }
+
+    pub fn without_a(mut self) -> Self {
+        self.use_a = false;
+        self
+    }
+}
+
+impl Tuner for Ml2Tuner {
+    fn name(&self) -> &'static str {
+        match (self.use_v, self.use_a) {
+            (true, true) => "ml2tuner",
+            (false, true) => "ml2tuner-noV",
+            (true, false) => "ml2tuner-noA",
+            (false, false) => "ml2tuner-Ponly",
+        }
+    }
+
+    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed ^ 0x4d4c_3254);
+        let mut space = env.space.clone();
+        let mut db = Database::new(env.layer.name);
+        let mut trace = TuningTrace::new(env.layer.name, self.name());
+        let explorer = Explorer::new(cfg.epsilon);
+        let mut round = 0u64;
+        while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
+            round += 1;
+            let remaining = cfg.max_trials - trace.len();
+            let n = cfg.n_per_round.min(remaining);
+            // ---- candidate selection -----------------------------------
+            let models_ready = db.n_valid() >= 2
+                && db.len() >= cfg.min_train
+                && ModelP::train(&db, 1, 0).is_some();
+            let batch: Vec<usize> = if !models_ready {
+                space.sample_unmeasured(&mut rng, n)
+            } else {
+                let p = ModelP::train(&db, cfg.boost_rounds,
+                                      cfg.seed ^ round)
+                    .expect("P trainable");
+                let v = if self.use_v {
+                    ModelV::train(&db, cfg.boost_rounds, cfg.seed ^ round)
+                } else {
+                    None
+                };
+                let pool_n = if self.use_a { cfg.pool_size() } else { n };
+                let pool = explorer.select(&space, &p, v.as_ref(), pool_n,
+                                           &mut rng);
+                if self.use_a && pool.len() > n {
+                    // compile everything, harvest hidden features, re-rank
+                    let a = ModelA::train(&db, cfg.boost_rounds,
+                                          cfg.seed ^ round);
+                    match a {
+                        None => pool.into_iter().take(n).collect(),
+                        Some(a) => {
+                            let mut scored: Vec<(f64, usize)> = pool
+                                .into_iter()
+                                .map(|i| {
+                                    let sched = space.schedule(i);
+                                    let compiled = env
+                                        .compiler
+                                        .compile(&env.layer, &sched);
+                                    let hidden = env
+                                        .compiler
+                                        .hidden_features(&compiled);
+                                    let feats = combined_features(
+                                        &sched.visible_features(),
+                                        &hidden,
+                                    );
+                                    (a.predict(&feats), i)
+                                })
+                                .collect();
+                            scored.sort_by(|x, y| {
+                                x.0.partial_cmp(&y.0).unwrap()
+                            });
+                            scored
+                                .into_iter()
+                                .take(n)
+                                .map(|(_, i)| i)
+                                .collect()
+                        }
+                    }
+                } else {
+                    pool.into_iter().take(n).collect()
+                }
+            };
+            if batch.is_empty() {
+                break;
+            }
+            // ---- profiling & training data ----------------------------
+            for idx in batch {
+                let rec = env.profile(idx);
+                space.mark_measured(idx);
+                db.push(rec.clone());
+                trace.trials.push(rec);
+                if trace.len() >= cfg.max_trials {
+                    break;
+                }
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    fn env() -> TuningEnv {
+        TuningEnv::new(VtaConfig::zcu102(),
+                       resnet18::layer("conv5").unwrap())
+    }
+
+    #[test]
+    fn respects_budget_and_no_duplicates() {
+        let cfg = TunerConfig { max_trials: 60, ..Default::default() };
+        let mut t = Ml2Tuner::new(cfg);
+        let trace = t.tune(&env());
+        assert_eq!(trace.len(), 60);
+        let mut idx: Vec<usize> =
+            trace.trials.iter().map(|t| t.space_index).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 60, "no config profiled twice");
+    }
+
+    #[test]
+    fn finds_a_valid_config() {
+        let cfg = TunerConfig { max_trials: 80, ..Default::default() };
+        let mut t = Ml2Tuner::new(cfg);
+        let trace = t.tune(&env());
+        assert!(trace.best_cycles().is_some());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TunerConfig { max_trials: 40, seed: 7,
+                                ..Default::default() };
+        let a = Ml2Tuner::new(cfg.clone()).tune(&env());
+        let b = Ml2Tuner::new(cfg).tune(&env());
+        let ai: Vec<usize> = a.trials.iter().map(|t| t.space_index).collect();
+        let bi: Vec<usize> = b.trials.iter().map(|t| t.space_index).collect();
+        assert_eq!(ai, bi);
+    }
+
+    #[test]
+    fn ablation_names() {
+        let cfg = TunerConfig::default();
+        assert_eq!(Ml2Tuner::new(cfg.clone()).name(), "ml2tuner");
+        assert_eq!(Ml2Tuner::new(cfg.clone()).without_v().name(),
+                   "ml2tuner-noV");
+        assert_eq!(Ml2Tuner::new(cfg).without_v().without_a().name(),
+                   "ml2tuner-Ponly");
+    }
+}

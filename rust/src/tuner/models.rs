@@ -1,0 +1,188 @@
+//! The three cost models of paper Fig. 1, over the GBDT substrate.
+//!
+//! * **Model P** — performance regressor on visible features, trained on
+//!   valid records only (Table 3 column P).
+//! * **Model V** — validity classifier on the *same* visible features
+//!   (binary:hinge, Table 3 column V).
+//! * **Model A** — performance regressor on visible ⊕ hidden features
+//!   (Table 3 column A).
+//!
+//! All three predict from raw feature vectors; P and A predict
+//! `log2(cycles)` (lower is better).
+
+use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::tuner::database::Database;
+
+/// A trained P model.
+pub struct ModelP {
+    pub booster: Booster,
+}
+
+impl ModelP {
+    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
+        let (xs, ys) = db.train_p();
+        if xs.len() < 2 {
+            return None;
+        }
+        let params = GbdtParams::model_p().with_rounds(rounds).with_seed(seed);
+        let data = Dataset::from_rows(&xs, &ys);
+        Some(ModelP { booster: Booster::train(&params, &data) })
+    }
+
+    /// TVM-approach variant: all records, invalids penalized.
+    pub fn train_tvm(
+        db: &Database,
+        rounds: usize,
+        seed: u64,
+    ) -> Option<ModelP> {
+        let (xs, ys) = db.train_p_with_penalty();
+        if xs.len() < 2 {
+            return None;
+        }
+        let params = GbdtParams::model_p().with_rounds(rounds).with_seed(seed);
+        let data = Dataset::from_rows(&xs, &ys);
+        Some(ModelP { booster: Booster::train(&params, &data) })
+    }
+
+    /// Predicted `log2(cycles)` — lower is better.
+    pub fn predict(&self, visible: &[f64]) -> f64 {
+        self.booster.predict_row(visible)
+    }
+}
+
+/// A trained V model.
+pub struct ModelV {
+    pub booster: Booster,
+}
+
+impl ModelV {
+    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
+        let (xs, ys) = db.train_v();
+        if xs.len() < 2 {
+            return None;
+        }
+        // degenerate labels (all same class) would still train but predict a
+        // constant; that is fine — the explorer falls back gracefully.
+        let params = GbdtParams::model_v().with_rounds(rounds).with_seed(seed);
+        let data = Dataset::from_rows(&xs, &ys);
+        Some(ModelV { booster: Booster::train(&params, &data) })
+    }
+
+    /// True if the model predicts the configuration will run validly.
+    ///
+    /// The veto uses a positive margin (0.25 on the hinge score in
+    /// [-1, 1]) rather than the raw sign: the explorer walks a P-front
+    /// that hugs the validity boundary, exactly where marginal false
+    /// accepts concentrate — a stricter gate trades a few vetoed good
+    /// configs for far fewer wasted profiling slots (calibrated on
+    /// conv4's hazard-corruption boundary, see EXPERIMENTS.md).
+    pub fn predict_valid(&self, visible: &[f64]) -> bool {
+        self.margin(visible) > 0.25
+    }
+
+    /// Raw margin (diagnostics / threshold sweeps).
+    pub fn margin(&self, visible: &[f64]) -> f64 {
+        self.booster.predict_row(visible)
+    }
+}
+
+/// A trained A model.
+pub struct ModelA {
+    pub booster: Booster,
+}
+
+impl ModelA {
+    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
+        let (xs, ys) = db.train_a();
+        if xs.len() < 2 {
+            return None;
+        }
+        let params = GbdtParams::model_a().with_rounds(rounds).with_seed(seed);
+        let data = Dataset::from_rows(&xs, &ys);
+        Some(ModelA { booster: Booster::train(&params, &data) })
+    }
+
+    /// Predicted `log2(cycles)` from visible ⊕ hidden features.
+    pub fn predict(&self, combined: &[f64]) -> f64 {
+        self.booster.predict_row(combined)
+    }
+
+    /// Feature importance over the combined feature space (Table 5).
+    pub fn importance(&self) -> Vec<f64> {
+        self.booster.feature_importance()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::Schedule;
+    use crate::tuner::database::{Outcome, TrialRecord};
+
+    fn synth_db(n: usize) -> Database {
+        let mut db = Database::new("test");
+        for i in 0..n {
+            let th = 1 + (i % 16);
+            let vt = 1 + (i % 4);
+            let schedule = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                                      tile_ic: 32, n_vthreads: vt };
+            // validity: big tiles with many threads fail
+            let valid = th * vt <= 24;
+            let cycles = (200_000 / th + 10_000 * vt) as u64;
+            db.push(TrialRecord {
+                space_index: i,
+                schedule,
+                visible: schedule.visible_features(),
+                hidden: vec![th as f64 * 4.0, (th * vt) as f64],
+                outcome: if valid {
+                    Outcome::Valid { cycles }
+                } else {
+                    Outcome::Crash
+                },
+            });
+        }
+        db
+    }
+
+    #[test]
+    fn p_learns_cycle_ordering() {
+        let db = synth_db(128);
+        let p = ModelP::train(&db, 80, 1).unwrap();
+        let f = |th: usize| {
+            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 1 };
+            p.predict(&s.visible_features())
+        };
+        assert!(f(2) > f(12), "small tiles must predict slower");
+    }
+
+    #[test]
+    fn v_learns_validity_boundary() {
+        let db = synth_db(256);
+        let v = ModelV::train(&db, 80, 1).unwrap();
+        let f = |th: usize, vt: usize| {
+            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: vt };
+            v.predict_valid(&s.visible_features())
+        };
+        assert!(f(4, 1), "small config should be predicted valid");
+        assert!(!f(16, 4), "oversized config should be predicted invalid");
+    }
+
+    #[test]
+    fn a_uses_hidden_features() {
+        let db = synth_db(128);
+        let a = ModelA::train(&db, 80, 1).unwrap();
+        let imp = a.importance();
+        assert_eq!(imp.len(), Schedule::VISIBLE_NAMES.len() + 2);
+        // the hidden features are informative (th*4 mirrors th)
+        assert!(imp.iter().sum::<f64>() > 99.0);
+    }
+
+    #[test]
+    fn too_few_records_returns_none() {
+        let db = synth_db(1);
+        assert!(ModelP::train(&db, 10, 0).is_none());
+        assert!(ModelA::train(&db, 10, 0).is_none());
+    }
+}

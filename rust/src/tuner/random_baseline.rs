@@ -1,0 +1,71 @@
+//! Random-sampling baseline — the paper's "preliminary experiment" column
+//! (Table 2b: random sampling on conv1 gives 0.926 invalidity on the
+//! authors' board).
+
+use super::report::TuningTrace;
+use super::{Tuner, TunerConfig, TuningEnv};
+use crate::util::rng::Rng;
+
+pub struct RandomTuner {
+    pub cfg: TunerConfig,
+}
+
+impl RandomTuner {
+    pub fn new(cfg: TunerConfig) -> Self {
+        RandomTuner { cfg }
+    }
+}
+
+impl Tuner for RandomTuner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed ^ 0x52_414e_44);
+        let mut space = env.space.clone();
+        let mut trace = TuningTrace::new(env.layer.name, self.name());
+        while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
+            let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
+            for idx in space.sample_unmeasured(&mut rng, n) {
+                let rec = env.profile(idx);
+                space.mark_measured(idx);
+                trace.trials.push(rec);
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn samples_without_replacement() {
+        let env = TuningEnv::new(VtaConfig::zcu102(),
+                                 resnet18::layer("conv5").unwrap());
+        let cfg = TunerConfig { max_trials: 100, seed: 3,
+                                ..Default::default() };
+        let trace = RandomTuner::new(cfg).tune(&env);
+        assert_eq!(trace.len(), 100);
+        let mut idx: Vec<usize> =
+            trace.trials.iter().map(|t| t.space_index).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 100);
+    }
+
+    #[test]
+    fn exhausts_small_budgets() {
+        let env = TuningEnv::new(VtaConfig::zcu102(),
+                                 resnet18::layer("conv5").unwrap());
+        let cfg = TunerConfig { max_trials: 7, n_per_round: 10,
+                                ..Default::default() };
+        let trace = RandomTuner::new(cfg).tune(&env);
+        assert_eq!(trace.len(), 7);
+    }
+}

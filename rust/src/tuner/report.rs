@@ -1,0 +1,273 @@
+//! Tuning traces and derived metrics (curves, ratios, convergence).
+
+use super::database::{Outcome, TrialRecord};
+
+/// Complete record of one tuning run, in profiling order.
+#[derive(Clone, Debug, Default)]
+pub struct TuningTrace {
+    pub layer: String,
+    pub tuner: String,
+    pub trials: Vec<TrialRecord>,
+}
+
+impl TuningTrace {
+    pub fn new(layer: &str, tuner: &str) -> Self {
+        TuningTrace { layer: layer.to_string(), tuner: tuner.to_string(),
+                      trials: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    /// Best valid cycles over the whole run.
+    pub fn best_cycles(&self) -> Option<u64> {
+        self.trials.iter().filter_map(|t| t.outcome.cycles()).min()
+    }
+
+    /// Best-so-far curve (paper Fig. 2a y-axis): entry `i` is the lowest
+    /// valid cycle count among trials `0..=i`; `f64::INFINITY` until the
+    /// first valid trial.
+    pub fn best_curve(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.trials
+            .iter()
+            .map(|t| {
+                if let Some(c) = t.outcome.cycles() {
+                    best = best.min(c as f64);
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Fraction of profiling attempts that were invalid (Fig. 2b left).
+    pub fn invalidity_ratio(&self) -> f64 {
+        if self.trials.is_empty() {
+            return 0.0;
+        }
+        let invalid = self
+            .trials
+            .iter()
+            .filter(|t| !t.outcome.is_valid())
+            .count();
+        invalid as f64 / self.trials.len() as f64
+    }
+
+    /// Number of invalid attempts by class `(crash, wrong_output)`.
+    pub fn invalid_counts(&self) -> (usize, usize) {
+        let crash = self
+            .trials
+            .iter()
+            .filter(|t| t.outcome == Outcome::Crash)
+            .count();
+        let wrong = self
+            .trials
+            .iter()
+            .filter(|t| t.outcome == Outcome::WrongOutput)
+            .count();
+        (crash, wrong)
+    }
+
+    /// Valid execution times (cycles) — Fig. 2b right histogram input.
+    pub fn valid_cycles(&self) -> Vec<f64> {
+        self.trials
+            .iter()
+            .filter_map(|t| t.outcome.cycles().map(|c| c as f64))
+            .collect()
+    }
+
+    /// First trial count at which best-so-far ≤ `target` (None if never).
+    pub fn trials_to_reach(&self, target: f64) -> Option<usize> {
+        self.best_curve().iter().position(|&b| b <= target).map(|i| i + 1)
+    }
+
+    /// Paper's convergence criterion ("the same value repeated more than
+    /// 10 times", i.e. no improvement for `window` trailing trials):
+    /// returns `(trials_to_converge, converged_value)` where
+    /// `trials_to_converge` is the trial count at the *last* improvement.
+    /// If the curve is still improving within `window` of the end, the run
+    /// did not converge — the budget end is reported instead.
+    pub fn convergence(&self, window: usize) -> Option<(usize, f64)> {
+        let curve = self.best_curve();
+        let best = *curve.last()?;
+        if !best.is_finite() {
+            return None;
+        }
+        // last index where the best-so-far improved
+        let last_improve = curve
+            .iter()
+            .position(|&v| v == best)
+            .unwrap_or(curve.len() - 1);
+        if curve.len() - last_improve >= window {
+            Some((last_improve + 1, best))
+        } else {
+            Some((curve.len(), best)) // not yet stable: report budget end
+        }
+    }
+
+    /// Estimated wall-clock profiling cost on the real board (seconds) —
+    /// the quantity the paper's invalid-filtering actually saves.
+    pub fn estimated_wall_clock(&self, cost: &ProfilingCostModel) -> f64 {
+        self.trials
+            .iter()
+            .map(|t| match t.outcome {
+                Outcome::Valid { cycles } => {
+                    cost.per_attempt_overhead_s
+                        + cost.repeats as f64
+                            * (cycles as f64 / (cost.clock_mhz * 1e6))
+                }
+                Outcome::WrongOutput => {
+                    cost.per_attempt_overhead_s + cost.wrong_output_cost_s
+                }
+                Outcome::Crash => cost.crash_reboot_s,
+            })
+            .sum()
+    }
+}
+
+/// Board-profiling cost constants (paper §A.2: a crash "requires a manual
+/// reboot" — dominant cost; defaults model a ZCU102 flow).
+#[derive(Clone, Debug)]
+pub struct ProfilingCostModel {
+    pub clock_mhz: f64,
+    /// Measurement repeats per valid config.
+    pub repeats: usize,
+    /// Fixed per-attempt overhead (compile upload, RPC, …).
+    pub per_attempt_overhead_s: f64,
+    /// Extra cost of a wrong-output run (executes + compare).
+    pub wrong_output_cost_s: f64,
+    /// Board reboot after a register error.
+    pub crash_reboot_s: f64,
+}
+
+impl Default for ProfilingCostModel {
+    fn default() -> Self {
+        ProfilingCostModel {
+            clock_mhz: 100.0,
+            repeats: 10,
+            per_attempt_overhead_s: 1.0,
+            wrong_output_cost_s: 0.5,
+            crash_reboot_s: 60.0,
+        }
+    }
+}
+
+/// Average several best-so-far curves (same length assumed; shorter curves
+/// are padded with their final value). Infinite prefixes are skipped.
+pub fn average_curves(curves: &[Vec<f64>]) -> Vec<f64> {
+    if curves.is_empty() {
+        return Vec::new();
+    }
+    let len = curves.iter().map(Vec::len).max().unwrap();
+    let mut out = Vec::with_capacity(len);
+    for i in 0..len {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for c in curves {
+            let v = if i < c.len() {
+                c[i]
+            } else {
+                *c.last().unwrap_or(&f64::INFINITY)
+            };
+            if v.is_finite() {
+                sum += v;
+                n += 1;
+            }
+        }
+        out.push(if n == 0 { f64::INFINITY } else { sum / n as f64 });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::Schedule;
+
+    fn trace_with(outcomes: &[Outcome]) -> TuningTrace {
+        let mut t = TuningTrace::new("conv1", "test");
+        for (i, &o) in outcomes.iter().enumerate() {
+            let s = Schedule { tile_h: 1 + i, tile_w: 1, tile_oc: 16,
+                               tile_ic: 16, n_vthreads: 1 };
+            t.trials.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: s.visible_features(),
+                hidden: vec![],
+                outcome: o,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn best_curve_monotone() {
+        let t = trace_with(&[
+            Outcome::Crash,
+            Outcome::Valid { cycles: 100 },
+            Outcome::Valid { cycles: 200 },
+            Outcome::Valid { cycles: 50 },
+        ]);
+        let c = t.best_curve();
+        assert!(c[0].is_infinite());
+        assert_eq!(&c[1..], &[100.0, 100.0, 50.0]);
+        assert_eq!(t.best_cycles(), Some(50));
+    }
+
+    #[test]
+    fn invalidity_and_counts() {
+        let t = trace_with(&[
+            Outcome::Crash,
+            Outcome::WrongOutput,
+            Outcome::Valid { cycles: 10 },
+            Outcome::Crash,
+        ]);
+        assert_eq!(t.invalidity_ratio(), 0.75);
+        assert_eq!(t.invalid_counts(), (2, 1));
+    }
+
+    #[test]
+    fn convergence_detects_plateau() {
+        let mut outs = vec![Outcome::Valid { cycles: 100 }];
+        outs.extend(std::iter::repeat(Outcome::Valid { cycles: 150 })
+            .take(12));
+        let t = trace_with(&outs);
+        let (at, val) = t.convergence(10).unwrap();
+        assert_eq!(val, 100.0);
+        assert_eq!(at, 1);
+    }
+
+    #[test]
+    fn trials_to_reach() {
+        let t = trace_with(&[
+            Outcome::Valid { cycles: 300 },
+            Outcome::Valid { cycles: 100 },
+        ]);
+        assert_eq!(t.trials_to_reach(300.0), Some(1));
+        assert_eq!(t.trials_to_reach(100.0), Some(2));
+        assert_eq!(t.trials_to_reach(50.0), None);
+    }
+
+    #[test]
+    fn wall_clock_dominated_by_crashes() {
+        let cost = ProfilingCostModel::default();
+        let crashy = trace_with(&[Outcome::Crash; 5]);
+        let clean =
+            trace_with(&[Outcome::Valid { cycles: 100_000 }; 5]);
+        assert!(crashy.estimated_wall_clock(&cost)
+            > 10.0 * clean.estimated_wall_clock(&cost));
+    }
+
+    #[test]
+    fn average_curves_skips_infinite() {
+        let a = vec![f64::INFINITY, 10.0, 10.0];
+        let b = vec![20.0, 20.0, 8.0];
+        let avg = average_curves(&[a, b]);
+        assert_eq!(avg, vec![20.0, 15.0, 9.0]);
+    }
+}

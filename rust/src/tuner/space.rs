@@ -1,0 +1,120 @@
+//! Per-layer search space with measurement bookkeeping.
+
+use crate::compiler::schedule::{self, Schedule, ScheduleSpace};
+use crate::util::rng::Rng;
+use crate::workloads::ConvLayer;
+
+/// The enumerable space for one layer plus a measured-set mask.
+#[derive(Clone)]
+pub struct SearchSpace {
+    space: ScheduleSpace,
+    schedules: Vec<Schedule>,
+    measured: Vec<bool>,
+    n_measured: usize,
+}
+
+impl SearchSpace {
+    pub fn new(layer: &ConvLayer) -> Self {
+        let space = schedule::candidates(layer);
+        let schedules = space.all();
+        let n = schedules.len();
+        SearchSpace { space, schedules, measured: vec![false; n],
+                      n_measured: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.schedules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schedules.is_empty()
+    }
+
+    pub fn schedule(&self, i: usize) -> Schedule {
+        self.schedules[i]
+    }
+
+    pub fn schedules(&self) -> &[Schedule] {
+        &self.schedules
+    }
+
+    pub fn raw_space(&self) -> &ScheduleSpace {
+        &self.space
+    }
+
+    pub fn is_measured(&self, i: usize) -> bool {
+        self.measured[i]
+    }
+
+    pub fn mark_measured(&mut self, i: usize) {
+        if !self.measured[i] {
+            self.measured[i] = true;
+            self.n_measured += 1;
+        }
+    }
+
+    pub fn n_measured(&self) -> usize {
+        self.n_measured
+    }
+
+    pub fn n_unmeasured(&self) -> usize {
+        self.len() - self.n_measured
+    }
+
+    /// Indices not yet measured.
+    pub fn unmeasured(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| !self.measured[i]).collect()
+    }
+
+    /// Sample up to `k` distinct unmeasured indices.
+    pub fn sample_unmeasured(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        let pool = self.unmeasured();
+        if pool.len() <= k {
+            return pool;
+        }
+        rng.sample_indices(pool.len(), k)
+            .into_iter()
+            .map(|j| pool[j])
+            .collect()
+    }
+
+    /// Reset the measured mask (fresh tuning run on the same space).
+    pub fn reset(&mut self) {
+        self.measured.fill(false);
+        self.n_measured = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn bookkeeping() {
+        let l = resnet18::layer("conv5").unwrap();
+        let mut s = SearchSpace::new(&l);
+        let n = s.len();
+        assert!(n > 100);
+        assert_eq!(s.n_unmeasured(), n);
+        s.mark_measured(5);
+        s.mark_measured(5); // idempotent
+        assert_eq!(s.n_measured(), 1);
+        assert!(!s.unmeasured().contains(&5));
+        s.reset();
+        assert_eq!(s.n_measured(), 0);
+    }
+
+    #[test]
+    fn sampling_avoids_measured() {
+        let l = resnet18::layer("conv5").unwrap();
+        let mut s = SearchSpace::new(&l);
+        for i in 0..s.len() / 2 {
+            s.mark_measured(i);
+        }
+        let mut rng = Rng::new(1);
+        let picks = s.sample_unmeasured(&mut rng, 50);
+        assert_eq!(picks.len(), 50);
+        assert!(picks.iter().all(|&i| i >= s.len() / 2));
+    }
+}

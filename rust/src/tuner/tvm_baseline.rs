@@ -1,0 +1,84 @@
+//! The "TVM approach" baseline the paper compares against: a single cost
+//! model P trained on *all* profiled configurations (invalid ones get a
+//! penalty label, the standard AutoTVM treatment of failed measurements),
+//! ε-greedy top-N selection, no validity model, no hidden features.
+
+use super::database::Database;
+use super::explorer::Explorer;
+use super::models::ModelP;
+use super::report::TuningTrace;
+use super::{Tuner, TunerConfig, TuningEnv};
+use crate::util::rng::Rng;
+
+pub struct TvmTuner {
+    pub cfg: TunerConfig,
+}
+
+impl TvmTuner {
+    pub fn new(cfg: TunerConfig) -> Self {
+        TvmTuner { cfg }
+    }
+}
+
+impl Tuner for TvmTuner {
+    fn name(&self) -> &'static str {
+        "tvm"
+    }
+
+    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed ^ 0x5456_4d21);
+        let mut space = env.space.clone();
+        let mut db = Database::new(env.layer.name);
+        let mut trace = TuningTrace::new(env.layer.name, self.name());
+        let explorer = Explorer::new(cfg.epsilon);
+        let mut round = 0u64;
+        while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
+            round += 1;
+            let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
+            let batch: Vec<usize> = if db.len() < cfg.min_train {
+                space.sample_unmeasured(&mut rng, n)
+            } else {
+                match ModelP::train_tvm(&db, cfg.boost_rounds,
+                                        cfg.seed ^ round)
+                {
+                    None => space.sample_unmeasured(&mut rng, n),
+                    Some(p) => {
+                        explorer.select(&space, &p, None, n, &mut rng)
+                    }
+                }
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for idx in batch {
+                let rec = env.profile(idx);
+                space.mark_measured(idx);
+                db.push(rec.clone());
+                trace.trials.push(rec);
+                if trace.len() >= cfg.max_trials {
+                    break;
+                }
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn runs_and_respects_budget() {
+        let env = TuningEnv::new(VtaConfig::zcu102(),
+                                 resnet18::layer("conv5").unwrap());
+        let cfg = TunerConfig { max_trials: 50, ..Default::default() };
+        let trace = TvmTuner::new(cfg).tune(&env);
+        assert_eq!(trace.len(), 50);
+        assert_eq!(trace.tuner, "tvm");
+        assert!(trace.best_cycles().is_some());
+    }
+}

@@ -1,0 +1,193 @@
+//! Mini micro-benchmark harness (offline substitute for `criterion`,
+//! DESIGN.md §Substitutions).
+//!
+//! Measures wall time over warmup + timed iterations, reports
+//! median / mean / p10 / p90 and a derived throughput. All `cargo bench`
+//! targets (`harness = false`) are built on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:.2} K items/s", t / 1e3),
+            Some(t) => format!("  {t:.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<40} {:>12} median {:>12} mean (p10 {:>12}, p90 {:>12}, n={}){}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner; collects results and prints a summary.
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Maximum timed iterations.
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(secs: f64) -> Self {
+        Bench {
+            budget: Duration::from_secs_f64(secs),
+            ..Self::default()
+        }
+    }
+
+    /// Time `f`, which should return something observable to prevent DCE
+    /// (the value is black-boxed).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Time `f` and report `items` units of work per iteration.
+    pub fn run_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) {
+        // Warmup: 1 run to estimate cost, then ~10% of budget.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed();
+        let warm_deadline = Instant::now() + self.budget / 10;
+        while Instant::now() < warm_deadline && first < self.budget / 10 {
+            std::hint::black_box(f());
+        }
+        // Timed runs until budget or max_iters.
+        let mut samples: Vec<Duration> = Vec::new();
+        let deadline = Instant::now() + self.budget;
+        while samples.len() < self.max_iters
+            && (samples.len() < 5 || Instant::now() < deadline)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            p10: samples[n / 10],
+            p90: samples[(n * 9 / 10).min(n - 1)],
+            items_per_iter: items,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    /// Final summary block (also returned for EXPERIMENTS.md capture).
+    pub fn summary(&self) -> String {
+        let mut s = String::from("\n== bench summary ==\n");
+        for r in &self.results {
+            s.push_str(&r.report());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::with_budget(0.05);
+        b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters >= 5);
+        assert!(b.results[0].mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::with_budget(0.02);
+        b.run_items("items", 1000.0, || std::hint::black_box(3 * 7));
+        assert!(b.results[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared infrastructure: deterministic RNG, minimal JSON, statistics,
+//! table rendering, and the in-tree property-test / micro-bench harnesses.
+//!
+//! The build is fully offline against a small vendored crate set (no `rand`,
+//! `serde`, `proptest` or `criterion`), so these are deliberate from-scratch
+//! substrates — see DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,184 @@
+//! Mini property-testing harness (offline substitute for `proptest`,
+//! DESIGN.md §Substitutions).
+//!
+//! A property is checked over `cases` seeded random inputs; on failure the
+//! harness re-runs a bounded shrink loop (halving numeric generators toward
+//! their minimum) and reports the smallest failing seed/input it found.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath)
+//! use ml2tuner::util::prop::{self, Gen};
+//! prop::check(200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let mut v: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+//!     v.sort();
+//!     prop::assert_prop(v.windows(2).all(|w| w[0] <= w[1]), "sorted")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Shrink level 0 = full ranges; higher levels bias toward minima.
+    shrink: u32,
+    /// Log of drawn values for failure reporting.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: u32) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            shrink,
+            log: Vec::new(),
+        }
+    }
+
+    fn shrunk_span(&self, span: u64) -> u64 {
+        // each shrink level halves the span (toward the lower bound)
+        span >> self.shrink.min(63)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64() & (u64::MAX >> self.shrink.min(63));
+        self.log.push(format!("u64={v}"));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = self.shrunk_span((hi - lo) as u64);
+        let v = lo + (self.rng.next_u64() % (span + 1)) as usize;
+        self.log.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = self.shrunk_span((hi - lo) as u64);
+        let v = lo + (self.rng.next_u64() % (span + 1)) as i64;
+        self.log.push(format!("i64={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let frac = self.rng.f64() / (1u64 << self.shrink.min(52)) as f64;
+        let v = lo + frac * (hi - lo);
+        self.log.push(format!("f64={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.bool(0.5);
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len().max(1));
+        self.log.push(format!("pick#{i}"));
+        &xs[i]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property outcome: Ok(()) or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper producing a `PropResult`.
+pub fn assert_prop(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two f64 are within `tol`.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| > {tol}"))
+    }
+}
+
+/// Run `prop` over `cases` seeds; panic with the smallest failure found.
+pub fn check<F>(cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    check_seeded(0, cases, prop)
+}
+
+const SEED_BASE: u64 = 0x4d4c_325f_5455_4e45; // "ML2_TUNE"
+
+/// Like [`check`] but with an explicit base seed.
+pub fn check_seeded<F>(extra_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = SEED_BASE ^ extra_seed.wrapping_add(case);
+        let mut g = Gen::new(seed, 0);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed with progressively narrowed generators
+            let mut best: (u32, String, Vec<String>) = (0, msg, g.log);
+            for level in 1..16 {
+                let mut gs = Gen::new(seed, level);
+                if let Err(m) = prop(&mut gs) {
+                    best = (level, m, gs.log);
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, case={case}, \
+                 shrink_level={}): {}\ninputs: [{}]",
+                best.0,
+                best.1,
+                best.2.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check(100, |g| {
+            let a = g.i64_in(-100, 100);
+            let b = g.i64_in(-100, 100);
+            assert_prop(a + b == b + a, "commutative")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_inputs() {
+        check(100, |g| {
+            let v = g.usize_in(0, 1000);
+            assert_prop(v < 500, "v < 500")
+        });
+    }
+
+    #[test]
+    fn shrink_narrows_ranges() {
+        let mut g0 = Gen::new(1, 0);
+        let mut g8 = Gen::new(1, 8);
+        let wide: Vec<usize> = (0..50).map(|_| g0.usize_in(0, 1000)).collect();
+        let narrow: Vec<usize> =
+            (0..50).map(|_| g8.usize_in(0, 1000)).collect();
+        assert!(narrow.iter().max() < wide.iter().max());
+    }
+}

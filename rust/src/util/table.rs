@@ -1,0 +1,155 @@
+//! Aligned plain-text table rendering for experiment harnesses — every
+//! `ml2tuner experiment <id>` prints the paper's rows/series through this.
+
+/// Column-aligned table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch: {cells:?}"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    out.push(' ');
+                }
+            }
+            // trim trailing spaces
+            while out.ends_with(' ') {
+                out.pop();
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals (helper for experiment rows).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Render an ASCII sparkline-ish curve (used for tuning-curve figures in
+/// terminal output): y values mapped onto `height` rows of block chars.
+pub fn ascii_curve(ys: &[f64], width: usize, height: usize) -> String {
+    if ys.is_empty() || width == 0 || height == 0 {
+        return String::new();
+    }
+    // resample to `width` points
+    let pts: Vec<f64> = (0..width)
+        .map(|i| {
+            let pos = i as f64 / (width.max(2) - 1) as f64
+                * (ys.len() - 1) as f64;
+            ys[pos.round() as usize]
+        })
+        .collect();
+    let lo = pts.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = pts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (x, &v) in pts.iter().enumerate() {
+        let y = ((v - lo) / span * (height - 1) as f64).round() as usize;
+        let row = height - 1 - y;
+        grid[row][x] = '*';
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        if r == 0 {
+            out.push_str(&format!("{hi:>10.3e} |"));
+        } else if r == height - 1 {
+            out.push_str(&format!("{lo:>10.3e} |"));
+        } else {
+            out.push_str("           |");
+        }
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["conv1".into(), "0.8264".into()]);
+        t.row(&["conv10".into(), "0.5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("conv1 "));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn curve_has_height_lines() {
+        let ys: Vec<f64> = (0..100).map(|i| (100 - i) as f64).collect();
+        let s = ascii_curve(&ys, 40, 8);
+        assert_eq!(s.lines().count(), 8);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn f_formats() {
+        assert_eq!(f(0.12345, 3), "0.123");
+    }
+}

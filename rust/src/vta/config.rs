@@ -1,0 +1,203 @@
+//! Extended-VTA hardware parameters — paper Appendix A.1, Table 1.
+//!
+//! The paper adapted TVM's ZCU104 preset for the ZCU102 by bumping the four
+//! buffer-size attributes by one (log2) step; those exact values are the
+//! defaults here. The timing coefficients parameterize the cycle model in
+//! [`crate::vta::timing`] (they are our calibration of a 100 MHz VTA design
+//! with a DDR4 DMA engine, not Table 1 values — see DESIGN.md).
+
+/// Table 1 + cycle-model coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VtaConfig {
+    /// `TARGET` — TVM device target string.
+    pub target: &'static str,
+    /// `HW_VER` — VTA hardware version.
+    pub hw_ver: &'static str,
+    /// `LOG_INP_WIDTH` = 3 → int8 inputs.
+    pub log_inp_width: u32,
+    /// `LOG_WGT_WIDTH` = 3 → int8 weights.
+    pub log_wgt_width: u32,
+    /// `LOG_ACC_WIDTH` = 5 → int32 accumulators.
+    pub log_acc_width: u32,
+    /// `LOG_BATCH` = 0 → GEMM intrinsic batch dim 1.
+    pub log_batch: u32,
+    /// `LOG_BLOCK` = 4 → GEMM intrinsic inner dims 16.
+    pub log_block: u32,
+    /// `LOG_UOP_BUFF_SIZE` = 16 → 64 KiB micro-op buffer.
+    pub log_uop_buff_size: u32,
+    /// `LOG_INP_BUFF_SIZE` = 16 → 64 KiB input buffer.
+    pub log_inp_buff_size: u32,
+    /// `LOG_WGT_BUFF_SIZE` = 19 → 512 KiB weight buffer.
+    pub log_wgt_buff_size: u32,
+    /// `LOG_ACC_BUFF_SIZE` = 18 → 256 KiB accumulator buffer.
+    pub log_acc_buff_size: u32,
+
+    // ---- cycle-model coefficients (calibration, not Table 1) ----
+    /// Fabric clock in MHz (ZCU102 VTA designs run 100–333 MHz).
+    pub clock_mhz: f64,
+    /// Fixed DMA setup latency per load/store instruction (cycles).
+    pub dma_latency: u64,
+    /// DMA payload bytes moved per cycle once streaming.
+    pub dma_bytes_per_cycle: u64,
+    /// Extra cycles per 2-D DMA row (descriptor/burst restart).
+    pub dma_row_overhead: u64,
+    /// Fixed issue overhead per GEMM instruction (cycles).
+    pub gemm_overhead: u64,
+    /// Fixed issue overhead per ALU instruction (cycles).
+    pub alu_overhead: u64,
+    /// Cycles per accumulator vector processed by the ALU.
+    pub alu_cycles_per_vec: u64,
+    /// Cycles per memset vector (on-chip fill).
+    pub memset_cycles_per_vec: u64,
+    /// Cycles for the FINISH handshake.
+    pub finish_cycles: u64,
+
+    /// Requantization shift applied by the ALU store path. Must match
+    /// `python/compile/model.py::SHIFT` (golden artifacts).
+    pub shift: u32,
+}
+
+impl Default for VtaConfig {
+    fn default() -> Self {
+        Self::zcu102()
+    }
+}
+
+impl VtaConfig {
+    /// The extended-VTA ZCU102 configuration of paper Table 1.
+    pub fn zcu102() -> Self {
+        VtaConfig {
+            target: "zcu102",
+            hw_ver: "0.0.1",
+            log_inp_width: 3,
+            log_wgt_width: 3,
+            log_acc_width: 5,
+            log_batch: 0,
+            log_block: 4,
+            log_uop_buff_size: 16,
+            log_inp_buff_size: 16,
+            log_wgt_buff_size: 19,
+            log_acc_buff_size: 18,
+            clock_mhz: 100.0,
+            dma_latency: 144,
+            dma_bytes_per_cycle: 16,
+            dma_row_overhead: 6,
+            gemm_overhead: 28,
+            alu_overhead: 24,
+            alu_cycles_per_vec: 2,
+            memset_cycles_per_vec: 1,
+            finish_cycles: 16,
+            shift: 8,
+        }
+    }
+
+    /// TVM's stock ZCU104 preset (buffers one log2 step smaller) — used by
+    /// ablations to show capacity pressure shifts the invalidity structure.
+    pub fn zcu104() -> Self {
+        VtaConfig {
+            target: "zcu104",
+            log_uop_buff_size: 15,
+            log_inp_buff_size: 15,
+            log_wgt_buff_size: 18,
+            log_acc_buff_size: 17,
+            ..Self::zcu102()
+        }
+    }
+
+    /// GEMM intrinsic inner dimension (16).
+    #[inline]
+    pub fn block(&self) -> usize {
+        1 << self.log_block
+    }
+
+    /// GEMM intrinsic batch dimension (1).
+    #[inline]
+    pub fn batch(&self) -> usize {
+        1 << self.log_batch
+    }
+
+    /// Input vector size in bytes: batch × block × int8.
+    #[inline]
+    pub fn inp_vec_bytes(&self) -> usize {
+        self.batch() * self.block() * ((1 << self.log_inp_width) / 8)
+    }
+
+    /// Weight block size in bytes: block × block × int8.
+    #[inline]
+    pub fn wgt_block_bytes(&self) -> usize {
+        self.block() * self.block() * ((1 << self.log_wgt_width) / 8)
+    }
+
+    /// Accumulator vector size in bytes: batch × block × int32.
+    #[inline]
+    pub fn acc_vec_bytes(&self) -> usize {
+        self.batch() * self.block() * ((1 << self.log_acc_width) / 8)
+    }
+
+    /// Micro-op size in bytes (real VTA packs one uop in 4 bytes).
+    #[inline]
+    pub fn uop_bytes(&self) -> usize {
+        4
+    }
+
+    /// INP scratchpad capacity in input *vectors* (zcu102: 4096).
+    #[inline]
+    pub fn inp_capacity(&self) -> usize {
+        (1usize << self.log_inp_buff_size) / self.inp_vec_bytes()
+    }
+
+    /// WGT scratchpad capacity in 16×16 *blocks* (zcu102: 2048).
+    #[inline]
+    pub fn wgt_capacity(&self) -> usize {
+        (1usize << self.log_wgt_buff_size) / self.wgt_block_bytes()
+    }
+
+    /// ACC scratchpad capacity in accumulator *vectors* (zcu102: 4096).
+    #[inline]
+    pub fn acc_capacity(&self) -> usize {
+        (1usize << self.log_acc_buff_size) / self.acc_vec_bytes()
+    }
+
+    /// UOP buffer capacity in micro-ops (zcu102: 16384).
+    #[inline]
+    pub fn uop_capacity(&self) -> usize {
+        (1usize << self.log_uop_buff_size) / self.uop_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_table1_capacities() {
+        let c = VtaConfig::zcu102();
+        assert_eq!(c.block(), 16);
+        assert_eq!(c.batch(), 1);
+        assert_eq!(c.inp_vec_bytes(), 16);
+        assert_eq!(c.wgt_block_bytes(), 256);
+        assert_eq!(c.acc_vec_bytes(), 64);
+        // 64 KiB / 16 B, 512 KiB / 256 B, 256 KiB / 64 B, 64 KiB / 4 B
+        assert_eq!(c.inp_capacity(), 4096);
+        assert_eq!(c.wgt_capacity(), 2048);
+        assert_eq!(c.acc_capacity(), 4096);
+        assert_eq!(c.uop_capacity(), 16384);
+    }
+
+    #[test]
+    fn zcu104_is_half_sized() {
+        let a = VtaConfig::zcu102();
+        let b = VtaConfig::zcu104();
+        assert_eq!(b.inp_capacity() * 2, a.inp_capacity());
+        assert_eq!(b.wgt_capacity() * 2, a.wgt_capacity());
+        assert_eq!(b.acc_capacity() * 2, a.acc_capacity());
+        assert_eq!(b.uop_capacity() * 2, a.uop_capacity());
+    }
+
+    #[test]
+    fn shift_matches_python_model() {
+        // python/compile/model.py::SHIFT — golden artifacts are lowered with
+        // this; a mismatch would make every valid config "wrong output".
+        assert_eq!(VtaConfig::zcu102().shift, 8);
+    }
+}

@@ -1,0 +1,307 @@
+//! VTA instruction stream — the interface between the backend compiler and
+//! the simulator.
+//!
+//! Mirrors the real VTA ISA's structure at the level that matters for tuning:
+//! 2-D strided DMA descriptors, a GEMM instruction programmed by micro-ops
+//! plus two hardware loops, a requantizing ALU, and the four dependency-token
+//! flags that let the LOAD / COMPUTE / STORE modules run ahead of each other.
+
+/// Dependency-token flags (same four bits as real VTA instructions).
+///
+/// Queues: `l2g` (load→compute data-ready), `g2l` (compute→load buffer-free),
+/// `g2s` (compute→store data-ready), `s2g` (store→compute buffer-free).
+/// "prev"/"next" are relative to the pipeline order LOAD → COMPUTE → STORE.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Dep {
+    /// Wait for a token from the previous module before starting.
+    pub pop_prev: bool,
+    /// Wait for a token from the next module before starting.
+    pub pop_next: bool,
+    /// Signal the previous module when done.
+    pub push_prev: bool,
+    /// Signal the next module when done.
+    pub push_next: bool,
+}
+
+impl Dep {
+    pub const NONE: Dep = Dep {
+        pop_prev: false,
+        pop_next: false,
+        push_prev: false,
+        push_next: false,
+    };
+
+    pub fn pop_next() -> Dep {
+        Dep { pop_next: true, ..Dep::NONE }
+    }
+
+    pub fn push_next() -> Dep {
+        Dep { push_next: true, ..Dep::NONE }
+    }
+
+    pub fn pop_prev() -> Dep {
+        Dep { pop_prev: true, ..Dep::NONE }
+    }
+
+    pub fn push_prev() -> Dep {
+        Dep { push_prev: true, ..Dep::NONE }
+    }
+}
+
+/// Which scratchpad a memory instruction touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Buffer {
+    Inp,
+    Wgt,
+    Acc,
+}
+
+/// 2-D strided DMA descriptor (element units are buffer-native: input
+/// vectors / weight blocks / accumulator vectors):
+/// `sram[sram_base + r*cols + c] <-> dram[dram_base + r*dram_stride + c]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dma {
+    pub sram_base: usize,
+    pub dram_base: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub dram_stride: usize,
+}
+
+impl Dma {
+    pub fn elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Highest sram element touched + 1 (0 for empty transfers).
+    pub fn sram_end(&self) -> usize {
+        if self.elems() == 0 {
+            self.sram_base
+        } else {
+            self.sram_base + self.elems()
+        }
+    }
+
+    /// Highest dram element touched + 1.
+    pub fn dram_end(&self) -> usize {
+        if self.elems() == 0 {
+            self.dram_base
+        } else {
+            self.dram_base + (self.rows - 1) * self.dram_stride + self.cols
+        }
+    }
+}
+
+/// One GEMM micro-op: `acc[acc] += inp[inp] · wgt[wgt]` at block level
+/// (1×16 int8 vector × 16×16 int8 block accumulated into 1×16 int32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Uop {
+    pub acc: usize,
+    pub inp: usize,
+    pub wgt: usize,
+}
+
+/// One GEMM hardware loop level: per-iteration offsets added to every uop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GemmLoop {
+    pub extent: usize,
+    pub acc_off: usize,
+    pub inp_off: usize,
+    pub wgt_off: usize,
+}
+
+/// ALU opcodes (store path of the compute module).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOp {
+    /// `acc = clip(acc >> shift, -128, 127)` — the requantization the golden
+    /// Pallas kernel performs (`kernels/vta_conv.py::_gemm_kernel`).
+    ShiftClip { shift: u32 },
+    /// `acc = max(acc, 0)` (ReLU; used by synthetic workloads / ablations).
+    Relu,
+    /// `acc += imm`.
+    AddImm { imm: i32 },
+}
+
+/// One VTA instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// DMA into a scratchpad (LOAD module; `Acc` loads are used by bias-style
+    /// synthetic workloads).
+    Load { buf: Buffer, dma: Dma, dep: Dep },
+    /// Zero-fill `count` elements of a scratchpad starting at `sram_base`
+    /// (LOAD module; emitted for padding halo rows, the paper's
+    /// `outDummy*` regions).
+    Memset { buf: Buffer, sram_base: usize, count: usize, dep: Dep },
+    /// Copy `[uop_begin, uop_end)` of the program's uop table into the uop
+    /// buffer at `sram_base` (LOAD module on real VTA; capacity-checked).
+    LoadUop { sram_base: usize, uop_begin: usize, uop_end: usize, dep: Dep },
+    /// Micro-op GEMM with two hardware loops (COMPUTE module).
+    /// Executes, for `i0 < lp0.extent`, `i1 < lp1.extent`, each uop `u` in
+    /// `[ubuf_begin, ubuf_end)` of the *uop buffer*:
+    ///   `acc[base_acc(u,i0,i1)] (+)= inp[..] · wgt[..]`
+    /// where `base_x = u.x + x_base + i0*lp0.x_off + i1*lp1.x_off`.
+    /// `reset` zeroes the accumulator instead of accumulating.
+    Gemm {
+        ubuf_begin: usize,
+        ubuf_end: usize,
+        lp0: GemmLoop,
+        lp1: GemmLoop,
+        acc_base: usize,
+        inp_base: usize,
+        wgt_base: usize,
+        reset: bool,
+        dep: Dep,
+    },
+    /// ALU over a contiguous accumulator range (COMPUTE module).
+    Alu { op: AluOp, acc_base: usize, count: usize, dep: Dep },
+    /// DMA accumulator vectors (requantized int8 lanes) to output DRAM
+    /// (STORE module). Element units: accumulator vectors.
+    Store { dma: Dma, dep: Dep },
+    /// Drain the pipeline (COMPUTE module).
+    Finish,
+}
+
+impl Instr {
+    /// Which module executes this instruction.
+    pub fn module(&self) -> Module {
+        match self {
+            Instr::Load { .. } | Instr::Memset { .. } | Instr::LoadUop { .. } => {
+                Module::Load
+            }
+            Instr::Gemm { .. } | Instr::Alu { .. } | Instr::Finish => {
+                Module::Compute
+            }
+            Instr::Store { .. } => Module::Store,
+        }
+    }
+
+    pub fn dep(&self) -> Dep {
+        match self {
+            Instr::Load { dep, .. }
+            | Instr::Memset { dep, .. }
+            | Instr::LoadUop { dep, .. }
+            | Instr::Gemm { dep, .. }
+            | Instr::Alu { dep, .. }
+            | Instr::Store { dep, .. } => *dep,
+            Instr::Finish => Dep::NONE,
+        }
+    }
+}
+
+/// The three concurrent VTA modules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Module {
+    Load = 0,
+    Compute = 1,
+    Store = 2,
+}
+
+/// A compiled program: instruction stream + the uop table LoadUop draws from.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    pub uops: Vec<Uop>,
+    /// DRAM sizes the program assumes (element units; validated at run).
+    pub dram_inp_vecs: usize,
+    pub dram_wgt_blocks: usize,
+    pub dram_out_vecs: usize,
+}
+
+impl Program {
+    /// Total GEMM block-operations (16×16×16 MACs each) — the work the MXU
+    /// actually performs; used by the cycle model and utilization reports.
+    pub fn gemm_block_ops(&self) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Gemm { ubuf_begin, ubuf_end, lp0, lp1, .. } => {
+                    (ubuf_end - ubuf_begin) as u64
+                        * lp0.extent.max(1) as u64
+                        * lp1.extent.max(1) as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Bytes moved by DMA (loads + stores), for bandwidth accounting.
+    pub fn dma_bytes(&self, cfg: &super::config::VtaConfig) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Load { buf, dma, .. } => {
+                    dma.elems() as u64 * buf_bytes(cfg, *buf) as u64
+                }
+                Instr::Store { dma, .. } => {
+                    dma.elems() as u64 * cfg.acc_vec_bytes() as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+pub(crate) fn buf_bytes(
+    cfg: &super::config::VtaConfig,
+    buf: Buffer,
+) -> usize {
+    match buf {
+        Buffer::Inp => cfg.inp_vec_bytes(),
+        Buffer::Wgt => cfg.wgt_block_bytes(),
+        Buffer::Acc => cfg.acc_vec_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dma_extents() {
+        let d = Dma { sram_base: 10, dram_base: 100, rows: 3, cols: 4,
+                      dram_stride: 20 };
+        assert_eq!(d.elems(), 12);
+        assert_eq!(d.sram_end(), 22);
+        assert_eq!(d.dram_end(), 100 + 2 * 20 + 4);
+    }
+
+    #[test]
+    fn module_assignment() {
+        let dma = Dma { sram_base: 0, dram_base: 0, rows: 1, cols: 1,
+                        dram_stride: 1 };
+        assert_eq!(
+            Instr::Load { buf: Buffer::Inp, dma, dep: Dep::NONE }.module(),
+            Module::Load
+        );
+        assert_eq!(Instr::Finish.module(), Module::Compute);
+        assert_eq!(
+            Instr::Store { dma, dep: Dep::NONE }.module(),
+            Module::Store
+        );
+    }
+
+    #[test]
+    fn gemm_block_op_count() {
+        let mut p = Program::default();
+        p.instrs.push(Instr::Gemm {
+            ubuf_begin: 0,
+            ubuf_end: 8,
+            lp0: GemmLoop { extent: 4, ..Default::default() },
+            lp1: GemmLoop { extent: 2, ..Default::default() },
+            acc_base: 0,
+            inp_base: 0,
+            wgt_base: 0,
+            reset: false,
+            dep: Dep::NONE,
+        });
+        assert_eq!(p.gemm_block_ops(), 8 * 4 * 2);
+    }
+}

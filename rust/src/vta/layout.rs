@@ -1,0 +1,132 @@
+//! DRAM data-layout packing for the VTA GEMM core.
+//!
+//! The "low-level library" half of the paper's stack ([35]): host tensors are
+//! re-laid-out into the accelerator's native units before execution.
+//!
+//! * input `(H, W, C)` int8 → vectors of `block` int8: index
+//!   `(h*W + w)*Cb + cb` where `Cb = C/block`.
+//! * weights `(KH, KW, C, KC)` int8 (HWIO, matching the JAX golden model) →
+//!   16×16 blocks `[n_lane][k_lane]`, block index
+//!   `((nb*KH + kh)*KW + kw)*Cb + cb` — output-channel-block major so a
+//!   (kh, kw, ci-chunk) weight slice is a 2-D strided DMA.
+//! * output `(OH, OW, KC)` ← accumulator vectors at `(oh*OW + ow)*KCb + nb`.
+
+use super::config::VtaConfig;
+
+/// Pack an `(h, w, c)` int8 image into input vectors. `c % block == 0`.
+pub fn pack_input(cfg: &VtaConfig, x: &[i8], h: usize, w: usize, c: usize)
+    -> Vec<i8>
+{
+    let blk = cfg.block();
+    assert_eq!(x.len(), h * w * c);
+    assert_eq!(c % blk, 0, "channels must be a multiple of block");
+    // (h*W + w)*Cb + cb is exactly row-major (h, w, c) — a memcpy.
+    x.to_vec()
+}
+
+/// Pack `(kh, kw, c, kc)` HWIO int8 weights into GEMM blocks.
+pub fn pack_weights(
+    cfg: &VtaConfig,
+    wt: &[i8],
+    kh: usize,
+    kw: usize,
+    c: usize,
+    kc: usize,
+) -> Vec<i8> {
+    let blk = cfg.block();
+    assert_eq!(wt.len(), kh * kw * c * kc);
+    assert_eq!(c % blk, 0);
+    assert_eq!(kc % blk, 0);
+    let (cb_n, nb_n) = (c / blk, kc / blk);
+    let bytes = cfg.wgt_block_bytes();
+    let mut out = vec![0i8; nb_n * kh * kw * cb_n * bytes];
+    for nb in 0..nb_n {
+        for ih in 0..kh {
+            for iw in 0..kw {
+                for cb in 0..cb_n {
+                    let blk_idx = ((nb * kh + ih) * kw + iw) * cb_n + cb;
+                    let base = blk_idx * bytes;
+                    for n_lane in 0..blk {
+                        for k_lane in 0..blk {
+                            // HWIO: ((ih*KW + iw)*C + ci)*KC + co
+                            let ci = cb * blk + k_lane;
+                            let co = nb * blk + n_lane;
+                            let src = ((ih * kw + iw) * c + ci) * kc + co;
+                            out[base + n_lane * blk + k_lane] = wt[src];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Number of weight blocks `pack_weights` produces.
+pub fn weight_blocks(
+    cfg: &VtaConfig,
+    kh: usize,
+    kw: usize,
+    c: usize,
+    kc: usize,
+) -> usize {
+    let blk = cfg.block();
+    (kc / blk) * kh * kw * (c / blk)
+}
+
+/// Output DRAM is stored as int8 lanes of accumulator vectors laid out
+/// `(oh*OW + ow)*KCb + nb`; as with the input this is row-major
+/// `(oh, ow, kc)` — identity. Provided for symmetry / documentation.
+pub fn unpack_output(
+    cfg: &VtaConfig,
+    out_vecs: &[i8],
+    oh: usize,
+    ow: usize,
+    kc: usize,
+) -> Vec<i8> {
+    let blk = cfg.block();
+    assert_eq!(kc % blk, 0);
+    assert_eq!(out_vecs.len(), oh * ow * kc);
+    out_vecs.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn input_pack_is_identity_layout() {
+        let cfg = VtaConfig::zcu102();
+        let mut r = Rng::new(1);
+        let x: Vec<i8> = (0..2 * 3 * 16).map(|_| r.i8()).collect();
+        assert_eq!(pack_input(&cfg, &x, 2, 3, 16), x);
+    }
+
+    #[test]
+    fn weight_block_lanes() {
+        let cfg = VtaConfig::zcu102();
+        let (kh, kw, c, kc) = (3, 3, 32, 16);
+        let mut r = Rng::new(2);
+        let wt: Vec<i8> = (0..kh * kw * c * kc).map(|_| r.i8()).collect();
+        let packed = pack_weights(&cfg, &wt, kh, kw, c, kc);
+        assert_eq!(packed.len(), weight_blocks(&cfg, kh, kw, c, kc) * 256);
+        // spot check: block (nb=0, ih=1, iw=2, cb=1), n_lane=3, k_lane=5
+        let blk = 16;
+        let (nb, ih, iw, cb, n_lane, k_lane) = (0, 1, 2, 1, 3, 5);
+        let cb_n = c / blk;
+        let blk_idx = ((nb * kh + ih) * kw + iw) * cb_n + cb;
+        let got = packed[blk_idx * 256 + n_lane * blk + k_lane];
+        let src = ((ih * kw + iw) * c + (cb * blk + k_lane)) * kc
+            + (nb * blk + n_lane);
+        assert_eq!(got, wt[src]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_multiple_channels() {
+        let cfg = VtaConfig::zcu102();
+        let x = vec![0i8; 2 * 2 * 10];
+        pack_input(&cfg, &x, 2, 2, 10);
+    }
+}

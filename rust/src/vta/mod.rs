@@ -1,0 +1,137 @@
+//! Extended-VTA accelerator substrate (paper Appendix A.1).
+//!
+//! The paper profiles configurations on an extended VTA [32] implemented on a
+//! Xilinx ZCU102; we reproduce the *mechanisms that shape the tuning problem*
+//! in a simulator (DESIGN.md §Substitutions):
+//!
+//! * [`config`] — the Table 1 hardware parameters (buffer sizes, block
+//!   geometry, data widths) plus the timing coefficients of the cycle model.
+//! * [`isa`] — the instruction stream the backend compiler emits: 2-D DMA
+//!   loads/stores, memsets, uop-programmed GEMM with two hardware loops, the
+//!   requantizing ALU, and the 4 dependency-token flags VTA uses to overlap
+//!   its load / compute / store modules.
+//! * [`layout`] — DRAM packing helpers (raw image → input vectors, HWIO
+//!   weights → 16×16 GEMM blocks, output vectors → HWC tensor).
+//! * [`functional`] — numeric execution over int8/int32 with the **fault
+//!   model**: out-of-range INP/WGT/UOP addressing raises a register error
+//!   (crash; on the real board this required a manual reboot), while ACC and
+//!   cross-thread aliasing *wraps silently* and corrupts the output — the two
+//!   invalidity classes of paper §A.2.
+//! * [`timing`] — cycle-approximate model: each module has its own timeline
+//!   and the dependency-token FIFOs (credit-primed for double buffering /
+//!   virtual threads) decide the overlap, exactly the mechanism by which
+//!   `nVirtualThread` hides DMA latency on real VTA.
+//!
+//! [`Simulator`] bundles the three execution modes used by the tuner:
+//! `check` (fault + cycle analysis, no data — the profiling fast path),
+//! `execute` (full numeric run, used by tests and final validation) and
+//! `cycles` (timing only).
+
+pub mod config;
+pub mod functional;
+pub mod isa;
+pub mod layout;
+pub mod timing;
+
+use config::VtaConfig;
+use isa::Program;
+
+/// Why a configuration is *invalid* (paper §A.2: "a register error,
+/// requiring a manual reboot, or a test fails because the result differs").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// INP/WGT/UOP addressing beyond the physical buffer, or a DRAM range
+    /// violation: the device hangs/faults — profiling records a crash.
+    RegisterError(String),
+    /// Silent data corruption: ACC wraparound or cross-virtual-thread
+    /// scratchpad aliasing. The run "succeeds" but the output is wrong.
+    Corruption(String),
+    /// The dependency-token streams deadlock (malformed program).
+    Deadlock(String),
+}
+
+impl Fault {
+    /// Paper terminology: crashes and wrong outputs are both invalid, but
+    /// only crashes abort profiling on the spot.
+    pub fn is_crash(&self) -> bool {
+        matches!(self, Fault::RegisterError(_) | Fault::Deadlock(_))
+    }
+}
+
+/// Profiling verdict for one configuration (fast path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// Executes cleanly; estimated execution cycles.
+    Valid { cycles: u64 },
+    /// Invalid with the detected fault.
+    Invalid { fault: Fault, cycles: u64 },
+}
+
+impl Verdict {
+    pub fn is_valid(&self) -> bool {
+        matches!(self, Verdict::Valid { .. })
+    }
+
+    pub fn cycles(&self) -> u64 {
+        match self {
+            Verdict::Valid { cycles } | Verdict::Invalid { cycles, .. } => {
+                *cycles
+            }
+        }
+    }
+}
+
+/// The simulator facade used by the tuner and the experiment harnesses.
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    pub cfg: VtaConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: VtaConfig) -> Self {
+        Simulator { cfg }
+    }
+
+    /// Fast profiling path: analytic fault detection + cycle model, no data
+    /// movement. This is what each tuning-iteration "hardware run" costs us.
+    ///
+    /// Fault precedence mirrors the board: a register error kills the run
+    /// before any output comparison could happen; hazard corruption is only
+    /// observable if the program addresses its buffers legally.
+    pub fn check(&self, prog: &Program) -> Verdict {
+        let schedule = match timing::simulate_schedule(&self.cfg, prog) {
+            Ok(s) => s,
+            Err(f) => return Verdict::Invalid { fault: f, cycles: 0 },
+        };
+        if let Err(fault) = functional::check_addresses(&self.cfg, prog) {
+            return Verdict::Invalid { fault, cycles: schedule.cycles };
+        }
+        if let Err(fault) =
+            functional::check_hazards(&self.cfg, prog, &schedule)
+        {
+            return Verdict::Invalid { fault, cycles: schedule.cycles };
+        }
+        Verdict::Valid { cycles: schedule.cycles }
+    }
+
+    /// Full numeric execution (slow path). Returns the output DRAM image and
+    /// any crash; silent corruption shows up as wrong data, exactly like on
+    /// the real board.
+    pub fn execute(
+        &self,
+        prog: &Program,
+        dram: &functional::Dram,
+    ) -> Result<Vec<i8>, Fault> {
+        functional::execute(&self.cfg, prog, dram)
+    }
+
+    /// Cycle count alone (no fault analysis).
+    pub fn cycles(&self, prog: &Program) -> Result<u64, Fault> {
+        timing::simulate(&self.cfg, prog)
+    }
+
+    /// Convert cycles to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.cfg.clock_mhz * 1e3)
+    }
+}

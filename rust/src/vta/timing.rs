@@ -1,0 +1,333 @@
+//! Cycle-approximate timing model.
+//!
+//! VTA runs three concurrent modules — LOAD, COMPUTE, STORE — decoupled by
+//! dependency-token FIFOs (`l2g`/`g2l` between load and compute, `g2s`/`s2g`
+//! between compute and store). The backend compiler encodes double buffering
+//! and virtual threads purely through the pop/push flags on instructions;
+//! the timing model is a conservative co-simulation of the three timelines:
+//!
+//! * each module executes its own instructions in order;
+//! * an instruction starts at `max(module_free, required_token_push_times)`;
+//! * its duration comes from the DMA / GEMM / ALU cost model
+//!   ([`instr_cycles`]);
+//! * tokens it pushes become visible at its end time.
+//!
+//! The result is both the cycle count (the tuner's performance metric) and
+//! the serialized execution order (start-time order) that
+//! [`crate::vta::functional`] uses for numeric execution and hazard
+//! detection — one source of truth for "what the pipeline actually did".
+
+use super::config::VtaConfig;
+use super::isa::{buf_bytes, Instr, Module, Program};
+use super::Fault;
+
+/// Result of a timing run: total cycles + serialized execution order
+/// (ascending `(start_cycle, program_index)`).
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub cycles: u64,
+    pub order: Vec<(u64, usize)>,
+    /// Per-module busy cycles (utilization reporting).
+    pub busy: [u64; 3],
+}
+
+/// Duration of one instruction in cycles.
+pub fn instr_cycles(cfg: &VtaConfig, prog: &Program, ins: &Instr) -> u64 {
+    match ins {
+        Instr::Load { buf, dma, .. } => {
+            let bytes = (dma.elems() * buf_bytes(cfg, *buf)) as u64;
+            cfg.dma_latency
+                + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+                + dma.rows as u64 * cfg.dma_row_overhead
+        }
+        Instr::Memset { count, .. } => {
+            8 + *count as u64 * cfg.memset_cycles_per_vec
+        }
+        Instr::LoadUop { uop_begin, uop_end, .. } => {
+            let bytes = ((uop_end - uop_begin) * cfg.uop_bytes()) as u64;
+            cfg.dma_latency + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+        }
+        Instr::Gemm { ubuf_begin, ubuf_end, lp0, lp1, .. } => {
+            // MXU issues one block-op per cycle once streaming.
+            let _ = prog; // uop table not needed for the op count
+            let ops = (ubuf_end - ubuf_begin) as u64
+                * lp0.extent.max(1) as u64
+                * lp1.extent.max(1) as u64;
+            cfg.gemm_overhead + ops
+        }
+        Instr::Alu { count, .. } => {
+            cfg.alu_overhead + *count as u64 * cfg.alu_cycles_per_vec
+        }
+        Instr::Store { dma, .. } => {
+            // store path writes int8 lanes: block bytes per vector
+            let bytes = (dma.elems() * cfg.block()) as u64;
+            cfg.dma_latency
+                + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+                + dma.rows as u64 * cfg.dma_row_overhead
+        }
+        Instr::Finish => cfg.finish_cycles,
+    }
+}
+
+/// The four token FIFOs, as (queue of push-times).
+#[derive(Default)]
+struct Queues {
+    l2g: std::collections::VecDeque<u64>, // load → compute (data ready)
+    g2l: std::collections::VecDeque<u64>, // compute → load (buffer free)
+    g2s: std::collections::VecDeque<u64>, // compute → store (data ready)
+    s2g: std::collections::VecDeque<u64>, // store → compute (buffer free)
+}
+
+/// Run the co-simulation; returns the schedule or a deadlock fault.
+pub fn simulate_schedule(
+    cfg: &VtaConfig,
+    prog: &Program,
+) -> Result<Schedule, Fault> {
+    // split instruction indices per module (order preserved)
+    let mut streams: [Vec<usize>; 3] = Default::default();
+    for (i, ins) in prog.instrs.iter().enumerate() {
+        streams[ins.module() as usize].push(i);
+    }
+    let mut ptr = [0usize; 3]; // next instruction per module
+    let mut free = [0u64; 3]; // module-ready times
+    let mut busy = [0u64; 3];
+    let mut q = Queues::default();
+    let mut order: Vec<(u64, usize)> = Vec::with_capacity(prog.instrs.len());
+    let mut done = 0usize;
+    let total = prog.instrs.len();
+    while done < total {
+        let mut advanced = false;
+        // pick, among runnable modules, the one that can start earliest
+        let mut best: Option<(u64, usize)> = None; // (start, module)
+        for m in 0..3 {
+            if ptr[m] >= streams[m].len() {
+                continue;
+            }
+            let idx = streams[m][ptr[m]];
+            let dep = prog.instrs[idx].dep();
+            // peek required tokens
+            let mut start = free[m];
+            let mut ok = true;
+            let (prev_q, next_q): (
+                Option<&std::collections::VecDeque<u64>>,
+                Option<&std::collections::VecDeque<u64>>,
+            ) = match module_of(m) {
+                Module::Load => (None, Some(&q.g2l)),
+                Module::Compute => (Some(&q.l2g), Some(&q.s2g)),
+                Module::Store => (Some(&q.g2s), None),
+            };
+            if dep.pop_prev {
+                match prev_q.and_then(|qq| qq.front()) {
+                    Some(&t) => start = start.max(t),
+                    None => ok = false,
+                }
+            }
+            if dep.pop_next {
+                match next_q.and_then(|qq| qq.front()) {
+                    Some(&t) => start = start.max(t),
+                    None => ok = false,
+                }
+            }
+            if ok && best.map_or(true, |(s, _)| start < s) {
+                best = Some((start, m));
+            }
+        }
+        if let Some((start, m)) = best {
+            let idx = streams[m][ptr[m]];
+            let ins = &prog.instrs[idx];
+            let dep = ins.dep();
+            // consume tokens
+            match module_of(m) {
+                Module::Load => {
+                    if dep.pop_next {
+                        q.g2l.pop_front();
+                    }
+                }
+                Module::Compute => {
+                    if dep.pop_prev {
+                        q.l2g.pop_front();
+                    }
+                    if dep.pop_next {
+                        q.s2g.pop_front();
+                    }
+                }
+                Module::Store => {
+                    if dep.pop_prev {
+                        q.g2s.pop_front();
+                    }
+                }
+            }
+            let dur = instr_cycles(cfg, prog, ins);
+            let end = start + dur;
+            free[m] = end;
+            busy[m] += dur;
+            // publish tokens at end time
+            match module_of(m) {
+                Module::Load => {
+                    if dep.push_next {
+                        q.l2g.push_back(end);
+                    }
+                }
+                Module::Compute => {
+                    if dep.push_prev {
+                        q.g2l.push_back(end);
+                    }
+                    if dep.push_next {
+                        q.g2s.push_back(end);
+                    }
+                }
+                Module::Store => {
+                    if dep.push_prev {
+                        q.s2g.push_back(end);
+                    }
+                }
+            }
+            order.push((start, idx));
+            ptr[m] += 1;
+            done += 1;
+            advanced = true;
+        }
+        if !advanced {
+            let stuck: Vec<String> = (0..3)
+                .filter(|&m| ptr[m] < streams[m].len())
+                .map(|m| format!("{:?}@{}", module_of(m), ptr[m]))
+                .collect();
+            return Err(Fault::Deadlock(format!(
+                "dependency tokens never arrive: {}",
+                stuck.join(", ")
+            )));
+        }
+    }
+    // serialized order = (start, program index); stable tie-break on index
+    order.sort();
+    let cycles = free.iter().copied().max().unwrap_or(0);
+    Ok(Schedule { cycles, order, busy })
+}
+
+/// Cycle count only.
+pub fn simulate(cfg: &VtaConfig, prog: &Program) -> Result<u64, Fault> {
+    simulate_schedule(cfg, prog).map(|s| s.cycles)
+}
+
+fn module_of(m: usize) -> Module {
+    match m {
+        0 => Module::Load,
+        1 => Module::Compute,
+        _ => Module::Store,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::isa::{Buffer, Dep, Dma, GemmLoop, Uop};
+
+    fn cfg() -> VtaConfig {
+        VtaConfig::zcu102()
+    }
+
+    fn dma1() -> Dma {
+        Dma { sram_base: 0, dram_base: 0, rows: 1, cols: 1, dram_stride: 1 }
+    }
+
+    fn mini(dep_load: Dep, dep_gemm: Dep) -> Program {
+        let mut p = Program {
+            dram_inp_vecs: 4,
+            dram_wgt_blocks: 4,
+            dram_out_vecs: 4,
+            ..Default::default()
+        };
+        p.uops.push(Uop { acc: 0, inp: 0, wgt: 0 });
+        p.instrs = vec![
+            Instr::LoadUop { sram_base: 0, uop_begin: 0, uop_end: 1,
+                             dep: Dep::NONE },
+            Instr::Load { buf: Buffer::Inp, dma: dma1(), dep: dep_load },
+            Instr::Gemm {
+                ubuf_begin: 0, ubuf_end: 1,
+                lp0: GemmLoop { extent: 1, ..Default::default() },
+                lp1: GemmLoop { extent: 1, ..Default::default() },
+                acc_base: 0, inp_base: 0, wgt_base: 0, reset: false,
+                dep: dep_gemm,
+            },
+            Instr::Finish,
+        ];
+        p
+    }
+
+    #[test]
+    fn tokens_serialize_dependent_work() {
+        // gemm pops the token the load pushes → gemm.start >= load.end
+        let p = mini(Dep::push_next(), Dep::pop_prev());
+        let s = simulate_schedule(&cfg(), &p).unwrap();
+        let t = |idx: usize| {
+            s.order.iter().find(|&&(_, i)| i == idx).unwrap().0
+        };
+        let load_end =
+            t(1) + instr_cycles(&cfg(), &p, &p.instrs[1]);
+        assert!(t(2) >= load_end, "gemm must wait for load");
+    }
+
+    #[test]
+    fn no_tokens_means_overlap() {
+        // without deps, gemm can start while the load is still streaming
+        let p = mini(Dep::NONE, Dep::NONE);
+        let s = simulate_schedule(&cfg(), &p).unwrap();
+        let t = |idx: usize| {
+            s.order.iter().find(|&&(_, i)| i == idx).unwrap().0
+        };
+        let load_end = t(1) + instr_cycles(&cfg(), &p, &p.instrs[1]);
+        assert!(t(2) < load_end, "gemm should overlap the load");
+    }
+
+    #[test]
+    fn missing_token_deadlocks() {
+        // gemm pops a token nobody pushes
+        let p = mini(Dep::NONE, Dep::pop_prev());
+        match simulate_schedule(&cfg(), &p) {
+            Err(Fault::Deadlock(_)) => {}
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cycles_cover_all_modules() {
+        let p = mini(Dep::push_next(), Dep::pop_prev());
+        let s = simulate_schedule(&cfg(), &p).unwrap();
+        assert_eq!(s.order.len(), p.instrs.len());
+        assert!(s.cycles > 0);
+        assert!(s.busy[0] > 0 && s.busy[1] > 0);
+    }
+
+    #[test]
+    fn gemm_cost_scales_with_loops() {
+        let c = cfg();
+        let mk = |e0: usize, e1: usize| Instr::Gemm {
+            ubuf_begin: 0, ubuf_end: 4,
+            lp0: GemmLoop { extent: e0, ..Default::default() },
+            lp1: GemmLoop { extent: e1, ..Default::default() },
+            acc_base: 0, inp_base: 0, wgt_base: 0, reset: false,
+            dep: Dep::NONE,
+        };
+        let p = Program::default();
+        let small = instr_cycles(&c, &p, &mk(1, 1));
+        let big = instr_cycles(&c, &p, &mk(8, 4));
+        assert_eq!(big - c.gemm_overhead, (small - c.gemm_overhead) * 32);
+    }
+
+    #[test]
+    fn dma_cost_scales_with_bytes_and_rows() {
+        let c = cfg();
+        let p = Program::default();
+        let mk = |rows: usize, cols: usize| Instr::Load {
+            buf: Buffer::Inp,
+            dma: Dma { sram_base: 0, dram_base: 0, rows, cols,
+                       dram_stride: cols },
+            dep: Dep::NONE,
+        };
+        let one = instr_cycles(&c, &p, &mk(1, 1));
+        let wide = instr_cycles(&c, &p, &mk(1, 64));
+        let tall = instr_cycles(&c, &p, &mk(64, 1));
+        assert!(wide > one);
+        assert!(tall > wide, "row overhead should make tall DMAs slower");
+    }
+}

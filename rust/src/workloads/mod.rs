@@ -1,0 +1,7 @@
+//! Workload definitions: the ResNet18 conv layers the paper profiles
+//! (Table 2a) and synthetic generators for tests/ablations.
+
+pub mod resnet18;
+pub mod synth;
+
+pub use resnet18::ConvLayer;

@@ -1,0 +1,137 @@
+//! Paper Table 2(a): the 10 profiled convolution layers of ResNet18.
+//!
+//! Kept in sync with `python/compile/model.py::RESNET18_LAYERS` (the AOT
+//! golden artifacts are lowered from the Python table; an integration test
+//! cross-checks against `artifacts/manifest.json`).
+
+/// One convolution workload (single-image inference, NHWC/HWIO).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: &'static str,
+    /// Input height/width/channels.
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Output channels (paper's `KC`) and kernel height/width.
+    pub kc: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Output height/width.
+    pub oh: usize,
+    pub ow: usize,
+    pub pad: usize,
+    pub stride: usize,
+}
+
+impl ConvLayer {
+    /// GEMM dimensions after im2col: `(M, K, N)`.
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        (self.oh * self.ow, self.kh * self.kw * self.c, self.kc)
+    }
+
+    /// Exact MAC count of the convolution.
+    pub fn macs(&self) -> u64 {
+        let (m, k, n) = self.gemm_dims();
+        m as u64 * k as u64 * n as u64
+    }
+
+    /// Input tensor element count.
+    pub fn input_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Weight tensor element count (HWIO).
+    pub fn weight_len(&self) -> usize {
+        self.kh * self.kw * self.c * self.kc
+    }
+
+    /// Output tensor element count.
+    pub fn output_len(&self) -> usize {
+        self.oh * self.ow * self.kc
+    }
+
+    /// Output spatial size from the conv arithmetic (sanity vs table).
+    pub fn computed_out(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+}
+
+/// Paper Table 2(a) — the 10 profiled ResNet18 conv layers.
+pub const LAYERS: [ConvLayer; 10] = [
+    ConvLayer { name: "conv1", h: 56, w: 56, c: 64, kc: 64, kh: 3, kw: 3,
+                oh: 56, ow: 56, pad: 1, stride: 1 },
+    ConvLayer { name: "conv2", h: 56, w: 56, c: 64, kc: 128, kh: 1, kw: 1,
+                oh: 28, ow: 28, pad: 0, stride: 2 },
+    ConvLayer { name: "conv3", h: 56, w: 56, c: 64, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 2 },
+    ConvLayer { name: "conv4", h: 28, w: 28, c: 128, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 1 },
+    ConvLayer { name: "conv5", h: 28, w: 28, c: 128, kc: 256, kh: 1, kw: 1,
+                oh: 14, ow: 14, pad: 0, stride: 2 },
+    ConvLayer { name: "conv6", h: 56, w: 56, c: 64, kc: 128, kh: 1, kw: 1,
+                oh: 28, ow: 28, pad: 0, stride: 2 },
+    ConvLayer { name: "conv7", h: 56, w: 56, c: 64, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 2 },
+    ConvLayer { name: "conv8", h: 28, w: 28, c: 128, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 1 },
+    ConvLayer { name: "conv9", h: 56, w: 56, c: 64, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 2 },
+    ConvLayer { name: "conv10", h: 28, w: 28, c: 128, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 1 },
+];
+
+/// Look up a layer by name (`conv1` … `conv10`).
+pub fn layer(name: &str) -> Option<ConvLayer> {
+    LAYERS.iter().copied().find(|l| l.name == name)
+}
+
+/// Paper Table 2(b): invalidity ratio of configurations per layer under
+/// random sampling, as measured on the authors' board (reference series for
+/// the table2 experiment; our simulator produces its own column).
+pub const PAPER_INVALIDITY: [(&str, f64); 10] = [
+    ("conv1", 0.8264),
+    ("conv2", 0.7966),
+    ("conv3", 0.8057),
+    ("conv4", 0.6935),
+    ("conv5", 0.5249),
+    ("conv6", 0.5249),
+    ("conv7", 0.5249),
+    ("conv8", 0.5047),
+    ("conv9", 0.5047),
+    ("conv10", 0.5047),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_2a_output_shapes_consistent() {
+        for l in LAYERS {
+            assert_eq!(l.computed_out(), (l.oh, l.ow), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn channels_are_block_multiples() {
+        for l in LAYERS {
+            assert_eq!(l.c % 16, 0, "{}", l.name);
+            assert_eq!(l.kc % 16, 0, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn conv1_gemm_dims() {
+        let (m, k, n) = layer("conv1").unwrap().gemm_dims();
+        assert_eq!((m, k, n), (3136, 576, 64));
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(layer("conv10").is_some());
+        assert!(layer("conv11").is_none());
+    }
+}

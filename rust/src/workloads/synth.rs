@@ -1,0 +1,76 @@
+//! Synthetic workloads + deterministic tensor data.
+//!
+//! The paper's layers carry no data dependence (timing and validity are
+//! shape/schedule functions), so synthetic int8 tensors from a seeded RNG
+//! are sufficient — they only matter for the bit-exactness checks against
+//! the AOT golden model.
+
+use super::resnet18::ConvLayer;
+use crate::util::rng::Rng;
+
+/// Deterministic int8 input image `(h, w, c)` for a layer.
+pub fn input_data(layer: &ConvLayer, seed: u64) -> Vec<i8> {
+    let mut r = Rng::new(seed ^ 0x1a9c_37e5);
+    (0..layer.input_len()).map(|_| r.i8()).collect()
+}
+
+/// Deterministic int8 HWIO weights for a layer.
+pub fn weight_data(layer: &ConvLayer, seed: u64) -> Vec<i8> {
+    let mut r = Rng::new(seed ^ 0x7b3d_59f1);
+    (0..layer.weight_len()).map(|_| r.i8()).collect()
+}
+
+/// Random synthetic conv layers (channels kept block multiples) for
+/// property tests and generalization experiments.
+pub fn random_layer(r: &mut Rng) -> ConvLayer {
+    let ksz = *r.choose(&[1usize, 3, 5]);
+    let stride = *r.choose(&[1usize, 2]);
+    let pad = if ksz == 1 { 0 } else { r.below(ksz / 2 + 1) };
+    let c = 16 * (1 + r.below(4)); // 16..64
+    let kc = 16 * (1 + r.below(4));
+    // choose output size first so every (pad, stride) combination is legal
+    let oh = 4 + r.below(25); // 4..28
+    let ow = 4 + r.below(25);
+    let h = (oh - 1) * stride + ksz - 2 * pad;
+    let w = (ow - 1) * stride + ksz - 2 * pad;
+    ConvLayer {
+        name: "synth",
+        h,
+        w,
+        c,
+        kc,
+        kh: ksz,
+        kw: ksz,
+        oh,
+        ow,
+        pad,
+        stride,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    #[test]
+    fn data_deterministic() {
+        let l = resnet18::layer("conv5").unwrap();
+        assert_eq!(input_data(&l, 7), input_data(&l, 7));
+        assert_ne!(input_data(&l, 7), input_data(&l, 8));
+        assert_eq!(input_data(&l, 7).len(), l.input_len());
+        assert_eq!(weight_data(&l, 7).len(), l.weight_len());
+    }
+
+    #[test]
+    fn random_layers_are_consistent() {
+        let mut r = Rng::new(42);
+        for _ in 0..200 {
+            let l = random_layer(&mut r);
+            assert_eq!(l.computed_out(), (l.oh, l.ow), "{l:?}");
+            assert_eq!(l.c % 16, 0);
+            assert_eq!(l.kc % 16, 0);
+            assert!(l.h >= l.kh.saturating_sub(2 * l.pad));
+        }
+    }
+}

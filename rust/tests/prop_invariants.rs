@@ -1,0 +1,162 @@
+//! Property tests over coordinator/substrate invariants (in-tree harness;
+//! see `util::prop`): random schedules on random layers must never break
+//! the simulator's internal consistency.
+
+use ml2tuner::compiler::{passes, schedule::Schedule, Compiler};
+use ml2tuner::runtime::golden::reference_conv;
+use ml2tuner::util::prop::{self, assert_prop};
+use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::workloads::synth;
+
+fn random_schedule(g: &mut prop::Gen) -> Schedule {
+    Schedule {
+        tile_h: g.usize_in(1, 32),
+        tile_w: g.usize_in(1, 32),
+        tile_oc: 16 * g.usize_in(1, 8),
+        tile_ic: 16 * g.usize_in(1, 8),
+        n_vthreads: [1, 2, 4, 8][g.usize_in(0, 3)],
+    }
+}
+
+#[test]
+fn prop_compile_never_panics_and_check_terminates() {
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg);
+    prop::check(60, |g| {
+        let layer = synth::random_layer(g.rng());
+        let sched = random_schedule(g);
+        let compiled = compiler.compile(&layer, &sched);
+        let verdict = sim.check(&compiled.program);
+        assert_prop(
+            !compiled.program.is_empty(),
+            "program must not be empty",
+        )?;
+        // cycle model must be positive for any program that timed out fine
+        if verdict.is_valid() {
+            assert_prop(verdict.cycles() > 0, "zero-cycle program")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compiled_programs_never_deadlock() {
+    // the dep-token emission must be deadlock-free for ANY schedule
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    prop::check(60, |g| {
+        let layer = synth::random_layer(g.rng());
+        let sched = random_schedule(g);
+        let compiled = compiler.compile(&layer, &sched);
+        match ml2tuner::vta::timing::simulate(&cfg, &compiled.program) {
+            Err(ml2tuner::vta::Fault::Deadlock(m)) => {
+                Err(format!("deadlock: {m} ({sched})"))
+            }
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_valid_verdict_implies_reference_exact_output() {
+    // THE invariant the whole tuning loop rests on: if check() says valid,
+    // numeric execution matches the (pure-rust) golden reference bit-for-
+    // bit — tiling never changes integer results.
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    prop::check(25, |g| {
+        let layer = synth::random_layer(g.rng());
+        let sched = random_schedule(g);
+        let compiled = compiler.compile(&layer, &sched);
+        if !sim.check(&compiled.program).is_valid() {
+            return Ok(()); // only valid configs carry the guarantee
+        }
+        let seed = g.u64();
+        let x = synth::input_data(&layer, seed);
+        let w = synth::weight_data(&layer, seed);
+        let dram = functional::Dram {
+            inp: layout::pack_input(&cfg, &x, layer.h, layer.w, layer.c),
+            wgt: layout::pack_weights(&cfg, &w, layer.kh, layer.kw,
+                                      layer.c, layer.kc),
+            out_vecs: compiled.program.dram_out_vecs,
+        };
+        let out = sim
+            .execute(&compiled.program, &dram)
+            .map_err(|f| format!("valid program crashed: {f:?}"))?;
+        let want = reference_conv(&layer, &x, &w, cfg.shift);
+        assert_prop(out == want,
+                    &format!("{} {sched}: output mismatch", layer.name))
+    });
+}
+
+#[test]
+fn prop_legalized_geometry_is_consistent() {
+    let cfg = VtaConfig::zcu102();
+    prop::check(200, |g| {
+        let layer = synth::random_layer(g.rng());
+        let sched = random_schedule(g);
+        let a = passes::analyze(&cfg, &layer, &sched);
+        assert_prop(a.th <= layer.oh && a.tw <= layer.ow, "tile clamp")?;
+        assert_prop(layer.c % a.tic == 0, "tic divides C")?;
+        assert_prop(a.tiles_h * a.th >= layer.oh, "tiles cover OH")?;
+        assert_prop((a.tiles_h - 1) * a.th < layer.oh, "no empty tiles")?;
+        assert_prop(a.th_last <= a.th && a.th_last >= 1, "remainder")?;
+        assert_prop(
+            a.nbc_last <= a.nbc && a.nbc * a.tiles_oc >= a.kcb,
+            "oc tiling covers KC",
+        )
+    });
+}
+
+#[test]
+fn prop_verdict_deterministic() {
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg);
+    prop::check(30, |g| {
+        let layer = synth::random_layer(g.rng());
+        let sched = random_schedule(g);
+        let c1 = compiler.compile(&layer, &sched);
+        let c2 = compiler.compile(&layer, &sched);
+        assert_prop(
+            sim.check(&c1.program) == sim.check(&c2.program),
+            "verdict must be deterministic",
+        )
+    });
+}
+
+#[test]
+fn prop_gbdt_predictions_bounded_by_labels() {
+    // leaves are weighted averages: an ensemble over [lo, hi] labels stays
+    // within [lo-ε, hi+ε] (no-extrapolation property the explorer relies
+    // on, see tuner::explorer docs)
+    use ml2tuner::gbdt::{Booster, Dataset, GbdtParams};
+    prop::check(20, |g| {
+        let n = g.usize_in(20, 120);
+        let rng = g.rng();
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range_f64(0.0, 10.0),
+                          rng.range_f64(0.0, 10.0)])
+            .collect();
+        let labels: Vec<f64> =
+            rows.iter().map(|r| r[0] + 2.0 * r[1]).collect();
+        let lo = labels.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = labels.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let params = GbdtParams { boost_rounds: 40, max_depth: 4,
+                                  learning_rate: 0.3,
+                                  ..Default::default() };
+        let b = Booster::train(&params,
+                               &Dataset::from_rows(&rows, &labels));
+        for _ in 0..20 {
+            let probe =
+                vec![rng.range_f64(-20.0, 30.0), rng.range_f64(-20.0, 30.0)];
+            let p = b.predict_row(&probe);
+            if p < lo - 1.0 || p > hi + 1.0 {
+                return Err(format!("extrapolated: {p} outside [{lo},{hi}]"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,158 @@
+//! Integration: the VTA simulator must agree bit-exactly with the
+//! AOT-compiled JAX/Pallas golden model (via PJRT) on every `check`-valid
+//! schedule, and the check() verdict must predict numeric behaviour.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works in a fresh checkout).
+
+use ml2tuner::compiler::{schedule, Compiler};
+use ml2tuner::runtime::{golden, Runtime};
+use ml2tuner::util::rng::Rng;
+use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::workloads::{resnet18, synth};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+fn numeric_output(
+    sim: &Simulator,
+    layer: &resnet18::ConvLayer,
+    prog: &ml2tuner::vta::isa::Program,
+    seed: u64,
+) -> Result<Vec<i8>, ml2tuner::vta::Fault> {
+    let x = synth::input_data(layer, seed);
+    let w = synth::weight_data(layer, seed);
+    let dram = functional::Dram {
+        inp: layout::pack_input(&sim.cfg, &x, layer.h, layer.w, layer.c),
+        wgt: layout::pack_weights(&sim.cfg, &w, layer.kh, layer.kw,
+                                  layer.c, layer.kc),
+        out_vecs: prog.dram_out_vecs,
+    };
+    sim.execute(prog, &dram)
+}
+
+#[test]
+fn valid_schedules_are_bit_exact_against_golden() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg);
+    let mut rng = Rng::new(0xE2E);
+    let mut checked = 0;
+    for layer in resnet18::LAYERS.iter().step_by(2) {
+        rt.check_layer(layer).unwrap();
+        let space = schedule::candidates(layer);
+        let mut found = 0;
+        let mut attempts = 0;
+        while found < 3 && attempts < 200 {
+            attempts += 1;
+            let s = space.nth(rng.below(space.len()));
+            let compiled = compiler.compile(layer, &s);
+            if !sim.check(&compiled.program).is_valid() {
+                continue;
+            }
+            found += 1;
+            checked += 1;
+            let out = numeric_output(&sim, layer, &compiled.program,
+                                     7 + found)
+                .expect("check-valid program must not crash numerically");
+            let gold =
+                golden::golden_output(&mut rt, layer, 7 + found).unwrap();
+            assert_eq!(out, gold, "{} {s}: output differs from golden",
+                       layer.name);
+        }
+        assert!(found > 0, "{}: no valid schedule found", layer.name);
+    }
+    assert!(checked >= 9);
+}
+
+#[test]
+fn golden_matches_pure_rust_reference() {
+    // triangulation: PJRT golden (JAX/Pallas int8 conv) == rust oracle
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for name in ["conv2", "conv5"] {
+        let layer = resnet18::layer(name).unwrap();
+        let gold = golden::golden_output(&mut rt, &layer, 3).unwrap();
+        let x = synth::input_data(&layer, 3);
+        let w = synth::weight_data(&layer, 3);
+        let reference = golden::reference_conv(&layer, &x, &w,
+                                               rt.shift());
+        assert_eq!(gold, reference, "{name}: PJRT vs rust oracle");
+    }
+}
+
+#[test]
+fn corrupt_verdicts_usually_produce_wrong_output() {
+    // The fast-path Corruption verdict claims "runs but output differs".
+    // Statistically confirm: most corruption-flagged configs that execute
+    // without crashing produce non-golden output.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg);
+    let layer = resnet18::layer("conv4").unwrap();
+    let space = schedule::candidates(&layer);
+    let mut rng = Rng::new(77);
+    let mut corrupt_checked = 0;
+    let mut wrong = 0;
+    let mut attempts = 0;
+    while corrupt_checked < 6 && attempts < 3000 {
+        attempts += 1;
+        let s = space.nth(rng.below(space.len()));
+        let compiled = compiler.compile(&layer, &s);
+        match sim.check(&compiled.program) {
+            ml2tuner::vta::Verdict::Invalid {
+                fault: ml2tuner::vta::Fault::Corruption(_), ..
+            } => {}
+            _ => continue,
+        }
+        let Ok(out) = numeric_output(&sim, &layer, &compiled.program, 5)
+        else {
+            continue; // corruption may coincide with a crash
+        };
+        corrupt_checked += 1;
+        let gold = golden::golden_output(&mut rt, &layer, 5).unwrap();
+        if out != gold {
+            wrong += 1;
+        }
+    }
+    assert!(corrupt_checked >= 3, "not enough corrupt configs found");
+    assert!(
+        wrong * 2 > corrupt_checked,
+        "only {wrong}/{corrupt_checked} corrupt configs mismatched"
+    );
+}
+
+#[test]
+fn crash_verdicts_crash_numerically() {
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg);
+    let layer = resnet18::layer("conv1").unwrap();
+    let space = schedule::candidates(&layer);
+    let mut rng = Rng::new(13);
+    let mut found = 0;
+    let mut attempts = 0;
+    while found < 5 && attempts < 1000 {
+        attempts += 1;
+        let s = space.nth(rng.below(space.len()));
+        let compiled = compiler.compile(&layer, &s);
+        match sim.check(&compiled.program) {
+            ml2tuner::vta::Verdict::Invalid { fault, .. }
+                if fault.is_crash() => {}
+            _ => continue,
+        }
+        found += 1;
+        let res = numeric_output(&sim, &layer, &compiled.program, 1);
+        assert!(res.is_err(),
+                "crash-verdict config executed cleanly: {s}");
+    }
+    assert!(found >= 5);
+}

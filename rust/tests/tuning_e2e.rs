@@ -1,0 +1,98 @@
+//! Integration: end-to-end tuning behaviour and experiment harness smoke
+//! (quick mode). No PJRT dependency — pure simulator path.
+
+use ml2tuner::experiments::{self, ExpConfig};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::tvm_baseline::TvmTuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::resnet18;
+
+fn env(layer: &str) -> TuningEnv {
+    TuningEnv::new(VtaConfig::zcu102(), resnet18::layer(layer).unwrap())
+}
+
+#[test]
+fn ml2tuner_filters_invalids_better_than_random() {
+    let e = env("conv1");
+    let cfg = TunerConfig { max_trials: 200, seed: 5, ..Default::default() };
+    let ml2 = Ml2Tuner::new(cfg.clone()).tune(&e);
+    let rnd = RandomTuner::new(cfg).tune(&e);
+    assert!(
+        ml2.invalidity_ratio() < rnd.invalidity_ratio() * 0.7,
+        "ml2 {:.3} vs random {:.3}",
+        ml2.invalidity_ratio(),
+        rnd.invalidity_ratio()
+    );
+}
+
+#[test]
+fn ml2tuner_at_least_matches_random_on_best_found() {
+    // averaged over 3 seeds: model-guided search must find an optimum at
+    // least as good as random's (tiny slack for single-budget variance)
+    let e = env("conv3");
+    let mut ml2_best = Vec::new();
+    let mut rnd_best = Vec::new();
+    for seed in [9, 19, 29] {
+        let cfg =
+            TunerConfig { max_trials: 200, seed, ..Default::default() };
+        ml2_best.push(
+            Ml2Tuner::new(cfg.clone()).tune(&e).best_cycles().unwrap()
+                as f64,
+        );
+        rnd_best.push(
+            RandomTuner::new(cfg).tune(&e).best_cycles().unwrap() as f64,
+        );
+    }
+    let m = ml2tuner::util::stats::mean(&ml2_best);
+    let r = ml2tuner::util::stats::mean(&rnd_best);
+    assert!(m <= r * 1.01, "ml2 {m} vs random {r}");
+}
+
+#[test]
+fn all_three_tuners_find_the_same_ballpark_optimum() {
+    let e = env("conv5");
+    let cfg = TunerConfig { max_trials: 250, seed: 2, ..Default::default() };
+    let b1 = Ml2Tuner::new(cfg.clone()).tune(&e).best_cycles().unwrap();
+    let b2 = TvmTuner::new(cfg.clone()).tune(&e).best_cycles().unwrap();
+    let b3 = RandomTuner::new(cfg).tune(&e).best_cycles().unwrap();
+    let lo = b1.min(b2).min(b3) as f64;
+    for b in [b1, b2, b3] {
+        assert!((b as f64) < lo * 1.5, "outlier optimum: {b} vs {lo}");
+    }
+}
+
+#[test]
+fn tuners_only_propose_enumerable_schedules() {
+    let e = env("conv2");
+    let cfg = TunerConfig { max_trials: 60, seed: 1, ..Default::default() };
+    let trace = Ml2Tuner::new(cfg).tune(&e);
+    for t in &trace.trials {
+        assert!(t.space_index < e.space.len());
+        assert_eq!(e.space.schedule(t.space_index), t.schedule);
+    }
+}
+
+// ---- experiment harness smoke (quick mode) ---------------------------
+
+#[test]
+fn experiment_table2_quick_runs() {
+    let report =
+        experiments::run("table2", &ExpConfig::quick()).unwrap();
+    assert!(report.contains("conv1"));
+    assert!(report.contains("conv10"));
+    assert!(report.contains("0.8264")); // paper column present
+}
+
+#[test]
+fn experiment_fig3_quick_shows_ratio() {
+    let report = experiments::run("fig3", &ExpConfig::quick()).unwrap();
+    assert!(report.contains("average ratio"));
+    assert!(report.contains("0.919")); // paper reference
+}
+
+#[test]
+fn experiment_unknown_id_errors() {
+    assert!(experiments::run("fig99", &ExpConfig::quick()).is_err());
+}
