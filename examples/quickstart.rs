@@ -22,10 +22,20 @@ fn main() -> anyhow::Result<()> {
         ml2tuner::compiler::schedule::candidates(&layer).len()
     );
 
-    // 1. tune with ML²Tuner (N=10, α=1, paper defaults)
+    // 1. tune with ML²Tuner (N=10, α=1, paper defaults) on a parallel
+    //    engine: profiling fans out over all cores, compiles are cached,
+    //    and the trace is identical to a single-threaded run
     let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let engine = Engine::default();
     let cfg = TunerConfig { max_trials: 200, seed: 1, ..Default::default() };
-    let trace = Ml2Tuner::new(cfg).tune(&env);
+    let trace = Ml2Tuner::new(cfg).tune_with(&env, &engine);
+    let cache = engine.cache().stats();
+    println!(
+        "engine: {} jobs, compile cache {} hits / {} lookups",
+        engine.jobs(),
+        cache.hits,
+        cache.lookups()
+    );
     let best_cycles = trace.best_cycles().expect("found a valid schedule");
     let best = trace
         .trials

@@ -26,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     let hw = VtaConfig::zcu102();
     let sim = Simulator::new(hw.clone());
     let compiler = Compiler::new(hw.clone());
+    // one parallel engine for the whole network: profiling fans out over
+    // all cores and compiled kernels are cached across layers/tuners
+    let engine = Engine::default();
     let mut rt = Runtime::open_default()?;
     println!("== ResNet18 end-to-end tuning + deployment on simulated \
               extended VTA ==\n");
@@ -59,9 +62,9 @@ fn main() -> anyhow::Result<()> {
         // tune
         let cfg = TunerConfig { max_trials: 200, seed: 42,
                                 ..Default::default() };
-        let trace = Ml2Tuner::new(cfg.clone()).tune(&env);
+        let trace = Ml2Tuner::new(cfg.clone()).tune_with(&env, &engine);
         let tvm_trace =
-            TvmTuner::new(cfg.with_trials(500)).tune(&env);
+            TvmTuner::new(cfg.with_trials(500)).tune_with(&env, &engine);
         let best_cycles = trace.best_cycles().expect("valid config");
         let best = trace
             .trials
@@ -125,6 +128,14 @@ fn main() -> anyhow::Result<()> {
         mean(&effs),
         mean(&invals)
     );
-    println!("wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    let cache = engine.cache().stats();
+    println!(
+        "wall time: {:.1}s ({} jobs, compile cache {:.1}% hit rate over \
+         {} lookups)",
+        t0.elapsed().as_secs_f64(),
+        engine.jobs(),
+        cache.hit_rate() * 100.0,
+        cache.lookups()
+    );
     Ok(())
 }

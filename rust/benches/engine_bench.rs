@@ -1,0 +1,54 @@
+//! Engine benchmarks: batched profiling throughput vs worker count
+//! (cold compile cache — measures the compile+simulate hot path actually
+//! scaling with cores) and the compile-cache hit speedup (warm cache —
+//! what the ML²Tuner A-stage pays when profiling its re-ranked pool).
+use ml2tuner::engine::Engine;
+use ml2tuner::tuner::TuningEnv;
+use ml2tuner::util::bench::Bench;
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::resnet18;
+
+fn main() {
+    let mut b = Bench::with_budget(2.0);
+    let env = TuningEnv::new(VtaConfig::zcu102(),
+                             resnet18::layer("conv5").unwrap());
+    // a spread of 64 schedules across the space (one pool's worth of
+    // A-stage compiles is ~20; 64 gives the pool workers something to
+    // chew on without the batch being trivially short)
+    let stride = (env.space.len() / 64).max(1);
+    let batch: Vec<usize> =
+        (0..env.space.len()).step_by(stride).take(64).collect();
+
+    for jobs in [1usize, 2, 4] {
+        b.run_items(
+            &format!("profile_batch {} cfgs, cold cache, jobs={jobs}",
+                     batch.len()),
+            batch.len() as f64,
+            || {
+                // fresh engine per iteration: every compile is a miss
+                Engine::with_jobs(jobs).profile_batch(&env, &batch)
+            },
+        );
+    }
+
+    // warm cache: the batch was already compiled (A-stage reuse), so
+    // profiling is check()-only — the speedup vs cold/jobs=1 is what the
+    // cache saves per round
+    let warm = Engine::with_jobs(1);
+    warm.profile_batch(&env, &batch);
+    b.run_items(
+        &format!("profile_batch {} cfgs, warm cache, jobs=1", batch.len()),
+        batch.len() as f64,
+        || warm.profile_batch(&env, &batch),
+    );
+    let stats = warm.cache().stats();
+    println!(
+        "warm-cache stats: {} hits / {} lookups ({:.1}% hit rate, {} \
+         compiles total)",
+        stats.hits,
+        stats.lookups(),
+        stats.hit_rate() * 100.0,
+        stats.misses
+    );
+    print!("{}", b.summary());
+}

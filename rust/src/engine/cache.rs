@@ -1,0 +1,298 @@
+//! Compile cache — memoizes `(layer, schedule) → compiled kernel + hidden
+//! features`.
+//!
+//! The ML²Tuner loop compiles every pool candidate for hidden-feature
+//! extraction and then compiled the `N` winners *again* when profiling
+//! them (paper §2: the `(α+1)·N` pool feeds model A, the re-ranked top-N
+//! go to the board). Compilation is deterministic, so the second compile
+//! is pure waste; the cache eliminates it and keeps paying off across
+//! rounds (the explorer re-proposes near-frontier schedules) and across a
+//! whole-network tuning run.
+//!
+//! Thread-safe: lookups take a [`Mutex`]-guarded map, compilation happens
+//! *outside* the lock so [`super::executor::Engine`] workers never
+//! serialize on each other's compiles. Two workers racing on the same key
+//! may both compile; the map keeps one canonical entry (compilation is
+//! deterministic, so both are identical) and results never depend on the
+//! race.
+//!
+//! Memory: a cached entry holds the full instruction stream, and
+//! degenerate schedules (1×1 tiles) lower to very large programs — the
+//! cache is therefore bounded both by entry count and by total cached
+//! instructions. When a bound is hit the *oldest* entries are evicted
+//! (FIFO), so the current round's pool — the reuse that kills the
+//! A-stage double compilation — always stays hot, even in long
+//! shared-engine runs. Results are identical cached or not; only reuse
+//! is affected.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compiler::schedule::Schedule;
+use crate::compiler::{Compiled, Compiler};
+use crate::workloads::ConvLayer;
+
+/// One cached compilation: the lowered kernel and its hidden features
+/// (model A's extra inputs), extracted once.
+#[derive(Clone, Debug)]
+pub struct CachedCompile {
+    pub compiled: Compiled,
+    pub hidden: Vec<f64>,
+}
+
+impl CachedCompile {
+    /// Memory-footprint proxy: instructions + micro-ops held.
+    fn cost(&self) -> usize {
+        self.compiled.program.instrs.len()
+            + self.compiled.program.uops.len()
+    }
+}
+
+/// Cache hit/miss counters (a *miss* is an actual compilation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+type Key = (&'static str, Schedule);
+
+struct Inner {
+    map: HashMap<Key, Arc<CachedCompile>>,
+    /// Insertion order, oldest first (FIFO eviction).
+    order: VecDeque<Key>,
+    total_cost: usize,
+}
+
+/// Thread-safe, bounded compile cache keyed by `(layer name, schedule)`.
+///
+/// Layer names are the `&'static str` identifiers of
+/// [`crate::workloads::resnet18::LAYERS`]; keying by name (not shape)
+/// keeps entries unambiguous if two layers ever shared a shape but
+/// diverged in future compile options.
+pub struct CompileCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Entry-count bound.
+    max_entries: usize,
+    /// Total cached instructions+uops bound (memory proxy).
+    max_total_cost: usize,
+}
+
+/// Default entry bound: a full tuning run touches a few thousand
+/// schedules at most.
+pub const DEFAULT_MAX_ENTRIES: usize = 4096;
+
+/// Default instruction budget (≈ a couple hundred MB worst case).
+pub const DEFAULT_MAX_TOTAL_COST: usize = 1 << 21;
+
+impl Default for CompileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_MAX_ENTRIES, DEFAULT_MAX_TOTAL_COST)
+    }
+
+    /// Cache bounded to `max_entries` compilations and `max_total_cost`
+    /// cached instructions+uops (oldest entries evicted at the bounds).
+    /// `max_total_cost = 0` disables caching entirely (every lookup
+    /// compiles, nothing is retained) — useful for one-shot sweeps that
+    /// never re-profile a schedule.
+    pub fn with_capacity(max_entries: usize, max_total_cost: usize) -> Self {
+        CompileCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                total_cost: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            max_entries: max_entries.max(1),
+            max_total_cost,
+        }
+    }
+
+    /// Cached compilations currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop all entries (counters are kept; they describe the lifetime of
+    /// the cache, not its current contents).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.order.clear();
+        inner.total_cost = 0;
+    }
+
+    /// Look up `(layer, sched)`; compile on a miss and memoize, evicting
+    /// the oldest entries if a bound is hit.
+    pub fn get_or_compile(
+        &self,
+        compiler: &Compiler,
+        layer: &ConvLayer,
+        sched: Schedule,
+    ) -> Arc<CachedCompile> {
+        let key = (layer.name, sched);
+        if let Some(hit) = self.inner.lock().unwrap().map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compile outside the lock: other workers keep hitting the cache
+        // while this (comparatively expensive) lowering runs.
+        let compiled = compiler.compile(layer, &sched);
+        let hidden = compiler.hidden_features(&compiled);
+        let entry = Arc::new(CachedCompile { compiled, hidden });
+        let cost = entry.cost();
+        if cost > self.max_total_cost {
+            return entry; // would never fit: don't thrash the cache
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(existing) = inner.map.get(&key) {
+            // lost a same-key race: keep the canonical entry
+            return Arc::clone(existing);
+        }
+        // evict oldest-first until the new entry fits
+        while inner.map.len() >= self.max_entries
+            || inner.total_cost + cost > self.max_total_cost
+        {
+            let Some(old) = inner.order.pop_front() else { break };
+            if let Some(e) = inner.map.remove(&old) {
+                inner.total_cost -= e.cost();
+            }
+        }
+        inner.total_cost += cost;
+        inner.order.push_back(key);
+        inner.map.insert(key, Arc::clone(&entry));
+        entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    fn setup() -> (Compiler, ConvLayer, Schedule) {
+        let layer = resnet18::layer("conv5").unwrap();
+        let sched = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 2 };
+        (Compiler::new(VtaConfig::zcu102()), layer, sched)
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let (compiler, layer, sched) = setup();
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&compiler, &layer, sched);
+        let b = cache.get_or_compile(&compiler, &layer, sched);
+        assert_eq!(a.compiled.program, b.compiled.program);
+        assert_eq!(a.hidden, b.hidden);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_schedules_are_distinct_entries() {
+        let (compiler, layer, sched) = setup();
+        let other = Schedule { tile_h: 7, ..sched };
+        let cache = CompileCache::new();
+        cache.get_or_compile(&compiler, &layer, sched);
+        cache.get_or_compile(&compiler, &layer, other);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn same_schedule_different_layer_is_a_miss() {
+        let (compiler, layer, sched) = setup();
+        let conv4 = resnet18::layer("conv4").unwrap();
+        let cache = CompileCache::new();
+        cache.get_or_compile(&compiler, &layer, sched);
+        cache.get_or_compile(&compiler, &conv4, sched);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn entry_bound_evicts_oldest() {
+        let (compiler, layer, sched) = setup();
+        let cache = CompileCache::with_capacity(1, usize::MAX);
+        cache.get_or_compile(&compiler, &layer, sched);
+        let other = Schedule { tile_h: 7, ..sched };
+        cache.get_or_compile(&compiler, &layer, other); // evicts `sched`
+        assert_eq!(cache.len(), 1, "bound respected");
+        // the newest entry stays hot ...
+        cache.get_or_compile(&compiler, &layer, other);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        // ... while the evicted one misses again
+        cache.get_or_compile(&compiler, &layer, sched);
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn zero_cost_budget_disables_caching() {
+        let (compiler, layer, sched) = setup();
+        let cache = CompileCache::with_capacity(8, 0);
+        cache.get_or_compile(&compiler, &layer, sched);
+        cache.get_or_compile(&compiler, &layer, sched);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2 });
+    }
+
+    #[test]
+    fn clear_resets_cost_accounting() {
+        let (compiler, layer, sched) = setup();
+        let cache = CompileCache::with_capacity(8, usize::MAX);
+        let a = cache.get_or_compile(&compiler, &layer, sched);
+        cache.clear();
+        assert!(cache.is_empty());
+        // re-inserting after clear works (cost budget was released)
+        let b = cache.get_or_compile(&compiler, &layer, sched);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(a.compiled.program, b.compiled.program);
+    }
+
+    #[test]
+    fn matches_direct_compilation() {
+        let (compiler, layer, sched) = setup();
+        let cache = CompileCache::new();
+        let cached = cache.get_or_compile(&compiler, &layer, sched);
+        let direct = compiler.compile(&layer, &sched);
+        assert_eq!(cached.compiled.program, direct.program);
+        assert_eq!(cached.hidden, compiler.hidden_features(&direct));
+    }
+}

@@ -1,0 +1,281 @@
+//! Batch profiling executor — fans compile+simulate work across a scoped
+//! worker pool while keeping per-seed determinism.
+//!
+//! Workers pull batch positions from a shared atomic cursor and write
+//! results into per-position slots, so the collected vector is always in
+//! batch order: a run with `jobs = 8` produces the byte-identical tuning
+//! trace of a run with `jobs = 1` (enforced by `tests/engine.rs`). All
+//! candidate selection and model training stay on the caller's thread —
+//! only the embarrassingly parallel compile+check hot path fans out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::cache::{
+    CachedCompile, CompileCache, DEFAULT_MAX_ENTRIES,
+    DEFAULT_MAX_TOTAL_COST,
+};
+use crate::tuner::database::{Database, TrialRecord};
+use crate::tuner::report::TuningTrace;
+use crate::tuner::space::SearchSpace;
+use crate::tuner::{outcome_of, TuningEnv};
+
+/// Worker count when `--jobs` is not given: all available cores.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Executor knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads for batched compile/profile work (≥ 1).
+    pub jobs: usize,
+    /// Compile-cache entry bound (see [`CompileCache::with_capacity`]).
+    pub max_cache_entries: usize,
+    /// Compile-cache instruction budget; 0 disables caching (for
+    /// one-shot sweeps that never re-profile a schedule).
+    pub max_cache_cost: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            jobs: default_jobs(),
+            max_cache_entries: DEFAULT_MAX_ENTRIES,
+            max_cache_cost: DEFAULT_MAX_TOTAL_COST,
+        }
+    }
+}
+
+/// The parallel tuning engine: a worker-pool batch executor plus the
+/// compile cache shared by every batch it runs.
+///
+/// One `Engine` is meant to live for a whole tuning run (or a whole
+/// network-level run — see [`super::scheduler`]), so compilations paid
+/// during hidden-feature extraction are never repaid at profiling time or
+/// in later rounds.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    cache: CompileCache,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new(EngineConfig::default())
+    }
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let cache = CompileCache::with_capacity(cfg.max_cache_entries,
+                                                cfg.max_cache_cost);
+        Engine { cfg, cache }
+    }
+
+    /// Engine with `jobs` workers and default cache sizing.
+    pub fn with_jobs(jobs: usize) -> Self {
+        Engine::new(EngineConfig {
+            jobs: jobs.max(1),
+            ..EngineConfig::default()
+        })
+    }
+
+    /// Sequential engine (no worker threads; still caches compiles).
+    pub fn single_threaded() -> Self {
+        Engine::with_jobs(1)
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.cfg.jobs.max(1)
+    }
+
+    pub fn cache(&self) -> &CompileCache {
+        &self.cache
+    }
+
+    /// Compile one space index through the cache.
+    pub fn compile_one(
+        &self,
+        env: &TuningEnv,
+        space_index: usize,
+    ) -> Arc<CachedCompile> {
+        let sched = env.space.schedule(space_index);
+        self.cache.get_or_compile(&env.compiler, &env.layer, sched)
+    }
+
+    /// "Run on hardware" through the cache: compile (or reuse), simulate,
+    /// classify. Equivalent to [`TuningEnv::profile`] record-for-record.
+    pub fn profile_one(
+        &self,
+        env: &TuningEnv,
+        space_index: usize,
+    ) -> TrialRecord {
+        let sched = env.space.schedule(space_index);
+        let cached =
+            self.cache.get_or_compile(&env.compiler, &env.layer, sched);
+        let outcome =
+            outcome_of(&env.simulator.check(&cached.compiled.program));
+        TrialRecord {
+            space_index,
+            schedule: sched,
+            visible: sched.visible_features(),
+            hidden: cached.hidden.clone(),
+            outcome,
+        }
+    }
+
+    /// Profile a candidate batch across the worker pool. Results come back
+    /// ordered by batch position regardless of worker count.
+    pub fn profile_batch(
+        &self,
+        env: &TuningEnv,
+        batch: &[usize],
+    ) -> Vec<TrialRecord> {
+        par_map(self.jobs(), batch.len(), |k| {
+            self.profile_one(env, batch[k])
+        })
+    }
+
+    /// Profile `batch` and do the record bookkeeping every tuning loop
+    /// shares: mark each index measured, append the record to the
+    /// database (when one is kept) and to the trace, in batch order.
+    pub fn profile_into(
+        &self,
+        env: &TuningEnv,
+        batch: &[usize],
+        space: &mut SearchSpace,
+        mut db: Option<&mut Database>,
+        trace: &mut TuningTrace,
+    ) {
+        for rec in self.profile_batch(env, batch) {
+            space.mark_measured(rec.space_index);
+            if let Some(d) = &mut db {
+                d.push(rec.clone());
+            }
+            trace.trials.push(rec);
+        }
+    }
+
+    /// Compile a candidate batch (hidden-feature extraction for the
+    /// ML²Tuner A-stage) across the worker pool, in batch order.
+    pub fn compile_batch(
+        &self,
+        env: &TuningEnv,
+        batch: &[usize],
+    ) -> Vec<Arc<CachedCompile>> {
+        par_map(self.jobs(), batch.len(), |k| {
+            self.compile_one(env, batch[k])
+        })
+    }
+}
+
+/// Order-preserving parallel map over `0..n` on `jobs` scoped threads.
+///
+/// Work is distributed dynamically (atomic cursor), results land in
+/// per-index slots — output order equals input order by construction, so
+/// callers see deterministic results for any worker count. Falls back to
+/// a plain sequential map when a pool cannot help (`jobs ≤ 1` or `n ≤ 1`).
+pub(crate) fn par_map<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let workers = jobs.min(n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner().unwrap().expect("worker filled every slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::config::VtaConfig;
+    use crate::workloads::resnet18;
+
+    fn env() -> TuningEnv {
+        TuningEnv::new(VtaConfig::zcu102(),
+                       resnet18::layer("conv5").unwrap())
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        for jobs in [1, 2, 4, 9] {
+            let out = par_map(jobs, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn profile_batch_matches_sequential_profile() {
+        let e = env();
+        let batch: Vec<usize> = (0..24).map(|i| i * 31).collect();
+        let engine = Engine::with_jobs(4);
+        let par = engine.profile_batch(&e, &batch);
+        assert_eq!(par.len(), batch.len());
+        for (k, rec) in par.iter().enumerate() {
+            let seq = e.profile(batch[k]);
+            assert_eq!(rec.space_index, seq.space_index);
+            assert_eq!(rec.schedule, seq.schedule);
+            assert_eq!(rec.outcome, seq.outcome);
+            assert_eq!(rec.hidden, seq.hidden);
+            assert_eq!(rec.visible, seq.visible);
+        }
+    }
+
+    #[test]
+    fn profiling_a_compiled_batch_never_recompiles() {
+        let e = env();
+        let batch: Vec<usize> = (0..16).collect();
+        // unbounded cache so the miss accounting is exact
+        let engine = Engine::new(EngineConfig {
+            jobs: 2,
+            max_cache_entries: usize::MAX,
+            max_cache_cost: usize::MAX,
+        });
+        engine.compile_batch(&e, &batch);
+        let misses_after_compile = engine.cache().stats().misses;
+        assert_eq!(misses_after_compile, batch.len() as u64);
+        engine.profile_batch(&e, &batch);
+        let stats = engine.cache().stats();
+        assert_eq!(stats.misses, misses_after_compile,
+                   "profiling recompiled a pooled candidate");
+        assert!(stats.hits >= batch.len() as u64);
+    }
+
+    #[test]
+    fn engine_types_are_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Engine>();
+        check::<CompileCache>();
+        check::<TuningEnv>();
+        check::<crate::compiler::Compiler>();
+        check::<crate::vta::Simulator>();
+    }
+}

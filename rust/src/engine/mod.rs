@@ -1,0 +1,40 @@
+//! Parallel tuning engine: batched profiling executor, compile cache,
+//! and network-level tuning scheduler.
+//!
+//! The paper's loop profiles `N` configurations per round and compiles
+//! the whole `(α+1)·N` candidate pool for hidden-feature extraction —
+//! work that is embarrassingly parallel and, in the seed implementation,
+//! ran strictly sequentially and compiled every profiled candidate twice.
+//! This subsystem makes the compile+simulate hot path scale with cores
+//! while leaving every trace byte-identical to a sequential run:
+//!
+//! * [`executor`] — [`Engine`]: a `std::thread`-scoped worker pool that
+//!   fans a candidate batch out (`--jobs` workers, default all cores) and
+//!   collects results in batch order, so worker count never changes a
+//!   tuning trace.
+//! * [`cache`] — [`CompileCache`]: memoizes `(layer, schedule) →
+//!   compiled kernel + hidden features`, shared across rounds; the
+//!   ML²Tuner A-stage pool compile is reused when the re-ranked winners
+//!   are profiled (no double compilation).
+//! * [`scheduler`] — [`NetworkTuner`]: tunes all layers of a network
+//!   under one global trial budget with a round-robin warmup + UCB1
+//!   budget allocator, one tuning database per layer, and a
+//!   network-level report (total cycles, per-layer best schedules).
+//!
+//! Thread-safety audit: [`crate::compiler::Compiler`] and
+//! [`crate::vta::Simulator`] are plain-data facades over the hardware
+//! config with no interior mutability, and
+//! `Simulator::check` takes `&self` — both are `Send + Sync` (asserted
+//! at compile time in `executor`'s tests), which is what lets one
+//! [`crate::tuner::TuningEnv`] be shared by every worker.
+
+pub mod cache;
+pub mod executor;
+pub mod scheduler;
+
+pub use cache::{CacheStats, CachedCompile, CompileCache};
+pub use executor::{default_jobs, Engine, EngineConfig};
+pub use scheduler::{
+    LayerResult, LayerSession, NetworkConfig, NetworkOutcome,
+    NetworkReport, NetworkTuner, TunerKind,
+};

@@ -1,0 +1,572 @@
+//! Network-level tuning scheduler — tunes a whole model (the paper tunes
+//! layers one at a time) under one global trial budget.
+//!
+//! A [`LayerSession`] holds the incremental tuning state of one layer
+//! (search space mask, profiling database, trace, RNG stream) and can be
+//! advanced one round at a time. The [`NetworkTuner`] owns one session per
+//! layer and allocates the global budget with a round-robin warmup
+//! followed by a UCB1-style bandit: each layer's observed reward is its
+//! relative best-cycles improvement per granted round, so the budget
+//! flows to the layers still making progress (cf. the whole-network
+//! tuning workflows of the TPU learned-cost-model and MetaTune lines in
+//! PAPERS.md).
+//!
+//! Everything here is deterministic for a fixed seed and independent of
+//! the engine's worker count: allocation decisions use only profiled
+//! outcomes, which the executor returns in batch order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::executor::Engine;
+use crate::compiler::schedule::Schedule;
+use crate::tuner::database::Database;
+use crate::tuner::report::TuningTrace;
+use crate::tuner::space::SearchSpace;
+use crate::tuner::{ml2tuner, salt, tvm_baseline, TunerConfig, TuningEnv};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::vta::config::VtaConfig;
+use crate::workloads::ConvLayer;
+
+/// Which tuning policy a session runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerKind {
+    Ml2,
+    Tvm,
+    Random,
+}
+
+impl TunerKind {
+    pub fn parse(name: &str) -> Option<TunerKind> {
+        match name {
+            "ml2tuner" | "ml2" => Some(TunerKind::Ml2),
+            "tvm" => Some(TunerKind::Tvm),
+            "random" => Some(TunerKind::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunerKind::Ml2 => "ml2tuner",
+            TunerKind::Tvm => "tvm",
+            TunerKind::Random => "random",
+        }
+    }
+
+    /// Per-policy RNG salt — the same constants the standalone tuners
+    /// use, so a session replays the stream the corresponding `Tuner`
+    /// would.
+    fn rng_salt(&self) -> u64 {
+        match self {
+            TunerKind::Ml2 => salt::ML2,
+            TunerKind::Tvm => salt::TVM,
+            TunerKind::Random => salt::RANDOM,
+        }
+    }
+}
+
+/// Incremental tuning state for one layer: the scheduler advances it one
+/// round at a time instead of running a whole budget in one call.
+pub struct LayerSession {
+    pub env: TuningEnv,
+    pub cfg: TunerConfig,
+    kind: TunerKind,
+    space: SearchSpace,
+    db: Database,
+    pub trace: TuningTrace,
+    rng: Rng,
+    round: u64,
+}
+
+impl LayerSession {
+    pub fn new(kind: TunerKind, cfg: TunerConfig, env: TuningEnv) -> Self {
+        let rng = Rng::new(cfg.seed ^ kind.rng_salt());
+        let space = env.space.clone();
+        let db = Database::new(env.layer.name);
+        let trace = TuningTrace::new(env.layer.name, kind.name());
+        LayerSession { env, cfg, kind, space, db, trace, rng, round: 0 }
+    }
+
+    pub fn layer_name(&self) -> &'static str {
+        self.env.layer.name
+    }
+
+    pub fn trials(&self) -> usize {
+        self.trace.len()
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    pub fn best_cycles(&self) -> Option<u64> {
+        self.trace.best_cycles()
+    }
+
+    /// Schedule of the best valid trial so far.
+    pub fn best_schedule(&self) -> Option<Schedule> {
+        let best = self.trace.best_cycles()?;
+        self.trace
+            .trials
+            .iter()
+            .find(|t| t.outcome.cycles() == Some(best))
+            .map(|t| t.schedule)
+    }
+
+    /// Whole search space measured — nothing left to profile.
+    pub fn exhausted(&self) -> bool {
+        self.space.n_unmeasured() == 0
+    }
+
+    pub fn database(&self) -> &Database {
+        &self.db
+    }
+
+    /// Profile at most `n` trials through the engine (never beyond the
+    /// session's own `cfg.max_trials`); returns the number actually
+    /// profiled.
+    ///
+    /// A grant larger than the policy's `n_per_round` is split into
+    /// `n_per_round`-sized tuning rounds (models retrained between
+    /// them), so a generous scheduler grant keeps the standalone loop
+    /// structure — in particular the ML²Tuner `(α+1)·N` A-stage, which
+    /// would be silently skipped if `n` exceeded the pool size.
+    pub fn step(&mut self, engine: &Engine, n: usize) -> usize {
+        let mut done = 0usize;
+        while done < n
+            && self.trials() < self.cfg.max_trials
+            && !self.exhausted()
+        {
+            let take = (n - done)
+                .min(self.cfg.n_per_round)
+                .min(self.cfg.max_trials - self.trials())
+                .min(self.space.n_unmeasured());
+            self.round += 1;
+            let batch: Vec<usize> = match self.kind {
+                TunerKind::Random => {
+                    self.space.sample_unmeasured(&mut self.rng, take)
+                }
+                TunerKind::Tvm => tvm_baseline::select_batch(
+                    &self.cfg, &self.space, &self.db, &mut self.rng,
+                    self.round, take,
+                ),
+                TunerKind::Ml2 => ml2tuner::select_batch(
+                    &self.cfg, true, true, &self.env, engine,
+                    &self.space, &self.db, &mut self.rng, self.round,
+                    take,
+                ),
+            };
+            if batch.is_empty() {
+                break;
+            }
+            done += batch.len();
+            engine.profile_into(&self.env, &batch, &mut self.space,
+                                Some(&mut self.db), &mut self.trace);
+        }
+        done
+    }
+
+    /// Tear down into the artifacts the scheduler reports/persists.
+    pub fn finish(self) -> (TuningTrace, Database) {
+        (self.trace, self.db)
+    }
+}
+
+/// Network-run knobs.
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub vta: VtaConfig,
+    pub tuner: TunerKind,
+    /// Per-layer loop hyper-parameters; `seed` is the global seed (each
+    /// layer derives an independent stream from it).
+    pub base: TunerConfig,
+    /// Global profiling budget shared by all layers.
+    pub total_trials: usize,
+    /// Trials granted per scheduler decision (one tuning round).
+    pub round_trials: usize,
+    /// UCB exploration constant (0 = purely greedy on observed reward).
+    pub ucb_c: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            vta: VtaConfig::zcu102(),
+            tuner: TunerKind::Ml2,
+            base: TunerConfig::default(),
+            total_trials: 1000,
+            round_trials: TunerConfig::default().n_per_round,
+            ucb_c: 0.5,
+        }
+    }
+}
+
+/// Per-layer summary of a network run.
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    pub layer: &'static str,
+    pub trials: usize,
+    pub rounds: u64,
+    pub invalidity: f64,
+    pub best_cycles: Option<u64>,
+    pub best_schedule: Option<Schedule>,
+}
+
+/// Network-level tuning report: per-layer winners plus whole-network
+/// totals.
+#[derive(Clone, Debug)]
+pub struct NetworkReport {
+    pub tuner: &'static str,
+    pub total_trials: usize,
+    pub layers: Vec<LayerResult>,
+}
+
+impl NetworkReport {
+    /// Layers that found at least one valid schedule.
+    pub fn tuned_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.best_cycles.is_some()).count()
+    }
+
+    /// Whole-network cycles (sum of per-layer bests); `None` until every
+    /// layer has a valid schedule.
+    pub fn total_cycles(&self) -> Option<u64> {
+        self.layers
+            .iter()
+            .map(|l| l.best_cycles)
+            .sum::<Option<u64>>()
+    }
+
+    /// Printable report table + totals.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "layer", "trials", "rounds", "invalidity", "best cycles",
+            "best schedule",
+        ]);
+        for l in &self.layers {
+            t.row(&[
+                l.layer.to_string(),
+                l.trials.to_string(),
+                l.rounds.to_string(),
+                format!("{:.3}", l.invalidity),
+                l.best_cycles
+                    .map(|c| c.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                l.best_schedule
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        let total = match self.total_cycles() {
+            Some(c) => format!("{c} cycles"),
+            None => "incomplete (some layer has no valid schedule)".into(),
+        };
+        format!(
+            "== network tuning report ({}) ==\n{}\nlayers tuned: {}/{}   \
+             trials: {}   network total: {}\n",
+            self.tuner,
+            t.render(),
+            self.tuned_layers(),
+            self.layers.len(),
+            self.total_trials,
+            total
+        )
+    }
+}
+
+/// Everything a network run produces: the report plus the per-layer
+/// traces and databases (one tuning log per layer, TVM-style).
+pub struct NetworkOutcome {
+    pub report: NetworkReport,
+    pub traces: Vec<TuningTrace>,
+    pub databases: Vec<Database>,
+}
+
+impl NetworkOutcome {
+    /// Persist one database per layer as `<dir>/<layer>.json`; returns
+    /// the written paths.
+    pub fn save_databases(&self, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        let mut paths = Vec::with_capacity(self.databases.len());
+        for db in &self.databases {
+            let path = dir.join(format!("{}.json", db.layer));
+            db.save(&path)?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+}
+
+/// The budget allocator. See the module docs for the policy.
+pub struct NetworkTuner {
+    pub cfg: NetworkConfig,
+}
+
+impl NetworkTuner {
+    pub fn new(cfg: NetworkConfig) -> Self {
+        NetworkTuner { cfg }
+    }
+
+    /// Tune `layers` under the global budget, fanning all profiling work
+    /// through `engine`.
+    pub fn tune(&self, engine: &Engine, layers: &[ConvLayer]) -> NetworkOutcome {
+        let cfg = &self.cfg;
+        let mut sessions: Vec<LayerSession> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, layer)| {
+                let per_layer = TunerConfig {
+                    // independent per-layer stream off the global seed
+                    seed: cfg.base.seed ^ ((i as u64 + 1) << 32),
+                    max_trials: cfg.total_trials,
+                    ..cfg.base.clone()
+                };
+                LayerSession::new(
+                    cfg.tuner,
+                    per_layer,
+                    TuningEnv::new(cfg.vta.clone(), *layer),
+                )
+            })
+            .collect();
+        let n = sessions.len();
+        let mut rounds = vec![0u64; n];
+        let mut reward_sum = vec![0f64; n];
+        let mut prev_best: Vec<Option<u64>> = vec![None; n];
+        let mut alive = vec![true; n];
+        let mut spent = 0usize;
+        let mut total_rounds = 0u64;
+        while spent < cfg.total_trials && alive.iter().any(|&a| a) {
+            let pick = match self.pick(&alive, &rounds, &reward_sum,
+                                       total_rounds)
+            {
+                Some(i) => i,
+                None => break,
+            };
+            let grant =
+                cfg.round_trials.max(1).min(cfg.total_trials - spent);
+            let done = sessions[pick].step(engine, grant);
+            total_rounds += 1;
+            rounds[pick] += 1;
+            if done == 0 {
+                alive[pick] = false;
+                continue;
+            }
+            spent += done;
+            let now = sessions[pick].best_cycles();
+            reward_sum[pick] += match (prev_best[pick], now) {
+                // relative improvement of the layer's best this round
+                (Some(b0), Some(b1)) if b1 < b0 => {
+                    1.0 - b1 as f64 / b0 as f64
+                }
+                // first valid schedule found: maximal reward
+                (None, Some(_)) => 1.0,
+                _ => 0.0,
+            };
+            prev_best[pick] = now;
+            if sessions[pick].exhausted() {
+                alive[pick] = false;
+            }
+        }
+        self.collect(sessions, spent)
+    }
+
+    /// Round-robin until every live layer has one round, then UCB1 on the
+    /// mean per-round improvement. Ties go to the lowest layer index, so
+    /// allocation is fully deterministic.
+    fn pick(
+        &self,
+        alive: &[bool],
+        rounds: &[u64],
+        reward_sum: &[f64],
+        total_rounds: u64,
+    ) -> Option<usize> {
+        if let Some(i) =
+            (0..alive.len()).find(|&i| alive[i] && rounds[i] == 0)
+        {
+            return Some(i);
+        }
+        let t = (total_rounds.max(1)) as f64;
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..alive.len() {
+            if !alive[i] {
+                continue;
+            }
+            let ri = rounds[i] as f64;
+            let score = reward_sum[i] / ri
+                + self.cfg.ucb_c * (t.ln().max(0.0) / ri).sqrt();
+            if best.map_or(true, |(s, _)| score > s + 1e-12) {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    fn collect(
+        &self,
+        sessions: Vec<LayerSession>,
+        spent: usize,
+    ) -> NetworkOutcome {
+        let mut layers = Vec::with_capacity(sessions.len());
+        let mut traces = Vec::with_capacity(sessions.len());
+        let mut databases = Vec::with_capacity(sessions.len());
+        for s in sessions.into_iter() {
+            layers.push(LayerResult {
+                layer: s.layer_name(),
+                trials: s.trials(),
+                // actual tuning rounds run (a large scheduler grant is
+                // split into n_per_round-sized rounds by the session)
+                rounds: s.rounds(),
+                invalidity: s.trace.invalidity_ratio(),
+                best_cycles: s.best_cycles(),
+                best_schedule: s.best_schedule(),
+            });
+            let (trace, db) = s.finish();
+            traces.push(trace);
+            databases.push(db);
+        }
+        NetworkOutcome {
+            report: NetworkReport {
+                tuner: self.cfg.tuner.name(),
+                total_trials: spent,
+                layers,
+            },
+            traces,
+            databases,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    fn two_layer_cfg(kind: TunerKind, trials: usize) -> NetworkConfig {
+        NetworkConfig {
+            tuner: kind,
+            total_trials: trials,
+            round_trials: 10,
+            base: TunerConfig { seed: 5, ..TunerConfig::default() },
+            ..NetworkConfig::default()
+        }
+    }
+
+    fn layers() -> Vec<ConvLayer> {
+        vec![
+            resnet18::layer("conv1").unwrap(),
+            resnet18::layer("conv5").unwrap(),
+        ]
+    }
+
+    #[test]
+    fn budget_is_spent_and_split() {
+        let engine = Engine::with_jobs(2);
+        let out = NetworkTuner::new(two_layer_cfg(TunerKind::Random, 60))
+            .tune(&engine, &layers());
+        assert_eq!(out.report.total_trials, 60);
+        let per_layer: usize =
+            out.report.layers.iter().map(|l| l.trials).sum();
+        assert_eq!(per_layer, 60);
+        // warmup guarantees every layer at least one round
+        assert!(out.report.layers.iter().all(|l| l.rounds >= 1));
+        assert_eq!(out.traces.len(), 2);
+        assert_eq!(out.databases.len(), 2);
+        for (t, d) in out.traces.iter().zip(&out.databases) {
+            assert_eq!(t.len(), d.len());
+        }
+    }
+
+    /// A session stepped with per-round grants replays the standalone
+    /// tuner exactly (same rng salt + call sequence).
+    fn assert_session_matches_standalone(
+        kind: TunerKind,
+        standalone: &crate::tuner::report::TuningTrace,
+        trials: usize,
+        cfg: TunerConfig,
+    ) {
+        let layer = resnet18::layer("conv5").unwrap();
+        let engine = Engine::single_threaded();
+        let mut session = LayerSession::new(
+            kind,
+            cfg,
+            TuningEnv::new(VtaConfig::zcu102(), layer),
+        );
+        while session.trials() < trials {
+            assert!(session.step(&engine, 10) > 0);
+        }
+        let a: Vec<usize> = session
+            .trace
+            .trials
+            .iter()
+            .map(|t| t.space_index)
+            .collect();
+        let b: Vec<usize> =
+            standalone.trials.iter().map(|t| t.space_index).collect();
+        assert_eq!(a, b, "{} session diverged from standalone tuner",
+                   kind.name());
+    }
+
+    #[test]
+    fn random_session_matches_standalone_tuner_stream() {
+        use crate::tuner::random_baseline::RandomTuner;
+        use crate::tuner::Tuner;
+        let layer = resnet18::layer("conv5").unwrap();
+        let cfg = TunerConfig { max_trials: 30, seed: 9,
+                                ..TunerConfig::default() };
+        let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+        let standalone = RandomTuner::new(cfg.clone()).tune(&env);
+        assert_session_matches_standalone(TunerKind::Random, &standalone,
+                                          30, cfg);
+    }
+
+    #[test]
+    fn ml2_session_matches_standalone_tuner_stream() {
+        // 40 trials crosses min_train, so model-guided rounds (incl. the
+        // A-stage) are exercised, not just the random warmup
+        use crate::tuner::ml2tuner::Ml2Tuner;
+        use crate::tuner::Tuner;
+        let layer = resnet18::layer("conv5").unwrap();
+        let cfg = TunerConfig { max_trials: 40, seed: 9,
+                                ..TunerConfig::default() };
+        let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+        let standalone = Ml2Tuner::new(cfg.clone()).tune(&env);
+        assert_session_matches_standalone(TunerKind::Ml2, &standalone,
+                                          40, cfg);
+    }
+
+    #[test]
+    fn report_totals() {
+        let r = NetworkReport {
+            tuner: "ml2tuner",
+            total_trials: 40,
+            layers: vec![
+                LayerResult {
+                    layer: "conv1",
+                    trials: 20,
+                    rounds: 2,
+                    invalidity: 0.5,
+                    best_cycles: Some(100),
+                    best_schedule: None,
+                },
+                LayerResult {
+                    layer: "conv2",
+                    trials: 20,
+                    rounds: 2,
+                    invalidity: 0.5,
+                    best_cycles: Some(250),
+                    best_schedule: None,
+                },
+            ],
+        };
+        assert_eq!(r.total_cycles(), Some(350));
+        assert_eq!(r.tuned_layers(), 2);
+        let mut incomplete = r.clone();
+        incomplete.layers[1].best_cycles = None;
+        assert_eq!(incomplete.total_cycles(), None);
+        assert!(incomplete.render().contains("incomplete"));
+    }
+}

@@ -6,6 +6,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::engine::{Engine, EngineConfig};
 use crate::tuner::database::TrialRecord;
 use crate::tuner::ml2tuner::Ml2Tuner;
 use crate::tuner::random_baseline::RandomTuner;
@@ -45,8 +46,15 @@ pub fn space_profile(layer: &ConvLayer, limit: usize, seed: u64)
         let mut rng = Rng::new(seed ^ 0xda7a);
         rng.sample_indices(n, limit)
     };
-    let records: Vec<TrialRecord> =
-        indices.iter().map(|&i| env.profile(i)).collect();
+    // batched profiling across all cores (order-preserving, so the
+    // cached records are identical to a sequential profile); compile
+    // caching is off — a sweep profiles every index exactly once, and
+    // retaining the programs would only cost memory
+    let engine = Engine::new(EngineConfig {
+        max_cache_cost: 0,
+        ..EngineConfig::default()
+    });
+    let records = engine.profile_batch(&env, &indices);
     let mut guard = CACHE.lock().unwrap();
     guard
         .get_or_insert_with(HashMap::new)
@@ -74,6 +82,9 @@ pub fn compare_on_layer(
 ) -> ComparisonRuns {
     let layer = resnet18::layer(layer_name).expect("layer");
     let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    // one engine for all repeats/tuners: the compile cache carries over
+    // (profiling is deterministic, so sharing it never changes a trace)
+    let engine = Engine::default();
     let mut runs = ComparisonRuns {
         layer,
         ml2: Vec::new(),
@@ -84,13 +95,16 @@ pub fn compare_on_layer(
         let s = seed ^ (r as u64).wrapping_mul(0x9e37_79b9);
         let cfg = TunerConfig { seed: s, ..Default::default() };
         runs.ml2.push(
-            Ml2Tuner::new(cfg.clone().with_trials(ml2_trials)).tune(&env),
+            Ml2Tuner::new(cfg.clone().with_trials(ml2_trials))
+                .tune_with(&env, &engine),
         );
         runs.tvm.push(
-            TvmTuner::new(cfg.clone().with_trials(tvm_trials)).tune(&env),
+            TvmTuner::new(cfg.clone().with_trials(tvm_trials))
+                .tune_with(&env, &engine),
         );
         runs.random.push(
-            RandomTuner::new(cfg.with_trials(tvm_trials)).tune(&env),
+            RandomTuner::new(cfg.with_trials(tvm_trials))
+                .tune_with(&env, &engine),
         );
     }
     runs

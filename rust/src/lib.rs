@@ -25,10 +25,17 @@
 //! * [`tuner`] — the paper's contribution: configuration explorer, cost
 //!   models P/V/A, profiling database, the ML²Tuner loop and the
 //!   TVM-approach / random baselines.
+//! * [`engine`] — the parallel tuning engine: a batched profiling
+//!   executor (worker pool, `--jobs` configurable, deterministic traces
+//!   for any worker count), a `(layer, schedule)` compile cache that
+//!   kills the A-stage double compilation, and a network-level scheduler
+//!   (`tune-net`) that splits one global budget across all layers with a
+//!   UCB allocator.
 //! * [`experiments`] — one harness per paper table/figure (Fig 2–5,
 //!   Table 2b/4/5, headline metrics).
 
 pub mod compiler;
+pub mod engine;
 pub mod experiments;
 pub mod gbdt;
 pub mod runtime;
@@ -41,6 +48,7 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::compiler::schedule::Schedule;
     pub use crate::compiler::Compiler;
+    pub use crate::engine::Engine;
     pub use crate::gbdt::params::GbdtParams;
     pub use crate::gbdt::Booster;
     pub use crate::util::rng::Rng;

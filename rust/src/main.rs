@@ -3,7 +3,10 @@
 //! ```text
 //! ml2tuner info                         hardware config, spaces, artifacts
 //! ml2tuner tune --layer conv1 [--tuner ml2tuner|tvm|random]
-//!               [--trials N] [--seed S] [--db out.json]
+//!               [--trials N] [--seed S] [--jobs J] [--db out.json]
+//! ml2tuner tune-net [--tuner ml2tuner|tvm|random] [--trials N]
+//!               [--round N] [--seed S] [--jobs J] [--layers a,b,..]
+//!               [--out dir]           whole-network tuning, one budget
 //! ml2tuner simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]
 //! ml2tuner validate [--layer conv1] [--samples N] [--seed S]
 //!               (simulator vs AOT JAX/Pallas golden, bit-exact)
@@ -16,6 +19,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use ml2tuner::compiler::schedule::Schedule;
 use ml2tuner::compiler::Compiler;
+use ml2tuner::engine::{
+    default_jobs, Engine, NetworkConfig, NetworkTuner, TunerKind,
+};
 use ml2tuner::experiments::{self, ExpConfig};
 use ml2tuner::runtime::{golden, Runtime};
 use ml2tuner::tuner::database::Database;
@@ -100,6 +106,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "info" => cmd_info(),
         "tune" => cmd_tune(&args),
+        "tune-net" => cmd_tune_net(&args),
         "simulate" => cmd_simulate(&args),
         "validate" => cmd_validate(&args),
         "experiment" => cmd_experiment(&args),
@@ -118,11 +125,18 @@ fn print_usage() {
          commands:\n  \
          info\n  \
          tune --layer conv1 [--tuner ml2tuner|tvm|random] [--trials N] \
-         [--seed S] [--db out.json]\n  \
+         [--seed S] [--jobs J] [--db out.json]\n  \
+         tune-net [--tuner ml2tuner|tvm|random] [--trials N] [--round N] \
+         [--seed S] [--jobs J] [--layers conv1,conv2,..] [--out dir]\n  \
          simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
-         headline|all> [--quick] [--repeats N] [--seed S]"
+         headline|all> [--quick] [--repeats N] [--seed S]\n\n\
+         --jobs: profiling/compile worker threads (default: all cores); \
+         traces are\n        identical for any worker count.\n\
+         tune-net splits one global --trials budget across the layers \
+         with a\n        round-robin + UCB allocator and saves one tuning \
+         log per layer to --out."
     );
 }
 
@@ -177,24 +191,32 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let layer = layer_arg(args)?;
     let trials = args.get_usize("trials", 300)?;
     let seed = args.get_u64("seed", 0)?;
+    let jobs = args.get_usize("jobs", default_jobs())?;
     let cfg = TunerConfig { seed, max_trials: trials, ..Default::default() };
     let env = TuningEnv::new(VtaConfig::zcu102(), layer);
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
-    let mut tuner: Box<dyn Tuner> = match tuner_name {
-        "ml2tuner" => Box::new(Ml2Tuner::new(cfg)),
-        "tvm" => Box::new(TvmTuner::new(cfg)),
-        "random" => Box::new(RandomTuner::new(cfg)),
-        other => bail!("unknown tuner '{other}'"),
+    let kind = TunerKind::parse(tuner_name)
+        .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
+    let mut tuner: Box<dyn Tuner> = match kind {
+        TunerKind::Ml2 => Box::new(Ml2Tuner::new(cfg)),
+        TunerKind::Tvm => Box::new(TvmTuner::new(cfg)),
+        TunerKind::Random => Box::new(RandomTuner::new(cfg)),
     };
+    let engine = Engine::with_jobs(jobs);
     let t0 = std::time::Instant::now();
-    let trace = tuner.tune(&env);
+    let trace = tuner.tune_with(&env, &engine);
     let sim = Simulator::new(VtaConfig::zcu102());
+    let cache = engine.cache().stats();
     println!(
-        "{} on {}: {} trials in {:.1}s",
+        "{} on {}: {} trials in {:.1}s ({} jobs, compile cache {} hits / \
+         {} lookups)",
         trace.tuner,
         layer.name,
         trace.len(),
-        t0.elapsed().as_secs_f64()
+        t0.elapsed().as_secs_f64(),
+        engine.jobs(),
+        cache.hits,
+        cache.lookups()
     );
     match trace.best_cycles() {
         Some(c) => {
@@ -229,6 +251,59 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         db.save(path)?;
         println!("tuning log saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tune_net(args: &Args) -> Result<()> {
+    let trials = args.get_usize("trials", 1000)?;
+    let round = args.get_usize("round", 10)?;
+    let seed = args.get_u64("seed", 0)?;
+    let jobs = args.get_usize("jobs", default_jobs())?;
+    let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
+    let tuner = TunerKind::parse(tuner_name)
+        .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
+    let layers: Vec<resnet18::ConvLayer> = match args.get("layers") {
+        None => resnet18::LAYERS.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|n| {
+                resnet18::layer(n.trim())
+                    .ok_or_else(|| anyhow!("unknown layer '{}'", n.trim()))
+            })
+            .collect::<Result<_>>()?,
+    };
+    // one tuning log per layer: duplicates would silently overwrite
+    // each other's database in --out
+    for (i, l) in layers.iter().enumerate() {
+        if layers[..i].iter().any(|m| m.name == l.name) {
+            bail!("--layers lists '{}' twice", l.name);
+        }
+    }
+    let cfg = NetworkConfig {
+        tuner,
+        total_trials: trials,
+        round_trials: round,
+        base: TunerConfig { seed, ..Default::default() },
+        ..Default::default()
+    };
+    let engine = Engine::with_jobs(jobs);
+    let t0 = std::time::Instant::now();
+    let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
+    print!("{}", outcome.report.render());
+    let cache = engine.cache().stats();
+    println!(
+        "wall-clock {:.1}s ({} jobs, compile cache {} hits / {} lookups, \
+         {:.1}% hit rate)",
+        t0.elapsed().as_secs_f64(),
+        engine.jobs(),
+        cache.hits,
+        cache.lookups(),
+        cache.hit_rate() * 100.0
+    );
+    if let Some(dir) = args.get("out") {
+        let paths = outcome.save_databases(dir)?;
+        println!("{} per-layer tuning logs saved to {dir}/", paths.len());
     }
     Ok(())
 }

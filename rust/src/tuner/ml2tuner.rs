@@ -17,8 +17,10 @@ use super::database::Database;
 use super::explorer::Explorer;
 use super::models::{ModelA, ModelP, ModelV};
 use super::report::TuningTrace;
-use super::{Tuner, TunerConfig, TuningEnv};
+use super::space::SearchSpace;
+use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::compiler::features::combined_features;
+use crate::engine::Engine;
 use crate::util::rng::Rng;
 
 /// The multi-level tuner.
@@ -56,89 +58,100 @@ impl Tuner for Ml2Tuner {
         }
     }
 
-    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+    fn tune_with(
+        &mut self,
+        env: &TuningEnv,
+        engine: &Engine,
+    ) -> TuningTrace {
         let cfg = &self.cfg;
-        let mut rng = Rng::new(cfg.seed ^ 0x4d4c_3254);
+        let mut rng = Rng::new(cfg.seed ^ salt::ML2);
         let mut space = env.space.clone();
         let mut db = Database::new(env.layer.name);
         let mut trace = TuningTrace::new(env.layer.name, self.name());
-        let explorer = Explorer::new(cfg.epsilon);
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
-            let remaining = cfg.max_trials - trace.len();
-            let n = cfg.n_per_round.min(remaining);
-            // ---- candidate selection -----------------------------------
-            let models_ready = db.n_valid() >= 2
-                && db.len() >= cfg.min_train
-                && ModelP::train(&db, 1, 0).is_some();
-            let batch: Vec<usize> = if !models_ready {
-                space.sample_unmeasured(&mut rng, n)
-            } else {
-                let p = ModelP::train(&db, cfg.boost_rounds,
-                                      cfg.seed ^ round)
-                    .expect("P trainable");
-                let v = if self.use_v {
-                    ModelV::train(&db, cfg.boost_rounds, cfg.seed ^ round)
-                } else {
-                    None
-                };
-                let pool_n = if self.use_a { cfg.pool_size() } else { n };
-                let pool = explorer.select(&space, &p, v.as_ref(), pool_n,
-                                           &mut rng);
-                if self.use_a && pool.len() > n {
-                    // compile everything, harvest hidden features, re-rank
-                    let a = ModelA::train(&db, cfg.boost_rounds,
-                                          cfg.seed ^ round);
-                    match a {
-                        None => pool.into_iter().take(n).collect(),
-                        Some(a) => {
-                            let mut scored: Vec<(f64, usize)> = pool
-                                .into_iter()
-                                .map(|i| {
-                                    let sched = space.schedule(i);
-                                    let compiled = env
-                                        .compiler
-                                        .compile(&env.layer, &sched);
-                                    let hidden = env
-                                        .compiler
-                                        .hidden_features(&compiled);
-                                    let feats = combined_features(
-                                        &sched.visible_features(),
-                                        &hidden,
-                                    );
-                                    (a.predict(&feats), i)
-                                })
-                                .collect();
-                            scored.sort_by(|x, y| {
-                                x.0.partial_cmp(&y.0).unwrap()
-                            });
-                            scored
-                                .into_iter()
-                                .take(n)
-                                .map(|(_, i)| i)
-                                .collect()
-                        }
-                    }
-                } else {
-                    pool.into_iter().take(n).collect()
-                }
-            };
+            let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
+            let batch = select_batch(cfg, self.use_v, self.use_a, env,
+                                     engine, &space, &db, &mut rng, round,
+                                     n);
             if batch.is_empty() {
                 break;
             }
             // ---- profiling & training data ----------------------------
-            for idx in batch {
-                let rec = env.profile(idx);
-                space.mark_measured(idx);
-                db.push(rec.clone());
-                trace.trials.push(rec);
-                if trace.len() >= cfg.max_trials {
-                    break;
-                }
-            }
+            // `batch.len() ≤ n ≤ remaining budget`, and the executor
+            // returns records in batch order — the trace is identical for
+            // any worker count.
+            engine.profile_into(env, &batch, &mut space, Some(&mut db),
+                                &mut trace);
         }
         trace
+    }
+}
+
+/// One round of ML²Tuner candidate selection (paper Fig. 1 steps 1–4):
+/// train P (and V), accumulate the `(α+1)·N` pool, compile it through
+/// the engine for hidden features, train A, and keep the `n` best
+/// re-ranked candidates. Shared by [`Ml2Tuner`] and the network
+/// scheduler's incremental [`crate::engine::LayerSession`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn select_batch(
+    cfg: &TunerConfig,
+    use_v: bool,
+    use_a: bool,
+    env: &TuningEnv,
+    engine: &Engine,
+    space: &SearchSpace,
+    db: &Database,
+    rng: &mut Rng,
+    round: u64,
+    n: usize,
+) -> Vec<usize> {
+    // Train P once and reuse it (the readiness probe used to train a
+    // throwaway model first); P is trainable iff ≥ 2 valid records.
+    let p = if db.n_valid() >= 2 && db.len() >= cfg.min_train {
+        ModelP::train(db, cfg.boost_rounds, cfg.seed ^ round)
+    } else {
+        None
+    };
+    let Some(p) = p else {
+        return space.sample_unmeasured(rng, n);
+    };
+    let v = if use_v {
+        ModelV::train(db, cfg.boost_rounds, cfg.seed ^ round)
+    } else {
+        None
+    };
+    let pool_n = if use_a { cfg.pool_size() } else { n };
+    let pool =
+        Explorer::new(cfg.epsilon).select(space, &p, v.as_ref(), pool_n,
+                                          rng);
+    if use_a && pool.len() > n {
+        // Compile the whole pool (batched, cached), harvest hidden
+        // features, re-rank with A. The engine's cache means the `n`
+        // winners are NOT recompiled when profiled right after.
+        match ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round) {
+            None => pool.into_iter().take(n).collect(),
+            Some(a) => {
+                let compiled = engine.compile_batch(env, &pool);
+                let mut scored: Vec<(f64, usize)> = pool
+                    .iter()
+                    .zip(&compiled)
+                    .map(|(&i, c)| {
+                        let feats = combined_features(
+                            &space.schedule(i).visible_features(),
+                            &c.hidden,
+                        );
+                        (a.predict(&feats), i)
+                    })
+                    .collect();
+                // stable sort: ties keep pool (P-ranking) order
+                scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                scored.into_iter().take(n).map(|(_, i)| i).collect()
+            }
+        }
+    } else {
+        pool.into_iter().take(n).collect()
     }
 }
 

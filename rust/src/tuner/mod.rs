@@ -24,11 +24,35 @@ pub mod space;
 pub mod tvm_baseline;
 
 use crate::compiler::Compiler;
+use crate::engine::Engine;
 use crate::vta::{Fault, Simulator, Verdict};
 use crate::workloads::ConvLayer;
 use database::{Outcome, TrialRecord};
 use report::TuningTrace;
 use space::SearchSpace;
+
+/// Per-policy RNG stream salts. The standalone tuners and the engine's
+/// incremental [`crate::engine::LayerSession`] both derive their stream
+/// as `seed ^ salt`, so a session stepped round-by-round replays the
+/// standalone tuner exactly (tested in `engine::scheduler`).
+pub mod salt {
+    pub const ML2: u64 = 0x4d4c_3254;
+    pub const TVM: u64 = 0x5456_4d21;
+    pub const RANDOM: u64 = 0x52_414e_44;
+}
+
+/// Classify a simulator verdict into a profiling outcome (paper §A.2:
+/// register errors crash the board, hazard corruption "succeeds" with a
+/// wrong result; both are invalid).
+pub fn outcome_of(verdict: &Verdict) -> Outcome {
+    match verdict {
+        Verdict::Valid { cycles } => Outcome::Valid { cycles: *cycles },
+        Verdict::Invalid { fault: Fault::Corruption(_), .. } => {
+            Outcome::WrongOutput
+        }
+        Verdict::Invalid { .. } => Outcome::Crash,
+    }
+}
 
 /// Tuning-loop hyper-parameters (paper §3: `N = 10`, `α = 1.0`).
 #[derive(Clone, Debug)]
@@ -103,17 +127,15 @@ impl TuningEnv {
 
     /// "Run on hardware": compile, execute on the simulator, classify the
     /// outcome (paper §2 Profiling & Training).
+    ///
+    /// Uncached sequential path, kept for tests and one-off probes; the
+    /// tuning loops route through [`Engine::profile_batch`], which
+    /// produces identical records via the compile cache.
     pub fn profile(&self, space_index: usize) -> TrialRecord {
         let sched = self.space.schedule(space_index);
         let compiled = self.compiler.compile(&self.layer, &sched);
         let hidden = self.compiler.hidden_features(&compiled);
-        let outcome = match self.simulator.check(&compiled.program) {
-            Verdict::Valid { cycles } => Outcome::Valid { cycles },
-            Verdict::Invalid { fault: Fault::Corruption(_), .. } => {
-                Outcome::WrongOutput
-            }
-            Verdict::Invalid { .. } => Outcome::Crash,
-        };
+        let outcome = outcome_of(&self.simulator.check(&compiled.program));
         TrialRecord {
             space_index,
             schedule: sched,
@@ -125,12 +147,23 @@ impl TuningEnv {
 }
 
 /// Common tuner interface.
+///
+/// All tuners route profiling (and the ML²Tuner pool compilation)
+/// through an [`Engine`]; traces are byte-identical for any worker
+/// count, so `tune` defaults to a fresh all-cores engine.
 pub trait Tuner {
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
 
     /// Run the loop until the budget is spent; returns the trace.
-    fn tune(&mut self, env: &TuningEnv) -> TuningTrace;
+    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+        self.tune_with(env, &Engine::default())
+    }
+
+    /// Run the loop with an explicit engine (worker pool + compile
+    /// cache). Reusing one engine across runs shares its compile cache.
+    fn tune_with(&mut self, env: &TuningEnv, engine: &Engine)
+        -> TuningTrace;
 }
 
 /// Result summary used by examples and experiments.

@@ -3,7 +3,8 @@
 //! authors' board).
 
 use super::report::TuningTrace;
-use super::{Tuner, TunerConfig, TuningEnv};
+use super::{salt, Tuner, TunerConfig, TuningEnv};
+use crate::engine::Engine;
 use crate::util::rng::Rng;
 
 pub struct RandomTuner {
@@ -21,18 +22,19 @@ impl Tuner for RandomTuner {
         "random"
     }
 
-    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+    fn tune_with(
+        &mut self,
+        env: &TuningEnv,
+        engine: &Engine,
+    ) -> TuningTrace {
         let cfg = &self.cfg;
-        let mut rng = Rng::new(cfg.seed ^ 0x52_414e_44);
+        let mut rng = Rng::new(cfg.seed ^ salt::RANDOM);
         let mut space = env.space.clone();
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            for idx in space.sample_unmeasured(&mut rng, n) {
-                let rec = env.profile(idx);
-                space.mark_measured(idx);
-                trace.trials.push(rec);
-            }
+            let batch = space.sample_unmeasured(&mut rng, n);
+            engine.profile_into(env, &batch, &mut space, None, &mut trace);
         }
         trace
     }

@@ -7,7 +7,9 @@ use super::database::Database;
 use super::explorer::Explorer;
 use super::models::ModelP;
 use super::report::TuningTrace;
-use super::{Tuner, TunerConfig, TuningEnv};
+use super::space::SearchSpace;
+use super::{salt, Tuner, TunerConfig, TuningEnv};
+use crate::engine::Engine;
 use crate::util::rng::Rng;
 
 pub struct TvmTuner {
@@ -25,43 +27,51 @@ impl Tuner for TvmTuner {
         "tvm"
     }
 
-    fn tune(&mut self, env: &TuningEnv) -> TuningTrace {
+    fn tune_with(
+        &mut self,
+        env: &TuningEnv,
+        engine: &Engine,
+    ) -> TuningTrace {
         let cfg = &self.cfg;
-        let mut rng = Rng::new(cfg.seed ^ 0x5456_4d21);
+        let mut rng = Rng::new(cfg.seed ^ salt::TVM);
         let mut space = env.space.clone();
         let mut db = Database::new(env.layer.name);
         let mut trace = TuningTrace::new(env.layer.name, self.name());
-        let explorer = Explorer::new(cfg.epsilon);
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let batch: Vec<usize> = if db.len() < cfg.min_train {
-                space.sample_unmeasured(&mut rng, n)
-            } else {
-                match ModelP::train_tvm(&db, cfg.boost_rounds,
-                                        cfg.seed ^ round)
-                {
-                    None => space.sample_unmeasured(&mut rng, n),
-                    Some(p) => {
-                        explorer.select(&space, &p, None, n, &mut rng)
-                    }
-                }
-            };
+            let batch =
+                select_batch(cfg, &space, &db, &mut rng, round, n);
             if batch.is_empty() {
                 break;
             }
-            for idx in batch {
-                let rec = env.profile(idx);
-                space.mark_measured(idx);
-                db.push(rec.clone());
-                trace.trials.push(rec);
-                if trace.len() >= cfg.max_trials {
-                    break;
-                }
-            }
+            engine.profile_into(env, &batch, &mut space, Some(&mut db),
+                                &mut trace);
         }
         trace
+    }
+}
+
+/// One round of TVM-approach candidate selection: penalty-P top-N with
+/// ε-greedy exploration, no validity model, no hidden features. Shared
+/// by [`TvmTuner`] and the network scheduler's incremental sessions.
+pub(crate) fn select_batch(
+    cfg: &TunerConfig,
+    space: &SearchSpace,
+    db: &Database,
+    rng: &mut Rng,
+    round: u64,
+    n: usize,
+) -> Vec<usize> {
+    if db.len() < cfg.min_train {
+        return space.sample_unmeasured(rng, n);
+    }
+    match ModelP::train_tvm(db, cfg.boost_rounds, cfg.seed ^ round) {
+        None => space.sample_unmeasured(rng, n),
+        Some(p) => {
+            Explorer::new(cfg.epsilon).select(space, &p, None, n, rng)
+        }
     }
 }
 

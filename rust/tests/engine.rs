@@ -1,0 +1,179 @@
+//! Integration: the parallel tuning engine.
+//!
+//! * determinism — a tuning trace is byte-identical for `jobs=1` vs
+//!   `jobs=4` (and matches the legacy sequential `TuningEnv::profile`
+//!   path record-for-record);
+//! * compile-cache — pool candidates compiled in the ML²Tuner A-stage
+//!   are not recompiled when the re-ranked winners are profiled in the
+//!   same round;
+//! * `tune-net` — the network scheduler spends exactly the global
+//!   budget, covers every layer, and is itself jobs-invariant.
+
+use ml2tuner::engine::{
+    Engine, EngineConfig, NetworkConfig, NetworkTuner, TunerKind,
+};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::tvm_baseline::TvmTuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::{resnet18, ConvLayer};
+
+fn env(layer: &str) -> TuningEnv {
+    TuningEnv::new(VtaConfig::zcu102(), resnet18::layer(layer).unwrap())
+}
+
+/// Byte-exact trace fingerprint (schedule, features, outcome — all of it).
+fn fingerprint(trace: &ml2tuner::tuner::report::TuningTrace) -> String {
+    format!("{:?}", trace.trials)
+}
+
+#[test]
+fn ml2tuner_trace_is_identical_for_1_and_4_jobs() {
+    let e = env("conv5");
+    let cfg = TunerConfig { max_trials: 60, seed: 11, ..Default::default() };
+    let t1 = Ml2Tuner::new(cfg.clone()).tune_with(&e, &Engine::with_jobs(1));
+    let t4 = Ml2Tuner::new(cfg).tune_with(&e, &Engine::with_jobs(4));
+    assert_eq!(t1.len(), 60);
+    assert_eq!(fingerprint(&t1), fingerprint(&t4));
+}
+
+#[test]
+fn baseline_traces_are_identical_for_1_and_4_jobs() {
+    let e = env("conv3");
+    let cfg = TunerConfig { max_trials: 40, seed: 3, ..Default::default() };
+    let r1 = RandomTuner::new(cfg.clone())
+        .tune_with(&e, &Engine::with_jobs(1));
+    let r4 = RandomTuner::new(cfg.clone())
+        .tune_with(&e, &Engine::with_jobs(4));
+    assert_eq!(fingerprint(&r1), fingerprint(&r4));
+    let v1 = TvmTuner::new(cfg.clone()).tune_with(&e, &Engine::with_jobs(1));
+    let v4 = TvmTuner::new(cfg).tune_with(&e, &Engine::with_jobs(4));
+    assert_eq!(fingerprint(&v1), fingerprint(&v4));
+}
+
+#[test]
+fn engine_trace_matches_legacy_sequential_profiling() {
+    // the cached/parallel profile path must agree with TuningEnv::profile
+    let e = env("conv5");
+    let cfg = TunerConfig { max_trials: 30, seed: 7, ..Default::default() };
+    let trace = RandomTuner::new(cfg).tune_with(&e, &Engine::with_jobs(4));
+    for t in &trace.trials {
+        let seq = e.profile(t.space_index);
+        assert_eq!(format!("{t:?}"), format!("{seq:?}"));
+    }
+}
+
+#[test]
+fn a_stage_pool_is_not_recompiled_when_profiled() {
+    let e = env("conv5");
+    // unbounded cache so the miss-accounting below is exact
+    let engine = Engine::new(EngineConfig {
+        jobs: 2,
+        max_cache_entries: usize::MAX,
+        max_cache_cost: usize::MAX,
+    });
+    let cfg = TunerConfig { max_trials: 60, seed: 5, ..Default::default() };
+    let trace = Ml2Tuner::new(cfg).tune_with(&e, &engine);
+    assert_eq!(trace.len(), 60);
+    let stats = engine.cache().stats();
+    // model-guided rounds compile a 20-candidate pool and then profile 10
+    // of them: those profiles must be cache hits, so misses (= actual
+    // compilations) stay strictly below lookups
+    assert!(stats.hits > 0, "no cache hit in a full ML²Tuner run");
+    assert!(stats.misses < stats.lookups());
+    // misses are real compilations: one per distinct schedule (plus at
+    // most a handful of benign same-key races between two workers)
+    let distinct = engine.cache().len() as u64;
+    assert!(stats.misses >= distinct);
+    assert!(stats.misses <= distinct + 4,
+            "recompilation beyond racing duplicates: {} misses for {} \
+             distinct schedules", stats.misses, distinct);
+}
+
+#[test]
+fn tune_net_smoke_under_small_budget() {
+    let layers: Vec<ConvLayer> = vec![
+        resnet18::layer("conv1").unwrap(),
+        resnet18::layer("conv5").unwrap(),
+    ];
+    let cfg = NetworkConfig {
+        tuner: TunerKind::Ml2,
+        total_trials: 80,
+        round_trials: 10,
+        base: TunerConfig { seed: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let engine = Engine::with_jobs(2);
+    let out = NetworkTuner::new(cfg).tune(&engine, &layers);
+    let report = &out.report;
+    assert_eq!(report.total_trials, 80, "global budget fully spent");
+    assert_eq!(
+        report.layers.iter().map(|l| l.trials).sum::<usize>(),
+        80,
+        "per-layer trials account for the whole budget"
+    );
+    assert!(report.layers.iter().all(|l| l.rounds >= 1),
+            "round-robin warmup covered every layer");
+    assert!(report.tuned_layers() >= 1,
+            "at least one layer found a valid schedule");
+    for l in &report.layers {
+        if let Some(s) = &l.best_schedule {
+            assert!(l.best_cycles.is_some(), "{}: schedule w/o cycles {s}",
+                    l.layer);
+        }
+    }
+    let rendered = report.render();
+    assert!(rendered.contains("conv1") && rendered.contains("conv5"));
+    // per-layer databases mirror the traces
+    assert_eq!(out.databases.len(), 2);
+    for (db, tr) in out.databases.iter().zip(&out.traces) {
+        assert_eq!(db.len(), tr.len());
+        assert_eq!(db.layer, tr.layer);
+    }
+}
+
+#[test]
+fn tune_net_is_deterministic_and_jobs_invariant() {
+    let layers: Vec<ConvLayer> = vec![
+        resnet18::layer("conv2").unwrap(),
+        resnet18::layer("conv4").unwrap(),
+    ];
+    let cfg = NetworkConfig {
+        tuner: TunerKind::Random,
+        total_trials: 40,
+        round_trials: 10,
+        base: TunerConfig { seed: 9, ..Default::default() },
+        ..Default::default()
+    };
+    let a = NetworkTuner::new(cfg.clone())
+        .tune(&Engine::with_jobs(1), &layers);
+    let b = NetworkTuner::new(cfg)
+        .tune(&Engine::with_jobs(4), &layers);
+    assert_eq!(a.traces.len(), b.traces.len());
+    for (x, y) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(format!("{:?}", x.trials), format!("{:?}", y.trials));
+    }
+    assert_eq!(a.report.render(), b.report.render());
+}
+
+#[test]
+fn tune_net_saves_one_database_per_layer() {
+    let layers = vec![resnet18::layer("conv5").unwrap()];
+    let cfg = NetworkConfig {
+        tuner: TunerKind::Random,
+        total_trials: 20,
+        round_trials: 10,
+        base: TunerConfig { seed: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let out = NetworkTuner::new(cfg).tune(&Engine::with_jobs(2), &layers);
+    let dir = std::env::temp_dir().join("ml2tuner_tune_net_test");
+    let paths = out.save_databases(&dir).unwrap();
+    assert_eq!(paths.len(), 1);
+    assert!(paths[0].ends_with("conv5.json"));
+    let back =
+        ml2tuner::tuner::database::Database::load(&paths[0]).unwrap();
+    assert_eq!(back.len(), 20);
+    std::fs::remove_dir_all(&dir).ok();
+}
