@@ -1,5 +1,8 @@
 //! Network-level tuning scheduler — tunes a whole model (the paper tunes
-//! layers one at a time) under one global trial budget.
+//! layers one at a time) under one global trial budget. Layers come from
+//! the [`crate::workloads`] registry (any [`crate::workloads::Network`]),
+//! and each layer's models can be warm-started from prior tuning logs
+//! via [`NetworkConfig::transfer`].
 //!
 //! A [`LayerSession`] holds the incremental tuning state of one layer
 //! (search space mask, profiling database, trace, RNG stream) and can be
@@ -21,7 +24,7 @@ use anyhow::{Context, Result};
 
 use super::executor::Engine;
 use crate::compiler::schedule::Schedule;
-use crate::tuner::database::Database;
+use crate::tuner::database::{Database, TransferDb};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{ml2tuner, salt, tvm_baseline, TunerConfig, TuningEnv};
@@ -76,6 +79,9 @@ pub struct LayerSession {
     kind: TunerKind,
     space: SearchSpace,
     db: Database,
+    /// Transferred records pre-training the ML² models (training-only —
+    /// never profiled, never in the trace or the persisted log).
+    warm: Option<Database>,
     pub trace: TuningTrace,
     rng: Rng,
     round: u64,
@@ -85,9 +91,26 @@ impl LayerSession {
     pub fn new(kind: TunerKind, cfg: TunerConfig, env: TuningEnv) -> Self {
         let rng = Rng::new(cfg.seed ^ kind.rng_salt());
         let space = env.space.clone();
-        let db = Database::new(env.layer.name);
+        let db = Database::for_layer(&env.layer);
         let trace = TuningTrace::new(env.layer.name, kind.name());
-        LayerSession { env, cfg, kind, space, db, trace, rng, round: 0 }
+        LayerSession { env, cfg, kind, space, db, warm: None, trace, rng,
+                       round: 0 }
+    }
+
+    /// Warm-start the session's models from a transferred database
+    /// (effective for the ML² policy; the baselines stay cold). The
+    /// trace is relabelled so persisted logs distinguish warm from cold
+    /// runs, matching the standalone tuner's naming. An empty database
+    /// is a no-op — the session stays cold and keeps its cold label.
+    pub fn with_warm_start(mut self, warm: Database) -> Self {
+        if warm.is_empty() {
+            return self;
+        }
+        if self.kind == TunerKind::Ml2 {
+            self.trace.tuner = "ml2tuner-warm".to_string();
+        }
+        self.warm = Some(warm);
+        self
     }
 
     pub fn layer_name(&self) -> &'static str {
@@ -155,8 +178,8 @@ impl LayerSession {
                 ),
                 TunerKind::Ml2 => ml2tuner::select_batch(
                     &self.cfg, true, true, &self.env, engine,
-                    &self.space, &self.db, &mut self.rng, self.round,
-                    take,
+                    &self.space, &self.db, self.warm.as_ref(),
+                    &mut self.rng, self.round, take,
                 ),
             };
             if batch.is_empty() {
@@ -189,6 +212,11 @@ pub struct NetworkConfig {
     pub round_trials: usize,
     /// UCB exploration constant (0 = purely greedy on observed reward).
     pub ucb_c: f64,
+    /// Prior tuning logs warm-starting every layer's models (the
+    /// `--transfer-from` store); `None` = cold start.
+    pub transfer: Option<TransferDb>,
+    /// Max transferred records per layer.
+    pub transfer_cap: usize,
 }
 
 impl Default for NetworkConfig {
@@ -200,6 +228,8 @@ impl Default for NetworkConfig {
             total_trials: 1000,
             round_trials: TunerConfig::default().n_per_round,
             ucb_c: 0.5,
+            transfer: None,
+            transfer_cap: 400,
         }
     }
 }
@@ -325,11 +355,23 @@ impl NetworkTuner {
                     max_trials: cfg.total_trials,
                     ..cfg.base.clone()
                 };
-                LayerSession::new(
+                let mut session = LayerSession::new(
                     cfg.tuner,
                     per_layer,
                     TuningEnv::new(cfg.vta.clone(), *layer),
-                )
+                );
+                // only the ML² policy consumes warm data — don't pay
+                // for similarity matching on the baseline kinds
+                if cfg.tuner == TunerKind::Ml2 {
+                    if let Some(store) = &cfg.transfer {
+                        if let Some(warm) =
+                            store.warm_start_for(layer, cfg.transfer_cap)
+                        {
+                            session = session.with_warm_start(warm);
+                        }
+                    }
+                }
+                session
             })
             .collect();
         let n = sessions.len();

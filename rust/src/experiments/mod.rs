@@ -16,6 +16,7 @@ pub mod headline;
 pub mod table2;
 pub mod table4;
 pub mod table5;
+pub mod transfer;
 
 use anyhow::{bail, Result};
 
@@ -40,10 +41,11 @@ impl ExpConfig {
     }
 }
 
-/// All experiment ids, in paper order.
-pub const ALL: [&str; 9] = [
+/// All experiment ids: the paper's tables/figures in paper order, then
+/// the beyond-paper transfer warm-start study.
+pub const ALL: [&str; 10] = [
     "fig2a", "fig2b", "fig3", "fig4", "fig5", "table2", "table4", "table5",
-    "headline",
+    "headline", "transfer",
 ];
 
 /// Dispatch an experiment by id; returns the printed report.
@@ -58,6 +60,7 @@ pub fn run(id: &str, cfg: &ExpConfig) -> Result<String> {
         "table4" => table4::run(cfg),
         "table5" => table5::run(cfg),
         "headline" => headline::run(cfg),
+        "transfer" => transfer::run(cfg),
         other => bail!("unknown experiment '{other}'; known: {ALL:?}"),
     };
     println!("{report}");

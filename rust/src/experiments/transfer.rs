@@ -1,0 +1,176 @@
+//! Cross-workload transfer warm-start: cold vs warm sample-efficiency.
+//!
+//! Beyond-paper experiment (the registry + `TransferDb` subsystem; cf.
+//! MetaTune and HW-Aware Initialization in PAPERS.md). Protocol:
+//!
+//! 1. tune three *sibling* layers of the MobileNet-style network with
+//!    ML²Tuner and bank their tuning logs in a [`TransferDb`];
+//! 2. tune the held-out target layer (`pw5`) cold and warm-started from
+//!    the bank, with paired seeds;
+//! 3. report, per repeat, how many profiled samples the warm run needs
+//!    to reach the cold run's final best cycles, and the averaged
+//!    best-so-far curves.
+//!
+//! The warm tuner is model-guided from its first batch (the transferred
+//! records satisfy the `min_train` gate), so the expected effect is the
+//! MetaTune one: same final quality, reached with a fraction of the
+//! profiled samples.
+
+use super::ExpConfig;
+use crate::engine::Engine;
+use crate::tuner::database::{Database, TransferDb};
+use crate::tuner::ml2tuner::Ml2Tuner;
+use crate::tuner::report::{average_curves, TuningTrace};
+use crate::tuner::{Tuner, TunerConfig, TuningEnv};
+use crate::util::stats::mean;
+use crate::util::table::{f, Table};
+use crate::vta::config::VtaConfig;
+use crate::workloads;
+
+const SOURCE_LAYERS: [&str; 3] = ["pw3", "pw4", "pw6"];
+const TARGET_LAYER: &str = "pw5";
+
+pub fn run(cfg: &ExpConfig) -> String {
+    let (src_trials, tgt_trials, cap) = if cfg.quick {
+        (60, 60, 200)
+    } else {
+        (200, 200, 400)
+    };
+    let net = workloads::network("mobilenet").unwrap();
+    let target = net.layer(TARGET_LAYER).unwrap();
+    let engine = Engine::default();
+
+    // -- 1. bank sibling-layer tuning logs --------------------------------
+    let mut store = TransferDb::new();
+    for name in SOURCE_LAYERS {
+        let layer = net.layer(name).unwrap();
+        let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+        let t_cfg = TunerConfig {
+            seed: cfg.seed ^ 0x5eed_0001,
+            max_trials: src_trials,
+            ..Default::default()
+        };
+        let trace = Ml2Tuner::new(t_cfg).tune_with(&env, &engine);
+        let mut db = Database::for_layer(&layer);
+        for r in &trace.trials {
+            db.push(r.clone());
+        }
+        store.add(db);
+    }
+    let warm = store
+        .warm_start_for(&target, cap)
+        .expect("sibling layers must transfer");
+
+    // -- 2. cold vs warm on the held-out layer, paired seeds --------------
+    let env = TuningEnv::new(VtaConfig::zcu102(), target);
+    let mut cold_runs: Vec<TuningTrace> = Vec::new();
+    let mut warm_runs: Vec<TuningTrace> = Vec::new();
+    for r in 0..cfg.repeats {
+        let s = cfg.seed ^ (r as u64).wrapping_mul(0x9e37_79b9);
+        let t_cfg = TunerConfig {
+            seed: s,
+            max_trials: tgt_trials,
+            ..Default::default()
+        };
+        cold_runs
+            .push(Ml2Tuner::new(t_cfg.clone()).tune_with(&env, &engine));
+        warm_runs.push(
+            Ml2Tuner::new(t_cfg)
+                .with_warm_start(warm.clone())
+                .tune_with(&env, &engine),
+        );
+    }
+
+    // -- 3. report --------------------------------------------------------
+    let mut out = format!(
+        "== transfer warm-start: cold vs warm on mobilenet/{TARGET_LAYER} \
+         ==\n(sources: {}; {} transferred records; {} repeats x {} \
+         trials)\n\n",
+        SOURCE_LAYERS.join(", "),
+        warm.len(),
+        cfg.repeats,
+        tgt_trials
+    );
+    let cold_avg = average_curves(
+        &cold_runs.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
+    );
+    let warm_avg = average_curves(
+        &warm_runs.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
+    );
+    let mut t = Table::new(&[
+        "configs tested",
+        "cold best (cycles)",
+        "warm best (cycles)",
+    ]);
+    let cell = |curve: &[f64], i: usize| {
+        let v = curve.get(i).copied().unwrap_or(f64::INFINITY);
+        if v.is_finite() { f(v, 0) } else { "-".to_string() }
+    };
+    let step = 10;
+    let mut i = step - 1;
+    while i < cold_avg.len().max(warm_avg.len()) {
+        t.row(&[
+            format!("{}", i + 1),
+            cell(&cold_avg, i),
+            cell(&warm_avg, i),
+        ]);
+        i += step;
+    }
+    out.push_str(&t.render());
+
+    // paired sample-efficiency: samples the warm run needs to match the
+    // cold run's final best, over the samples the cold run took to get
+    // there
+    let mut fracs = Vec::new();
+    let mut warm_wins = 0usize;
+    let mut reached = 0usize;
+    for (c, w) in cold_runs.iter().zip(&warm_runs) {
+        let Some(cold_best) = c.best_cycles() else { continue };
+        let cold_at = c.trials_to_reach(cold_best as f64).unwrap();
+        match w.trials_to_reach(cold_best as f64) {
+            Some(warm_at) => {
+                reached += 1;
+                if warm_at < cold_at {
+                    warm_wins += 1;
+                }
+                fracs.push(warm_at as f64 / cold_at as f64);
+            }
+            None => fracs.push(f64::NAN),
+        }
+    }
+    let finite: Vec<f64> =
+        fracs.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        out.push_str("\nwarm runs never reached the cold best within \
+                      budget\n");
+    } else {
+        out.push_str(&format!(
+            "\nwarm reaches the cold run's best cycles in {}/{} repeats, \
+             using {:.1}% of the cold run's samples on average \
+             (warm strictly fewer in {}/{})\n",
+            reached,
+            cold_runs.len(),
+            100.0 * mean(&finite),
+            warm_wins,
+            cold_runs.len(),
+        ));
+    }
+    let cold_final = mean(
+        &cold_runs
+            .iter()
+            .filter_map(|t| t.best_cycles().map(|c| c as f64))
+            .collect::<Vec<_>>(),
+    );
+    let warm_final = mean(
+        &warm_runs
+            .iter()
+            .filter_map(|t| t.best_cycles().map(|c| c as f64))
+            .collect::<Vec<_>>(),
+    );
+    out.push_str(&format!(
+        "final best (mean): cold {} vs warm {} cycles\n",
+        f(cold_final, 0),
+        f(warm_final, 0)
+    ));
+    out
+}

@@ -18,13 +18,19 @@
 //!   analysis passes emit the paper's *hidden features* (Table 5).
 //! * [`gbdt`] — from-scratch XGBoost-style gradient-boosted trees (the
 //!   paper's cost-model family), with the Table 3 hyper-parameter surface.
-//! * [`workloads`] — ResNet18 conv layers (paper Table 2a) and synthetic
-//!   workload generators.
+//! * [`workloads`] — the network registry: ResNet18 (paper Table 2a),
+//!   VGG-16, a MobileNet-style pointwise net, a synthetic GEMM/dense
+//!   suite, plus synthetic workload generators. `tune-net`, the
+//!   experiments, and the transfer store all operate over any registered
+//!   [`workloads::Network`].
 //! * [`runtime`] — PJRT wrapper executing the AOT-compiled JAX/Pallas golden
 //!   models from `artifacts/*.hlo.txt` (Python never runs at tuning time).
 //! * [`tuner`] — the paper's contribution: configuration explorer, cost
 //!   models P/V/A, profiling database, the ML²Tuner loop and the
-//!   TVM-approach / random baselines.
+//!   TVM-approach / random baselines. Tuning logs are shape-stamped and
+//!   a [`tuner::database::TransferDb`] (any directory of prior logs)
+//!   warm-starts the models on shape-similar layers before the first
+//!   profiled batch (`--transfer-from`).
 //! * [`engine`] — the parallel tuning engine: a batched profiling
 //!   executor (worker pool, `--jobs` configurable, deterministic traces
 //!   for any worker count), a `(layer, schedule)` compile cache that
@@ -32,7 +38,8 @@
 //!   (`tune-net`) that splits one global budget across all layers with a
 //!   UCB allocator.
 //! * [`experiments`] — one harness per paper table/figure (Fig 2–5,
-//!   Table 2b/4/5, headline metrics).
+//!   Table 2b/4/5, headline metrics) plus the beyond-paper `transfer`
+//!   study (cold vs warm sample-efficiency).
 
 pub mod compiler;
 pub mod engine;
@@ -54,4 +61,5 @@ pub mod prelude {
     pub use crate::util::rng::Rng;
     pub use crate::vta::{config::VtaConfig, Simulator};
     pub use crate::workloads::resnet18::{self, ConvLayer};
+    pub use crate::workloads::{network, Network};
 }

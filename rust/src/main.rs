@@ -1,13 +1,17 @@
 //! ml2tuner CLI — the L3 coordinator entrypoint.
 //!
 //! ```text
-//! ml2tuner info                         hardware config, spaces, artifacts
-//! ml2tuner tune --layer conv1 [--tuner ml2tuner|tvm|random]
-//!               [--trials N] [--seed S] [--jobs J] [--db out.json]
-//! ml2tuner tune-net [--tuner ml2tuner|tvm|random] [--trials N]
-//!               [--round N] [--seed S] [--jobs J] [--layers a,b,..]
-//!               [--out dir]           whole-network tuning, one budget
-//! ml2tuner simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]
+//! ml2tuner info                         hardware config, networks, spaces
+//! ml2tuner tune [--network resnet18] --layer conv1
+//!               [--tuner ml2tuner|tvm|random] [--trials N] [--seed S]
+//!               [--jobs J] [--db out.json] [--transfer-from dir]
+//! ml2tuner tune-net [--network resnet18|vgg16|mobilenet|synth-gemm]
+//!               [--tuner ml2tuner|tvm|random] [--trials N] [--round N]
+//!               [--seed S] [--jobs J] [--layers a,b,..] [--out dir]
+//!               [--transfer-from dir] [--transfer-cap N]
+//!               whole-network tuning, one budget
+//! ml2tuner simulate [--network N] --layer conv1
+//!               --schedule TH,TW,OC,IC,VT [--numeric]
 //! ml2tuner validate [--layer conv1] [--samples N] [--seed S]
 //!               (simulator vs AOT JAX/Pallas golden, bit-exact)
 //! ml2tuner experiment <id>|all [--quick] [--repeats N] [--seed S]
@@ -24,7 +28,7 @@ use ml2tuner::engine::{
 };
 use ml2tuner::experiments::{self, ExpConfig};
 use ml2tuner::runtime::{golden, Runtime};
-use ml2tuner::tuner::database::Database;
+use ml2tuner::tuner::database::{Database, TransferDb};
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
 use ml2tuner::tuner::random_baseline::RandomTuner;
 use ml2tuner::tuner::report::ProfilingCostModel;
@@ -33,7 +37,7 @@ use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::util::rng::Rng;
 use ml2tuner::util::table::Table;
 use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
-use ml2tuner::workloads::{resnet18, synth};
+use ml2tuner::workloads::{self, resnet18, synth, ConvLayer, Network};
 
 /// Tiny flag parser: `--key value` pairs + positionals.
 struct Args {
@@ -124,26 +128,82 @@ fn print_usage() {
          VTA\n\n\
          commands:\n  \
          info\n  \
-         tune --layer conv1 [--tuner ml2tuner|tvm|random] [--trials N] \
-         [--seed S] [--jobs J] [--db out.json]\n  \
-         tune-net [--tuner ml2tuner|tvm|random] [--trials N] [--round N] \
-         [--seed S] [--jobs J] [--layers conv1,conv2,..] [--out dir]\n  \
-         simulate --layer conv1 --schedule TH,TW,OC,IC,VT [--numeric]\n  \
+         tune [--network N] --layer conv1 [--tuner ml2tuner|tvm|random] \
+         [--trials N]\n       [--seed S] [--jobs J] [--db out.json] \
+         [--transfer-from dir]\n  \
+         tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
+         [--tuner ..]\n       [--trials N] [--round N] [--seed S] \
+         [--jobs J] [--layers a,b,..]\n       [--out dir] \
+         [--transfer-from dir] [--transfer-cap N]\n  \
+         simulate [--network N] --layer conv1 --schedule TH,TW,OC,IC,VT \
+         [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
-         headline|all> [--quick] [--repeats N] [--seed S]\n\n\
+         headline|transfer|all> [--quick] [--repeats N] [--seed S]\n\n\
+         --network: a registered workload ({}); layer names are resolved\n\
+        \x20       within it.\n\
          --jobs: profiling/compile worker threads (default: all cores); \
          traces are\n        identical for any worker count.\n\
+         --transfer-from: directory of prior tuning logs (tune --db / \
+         tune-net --out);\n        shape-similar layers warm-start the \
+         models before the first batch.\n\
          tune-net splits one global --trials budget across the layers \
          with a\n        round-robin + UCB allocator and saves one tuning \
-         log per layer to --out."
+         log per layer to --out.",
+        workloads::network_names().join("|")
     );
 }
 
-fn layer_arg(args: &Args) -> Result<resnet18::ConvLayer> {
-    let name = args.get("layer").unwrap_or("conv1");
-    resnet18::layer(name)
-        .ok_or_else(|| anyhow!("unknown layer '{name}' (conv1..conv10)"))
+fn network_arg(args: &Args) -> Result<&'static Network> {
+    let name = args.get("network").unwrap_or("resnet18");
+    workloads::network(name).ok_or_else(|| {
+        anyhow!(
+            "unknown network '{name}' (known: {})",
+            workloads::network_names().join(", ")
+        )
+    })
+}
+
+fn layer_arg(args: &Args, net: &Network) -> Result<ConvLayer> {
+    match args.get("layer") {
+        None => Ok(net.layers[0]),
+        Some(name) => net.layer(name).ok_or_else(|| {
+            anyhow!(
+                "unknown layer '{name}' of network '{}' (layers: {})",
+                net.name,
+                net.layer_names().join(", ")
+            )
+        }),
+    }
+}
+
+/// Load the `--transfer-from` store, when given — but only for the
+/// policy that can use it; the baselines get a note instead of paying
+/// for the directory parse.
+fn transfer_arg(args: &Args, kind: TunerKind) -> Result<Option<TransferDb>> {
+    let Some(dir) = args.get("transfer-from") else {
+        return Ok(None);
+    };
+    if kind != TunerKind::Ml2 {
+        println!("note: --transfer-from only warm-starts the ml2tuner \
+                  policy; {} runs cold", kind.name());
+        return Ok(None);
+    }
+    let store = TransferDb::load_dir(dir)?;
+    if store.is_empty() {
+        bail!("--transfer-from {dir}: no tuning logs found");
+    }
+    let skipped = if store.skipped > 0 {
+        format!(" ({} unparseable files skipped)", store.skipped)
+    } else {
+        String::new()
+    };
+    println!(
+        "transfer store: {} layer logs, {} records{skipped} from {dir}",
+        store.n_layers(),
+        store.total_records()
+    );
+    Ok(Some(store))
 }
 
 fn cmd_info() -> Result<()> {
@@ -161,20 +221,34 @@ fn cmd_info() -> Result<()> {
         cfg.clock_mhz,
         cfg.shift
     );
-    let mut t = Table::new(&["layer", "H,W,C", "KC,KH,KW", "OH,OW",
-                             "pad,stride", "space size"]);
-    for l in resnet18::LAYERS {
-        let space = ml2tuner::compiler::schedule::candidates(&l);
-        t.row(&[
-            l.name.to_string(),
-            format!("{},{},{}", l.h, l.w, l.c),
-            format!("{},{},{}", l.kc, l.kh, l.kw),
-            format!("{},{}", l.oh, l.ow),
-            format!("{},{}", l.pad, l.stride),
-            format!("{}", space.len()),
+    let mut nets = Table::new(&["network", "layers", "total MACs",
+                                "description"]);
+    for net in &workloads::NETWORKS {
+        nets.row(&[
+            net.name.to_string(),
+            net.layers.len().to_string(),
+            net.total_macs().to_string(),
+            net.description.to_string(),
         ]);
     }
-    t.print();
+    nets.print();
+    for net in &workloads::NETWORKS {
+        println!("\n-- {} --", net.name);
+        let mut t = Table::new(&["layer", "H,W,C", "KC,KH,KW", "OH,OW",
+                                 "pad,stride", "space size"]);
+        for l in net.layers {
+            let space = ml2tuner::compiler::schedule::candidates(l);
+            t.row(&[
+                l.name.to_string(),
+                format!("{},{},{}", l.h, l.w, l.c),
+                format!("{},{},{}", l.kc, l.kh, l.kw),
+                format!("{},{}", l.oh, l.ow),
+                format!("{},{}", l.pad, l.stride),
+                format!("{}", space.len()),
+            ]);
+        }
+        t.print();
+    }
     match Runtime::open_default() {
         Ok(rt) => println!(
             "artifacts: OK ({} layers, platform {})",
@@ -188,7 +262,8 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
-    let layer = layer_arg(args)?;
+    let net = network_arg(args)?;
+    let layer = layer_arg(args, net)?;
     let trials = args.get_usize("trials", 300)?;
     let seed = args.get_u64("seed", 0)?;
     let jobs = args.get_usize("jobs", default_jobs())?;
@@ -197,8 +272,30 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let kind = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
+    let transfer = transfer_arg(args, kind)?;
     let mut tuner: Box<dyn Tuner> = match kind {
-        TunerKind::Ml2 => Box::new(Ml2Tuner::new(cfg)),
+        TunerKind::Ml2 => {
+            let mut t = Ml2Tuner::new(cfg);
+            if let Some(store) = &transfer {
+                let cap = args.get_usize("transfer-cap", 400)?;
+                match store.warm_start_for(&layer, cap) {
+                    Some(warm) => {
+                        println!(
+                            "warm start: {} transferred records for {}",
+                            warm.len(),
+                            layer.name
+                        );
+                        t = t.with_warm_start(warm);
+                    }
+                    None => println!(
+                        "warm start: no shape-similar source for {} — \
+                         starting cold",
+                        layer.name
+                    ),
+                }
+            }
+            Box::new(t)
+        }
         TunerKind::Tvm => Box::new(TvmTuner::new(cfg)),
         TunerKind::Random => Box::new(RandomTuner::new(cfg)),
     };
@@ -245,7 +342,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         trace.estimated_wall_clock(&ProfilingCostModel::default())
     );
     if let Some(path) = args.get("db") {
-        let mut db = Database::new(layer.name);
+        let mut db = Database::for_layer(&layer);
         for r in &trace.trials {
             db.push(r.clone());
         }
@@ -256,6 +353,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_tune_net(args: &Args) -> Result<()> {
+    let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
     let round = args.get_usize("round", 10)?;
     let seed = args.get_u64("seed", 0)?;
@@ -263,13 +361,21 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let tuner = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
-    let layers: Vec<resnet18::ConvLayer> = match args.get("layers") {
-        None => resnet18::LAYERS.to_vec(),
+    // --layers is resolved through the registry, so layer selection
+    // works for every network, not just resnet18
+    let layers: Vec<ConvLayer> = match args.get("layers") {
+        None => net.layers.to_vec(),
         Some(list) => list
             .split(',')
             .map(|n| {
-                resnet18::layer(n.trim())
-                    .ok_or_else(|| anyhow!("unknown layer '{}'", n.trim()))
+                let n = n.trim();
+                net.layer(n).ok_or_else(|| {
+                    anyhow!(
+                        "unknown layer '{n}' of network '{}' (layers: {})",
+                        net.name,
+                        net.layer_names().join(", ")
+                    )
+                })
             })
             .collect::<Result<_>>()?,
     };
@@ -285,10 +391,14 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
         total_trials: trials,
         round_trials: round,
         base: TunerConfig { seed, ..Default::default() },
+        transfer: transfer_arg(args, tuner)?,
+        transfer_cap: args.get_usize("transfer-cap", 400)?,
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
     let t0 = std::time::Instant::now();
+    println!("tuning {} ({} layers, {} trials)", net.name, layers.len(),
+             trials);
     let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
     print!("{}", outcome.report.render());
     let cache = engine.cache().stats();
@@ -327,7 +437,8 @@ fn parse_schedule(text: &str) -> Result<Schedule> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let layer = layer_arg(args)?;
+    let net = network_arg(args)?;
+    let layer = layer_arg(args, net)?;
     let sched = parse_schedule(
         args.get("schedule").ok_or_else(|| anyhow!("--schedule required"))?,
     )?;
@@ -374,7 +485,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn numeric_vs_golden(
     rt: &mut Runtime,
     sim: &Simulator,
-    layer: &resnet18::ConvLayer,
+    layer: &ConvLayer,
     compiled: &ml2tuner::compiler::Compiled,
     seed: u64,
 ) -> Result<bool> {
@@ -394,14 +505,21 @@ fn numeric_vs_golden(
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
+    // the AOT JAX/Pallas golden artifacts exist for resnet18 only
+    // (network_arg reports unknown names with the registry list)
+    let resnet = network_arg(args)?;
+    if resnet.name != "resnet18" {
+        bail!("validate: golden AOT artifacts exist for resnet18 only \
+               (got --network {})", resnet.name);
+    }
     let cfg = VtaConfig::zcu102();
     let compiler = Compiler::new(cfg.clone());
     let sim = Simulator::new(cfg.clone());
     let mut rt = Runtime::open_default()?;
     let samples = args.get_usize("samples", 5)?;
     let seed = args.get_u64("seed", 42)?;
-    let layers: Vec<resnet18::ConvLayer> = match args.get("layer") {
-        Some(_) => vec![layer_arg(args)?],
+    let layers: Vec<ConvLayer> = match args.get("layer") {
+        Some(_) => vec![layer_arg(args, resnet)?],
         None => resnet18::LAYERS.to_vec(),
     };
     let mut rng = Rng::new(seed);

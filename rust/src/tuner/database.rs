@@ -2,14 +2,19 @@
 //!
 //! Stores every profiling attempt with its features and outcome, feeds the
 //! three models' training sets, and persists as a JSON tuning log
-//! (TVM-style) so runs can be resumed or analyzed offline.
+//! (TVM-style) so runs can be resumed or analyzed offline. Logs carry the
+//! layer's shape ([`LayerMeta`]), which is what lets [`TransferDb`] match
+//! a directory of prior logs against a *new* layer and assemble a
+//! warm-start training set for it (cross-workload transfer, cf. the
+//! MetaTune / HW-aware-initialization lines in PAPERS.md).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::compiler::schedule::Schedule;
 use crate::util::json::Json;
+use crate::workloads::ConvLayer;
 
 /// Profiling outcome classes (paper §A.2: register-error crash vs
 /// wrong-result; both are invalid).
@@ -58,16 +63,132 @@ impl TrialRecord {
     }
 }
 
+/// Layer shape persisted alongside a tuning log — everything needed to
+/// match a stored log against a new layer without the workload tables at
+/// hand. Mirrors [`ConvLayer`] minus the name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerMeta {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kc: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pad: usize,
+    pub stride: usize,
+}
+
+impl LayerMeta {
+    pub fn of(l: &ConvLayer) -> LayerMeta {
+        LayerMeta {
+            h: l.h, w: l.w, c: l.c, kc: l.kc, kh: l.kh, kw: l.kw,
+            oh: l.oh, ow: l.ow, pad: l.pad, stride: l.stride,
+        }
+    }
+
+    /// GEMM dimensions after im2col: `(M, K, N)` (same mapping as
+    /// [`ConvLayer::gemm_dims`]).
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        crate::workloads::resnet18::im2col_dims(
+            self.oh, self.ow, self.kh, self.kw, self.c, self.kc,
+        )
+    }
+
+    /// Exact MAC count.
+    pub fn macs(&self) -> u64 {
+        let (m, k, n) = self.gemm_dims();
+        m as u64 * k as u64 * n as u64
+    }
+
+    /// log2-space shape signature for similarity matching. The dimensions
+    /// are the ones that determine a layer's schedule space (output
+    /// extent, channel counts, kernel footprint) plus the stride, so two
+    /// layers are "similar" exactly when their spaces — and hence the
+    /// validity boundary and the performance landscape — overlap.
+    pub fn signature(&self) -> Vec<f64> {
+        let lg = |v: usize| (v.max(1) as f64).log2();
+        vec![
+            lg(self.oh),
+            lg(self.ow),
+            lg(self.c),
+            lg(self.kc),
+            lg(self.kh * self.kw),
+            self.stride as f64,
+        ]
+    }
+
+    /// Shape similarity in `(0, 1]`: 1 for identical shapes, decaying
+    /// with the Euclidean distance between log-space signatures.
+    pub fn similarity(&self, other: &LayerMeta) -> f64 {
+        let (a, b) = (self.signature(), other.signature());
+        let d2: f64 =
+            a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        1.0 / (1.0 + d2.sqrt())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("h", self.h)
+            .set("w", self.w)
+            .set("c", self.c)
+            .set("kc", self.kc)
+            .set("kh", self.kh)
+            .set("kw", self.kw)
+            .set("oh", self.oh)
+            .set("ow", self.ow)
+            .set("pad", self.pad)
+            .set("stride", self.stride);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<LayerMeta> {
+        let geti = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("shape missing {k}"))
+        };
+        Ok(LayerMeta {
+            h: geti("h")?,
+            w: geti("w")?,
+            c: geti("c")?,
+            kc: geti("kc")?,
+            kh: geti("kh")?,
+            kw: geti("kw")?,
+            oh: geti("oh")?,
+            ow: geti("ow")?,
+            pad: geti("pad")?,
+            stride: geti("stride")?,
+        })
+    }
+}
+
 /// The profiling database.
 #[derive(Clone, Debug, Default)]
 pub struct Database {
     pub layer: String,
+    /// Layer shape, when known. Logs written before shape persistence
+    /// (or hand-built test databases) have `None` — they still train
+    /// models, but [`TransferDb`] can only match them by exact name.
+    pub meta: Option<LayerMeta>,
     pub records: Vec<TrialRecord>,
 }
 
 impl Database {
     pub fn new(layer: &str) -> Self {
-        Database { layer: layer.to_string(), records: Vec::new() }
+        Database { layer: layer.to_string(), meta: None,
+                   records: Vec::new() }
+    }
+
+    /// Database for a known layer: carries the shape so the persisted
+    /// log is usable for cross-layer transfer.
+    pub fn for_layer(layer: &ConvLayer) -> Self {
+        Database {
+            layer: layer.name.to_string(),
+            meta: Some(LayerMeta::of(layer)),
+            records: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, rec: TrialRecord) {
@@ -151,6 +272,9 @@ impl Database {
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("layer", self.layer.as_str());
+        if let Some(m) = &self.meta {
+            root.set("shape", m.to_json());
+        }
         let recs: Vec<Json> = self
             .records
             .iter()
@@ -188,6 +312,10 @@ impl Database {
             .ok_or_else(|| anyhow!("missing layer"))?
             .to_string();
         let mut db = Database::new(&layer);
+        db.meta = match j.get("shape") {
+            Some(s) => Some(LayerMeta::from_json(s)?),
+            None => None,
+        };
         for r in j
             .get("records")
             .and_then(Json::as_arr)
@@ -243,6 +371,147 @@ impl Database {
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
         Self::from_json(&j)
+    }
+}
+
+// ------------------------------------------------------------ transfer --
+
+/// Sources below this shape similarity are never transferred (a distant
+/// layer's records are noise, not signal; the threshold admits sibling
+/// layers of the same network and near-shape layers of other networks).
+pub const MIN_TRANSFER_SIMILARITY: f64 = 0.25;
+
+/// Cross-run transfer store: every tuning log found in a directory (one
+/// [`Database`] per layer, as written by `tune --db` / `tune-net --out`),
+/// ready to warm-start new runs on any layer of any registered network.
+#[derive(Clone, Debug, Default)]
+pub struct TransferDb {
+    /// Loaded per-layer logs, directory order (sorted by file name).
+    pub sources: Vec<Database>,
+    /// `.json` files in the scanned directory that were not parseable
+    /// tuning logs (skipped, not fatal).
+    pub skipped: usize,
+}
+
+impl TransferDb {
+    pub fn new() -> Self {
+        TransferDb::default()
+    }
+
+    /// Add an in-memory source log (empty logs are ignored).
+    pub fn add(&mut self, db: Database) {
+        if !db.is_empty() {
+            self.sources.push(db);
+        }
+    }
+
+    /// Load every `*.json` tuning log in `dir` (non-recursive). Files
+    /// that do not parse as tuning logs are counted in `skipped`; the
+    /// only hard error is an unreadable directory. File names are sorted
+    /// so the store — and everything warm-started from it — is
+    /// deterministic regardless of directory enumeration order.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<TransferDb> {
+        let dir = dir.as_ref();
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().and_then(|e| e.to_str()) == Some("json")
+            })
+            .collect();
+        paths.sort();
+        let mut store = TransferDb::new();
+        for p in &paths {
+            match Database::load(p) {
+                Ok(db) if !db.is_empty() => store.sources.push(db),
+                Ok(_) => {}
+                Err(_) => store.skipped += 1,
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn total_records(&self) -> usize {
+        self.sources.iter().map(Database::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+
+    /// Assemble a warm-start database for `layer`: records from the most
+    /// similar stored layers (shape similarity ≥
+    /// [`MIN_TRANSFER_SIMILARITY`], best source first), capped at
+    /// `max_records`.
+    ///
+    /// Valid records have their cycle counts rescaled by the target/source
+    /// MAC ratio so the `log2(cycles)` labels Model P trains on live on
+    /// the target layer's scale — transfer moves the *shape* of the
+    /// performance landscape, the MAC ratio moves its level. Validity
+    /// labels transfer unscaled (the boundary is scratchpad-pressure
+    /// driven, a near-layer-independent function of the schedule).
+    /// Sources without shape metadata (legacy logs) are used only when
+    /// their layer name matches exactly. Records whose hidden-feature
+    /// vector does not match this build's layout are dropped.
+    ///
+    /// Returns `None` when nothing transfers. The returned database's
+    /// `space_index` values refer to the *source* layers' spaces and are
+    /// meaningless for the target — warm databases are training-only and
+    /// must never drive measurement bookkeeping.
+    pub fn warm_start_for(
+        &self,
+        layer: &ConvLayer,
+        max_records: usize,
+    ) -> Option<Database> {
+        let target = LayerMeta::of(layer);
+        let mut scored: Vec<(f64, &Database)> = self
+            .sources
+            .iter()
+            .filter_map(|src| {
+                let sim = match &src.meta {
+                    Some(m) => target.similarity(m),
+                    None if src.layer == layer.name => 1.0,
+                    None => return None,
+                };
+                (sim >= MIN_TRANSFER_SIMILARITY).then_some((sim, src))
+            })
+            .collect();
+        // best source first; ties keep load order (sort is stable)
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let hidden_len = crate::compiler::features::HIDDEN_NAMES.len();
+        let mut warm = Database::for_layer(layer);
+        for (_, src) in scored {
+            if warm.len() >= max_records {
+                break;
+            }
+            let ratio = match &src.meta {
+                Some(m) => target.macs() as f64 / m.macs() as f64,
+                None => 1.0,
+            };
+            for rec in &src.records {
+                if warm.len() >= max_records {
+                    break;
+                }
+                if rec.hidden.len() != hidden_len {
+                    continue;
+                }
+                let mut r = rec.clone();
+                if let Outcome::Valid { cycles } = r.outcome {
+                    let scaled = (cycles as f64 * ratio).round().max(1.0);
+                    r.outcome = Outcome::Valid { cycles: scaled as u64 };
+                }
+                warm.push(r);
+            }
+        }
+        if warm.is_empty() {
+            None
+        } else {
+            Some(warm)
+        }
     }
 }
 
@@ -309,6 +578,100 @@ mod tests {
         db.save(&path).unwrap();
         let back = Database::load(&path).unwrap();
         assert_eq!(back.len(), 1);
+        assert!(back.meta.is_none(), "name-only db has no shape");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn layer_meta_round_trips_through_json() {
+        let layer = crate::workloads::resnet18::layer("conv3").unwrap();
+        let mut db = Database::for_layer(&layer);
+        db.push(rec(0, Outcome::Valid { cycles: 99 }));
+        let back = Database::from_json(&db.to_json()).unwrap();
+        assert_eq!(back.meta, Some(LayerMeta::of(&layer)));
+        assert_eq!(back.layer, "conv3");
+    }
+
+    #[test]
+    fn similarity_is_identity_at_equal_shapes_and_orders_neighbors() {
+        let pw5 =
+            crate::workloads::mobilenet::layer("pw5").unwrap();
+        let pw4 =
+            crate::workloads::mobilenet::layer("pw4").unwrap();
+        let far =
+            crate::workloads::gemm::layer("gemm_4096x64x64").unwrap();
+        let (a, b, c) =
+            (LayerMeta::of(&pw5), LayerMeta::of(&pw4), LayerMeta::of(&far));
+        assert_eq!(a.similarity(&a), 1.0);
+        assert!(a.similarity(&b) > a.similarity(&c),
+                "sibling pointwise layer must beat a distant GEMM");
+        assert!(a.similarity(&c) < MIN_TRANSFER_SIMILARITY,
+                "distant shapes fall below the transfer threshold");
+    }
+
+    fn full_hidden_rec(i: usize, outcome: Outcome) -> TrialRecord {
+        let mut r = rec(i, outcome);
+        r.hidden = vec![1.0; crate::compiler::features::HIDDEN_NAMES.len()];
+        r
+    }
+
+    #[test]
+    fn warm_start_scales_valid_cycles_by_mac_ratio() {
+        // pw4 (14x14, 256->512) has exactly half the MACs of pw5
+        // (14x14, 512->512): transferred labels must double.
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
+        assert_eq!(pw5.macs(), 2 * pw4.macs());
+        let mut src = Database::for_layer(&pw4);
+        src.push(full_hidden_rec(0, Outcome::Valid { cycles: 1000 }));
+        src.push(full_hidden_rec(1, Outcome::Crash));
+        let mut store = TransferDb::new();
+        store.add(src);
+        let warm = store.warm_start_for(&pw5, 100).unwrap();
+        assert_eq!(warm.layer, "pw5");
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm.records[0].outcome,
+                   Outcome::Valid { cycles: 2000 });
+        assert_eq!(warm.records[1].outcome, Outcome::Crash,
+                   "validity labels transfer unscaled");
+    }
+
+    #[test]
+    fn warm_start_prefers_similar_sources_and_respects_cap() {
+        let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        let far = crate::workloads::gemm::layer("gemm_4096x64x64").unwrap();
+        let pw3 = crate::workloads::mobilenet::layer("pw3").unwrap();
+        let mut store = TransferDb::new();
+        for (layer, base) in [(&far, 0), (&pw3, 10), (&pw4, 20)] {
+            let mut db = Database::for_layer(layer);
+            for i in 0..5 {
+                db.push(full_hidden_rec(base + i,
+                                        Outcome::Valid { cycles: 500 }));
+            }
+            store.add(db);
+        }
+        let warm = store.warm_start_for(&pw5, 7).unwrap();
+        assert_eq!(warm.len(), 7, "cap respected");
+        // most similar source (pw4) first: its 5 records lead
+        assert!(warm.records[..5]
+            .iter()
+            .all(|r| (20..25).contains(&r.space_index)));
+        // the distant GEMM shape is below the threshold — excluded, so
+        // the remainder comes from pw3
+        assert!(warm.records[5..]
+            .iter()
+            .all(|r| (10..15).contains(&r.space_index)));
+    }
+
+    #[test]
+    fn transfer_db_drops_records_with_foreign_hidden_layout() {
+        let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        let mut src = Database::for_layer(&pw4);
+        src.push(rec(0, Outcome::Valid { cycles: 100 })); // 3-long hidden
+        let mut store = TransferDb::new();
+        store.add(src);
+        assert!(store.warm_start_for(&pw5, 10).is_none());
     }
 }

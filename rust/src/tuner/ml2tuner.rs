@@ -30,11 +30,16 @@ pub struct Ml2Tuner {
     pub use_v: bool,
     /// Ablation: apply hidden-feature re-ranking (model A).
     pub use_a: bool,
+    /// Transferred records (see
+    /// [`crate::tuner::database::TransferDb::warm_start_for`]) that
+    /// pre-train P/V/A before the first profiled batch. Training-only:
+    /// they never count against the budget or enter the trace.
+    pub warm: Option<Database>,
 }
 
 impl Ml2Tuner {
     pub fn new(cfg: TunerConfig) -> Self {
-        Ml2Tuner { cfg, use_v: true, use_a: true }
+        Ml2Tuner { cfg, use_v: true, use_a: true, warm: None }
     }
 
     pub fn without_v(mut self) -> Self {
@@ -46,15 +51,31 @@ impl Ml2Tuner {
         self.use_a = false;
         self
     }
+
+    /// Warm-start the models from a transferred database. An empty
+    /// database is a no-op (the run stays cold, named "ml2tuner"), so
+    /// traces never claim a warm start that contributed nothing.
+    pub fn with_warm_start(mut self, warm: Database) -> Self {
+        if !warm.is_empty() {
+            self.warm = Some(warm);
+        }
+        self
+    }
 }
 
 impl Tuner for Ml2Tuner {
     fn name(&self) -> &'static str {
-        match (self.use_v, self.use_a) {
-            (true, true) => "ml2tuner",
-            (false, true) => "ml2tuner-noV",
-            (true, false) => "ml2tuner-noA",
-            (false, false) => "ml2tuner-Ponly",
+        match (self.use_v, self.use_a, self.warm.is_some()) {
+            (true, true, false) => "ml2tuner",
+            (false, true, false) => "ml2tuner-noV",
+            (true, false, false) => "ml2tuner-noA",
+            (false, false, false) => "ml2tuner-Ponly",
+            // warm-started variants carry the suffix so persisted
+            // traces always distinguish warm from cold runs
+            (true, true, true) => "ml2tuner-warm",
+            (false, true, true) => "ml2tuner-noV-warm",
+            (true, false, true) => "ml2tuner-noA-warm",
+            (false, false, true) => "ml2tuner-Ponly-warm",
         }
     }
 
@@ -66,14 +87,15 @@ impl Tuner for Ml2Tuner {
         let cfg = &self.cfg;
         let mut rng = Rng::new(cfg.seed ^ salt::ML2);
         let mut space = env.space.clone();
-        let mut db = Database::new(env.layer.name);
+        let mut db = Database::for_layer(&env.layer);
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
             let batch = select_batch(cfg, self.use_v, self.use_a, env,
-                                     engine, &space, &db, &mut rng, round,
+                                     engine, &space, &db,
+                                     self.warm.as_ref(), &mut rng, round,
                                      n);
             if batch.is_empty() {
                 break;
@@ -94,6 +116,13 @@ impl Tuner for Ml2Tuner {
 /// the engine for hidden features, train A, and keep the `n` best
 /// re-ranked candidates. Shared by [`Ml2Tuner`] and the network
 /// scheduler's incremental [`crate::engine::LayerSession`].
+///
+/// When a `warm` database is given, its transferred records are merged
+/// into every training set (warm rows first) and count toward the
+/// `min_train` readiness gate — so a warm-started run is model-guided
+/// from its very first batch instead of burning `min_train` random
+/// trials. With `warm = None` the behaviour is byte-identical to the
+/// cold tuner.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
@@ -103,14 +132,24 @@ pub(crate) fn select_batch(
     engine: &Engine,
     space: &SearchSpace,
     db: &Database,
+    warm: Option<&Database>,
     rng: &mut Rng,
     round: u64,
     n: usize,
 ) -> Vec<usize> {
+    let warm = warm.filter(|w| !w.is_empty());
+    let n_valid = db.n_valid() + warm.map_or(0, Database::n_valid);
+    let n_seen = db.len() + warm.map_or(0, Database::len);
     // Train P once and reuse it (the readiness probe used to train a
     // throwaway model first); P is trainable iff ≥ 2 valid records.
-    let p = if db.n_valid() >= 2 && db.len() >= cfg.min_train {
-        ModelP::train(db, cfg.boost_rounds, cfg.seed ^ round)
+    let p = if n_valid >= 2 && n_seen >= cfg.min_train {
+        match warm {
+            Some(w) => {
+                ModelP::train_warm(db, w, cfg.boost_rounds,
+                                   cfg.seed ^ round)
+            }
+            None => ModelP::train(db, cfg.boost_rounds, cfg.seed ^ round),
+        }
     } else {
         None
     };
@@ -118,7 +157,13 @@ pub(crate) fn select_batch(
         return space.sample_unmeasured(rng, n);
     };
     let v = if use_v {
-        ModelV::train(db, cfg.boost_rounds, cfg.seed ^ round)
+        match warm {
+            Some(w) => {
+                ModelV::train_warm(db, w, cfg.boost_rounds,
+                                   cfg.seed ^ round)
+            }
+            None => ModelV::train(db, cfg.boost_rounds, cfg.seed ^ round),
+        }
     } else {
         None
     };
@@ -130,7 +175,14 @@ pub(crate) fn select_batch(
         // Compile the whole pool (batched, cached), harvest hidden
         // features, re-rank with A. The engine's cache means the `n`
         // winners are NOT recompiled when profiled right after.
-        match ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round) {
+        let a = match warm {
+            Some(w) => {
+                ModelA::train_warm(db, w, cfg.boost_rounds,
+                                   cfg.seed ^ round)
+            }
+            None => ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round),
+        };
+        match a {
             None => pool.into_iter().take(n).collect(),
             Some(a) => {
                 let compiled = engine.compile_batch(env, &pool);
@@ -200,11 +252,63 @@ mod tests {
 
     #[test]
     fn ablation_names() {
+        use crate::tuner::database::{Outcome, TrialRecord};
         let cfg = TunerConfig::default();
         assert_eq!(Ml2Tuner::new(cfg.clone()).name(), "ml2tuner");
         assert_eq!(Ml2Tuner::new(cfg.clone()).without_v().name(),
                    "ml2tuner-noV");
-        assert_eq!(Ml2Tuner::new(cfg).without_v().without_a().name(),
+        assert_eq!(Ml2Tuner::new(cfg.clone()).without_v().without_a().name(),
                    "ml2tuner-Ponly");
+        // an empty warm database is a no-op: the run stays cold
+        assert_eq!(
+            Ml2Tuner::new(cfg.clone())
+                .with_warm_start(Database::new("x"))
+                .name(),
+            "ml2tuner"
+        );
+        let s = crate::compiler::schedule::Schedule {
+            tile_h: 1, tile_w: 1, tile_oc: 16, tile_ic: 16, n_vthreads: 1,
+        };
+        let mut warm = Database::new("x");
+        warm.push(TrialRecord {
+            space_index: 0,
+            schedule: s,
+            visible: s.visible_features(),
+            hidden: vec![],
+            outcome: Outcome::Crash,
+        });
+        assert_eq!(Ml2Tuner::new(cfg).with_warm_start(warm).name(),
+                   "ml2tuner-warm");
+    }
+
+    #[test]
+    fn warm_start_runs_are_deterministic_and_respect_budget() {
+        use crate::tuner::database::TransferDb;
+        let e = env();
+        // source log: a spread of profiled conv5 configurations
+        let mut src = Database::for_layer(&e.layer);
+        for i in 0..60 {
+            src.push(e.profile(i * 37));
+        }
+        let mut store = TransferDb::new();
+        store.add(src);
+        let warm = store.warm_start_for(&e.layer, 100).unwrap();
+        let cfg = TunerConfig { max_trials: 30, seed: 3,
+                                ..Default::default() };
+        let a = Ml2Tuner::new(cfg.clone())
+            .with_warm_start(warm.clone())
+            .tune(&e);
+        let b = Ml2Tuner::new(cfg).with_warm_start(warm).tune(&e);
+        assert_eq!(a.tuner, "ml2tuner-warm");
+        assert_eq!(a.len(), 30);
+        let mut idx: Vec<usize> =
+            a.trials.iter().map(|t| t.space_index).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 30, "warm records must not be re-profiled \
+                                   bookkeeping-wise");
+        let ai: Vec<usize> = a.trials.iter().map(|t| t.space_index).collect();
+        let bi: Vec<usize> = b.trials.iter().map(|t| t.space_index).collect();
+        assert_eq!(ai, bi, "warm-started runs are deterministic per seed");
     }
 }

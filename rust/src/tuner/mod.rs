@@ -2,10 +2,14 @@
 //!
 //! * [`space`] — per-layer search space with measurement bookkeeping.
 //! * [`database`] — profiling records (schedule, features, outcome) with
-//!   JSON persistence (TVM-style tuning log).
+//!   JSON persistence (TVM-style tuning log, shape-stamped), plus the
+//!   cross-run [`database::TransferDb`]: a directory of prior logs,
+//!   similarity-matched in shape space to warm-start new layers.
 //! * [`models`] — cost models **P** (performance, visible features),
 //!   **V** (validity classifier, visible features) and **A** (performance,
-//!   visible ⊕ hidden features) over the [`crate::gbdt`] substrate.
+//!   visible ⊕ hidden features) over the [`crate::gbdt`] substrate; each
+//!   has a `train_warm` path that pre-trains on transferred records
+//!   before the first profiled batch.
 //! * [`explorer`] — candidate selection: P-ranking, V-filtering,
 //!   ε-greedy exploration, A re-ranking (paper Fig. 1).
 //! * [`ml2tuner`] — the full ML²Tuner loop; [`tvm_baseline`] — the

@@ -13,20 +13,58 @@
 use crate::gbdt::{Booster, Dataset, GbdtParams};
 use crate::tuner::database::Database;
 
+/// Shared training tail: readiness guard (≥ 2 rows) + boosting.
+fn fit(params: GbdtParams, xs: Vec<Vec<f64>>, ys: Vec<f64>)
+    -> Option<Booster>
+{
+    if xs.len() < 2 {
+        return None;
+    }
+    let data = Dataset::from_rows(&xs, &ys);
+    Some(Booster::train(&params, &data))
+}
+
+/// Warm-start training set: rows from `warm` (a transferred database,
+/// see [`crate::tuner::database::TransferDb::warm_start_for`]) precede
+/// the freshly profiled rows, so a model is trainable *before the first
+/// profiled batch* of a run.
+fn warm_rows(
+    fresh: (Vec<Vec<f64>>, Vec<f64>),
+    warm: (Vec<Vec<f64>>, Vec<f64>),
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let (mut xs, mut ys) = warm;
+    xs.extend(fresh.0);
+    ys.extend(fresh.1);
+    (xs, ys)
+}
+
 /// A trained P model.
 pub struct ModelP {
     pub booster: Booster,
 }
 
 impl ModelP {
+    fn params(rounds: usize, seed: u64) -> GbdtParams {
+        GbdtParams::model_p().with_rounds(rounds).with_seed(seed)
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
         let (xs, ys) = db.train_p();
-        if xs.len() < 2 {
-            return None;
-        }
-        let params = GbdtParams::model_p().with_rounds(rounds).with_seed(seed);
-        let data = Dataset::from_rows(&xs, &ys);
-        Some(ModelP { booster: Booster::train(&params, &data) })
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelP { booster })
+    }
+
+    /// Transfer warm-start variant: transferred rows first, fresh rows
+    /// after (see [`warm_rows`]).
+    pub fn train_warm(
+        fresh: &Database,
+        warm: &Database,
+        rounds: usize,
+        seed: u64,
+    ) -> Option<ModelP> {
+        let (xs, ys) = warm_rows(fresh.train_p(), warm.train_p());
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelP { booster })
     }
 
     /// TVM-approach variant: all records, invalids penalized.
@@ -36,12 +74,8 @@ impl ModelP {
         seed: u64,
     ) -> Option<ModelP> {
         let (xs, ys) = db.train_p_with_penalty();
-        if xs.len() < 2 {
-            return None;
-        }
-        let params = GbdtParams::model_p().with_rounds(rounds).with_seed(seed);
-        let data = Dataset::from_rows(&xs, &ys);
-        Some(ModelP { booster: Booster::train(&params, &data) })
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelP { booster })
     }
 
     /// Predicted `log2(cycles)` — lower is better.
@@ -56,16 +90,31 @@ pub struct ModelV {
 }
 
 impl ModelV {
+    fn params(rounds: usize, seed: u64) -> GbdtParams {
+        GbdtParams::model_v().with_rounds(rounds).with_seed(seed)
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
-        let (xs, ys) = db.train_v();
-        if xs.len() < 2 {
-            return None;
-        }
         // degenerate labels (all same class) would still train but predict a
         // constant; that is fine — the explorer falls back gracefully.
-        let params = GbdtParams::model_v().with_rounds(rounds).with_seed(seed);
-        let data = Dataset::from_rows(&xs, &ys);
-        Some(ModelV { booster: Booster::train(&params, &data) })
+        let (xs, ys) = db.train_v();
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelV { booster })
+    }
+
+    /// Transfer warm-start variant of [`ModelV::train`]: transferred
+    /// rows first, fresh rows after. The validity boundary is
+    /// scratchpad-pressure driven — a near-layer-independent function of
+    /// the schedule — so V is the model that transfers best.
+    pub fn train_warm(
+        fresh: &Database,
+        warm: &Database,
+        rounds: usize,
+        seed: u64,
+    ) -> Option<ModelV> {
+        let (xs, ys) = warm_rows(fresh.train_v(), warm.train_v());
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelV { booster })
     }
 
     /// True if the model predicts the configuration will run validly.
@@ -92,14 +141,27 @@ pub struct ModelA {
 }
 
 impl ModelA {
+    fn params(rounds: usize, seed: u64) -> GbdtParams {
+        GbdtParams::model_a().with_rounds(rounds).with_seed(seed)
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
         let (xs, ys) = db.train_a();
-        if xs.len() < 2 {
-            return None;
-        }
-        let params = GbdtParams::model_a().with_rounds(rounds).with_seed(seed);
-        let data = Dataset::from_rows(&xs, &ys);
-        Some(ModelA { booster: Booster::train(&params, &data) })
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelA { booster })
+    }
+
+    /// Transfer warm-start variant of [`ModelA::train`]: transferred
+    /// rows (visible ⊕ stored hidden features) first, fresh rows after.
+    pub fn train_warm(
+        fresh: &Database,
+        warm: &Database,
+        rounds: usize,
+        seed: u64,
+    ) -> Option<ModelA> {
+        let (xs, ys) = warm_rows(fresh.train_a(), warm.train_a());
+        fit(Self::params(rounds, seed), xs, ys)
+            .map(|booster| ModelA { booster })
     }
 
     /// Predicted `log2(cycles)` from visible ⊕ hidden features.
@@ -184,5 +246,48 @@ mod tests {
         let db = synth_db(1);
         assert!(ModelP::train(&db, 10, 0).is_none());
         assert!(ModelA::train(&db, 10, 0).is_none());
+    }
+
+    #[test]
+    fn warm_start_trains_before_any_fresh_record() {
+        let warm = synth_db(256);
+        let fresh = Database::new("target");
+        assert!(ModelP::train(&fresh, 40, 1).is_none(),
+                "cold model needs fresh records");
+        let p = ModelP::train_warm(&fresh, &warm, 80, 1).unwrap();
+        let f = |th: usize| {
+            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 1 };
+            p.predict(&s.visible_features())
+        };
+        assert!(f(2) > f(12),
+                "transferred records alone must order the landscape");
+        let v = ModelV::train_warm(&fresh, &warm, 80, 1).unwrap();
+        let s_ok = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32,
+                              tile_ic: 32, n_vthreads: 1 };
+        let s_bad = Schedule { tile_h: 16, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 4 };
+        assert!(v.predict_valid(&s_ok.visible_features()));
+        assert!(!v.predict_valid(&s_bad.visible_features()));
+        assert!(ModelA::train_warm(&fresh, &warm, 40, 1).is_some());
+    }
+
+    #[test]
+    fn warm_start_combines_fresh_and_transferred_rows() {
+        // 1 fresh valid record alone cannot train P; with a warm source
+        // it can, and the fresh row participates (xs = warm ⊕ fresh).
+        let warm = synth_db(16);
+        let mut fresh = Database::new("target");
+        let s = Schedule { tile_h: 3, tile_w: 4, tile_oc: 32, tile_ic: 32,
+                           n_vthreads: 1 };
+        fresh.push(TrialRecord {
+            space_index: 0,
+            schedule: s,
+            visible: s.visible_features(),
+            hidden: vec![12.0, 3.0],
+            outcome: Outcome::Valid { cycles: 70_000 },
+        });
+        assert!(ModelP::train(&fresh, 10, 0).is_none());
+        assert!(ModelP::train_warm(&fresh, &warm, 10, 0).is_some());
     }
 }

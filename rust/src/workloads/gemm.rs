@@ -1,0 +1,64 @@
+//! Synthetic GEMM / dense suite.
+//!
+//! A GEMM with dimensions `(M, K, N)` is exactly a 1×1 convolution with
+//! `OH·OW = M`, `C = K`, `KC = N` (the im2col mapping of
+//! [`ConvLayer::gemm_dims`] with a unit kernel), so transformer-style
+//! matmul and MLP workloads ride on the conv pipeline unchanged. The
+//! suite spans the aspect-ratio extremes — square, wide-K, tall-M, and a
+//! batch-1 dense layer (`M = 1`, the degenerate spatial space) — and is
+//! deliberately cheap to profile: CI's smoke-tune job runs `tune-net` on
+//! this network.
+
+use super::resnet18::ConvLayer;
+
+/// Synthetic GEMM/dense workloads, named `gemm_MxKxN` / `dense_KxN`.
+pub const LAYERS: [ConvLayer; 5] = [
+    // square-ish mid-size GEMM
+    ConvLayer { name: "gemm_256x256x128", h: 16, w: 16, c: 256, kc: 128,
+                kh: 1, kw: 1, oh: 16, ow: 16, pad: 0, stride: 1 },
+    // many rows, moderate reduction
+    ConvLayer { name: "gemm_1024x128x256", h: 32, w: 32, c: 128, kc: 256,
+                kh: 1, kw: 1, oh: 32, ow: 32, pad: 0, stride: 1 },
+    // few rows, deep reduction (attention-projection shape)
+    ConvLayer { name: "gemm_64x512x512", h: 8, w: 8, c: 512, kc: 512,
+                kh: 1, kw: 1, oh: 8, ow: 8, pad: 0, stride: 1 },
+    // tall-and-skinny
+    ConvLayer { name: "gemm_4096x64x64", h: 64, w: 64, c: 64, kc: 64,
+                kh: 1, kw: 1, oh: 64, ow: 64, pad: 0, stride: 1 },
+    // batch-1 dense layer: the spatial knobs collapse to 1×1
+    ConvLayer { name: "dense_512x1024", h: 1, w: 1, c: 512, kc: 1024,
+                kh: 1, kw: 1, oh: 1, ow: 1, pad: 0, stride: 1 },
+];
+
+/// Look up a layer by name (`gemm_MxKxN` / `dense_KxN`).
+pub fn layer(name: &str) -> Option<ConvLayer> {
+    LAYERS.iter().copied().find(|l| l.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_encode_gemm_dims() {
+        for l in LAYERS {
+            let (m, k, n) = l.gemm_dims();
+            if l.name.starts_with("gemm_") {
+                let expect = format!("gemm_{m}x{k}x{n}");
+                assert_eq!(l.name, expect);
+            } else {
+                assert_eq!(m, 1, "{}", l.name);
+                assert_eq!(l.name, format!("dense_{k}x{n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        for l in LAYERS {
+            assert_eq!(l.computed_out(), (l.oh, l.ow), "{}", l.name);
+            assert_eq!(l.c % 16, 0, "{}", l.name);
+            assert_eq!(l.kc % 16, 0, "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! MobileNet-style pointwise-heavy network (Howard et al., 2017).
+//!
+//! MobileNet's compute is dominated by 1×1 pointwise convolutions — a
+//! sharply different schedule-space regime from the 3×3-heavy ResNet/VGG
+//! tables: no input halo, `K = C` exactly, and the `TW·TH` knobs trade
+//! directly against channel tiling. The depthwise 3×3 stages are not
+//! expressible on the GEMM core (each output channel reads a single input
+//! channel), so — as in accelerator deployments that keep depthwise on the
+//! vector unit — the table stands in for each stride-2 depthwise stage
+//! with a dense 3×3 stride-2 reducer (`red1`, `red2`) and keeps every
+//! pointwise conv exactly.
+
+use super::resnet18::ConvLayer;
+
+/// Pointwise-dominated MobileNet-style body: 1×1 convs (`pw*`) plus two
+/// dense 3×3 stride-2 reducers standing in for the depthwise downsamples.
+pub const LAYERS: [ConvLayer; 8] = [
+    ConvLayer { name: "pw1", h: 56, w: 56, c: 64, kc: 128, kh: 1, kw: 1,
+                oh: 56, ow: 56, pad: 0, stride: 1 },
+    ConvLayer { name: "red1", h: 56, w: 56, c: 128, kc: 128, kh: 3, kw: 3,
+                oh: 28, ow: 28, pad: 1, stride: 2 },
+    ConvLayer { name: "pw2", h: 28, w: 28, c: 128, kc: 256, kh: 1, kw: 1,
+                oh: 28, ow: 28, pad: 0, stride: 1 },
+    ConvLayer { name: "pw3", h: 28, w: 28, c: 256, kc: 256, kh: 1, kw: 1,
+                oh: 28, ow: 28, pad: 0, stride: 1 },
+    ConvLayer { name: "red2", h: 28, w: 28, c: 256, kc: 256, kh: 3, kw: 3,
+                oh: 14, ow: 14, pad: 1, stride: 2 },
+    ConvLayer { name: "pw4", h: 14, w: 14, c: 256, kc: 512, kh: 1, kw: 1,
+                oh: 14, ow: 14, pad: 0, stride: 1 },
+    ConvLayer { name: "pw5", h: 14, w: 14, c: 512, kc: 512, kh: 1, kw: 1,
+                oh: 14, ow: 14, pad: 0, stride: 1 },
+    ConvLayer { name: "pw6", h: 7, w: 7, c: 512, kc: 1024, kh: 1, kw: 1,
+                oh: 7, ow: 7, pad: 0, stride: 1 },
+];
+
+/// Look up a layer by name (`pw1` … `pw6`, `red1`, `red2`).
+pub fn layer(name: &str) -> Option<ConvLayer> {
+    LAYERS.iter().copied().find(|l| l.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        for l in LAYERS {
+            assert_eq!(l.computed_out(), (l.oh, l.ow), "{}", l.name);
+            assert_eq!(l.c % 16, 0, "{}", l.name);
+            assert_eq!(l.kc % 16, 0, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn pointwise_layers_have_no_halo() {
+        for l in LAYERS {
+            if l.name.starts_with("pw") {
+                assert_eq!((l.kh, l.kw, l.pad, l.stride), (1, 1, 0, 1),
+                           "{}", l.name);
+                // 1×1 GEMM: K is exactly the input channel count
+                assert_eq!(l.gemm_dims().1, l.c, "{}", l.name);
+            }
+        }
+    }
+}

@@ -1,7 +1,13 @@
-//! Workload definitions: the ResNet18 conv layers the paper profiles
-//! (Table 2a) and synthetic generators for tests/ablations.
+//! Workload definitions: the network registry (ResNet18 from paper Table
+//! 2a, VGG-16, a MobileNet-style pointwise net, a synthetic GEMM suite)
+//! and synthetic generators for tests/ablations.
 
+pub mod gemm;
+pub mod mobilenet;
+pub mod registry;
 pub mod resnet18;
 pub mod synth;
+pub mod vgg16;
 
+pub use registry::{network, network_names, Network, NETWORKS};
 pub use resnet18::ConvLayer;

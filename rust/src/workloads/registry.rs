@@ -1,0 +1,141 @@
+//! The network registry — every workload the tuner knows how to tune.
+//!
+//! PR 1's `tune-net` scheduler was hard-wired to the ResNet18 table; the
+//! registry generalizes the workload layer so `tune-net`, the experiment
+//! harnesses, and the transfer warm-start store operate over *any*
+//! registered network. A [`Network`] is just a name plus its profiled
+//! conv-layer table (cf. paper Table 2a), so adding a workload is one
+//! const table + one registry entry.
+
+use super::gemm;
+use super::mobilenet;
+use super::resnet18::{self, ConvLayer};
+use super::vgg16;
+
+/// A registered network: a name and the conv layers the tuner profiles.
+#[derive(Clone, Copy, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub layers: &'static [ConvLayer],
+}
+
+impl Network {
+    /// Look up a layer of this network by name.
+    pub fn layer(&self, name: &str) -> Option<ConvLayer> {
+        self.layers.iter().copied().find(|l| l.name == name)
+    }
+
+    /// Layer names in table order.
+    pub fn layer_names(&self) -> Vec<&'static str> {
+        self.layers.iter().map(|l| l.name).collect()
+    }
+
+    /// Exact MAC count summed over the table.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+/// All registered networks. (A `static`, not a `const`: lookups hand out
+/// `&'static Network` borrows of this table.)
+pub static NETWORKS: [Network; 4] = [
+    Network {
+        name: "resnet18",
+        description: "ResNet18 profiled convs (paper Table 2a)",
+        layers: &resnet18::LAYERS,
+    },
+    Network {
+        name: "vgg16",
+        description: "VGG-16 blocks 2-5, deduplicated 3x3 convs",
+        layers: &vgg16::LAYERS,
+    },
+    Network {
+        name: "mobilenet",
+        description: "MobileNet-style pointwise-heavy body (1x1 convs)",
+        layers: &mobilenet::LAYERS,
+    },
+    Network {
+        name: "synth-gemm",
+        description: "synthetic GEMM/dense suite (1x1-conv matmuls)",
+        layers: &gemm::LAYERS,
+    },
+];
+
+/// Look up a network by name (a few aliases accepted).
+pub fn network(name: &str) -> Option<&'static Network> {
+    let canon = match name {
+        "resnet-18" => "resnet18",
+        "vgg-16" => "vgg16",
+        "gemm" | "synth_gemm" => "synth-gemm",
+        other => other,
+    };
+    NETWORKS.iter().find(|n| n.name == canon)
+}
+
+/// Registered network names, registry order.
+pub fn network_names() -> Vec<&'static str> {
+    NETWORKS.iter().map(|n| n.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule;
+
+    #[test]
+    fn every_registered_layer_is_consistent() {
+        for net in &NETWORKS {
+            assert!(!net.layers.is_empty(), "{}", net.name);
+            for l in net.layers {
+                assert_eq!(l.computed_out(), (l.oh, l.ow), "{}/{}",
+                           net.name, l.name);
+                assert_eq!(l.c % 16, 0, "{}/{}", net.name, l.name);
+                assert_eq!(l.kc % 16, 0, "{}/{}", net.name, l.name);
+            }
+            let mut names = net.layer_names();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), net.layers.len(),
+                       "{}: duplicate layer names", net.name);
+        }
+    }
+
+    #[test]
+    fn every_layer_has_a_tractable_nonempty_space() {
+        for net in &NETWORKS {
+            for l in net.layers {
+                let n = schedule::candidates(l).len();
+                assert!(n > 0, "{}/{}: empty space", net.name, l.name);
+                assert!(n < 300_000, "{}/{}: space too large ({n})",
+                        net.name, l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_and_aliases() {
+        assert_eq!(network("resnet18").unwrap().layers.len(), 10);
+        assert_eq!(network("vgg-16").unwrap().name, "vgg16");
+        assert_eq!(network("gemm").unwrap().name, "synth-gemm");
+        assert_eq!(network("synth_gemm").unwrap().name, "synth-gemm");
+        assert!(network("alexnet").is_none());
+    }
+
+    #[test]
+    fn layer_lookup_is_scoped_to_the_network() {
+        let mob = network("mobilenet").unwrap();
+        assert!(mob.layer("pw1").is_some());
+        assert!(mob.layer("conv1").is_none());
+        let res = network("resnet18").unwrap();
+        assert!(res.layer("conv1").is_some());
+        assert!(res.layer("pw1").is_none());
+    }
+
+    #[test]
+    fn total_macs_positive() {
+        let macs: Vec<u64> =
+            NETWORKS.iter().map(Network::total_macs).collect();
+        assert!(macs.iter().all(|&m| m > 0));
+    }
+}

@@ -23,10 +23,24 @@ pub struct ConvLayer {
     pub stride: usize,
 }
 
+/// The im2col mapping shared by every conv-shaped view of a workload
+/// (`ConvLayer` and the tuning-log `LayerMeta`): `(M, K, N)` from output
+/// extent, kernel, and channels.
+pub fn im2col_dims(
+    oh: usize,
+    ow: usize,
+    kh: usize,
+    kw: usize,
+    c: usize,
+    kc: usize,
+) -> (usize, usize, usize) {
+    (oh * ow, kh * kw * c, kc)
+}
+
 impl ConvLayer {
     /// GEMM dimensions after im2col: `(M, K, N)`.
     pub fn gemm_dims(&self) -> (usize, usize, usize) {
-        (self.oh * self.ow, self.kh * self.kw * self.c, self.kc)
+        im2col_dims(self.oh, self.ow, self.kh, self.kw, self.c, self.kc)
     }
 
     /// Exact MAC count of the convolution.

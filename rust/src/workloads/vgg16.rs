@@ -1,0 +1,57 @@
+//! VGG-16 convolution workloads (Simonyan & Zisserman, 2015).
+//!
+//! The table lists the *unique* conv shapes of blocks 2–5 at the standard
+//! 224×224 input resolution; repeated layers (conv3_3, conv4_3, conv5_2,
+//! conv5_3) share a shape with an earlier entry and are deduplicated —
+//! the tuner's winning schedule for one instance applies to all of them.
+//! The block-1 stem (C = 3) is omitted: like TVM's VTA flow, the testbed
+//! requires input channels to be GEMM-block multiples (see
+//! `compiler::passes`), and the stem is conventionally run on the host.
+
+use super::resnet18::ConvLayer;
+
+/// VGG-16 blocks 2–5, deduplicated conv shapes (all 3×3, stride 1, pad 1).
+pub const LAYERS: [ConvLayer; 7] = [
+    ConvLayer { name: "conv2_1", h: 112, w: 112, c: 64, kc: 128, kh: 3,
+                kw: 3, oh: 112, ow: 112, pad: 1, stride: 1 },
+    ConvLayer { name: "conv2_2", h: 112, w: 112, c: 128, kc: 128, kh: 3,
+                kw: 3, oh: 112, ow: 112, pad: 1, stride: 1 },
+    ConvLayer { name: "conv3_1", h: 56, w: 56, c: 128, kc: 256, kh: 3,
+                kw: 3, oh: 56, ow: 56, pad: 1, stride: 1 },
+    // also covers conv3_3
+    ConvLayer { name: "conv3_2", h: 56, w: 56, c: 256, kc: 256, kh: 3,
+                kw: 3, oh: 56, ow: 56, pad: 1, stride: 1 },
+    ConvLayer { name: "conv4_1", h: 28, w: 28, c: 256, kc: 512, kh: 3,
+                kw: 3, oh: 28, ow: 28, pad: 1, stride: 1 },
+    // also covers conv4_3
+    ConvLayer { name: "conv4_2", h: 28, w: 28, c: 512, kc: 512, kh: 3,
+                kw: 3, oh: 28, ow: 28, pad: 1, stride: 1 },
+    // also covers conv5_2 and conv5_3
+    ConvLayer { name: "conv5_1", h: 14, w: 14, c: 512, kc: 512, kh: 3,
+                kw: 3, oh: 14, ow: 14, pad: 1, stride: 1 },
+];
+
+/// Look up a layer by name (`conv2_1` … `conv5_1`).
+pub fn layer(name: &str) -> Option<ConvLayer> {
+    LAYERS.iter().copied().find(|l| l.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        for l in LAYERS {
+            assert_eq!(l.computed_out(), (l.oh, l.ow), "{}", l.name);
+            assert_eq!(l.c % 16, 0, "{}", l.name);
+            assert_eq!(l.kc % 16, 0, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn deepest_layer_is_the_big_gemm() {
+        let (m, k, n) = layer("conv5_1").unwrap().gemm_dims();
+        assert_eq!((m, k, n), (196, 4608, 512));
+    }
+}

@@ -17,7 +17,7 @@ use ml2tuner::tuner::random_baseline::RandomTuner;
 use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::vta::config::VtaConfig;
-use ml2tuner::workloads::{resnet18, ConvLayer};
+use ml2tuner::workloads::{self, resnet18, ConvLayer};
 
 fn env(layer: &str) -> TuningEnv {
     TuningEnv::new(VtaConfig::zcu102(), resnet18::layer(layer).unwrap())
@@ -155,6 +155,32 @@ fn tune_net_is_deterministic_and_jobs_invariant() {
         assert_eq!(format!("{:?}", x.trials), format!("{:?}", y.trials));
     }
     assert_eq!(a.report.render(), b.report.render());
+}
+
+#[test]
+fn tune_net_is_jobs_invariant_on_a_non_resnet_network() {
+    // registry-routed layers: the scheduler must behave identically on
+    // any registered network, with the full ML² policy in the loop
+    let net = workloads::network("mobilenet").unwrap();
+    let layers: Vec<ConvLayer> =
+        vec![net.layer("pw4").unwrap(), net.layer("red2").unwrap()];
+    let cfg = NetworkConfig {
+        tuner: TunerKind::Ml2,
+        total_trials: 60,
+        round_trials: 10,
+        base: TunerConfig { seed: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let a = NetworkTuner::new(cfg.clone())
+        .tune(&Engine::with_jobs(1), &layers);
+    let b = NetworkTuner::new(cfg)
+        .tune(&Engine::with_jobs(4), &layers);
+    assert_eq!(a.report.total_trials, 60);
+    for (x, y) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(format!("{:?}", x.trials), format!("{:?}", y.trials));
+    }
+    assert_eq!(a.report.render(), b.report.render());
+    assert!(a.report.render().contains("pw4"));
 }
 
 #[test]

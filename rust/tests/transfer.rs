@@ -1,0 +1,131 @@
+//! Integration: tuning-log persistence and the transfer warm-start path.
+//!
+//! * round-trip — `TrialRecord` → JSON tuning log on disk → [`TransferDb`]
+//!   directory load preserves schedules, outcomes, features, and shape;
+//! * warm-start — a `TransferDb` built from one network's logs
+//!   warm-starts tuning on another layer, end to end through both the
+//!   standalone tuner and the network scheduler.
+
+use ml2tuner::compiler::features::HIDDEN_NAMES;
+use ml2tuner::compiler::schedule::Schedule;
+use ml2tuner::engine::{Engine, NetworkConfig, NetworkTuner, TunerKind};
+use ml2tuner::tuner::database::{
+    Database, LayerMeta, Outcome, TransferDb, TrialRecord,
+};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::{self, ConvLayer};
+
+fn rec(i: usize, outcome: Outcome) -> TrialRecord {
+    let schedule = Schedule { tile_h: 1 + i, tile_w: 2, tile_oc: 16,
+                              tile_ic: 16, n_vthreads: 1 };
+    TrialRecord {
+        space_index: i,
+        schedule,
+        visible: schedule.visible_features(),
+        hidden: vec![0.5; HIDDEN_NAMES.len()],
+        outcome,
+    }
+}
+
+#[test]
+fn tuning_logs_round_trip_through_a_transfer_db_directory() {
+    let dir = std::env::temp_dir().join("ml2tuner_transfer_roundtrip");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let pw4 = workloads::network("mobilenet").unwrap().layer("pw4").unwrap();
+    let conv1 = workloads::network("resnet18").unwrap().layer("conv1")
+        .unwrap();
+    let mut a = Database::for_layer(&pw4);
+    a.push(rec(0, Outcome::Valid { cycles: 123_456 }));
+    a.push(rec(3, Outcome::Crash));
+    a.push(rec(7, Outcome::WrongOutput));
+    a.save(dir.join("pw4.json")).unwrap();
+    let mut b = Database::for_layer(&conv1);
+    b.push(rec(1, Outcome::Valid { cycles: 999 }));
+    b.save(dir.join("conv1.json")).unwrap();
+    // an unparseable .json and a non-json file must both be tolerated
+    std::fs::write(dir.join("zz_bogus.json"), "{not json").unwrap();
+    std::fs::write(dir.join("notes.txt"), "not a log").unwrap();
+
+    let store = TransferDb::load_dir(&dir).unwrap();
+    assert_eq!(store.n_layers(), 2);
+    assert_eq!(store.total_records(), 4);
+    assert_eq!(store.skipped, 1, "only the bogus .json is skipped");
+
+    let back = store.sources.iter().find(|d| d.layer == "pw4").unwrap();
+    assert_eq!(back.meta, Some(LayerMeta::of(&pw4)));
+    assert_eq!(back.len(), 3);
+    for (orig, got) in a.records.iter().zip(&back.records) {
+        assert_eq!(orig.space_index, got.space_index);
+        assert_eq!(orig.schedule, got.schedule);
+        assert_eq!(orig.outcome, got.outcome);
+        assert_eq!(orig.hidden, got.hidden);
+        assert_eq!(orig.visible, got.visible);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Profile a spread of a layer's space into a shape-stamped log.
+fn profiled_log(layer: &ConvLayer, n: usize) -> Database {
+    let env = TuningEnv::new(VtaConfig::zcu102(), *layer);
+    let engine = Engine::default();
+    let stride = (env.space.len() / n).max(1);
+    let batch: Vec<usize> = (0..n).map(|i| i * stride).collect();
+    let mut db = Database::for_layer(layer);
+    for r in engine.profile_batch(&env, &batch) {
+        db.push(r);
+    }
+    db
+}
+
+#[test]
+fn warm_start_flows_through_the_network_scheduler() {
+    let net = workloads::network("mobilenet").unwrap();
+    let pw5 = net.layer("pw5").unwrap();
+    let pw4 = net.layer("pw4").unwrap();
+    let mut store = TransferDb::new();
+    store.add(profiled_log(&pw5, 80));
+    assert!(store.warm_start_for(&pw4, 200).is_some(),
+            "pw5 must be a transfer source for pw4");
+    let cfg = NetworkConfig {
+        tuner: TunerKind::Ml2,
+        total_trials: 40,
+        round_trials: 10,
+        base: TunerConfig { seed: 5, ..TunerConfig::default() },
+        transfer: Some(store),
+        transfer_cap: 200,
+        ..NetworkConfig::default()
+    };
+    let out = NetworkTuner::new(cfg).tune(&Engine::with_jobs(2),
+                                          &[pw4]);
+    assert_eq!(out.report.total_trials, 40, "budget fully spent");
+    assert_eq!(out.databases.len(), 1);
+    assert_eq!(out.databases[0].len(), 40,
+               "transferred records never enter the persisted log");
+    assert!(out.databases[0].meta.is_some(),
+            "persisted logs are shape-stamped");
+}
+
+#[test]
+fn warm_started_tuner_is_jobs_invariant() {
+    let net = workloads::network("mobilenet").unwrap();
+    let pw5 = net.layer("pw5").unwrap();
+    let pw4 = net.layer("pw4").unwrap();
+    let mut store = TransferDb::new();
+    store.add(profiled_log(&pw4, 60));
+    let warm = store.warm_start_for(&pw5, 100).unwrap();
+    let env = TuningEnv::new(VtaConfig::zcu102(), pw5);
+    let cfg = TunerConfig { max_trials: 30, seed: 11,
+                            ..TunerConfig::default() };
+    let t1 = Ml2Tuner::new(cfg.clone())
+        .with_warm_start(warm.clone())
+        .tune_with(&env, &Engine::with_jobs(1));
+    let t4 = Ml2Tuner::new(cfg)
+        .with_warm_start(warm)
+        .tune_with(&env, &Engine::with_jobs(4));
+    assert_eq!(t1.len(), 30);
+    assert_eq!(format!("{:?}", t1.trials), format!("{:?}", t4.trials));
+}

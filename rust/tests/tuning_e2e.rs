@@ -93,6 +93,16 @@ fn experiment_fig3_quick_shows_ratio() {
 }
 
 #[test]
+fn experiment_transfer_quick_runs() {
+    let report =
+        experiments::run("transfer", &ExpConfig::quick()).unwrap();
+    assert!(report.contains("transfer warm-start"));
+    assert!(report.contains("cold best"));
+    assert!(report.contains("warm best"));
+    assert!(report.contains("final best (mean)"));
+}
+
+#[test]
 fn experiment_unknown_id_errors() {
     assert!(experiments::run("fig99", &ExpConfig::quick()).is_err());
 }
