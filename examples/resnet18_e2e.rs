@@ -51,7 +51,8 @@ fn main() -> anyhow::Result<()> {
         // baseline schedule: a safe conservative default (small tiles,
         // single thread) — what a non-tuned backend would pick
         let base_sched = Schedule { tile_h: 4, tile_w: 4, tile_oc: 16,
-                                    tile_ic: 16, n_vthreads: 1 };
+                                    tile_ic: 16, n_vthreads: 1,
+                                    ..Default::default() };
         let base = compiler.compile(&layer, &base_sched);
         let base_cycles = match sim.check(&base.program) {
             ml2tuner::vta::Verdict::Valid { cycles } => cycles,

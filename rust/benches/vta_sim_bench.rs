@@ -13,11 +13,14 @@ fn main() {
 
     for (name, sched) in [
         ("conv1 8x8", Schedule { tile_h: 8, tile_w: 8, tile_oc: 64,
-                                 tile_ic: 64, n_vthreads: 2 }),
+                                 tile_ic: 64, n_vthreads: 2,
+                                 ..Default::default() }),
         ("conv1 2x2 (many instrs)", Schedule { tile_h: 2, tile_w: 2,
-            tile_oc: 16, tile_ic: 16, n_vthreads: 1 }),
+            tile_oc: 16, tile_ic: 16, n_vthreads: 1,
+            ..Default::default() }),
         ("conv5 7x7", Schedule { tile_h: 7, tile_w: 7, tile_oc: 64,
-                                 tile_ic: 64, n_vthreads: 1 }),
+                                 tile_ic: 64, n_vthreads: 1,
+                                 ..Default::default() }),
     ] {
         let layer = if name.starts_with("conv1") {
             resnet18::layer("conv1").unwrap()
@@ -36,7 +39,8 @@ fn main() {
     // full numeric execution (validation path)
     let layer = resnet18::layer("conv5").unwrap();
     let sched = Schedule { tile_h: 7, tile_w: 7, tile_oc: 64,
-                           tile_ic: 64, n_vthreads: 1 };
+                           tile_ic: 64, n_vthreads: 1,
+                           ..Default::default() };
     let compiled = compiler.compile(&layer, &sched);
     let x = synth::input_data(&layer, 1);
     let w = synth::weight_data(&layer, 1);

@@ -1,16 +1,17 @@
 //! Code generation: conv2d + schedule → VTA instruction stream.
 //!
 //! Lowering structure (one output tile at a time, tiles round-robin across
-//! virtual threads, double-buffered INP/WGT slots per thread):
+//! virtual threads, `nLoadSlots` INP/WGT slots per thread — 2 is the
+//! paper's double buffering, 1 serializes loads against compute):
 //!
 //! ```text
 //! LoadUop (whole uop table, shared)
 //! for tile (oh0, ow0, oc0):                  # thread t = tile_idx % nVT
 //!   GEMM(reset)  over the tile's ACC region  # pops s2g after 1st tile/thread
 //!   for ci in 0..C/tic:                      # load group (tile, ci)
-//!     Memset/Load input halo rows → INP slot # pops g2l after 2 groups/thread
+//!     Memset/Load input halo rows → INP slot # pops g2l after `slots` groups
 //!     Load weight chunk          → WGT slot  # last load pushes l2g
-//!     for (kh, kw):
+//!     for chunk of kernelUnroll (kh, kw)s:   # n_pos instrs when unroll=1
 //!       GEMM accumulate                      # 1st pops l2g, last pushes g2l
 //!   ALU shift-clip over ACC region           # pushes g2s
 //!   Store tile rows                          # 1st pops g2s, last pushes s2g
@@ -80,23 +81,68 @@ pub fn lower(
         dram_out_vecs: layer.oh * layer.ow * a.kcb,
         ..Default::default()
     };
-    let mut st = CompileStats::default();
-    st.vthread_branch_taken = a.nvt > 1;
+    let n_tiles = a.n_tiles();
+    let mut st = CompileStats {
+        vthread_branch_taken: a.nvt > 1,
+        uneven_thread_split: a.nvt > 1 && n_tiles % a.nvt != 0,
+        ..Default::default()
+    };
 
-    // ---- uop table: gemm uops (nb-major) then reset uops --------------
-    for nb in 0..a.nbc {
-        for cb in 0..a.cbc {
-            prog.uops.push(Uop {
-                acc: nb,
-                inp: cb,
-                wgt: nb * layer.kh * layer.kw * a.cbc + cb,
-            });
+    // ---- uop table ----------------------------------------------------
+    //
+    // unroll == 1 (paper lowering): one shared (nb, cb) uop block; the
+    // kernel position lives in each GEMM instruction's inp/wgt base.
+    //
+    // unroll > 1: GEMM instructions cover `unroll` kernel positions at
+    // once, so the position offsets must live in the uops themselves.
+    // Layout is variant-major, then chunk, then nb, then (position, cb)
+    // — per-nb blocks stay contiguous so a boundary-oc tile can address
+    // the `nbc_e` prefix with one dense ubuf range. Boundary-width tiles
+    // have a narrower input-halo row pitch, hence the second variant.
+    let n_pos = a.n_pos;
+    if a.unroll == 1 {
+        for nb in 0..a.nbc {
+            for cb in 0..a.cbc {
+                prog.uops.push(Uop {
+                    acc: nb,
+                    inp: cb,
+                    wgt: nb * n_pos * a.cbc + cb,
+                });
+            }
+        }
+    } else {
+        let variants: &[usize] = if a.uop_variants == 2 {
+            &[a.in_tile_w, a.in_tile_w_last]
+        } else {
+            &[a.in_tile_w]
+        };
+        for &in_w_v in variants {
+            for chunk in 0..a.n_chunks {
+                for nb in 0..a.nbc {
+                    let p_end = n_pos.min((chunk + 1) * a.unroll);
+                    for p in chunk * a.unroll..p_end {
+                        let (kh, kw) = (p / layer.kw, p % layer.kw);
+                        for cb in 0..a.cbc {
+                            prog.uops.push(Uop {
+                                acc: nb,
+                                inp: (kh * in_w_v + kw) * a.cbc + cb,
+                                wgt: nb * n_pos * a.cbc
+                                    + (kh * layer.kw + kw) * a.cbc
+                                    + cb,
+                            });
+                        }
+                    }
+                }
+            }
         }
     }
+    let reset_off = prog.uops.len();
+    // stride between full chunks / between uop-table variants
+    let chunk_stride = a.unroll * a.nbc * a.cbc;
+    let variant_stride = n_pos * a.nbc * a.cbc;
     for nb in 0..a.nbc {
         prog.uops.push(Uop { acc: nb, inp: 0, wgt: 0 });
     }
-    let reset_off = a.nbc * a.cbc;
     prog.instrs.push(Instr::LoadUop {
         sram_base: 0,
         uop_begin: 0,
@@ -105,8 +151,6 @@ pub fn lower(
     });
 
     // ---- tile enumeration, round-robin over virtual threads -----------
-    let n_tiles = a.n_tiles();
-    st.uneven_thread_split = a.nvt > 1 && n_tiles % a.nvt != 0;
     // per-thread counters for dep-token priming
     let mut groups_per_thread = vec![0usize; a.nvt];
     let mut tiles_per_thread = vec![0usize; a.nvt];
@@ -181,8 +225,11 @@ pub fn lower(
 
         // ---- channel chunks -------------------------------------------
         for ci in 0..a.n_ci {
-            let slot = groups_per_thread[t] % 2;
-            let pop_credit = groups_per_thread[t] >= 2;
+            // load-slot rotation: with 2 slots (paper) a group may load
+            // while the previous group computes; with 1 slot the load
+            // must wait for its own buffer-free credit every group.
+            let slot = groups_per_thread[t] % a.slots;
+            let pop_credit = groups_per_thread[t] >= a.slots;
             groups_per_thread[t] += 1;
             let cb0 = ci * a.cbc;
             let inp_s = inp_base_t(t) + slot * a.inp_tile;
@@ -281,29 +328,70 @@ pub fn lower(
             }
             prog.instrs.extend(group);
 
-            // gemm per kernel position
-            for kh in 0..layer.kh {
-                for kw in 0..layer.kw {
-                    let first = kh == 0 && kw == 0;
-                    let last = kh + 1 == layer.kh && kw + 1 == layer.kw;
+            let lp0 = GemmLoop {
+                extent: th_e,
+                acc_off: tw_e * nbc_e,
+                inp_off: layer.stride * in_w * a.cbc,
+                wgt_off: 0,
+            };
+            let lp1 = GemmLoop {
+                extent: tw_e,
+                acc_off: nbc_e,
+                inp_off: layer.stride * a.cbc,
+                wgt_off: 0,
+            };
+            if a.unroll == 1 {
+                // gemm per kernel position (paper lowering)
+                for kh in 0..layer.kh {
+                    for kw in 0..layer.kw {
+                        let first = kh == 0 && kw == 0;
+                        let last =
+                            kh + 1 == layer.kh && kw + 1 == layer.kw;
+                        prog.instrs.push(Instr::Gemm {
+                            ubuf_begin: 0,
+                            ubuf_end: nbc_e * a.cbc,
+                            lp0,
+                            lp1,
+                            acc_base: acc_b,
+                            inp_base: inp_s + (kh * in_w + kw) * a.cbc,
+                            wgt_base: wgt_s
+                                + (kh * layer.kw + kw) * a.cbc,
+                            reset: false,
+                            dep: Dep {
+                                pop_prev: first,
+                                push_prev: last,
+                                ..Dep::NONE
+                            },
+                        });
+                        st.n_gemms += 1;
+                    }
+                }
+            } else {
+                // unrolled: one gemm per chunk of kernel positions; the
+                // position offsets come from the expanded uop table
+                // (variant 1 when this tile's halo rows are the narrow
+                // boundary pitch)
+                let variant = if a.uop_variants == 2 && tw_e != a.tw {
+                    1
+                } else {
+                    0
+                };
+                for chunk in 0..a.n_chunks {
+                    let u_e = (n_pos - chunk * a.unroll).min(a.unroll);
+                    let base =
+                        variant * variant_stride + chunk * chunk_stride;
+                    let first = chunk == 0;
+                    let last = chunk + 1 == a.n_chunks;
                     prog.instrs.push(Instr::Gemm {
-                        ubuf_begin: 0,
-                        ubuf_end: nbc_e * a.cbc,
-                        lp0: GemmLoop {
-                            extent: th_e,
-                            acc_off: tw_e * nbc_e,
-                            inp_off: layer.stride * in_w * a.cbc,
-                            wgt_off: 0,
-                        },
-                        lp1: GemmLoop {
-                            extent: tw_e,
-                            acc_off: nbc_e,
-                            inp_off: layer.stride * a.cbc,
-                            wgt_off: 0,
-                        },
+                        // per-nb blocks inside a chunk are u_e·cbc uops,
+                        // so the nbc_e prefix is one dense range
+                        ubuf_begin: base,
+                        ubuf_end: base + nbc_e * u_e * a.cbc,
+                        lp0,
+                        lp1,
                         acc_base: acc_b,
-                        inp_base: inp_s + (kh * in_w + kw) * a.cbc,
-                        wgt_base: wgt_s + (kh * layer.kw + kw) * a.cbc,
+                        inp_base: inp_s,
+                        wgt_base: wgt_s,
                         reset: false,
                         dep: Dep {
                             pop_prev: first,
@@ -316,8 +404,9 @@ pub fn lower(
             }
         }
 
-        // NOTE on the uop sub-range: uops are nb-major, so
-        // `[0, nbc_e*cbc)` covers exactly nb < nbc_e when cbc == a.cbc.
+        // NOTE on the uop sub-ranges: uops are nb-major (within a chunk
+        // for unrolled kernels), so a `[base, base + nbc_e·u_e·cbc)`
+        // range covers exactly nb < nbc_e when cbc == a.cbc.
 
         // ---- requantize + store ---------------------------------------
         prog.instrs.push(Instr::Alu {
@@ -403,7 +492,7 @@ mod tests {
         -> Schedule
     {
         Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
-                   n_vthreads: vt }
+                   n_vthreads: vt, ..Default::default() }
     }
 
     #[test]
@@ -463,6 +552,78 @@ mod tests {
         assert!(c.stats.vthread_branch_taken);
         // 2×2×4 tiles = 16 tiles % 2 == 0 → even split
         assert!(!c.stats.uneven_thread_split);
+    }
+
+    #[test]
+    fn unroll_preserves_macs_and_shrinks_instruction_count() {
+        let l = resnet18::layer("conv1").unwrap(); // 3x3 kernel
+        let base = sched(8, 8, 64, 64, 1);
+        let c1 = compile("conv1", base);
+        let c4 = compile("conv1", Schedule { k_unroll: 4, ..base });
+        // every MAC still issued exactly once
+        let ops = |c: &Compiled| {
+            c.stats.gemm_block_ops - c.stats.reset_block_ops
+        };
+        assert_eq!(ops(&c1) * 256, l.macs());
+        assert_eq!(ops(&c4) * 256, l.macs());
+        // 9 kernel positions collapse into ceil(9/4)=3 chunks per group
+        // (n_gemms also counts the one reset pass per tile)
+        let data_gemms = |c: &Compiled| {
+            c.stats.n_gemms - c.analysis.n_tiles()
+        };
+        let groups = c1.analysis.n_tiles() * c1.analysis.n_ci;
+        assert_eq!(data_gemms(&c1), groups * 9);
+        assert_eq!(data_gemms(&c4), groups * 3);
+        // ...at the cost of a position-expanded uop table
+        assert!(c4.program.uops.len() > c1.program.uops.len());
+        assert_eq!(c4.program.uops.len(), c4.analysis.uop_count);
+    }
+
+    #[test]
+    fn unroll_boundary_tiles_use_their_own_uop_variant() {
+        // 24 does not divide 56: boundary tiles have a narrower input
+        // halo, so unrolled GEMMs must address a second uop variant
+        let c = compile("conv1", Schedule { k_unroll: 2,
+                                            ..sched(24, 24, 48, 32, 1) });
+        assert_eq!(c.analysis.uop_variants, 2);
+        let variant_stride =
+            c.analysis.n_pos * c.analysis.nbc * c.analysis.cbc;
+        let mut saw_variant1 = false;
+        for ins in &c.program.instrs {
+            if let Instr::Gemm { ubuf_begin, reset: false, .. } = ins {
+                if *ubuf_begin >= variant_stride
+                    && *ubuf_begin < 2 * variant_stride
+                {
+                    saw_variant1 = true;
+                }
+            }
+        }
+        assert!(saw_variant1, "no GEMM addressed the boundary variant");
+    }
+
+    #[test]
+    fn single_buffered_loads_pop_their_credit_every_group() {
+        // slots=1: each load group must wait for its own buffer-free
+        // token (pop after 1 group), vs slots=2 popping after 2
+        let base = sched(8, 8, 32, 64, 1);
+        let count_popping_loads = |c: &Compiled| {
+            c.program
+                .instrs
+                .iter()
+                .filter(|i| {
+                    matches!(i,
+                        Instr::Load { dep, .. } | Instr::Memset { dep, .. }
+                        if dep.pop_next)
+                })
+                .count()
+        };
+        let double = compile("conv1", base);
+        let single =
+            compile("conv1", Schedule { n_load_slots: 1, ..base });
+        assert!(count_popping_loads(&single)
+                    > count_popping_loads(&double));
+        // programs are otherwise the same shape: identical gemm count
+        assert_eq!(single.stats.n_gemms, double.stats.n_gemms);
     }
 
     #[test]

@@ -1,18 +1,28 @@
 //! Feature extraction for the cost models.
 //!
-//! * **Visible features** (models P and V): the raw schedule knobs —
-//!   `Schedule::visible_features`.
+//! * **Visible features** (models P and V): generated from the search
+//!   space's knob list by the declarative registry in
+//!   [`crate::compiler::schedule::SpaceKind`] — raw knob values plus
+//!   derived products.
 //! * **Hidden features** (model A only): quantities that exist only after
 //!   the backend compiler has run — resolved/boundary tile geometry, dummy
 //!   regions, branch decisions, instruction/DMA/uop statistics. Names follow
 //!   paper Table 5 where the quantity matches; the compiler-statistics tail
 //!   is our honest extension of "details about the optimization and internal
 //!   tiling strategies during the code generation process" (§3).
+//!
+//! Hidden features are keyed by [`SpaceKind`] like visible features: the
+//! paper space extracts exactly the paper's Table-5 list (byte-identical
+//! to the original implementation), the extended space appends the
+//! geometry the new primitives resolve to (load slots, unroll chunking,
+//! uop-table size) so model A can see what lowering did with them.
 
 use super::codegen::{CompileStats, Compiled};
 use super::passes::TileAnalysis;
+use super::schedule::SpaceKind;
 
-/// Hidden feature names, aligned with [`hidden_features`].
+/// Paper hidden-feature names, aligned with the first
+/// [`hidden_len(SpaceKind::Paper)`] entries of [`hidden_features`].
 ///
 /// Exactly the paper's Table 5 hidden-feature list: geometry resolved by
 /// legalization, boundary/dummy regions, and branch flags. Raw codegen
@@ -22,7 +32,7 @@ use super::passes::TileAnalysis;
 /// resulting from branch statements", not whole-program cost counters
 /// (feeding those in makes model A trivially strong and collapses the
 /// Table 5 importance distribution).
-pub const HIDDEN_NAMES: [&'static str; 21] = [
+pub const HIDDEN_NAMES: [&str; 21] = [
     "nVirtualThread > 0 (threadIdx)",
     "nVirtualThread > 0 (threadIdx)2",
     "nFilterInLoop",
@@ -48,14 +58,46 @@ pub const HIDDEN_NAMES: [&'static str; 21] = [
     "accTileVecs",
 ];
 
-/// Extract the hidden feature vector from a compilation.
-pub fn hidden_features(c: &Compiled) -> Vec<f64> {
+/// Extra hidden features of the extended space: what lowering resolved
+/// the new primitives to. All are "internal branching" quantities in the
+/// paper's sense — they only exist after legalization/codegen.
+pub const HIDDEN_NAMES_EXTENDED: [&str; 4] = [
+    "nLoadSlots (resolved)",
+    "kernelUnroll (resolved)",
+    "nGemmChunks",
+    "uopTableLen",
+];
+
+/// Hidden-feature names for a space kind, aligned with
+/// [`hidden_features`].
+pub fn hidden_names(kind: SpaceKind) -> Vec<&'static str> {
+    let mut v = HIDDEN_NAMES.to_vec();
+    if kind == SpaceKind::Extended {
+        v.extend_from_slice(&HIDDEN_NAMES_EXTENDED);
+    }
+    v
+}
+
+/// Hidden-feature vector length for a space kind.
+pub fn hidden_len(kind: SpaceKind) -> usize {
+    match kind {
+        SpaceKind::Paper => HIDDEN_NAMES.len(),
+        SpaceKind::Extended => {
+            HIDDEN_NAMES.len() + HIDDEN_NAMES_EXTENDED.len()
+        }
+    }
+}
+
+/// Extract the hidden feature vector from a compilation. The paper-kind
+/// prefix is identical for both kinds; the extended kind appends
+/// [`HIDDEN_NAMES_EXTENDED`].
+pub fn hidden_features(kind: SpaceKind, c: &Compiled) -> Vec<f64> {
     let a: &TileAnalysis = &c.analysis;
     let st: &CompileStats = &c.stats;
     let per_tile = |v: u64, tiles: usize| {
         if tiles == 0 { 0.0 } else { v as f64 / tiles as f64 }
     };
-    vec![
+    let mut h = vec![
         st.vthread_branch_taken as u8 as f64,
         st.uneven_thread_split as u8 as f64,
         a.nbc as f64,
@@ -80,7 +122,16 @@ pub fn hidden_features(c: &Compiled) -> Vec<f64> {
         ),
         a.inp_tile as f64,
         a.acc_tile as f64,
-    ]
+    ];
+    if kind == SpaceKind::Extended {
+        h.extend_from_slice(&[
+            a.slots as f64,
+            a.unroll as f64,
+            a.n_chunks as f64,
+            a.uop_count as f64,
+        ]);
+    }
+    h
 }
 
 /// `visible ⊕ hidden` — the input of model A.
@@ -91,9 +142,9 @@ pub fn combined_features(visible: &[f64], hidden: &[f64]) -> Vec<f64> {
 }
 
 /// Names for the combined feature space (for Table 5 importance reports).
-pub fn combined_names() -> Vec<&'static str> {
-    let mut v = crate::compiler::schedule::Schedule::VISIBLE_NAMES.to_vec();
-    v.extend_from_slice(&HIDDEN_NAMES);
+pub fn combined_names(kind: SpaceKind) -> Vec<String> {
+    let mut v = kind.visible_names();
+    v.extend(hidden_names(kind).iter().map(|n| n.to_string()));
     v
 }
 
@@ -109,7 +160,8 @@ mod tests {
         let cfg = VtaConfig::zcu102();
         let layer = resnet18::layer("conv1").unwrap();
         let s = Schedule { tile_h: th, tile_w: tw, tile_oc: 32,
-                           tile_ic: 32, n_vthreads: 2 };
+                           tile_ic: 32, n_vthreads: 2,
+                           ..Default::default() };
         let a = analyze(&cfg, &layer, &s);
         super::super::codegen::lower(&cfg, &layer, &a)
     }
@@ -117,14 +169,29 @@ mod tests {
     #[test]
     fn names_align_with_values() {
         let c = compiled(8, 8);
-        let h = hidden_features(&c);
-        assert_eq!(h.len(), HIDDEN_NAMES.len());
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let h = hidden_features(kind, &c);
+            assert_eq!(h.len(), hidden_names(kind).len());
+            assert_eq!(h.len(), hidden_len(kind));
+        }
+    }
+
+    #[test]
+    fn extended_hidden_extends_the_paper_prefix() {
+        let c = compiled(8, 8);
+        let paper = hidden_features(SpaceKind::Paper, &c);
+        let ext = hidden_features(SpaceKind::Extended, &c);
+        assert_eq!(&ext[..paper.len()], &paper[..]);
+        assert_eq!(ext.len(), paper.len() + HIDDEN_NAMES_EXTENDED.len());
+        // resolved defaults: 2 slots, unroll 1
+        assert_eq!(ext[paper.len()], 2.0);
+        assert_eq!(ext[paper.len() + 1], 1.0);
     }
 
     #[test]
     fn boundary_features_fire_on_non_divisor_tiles() {
-        let exact = hidden_features(&compiled(8, 8)); // 8 | 56
-        let ragged = hidden_features(&compiled(24, 24)); // 56 = 24+24+8
+        let exact = hidden_features(SpaceKind::Paper, &compiled(8, 8));
+        let ragged = hidden_features(SpaceKind::Paper, &compiled(24, 24));
         let idx = HIDDEN_NAMES
             .iter()
             .position(|n| *n == "sizeOutTileBoundaryW")
@@ -141,11 +208,13 @@ mod tests {
     #[test]
     fn combined_concatenates() {
         let c = compiled(8, 8);
-        let h = hidden_features(&c);
-        let nv = crate::compiler::schedule::Schedule::VISIBLE_NAMES.len();
-        let v = vec![1.0; nv];
-        let comb = combined_features(&v, &h);
-        assert_eq!(comb.len(), nv + h.len());
-        assert_eq!(combined_names().len(), comb.len());
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let h = hidden_features(kind, &c);
+            let nv = kind.n_visible();
+            let v = vec![1.0; nv];
+            let comb = combined_features(&v, &h);
+            assert_eq!(comb.len(), nv + h.len());
+            assert_eq!(combined_names(kind).len(), comb.len());
+        }
     }
 }

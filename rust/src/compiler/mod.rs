@@ -15,18 +15,27 @@ pub mod validity;
 use crate::vta::config::VtaConfig;
 use crate::workloads::ConvLayer;
 pub use codegen::Compiled;
-use schedule::Schedule;
+use schedule::{Schedule, SpaceKind};
 
 /// Compiler facade: owns the hardware config, compiles (layer, schedule)
-/// pairs, and exposes visible/hidden features.
+/// pairs, and exposes visible/hidden features. The space kind selects the
+/// hidden-feature layout ([`features::hidden_features`]): paper-exact for
+/// [`SpaceKind::Paper`], extended geometry appended for
+/// [`SpaceKind::Extended`].
 #[derive(Clone, Debug)]
 pub struct Compiler {
     pub cfg: VtaConfig,
+    pub kind: SpaceKind,
 }
 
 impl Compiler {
+    /// Paper-space compiler (pre-refactor behaviour).
     pub fn new(cfg: VtaConfig) -> Self {
-        Compiler { cfg }
+        Compiler::with_kind(cfg, SpaceKind::Paper)
+    }
+
+    pub fn with_kind(cfg: VtaConfig, kind: SpaceKind) -> Self {
+        Compiler { cfg, kind }
     }
 
     /// Full compilation: analysis + lowering + stats. This is the step the
@@ -37,9 +46,10 @@ impl Compiler {
         codegen::lower(&self.cfg, layer, &a)
     }
 
-    /// Hidden features of a compilation (model A's extra inputs).
+    /// Hidden features of a compilation (model A's extra inputs), in
+    /// this compiler's space-kind layout.
     pub fn hidden_features(&self, compiled: &Compiled) -> Vec<f64> {
-        features::hidden_features(compiled)
+        features::hidden_features(self.kind, compiled)
     }
 
     /// The weak static check (not used to prune the search space — the
@@ -64,12 +74,17 @@ mod tests {
         let c = Compiler::new(VtaConfig::zcu102());
         let l = resnet18::layer("conv3").unwrap();
         let s = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32, tile_ic: 32,
-                           n_vthreads: 2 };
+                           n_vthreads: 2, ..Default::default() };
         let out = c.compile(&l, &s);
         assert!(!out.program.is_empty());
         let h = c.hidden_features(&out);
-        assert_eq!(h.len(), features::HIDDEN_NAMES.len());
+        assert_eq!(h.len(), features::hidden_len(SpaceKind::Paper));
         assert!(c.static_check(&l, &s).is_plausible());
+        // an extended-kind compiler appends the resolved-primitive tail
+        let e = Compiler::with_kind(VtaConfig::zcu102(),
+                                    SpaceKind::Extended);
+        assert_eq!(e.hidden_features(&e.compile(&l, &s)).len(),
+                   features::hidden_len(SpaceKind::Extended));
     }
 
     #[test]
@@ -77,7 +92,7 @@ mod tests {
         let c = Compiler::new(VtaConfig::zcu102());
         let l = resnet18::layer("conv8").unwrap();
         let s = Schedule { tile_h: 7, tile_w: 14, tile_oc: 64, tile_ic: 64,
-                           n_vthreads: 4 };
+                           n_vthreads: 4, ..Default::default() };
         let a = c.compile(&l, &s);
         let b = c.compile(&l, &s);
         assert_eq!(a.program, b.program);

@@ -57,6 +57,20 @@ pub struct TileAnalysis {
     pub inp_slice: usize,
     pub wgt_slice: usize,
     pub acc_slice: usize,
+
+    /// Load-buffer slots per thread (2 = double buffering, paper-fixed;
+    /// 1 = single-buffered). Effective INP/WGT footprint per thread is
+    /// `slots × tile`, which is what actually hits the slice at runtime.
+    pub slots: usize,
+    /// Resolved kernel-position unroll factor (clamped to `kh·kw`).
+    pub unroll: usize,
+    /// Kernel positions (`kh·kw`).
+    pub n_pos: usize,
+    /// GEMM instructions per channel chunk: `ceil(n_pos / unroll)`.
+    pub n_chunks: usize,
+    /// Uop-table variants an unrolled kernel needs (interior vs
+    /// boundary-width tiles differ in input-halo row pitch).
+    pub uop_variants: usize,
 }
 
 impl TileAnalysis {
@@ -111,6 +125,23 @@ pub fn analyze(
     let in_tile_h_last = halo(th_last, layer.kh);
     let in_tile_w_last = halo(tw_last, layer.kw);
 
+    // extension knobs: load-slot count and kernel unroll. `unroll == 1`
+    // reproduces the paper-fixed lowering exactly; `unroll > 1` packs
+    // kernel positions into shared-uop GEMM instructions, which needs a
+    // position-expanded uop table — one copy per distinct input-halo row
+    // pitch (interior vs boundary-width tiles).
+    let n_pos = layer.kh * layer.kw;
+    let slots = sched.n_load_slots.clamp(1, 2);
+    let unroll = sched.k_unroll.clamp(1, n_pos);
+    let n_chunks = n_pos.div_ceil(unroll);
+    let uop_variants =
+        if unroll > 1 && in_tile_w != in_tile_w_last { 2 } else { 1 };
+    let uop_count = if unroll == 1 {
+        nbc * cbc + nbc // shared gemm uops + reset uops
+    } else {
+        uop_variants * n_pos * nbc * cbc + nbc
+    };
+
     TileAnalysis {
         th, tw, toc, tic, nvt,
         tiles_h, tiles_w, tiles_oc, n_ci,
@@ -120,10 +151,11 @@ pub fn analyze(
         acc_tile: th * tw * nbc,
         inp_tile: in_tile_h * in_tile_w * cbc,
         wgt_chunk: nbc * layer.kh * layer.kw * cbc,
-        uop_count: nbc * cbc + nbc, // gemm uops + reset uops
+        uop_count,
         inp_slice: cfg.inp_capacity() / nvt,
         wgt_slice: cfg.wgt_capacity() / nvt,
         acc_slice: cfg.acc_capacity() / nvt,
+        slots, unroll, n_pos, n_chunks, uop_variants,
     }
 }
 
@@ -153,7 +185,7 @@ mod tests {
         -> Schedule
     {
         Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
-                   n_vthreads: vt }
+                   n_vthreads: vt, ..Default::default() }
     }
 
     #[test]
@@ -205,6 +237,45 @@ mod tests {
         let a = analyze(&cfg, &l, &sched(4, 4, 32, 32, 1));
         assert_eq!(a.in_tile_h, (4 - 1) * 2 + 3); // = 9
         assert_eq!(a.in_tile_w, 9);
+    }
+
+    #[test]
+    fn extension_knobs_resolve_and_clamp() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap(); // 3x3 kernel
+        let base = sched(8, 8, 32, 32, 1);
+        let a = analyze(&cfg, &l, &base);
+        assert_eq!((a.slots, a.unroll, a.n_chunks), (2, 1, 9));
+        assert_eq!(a.uop_count, a.nbc * a.cbc + a.nbc, "paper layout");
+
+        let u4 = Schedule { k_unroll: 4, ..base };
+        let a4 = analyze(&cfg, &l, &u4);
+        assert_eq!(a4.unroll, 4);
+        assert_eq!(a4.n_chunks, 3); // ceil(9/4)
+        assert_eq!(a4.uop_variants, 1, "8 divides 56: no boundary pitch");
+        assert_eq!(a4.uop_count, 9 * a4.nbc * a4.cbc + a4.nbc);
+
+        // 24 does not divide 56 → boundary tiles have a narrower halo →
+        // a second uop-table variant
+        let ragged = Schedule { k_unroll: 2, ..sched(8, 24, 32, 32, 1) };
+        let ar = analyze(&cfg, &l, &ragged);
+        assert_eq!(ar.uop_variants, 2);
+        assert_eq!(ar.uop_count, 2 * 9 * ar.nbc * ar.cbc + ar.nbc);
+
+        // 1x1 kernels have a single position: unroll clamps back to the
+        // paper lowering
+        let pw = resnet18::layer("conv5").unwrap();
+        let ap = analyze(&cfg, &pw, &Schedule { k_unroll: 4,
+                                                ..sched(7, 7, 32, 32, 1) });
+        assert_eq!((ap.unroll, ap.n_chunks), (1, 1));
+        assert_eq!(ap.uop_count, ap.nbc * ap.cbc + ap.nbc);
+
+        // slot toggle resolves, and 0/oversized values clamp
+        let single = Schedule { n_load_slots: 1, ..base };
+        assert_eq!(analyze(&cfg, &l, &single).slots, 1);
+        let wild = Schedule { n_load_slots: 9, k_unroll: 0, ..base };
+        let aw = analyze(&cfg, &l, &wild);
+        assert_eq!((aw.slots, aw.unroll), (2, 1));
     }
 
     #[test]

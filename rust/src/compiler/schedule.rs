@@ -1,10 +1,79 @@
 //! Schedule knobs — the tuner's *visible features* (paper §B.2: "the
 //! optimizable features in our VTA implementation and backend compiler are
 //! based on tiling and the number of virtual threads").
+//!
+//! The schedule layer is knob-based: a [`ConfigSpace`] is an ordered list
+//! of [`Knob`]s (name + candidate values) with mixed-radix *lazy* indexing
+//! — [`ConfigSpace::nth`] / [`ConfigSpace::index_of`] enumerate points on
+//! demand, nothing is materialized up front, and the space index is the
+//! canonical identity of a configuration (replacing the old fixed-width
+//! bit-packed `Schedule::key`, which silently collided once knob values
+//! outgrew their fields).
+//!
+//! Two knob sets are defined:
+//!
+//! * [`SpaceKind::Paper`] — exactly the paper's five knobs
+//!   (TH/TW/tileOC/tileIC/nVirtualThread). Enumeration order, candidate
+//!   lists, and the visible feature vector are byte-identical to the
+//!   original hard-coded implementation, so cold `--space paper` runs
+//!   reproduce pre-refactor tuning traces exactly (pinned by
+//!   `tests/space_golden.rs`).
+//! * [`SpaceKind::Extended`] — adds two primitives that genuinely flow
+//!   through codegen, the timing model, and the validity structure:
+//!   `nLoadSlots` (load double-buffering toggle: 2 = paper behaviour,
+//!   1 = single-buffered, halving the effective INP/WGT footprint and
+//!   shifting the validity boundary model V must learn) and
+//!   `kernelUnroll` (kernel-position unroll for the GEMM inner loop:
+//!   fewer, larger GEMM instructions programmed by an expanded micro-op
+//!   table — less issue overhead, more uop-buffer pressure). The cross
+//!   product is 6× the paper space per layer.
+//!
+//! Visible features (model P/V inputs) are *generated* from the knob list
+//! by a declarative registry: every knob contributes its raw value, and
+//! [`SpaceKind::feature_terms`] lists the AutoTVM-style derived products
+//! (each a list of knob names whose values are multiplied). Names are
+//! derived from the knob declarations too, so adding a knob cannot desync
+//! names from values.
 
 use crate::workloads::ConvLayer;
 
-/// One point in the per-layer search space.
+// ------------------------------------------------------------ knob defs --
+
+/// Knob names, in declaration order. `Schedule` field accessors are keyed
+/// by these names; serialization writes them next to their values so
+/// tuning logs stay readable across space versions (unknown names in old
+/// or future logs are simply skipped on load).
+pub const KNOB_TH: &str = "TH";
+pub const KNOB_TW: &str = "TW";
+pub const KNOB_OC: &str = "tileOC";
+pub const KNOB_IC: &str = "tileIC";
+pub const KNOB_VT: &str = "nVirtualThread";
+pub const KNOB_SLOTS: &str = "nLoadSlots";
+pub const KNOB_UNROLL: &str = "kernelUnroll";
+
+/// The knob universe this build understands (paper five + extensions).
+/// (A `static`, not a `const`: [`SpaceKind::knob_names`] hands out
+/// `&'static` sub-slices of it.)
+pub static ALL_KNOB_NAMES: [&str; 7] = [
+    KNOB_TH, KNOB_TW, KNOB_OC, KNOB_IC, KNOB_VT, KNOB_SLOTS, KNOB_UNROLL,
+];
+
+/// Abbreviation used when composing derived-feature names (kept short so
+/// Table-5 style reports stay readable; matches the paper's `nVT`).
+fn short_name(name: &str) -> &str {
+    match name {
+        KNOB_VT => "nVT",
+        KNOB_SLOTS => "nBuf",
+        KNOB_UNROLL => "kUnroll",
+        other => other,
+    }
+}
+
+// ------------------------------------------------------------- schedule --
+
+/// One point in the per-layer search space, fully resolved (every knob the
+/// build knows has a value; knobs outside the originating space hold their
+/// paper-fixed defaults).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Schedule {
     /// Output-tile height (`TH` in paper Table 5).
@@ -18,60 +87,62 @@ pub struct Schedule {
     /// Virtual threads (`nVirtualThread`): software pipelining depth; the
     /// scratchpads are partitioned `1/n` per thread.
     pub n_vthreads: usize,
+    /// Load-buffer slots per virtual thread: 2 = double buffering (the
+    /// paper-fixed behaviour), 1 = single-buffered (half the INP/WGT
+    /// footprint, loads serialized against compute).
+    pub n_load_slots: usize,
+    /// Kernel-position unroll factor for the GEMM inner loop: 1 = one
+    /// GEMM instruction per (kh, kw) position (paper behaviour); u > 1
+    /// packs u positions into each instruction via an expanded uop table.
+    pub k_unroll: usize,
+}
+
+impl Default for Schedule {
+    /// Paper-fixed defaults for the extension knobs; minimal legal values
+    /// for the paper five (callers always overwrite those).
+    fn default() -> Self {
+        Schedule {
+            tile_h: 1,
+            tile_w: 1,
+            tile_oc: 16,
+            tile_ic: 16,
+            n_vthreads: 1,
+            n_load_slots: 2,
+            k_unroll: 1,
+        }
+    }
 }
 
 impl Schedule {
-    /// Visible feature names, aligned with [`Schedule::visible_features`].
-    pub const VISIBLE_NAMES: [&'static str; 11] = [
-        "TW",
-        "TH",
-        "tileIC",
-        "tileOC",
-        "nVirtualThread",
-        "TW*TH",
-        "TW*TH*tileOC",
-        "TW*TH*tileOC*nVT",
-        "tileIC*nVT",
-        "TW*TH*tileIC*nVT",
-        "tileOC*tileIC*nVT",
-    ];
-
-    /// The visible feature vector models P and V consume (paper: layer and
-    /// kernel information is *not* included — models are per-layer).
-    ///
-    /// Alongside the raw knobs, AutoTVM-style derived products are included:
-    /// they are computable from the schedule alone (no compilation — still
-    /// "visible"), and they turn the multiplicative scratchpad-pressure
-    /// boundaries into near-axis-aligned thresholds that tree models can
-    /// actually represent (the paper's model V reaches 99.4% accuracy,
-    /// Table 4; raw knobs alone cap far below that).
-    pub fn visible_features(&self) -> Vec<f64> {
-        let (tw, th) = (self.tile_w as f64, self.tile_h as f64);
-        let (ic, oc) = (self.tile_ic as f64, self.tile_oc as f64);
-        let vt = self.n_vthreads as f64;
-        vec![
-            tw,
-            th,
-            ic,
-            oc,
-            vt,
-            tw * th,
-            tw * th * oc,
-            tw * th * oc * vt,
-            ic * vt,
-            tw * th * ic * vt,
-            oc * ic * vt,
-        ]
+    /// Read a knob value by name (`None` for names outside the universe).
+    pub fn knob(&self, name: &str) -> Option<usize> {
+        match name {
+            KNOB_TH => Some(self.tile_h),
+            KNOB_TW => Some(self.tile_w),
+            KNOB_OC => Some(self.tile_oc),
+            KNOB_IC => Some(self.tile_ic),
+            KNOB_VT => Some(self.n_vthreads),
+            KNOB_SLOTS => Some(self.n_load_slots),
+            KNOB_UNROLL => Some(self.k_unroll),
+            _ => None,
+        }
     }
 
-    /// Stable identity key for databases / dedup.
-    pub fn key(&self) -> u64 {
-        // fields are small; pack into a u64
-        (self.tile_h as u64) << 48
-            | (self.tile_w as u64) << 32
-            | (self.tile_oc as u64) << 20
-            | (self.tile_ic as u64) << 8
-            | self.n_vthreads as u64
+    /// Set a knob value by name; returns false (and leaves the schedule
+    /// unchanged) for unknown names — the "skip unknown knobs" contract
+    /// cross-version tuning-log loads rely on.
+    pub fn set_knob(&mut self, name: &str, v: usize) -> bool {
+        match name {
+            KNOB_TH => self.tile_h = v,
+            KNOB_TW => self.tile_w = v,
+            KNOB_OC => self.tile_oc = v,
+            KNOB_IC => self.tile_ic = v,
+            KNOB_VT => self.n_vthreads = v,
+            KNOB_SLOTS => self.n_load_slots = v,
+            KNOB_UNROLL => self.k_unroll = v,
+            _ => return false,
+        }
+        true
     }
 }
 
@@ -82,70 +153,295 @@ impl std::fmt::Display for Schedule {
             "th{}_tw{}_oc{}_ic{}_vt{}",
             self.tile_h, self.tile_w, self.tile_oc, self.tile_ic,
             self.n_vthreads
-        )
+        )?;
+        // extension knobs only when off their paper defaults, so paper
+        // runs render exactly as before
+        if self.n_load_slots != 2 {
+            write!(f, "_buf{}", self.n_load_slots)?;
+        }
+        if self.k_unroll != 1 {
+            write!(f, "_u{}", self.k_unroll)?;
+        }
+        Ok(())
     }
 }
 
-/// Per-layer candidate lists (DESIGN.md §Search space): divisors of the
-/// output extent plus multiples of 8, channel-block multiples, 1/2/4
-/// virtual threads. The full space is their cross product.
-pub fn candidates(layer: &ConvLayer) -> ScheduleSpace {
-    ScheduleSpace {
-        tile_h: spatial_candidates(layer.oh),
-        tile_w: spatial_candidates(layer.ow),
-        tile_oc: oc_candidates(layer.kc),
-        tile_ic: ic_candidates(layer.c),
-        // the extended VTA exposes deeper virtual threading; each level
-        // halves the per-thread scratchpad slice (capacity pressure is the
-        // main source of the paper's 0.50–0.93 random invalidity)
-        n_vthreads: vec![1, 2, 4, 8, 16],
+// ------------------------------------------------------------ space kind --
+
+/// Which knob set a search space is built from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpaceKind {
+    /// The paper-exact five-knob space (reproducibility baseline).
+    Paper,
+    /// Paper knobs + load double-buffering toggle + kernel unroll.
+    Extended,
+}
+
+/// Derived-feature products for the paper space: the raw knobs (in the
+/// paper's Table-5 order) followed by the AutoTVM-style products that turn
+/// multiplicative scratchpad-pressure boundaries into near-axis-aligned
+/// thresholds tree models can represent.
+const PAPER_FEATURES: &[&[&str]] = &[
+    &[KNOB_TW],
+    &[KNOB_TH],
+    &[KNOB_IC],
+    &[KNOB_OC],
+    &[KNOB_VT],
+    &[KNOB_TW, KNOB_TH],
+    &[KNOB_TW, KNOB_TH, KNOB_OC],
+    &[KNOB_TW, KNOB_TH, KNOB_OC, KNOB_VT],
+    &[KNOB_IC, KNOB_VT],
+    &[KNOB_TW, KNOB_TH, KNOB_IC, KNOB_VT],
+    &[KNOB_OC, KNOB_IC, KNOB_VT],
+];
+
+/// Extra features of the extended space: the two new raw knobs plus the
+/// products that expose their capacity interactions (INP pressure scales
+/// with `tileIC · nVT · nLoadSlots`; uop-table pressure with
+/// `tileOC · tileIC · kernelUnroll`).
+const EXTENDED_EXTRA_FEATURES: &[&[&str]] = &[
+    &[KNOB_SLOTS],
+    &[KNOB_UNROLL],
+    &[KNOB_IC, KNOB_VT, KNOB_SLOTS],
+    &[KNOB_TW, KNOB_TH, KNOB_IC, KNOB_VT, KNOB_SLOTS],
+    &[KNOB_OC, KNOB_IC, KNOB_UNROLL],
+];
+
+impl SpaceKind {
+    pub fn parse(name: &str) -> Option<SpaceKind> {
+        match name {
+            "paper" => Some(SpaceKind::Paper),
+            "extended" | "ext" => Some(SpaceKind::Extended),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpaceKind::Paper => "paper",
+            SpaceKind::Extended => "extended",
+        }
+    }
+
+    /// Knob names this space kind enumerates, declaration order.
+    pub fn knob_names(&self) -> &'static [&'static str] {
+        match self {
+            SpaceKind::Paper => &ALL_KNOB_NAMES[..5],
+            SpaceKind::Extended => &ALL_KNOB_NAMES,
+        }
+    }
+
+    /// The declarative feature registry: each entry is the list of knob
+    /// names whose values are multiplied (singletons are the raw knobs).
+    pub fn feature_terms(&self) -> Vec<&'static [&'static str]> {
+        let mut terms: Vec<&'static [&'static str]> =
+            PAPER_FEATURES.to_vec();
+        if *self == SpaceKind::Extended {
+            terms.extend_from_slice(EXTENDED_EXTRA_FEATURES);
+        }
+        terms
+    }
+
+    /// Visible feature names, generated from the registry (aligned with
+    /// [`SpaceKind::visible_features`]).
+    pub fn visible_names(&self) -> Vec<String> {
+        self.feature_terms()
+            .iter()
+            .map(|terms| {
+                if terms.len() == 1 {
+                    terms[0].to_string()
+                } else {
+                    terms
+                        .iter()
+                        .map(|t| short_name(t))
+                        .collect::<Vec<_>>()
+                        .join("*")
+                }
+            })
+            .collect()
+    }
+
+    pub fn n_visible(&self) -> usize {
+        self.feature_terms().len()
+    }
+
+    /// The visible feature vector models P and V consume (paper: layer
+    /// and kernel information is *not* included — models are per-layer).
+    /// Every value is a product of small integers, exactly representable
+    /// in f64, so the result is independent of evaluation order.
+    pub fn visible_features(&self, s: &Schedule) -> Vec<f64> {
+        self.feature_terms()
+            .iter()
+            .map(|terms| {
+                terms
+                    .iter()
+                    .map(|t| s.knob(t).expect("registry knob") as f64)
+                    .product()
+            })
+            .collect()
     }
 }
 
-/// The cross-product search space for one layer.
+// ----------------------------------------------------------- config space --
+
+/// One named tuning knob: an ordered candidate-value list.
 #[derive(Clone, Debug)]
-pub struct ScheduleSpace {
-    pub tile_h: Vec<usize>,
-    pub tile_w: Vec<usize>,
-    pub tile_oc: Vec<usize>,
-    pub tile_ic: Vec<usize>,
-    pub n_vthreads: Vec<usize>,
+pub struct Knob {
+    pub name: &'static str,
+    pub values: Vec<usize>,
 }
 
-impl ScheduleSpace {
+/// A configuration drawn from a [`ConfigSpace`]: knob values aligned with
+/// the space's knob order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Config {
+    pub values: Vec<usize>,
+}
+
+/// The lazily indexed cross product of a knob list.
+///
+/// Indexing is mixed-radix row-major with the *last* knob varying fastest
+/// — for the paper knob order (TH, TW, tileOC, tileIC, nVirtualThread)
+/// this reproduces the legacy enumeration order exactly. Memory is
+/// O(sum of candidate-list lengths) regardless of `len()`; nothing is
+/// materialized.
+#[derive(Clone, Debug)]
+pub struct ConfigSpace {
+    kind: SpaceKind,
+    knobs: Vec<Knob>,
+    len: usize,
+}
+
+impl ConfigSpace {
+    pub fn new(kind: SpaceKind, knobs: Vec<Knob>) -> Self {
+        let len = knobs
+            .iter()
+            .map(|k| k.values.len())
+            .try_fold(1usize, usize::checked_mul)
+            .expect("config space size overflows usize");
+        ConfigSpace { kind, knobs, len }
+    }
+
+    pub fn kind(&self) -> SpaceKind {
+        self.kind
+    }
+
+    pub fn knobs(&self) -> &[Knob] {
+        &self.knobs
+    }
+
+    /// Number of points in the space (product of candidate-list lengths).
     pub fn len(&self) -> usize {
-        self.tile_h.len()
-            * self.tile_w.len()
-            * self.tile_oc.len()
-            * self.tile_ic.len()
-            * self.n_vthreads.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.len == 0
     }
 
-    /// Enumerate the `i`-th schedule (row-major over the candidate lists).
-    pub fn nth(&self, i: usize) -> Schedule {
+    /// Total stored candidate values — the space's actual memory
+    /// footprint driver, independent of `len()`.
+    pub fn stored_values(&self) -> usize {
+        self.knobs.iter().map(|k| k.values.len()).sum()
+    }
+
+    /// Decode the `i`-th configuration (mixed-radix, last knob fastest).
+    pub fn nth(&self, i: usize) -> Config {
+        assert!(i < self.len, "index {i} out of range ({})", self.len);
         let mut r = i;
-        let pick = |r: &mut usize, xs: &[usize]| {
-            let v = xs[*r % xs.len()];
-            *r /= xs.len();
-            v
-        };
-        let n_vthreads = pick(&mut r, &self.n_vthreads);
-        let tile_ic = pick(&mut r, &self.tile_ic);
-        let tile_oc = pick(&mut r, &self.tile_oc);
-        let tile_w = pick(&mut r, &self.tile_w);
-        let tile_h = pick(&mut r, &self.tile_h);
-        assert!(r == 0 || i < self.len(), "index out of range");
-        Schedule { tile_h, tile_w, tile_oc, tile_ic, n_vthreads }
+        let mut values = vec![0usize; self.knobs.len()];
+        for (k, knob) in self.knobs.iter().enumerate().rev() {
+            values[k] = knob.values[r % knob.values.len()];
+            r /= knob.values.len();
+        }
+        Config { values }
     }
 
-    /// All schedules, enumeration order.
-    pub fn all(&self) -> Vec<Schedule> {
-        (0..self.len()).map(|i| self.nth(i)).collect()
+    /// Canonical identity: the unique index of a configuration, `None`
+    /// if any value is not in its knob's candidate list. Inverse of
+    /// [`ConfigSpace::nth`].
+    pub fn index_of(&self, c: &Config) -> Option<usize> {
+        if c.values.len() != self.knobs.len() {
+            return None;
+        }
+        let mut idx = 0usize;
+        for (knob, &v) in self.knobs.iter().zip(&c.values) {
+            let pos = knob.values.iter().position(|&x| x == v)?;
+            idx = idx * knob.values.len() + pos;
+        }
+        Some(idx)
     }
+
+    /// Materialize the `i`-th configuration as a resolved [`Schedule`]
+    /// (knobs outside this space keep their paper defaults).
+    pub fn schedule(&self, i: usize) -> Schedule {
+        let c = self.nth(i);
+        let mut s = Schedule::default();
+        for (knob, &v) in self.knobs.iter().zip(&c.values) {
+            s.set_knob(knob.name, v);
+        }
+        s
+    }
+
+    /// The configuration corresponding to a schedule (projection onto
+    /// this space's knobs).
+    pub fn config_of(&self, s: &Schedule) -> Config {
+        Config {
+            values: self
+                .knobs
+                .iter()
+                .map(|k| s.knob(k.name).expect("universe knob"))
+                .collect(),
+        }
+    }
+
+    /// Canonical identity of a schedule in this space (`None` when some
+    /// knob value is off the candidate grid — e.g. a legalized/clamped
+    /// schedule or one imported from a different space version).
+    pub fn index_of_schedule(&self, s: &Schedule) -> Option<usize> {
+        self.index_of(&self.config_of(s))
+    }
+
+    /// Visible feature vector of the `i`-th configuration.
+    pub fn visible(&self, i: usize) -> Vec<f64> {
+        self.kind.visible_features(&self.schedule(i))
+    }
+}
+
+// ------------------------------------------------------------ candidates --
+
+/// Per-layer candidate knobs (DESIGN.md §Search space): divisors of the
+/// output extent plus multiples of 4, channel-block multiples, 1/2/4/8/16
+/// virtual threads; the extended kind adds the load-slot toggle and the
+/// kernel-unroll factor. The space is the lazy cross product.
+pub fn space_for(layer: &ConvLayer, kind: SpaceKind) -> ConfigSpace {
+    let mut knobs = vec![
+        Knob { name: KNOB_TH, values: spatial_candidates(layer.oh) },
+        Knob { name: KNOB_TW, values: spatial_candidates(layer.ow) },
+        Knob { name: KNOB_OC, values: oc_candidates(layer.kc) },
+        Knob { name: KNOB_IC, values: ic_candidates(layer.c) },
+        // the extended VTA exposes deeper virtual threading; each level
+        // halves the per-thread scratchpad slice (capacity pressure is
+        // the main source of the paper's 0.50–0.93 random invalidity)
+        Knob { name: KNOB_VT, values: vec![1, 2, 4, 8, 16] },
+    ];
+    if kind == SpaceKind::Extended {
+        knobs.push(Knob { name: KNOB_SLOTS, values: vec![1, 2] });
+        // unroll values are deliberately layer-independent: on
+        // 1x1-kernel layers legalization clamps them to 1, so those
+        // points alias (exactly like clamped oversized tiles in the
+        // paper space). Keeping the radix uniform keeps every layer's
+        // extended space 6x — the invalid/redundant-region growth the
+        // paper's model V exists to absorb — and keeps cross-layer
+        // transfer working over one knob signature.
+        knobs.push(Knob { name: KNOB_UNROLL, values: vec![1, 2, 4] });
+    }
+    ConfigSpace::new(kind, knobs)
+}
+
+/// Paper-exact space (shorthand for info/validation paths).
+pub fn candidates(layer: &ConvLayer) -> ConfigSpace {
+    space_for(layer, SpaceKind::Paper)
 }
 
 /// Divisors of `n` union multiples of 4 up to `n` (boundary-exercising;
@@ -183,45 +479,157 @@ mod tests {
     #[test]
     fn space_sizes_are_sane() {
         for l in resnet18::LAYERS {
-            let s = candidates(&l);
+            let s = space_for(&l, SpaceKind::Paper);
             assert!(
                 (500..20_000).contains(&s.len()),
                 "{}: {}",
                 l.name,
                 s.len()
             );
+            let e = space_for(&l, SpaceKind::Extended);
+            assert_eq!(e.len(), s.len() * 6, "{}", l.name);
         }
     }
 
     #[test]
-    fn nth_enumerates_all_distinct() {
+    fn nth_round_trips_through_index_of() {
         let l = resnet18::layer("conv5").unwrap();
-        let s = candidates(&l);
-        let all = s.all();
-        assert_eq!(all.len(), s.len());
-        let mut keys: Vec<u64> = all.iter().map(|s| s.key()).collect();
-        keys.sort_unstable();
-        keys.dedup();
-        assert_eq!(keys.len(), all.len(), "schedules must be distinct");
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let s = space_for(&l, kind);
+            for i in (0..s.len()).step_by(7) {
+                let c = s.nth(i);
+                assert_eq!(s.index_of(&c), Some(i), "{kind:?}");
+                assert_eq!(s.index_of_schedule(&s.schedule(i)), Some(i));
+            }
+        }
+    }
+
+    #[test]
+    fn index_is_collision_free_identity() {
+        // satellite regression: the old 64-bit bit-packed key collided
+        // whenever two schedules differed only in knobs outside its
+        // fixed fields (exactly what the new primitives are). The space
+        // index distinguishes every enumerable point.
+        let l = resnet18::layer("conv5").unwrap();
+        let e = space_for(&l, SpaceKind::Extended);
+        let a = e.schedule(0);
+        let mut b = a;
+        b.set_knob(KNOB_UNROLL, 4);
+        let legacy_key = |s: &Schedule| -> u64 {
+            // the removed Schedule::key() packing, frozen here
+            (s.tile_h as u64) << 48
+                | (s.tile_w as u64) << 32
+                | (s.tile_oc as u64) << 20
+                | (s.tile_ic as u64) << 8
+                | s.n_vthreads as u64
+        };
+        assert_ne!(a, b);
+        assert_eq!(legacy_key(&a), legacy_key(&b), "old packing collides");
+        assert_ne!(e.index_of_schedule(&a), e.index_of_schedule(&b));
     }
 
     #[test]
     fn ic_candidates_divide_c() {
         for l in resnet18::LAYERS {
-            for ic in candidates(&l).tile_ic {
-                assert_eq!(l.c % ic, 0);
+            let s = candidates(&l);
+            let ic = &s
+                .knobs()
+                .iter()
+                .find(|k| k.name == KNOB_IC)
+                .unwrap()
+                .values;
+            for &v in ic {
+                assert_eq!(l.c % v, 0);
             }
         }
     }
 
     #[test]
     fn visible_features_order() {
-        let s = Schedule { tile_h: 4, tile_w: 8, tile_oc: 32, tile_ic: 16,
-                           n_vthreads: 2 };
-        let f = s.visible_features();
+        let s = Schedule {
+            tile_h: 4,
+            tile_w: 8,
+            tile_oc: 32,
+            tile_ic: 16,
+            n_vthreads: 2,
+            ..Default::default()
+        };
+        let f = SpaceKind::Paper.visible_features(&s);
         assert_eq!(&f[..5], &[8.0, 4.0, 16.0, 32.0, 2.0]);
-        assert_eq!(f.len(), Schedule::VISIBLE_NAMES.len());
+        assert_eq!(f.len(), SpaceKind::Paper.n_visible());
         assert_eq!(f[5], 32.0); // TW*TH
         assert_eq!(f[7], 8.0 * 4.0 * 32.0 * 2.0);
+    }
+
+    #[test]
+    fn generated_names_match_the_legacy_hand_written_list() {
+        assert_eq!(
+            SpaceKind::Paper.visible_names(),
+            vec![
+                "TW",
+                "TH",
+                "tileIC",
+                "tileOC",
+                "nVirtualThread",
+                "TW*TH",
+                "TW*TH*tileOC",
+                "TW*TH*tileOC*nVT",
+                "tileIC*nVT",
+                "TW*TH*tileIC*nVT",
+                "tileOC*tileIC*nVT",
+            ]
+        );
+        let ext = SpaceKind::Extended.visible_names();
+        assert!(ext.contains(&"nLoadSlots".to_string()));
+        assert!(ext.contains(&"kernelUnroll".to_string()));
+        assert!(ext.contains(&"tileIC*nVT*nBuf".to_string()));
+        assert_eq!(&ext[..11], &SpaceKind::Paper.visible_names()[..]);
+    }
+
+    #[test]
+    fn extended_features_cover_new_knobs() {
+        let l = resnet18::layer("conv5").unwrap();
+        let e = space_for(&l, SpaceKind::Extended);
+        // two extended configs equal on paper knobs but different in
+        // slots/unroll must get different feature vectors
+        let a = e.schedule(0); // slots=1, unroll=1 (ascending values)
+        let mut b = a;
+        b.set_knob(KNOB_SLOTS, 2);
+        b.set_knob(KNOB_UNROLL, 4);
+        let fa = SpaceKind::Extended.visible_features(&a);
+        let fb = SpaceKind::Extended.visible_features(&b);
+        assert_eq!(fa.len(), SpaceKind::Extended.n_visible());
+        assert_ne!(fa, fb);
+        // ...while the paper projection cannot tell them apart
+        assert_eq!(
+            SpaceKind::Paper.visible_features(&a),
+            SpaceKind::Paper.visible_features(&b)
+        );
+    }
+
+    #[test]
+    fn schedule_knob_accessors_round_trip() {
+        let mut s = Schedule::default();
+        for (i, name) in ALL_KNOB_NAMES.iter().enumerate() {
+            assert!(s.set_knob(name, 16 + i));
+            assert_eq!(s.knob(name), Some(16 + i));
+        }
+        assert!(!s.set_knob("notAKnob", 3));
+        assert_eq!(s.knob("notAKnob"), None);
+    }
+
+    #[test]
+    fn display_hides_paper_default_extension_knobs() {
+        let s = Schedule {
+            tile_h: 8,
+            tile_w: 4,
+            tile_oc: 32,
+            tile_ic: 16,
+            n_vthreads: 2,
+            ..Default::default()
+        };
+        assert_eq!(s.to_string(), "th8_tw4_oc32_ic16_vt2");
+        let e = Schedule { n_load_slots: 1, k_unroll: 4, ..s };
+        assert_eq!(e.to_string(), "th8_tw4_oc32_ic16_vt2_buf1_u4");
     }
 }

@@ -64,38 +64,176 @@ pub fn static_check(cfg: &VtaConfig, a: &TileAnalysis) -> StaticCheck {
 mod tests {
     use super::*;
     use crate::compiler::passes::analyze;
-    use crate::compiler::schedule::Schedule;
-    use crate::workloads::resnet18;
+    use crate::compiler::schedule::{space_for, Schedule, SpaceKind};
+    use crate::compiler::Compiler;
+    use crate::vta::Simulator;
+    use crate::workloads::{resnet18, vgg16};
 
-    #[test]
-    fn small_tiles_plausible() {
+    fn sched(th: usize, tw: usize, oc: usize, ic: usize, vt: usize)
+        -> Schedule
+    {
+        Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
+                   n_vthreads: vt, ..Default::default() }
+    }
+
+    /// Which Hopeless arm fired, by message prefix.
+    fn hopeless_reason(chk: &StaticCheck) -> &str {
+        match chk {
+            StaticCheck::Plausible => "plausible",
+            StaticCheck::Hopeless(m) if m.starts_with("ACC") => "acc",
+            StaticCheck::Hopeless(m) if m.starts_with("input") => "inp",
+            StaticCheck::Hopeless(m) if m.starts_with("weight") => "wgt",
+            StaticCheck::Hopeless(m) if m.starts_with("uop") => "uop",
+            StaticCheck::Hopeless(_) => "other",
+        }
+    }
+
+    fn check_of(l: &crate::workloads::ConvLayer, s: Schedule)
+        -> StaticCheck
+    {
         let cfg = VtaConfig::zcu102();
-        let l = resnet18::layer("conv1").unwrap();
-        let s = Schedule { tile_h: 8, tile_w: 8, tile_oc: 32, tile_ic: 32,
-                           n_vthreads: 1 };
-        assert!(static_check(&cfg, &analyze(&cfg, &l, &s)).is_plausible());
+        static_check(&cfg, &analyze(&cfg, l, &s))
     }
 
     #[test]
-    fn whole_image_tile_is_hopeless_on_conv1() {
-        let cfg = VtaConfig::zcu102();
+    fn small_tiles_plausible() {
+        let l = resnet18::layer("conv1").unwrap();
+        assert!(check_of(&l, sched(8, 8, 32, 32, 1)).is_plausible());
+    }
+
+    #[test]
+    fn acc_overflow_arm_fires() {
         let l = resnet18::layer("conv1").unwrap();
         // 56×56 output tile, full channels: acc = 56*56*4 = 12544 > 4096
-        let s = Schedule { tile_h: 56, tile_w: 56, tile_oc: 64, tile_ic: 64,
-                           n_vthreads: 1 };
-        let chk = static_check(&cfg, &analyze(&cfg, &l, &s));
-        assert!(!chk.is_plausible(), "{chk:?}");
+        let chk = check_of(&l, sched(56, 56, 64, 64, 1));
+        assert_eq!(hopeless_reason(&chk), "acc", "{chk:?}");
+    }
+
+    #[test]
+    fn inp_overflow_arm_fires() {
+        // conv4 (28×28, C=128, 3×3): the whole-image halo is
+        // 30·30·(128/16) = 7200 input vectors > 4096, while a single
+        // oc block keeps acc at 28·28·1 = 784 ≤ 4096
+        let l = resnet18::layer("conv4").unwrap();
+        let chk = check_of(&l, sched(28, 28, 16, 128, 1));
+        assert_eq!(hopeless_reason(&chk), "inp", "{chk:?}");
+    }
+
+    #[test]
+    fn wgt_overflow_arm_fires() {
+        // vgg16 3×3 512→512: 512/16 · 9 · 512/16 = 9216 blocks > 2048,
+        // with a small spatial tile so acc/inp stay in bounds
+        let l = vgg16::LAYERS
+            .iter()
+            .find(|l| l.c == 512 && l.kc == 512)
+            .copied()
+            .expect("vgg16 has a 512->512 conv");
+        let chk = check_of(&l, sched(2, 2, 512, 512, 1));
+        assert_eq!(hopeless_reason(&chk), "wgt", "{chk:?}");
+    }
+
+    #[test]
+    fn uop_overflow_arm_fires() {
+        // the kernel-unroll primitive is what makes the uop arm
+        // reachable: a position-expanded table multiplies uop_count by
+        // kh·kw. On the zcu102's 16K-uop buffer the weight check always
+        // trips first, so exercise the arm on a design point with a
+        // small uop buffer (where it is the binding constraint).
+        let cfg = VtaConfig {
+            log_uop_buff_size: 12, // 1024 uops
+            ..VtaConfig::zcu102()
+        };
+        let l = vgg16::LAYERS
+            .iter()
+            .find(|l| l.c == 512 && l.kc == 512)
+            .copied()
+            .expect("vgg16 has a 512->512 conv");
+        // tw=4 divides 28 → single uop variant; nbc·cbc = 4·32 = 128 →
+        // unrolled table 9·128 + 4 = 1156 > 1024, while wgt chunk
+        // 9·128 = 1152 ≤ 2048 and acc/inp stay small
+        let s = Schedule { k_unroll: 4, ..sched(4, 4, 64, 512, 1) };
+        let a = analyze(&cfg, &l, &s);
+        assert!(a.uop_count > cfg.uop_capacity(), "premise: {}",
+                a.uop_count);
+        let chk = static_check(&cfg, &a);
+        assert_eq!(hopeless_reason(&chk), "uop", "{chk:?}");
+        // the same schedule un-unrolled fits easily
+        let a1 = analyze(&cfg, &l, &sched(4, 4, 64, 512, 1));
+        assert!(static_check(&cfg, &a1).is_plausible());
     }
 
     #[test]
     fn static_check_is_weaker_than_runtime() {
         // The whole point: a schedule whose *double-buffered, per-thread*
         // footprint overflows still passes the static check.
-        let cfg = VtaConfig::zcu102();
         let l = resnet18::layer("conv1").unwrap();
         // inp_tile = 30*30*4 = 3600 ≤ 4096, but 2 slots × nvt=4 is 7× over
-        let s = Schedule { tile_h: 28, tile_w: 28, tile_oc: 16, tile_ic: 64,
-                           n_vthreads: 4 };
-        assert!(static_check(&cfg, &analyze(&cfg, &l, &s)).is_plausible());
+        assert!(check_of(&l, sched(28, 28, 16, 64, 4)).is_plausible());
+    }
+
+    #[test]
+    fn plausible_residue_contains_runtime_invalid_configs() {
+        // the residue contract: the static check accepts configurations
+        // the simulator rejects — exactly what model V learns to filter
+        let cfg = VtaConfig::zcu102();
+        let compiler = Compiler::new(cfg.clone());
+        let sim = Simulator::new(cfg.clone());
+        let l = resnet18::layer("conv1").unwrap();
+        let s = sched(28, 28, 16, 64, 4);
+        let a = analyze(&cfg, &l, &s);
+        assert!(static_check(&cfg, &a).is_plausible());
+        let compiled = compiler.compile(&l, &s);
+        assert!(!sim.check(&compiled.program).is_valid(),
+                "plausible-but-crashes residue config ran validly");
+    }
+
+    #[test]
+    fn prop_hopeless_implies_runtime_invalid() {
+        // property: everything the static check rejects must also fail
+        // at (simulated) runtime — Hopeless is a sound subset of
+        // invalid. Swept over a stride of both spaces on two layers
+        // with very different capacity profiles.
+        let cfg = VtaConfig::zcu102();
+        let compiler = Compiler::new(cfg.clone());
+        let sim = Simulator::new(cfg.clone());
+        let layers = [
+            resnet18::layer("conv1").unwrap(),
+            vgg16::LAYERS
+                .iter()
+                .find(|l| l.c == 512 && l.kc == 512)
+                .copied()
+                .unwrap(),
+        ];
+        let mut hopeless_seen = 0usize;
+        for l in layers {
+            for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+                let space = space_for(&l, kind);
+                // cap per (layer, kind) so the sweep stays fast in debug
+                // builds; the stride already spreads it across the space
+                let mut budget = 12usize;
+                for i in (0..space.len()).step_by(97) {
+                    if budget == 0 {
+                        break;
+                    }
+                    let s = space.schedule(i);
+                    let a = analyze(&cfg, &l, &s);
+                    if static_check(&cfg, &a).is_plausible() {
+                        continue;
+                    }
+                    hopeless_seen += 1;
+                    budget -= 1;
+                    let compiled = compiler.compile(&l, &s);
+                    let verdict = sim.check(&compiled.program);
+                    assert!(
+                        !verdict.is_valid(),
+                        "{} {s}: Hopeless statically but ran validly",
+                        l.name
+                    );
+                }
+            }
+        }
+        assert!(hopeless_seen > 20,
+                "sweep found too few Hopeless configs ({hopeless_seen}) \
+                 to mean anything");
     }
 }

@@ -29,7 +29,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::compiler::schedule::Schedule;
+use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::compiler::{Compiled, Compiler};
 use crate::workloads::ConvLayer;
 
@@ -70,7 +70,10 @@ impl CacheStats {
     }
 }
 
-type Key = (&'static str, Schedule);
+// The compiler's space kind is part of the key: entries carry the
+// kind-specific hidden-feature vector, so a paper-kind and an
+// extended-kind lookup of the same (layer, schedule) must not alias.
+type Key = (SpaceKind, &'static str, Schedule);
 
 struct Inner {
     map: HashMap<Key, Arc<CachedCompile>>,
@@ -165,7 +168,7 @@ impl CompileCache {
         layer: &ConvLayer,
         sched: Schedule,
     ) -> Arc<CachedCompile> {
-        let key = (layer.name, sched);
+        let key = (compiler.kind, layer.name, sched);
         if let Some(hit) = self.inner.lock().unwrap().map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(hit);
@@ -210,7 +213,8 @@ mod tests {
     fn setup() -> (Compiler, ConvLayer, Schedule) {
         let layer = resnet18::layer("conv5").unwrap();
         let sched = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32,
-                               tile_ic: 32, n_vthreads: 2 };
+                               tile_ic: 32, n_vthreads: 2,
+                               ..Default::default() };
         (Compiler::new(VtaConfig::zcu102()), layer, sched)
     }
 
@@ -245,6 +249,21 @@ mod tests {
         cache.get_or_compile(&compiler, &layer, sched);
         cache.get_or_compile(&compiler, &conv4, sched);
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn same_schedule_different_space_kind_is_a_miss() {
+        // hidden-feature layouts differ per kind — aliasing entries
+        // across kinds would hand an extended run 21-long hidden vectors
+        let (compiler, layer, sched) = setup();
+        let ext = Compiler::with_kind(VtaConfig::zcu102(),
+                                      SpaceKind::Extended);
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&compiler, &layer, sched);
+        let b = cache.get_or_compile(&ext, &layer, sched);
+        assert_eq!(cache.stats().misses, 2);
+        assert!(b.hidden.len() > a.hidden.len());
+        assert_eq!(a.compiled.program, b.compiled.program);
     }
 
     #[test]

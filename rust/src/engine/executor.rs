@@ -118,7 +118,7 @@ impl Engine {
         TrialRecord {
             space_index,
             schedule: sched,
-            visible: sched.visible_features(),
+            visible: env.space.visible(space_index),
             hidden: cached.hidden.clone(),
             outcome,
         }

@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use super::executor::Engine;
-use crate::compiler::schedule::Schedule;
+use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::tuner::database::{Database, TransferDb};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
@@ -91,7 +91,7 @@ impl LayerSession {
     pub fn new(kind: TunerKind, cfg: TunerConfig, env: TuningEnv) -> Self {
         let rng = Rng::new(cfg.seed ^ kind.rng_salt());
         let space = env.space.clone();
-        let db = Database::for_layer(&env.layer);
+        let db = Database::for_layer_in(&env.layer, env.kind());
         let trace = TuningTrace::new(env.layer.name, kind.name());
         LayerSession { env, cfg, kind, space, db, warm: None, trace, rng,
                        round: 0 }
@@ -203,6 +203,8 @@ impl LayerSession {
 pub struct NetworkConfig {
     pub vta: VtaConfig,
     pub tuner: TunerKind,
+    /// Knob set every layer session enumerates (`--space`).
+    pub space: SpaceKind,
     /// Per-layer loop hyper-parameters; `seed` is the global seed (each
     /// layer derives an independent stream from it).
     pub base: TunerConfig,
@@ -224,6 +226,7 @@ impl Default for NetworkConfig {
         NetworkConfig {
             vta: VtaConfig::zcu102(),
             tuner: TunerKind::Ml2,
+            space: SpaceKind::Paper,
             base: TunerConfig::default(),
             total_trials: 1000,
             round_trials: TunerConfig::default().n_per_round,
@@ -358,15 +361,16 @@ impl NetworkTuner {
                 let mut session = LayerSession::new(
                     cfg.tuner,
                     per_layer,
-                    TuningEnv::new(cfg.vta.clone(), *layer),
+                    TuningEnv::with_space(cfg.vta.clone(), *layer,
+                                          cfg.space),
                 );
                 // only the ML² policy consumes warm data — don't pay
                 // for similarity matching on the baseline kinds
                 if cfg.tuner == TunerKind::Ml2 {
                     if let Some(store) = &cfg.transfer {
-                        if let Some(warm) =
-                            store.warm_start_for(layer, cfg.transfer_cap)
-                        {
+                        if let Some(warm) = store.warm_start_for(
+                            layer, cfg.space, cfg.transfer_cap,
+                        ) {
                             session = session.with_warm_start(warm);
                         }
                     }
@@ -440,7 +444,11 @@ impl NetworkTuner {
             let ri = rounds[i] as f64;
             let score = reward_sum[i] / ri
                 + self.cfg.ucb_c * (t.ln().max(0.0) / ri).sqrt();
-            if best.map_or(true, |(s, _)| score > s + 1e-12) {
+            let improves = match best {
+                None => true,
+                Some((s, _)) => score > s + 1e-12,
+            };
+            if improves {
                 best = Some((score, i));
             }
         }

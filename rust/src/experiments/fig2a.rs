@@ -50,7 +50,7 @@ pub fn run(cfg: &ExpConfig) -> String {
         let mut i = step - 1;
         while i < max_len {
             t.row(&[
-                format!("{}", i + 1),
+                (i + 1).to_string(),
                 cell(&ml2_avg, i),
                 cell(&tvm_avg, i),
             ]);

@@ -56,7 +56,7 @@ pub fn run(cfg: &ExpConfig) -> String {
             let ht = hist(&ms(&runs.tvm));
             let mut ht_t = Table::new(&["bin", "ml2tuner", "tvm"]);
             for b in 0..bins {
-                ht_t.row(&[format!("{b}"), f(hm[b], 3), f(ht[b], 3)]);
+                ht_t.row(&[b.to_string(), f(hm[b], 3), f(ht[b], 3)]);
             }
             out.push_str("\nnormalized exec-time histogram (valid \
                           configs, shared bins low→high):\n");

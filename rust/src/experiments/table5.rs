@@ -3,8 +3,8 @@
 //! hidden features (resolved tile geometry, dummy regions, branch flags).
 
 use super::{data, ExpConfig};
-use crate::compiler::features::{combined_names, HIDDEN_NAMES};
-use crate::compiler::schedule::Schedule;
+use crate::compiler::features::combined_names;
+use crate::compiler::schedule::SpaceKind;
 use crate::gbdt::{Booster, Dataset, GbdtParams};
 use crate::tuner::database::TrialRecord;
 use crate::util::stats::geomean;
@@ -36,8 +36,9 @@ fn importance_for(records: &[TrialRecord], rounds: usize, seed: u64)
 
 pub fn run(cfg: &ExpConfig) -> String {
     let (limit, rounds) = if cfg.quick { (500, 100) } else { (2500, 300) };
-    let names = combined_names();
-    let n_visible = Schedule::VISIBLE_NAMES.len();
+    // the experiment reproduces the paper's table: paper feature layout
+    let names = combined_names(SpaceKind::Paper);
+    let n_visible = SpaceKind::Paper.n_visible();
     let layers: Vec<_> = if cfg.quick {
         vec![resnet18::layer("conv1").unwrap(),
              resnet18::layer("conv4").unwrap()]
@@ -95,6 +96,5 @@ pub fn run(cfg: &ExpConfig) -> String {
     out.push_str(&format!(
         "\nhidden-feature share of total importance (geo): {hidden_share:.1}%\n"
     ));
-    let _ = HIDDEN_NAMES; // names come from combined_names()
     out
 }

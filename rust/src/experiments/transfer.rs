@@ -58,7 +58,8 @@ pub fn run(cfg: &ExpConfig) -> String {
         store.add(db);
     }
     let warm = store
-        .warm_start_for(&target, cap)
+        .warm_start_for(&target, crate::compiler::schedule::SpaceKind::Paper,
+                        cap)
         .expect("sibling layers must transfer");
 
     // -- 2. cold vs warm on the held-out layer, paired seeds --------------
@@ -110,7 +111,7 @@ pub fn run(cfg: &ExpConfig) -> String {
     let mut i = step - 1;
     while i < cold_avg.len().max(warm_avg.len()) {
         t.row(&[
-            format!("{}", i + 1),
+            (i + 1).to_string(),
             cell(&cold_avg, i),
             cell(&warm_avg, i),
         ]);

@@ -181,9 +181,11 @@ pub fn grow(
                             + leaf_objective(gr, hr, cfg)
                             - parent_obj)
                         - cfg.gamma;
-                    if gain > 0.0
-                        && best.map_or(true, |(bg, ..)| gain > bg)
-                    {
+                    let improves = match best {
+                        None => true,
+                        Some((bg, ..)) => gain > bg,
+                    };
+                    if gain > 0.0 && improves {
                         best = Some((gain, f, b as u8, gl, hl));
                     }
                 }

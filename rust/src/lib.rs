@@ -13,9 +13,13 @@
 //! * [`vta`] — the hardware substrate: a functional **and** cycle-approximate
 //!   simulator of the extended VTA of paper Appendix A.1 (Table 1), including
 //!   the runtime fault model that makes configurations *invalid*.
-//! * [`compiler`] — the backend compiler substrate: schedule-driven code
-//!   generation (conv → tiled loop nest → VTA instruction stream) whose
-//!   analysis passes emit the paper's *hidden features* (Table 5).
+//! * [`compiler`] — the backend compiler substrate: a knob-based, lazily
+//!   indexed search space ([`compiler::schedule::ConfigSpace`]; the
+//!   paper-exact knob set plus an extended one with load double-buffering
+//!   and kernel unroll), schedule-driven code generation (conv → tiled
+//!   loop nest → VTA instruction stream) whose analysis passes emit the
+//!   paper's *hidden features* (Table 5), and a derived-feature registry
+//!   that generates the P/V feature vectors from the knob declarations.
 //! * [`gbdt`] — from-scratch XGBoost-style gradient-boosted trees (the
 //!   paper's cost-model family), with the Table 3 hyper-parameter surface.
 //! * [`workloads`] — the network registry: ResNet18 (paper Table 2a),
@@ -53,7 +57,7 @@ pub mod workloads;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::compiler::schedule::Schedule;
+    pub use crate::compiler::schedule::{ConfigSpace, Schedule, SpaceKind};
     pub use crate::compiler::Compiler;
     pub use crate::engine::Engine;
     pub use crate::gbdt::params::GbdtParams;

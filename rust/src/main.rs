@@ -4,15 +4,17 @@
 //! ml2tuner info                         hardware config, networks, spaces
 //! ml2tuner tune [--network resnet18] --layer conv1
 //!               [--tuner ml2tuner|tvm|random] [--trials N] [--seed S]
-//!               [--jobs J] [--db out.json] [--transfer-from dir]
+//!               [--jobs J] [--space paper|extended] [--v-margin M]
+//!               [--db out.json] [--transfer-from dir]
 //! ml2tuner tune-net [--network resnet18|vgg16|mobilenet|synth-gemm]
 //!               [--tuner ml2tuner|tvm|random] [--trials N] [--round N]
 //!               [--seed S] [--jobs J] [--layers a,b,..] [--out dir]
+//!               [--space paper|extended] [--v-margin M]
 //!               [--transfer-from dir] [--transfer-cap N]
 //!               whole-network tuning, one budget
 //! ml2tuner simulate [--network N] --layer conv1
-//!               --schedule TH,TW,OC,IC,VT [--numeric]
-//! ml2tuner validate [--layer conv1] [--samples N] [--seed S]
+//!               --schedule TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]
+//! ml2tuner validate [--layer conv1] [--samples N] [--seed S] [--space K]
 //!               (simulator vs AOT JAX/Pallas golden, bit-exact)
 //! ml2tuner experiment <id>|all [--quick] [--repeats N] [--seed S]
 //! ```
@@ -21,7 +23,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ml2tuner::compiler::schedule::Schedule;
+use ml2tuner::compiler::schedule::{self, Schedule, SpaceKind};
 use ml2tuner::compiler::Compiler;
 use ml2tuner::engine::{
     default_jobs, Engine, NetworkConfig, NetworkTuner, TunerKind,
@@ -88,6 +90,15 @@ impl Args {
         }
     }
 
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number")),
+        }
+    }
+
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -129,29 +140,49 @@ fn print_usage() {
          commands:\n  \
          info\n  \
          tune [--network N] --layer conv1 [--tuner ml2tuner|tvm|random] \
-         [--trials N]\n       [--seed S] [--jobs J] [--db out.json] \
+         [--trials N]\n       [--seed S] [--jobs J] [--space \
+         paper|extended] [--v-margin M]\n       [--db out.json] \
          [--transfer-from dir]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
          [--tuner ..]\n       [--trials N] [--round N] [--seed S] \
-         [--jobs J] [--layers a,b,..]\n       [--out dir] \
-         [--transfer-from dir] [--transfer-cap N]\n  \
-         simulate [--network N] --layer conv1 --schedule TH,TW,OC,IC,VT \
-         [--numeric]\n  \
-         validate [--layer conv1] [--samples N] [--seed S]\n  \
+         [--jobs J] [--layers a,b,..]\n       [--space paper|extended] \
+         [--v-margin M] [--out dir]\n       [--transfer-from dir] \
+         [--transfer-cap N]\n  \
+         simulate [--network N] --layer conv1 --schedule \
+         TH,TW,OC,IC,VT[,SLOTS,UNROLL]\n       [--numeric]\n  \
+         validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
          headline|transfer|all> [--quick] [--repeats N] [--seed S]\n\n\
          --network: a registered workload ({}); layer names are resolved\n\
         \x20       within it.\n\
+         --space: knob set. 'paper' is the paper-exact 5-knob space \
+         (byte-reproducible\n        traces); 'extended' adds load \
+         double-buffering (nLoadSlots 1|2) and\n        kernel unroll \
+         (kernelUnroll 1|2|4) — 6x the space per layer.\n\
+         --v-margin: model-V veto margin on the hinge score (default \
+         0.25).\n\
          --jobs: profiling/compile worker threads (default: all cores); \
          traces are\n        identical for any worker count.\n\
          --transfer-from: directory of prior tuning logs (tune --db / \
          tune-net --out);\n        shape-similar layers warm-start the \
-         models before the first batch.\n\
+         models before the first batch\n        (knob values are \
+         similarity-matched across space versions).\n\
          tune-net splits one global --trials budget across the layers \
          with a\n        round-robin + UCB allocator and saves one tuning \
          log per layer to --out.",
         workloads::network_names().join("|")
     );
+}
+
+/// `--space paper|extended` (default: the paper-exact knob set, so cold
+/// runs stay byte-reproducible against the paper baseline).
+fn space_arg(args: &Args) -> Result<SpaceKind> {
+    match args.get("space") {
+        None => Ok(SpaceKind::Paper),
+        Some(name) => SpaceKind::parse(name).ok_or_else(|| {
+            anyhow!("unknown space '{name}' (known: paper, extended)")
+        }),
+    }
 }
 
 fn network_arg(args: &Args) -> Result<&'static Network> {
@@ -235,16 +266,17 @@ fn cmd_info() -> Result<()> {
     for net in &workloads::NETWORKS {
         println!("\n-- {} --", net.name);
         let mut t = Table::new(&["layer", "H,W,C", "KC,KH,KW", "OH,OW",
-                                 "pad,stride", "space size"]);
+                                 "pad,stride", "space paper/extended"]);
         for l in net.layers {
-            let space = ml2tuner::compiler::schedule::candidates(l);
+            let paper = schedule::space_for(l, SpaceKind::Paper);
+            let ext = schedule::space_for(l, SpaceKind::Extended);
             t.row(&[
                 l.name.to_string(),
                 format!("{},{},{}", l.h, l.w, l.c),
                 format!("{},{},{}", l.kc, l.kh, l.kw),
                 format!("{},{}", l.oh, l.ow),
                 format!("{},{}", l.pad, l.stride),
-                format!("{}", space.len()),
+                format!("{} / {}", paper.len(), ext.len()),
             ]);
         }
         t.print();
@@ -267,8 +299,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let trials = args.get_usize("trials", 300)?;
     let seed = args.get_u64("seed", 0)?;
     let jobs = args.get_usize("jobs", default_jobs())?;
-    let cfg = TunerConfig { seed, max_trials: trials, ..Default::default() };
-    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let space = space_arg(args)?;
+    let v_margin =
+        args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
+    let cfg = TunerConfig { seed, max_trials: trials, v_margin,
+                            ..Default::default() };
+    let env = TuningEnv::with_space(VtaConfig::zcu102(), layer, space);
+    println!("space: {} ({} configurations)", space.name(),
+             env.space.len());
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let kind = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
@@ -278,7 +316,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
             let mut t = Ml2Tuner::new(cfg);
             if let Some(store) = &transfer {
                 let cap = args.get_usize("transfer-cap", 400)?;
-                match store.warm_start_for(&layer, cap) {
+                match store.warm_start_for(&layer, space, cap) {
                     Some(warm) => {
                         println!(
                             "warm start: {} transferred records for {}",
@@ -342,7 +380,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         trace.estimated_wall_clock(&ProfilingCostModel::default())
     );
     if let Some(path) = args.get("db") {
-        let mut db = Database::for_layer(&layer);
+        let mut db = Database::for_layer_in(&layer, space);
         for r in &trace.trials {
             db.push(r.clone());
         }
@@ -386,19 +424,23 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
             bail!("--layers lists '{}' twice", l.name);
         }
     }
+    let space = space_arg(args)?;
+    let v_margin =
+        args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
     let cfg = NetworkConfig {
         tuner,
+        space,
         total_trials: trials,
         round_trials: round,
-        base: TunerConfig { seed, ..Default::default() },
+        base: TunerConfig { seed, v_margin, ..Default::default() },
         transfer: transfer_arg(args, tuner)?,
         transfer_cap: args.get_usize("transfer-cap", 400)?,
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
     let t0 = std::time::Instant::now();
-    println!("tuning {} ({} layers, {} trials)", net.name, layers.len(),
-             trials);
+    println!("tuning {} ({} layers, {} trials, {} space)", net.name,
+             layers.len(), trials, space.name());
     let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
     print!("{}", outcome.report.render());
     let cache = engine.cache().stats();
@@ -423,17 +465,25 @@ fn parse_schedule(text: &str) -> Result<Schedule> {
         .split(',')
         .map(|p| p.trim().parse::<usize>())
         .collect::<Result<_, _>>()
-        .context("--schedule expects TH,TW,OC,IC,VT integers")?;
-    if parts.len() != 5 {
-        bail!("--schedule expects exactly 5 comma-separated values");
+        .context("--schedule expects TH,TW,OC,IC,VT[,SLOTS,UNROLL] \
+                  integers")?;
+    if parts.len() != 5 && parts.len() != 7 {
+        bail!("--schedule expects 5 (paper knobs) or 7 (paper + \
+               nLoadSlots,kernelUnroll) comma-separated values");
     }
-    Ok(Schedule {
+    let mut s = Schedule {
         tile_h: parts[0],
         tile_w: parts[1],
         tile_oc: parts[2],
         tile_ic: parts[3],
         n_vthreads: parts[4],
-    })
+        ..Default::default()
+    };
+    if parts.len() == 7 {
+        s.n_load_slots = parts[5];
+        s.k_unroll = parts[6];
+    }
+    Ok(s)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -442,8 +492,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let sched = parse_schedule(
         args.get("schedule").ok_or_else(|| anyhow!("--schedule required"))?,
     )?;
+    // a 7-value schedule exercises the extended primitives, so report
+    // its hidden features in the extended layout
+    let space = match args.get("space") {
+        None if sched.n_load_slots != 2 || sched.k_unroll != 1 => {
+            SpaceKind::Extended
+        }
+        _ => space_arg(args)?,
+    };
     let cfg = VtaConfig::zcu102();
-    let compiler = Compiler::new(cfg.clone());
+    let compiler = Compiler::with_kind(cfg.clone(), space);
     let sim = Simulator::new(cfg.clone());
     let compiled = compiler.compile(&layer, &sched);
     println!(
@@ -462,11 +520,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             sim.cycles_to_ms(verdict.cycles())
         );
     }
-    let names = ml2tuner::compiler::features::HIDDEN_NAMES;
+    let names = ml2tuner::compiler::features::hidden_names(space);
     let hidden = compiler.hidden_features(&compiled);
     let mut t = Table::new(&["hidden feature", "value"]);
     for (n, v) in names.iter().zip(&hidden) {
-        t.row(&[n.to_string(), format!("{v}")]);
+        t.row(&[n.to_string(), v.to_string()]);
     }
     t.print();
     if args.has("numeric") && verdict.is_valid() {
@@ -522,16 +580,17 @@ fn cmd_validate(args: &Args) -> Result<()> {
         Some(_) => vec![layer_arg(args, resnet)?],
         None => resnet18::LAYERS.to_vec(),
     };
+    let space_kind = space_arg(args)?;
     let mut rng = Rng::new(seed);
     let mut checked = 0usize;
     for layer in layers {
         rt.check_layer(&layer)?;
-        let space = ml2tuner::compiler::schedule::candidates(&layer);
+        let space = schedule::space_for(&layer, space_kind);
         let mut found = 0usize;
         let mut attempts = 0usize;
         while found < samples && attempts < samples * 60 {
             attempts += 1;
-            let sched = space.nth(rng.below(space.len()));
+            let sched = space.schedule(rng.below(space.len()));
             let compiled = compiler.compile(&layer, &sched);
             if !sim.check(&compiled.program).is_valid() {
                 continue;
@@ -603,7 +662,12 @@ mod tests {
         assert_eq!(s.tile_h, 8);
         assert_eq!(s.tile_w, 14);
         assert_eq!(s.n_vthreads, 2);
+        assert_eq!((s.n_load_slots, s.k_unroll), (2, 1),
+                   "5-value form keeps paper defaults");
+        let e = parse_schedule("8,14,32,64,2,1,4").unwrap();
+        assert_eq!((e.n_load_slots, e.k_unroll), (1, 4));
         assert!(parse_schedule("1,2,3").is_err());
+        assert!(parse_schedule("1,2,3,4,5,6").is_err());
         assert!(parse_schedule("a,b,c,d,e").is_err());
     }
 }

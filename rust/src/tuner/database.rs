@@ -12,7 +12,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::compiler::schedule::Schedule;
+use crate::compiler::features;
+use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::util::json::Json;
 use crate::workloads::ConvLayer;
 
@@ -165,28 +166,44 @@ impl LayerMeta {
 }
 
 /// The profiling database.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Database {
     pub layer: String,
     /// Layer shape, when known. Logs written before shape persistence
     /// (or hand-built test databases) have `None` — they still train
     /// models, but [`TransferDb`] can only match them by exact name.
     pub meta: Option<LayerMeta>,
+    /// Knob set of the run that produced this database. Serialized with
+    /// the log and used to rebuild visible features on load; logs
+    /// without the field (pre-ConfigSpace) are paper-kind.
+    pub kind: SpaceKind,
     pub records: Vec<TrialRecord>,
+}
+
+impl Default for Database {
+    fn default() -> Self {
+        Database::new("")
+    }
 }
 
 impl Database {
     pub fn new(layer: &str) -> Self {
         Database { layer: layer.to_string(), meta: None,
-                   records: Vec::new() }
+                   kind: SpaceKind::Paper, records: Vec::new() }
     }
 
     /// Database for a known layer: carries the shape so the persisted
     /// log is usable for cross-layer transfer.
     pub fn for_layer(layer: &ConvLayer) -> Self {
+        Self::for_layer_in(layer, SpaceKind::Paper)
+    }
+
+    /// Shape-stamped database for a run over a specific knob set.
+    pub fn for_layer_in(layer: &ConvLayer, kind: SpaceKind) -> Self {
         Database {
             layer: layer.name.to_string(),
             meta: Some(LayerMeta::of(layer)),
+            kind,
             records: Vec::new(),
         }
     }
@@ -230,10 +247,16 @@ impl Database {
     }
 
     /// Training set for A: visible ⊕ hidden features of valid records.
+    /// Records without hidden features (e.g. transferred from a space
+    /// version whose hidden layout cannot be projected onto this one)
+    /// are skipped — they still train P and V, which are visible-only.
     pub fn train_a(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
         let mut xs = Vec::new();
         let mut ys = Vec::new();
         for r in &self.records {
+            if r.hidden.is_empty() {
+                continue;
+            }
             if let Some(y) = r.perf_label() {
                 xs.push(crate::compiler::features::combined_features(
                     &r.visible, &r.hidden,
@@ -272,6 +295,7 @@ impl Database {
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("layer", self.layer.as_str());
+        root.set("space", self.kind.name());
         if let Some(m) = &self.meta {
             root.set("shape", m.to_json());
         }
@@ -280,12 +304,16 @@ impl Database {
             .iter()
             .map(|r| {
                 let mut o = Json::obj();
+                // knobs are serialized by NAME so logs remain usable —
+                // and transfer-matchable — across space versions: a
+                // loader skips names it does not know and defaults the
+                // ones a record does not carry
+                let mut knobs = Json::obj();
+                for name in self.kind.knob_names() {
+                    knobs.set(name, r.schedule.knob(name).unwrap_or(0));
+                }
                 o.set("i", r.space_index)
-                    .set("th", r.schedule.tile_h)
-                    .set("tw", r.schedule.tile_w)
-                    .set("oc", r.schedule.tile_oc)
-                    .set("ic", r.schedule.tile_ic)
-                    .set("vt", r.schedule.n_vthreads)
+                    .set("knobs", knobs)
                     .set("hidden", r.hidden.clone());
                 match r.outcome {
                     Outcome::Valid { cycles } => {
@@ -312,6 +340,13 @@ impl Database {
             .ok_or_else(|| anyhow!("missing layer"))?
             .to_string();
         let mut db = Database::new(&layer);
+        db.kind = match j.get("space").and_then(Json::as_str) {
+            Some(name) => SpaceKind::parse(name)
+                .ok_or_else(|| anyhow!("unknown space kind '{name}'"))?,
+            // logs written before the knob-based ConfigSpace carry no
+            // space field and are paper-kind by construction
+            None => SpaceKind::Paper,
+        };
         db.meta = match j.get("shape") {
             Some(s) => Some(LayerMeta::from_json(s)?),
             None => None,
@@ -326,13 +361,42 @@ impl Database {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| anyhow!("missing {k}"))
             };
-            let schedule = Schedule {
-                tile_h: geti("th")?,
-                tile_w: geti("tw")?,
-                tile_oc: geti("oc")?,
-                tile_ic: geti("ic")?,
-                n_vthreads: geti("vt")?,
-            };
+            let mut schedule = Schedule::default();
+            if let Some(knobs) = r.get("knobs").and_then(Json::as_obj) {
+                for (name, val) in knobs {
+                    if let Some(v) = val.as_usize() {
+                        // unknown names (future knobs) are skipped; a
+                        // knob this build knows but the log's own kind
+                        // does not declare keeps its paper default
+                        schedule.set_knob(name, v);
+                    }
+                }
+                // ...but every knob the log's declared space kind
+                // enumerates must be present and numeric — silently
+                // defaulting a missing/corrupt TH to 1 would pair a
+                // wrong schedule with a real cycles label and poison
+                // warm-start training without any diagnostic
+                for name in db.kind.knob_names() {
+                    if knobs.get(*name).and_then(Json::as_usize)
+                        .is_none()
+                    {
+                        return Err(anyhow!(
+                            "record missing {} knob '{name}'",
+                            db.kind.name()
+                        ));
+                    }
+                }
+            } else {
+                // legacy flat-field format (pre-ConfigSpace logs)
+                schedule = Schedule {
+                    tile_h: geti("th")?,
+                    tile_w: geti("tw")?,
+                    tile_oc: geti("oc")?,
+                    tile_ic: geti("ic")?,
+                    n_vthreads: geti("vt")?,
+                    ..Default::default()
+                };
+            }
             let hidden: Vec<f64> = r
                 .get("hidden")
                 .and_then(Json::as_arr)
@@ -353,7 +417,10 @@ impl Database {
             db.push(TrialRecord {
                 space_index: geti("i")?,
                 schedule,
-                visible: schedule.visible_features(),
+                // visible features are derived state: rebuild them in
+                // this log's own feature layout (transfer re-derives
+                // them again in the *target* layout)
+                visible: db.kind.visible_features(&schedule),
                 hidden,
                 outcome,
             });
@@ -443,10 +510,10 @@ impl TransferDb {
         self.sources.is_empty()
     }
 
-    /// Assemble a warm-start database for `layer`: records from the most
-    /// similar stored layers (shape similarity ≥
-    /// [`MIN_TRANSFER_SIMILARITY`], best source first), capped at
-    /// `max_records`.
+    /// Assemble a warm-start database for `layer`, in the **target
+    /// run's** space kind: records from the most similar stored layers
+    /// (shape similarity ≥ [`MIN_TRANSFER_SIMILARITY`], best source
+    /// first), capped at `max_records`.
     ///
     /// Valid records have their cycle counts rescaled by the target/source
     /// MAC ratio so the `log2(cycles)` labels Model P trains on live on
@@ -455,8 +522,16 @@ impl TransferDb {
     /// labels transfer unscaled (the boundary is scratchpad-pressure
     /// driven, a near-layer-independent function of the schedule).
     /// Sources without shape metadata (legacy logs) are used only when
-    /// their layer name matches exactly. Records whose hidden-feature
-    /// vector does not match this build's layout are dropped.
+    /// their layer name matches exactly.
+    ///
+    /// Cross-space-version transfer: visible features are re-derived
+    /// from the stored knob values in the *target* kind's feature layout
+    /// (knobs a source record does not carry default to their
+    /// paper-fixed values, and source knobs outside the target universe
+    /// were already skipped at load). Hidden features transfer when the
+    /// source layout covers the target's (extended ⊇ paper: truncated);
+    /// otherwise they are cleared — such records still pre-train the
+    /// visible-only P and V, and [`Database::train_a`] skips them.
     ///
     /// Returns `None` when nothing transfers. The returned database's
     /// `space_index` values refer to the *source* layers' spaces and are
@@ -465,6 +540,7 @@ impl TransferDb {
     pub fn warm_start_for(
         &self,
         layer: &ConvLayer,
+        kind: SpaceKind,
         max_records: usize,
     ) -> Option<Database> {
         let target = LayerMeta::of(layer);
@@ -482,8 +558,7 @@ impl TransferDb {
             .collect();
         // best source first; ties keep load order (sort is stable)
         scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let hidden_len = crate::compiler::features::HIDDEN_NAMES.len();
-        let mut warm = Database::for_layer(layer);
+        let mut warm = Database::for_layer_in(layer, kind);
         for (_, src) in scored {
             if warm.len() >= max_records {
                 break;
@@ -492,14 +567,28 @@ impl TransferDb {
                 Some(m) => target.macs() as f64 / m.macs() as f64,
                 None => 1.0,
             };
+            // hidden features project onto the target layout only when
+            // the SOURCE's declared layout covers it (extended = paper
+            // prefix + tail); gating on the kind — not on raw vector
+            // length — keeps a future non-prefix-compatible layout (or
+            // a malformed log) from training model A on misaligned
+            // columns. Unprojectable records keep training P/V.
+            let projectable = src.kind == kind
+                || (src.kind == SpaceKind::Extended
+                    && kind == SpaceKind::Paper);
             for rec in &src.records {
                 if warm.len() >= max_records {
                     break;
                 }
-                if rec.hidden.len() != hidden_len {
-                    continue;
-                }
                 let mut r = rec.clone();
+                r.visible = kind.visible_features(&r.schedule);
+                if projectable
+                    && r.hidden.len() == features::hidden_len(src.kind)
+                {
+                    r.hidden.truncate(features::hidden_len(kind));
+                } else {
+                    r.hidden.clear(); // trains P/V only
+                }
                 if let Outcome::Valid { cycles } = r.outcome {
                     let scaled = (cycles as f64 * ratio).round().max(1.0);
                     r.outcome = Outcome::Valid { cycles: scaled as u64 };
@@ -521,11 +610,12 @@ mod tests {
 
     fn rec(i: usize, outcome: Outcome) -> TrialRecord {
         let schedule = Schedule { tile_h: i + 1, tile_w: 2, tile_oc: 16,
-                                  tile_ic: 16, n_vthreads: 1 };
+                                  tile_ic: 16, n_vthreads: 1,
+                                  ..Default::default() };
         TrialRecord {
             space_index: i,
             schedule,
-            visible: schedule.visible_features(),
+            visible: SpaceKind::Paper.visible_features(&schedule),
             hidden: vec![1.0, 2.0, 3.0],
             outcome,
         }
@@ -562,12 +652,75 @@ mod tests {
         let j = db.to_json();
         let back = Database::from_json(&j).unwrap();
         assert_eq!(back.layer, "conv3");
+        assert_eq!(back.kind, SpaceKind::Paper);
         assert_eq!(back.len(), 3);
         assert_eq!(back.records[0].outcome,
                    Outcome::Valid { cycles: 5000 });
         assert_eq!(back.records[1].schedule.tile_h, 8);
         assert_eq!(back.records[2].outcome, Outcome::WrongOutput);
         assert_eq!(back.records[0].hidden, vec![1.0, 2.0, 3.0]);
+        assert_eq!(back.records[0].visible, db.records[0].visible);
+    }
+
+    #[test]
+    fn json_serializes_knobs_by_name_and_skips_unknown_on_load() {
+        let mut db = Database::new("x");
+        db.kind = SpaceKind::Extended;
+        let mut r = rec(3, Outcome::Crash);
+        r.schedule.n_load_slots = 1;
+        r.schedule.k_unroll = 4;
+        db.push(r);
+        let text = db.to_json().to_string_pretty();
+        assert!(text.contains("\"kernelUnroll\": 4"), "{text}");
+        assert!(text.contains("\"nLoadSlots\": 1"), "{text}");
+        assert!(text.contains("\"space\": \"extended\""), "{text}");
+        let back = Database::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.kind, SpaceKind::Extended);
+        assert_eq!(back.records[0].schedule.k_unroll, 4);
+        assert_eq!(back.records[0].visible.len(),
+                   SpaceKind::Extended.n_visible());
+
+        // a log from a hypothetical future space version carrying an
+        // extra knob: the unknown name is skipped, everything this
+        // build declares still lands
+        let future = text.replace(
+            "\"nLoadSlots\": 1",
+            "\"knobFromTheFuture\": 9, \"nLoadSlots\": 1",
+        );
+        let back2 =
+            Database::from_json(&Json::parse(&future).unwrap()).unwrap();
+        assert_eq!(back2.records[0].schedule.k_unroll, 4);
+        assert_eq!(back2.records[0].schedule.n_load_slots, 1);
+
+        // ...but a knob the log's OWN kind declares must be present:
+        // silently defaulting it would poison warm-start training
+        let missing = text.replace("\"kernelUnroll\": 4,", "");
+        assert!(missing.len() < text.len(), "replace must hit");
+        assert!(
+            Database::from_json(&Json::parse(&missing).unwrap()).is_err(),
+            "missing declared knob must be a load error"
+        );
+    }
+
+    #[test]
+    fn legacy_flat_field_logs_still_load() {
+        // pre-ConfigSpace log format: flat th/tw/oc/ic/vt, no space tag
+        let text = r#"{
+          "layer": "conv1",
+          "records": [
+            { "i": 5, "th": 8, "tw": 4, "oc": 32, "ic": 16, "vt": 2,
+              "hidden": [1.0], "outcome": "valid", "cycles": 777 }
+          ]
+        }"#;
+        let db = Database::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(db.kind, SpaceKind::Paper);
+        let r = &db.records[0];
+        assert_eq!((r.schedule.tile_h, r.schedule.tile_w), (8, 4));
+        assert_eq!(r.schedule.n_load_slots, 2, "paper default");
+        assert_eq!(r.visible, SpaceKind::Paper
+            .visible_features(&r.schedule));
+        assert_eq!(r.outcome, Outcome::Valid { cycles: 777 });
     }
 
     #[test]
@@ -611,7 +764,7 @@ mod tests {
 
     fn full_hidden_rec(i: usize, outcome: Outcome) -> TrialRecord {
         let mut r = rec(i, outcome);
-        r.hidden = vec![1.0; crate::compiler::features::HIDDEN_NAMES.len()];
+        r.hidden = vec![1.0; features::hidden_len(SpaceKind::Paper)];
         r
     }
 
@@ -627,7 +780,8 @@ mod tests {
         src.push(full_hidden_rec(1, Outcome::Crash));
         let mut store = TransferDb::new();
         store.add(src);
-        let warm = store.warm_start_for(&pw5, 100).unwrap();
+        let warm =
+            store.warm_start_for(&pw5, SpaceKind::Paper, 100).unwrap();
         assert_eq!(warm.layer, "pw5");
         assert_eq!(warm.len(), 2);
         assert_eq!(warm.records[0].outcome,
@@ -651,7 +805,8 @@ mod tests {
             }
             store.add(db);
         }
-        let warm = store.warm_start_for(&pw5, 7).unwrap();
+        let warm =
+            store.warm_start_for(&pw5, SpaceKind::Paper, 7).unwrap();
         assert_eq!(warm.len(), 7, "cap respected");
         // most similar source (pw4) first: its 5 records lead
         assert!(warm.records[..5]
@@ -665,13 +820,68 @@ mod tests {
     }
 
     #[test]
-    fn transfer_db_drops_records_with_foreign_hidden_layout() {
+    fn foreign_hidden_layouts_transfer_as_visible_only_records() {
+        // a record whose hidden vector cannot be projected onto the
+        // target layout still pre-trains the visible-only P and V; its
+        // hidden features are cleared so train_a skips it
         let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
         let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
         let mut src = Database::for_layer(&pw4);
         src.push(rec(0, Outcome::Valid { cycles: 100 })); // 3-long hidden
         let mut store = TransferDb::new();
         store.add(src);
-        assert!(store.warm_start_for(&pw5, 10).is_none());
+        let warm =
+            store.warm_start_for(&pw5, SpaceKind::Paper, 10).unwrap();
+        assert_eq!(warm.len(), 1);
+        assert!(warm.records[0].hidden.is_empty());
+        let (xa, _) = warm.train_a();
+        assert!(xa.is_empty(), "A must not train on cleared hidden");
+        let (xp, _) = warm.train_p();
+        assert_eq!(xp.len(), 1, "P still trains on the record");
+    }
+
+    #[test]
+    fn warm_start_rederives_features_across_space_versions() {
+        let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        // paper-kind source log → extended-kind target run: visible
+        // grows to the extended layout (defaults for the new knobs),
+        // hidden cannot be projected up and clears
+        let mut paper_src = Database::for_layer(&pw4);
+        paper_src.push(full_hidden_rec(0, Outcome::Valid { cycles: 64 }));
+        let mut store = TransferDb::new();
+        store.add(paper_src);
+        let warm = store
+            .warm_start_for(&pw5, SpaceKind::Extended, 10)
+            .unwrap();
+        assert_eq!(warm.kind, SpaceKind::Extended);
+        let r = &warm.records[0];
+        assert_eq!(r.visible.len(), SpaceKind::Extended.n_visible());
+        assert_eq!(r.visible,
+                   SpaceKind::Extended.visible_features(&r.schedule));
+        assert!(r.hidden.is_empty());
+
+        // extended-kind source → paper-kind target: visible shrinks to
+        // the paper layout, hidden truncates to the paper prefix
+        let mut ext_src = Database::for_layer_in(&pw4,
+                                                 SpaceKind::Extended);
+        let mut er = rec(1, Outcome::Valid { cycles: 32 });
+        er.schedule.k_unroll = 4;
+        er.hidden =
+            (0..features::hidden_len(SpaceKind::Extended))
+                .map(|i| i as f64)
+                .collect();
+        er.visible = SpaceKind::Extended.visible_features(&er.schedule);
+        ext_src.push(er);
+        let mut store2 = TransferDb::new();
+        store2.add(ext_src);
+        let warm2 = store2
+            .warm_start_for(&pw5, SpaceKind::Paper, 10)
+            .unwrap();
+        let r2 = &warm2.records[0];
+        assert_eq!(r2.visible.len(), SpaceKind::Paper.n_visible());
+        assert_eq!(r2.hidden.len(),
+                   features::hidden_len(SpaceKind::Paper));
+        assert_eq!(r2.hidden[3], 3.0, "prefix preserved");
     }
 }

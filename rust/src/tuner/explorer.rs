@@ -8,16 +8,36 @@
 
 use super::models::{ModelP, ModelV};
 use super::space::SearchSpace;
+use super::DEFAULT_V_MARGIN;
 use crate::util::rng::Rng;
 
 /// Explorer policy knobs.
 pub struct Explorer {
     pub epsilon: f64,
+    /// Model-V veto margin (see `TunerConfig::v_margin`).
+    pub v_margin: f64,
 }
+
+/// Per-round scoring budget: above this many unmeasured candidates the
+/// explorer ranks a uniform random subsample instead of the whole space
+/// (AutoTVM-style), bounding each round's decode+predict sweep and its
+/// transient allocations on very large extended spaces.
+///
+/// The bound sits above every registered *paper* space (those are capped
+/// < 300k by `workloads::registry` tests), so paper-space runs never
+/// take this branch and their traces stay byte-identical to the
+/// pre-ConfigSpace implementation; only 6x extended spaces of the
+/// largest layers are subsampled.
+pub const MAX_SCORED_CANDIDATES: usize = 400_000;
 
 impl Explorer {
     pub fn new(epsilon: f64) -> Self {
-        Explorer { epsilon }
+        Explorer { epsilon, v_margin: DEFAULT_V_MARGIN }
+    }
+
+    pub fn with_v_margin(mut self, v_margin: f64) -> Self {
+        self.v_margin = v_margin;
+        self
     }
 
     /// Select up to `count` unmeasured candidates.
@@ -35,10 +55,30 @@ impl Explorer {
         count: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        let unmeasured = space.unmeasured();
-        if unmeasured.len() <= count {
-            return unmeasured;
+        let n_left = space.n_unmeasured();
+        if n_left <= count {
+            return space.unmeasured();
         }
+        let unmeasured: Vec<usize> = if n_left > MAX_SCORED_CANDIDATES {
+            // bound the model sweep on huge spaces (see
+            // MAX_SCORED_CANDIDATES) by rejection-sampling distinct
+            // unmeasured indices directly — O(sample) memory, never
+            // O(space); with > 400k unmeasured points the rejection
+            // rate is negligible. Deterministic per rng stream.
+            let mut seen = std::collections::HashSet::with_capacity(
+                MAX_SCORED_CANDIDATES,
+            );
+            let mut sampled = Vec::with_capacity(MAX_SCORED_CANDIDATES);
+            while sampled.len() < MAX_SCORED_CANDIDATES {
+                let i = rng.below(space.len());
+                if !space.is_measured(i) && seen.insert(i) {
+                    sampled.push(i);
+                }
+            }
+            sampled
+        } else {
+            space.unmeasured()
+        };
         // Rank by predicted log-cycles ascending. Tree ensembles cannot
         // extrapolate, so large swaths of the space tie at the best leaf
         // value — including invalid regions adjacent to the optimum. Ties
@@ -49,7 +89,7 @@ impl Explorer {
         let mut scored: Vec<(f64, f64, usize)> = unmeasured
             .iter()
             .map(|&i| {
-                let feats = space.schedule(i).visible_features();
+                let feats = space.visible(i);
                 let tie = v.map_or(0.0, |m| -m.margin(&feats));
                 (p.predict(&feats), tie, i)
             })
@@ -84,8 +124,8 @@ impl Explorer {
             }
             let idx = scored[pos].1;
             taken[pos] = true;
-            let vetoed = v.map_or(false, |m| {
-                !m.predict_valid(&space.schedule(idx).visible_features())
+            let vetoed = v.is_some_and(|m| {
+                !m.predict_valid(&space.visible(idx), self.v_margin)
             });
             if vetoed {
                 skipped.push(pos);
@@ -137,7 +177,7 @@ mod tests {
             db.push(TrialRecord {
                 space_index: i,
                 schedule: s,
-                visible: s.visible_features(),
+                visible: space.visible(i),
                 hidden: vec![],
                 outcome: if valid {
                     Outcome::Valid { cycles }
@@ -175,9 +215,8 @@ mod tests {
             picks
                 .iter()
                 .filter(|&&i| {
-                    v.predict_valid(
-                        &space.schedule(i).visible_features(),
-                    )
+                    v.predict_valid(&space.visible(i),
+                                    crate::tuner::DEFAULT_V_MARGIN)
                 })
                 .count()
         };
@@ -198,6 +237,25 @@ mod tests {
         for i in &second {
             assert!(!first.contains(i), "re-proposed measured config");
         }
+    }
+
+    #[test]
+    fn extreme_margin_vetoes_everything_but_fallback_fills() {
+        // v_margin above the hinge range vetoes every candidate; the
+        // explorer must still make progress via the skipped-best
+        // fallback, in P-ranking order
+        let (space, p, v) = trained_models();
+        let mut rng = Rng::new(9);
+        let veto_all = Explorer::new(0.0).with_v_margin(2.0);
+        let picks = veto_all.select(&space, &p, Some(&v), 10, &mut rng);
+        assert_eq!(picks.len(), 10);
+        // an accept-all margin shares the exact same P/V ranking, so the
+        // all-vetoed fallback must reproduce its best-first picks
+        let mut rng2 = Rng::new(9);
+        let accept_all = Explorer::new(0.0).with_v_margin(-2.0);
+        let loose = accept_all.select(&space, &p, Some(&v), 10, &mut rng2);
+        assert_eq!(picks, loose,
+                   "all-vetoed fallback must degrade to the ranking head");
     }
 
     #[test]

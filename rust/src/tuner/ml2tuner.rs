@@ -87,7 +87,7 @@ impl Tuner for Ml2Tuner {
         let cfg = &self.cfg;
         let mut rng = Rng::new(cfg.seed ^ salt::ML2);
         let mut space = env.space.clone();
-        let mut db = Database::for_layer(&env.layer);
+        let mut db = Database::for_layer_in(&env.layer, env.kind());
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
@@ -168,9 +168,9 @@ pub(crate) fn select_batch(
         None
     };
     let pool_n = if use_a { cfg.pool_size() } else { n };
-    let pool =
-        Explorer::new(cfg.epsilon).select(space, &p, v.as_ref(), pool_n,
-                                          rng);
+    let pool = Explorer::new(cfg.epsilon)
+        .with_v_margin(cfg.v_margin)
+        .select(space, &p, v.as_ref(), pool_n, rng);
     if use_a && pool.len() > n {
         // Compile the whole pool (batched, cached), harvest hidden
         // features, re-rank with A. The engine's cache means the `n`
@@ -191,7 +191,7 @@ pub(crate) fn select_batch(
                     .zip(&compiled)
                     .map(|(&i, c)| {
                         let feats = combined_features(
-                            &space.schedule(i).visible_features(),
+                            &space.visible(i),
                             &c.hidden,
                         );
                         (a.predict(&feats), i)
@@ -266,14 +266,13 @@ mod tests {
                 .name(),
             "ml2tuner"
         );
-        let s = crate::compiler::schedule::Schedule {
-            tile_h: 1, tile_w: 1, tile_oc: 16, tile_ic: 16, n_vthreads: 1,
-        };
+        let s = crate::compiler::schedule::Schedule::default();
         let mut warm = Database::new("x");
         warm.push(TrialRecord {
             space_index: 0,
             schedule: s,
-            visible: s.visible_features(),
+            visible: crate::compiler::schedule::SpaceKind::Paper
+                .visible_features(&s),
             hidden: vec![],
             outcome: Outcome::Crash,
         });
@@ -292,7 +291,11 @@ mod tests {
         }
         let mut store = TransferDb::new();
         store.add(src);
-        let warm = store.warm_start_for(&e.layer, 100).unwrap();
+        let warm = store
+            .warm_start_for(&e.layer,
+                            crate::compiler::schedule::SpaceKind::Paper,
+                            100)
+            .unwrap();
         let cfg = TunerConfig { max_trials: 30, seed: 3,
                                 ..Default::default() };
         let a = Ml2Tuner::new(cfg.clone())

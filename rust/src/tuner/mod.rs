@@ -27,6 +27,7 @@ pub mod report;
 pub mod space;
 pub mod tvm_baseline;
 
+use crate::compiler::schedule::SpaceKind;
 use crate::compiler::Compiler;
 use crate::engine::Engine;
 use crate::vta::{Fault, Simulator, Verdict};
@@ -70,6 +71,12 @@ pub struct TunerConfig {
     /// ε-greedy exploration mixed into model-guided selection (TVM uses
     /// 0.05; same default here).
     pub epsilon: f64,
+    /// Model-V veto margin on the hinge score in [-1, 1]: candidates
+    /// scoring below it are skipped. Positive values gate stricter than
+    /// the raw sign — the P-front hugs the validity boundary, exactly
+    /// where marginal false accepts concentrate (calibrated on conv4's
+    /// hazard-corruption boundary, see EXPERIMENTS.md §V-margin).
+    pub v_margin: f64,
     /// Minimum profiled records before the models are trusted.
     pub min_train: usize,
     /// Boost rounds for in-loop retraining (full Table 3 uses 300; the
@@ -85,12 +92,17 @@ impl Default for TunerConfig {
             alpha: 1.0,
             max_trials: 300,
             epsilon: 0.05,
+            v_margin: DEFAULT_V_MARGIN,
             min_train: 20,
             boost_rounds: 120,
             seed: 0,
         }
     }
 }
+
+/// Default model-V veto margin (traces are byte-identical to the
+/// pre-configurable behaviour at this value).
+pub const DEFAULT_V_MARGIN: f64 = 0.25;
 
 impl TunerConfig {
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -120,13 +132,27 @@ pub struct TuningEnv {
 }
 
 impl TuningEnv {
+    /// Paper-space environment (pre-refactor behaviour).
     pub fn new(cfg: crate::vta::config::VtaConfig, layer: ConvLayer) -> Self {
+        Self::with_space(cfg, layer, SpaceKind::Paper)
+    }
+
+    /// Environment over a chosen knob set (`--space paper|extended`).
+    pub fn with_space(
+        cfg: crate::vta::config::VtaConfig,
+        layer: ConvLayer,
+        kind: SpaceKind,
+    ) -> Self {
         TuningEnv {
             layer,
-            space: SearchSpace::new(&layer),
-            compiler: Compiler::new(cfg.clone()),
+            space: SearchSpace::with_kind(&layer, kind),
+            compiler: Compiler::with_kind(cfg.clone(), kind),
             simulator: Simulator::new(cfg),
         }
+    }
+
+    pub fn kind(&self) -> SpaceKind {
+        self.space.kind()
     }
 
     /// "Run on hardware": compile, execute on the simulator, classify the
@@ -143,7 +169,7 @@ impl TuningEnv {
         TrialRecord {
             space_index,
             schedule: sched,
-            visible: sched.visible_features(),
+            visible: self.space.visible(space_index),
             hidden,
             outcome,
         }

@@ -117,16 +117,18 @@ impl ModelV {
             .map(|booster| ModelV { booster })
     }
 
-    /// True if the model predicts the configuration will run validly.
+    /// True if the model's hinge score clears `margin` — the V veto.
     ///
-    /// The veto uses a positive margin (0.25 on the hinge score in
-    /// [-1, 1]) rather than the raw sign: the explorer walks a P-front
+    /// A positive margin (default
+    /// [`crate::tuner::DEFAULT_V_MARGIN`] = 0.25 on the hinge score in
+    /// [-1, 1], configurable via `TunerConfig::v_margin` / `--v-margin`)
+    /// gates stricter than the raw sign: the explorer walks a P-front
     /// that hugs the validity boundary, exactly where marginal false
     /// accepts concentrate — a stricter gate trades a few vetoed good
     /// configs for far fewer wasted profiling slots (calibrated on
-    /// conv4's hazard-corruption boundary, see EXPERIMENTS.md).
-    pub fn predict_valid(&self, visible: &[f64]) -> bool {
-        self.margin(visible) > 0.25
+    /// conv4's hazard-corruption boundary, see EXPERIMENTS.md §V-margin).
+    pub fn predict_valid(&self, visible: &[f64], margin: f64) -> bool {
+        self.margin(visible) > margin
     }
 
     /// Raw margin (diagnostics / threshold sweeps).
@@ -178,23 +180,32 @@ impl ModelA {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::schedule::Schedule;
+    use crate::compiler::schedule::{Schedule, SpaceKind};
     use crate::tuner::database::{Outcome, TrialRecord};
+    use crate::tuner::DEFAULT_V_MARGIN;
+
+    fn vis(s: &Schedule) -> Vec<f64> {
+        SpaceKind::Paper.visible_features(s)
+    }
+
+    fn sched(th: usize, vt: usize) -> Schedule {
+        Schedule { tile_h: th, tile_w: 4, tile_oc: 32, tile_ic: 32,
+                   n_vthreads: vt, ..Default::default() }
+    }
 
     fn synth_db(n: usize) -> Database {
         let mut db = Database::new("test");
         for i in 0..n {
             let th = 1 + (i % 16);
             let vt = 1 + (i % 4);
-            let schedule = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
-                                      tile_ic: 32, n_vthreads: vt };
+            let schedule = sched(th, vt);
             // validity: big tiles with many threads fail
             let valid = th * vt <= 24;
             let cycles = (200_000 / th + 10_000 * vt) as u64;
             db.push(TrialRecord {
                 space_index: i,
                 schedule,
-                visible: schedule.visible_features(),
+                visible: vis(&schedule),
                 hidden: vec![th as f64 * 4.0, (th * vt) as f64],
                 outcome: if valid {
                     Outcome::Valid { cycles }
@@ -210,11 +221,7 @@ mod tests {
     fn p_learns_cycle_ordering() {
         let db = synth_db(128);
         let p = ModelP::train(&db, 80, 1).unwrap();
-        let f = |th: usize| {
-            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
-                               tile_ic: 32, n_vthreads: 1 };
-            p.predict(&s.visible_features())
-        };
+        let f = |th: usize| p.predict(&vis(&sched(th, 1)));
         assert!(f(2) > f(12), "small tiles must predict slower");
     }
 
@@ -223,12 +230,22 @@ mod tests {
         let db = synth_db(256);
         let v = ModelV::train(&db, 80, 1).unwrap();
         let f = |th: usize, vt: usize| {
-            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
-                               tile_ic: 32, n_vthreads: vt };
-            v.predict_valid(&s.visible_features())
+            v.predict_valid(&vis(&sched(th, vt)), DEFAULT_V_MARGIN)
         };
         assert!(f(4, 1), "small config should be predicted valid");
         assert!(!f(16, 4), "oversized config should be predicted invalid");
+    }
+
+    #[test]
+    fn veto_margin_is_configurable() {
+        let db = synth_db(256);
+        let v = ModelV::train(&db, 80, 1).unwrap();
+        let feats = vis(&sched(4, 1));
+        let m = v.margin(&feats);
+        assert!(v.predict_valid(&feats, DEFAULT_V_MARGIN));
+        // a margin above the score vetoes; one below accepts
+        assert!(!v.predict_valid(&feats, m + 0.01));
+        assert!(v.predict_valid(&feats, m - 0.01));
     }
 
     #[test]
@@ -236,7 +253,7 @@ mod tests {
         let db = synth_db(128);
         let a = ModelA::train(&db, 80, 1).unwrap();
         let imp = a.importance();
-        assert_eq!(imp.len(), Schedule::VISIBLE_NAMES.len() + 2);
+        assert_eq!(imp.len(), SpaceKind::Paper.n_visible() + 2);
         // the hidden features are informative (th*4 mirrors th)
         assert!(imp.iter().sum::<f64>() > 99.0);
     }
@@ -255,20 +272,12 @@ mod tests {
         assert!(ModelP::train(&fresh, 40, 1).is_none(),
                 "cold model needs fresh records");
         let p = ModelP::train_warm(&fresh, &warm, 80, 1).unwrap();
-        let f = |th: usize| {
-            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
-                               tile_ic: 32, n_vthreads: 1 };
-            p.predict(&s.visible_features())
-        };
+        let f = |th: usize| p.predict(&vis(&sched(th, 1)));
         assert!(f(2) > f(12),
                 "transferred records alone must order the landscape");
         let v = ModelV::train_warm(&fresh, &warm, 80, 1).unwrap();
-        let s_ok = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32,
-                              tile_ic: 32, n_vthreads: 1 };
-        let s_bad = Schedule { tile_h: 16, tile_w: 4, tile_oc: 32,
-                               tile_ic: 32, n_vthreads: 4 };
-        assert!(v.predict_valid(&s_ok.visible_features()));
-        assert!(!v.predict_valid(&s_bad.visible_features()));
+        assert!(v.predict_valid(&vis(&sched(4, 1)), DEFAULT_V_MARGIN));
+        assert!(!v.predict_valid(&vis(&sched(16, 4)), DEFAULT_V_MARGIN));
         assert!(ModelA::train_warm(&fresh, &warm, 40, 1).is_some());
     }
 
@@ -278,12 +287,11 @@ mod tests {
         // it can, and the fresh row participates (xs = warm ⊕ fresh).
         let warm = synth_db(16);
         let mut fresh = Database::new("target");
-        let s = Schedule { tile_h: 3, tile_w: 4, tile_oc: 32, tile_ic: 32,
-                           n_vthreads: 1 };
+        let s = sched(3, 1);
         fresh.push(TrialRecord {
             space_index: 0,
             schedule: s,
-            visible: s.visible_features(),
+            visible: vis(&s),
             hidden: vec![12.0, 3.0],
             outcome: Outcome::Valid { cycles: 70_000 },
         });

@@ -193,11 +193,13 @@ mod tests {
         let mut t = TuningTrace::new("conv1", "test");
         for (i, &o) in outcomes.iter().enumerate() {
             let s = Schedule { tile_h: 1 + i, tile_w: 1, tile_oc: 16,
-                               tile_ic: 16, n_vthreads: 1 };
+                               tile_ic: 16, n_vthreads: 1,
+                               ..Default::default() };
             t.trials.push(TrialRecord {
                 space_index: i,
                 schedule: s,
-                visible: s.visible_features(),
+                visible: crate::compiler::schedule::SpaceKind::Paper
+                    .visible_features(&s),
                 hidden: vec![],
                 outcome: o,
             });

@@ -1,69 +1,83 @@
 //! Per-layer search space with measurement bookkeeping.
+//!
+//! Backed by the lazy [`ConfigSpace`]: points are enumerated on demand
+//! (`nth` decode per access), nothing is materialized up front, and the
+//! measured set is sparse — memory is O(measured + knob candidates),
+//! independent of how large the cross product grows (asserted in
+//! `tests/extended_space.rs`).
 
-use crate::compiler::schedule::{self, Schedule, ScheduleSpace};
+use std::collections::HashSet;
+
+use crate::compiler::schedule::{self, ConfigSpace, Schedule, SpaceKind};
 use crate::util::rng::Rng;
 use crate::workloads::ConvLayer;
 
 /// The enumerable space for one layer plus a measured-set mask.
 #[derive(Clone)]
 pub struct SearchSpace {
-    space: ScheduleSpace,
-    schedules: Vec<Schedule>,
-    measured: Vec<bool>,
-    n_measured: usize,
+    space: ConfigSpace,
+    measured: HashSet<usize>,
 }
 
 impl SearchSpace {
+    /// Paper-exact space (pre-refactor behaviour).
     pub fn new(layer: &ConvLayer) -> Self {
-        let space = schedule::candidates(layer);
-        let schedules = space.all();
-        let n = schedules.len();
-        SearchSpace { space, schedules, measured: vec![false; n],
-                      n_measured: 0 }
+        Self::with_kind(layer, SpaceKind::Paper)
+    }
+
+    pub fn with_kind(layer: &ConvLayer, kind: SpaceKind) -> Self {
+        SearchSpace {
+            space: schedule::space_for(layer, kind),
+            measured: HashSet::new(),
+        }
+    }
+
+    pub fn kind(&self) -> SpaceKind {
+        self.space.kind()
     }
 
     pub fn len(&self) -> usize {
-        self.schedules.len()
+        self.space.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.schedules.is_empty()
+        self.space.is_empty()
     }
 
+    /// Lazily decode the `i`-th schedule.
     pub fn schedule(&self, i: usize) -> Schedule {
-        self.schedules[i]
+        self.space.schedule(i)
     }
 
-    pub fn schedules(&self) -> &[Schedule] {
-        &self.schedules
+    /// Visible feature vector of the `i`-th configuration, in this
+    /// space's feature layout.
+    pub fn visible(&self, i: usize) -> Vec<f64> {
+        self.space.visible(i)
     }
 
-    pub fn raw_space(&self) -> &ScheduleSpace {
+    pub fn config_space(&self) -> &ConfigSpace {
         &self.space
     }
 
     pub fn is_measured(&self, i: usize) -> bool {
-        self.measured[i]
+        self.measured.contains(&i)
     }
 
     pub fn mark_measured(&mut self, i: usize) {
-        if !self.measured[i] {
-            self.measured[i] = true;
-            self.n_measured += 1;
-        }
+        self.measured.insert(i);
     }
 
     pub fn n_measured(&self) -> usize {
-        self.n_measured
+        self.measured.len()
     }
 
     pub fn n_unmeasured(&self) -> usize {
-        self.len() - self.n_measured
+        self.len() - self.measured.len()
     }
 
-    /// Indices not yet measured.
+    /// Indices not yet measured, ascending.
     pub fn unmeasured(&self) -> Vec<usize> {
-        (0..self.len()).filter(|&i| !self.measured[i]).collect()
+        (0..self.len()).filter(|i| !self.measured.contains(i)).collect()
     }
 
     /// Sample up to `k` distinct unmeasured indices.
@@ -80,8 +94,13 @@ impl SearchSpace {
 
     /// Reset the measured mask (fresh tuning run on the same space).
     pub fn reset(&mut self) {
-        self.measured.fill(false);
-        self.n_measured = 0;
+        self.measured.clear();
+    }
+
+    /// Resident bookkeeping size: stored knob candidates + measured
+    /// entries. This is what actually scales — NOT `len()`.
+    pub fn resident_entries(&self) -> usize {
+        self.space.stored_values() + self.measured.len()
     }
 }
 
@@ -116,5 +135,19 @@ mod tests {
         let picks = s.sample_unmeasured(&mut rng, 50);
         assert_eq!(picks.len(), 50);
         assert!(picks.iter().all(|&i| i >= s.len() / 2));
+    }
+
+    #[test]
+    fn extended_space_is_larger_and_lazily_enumerable() {
+        let l = resnet18::layer("conv5").unwrap();
+        let paper = SearchSpace::new(&l);
+        let ext = SearchSpace::with_kind(&l, SpaceKind::Extended);
+        assert_eq!(ext.len(), paper.len() * 6);
+        // resident bookkeeping barely grows despite the 6× space
+        assert!(ext.resident_entries() <= paper.resident_entries() + 5);
+        let s = ext.schedule(ext.len() - 1);
+        assert_eq!(ext.config_space().index_of_schedule(&s),
+                   Some(ext.len() - 1));
+        assert_eq!(ext.visible(0).len(), SpaceKind::Extended.n_visible());
     }
 }

@@ -35,7 +35,7 @@ impl Tuner for TvmTuner {
         let cfg = &self.cfg;
         let mut rng = Rng::new(cfg.seed ^ salt::TVM);
         let mut space = env.space.clone();
-        let mut db = Database::for_layer(&env.layer);
+        let mut db = Database::for_layer_in(&env.layer, env.kind());
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {

@@ -189,9 +189,9 @@ fn write_escaped(s: &str, out: &mut String) {
 
 fn write_num(n: f64, out: &mut String) {
     if n.is_finite() && n == n.trunc() && n.abs() < 9e15 {
-        out.push_str(&format!("{}", n as i64));
+        out.push_str(&(n as i64).to_string());
     } else if n.is_finite() {
-        out.push_str(&format!("{n}"));
+        out.push_str(&n.to_string());
     } else {
         out.push_str("null"); // JSON has no inf/nan
     }
@@ -276,7 +276,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError {
             pos: self.pos,

@@ -128,7 +128,11 @@ pub fn simulate_schedule(
                     None => ok = false,
                 }
             }
-            if ok && best.map_or(true, |(s, _)| start < s) {
+            let earliest = match best {
+                None => true,
+                Some((s, _)) => start < s,
+            };
+            if ok && earliest {
                 best = Some((start, m));
             }
         }

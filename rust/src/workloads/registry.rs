@@ -103,12 +103,17 @@ mod tests {
 
     #[test]
     fn every_layer_has_a_tractable_nonempty_space() {
+        use crate::compiler::schedule::SpaceKind;
         for net in &NETWORKS {
             for l in net.layers {
                 let n = schedule::candidates(l).len();
                 assert!(n > 0, "{}/{}: empty space", net.name, l.name);
                 assert!(n < 300_000, "{}/{}: space too large ({n})",
                         net.name, l.name);
+                // the extended space multiplies by the new-knob radix
+                // (2 load-slot × 3 unroll values) on every layer
+                let e = schedule::space_for(l, SpaceKind::Extended).len();
+                assert_eq!(e, n * 6, "{}/{}", net.name, l.name);
             }
         }
     }

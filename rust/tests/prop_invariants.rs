@@ -15,6 +15,11 @@ fn random_schedule(g: &mut prop::Gen) -> Schedule {
         tile_oc: 16 * g.usize_in(1, 8),
         tile_ic: 16 * g.usize_in(1, 8),
         n_vthreads: [1, 2, 4, 8][g.usize_in(0, 3)],
+        // extension knobs: the invariants below (compile never panics,
+        // no deadlock, valid ⇒ bit-exact vs the reference conv) must
+        // hold across the whole extended space too
+        n_load_slots: g.usize_in(1, 2),
+        k_unroll: [1, 2, 4][g.usize_in(0, 2)],
     }
 }
 

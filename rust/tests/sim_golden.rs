@@ -53,7 +53,7 @@ fn valid_schedules_are_bit_exact_against_golden() {
         let mut attempts = 0;
         while found < 3 && attempts < 200 {
             attempts += 1;
-            let s = space.nth(rng.below(space.len()));
+            let s = space.schedule(rng.below(space.len()));
             let compiled = compiler.compile(layer, &s);
             if !sim.check(&compiled.program).is_valid() {
                 continue;
@@ -105,7 +105,7 @@ fn corrupt_verdicts_usually_produce_wrong_output() {
     let mut attempts = 0;
     while corrupt_checked < 6 && attempts < 3000 {
         attempts += 1;
-        let s = space.nth(rng.below(space.len()));
+        let s = space.schedule(rng.below(space.len()));
         let compiled = compiler.compile(&layer, &s);
         match sim.check(&compiled.program) {
             ml2tuner::vta::Verdict::Invalid {
@@ -142,7 +142,7 @@ fn crash_verdicts_crash_numerically() {
     let mut attempts = 0;
     while found < 5 && attempts < 1000 {
         attempts += 1;
-        let s = space.nth(rng.below(space.len()));
+        let s = space.schedule(rng.below(space.len()));
         let compiled = compiler.compile(&layer, &s);
         match sim.check(&compiled.program) {
             ml2tuner::vta::Verdict::Invalid { fault, .. }

@@ -6,8 +6,8 @@
 //!   warm-starts tuning on another layer, end to end through both the
 //!   standalone tuner and the network scheduler.
 
-use ml2tuner::compiler::features::HIDDEN_NAMES;
-use ml2tuner::compiler::schedule::Schedule;
+use ml2tuner::compiler::features;
+use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
 use ml2tuner::engine::{Engine, NetworkConfig, NetworkTuner, TunerKind};
 use ml2tuner::tuner::database::{
     Database, LayerMeta, Outcome, TransferDb, TrialRecord,
@@ -19,12 +19,13 @@ use ml2tuner::workloads::{self, ConvLayer};
 
 fn rec(i: usize, outcome: Outcome) -> TrialRecord {
     let schedule = Schedule { tile_h: 1 + i, tile_w: 2, tile_oc: 16,
-                              tile_ic: 16, n_vthreads: 1 };
+                              tile_ic: 16, n_vthreads: 1,
+                              ..Default::default() };
     TrialRecord {
         space_index: i,
         schedule,
-        visible: schedule.visible_features(),
-        hidden: vec![0.5; HIDDEN_NAMES.len()],
+        visible: SpaceKind::Paper.visible_features(&schedule),
+        hidden: vec![0.5; features::hidden_len(SpaceKind::Paper)],
         outcome,
     }
 }
@@ -88,7 +89,7 @@ fn warm_start_flows_through_the_network_scheduler() {
     let pw4 = net.layer("pw4").unwrap();
     let mut store = TransferDb::new();
     store.add(profiled_log(&pw5, 80));
-    assert!(store.warm_start_for(&pw4, 200).is_some(),
+    assert!(store.warm_start_for(&pw4, SpaceKind::Paper, 200).is_some(),
             "pw5 must be a transfer source for pw4");
     let cfg = NetworkConfig {
         tuner: TunerKind::Ml2,
@@ -116,7 +117,8 @@ fn warm_started_tuner_is_jobs_invariant() {
     let pw4 = net.layer("pw4").unwrap();
     let mut store = TransferDb::new();
     store.add(profiled_log(&pw4, 60));
-    let warm = store.warm_start_for(&pw5, 100).unwrap();
+    let warm =
+        store.warm_start_for(&pw5, SpaceKind::Paper, 100).unwrap();
     let env = TuningEnv::new(VtaConfig::zcu102(), pw5);
     let cfg = TunerConfig { max_trials: 30, seed: 11,
                             ..TunerConfig::default() };
