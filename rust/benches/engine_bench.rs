@@ -51,4 +51,5 @@ fn main() {
         stats.misses
     );
     print!("{}", b.summary());
+    b.maybe_write_json("engine_bench");
 }

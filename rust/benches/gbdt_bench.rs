@@ -60,4 +60,5 @@ fn main() {
         acc
     });
     print!("{}", b.summary());
+    b.maybe_write_json("gbdt_bench");
 }

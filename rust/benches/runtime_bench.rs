@@ -29,4 +29,5 @@ fn main() {
         });
     }
     print!("{}", b.summary());
+    b.maybe_write_json("runtime_bench");
 }

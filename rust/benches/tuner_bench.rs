@@ -30,4 +30,5 @@ fn main() {
                     || RandomTuner::new(cfgs()).tune(&env));
     }
     print!("{}", b.summary());
+    b.maybe_write_json("tuner_bench");
 }

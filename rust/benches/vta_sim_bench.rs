@@ -54,4 +54,5 @@ fn main() {
         sim.execute(&compiled.program, &dram).unwrap()
     });
     print!("{}", b.summary());
+    b.maybe_write_json("vta_sim_bench");
 }

@@ -1,5 +1,5 @@
-//! Compile cache — memoizes `(layer, schedule) → compiled kernel + hidden
-//! features`.
+//! Compile cache — memoizes `(target codegen signature, space kind,
+//! layer, schedule) → compiled kernel + hidden features`.
 //!
 //! The ML²Tuner loop compiles every pool candidate for hidden-feature
 //! extraction and then compiled the `N` winners *again* when profiling
@@ -31,6 +31,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::compiler::{Compiled, Compiler};
+use crate::vta::config::CodegenSig;
 use crate::workloads::ConvLayer;
 
 /// One cached compilation: the lowered kernel and its hidden features
@@ -73,7 +74,12 @@ impl CacheStats {
 // The compiler's space kind is part of the key: entries carry the
 // kind-specific hidden-feature vector, so a paper-kind and an
 // extended-kind lookup of the same (layer, schedule) must not alias.
-type Key = (SpaceKind, &'static str, Schedule);
+// The target's *codegen signature* is part of the key too — but only the
+// compile-shaping fields ([`CodegenSig`]), not the target name: a fleet
+// run over targets that differ purely in uop capacity or DMA/clock
+// coefficients (e.g. zcu102 vs hiband) shares every entry, while targets
+// whose buffer slicing differs (zcu102 vs zcu104) never alias.
+type Key = (CodegenSig, SpaceKind, &'static str, Schedule);
 
 struct Inner {
     map: HashMap<Key, Arc<CachedCompile>>,
@@ -82,12 +88,14 @@ struct Inner {
     total_cost: usize,
 }
 
-/// Thread-safe, bounded compile cache keyed by `(layer name, schedule)`.
+/// Thread-safe, bounded compile cache keyed by `(codegen signature,
+/// space kind, layer name, schedule)`.
 ///
 /// Layer names are the `&'static str` identifiers of
 /// [`crate::workloads::resnet18::LAYERS`]; keying by name (not shape)
 /// keeps entries unambiguous if two layers ever shared a shape but
-/// diverged in future compile options.
+/// diverged in future compile options. The codegen signature keys the
+/// hardware axis (see the `Key` comment above).
 pub struct CompileCache {
     inner: Mutex<Inner>,
     hits: AtomicU64,
@@ -168,7 +176,8 @@ impl CompileCache {
         layer: &ConvLayer,
         sched: Schedule,
     ) -> Arc<CachedCompile> {
-        let key = (compiler.kind, layer.name, sched);
+        let key = (compiler.cfg.codegen_sig(), compiler.kind, layer.name,
+                   sched);
         if let Some(hit) = self.inner.lock().unwrap().map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(hit);
@@ -264,6 +273,39 @@ mod tests {
         assert_eq!(cache.stats().misses, 2);
         assert!(b.hidden.len() > a.hidden.len());
         assert_eq!(a.compiled.program, b.compiled.program);
+    }
+
+    #[test]
+    fn codegen_equivalent_targets_share_entries() {
+        // hiband differs from zcu102 only off the codegen path (uop
+        // capacity, DMA coefficients): a fleet run over both must reuse
+        // every compilation
+        let (compiler, layer, sched) = setup();
+        let hiband = Compiler::new(VtaConfig::hiband());
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&compiler, &layer, sched);
+        let b = cache.get_or_compile(&hiband, &layer, sched);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(a.compiled.program, b.compiled.program);
+    }
+
+    #[test]
+    fn different_buffer_slicing_never_aliases() {
+        // zcu104's smaller buffers change the per-thread scratchpad
+        // slices codegen addresses by — handing its run a zcu102 kernel
+        // would silently profile the wrong program
+        let (compiler, layer, _) = setup();
+        // nvt > 1 so the slice bases actually differ between targets
+        let sched = Schedule { tile_h: 4, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 2,
+                               ..Default::default() };
+        let zcu104 = Compiler::new(VtaConfig::zcu104());
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&compiler, &layer, sched);
+        let b = cache.get_or_compile(&zcu104, &layer, sched);
+        assert_eq!(cache.stats().misses, 2);
+        assert_ne!(a.compiled.program, b.compiled.program,
+                   "slice bases must differ under nvt=2");
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Fleet tuning scheduler — one network tuned across a *list of hardware
+//! targets* under one global profiling budget.
+//!
+//! The fleet pass is where the target registry, the codegen-signature
+//! compile cache, and the capacity-aware transfer store compose:
+//!
+//! * targets are visited **cheapest/smallest capacity first**
+//!   ([`crate::vta::targets::capacity_score`]) — the small target's
+//!   validity boundary is the strictest, so its logs are conservative
+//!   seeds for every larger target that follows;
+//! * each per-target run is a full [`super::NetworkTuner`] pass sharing
+//!   one [`super::Engine`], so compilations are reused across targets
+//!   whenever their codegen signatures agree (e.g. zcu102 ↔ hiband);
+//! * every finished target's per-layer logs are appended to the transfer
+//!   store and warm-start the next target's models (hardware distance
+//!   down-weights and capacity-audits them — see
+//!   [`crate::tuner::database::TransferDb::warm_start_for`]).
+//!
+//! Determinism: target order is a pure function of the configs, each
+//! target derives an independent seed stream, and the per-target runs
+//! are the deterministic `NetworkTuner` — a fleet run is reproducible
+//! for any worker count.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::executor::Engine;
+use super::scheduler::{NetworkConfig, NetworkOutcome, NetworkTuner,
+                       TunerKind};
+use crate::compiler::schedule::SpaceKind;
+use crate::tuner::database::TransferDb;
+use crate::tuner::TunerConfig;
+use crate::util::table::Table;
+use crate::vta::config::VtaConfig;
+use crate::vta::targets;
+use crate::workloads::ConvLayer;
+
+/// Fleet-run knobs. The per-target loop hyper-parameters mirror
+/// [`NetworkConfig`]; `total_trials` is the *global* budget, split
+/// evenly across targets (earlier — smaller — targets absorb the
+/// remainder).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Hardware targets to tune (visit order is derived from their
+    /// capacities, not from this list's order).
+    pub targets: Vec<VtaConfig>,
+    pub tuner: TunerKind,
+    pub space: SpaceKind,
+    pub base: TunerConfig,
+    /// Global profiling budget over the whole fleet.
+    pub total_trials: usize,
+    /// Trials per scheduler decision inside each per-target run.
+    pub round_trials: usize,
+    /// UCB exploration constant of the per-target layer allocator.
+    pub ucb_c: f64,
+    /// External seed logs (e.g. `--transfer-from`); per-target logs are
+    /// chained on top as the fleet progresses.
+    pub transfer: Option<TransferDb>,
+    /// Max transferred records per layer.
+    pub transfer_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        let net = NetworkConfig::default();
+        FleetConfig {
+            targets: vec![VtaConfig::zcu102()],
+            tuner: net.tuner,
+            space: net.space,
+            base: net.base,
+            total_trials: net.total_trials,
+            round_trials: net.round_trials,
+            ucb_c: net.ucb_c,
+            transfer: None,
+            transfer_cap: net.transfer_cap,
+        }
+    }
+}
+
+/// One target's slice of a fleet run.
+pub struct FleetTargetRun {
+    pub target: String,
+    pub clock_mhz: f64,
+    pub outcome: NetworkOutcome,
+}
+
+/// Everything a fleet run produces, in tuned (cheapest-first) order.
+pub struct FleetOutcome {
+    pub runs: Vec<FleetTargetRun>,
+}
+
+impl FleetOutcome {
+    /// Persist every target's per-layer logs as
+    /// `<dir>/<target>/<layer>.json`; returns the written paths.
+    pub fn save_databases(
+        &self,
+        dir: impl AsRef<Path>,
+    ) -> Result<Vec<PathBuf>> {
+        let dir = dir.as_ref();
+        let mut paths = Vec::new();
+        for run in &self.runs {
+            paths.extend(
+                run.outcome.save_databases(dir.join(&run.target))?,
+            );
+        }
+        Ok(paths)
+    }
+
+    /// Fleet summary: one row per target, tuned order.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "target", "layers tuned", "trials", "network cycles",
+            "network ms",
+        ]);
+        for run in &self.runs {
+            let r = &run.outcome.report;
+            let (cycles, ms) = match r.total_cycles() {
+                Some(c) => (
+                    c.to_string(),
+                    format!("{:.3}", c as f64 / (run.clock_mhz * 1e3)),
+                ),
+                None => ("incomplete".to_string(), "-".to_string()),
+            };
+            t.row(&[
+                run.target.clone(),
+                format!("{}/{}", r.tuned_layers(), r.layers.len()),
+                r.total_trials.to_string(),
+                cycles,
+                ms,
+            ]);
+        }
+        format!(
+            "== fleet tuning report (targets tuned smallest-capacity \
+             first) ==\n{}",
+            t.render()
+        )
+    }
+}
+
+/// Visit order over `targets`: capacity score ascending, name as the
+/// deterministic tiebreak. Returns indices into the input slice.
+pub fn tune_order(targets: &[VtaConfig]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..targets.len()).collect();
+    order.sort_by_key(|&i| {
+        (targets::capacity_score(&targets[i]), targets[i].target.clone())
+    });
+    order
+}
+
+/// The fleet scheduler. See the module docs for the policy.
+pub struct FleetTuner {
+    pub cfg: FleetConfig,
+}
+
+impl FleetTuner {
+    pub fn new(cfg: FleetConfig) -> Self {
+        FleetTuner { cfg }
+    }
+
+    /// Tune `layers` on every configured target under the global
+    /// budget, fanning all profiling work through `engine` (one shared
+    /// compile cache for the whole fleet).
+    pub fn tune(
+        &self,
+        engine: &Engine,
+        layers: &[ConvLayer],
+    ) -> FleetOutcome {
+        let cfg = &self.cfg;
+        let order = tune_order(&cfg.targets);
+        let n = order.len().max(1);
+        let share = cfg.total_trials / n;
+        let remainder = cfg.total_trials % n;
+        let mut store = cfg.transfer.clone().unwrap_or_default();
+        let mut runs = Vec::with_capacity(order.len());
+        for (pos, &idx) in order.iter().enumerate() {
+            let hw = cfg.targets[idx].clone();
+            let budget = share + usize::from(pos < remainder);
+            let net_cfg = NetworkConfig {
+                vta: hw.clone(),
+                tuner: cfg.tuner,
+                space: cfg.space,
+                base: TunerConfig {
+                    // independent per-target stream off the global seed
+                    // (the per-layer derivation inside NetworkTuner
+                    // xors bits 32+; targets use bits 48+)
+                    seed: cfg.base.seed ^ ((pos as u64 + 1) << 48),
+                    ..cfg.base.clone()
+                },
+                total_trials: budget,
+                round_trials: cfg.round_trials,
+                ucb_c: cfg.ucb_c,
+                transfer: if store.is_empty() {
+                    None
+                } else {
+                    Some(store.clone())
+                },
+                transfer_cap: cfg.transfer_cap,
+            };
+            let outcome = NetworkTuner::new(net_cfg).tune(engine, layers);
+            // chain this target's logs as transfer sources for the next
+            // (they carry the target stamp, so the next target's warm
+            // start hardware-audits them)
+            for db in &outcome.databases {
+                store.add(db.clone());
+            }
+            runs.push(FleetTargetRun {
+                target: hw.target.clone(),
+                clock_mhz: hw.clock_mhz,
+                outcome,
+            });
+        }
+        FleetOutcome { runs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    fn fleet_cfg(
+        targets: Vec<VtaConfig>,
+        tuner: TunerKind,
+        trials: usize,
+    ) -> FleetConfig {
+        FleetConfig {
+            targets,
+            tuner,
+            total_trials: trials,
+            round_trials: 10,
+            base: TunerConfig { seed: 11, ..TunerConfig::default() },
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn order_is_capacity_ascending() {
+        let targets = crate::vta::targets::all();
+        let order = tune_order(&targets);
+        let names: Vec<&str> = order
+            .iter()
+            .map(|&i| targets[i].target.as_str())
+            .collect();
+        assert_eq!(names, ["edge-small", "zcu104", "zcu102", "hiband"]);
+    }
+
+    #[test]
+    fn budget_splits_and_order_holds() {
+        let layers = vec![resnet18::layer("conv5").unwrap()];
+        let engine = Engine::with_jobs(2);
+        let cfg = fleet_cfg(
+            vec![VtaConfig::zcu102(), VtaConfig::zcu104()],
+            TunerKind::Random,
+            21,
+        );
+        let out = FleetTuner::new(cfg).tune(&engine, &layers);
+        assert_eq!(out.runs.len(), 2);
+        // zcu104 is smaller: tuned first, absorbs the remainder trial
+        assert_eq!(out.runs[0].target, "zcu104");
+        assert_eq!(out.runs[1].target, "zcu102");
+        assert_eq!(out.runs[0].outcome.report.total_trials, 11);
+        assert_eq!(out.runs[1].outcome.report.total_trials, 10);
+        // per-layer logs carry each run's own target stamp
+        for run in &out.runs {
+            for db in &run.outcome.databases {
+                assert_eq!(
+                    db.target.as_ref().map(|t| t.name.as_str()),
+                    Some(run.target.as_str())
+                );
+            }
+        }
+        assert!(out.render().contains("zcu104"));
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic() {
+        let layers = vec![resnet18::layer("conv5").unwrap()];
+        let indices = |jobs: usize| -> Vec<Vec<usize>> {
+            let engine = Engine::with_jobs(jobs);
+            let cfg = fleet_cfg(
+                vec![VtaConfig::zcu104(), VtaConfig::zcu102()],
+                TunerKind::Random,
+                20,
+            );
+            FleetTuner::new(cfg)
+                .tune(&engine, &layers)
+                .runs
+                .iter()
+                .map(|r| {
+                    r.outcome.traces[0]
+                        .trials
+                        .iter()
+                        .map(|t| t.space_index)
+                        .collect()
+                })
+                .collect()
+        };
+        assert_eq!(indices(1), indices(4),
+                   "fleet traces must be worker-count invariant");
+    }
+
+    #[test]
+    fn later_targets_warm_start_from_earlier_logs() {
+        // ml2 policy, enough budget to cross min_train on the first
+        // target: the second target's layer session must be warm
+        // (trace relabelled "ml2tuner-warm"), the first stays cold
+        let layers = vec![resnet18::layer("conv5").unwrap()];
+        let engine = Engine::single_threaded();
+        let cfg = fleet_cfg(
+            vec![VtaConfig::zcu102(), VtaConfig::zcu104()],
+            TunerKind::Ml2,
+            60,
+        );
+        let out = FleetTuner::new(cfg).tune(&engine, &layers);
+        assert_eq!(out.runs[0].outcome.traces[0].tuner, "ml2tuner",
+                   "first (smallest) target runs cold");
+        assert_eq!(out.runs[1].outcome.traces[0].tuner, "ml2tuner-warm",
+                   "second target must chain the first target's logs");
+    }
+
+    #[test]
+    fn save_databases_groups_by_target() {
+        let layers = vec![resnet18::layer("conv5").unwrap()];
+        let engine = Engine::single_threaded();
+        let cfg = fleet_cfg(
+            vec![VtaConfig::zcu102(), VtaConfig::zcu104()],
+            TunerKind::Random,
+            10,
+        );
+        let out = FleetTuner::new(cfg).tune(&engine, &layers);
+        let dir = std::env::temp_dir().join("ml2tuner_fleet_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let paths = out.save_databases(&dir).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert!(dir.join("zcu104").join("conv5.json").is_file());
+        assert!(dir.join("zcu102").join("conv5.json").is_file());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,6 +20,10 @@
 //!   under one global trial budget with a round-robin warmup + UCB1
 //!   budget allocator, one tuning database per layer, and a
 //!   network-level report (total cycles, per-layer best schedules).
+//! * [`fleet`] — [`FleetTuner`]: one network across a *list of hardware
+//!   targets* (`tune-fleet`), smallest capacity first, chaining each
+//!   target's logs into the next target's transfer warm start and
+//!   sharing the compile cache wherever codegen signatures agree.
 //!
 //! Thread-safety audit: [`crate::compiler::Compiler`] and
 //! [`crate::vta::Simulator`] are plain-data facades over the hardware
@@ -30,10 +34,12 @@
 
 pub mod cache;
 pub mod executor;
+pub mod fleet;
 pub mod scheduler;
 
 pub use cache::{CacheStats, CachedCompile, CompileCache};
 pub use executor::{default_jobs, Engine, EngineConfig};
+pub use fleet::{FleetConfig, FleetOutcome, FleetTargetRun, FleetTuner};
 pub use scheduler::{
     LayerResult, LayerSession, NetworkConfig, NetworkOutcome,
     NetworkReport, NetworkTuner, TunerKind,

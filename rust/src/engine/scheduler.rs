@@ -91,7 +91,8 @@ impl LayerSession {
     pub fn new(kind: TunerKind, cfg: TunerConfig, env: TuningEnv) -> Self {
         let rng = Rng::new(cfg.seed ^ kind.rng_salt());
         let space = env.space.clone();
-        let db = Database::for_layer_in(&env.layer, env.kind());
+        let db =
+            Database::for_layer_on(&env.layer, env.kind(), env.hw());
         let trace = TuningTrace::new(env.layer.name, kind.name());
         LayerSession { env, cfg, kind, space, db, warm: None, trace, rng,
                        round: 0 }
@@ -369,7 +370,8 @@ impl NetworkTuner {
                 if cfg.tuner == TunerKind::Ml2 {
                     if let Some(store) = &cfg.transfer {
                         if let Some(warm) = store.warm_start_for(
-                            layer, cfg.space, cfg.transfer_cap,
+                            layer, cfg.space, &cfg.vta,
+                            cfg.transfer_cap,
                         ) {
                             session = session.with_warm_start(warm);
                         }

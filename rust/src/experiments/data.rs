@@ -18,15 +18,23 @@ use crate::vta::config::VtaConfig;
 use crate::workloads::{resnet18, ConvLayer};
 
 /// Deterministically profile up to `limit` configurations of a layer's
-/// space (uniform subsample when the space is larger). Cached per
-/// (shape, limit).
-pub fn space_profile(layer: &ConvLayer, limit: usize, seed: u64)
-    -> Vec<TrialRecord>
-{
+/// space (uniform subsample when the space is larger) on hardware `hw`.
+/// Cached per (target, shape, limit).
+pub fn space_profile(
+    hw: &VtaConfig,
+    layer: &ConvLayer,
+    limit: usize,
+    seed: u64,
+) -> Vec<TrialRecord> {
     static CACHE: Mutex<Option<HashMap<String, Vec<TrialRecord>>>> =
         Mutex::new(None);
+    // the hardware key is the full config debug repr, not the target
+    // name: records depend on every capacity AND timing field, and two
+    // (future, file-defined) configs could share a name while differing
+    // in parameters — aliasing them would hand back records profiled on
+    // the wrong hardware
     let key = format!(
-        "h{}w{}c{}kc{}kh{}kw{}p{}s{}-{limit}-{seed}",
+        "{hw:?}-h{}w{}c{}kc{}kh{}kw{}p{}s{}-{limit}-{seed}",
         layer.h, layer.w, layer.c, layer.kc, layer.kh, layer.kw,
         layer.pad, layer.stride
     );
@@ -38,7 +46,7 @@ pub fn space_profile(layer: &ConvLayer, limit: usize, seed: u64)
             }
         }
     }
-    let env = TuningEnv::new(VtaConfig::zcu102(), *layer);
+    let env = TuningEnv::new(hw.clone(), *layer);
     let n = env.space.len();
     let indices: Vec<usize> = if n <= limit {
         (0..n).collect()
@@ -72,8 +80,10 @@ pub struct ComparisonRuns {
 }
 
 /// Run the three tuners `repeats` times each (different seeds) with the
-/// given budgets (paper: N=10, α=1, 10 repeats, averaged).
+/// given budgets (paper: N=10, α=1, 10 repeats, averaged) on hardware
+/// `hw`.
 pub fn compare_on_layer(
+    hw: &VtaConfig,
     layer_name: &str,
     repeats: usize,
     ml2_trials: usize,
@@ -81,7 +91,7 @@ pub fn compare_on_layer(
     seed: u64,
 ) -> ComparisonRuns {
     let layer = resnet18::layer(layer_name).expect("layer");
-    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let env = TuningEnv::new(hw.clone(), layer);
     // one engine for all repeats/tuners: the compile cache carries over
     // (profiling is deterministic, so sharing it never changes a trace)
     let engine = Engine::default();
@@ -136,21 +146,30 @@ mod tests {
 
     #[test]
     fn space_profile_cached_and_deterministic() {
+        let hw = VtaConfig::zcu102();
         let layer = resnet18::layer("conv5").unwrap();
-        let a = space_profile(&layer, 50, 1);
-        let b = space_profile(&layer, 50, 1);
+        let a = space_profile(&hw, &layer, 50, 1);
+        let b = space_profile(&hw, &layer, 50, 1);
         assert_eq!(a.len(), 50);
         assert_eq!(a[0].space_index, b[0].space_index);
         // shape-duplicate layer hits the same cache entry
         let layer2 = resnet18::layer("conv6").unwrap();
-        let c = space_profile(&resnet18::layer("conv2").unwrap(), 50, 1);
-        let d = space_profile(&layer2, 50, 1);
+        let c = space_profile(&hw, &resnet18::layer("conv2").unwrap(),
+                              50, 1);
+        let d = space_profile(&hw, &layer2, 50, 1);
         assert_eq!(c[0].space_index, d[0].space_index);
+        // same shape on a different target is a different profile
+        // entry (the key carries the target name)
+        let e = space_profile(&VtaConfig::zcu104(), &layer, 50, 1);
+        assert_eq!(e.len(), 50);
+        assert_eq!(a[0].space_index, e[0].space_index,
+                   "index stream is target-independent");
     }
 
     #[test]
     fn comparison_runs_shape() {
-        let runs = compare_on_layer("conv5", 2, 30, 30, 7);
+        let runs = compare_on_layer(&VtaConfig::zcu102(), "conv5", 2, 30,
+                                    30, 7);
         assert_eq!(runs.ml2.len(), 2);
         assert_eq!(runs.tvm.len(), 2);
         assert_eq!(runs.random.len(), 2);

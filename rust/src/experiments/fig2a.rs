@@ -6,7 +6,6 @@
 use super::{data, ExpConfig};
 use crate::tuner::report::average_curves;
 use crate::util::table::{ascii_curve, f, Table};
-use crate::vta::config::VtaConfig;
 
 pub fn run(cfg: &ExpConfig) -> String {
     let (repeats, ml2_t, tvm_t) = if cfg.quick {
@@ -14,7 +13,7 @@ pub fn run(cfg: &ExpConfig) -> String {
     } else {
         (cfg.repeats, 300, 800)
     };
-    let clock = VtaConfig::zcu102().clock_mhz;
+    let clock = cfg.hw.clock_mhz;
     let to_ms = |c: f64| c / (clock * 1e3);
     let mut out = String::from(
         "== Fig 2(a): best-so-far execution time vs configurations \
@@ -22,8 +21,8 @@ pub fn run(cfg: &ExpConfig) -> String {
          Conv2)\n\n",
     );
     for layer in ["conv1", "conv2"] {
-        let runs = data::compare_on_layer(layer, repeats, ml2_t, tvm_t,
-                                          cfg.seed);
+        let runs = data::compare_on_layer(&cfg.hw, layer, repeats,
+                                          ml2_t, tvm_t, cfg.seed);
         let ml2_avg = average_curves(
             &runs.ml2.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
         );

@@ -5,19 +5,19 @@
 use super::{data, ExpConfig};
 use crate::util::stats::normalized_histogram;
 use crate::util::table::{f, Table};
-use crate::vta::config::VtaConfig;
 
 pub fn run(cfg: &ExpConfig) -> String {
     let (repeats, ml2_t, tvm_t) =
         if cfg.quick { (cfg.repeats, 120, 120) } else { (cfg.repeats, 300, 300) };
-    let clock = VtaConfig::zcu102().clock_mhz;
+    let clock = cfg.hw.clock_mhz;
     let mut out = String::from(
         "== Fig 2(b): invalidity ratio + execution-time histogram ==\n\
          (paper Conv1: random 0.926, TVM 0.492, ML2Tuner 0.176)\n\n",
     );
     for layer in ["conv1", "conv2"] {
         let runs =
-            data::compare_on_layer(layer, repeats, ml2_t, tvm_t, cfg.seed);
+            data::compare_on_layer(&cfg.hw, layer, repeats, ml2_t,
+                                   tvm_t, cfg.seed);
         let mut t = Table::new(&["tuner", "invalidity ratio"]);
         t.row(&["random".into(), f(data::mean_invalidity(&runs.random), 3)]);
         t.row(&["tvm".into(), f(data::mean_invalidity(&runs.tvm), 3)]);

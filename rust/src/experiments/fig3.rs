@@ -72,7 +72,8 @@ pub fn run(cfg: &ExpConfig) -> String {
     let mut t = Table::new(&["layer", "RMSE P", "RMSE A", "ratio A/P"]);
     let mut ratios = Vec::new();
     for layer in resnet18::LAYERS {
-        let records = data::space_profile(&layer, limit, cfg.seed);
+        let records =
+            data::space_profile(&cfg.hw, &layer, limit, cfg.seed);
         let mut rp = Vec::new();
         let mut ra = Vec::new();
         for r in 0..cfg.repeats {

@@ -33,7 +33,8 @@ pub fn run(cfg: &ExpConfig) -> String {
     let mut per_round_avgs: Vec<Vec<f64>> =
         vec![Vec::new(); round_choices.len()];
     for layer in &layers {
-        let records = data::space_profile(layer, limit, cfg.seed);
+        let records =
+            data::space_profile(&cfg.hw, layer, limit, cfg.seed);
         let mut row = vec![layer.name.to_string()];
         for (ri, &rounds) in round_choices.iter().enumerate() {
             for &n in sample_counts {

@@ -5,7 +5,6 @@
 use super::{data, ExpConfig};
 use crate::util::stats::mean;
 use crate::util::table::{f, Table};
-use crate::vta::config::VtaConfig;
 use crate::workloads::resnet18;
 
 pub fn run(cfg: &ExpConfig) -> String {
@@ -14,7 +13,7 @@ pub fn run(cfg: &ExpConfig) -> String {
     } else {
         (cfg.repeats.min(5), 300, 700)
     };
-    let clock = VtaConfig::zcu102().clock_mhz;
+    let clock = cfg.hw.clock_mhz;
     let mut out = String::from(
         "== Fig 5: per-layer tuning results, ML2Tuner vs TVM approach ==\n\n",
     );
@@ -28,8 +27,9 @@ pub fn run(cfg: &ExpConfig) -> String {
     ]);
     let mut effs = Vec::new();
     for layer in resnet18::LAYERS {
-        let runs = data::compare_on_layer(layer.name, repeats, ml2_t,
-                                          tvm_t, cfg.seed);
+        let runs = data::compare_on_layer(&cfg.hw, layer.name,
+                                          repeats, ml2_t, tvm_t,
+                                          cfg.seed);
         let best_ms = |traces: &[crate::tuner::report::TuningTrace]| {
             let bests: Vec<f64> = traces
                 .iter()

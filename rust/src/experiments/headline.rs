@@ -32,8 +32,9 @@ pub fn run(cfg: &ExpConfig) -> String {
     let mut inv_tvm = Vec::new();
     let mut inv_rnd = Vec::new();
     for layer in resnet18::LAYERS {
-        let runs = data::compare_on_layer(layer.name, repeats, ml2_t,
-                                          tvm_t, cfg.seed);
+        let runs = data::compare_on_layer(&cfg.hw, layer.name,
+                                          repeats, ml2_t, tvm_t,
+                                          cfg.seed);
         let eff: Vec<f64> = runs
             .ml2
             .iter()

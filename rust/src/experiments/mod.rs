@@ -20,6 +20,8 @@ pub mod transfer;
 
 use anyhow::{bail, Result};
 
+use crate::vta::config::VtaConfig;
+
 /// Shared experiment knobs.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -29,15 +31,20 @@ pub struct ExpConfig {
     pub seed: u64,
     /// Shrunk-scale run for tests.
     pub quick: bool,
+    /// Hardware target every harness profiles on (`--target`; default
+    /// the paper's zcu102, so recorded numbers regenerate unchanged).
+    pub hw: VtaConfig,
 }
 
 impl ExpConfig {
     pub fn full() -> Self {
-        ExpConfig { repeats: 10, seed: 2024, quick: false }
+        ExpConfig { repeats: 10, seed: 2024, quick: false,
+                    hw: VtaConfig::zcu102() }
     }
 
     pub fn quick() -> Self {
-        ExpConfig { repeats: 2, seed: 2024, quick: true }
+        ExpConfig { repeats: 2, seed: 2024, quick: true,
+                    hw: VtaConfig::zcu102() }
     }
 }
 

@@ -21,7 +21,8 @@ pub fn run(cfg: &ExpConfig) -> String {
         resnet18::LAYERS.iter().zip(resnet18::PAPER_INVALIDITY)
     {
         assert_eq!(layer.name, pname);
-        let records = data::space_profile(layer, limit, cfg.seed);
+        let records =
+            data::space_profile(&cfg.hw, layer, limit, cfg.seed);
         let n = records.len() as f64;
         let crash = records
             .iter()

@@ -68,7 +68,8 @@ pub fn run(cfg: &ExpConfig) -> String {
     // aggregate records over the unique layer shapes
     let mut per_layer: Vec<Vec<TrialRecord>> = Vec::new();
     for layer in resnet18::LAYERS.iter().take(5) {
-        per_layer.push(data::space_profile(layer, limit, cfg.seed));
+        per_layer
+            .push(data::space_profile(&cfg.hw, layer, limit, cfg.seed));
     }
     let mut t = Table::new(&[
         "model",

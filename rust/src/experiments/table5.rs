@@ -47,7 +47,8 @@ pub fn run(cfg: &ExpConfig) -> String {
     };
     let mut per_layer: Vec<(String, Vec<f64>)> = Vec::new();
     for layer in &layers {
-        let records = data::space_profile(layer, limit, cfg.seed);
+        let records =
+            data::space_profile(&cfg.hw, layer, limit, cfg.seed);
         if let Some(imp) = importance_for(&records, rounds, cfg.seed) {
             per_layer.push((layer.name.to_string(), imp));
         }

@@ -24,7 +24,6 @@ use crate::tuner::report::{average_curves, TuningTrace};
 use crate::tuner::{Tuner, TunerConfig, TuningEnv};
 use crate::util::stats::mean;
 use crate::util::table::{f, Table};
-use crate::vta::config::VtaConfig;
 use crate::workloads;
 
 const SOURCE_LAYERS: [&str; 3] = ["pw3", "pw4", "pw6"];
@@ -44,14 +43,16 @@ pub fn run(cfg: &ExpConfig) -> String {
     let mut store = TransferDb::new();
     for name in SOURCE_LAYERS {
         let layer = net.layer(name).unwrap();
-        let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+        let env = TuningEnv::new(cfg.hw.clone(), layer);
         let t_cfg = TunerConfig {
             seed: cfg.seed ^ 0x5eed_0001,
             max_trials: src_trials,
             ..Default::default()
         };
         let trace = Ml2Tuner::new(t_cfg).tune_with(&env, &engine);
-        let mut db = Database::for_layer(&layer);
+        let mut db = Database::for_layer_on(
+            &layer, crate::compiler::schedule::SpaceKind::Paper, &cfg.hw,
+        );
         for r in &trace.trials {
             db.push(r.clone());
         }
@@ -59,11 +60,11 @@ pub fn run(cfg: &ExpConfig) -> String {
     }
     let warm = store
         .warm_start_for(&target, crate::compiler::schedule::SpaceKind::Paper,
-                        cap)
+                        &cfg.hw, cap)
         .expect("sibling layers must transfer");
 
     // -- 2. cold vs warm on the held-out layer, paired seeds --------------
-    let env = TuningEnv::new(VtaConfig::zcu102(), target);
+    let env = TuningEnv::new(cfg.hw.clone(), target);
     let mut cold_runs: Vec<TuningTrace> = Vec::new();
     let mut warm_runs: Vec<TuningTrace> = Vec::new();
     for r in 0..cfg.repeats {

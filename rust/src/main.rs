@@ -1,22 +1,28 @@
 //! ml2tuner CLI — the L3 coordinator entrypoint.
 //!
 //! ```text
-//! ml2tuner info                         hardware config, networks, spaces
-//! ml2tuner tune [--network resnet18] --layer conv1
+//! ml2tuner info                         targets, networks, space sizes
+//! ml2tuner tune [--network resnet18] --layer conv1 [--target zcu102]
 //!               [--tuner ml2tuner|tvm|random] [--trials N] [--seed S]
 //!               [--jobs J] [--space paper|extended] [--v-margin M]
 //!               [--db out.json] [--transfer-from dir]
 //! ml2tuner tune-net [--network resnet18|vgg16|mobilenet|synth-gemm]
-//!               [--tuner ml2tuner|tvm|random] [--trials N] [--round N]
-//!               [--seed S] [--jobs J] [--layers a,b,..] [--out dir]
-//!               [--space paper|extended] [--v-margin M]
-//!               [--transfer-from dir] [--transfer-cap N]
+//!               [--target zcu102] [--tuner ml2tuner|tvm|random]
+//!               [--trials N] [--round N] [--seed S] [--jobs J]
+//!               [--layers a,b,..] [--out dir] [--space paper|extended]
+//!               [--v-margin M] [--transfer-from dir] [--transfer-cap N]
 //!               whole-network tuning, one budget
-//! ml2tuner simulate [--network N] --layer conv1
+//! ml2tuner tune-fleet --targets zcu102,zcu104,edge-small [--network N]
+//!               [--trials N] [..tune-net flags..] [--out dir]
+//!               one network across a hardware fleet, one global budget;
+//!               smallest target first, logs chained as warm starts
+//! ml2tuner simulate [--network N] --layer conv1 [--target zcu102]
 //!               --schedule TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]
 //! ml2tuner validate [--layer conv1] [--samples N] [--seed S] [--space K]
-//!               (simulator vs AOT JAX/Pallas golden, bit-exact)
+//!               (simulator vs AOT JAX/Pallas golden, bit-exact; the
+//!               golden artifacts are zcu102-only)
 //! ml2tuner experiment <id>|all [--quick] [--repeats N] [--seed S]
+//!               [--target zcu102]
 //! ```
 
 use std::collections::HashMap;
@@ -26,7 +32,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use ml2tuner::compiler::schedule::{self, Schedule, SpaceKind};
 use ml2tuner::compiler::Compiler;
 use ml2tuner::engine::{
-    default_jobs, Engine, NetworkConfig, NetworkTuner, TunerKind,
+    default_jobs, Engine, FleetConfig, FleetTuner, NetworkConfig,
+    NetworkTuner, TunerKind,
 };
 use ml2tuner::experiments::{self, ExpConfig};
 use ml2tuner::runtime::{golden, Runtime};
@@ -38,7 +45,8 @@ use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::util::rng::Rng;
 use ml2tuner::util::table::Table;
-use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::vta::{config::VtaConfig, functional, layout, targets,
+                    Simulator};
 use ml2tuner::workloads::{self, resnet18, synth, ConvLayer, Network};
 
 /// Tiny flag parser: `--key value` pairs + positionals.
@@ -119,9 +127,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
     };
     let args = Args::parse(&argv[1..]);
     match cmd.as_str() {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "tune" => cmd_tune(&args),
         "tune-net" => cmd_tune_net(&args),
+        "tune-fleet" => cmd_tune_fleet(&args),
         "simulate" => cmd_simulate(&args),
         "validate" => cmd_validate(&args),
         "experiment" => cmd_experiment(&args),
@@ -139,22 +148,30 @@ fn print_usage() {
          VTA\n\n\
          commands:\n  \
          info\n  \
-         tune [--network N] --layer conv1 [--tuner ml2tuner|tvm|random] \
-         [--trials N]\n       [--seed S] [--jobs J] [--space \
-         paper|extended] [--v-margin M]\n       [--db out.json] \
-         [--transfer-from dir]\n  \
+         tune [--network N] --layer conv1 [--target T] \
+         [--tuner ml2tuner|tvm|random]\n       [--trials N] [--seed S] \
+         [--jobs J] [--space paper|extended]\n       [--v-margin M] \
+         [--db out.json] [--transfer-from dir]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
-         [--tuner ..]\n       [--trials N] [--round N] [--seed S] \
-         [--jobs J] [--layers a,b,..]\n       [--space paper|extended] \
-         [--v-margin M] [--out dir]\n       [--transfer-from dir] \
-         [--transfer-cap N]\n  \
-         simulate [--network N] --layer conv1 --schedule \
-         TH,TW,OC,IC,VT[,SLOTS,UNROLL]\n       [--numeric]\n  \
+         [--target T]\n       [--tuner ..] [--trials N] [--round N] \
+         [--seed S] [--jobs J]\n       [--layers a,b,..] [--space \
+         paper|extended] [--v-margin M] [--out dir]\n       \
+         [--transfer-from dir] [--transfer-cap N]\n  \
+         tune-fleet --targets T1,T2,.. [--network N] [--trials N] \
+         [--out dir]\n       [..tune-net flags..]\n  \
+         simulate [--network N] --layer conv1 [--target T] --schedule \
+         \n       TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
-         headline|transfer|all> [--quick] [--repeats N] [--seed S]\n\n\
+         headline|transfer|all> [--quick] [--repeats N] [--seed S] \
+         [--target T]\n\n\
          --network: a registered workload ({}); layer names are resolved\n\
         \x20       within it.\n\
+         --target: a registered hardware target ({}); default zcu102 \
+         (paper\n        Table 1). tune-fleet takes a comma list via \
+         --targets and tunes\n        smallest-capacity first, chaining \
+         each target's logs into the next\n        target's transfer \
+         warm start.\n\
          --space: knob set. 'paper' is the paper-exact 5-knob space \
          (byte-reproducible\n        traces); 'extended' adds load \
          double-buffering (nLoadSlots 1|2) and\n        kernel unroll \
@@ -169,8 +186,10 @@ fn print_usage() {
          similarity-matched across space versions).\n\
          tune-net splits one global --trials budget across the layers \
          with a\n        round-robin + UCB allocator and saves one tuning \
-         log per layer to --out.",
-        workloads::network_names().join("|")
+         log per layer to --out;\n        tune-fleet saves them per \
+         target to --out/<target>/.",
+        workloads::network_names().join("|"),
+        targets::TARGET_NAMES.join("|")
     );
 }
 
@@ -185,6 +204,41 @@ fn space_arg(args: &Args) -> Result<SpaceKind> {
     }
 }
 
+/// Registry lookup with the uniform unknown-target error (shared by
+/// the singular and plural flags so their messages can never drift).
+fn lookup_target(name: &str) -> Result<VtaConfig> {
+    targets::target(name).ok_or_else(|| {
+        anyhow!(
+            "unknown target '{name}' (known: {})",
+            targets::TARGET_NAMES.join(", ")
+        )
+    })
+}
+
+/// `--target <name>` through the registry (default: the paper's
+/// zcu102, so every pre-registry command line behaves identically).
+fn target_arg(args: &Args) -> Result<VtaConfig> {
+    lookup_target(args.get("target").unwrap_or("zcu102"))
+}
+
+/// `--targets a,b,..` for the fleet (each name registry-routed,
+/// duplicates rejected — they would collide in `--out <dir>/<target>`).
+fn targets_arg(args: &Args) -> Result<Vec<VtaConfig>> {
+    let list = args
+        .get("targets")
+        .ok_or_else(|| anyhow!("tune-fleet requires --targets a,b,.."))?;
+    let mut out: Vec<VtaConfig> = Vec::new();
+    for name in list.split(',') {
+        let name = name.trim();
+        let cfg = lookup_target(name)?;
+        if out.iter().any(|c| c.target == cfg.target) {
+            bail!("--targets lists '{name}' twice");
+        }
+        out.push(cfg);
+    }
+    Ok(out)
+}
+
 fn network_arg(args: &Args) -> Result<&'static Network> {
     let name = args.get("network").unwrap_or("resnet18");
     workloads::network(name).ok_or_else(|| {
@@ -193,6 +247,75 @@ fn network_arg(args: &Args) -> Result<&'static Network> {
             workloads::network_names().join(", ")
         )
     })
+}
+
+/// Registry-routed `--layers a,b,..` (default: every layer of the
+/// network). Duplicates are rejected — they would silently overwrite
+/// each other's tuning log in `--out`. Shared by `tune-net` and
+/// `tune-fleet` so the two commands can never drift in `--layers`
+/// syntax.
+fn layers_arg(args: &Args, net: &Network) -> Result<Vec<ConvLayer>> {
+    let layers: Vec<ConvLayer> = match args.get("layers") {
+        None => net.layers.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|n| {
+                let n = n.trim();
+                net.layer(n).ok_or_else(|| {
+                    anyhow!(
+                        "unknown layer '{n}' of network '{}' (layers: {})",
+                        net.name,
+                        net.layer_names().join(", ")
+                    )
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
+    for (i, l) in layers.iter().enumerate() {
+        if layers[..i].iter().any(|m| m.name == l.name) {
+            bail!("--layers lists '{}' twice", l.name);
+        }
+    }
+    Ok(layers)
+}
+
+/// Error on any flag the command does not read. The parser itself
+/// accepts arbitrary `--key value` pairs, so without this gate a typo
+/// (`--trails`, `--sapce`) or a near-miss (`tune-net --targets x`,
+/// `tune --layers a,b`) would be silently ignored and the run would
+/// proceed with defaults the user never asked for.
+fn expect_flags(args: &Args, allowed: &[&str]) -> Result<()> {
+    let mut unknown: Vec<&str> = args
+        .flags
+        .keys()
+        .map(String::as_str)
+        .filter(|k| !allowed.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    unknown.sort_unstable();
+    let accepted = if allowed.is_empty() {
+        "this command takes no flags".to_string()
+    } else {
+        format!(
+            "flags of this command: {}",
+            allowed
+                .iter()
+                .map(|k| format!("--{k}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        )
+    };
+    bail!(
+        "unknown flag{} {} ({accepted})",
+        if unknown.len() == 1 { "" } else { "s" },
+        unknown
+            .iter()
+            .map(|k| format!("--{k}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
 }
 
 fn layer_arg(args: &Args, net: &Network) -> Result<ConvLayer> {
@@ -237,19 +360,33 @@ fn transfer_arg(args: &Args, kind: TunerKind) -> Result<Option<TransferDb>> {
     Ok(Some(store))
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    // info reports the whole registry, so it reads no flags — but it
+    // still errors on stray ones like every sibling command
+    expect_flags(args, &[])?;
     let cfg = VtaConfig::zcu102();
-    println!("ml2tuner — extended-VTA ({}) simulated testbed", cfg.target);
+    println!("ml2tuner — extended-VTA ({} + {} more targets) simulated \
+              testbed", cfg.target, targets::TARGET_NAMES.len() - 1);
+    let mut hw = Table::new(&["target", "INP vecs", "WGT blocks",
+                              "ACC vecs", "UOP uops", "DMA B/cyc",
+                              "clock MHz"]);
+    for t in targets::all() {
+        hw.row(&[
+            t.target.clone(),
+            t.inp_capacity().to_string(),
+            t.wgt_capacity().to_string(),
+            t.acc_capacity().to_string(),
+            t.uop_capacity().to_string(),
+            t.dma_bytes_per_cycle.to_string(),
+            t.clock_mhz.to_string(),
+        ]);
+    }
+    hw.print();
     println!(
-        "  GEMM block {}x{}  INP {} vecs  WGT {} blocks  ACC {} vecs  \
-         UOP {} uops  clock {} MHz  shift {}",
+        "  GEMM block {}x{} (all targets)  shift {}  — space sizes \
+         below are per layer",
         cfg.block(),
         cfg.block(),
-        cfg.inp_capacity(),
-        cfg.wgt_capacity(),
-        cfg.acc_capacity(),
-        cfg.uop_capacity(),
-        cfg.clock_mhz,
         cfg.shift
     );
     let mut nets = Table::new(&["network", "layers", "total MACs",
@@ -294,8 +431,12 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
+    expect_flags(args, &["network", "layer", "target", "tuner",
+                         "trials", "seed", "jobs", "space", "v-margin",
+                         "db", "transfer-from", "transfer-cap"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
+    let hw = target_arg(args)?;
     let trials = args.get_usize("trials", 300)?;
     let seed = args.get_u64("seed", 0)?;
     let jobs = args.get_usize("jobs", default_jobs())?;
@@ -304,9 +445,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
     let cfg = TunerConfig { seed, max_trials: trials, v_margin,
                             ..Default::default() };
-    let env = TuningEnv::with_space(VtaConfig::zcu102(), layer, space);
-    println!("space: {} ({} configurations)", space.name(),
-             env.space.len());
+    let env = TuningEnv::with_space(hw.clone(), layer, space);
+    println!("target: {}   space: {} ({} configurations)", hw.target,
+             space.name(), env.space.len());
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let kind = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
@@ -316,7 +457,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
             let mut t = Ml2Tuner::new(cfg);
             if let Some(store) = &transfer {
                 let cap = args.get_usize("transfer-cap", 400)?;
-                match store.warm_start_for(&layer, space, cap) {
+                match store.warm_start_for(&layer, space, &hw, cap) {
                     Some(warm) => {
                         println!(
                             "warm start: {} transferred records for {}",
@@ -340,7 +481,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let engine = Engine::with_jobs(jobs);
     let t0 = std::time::Instant::now();
     let trace = tuner.tune_with(&env, &engine);
-    let sim = Simulator::new(VtaConfig::zcu102());
+    let sim = Simulator::new(hw.clone());
     let cache = engine.cache().stats();
     println!(
         "{} on {}: {} trials in {:.1}s ({} jobs, compile cache {} hits / \
@@ -380,7 +521,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         trace.estimated_wall_clock(&ProfilingCostModel::default())
     );
     if let Some(path) = args.get("db") {
-        let mut db = Database::for_layer_in(&layer, space);
+        let mut db = Database::for_layer_on(&layer, space, &hw);
         for r in &trace.trials {
             db.push(r.clone());
         }
@@ -391,6 +532,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_tune_net(args: &Args) -> Result<()> {
+    expect_flags(args, &["network", "target", "tuner", "trials",
+                         "round", "seed", "jobs", "layers", "space",
+                         "v-margin", "out", "transfer-from",
+                         "transfer-cap"])?;
     let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
     let round = args.get_usize("round", 10)?;
@@ -399,35 +544,13 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let tuner = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
-    // --layers is resolved through the registry, so layer selection
-    // works for every network, not just resnet18
-    let layers: Vec<ConvLayer> = match args.get("layers") {
-        None => net.layers.to_vec(),
-        Some(list) => list
-            .split(',')
-            .map(|n| {
-                let n = n.trim();
-                net.layer(n).ok_or_else(|| {
-                    anyhow!(
-                        "unknown layer '{n}' of network '{}' (layers: {})",
-                        net.name,
-                        net.layer_names().join(", ")
-                    )
-                })
-            })
-            .collect::<Result<_>>()?,
-    };
-    // one tuning log per layer: duplicates would silently overwrite
-    // each other's database in --out
-    for (i, l) in layers.iter().enumerate() {
-        if layers[..i].iter().any(|m| m.name == l.name) {
-            bail!("--layers lists '{}' twice", l.name);
-        }
-    }
+    let layers = layers_arg(args, net)?;
     let space = space_arg(args)?;
+    let hw = target_arg(args)?;
     let v_margin =
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
     let cfg = NetworkConfig {
+        vta: hw.clone(),
         tuner,
         space,
         total_trials: trials,
@@ -439,8 +562,8 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     };
     let engine = Engine::with_jobs(jobs);
     let t0 = std::time::Instant::now();
-    println!("tuning {} ({} layers, {} trials, {} space)", net.name,
-             layers.len(), trials, space.name());
+    println!("tuning {} on {} ({} layers, {} trials, {} space)",
+             net.name, hw.target, layers.len(), trials, space.name());
     let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
     print!("{}", outcome.report.render());
     let cache = engine.cache().stats();
@@ -456,6 +579,70 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("out") {
         let paths = outcome.save_databases(dir)?;
         println!("{} per-layer tuning logs saved to {dir}/", paths.len());
+    }
+    Ok(())
+}
+
+fn cmd_tune_fleet(args: &Args) -> Result<()> {
+    expect_flags(args, &["network", "targets", "tuner", "trials",
+                         "round", "seed", "jobs", "layers", "space",
+                         "v-margin", "out", "transfer-from",
+                         "transfer-cap"])?;
+    let net = network_arg(args)?;
+    let fleet_targets = targets_arg(args)?;
+    let trials = args.get_usize("trials", 1000)?;
+    let round = args.get_usize("round", 10)?;
+    let seed = args.get_u64("seed", 0)?;
+    let jobs = args.get_usize("jobs", default_jobs())?;
+    let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
+    let tuner = TunerKind::parse(tuner_name)
+        .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
+    let layers = layers_arg(args, net)?;
+    let space = space_arg(args)?;
+    let v_margin =
+        args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
+    let cfg = FleetConfig {
+        targets: fleet_targets.clone(),
+        tuner,
+        space,
+        base: TunerConfig { seed, v_margin, ..Default::default() },
+        total_trials: trials,
+        round_trials: round,
+        transfer: transfer_arg(args, tuner)?,
+        transfer_cap: args.get_usize("transfer-cap", 400)?,
+        ..Default::default()
+    };
+    let engine = Engine::with_jobs(jobs);
+    let t0 = std::time::Instant::now();
+    println!(
+        "fleet-tuning {} across {} targets ({} layers, {} global \
+         trials, {} space)",
+        net.name,
+        fleet_targets.len(),
+        layers.len(),
+        trials,
+        space.name()
+    );
+    let outcome = FleetTuner::new(cfg).tune(&engine, &layers);
+    print!("{}", outcome.render());
+    for run in &outcome.runs {
+        println!("\n-- {} --", run.target);
+        print!("{}", run.outcome.report.render());
+    }
+    let cache = engine.cache().stats();
+    println!(
+        "wall-clock {:.1}s ({} jobs, fleet-shared compile cache {} hits \
+         / {} lookups, {:.1}% hit rate)",
+        t0.elapsed().as_secs_f64(),
+        engine.jobs(),
+        cache.hits,
+        cache.lookups(),
+        cache.hit_rate() * 100.0
+    );
+    if let Some(dir) = args.get("out") {
+        let paths = outcome.save_databases(dir)?;
+        println!("{} tuning logs saved under {dir}/<target>/",
+                 paths.len());
     }
     Ok(())
 }
@@ -487,6 +674,8 @@ fn parse_schedule(text: &str) -> Result<Schedule> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    expect_flags(args, &["network", "layer", "target", "schedule",
+                         "space", "numeric", "seed"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
     let sched = parse_schedule(
@@ -500,14 +689,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         _ => space_arg(args)?,
     };
-    let cfg = VtaConfig::zcu102();
+    let cfg = target_arg(args)?;
     let compiler = Compiler::with_kind(cfg.clone(), space);
     let sim = Simulator::new(cfg.clone());
     let compiled = compiler.compile(&layer, &sched);
     println!(
-        "{} {}: {} instrs, {} gemm block-ops, {} dma bytes",
+        "{} {} on {}: {} instrs, {} gemm block-ops, {} dma bytes",
         layer.name,
         sched,
+        cfg.target,
         compiled.program.len(),
         compiled.stats.gemm_block_ops,
         compiled.stats.dma_bytes
@@ -563,6 +753,8 @@ fn numeric_vs_golden(
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
+    expect_flags(args, &["network", "layer", "target", "samples",
+                         "seed", "space"])?;
     // the AOT JAX/Pallas golden artifacts exist for resnet18 only
     // (network_arg reports unknown names with the registry list)
     let resnet = network_arg(args)?;
@@ -570,7 +762,14 @@ fn cmd_validate(args: &Args) -> Result<()> {
         bail!("validate: golden AOT artifacts exist for resnet18 only \
                (got --network {})", resnet.name);
     }
-    let cfg = VtaConfig::zcu102();
+    // golden artifacts are lowered for the zcu102 (shift, layout);
+    // reject other targets instead of "validating" against the wrong
+    // reference
+    let cfg = target_arg(args)?;
+    if cfg.target != "zcu102" {
+        bail!("validate: golden AOT artifacts exist for zcu102 only \
+               (got --target {})", cfg.target);
+    }
     let compiler = Compiler::new(cfg.clone());
     let sim = Simulator::new(cfg.clone());
     let mut rt = Runtime::open_default()?;
@@ -617,6 +816,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
+    expect_flags(args, &["quick", "repeats", "seed", "target"])?;
     let id = args
         .positional
         .first()
@@ -629,6 +829,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     cfg.repeats = args.get_usize("repeats", cfg.repeats)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.hw = target_arg(args)?;
     if id == "all" {
         for id in experiments::ALL {
             experiments::run(id, &cfg)?;

@@ -3,18 +3,23 @@
 //! Stores every profiling attempt with its features and outcome, feeds the
 //! three models' training sets, and persists as a JSON tuning log
 //! (TVM-style) so runs can be resumed or analyzed offline. Logs carry the
-//! layer's shape ([`LayerMeta`]), which is what lets [`TransferDb`] match
-//! a directory of prior logs against a *new* layer and assemble a
-//! warm-start training set for it (cross-workload transfer, cf. the
-//! MetaTune / HW-aware-initialization lines in PAPERS.md).
+//! layer's shape ([`LayerMeta`]) and the hardware target's
+//! capacity-defining fields ([`TargetMeta`]), which is what lets
+//! [`TransferDb`] match a directory of prior logs against a *new* layer
+//! on a *new* target and assemble a warm-start training set for it —
+//! cross-workload and capacity-aware cross-hardware transfer, cf. the
+//! MetaTune / HW-aware-initialization lines in PAPERS.md.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::compiler::features;
 use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::util::json::Json;
+use crate::vta::config::VtaConfig;
+use crate::vta::targets::TargetMeta;
 use crate::workloads::ConvLayer;
 
 /// Profiling outcome classes (paper §A.2: register-error crash vs
@@ -177,6 +182,11 @@ pub struct Database {
     /// the log and used to rebuild visible features on load; logs
     /// without the field (pre-ConfigSpace) are paper-kind.
     pub kind: SpaceKind,
+    /// Hardware target the records were profiled on (name + the
+    /// capacity-defining fields), when known. Logs written before target
+    /// stamping have `None` — [`TransferDb`] treats them as
+    /// same-hardware sources (the pre-registry behaviour).
+    pub target: Option<TargetMeta>,
     pub records: Vec<TrialRecord>,
 }
 
@@ -189,7 +199,8 @@ impl Default for Database {
 impl Database {
     pub fn new(layer: &str) -> Self {
         Database { layer: layer.to_string(), meta: None,
-                   kind: SpaceKind::Paper, records: Vec::new() }
+                   kind: SpaceKind::Paper, target: None,
+                   records: Vec::new() }
     }
 
     /// Database for a known layer: carries the shape so the persisted
@@ -204,7 +215,22 @@ impl Database {
             layer: layer.name.to_string(),
             meta: Some(LayerMeta::of(layer)),
             kind,
+            target: None,
             records: Vec::new(),
+        }
+    }
+
+    /// Shape- *and* target-stamped database: what every tuning run
+    /// persists since the target registry (the stamp is what makes the
+    /// log usable for capacity-aware cross-target transfer).
+    pub fn for_layer_on(
+        layer: &ConvLayer,
+        kind: SpaceKind,
+        hw: &VtaConfig,
+    ) -> Self {
+        Database {
+            target: Some(TargetMeta::of(hw)),
+            ..Self::for_layer_in(layer, kind)
         }
     }
 
@@ -299,6 +325,9 @@ impl Database {
         if let Some(m) = &self.meta {
             root.set("shape", m.to_json());
         }
+        if let Some(t) = &self.target {
+            root.set("target", t.to_json());
+        }
         let recs: Vec<Json> = self
             .records
             .iter()
@@ -349,6 +378,14 @@ impl Database {
         };
         db.meta = match j.get("shape") {
             Some(s) => Some(LayerMeta::from_json(s)?),
+            None => None,
+        };
+        db.target = match j.get("target") {
+            Some(t) => Some(TargetMeta::from_json(t).ok_or_else(|| {
+                anyhow!("malformed target stamp")
+            })?),
+            // pre-registry logs carry no stamp: loadable, matched as
+            // same-hardware sources
             None => None,
         };
         for r in j
@@ -454,7 +491,10 @@ pub const MIN_TRANSFER_SIMILARITY: f64 = 0.25;
 #[derive(Clone, Debug, Default)]
 pub struct TransferDb {
     /// Loaded per-layer logs, directory order (sorted by file name).
-    pub sources: Vec<Database>,
+    /// `Arc`-shared so cloning a store — which the fleet scheduler does
+    /// once per target to snapshot its growing transfer chain — copies
+    /// pointers, not record vectors.
+    pub sources: Vec<Arc<Database>>,
     /// `.json` files in the scanned directory that were not parseable
     /// tuning logs (skipped, not fatal).
     pub skipped: usize,
@@ -468,7 +508,7 @@ impl TransferDb {
     /// Add an in-memory source log (empty logs are ignored).
     pub fn add(&mut self, db: Database) {
         if !db.is_empty() {
-            self.sources.push(db);
+            self.sources.push(Arc::new(db));
         }
     }
 
@@ -490,7 +530,9 @@ impl TransferDb {
         let mut store = TransferDb::new();
         for p in &paths {
             match Database::load(p) {
-                Ok(db) if !db.is_empty() => store.sources.push(db),
+                Ok(db) if !db.is_empty() => {
+                    store.sources.push(Arc::new(db))
+                }
                 Ok(_) => {}
                 Err(_) => store.skipped += 1,
             }
@@ -503,24 +545,46 @@ impl TransferDb {
     }
 
     pub fn total_records(&self) -> usize {
-        self.sources.iter().map(Database::len).sum()
+        self.sources.iter().map(|d| d.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.sources.is_empty()
     }
 
-    /// Assemble a warm-start database for `layer`, in the **target
-    /// run's** space kind: records from the most similar stored layers
-    /// (shape similarity ≥ [`MIN_TRANSFER_SIMILARITY`], best source
-    /// first), capped at `max_records`.
+    /// Assemble a warm-start database for `layer` on hardware `hw`, in
+    /// the **target run's** space kind: records from the most similar
+    /// stored layers (shape similarity ≥ [`MIN_TRANSFER_SIMILARITY`],
+    /// best source first), capped at `max_records`.
+    ///
+    /// Hardware distance: sources are ordered by `shape_similarity ×
+    /// hw_similarity` (see [`TargetMeta::hw_similarity`]), so same-target
+    /// logs always lead, and a cross-target source additionally
+    /// contributes at most `ceil(len × hw_similarity)` of its records —
+    /// capacity-aware down-weighting instead of exclusion. On top of
+    /// that, every *valid-labelled* record arriving from a target with
+    /// different capacities is audited against `hw`'s static capacity
+    /// check: a config that cannot even ideally fit the target's buffers
+    /// is relabelled `Crash` before it trains anything. Model V is the
+    /// point of the audit — a bigger-buffered source log would otherwise
+    /// import its validity boundary at full confidence and pre-train V
+    /// to accept configs the target hardware must reject (the V veto
+    /// would then steer profiling straight into the crash region).
+    /// Unstamped (pre-registry) sources are treated as same-hardware.
     ///
     /// Valid records have their cycle counts rescaled by the target/source
     /// MAC ratio so the `log2(cycles)` labels Model P trains on live on
-    /// the target layer's scale — transfer moves the *shape* of the
-    /// performance landscape, the MAC ratio moves its level. Validity
-    /// labels transfer unscaled (the boundary is scratchpad-pressure
-    /// driven, a near-layer-independent function of the schedule).
+    /// the target *layer's* scale — transfer moves the *shape* of the
+    /// performance landscape, the MAC ratio moves its level. No
+    /// hardware-speed rescale is applied on top: a cross-target source
+    /// (e.g. a narrower-DMA machine) carries a roughly uniform
+    /// per-source level offset in log2 space, which barely perturbs
+    /// P's within-layer *ranking* — and any scalar correction would be
+    /// wrong for the compute-bound half of the space anyway. The
+    /// hardware down-weighting below is what bounds that residual
+    /// bias. Validity labels transfer unscaled (the boundary is
+    /// scratchpad-pressure driven, a near-layer-independent function
+    /// of the schedule) but are capacity-audited — see above.
     /// Sources without shape metadata (legacy logs) are used only when
     /// their layer name matches exactly.
     ///
@@ -541,10 +605,12 @@ impl TransferDb {
         &self,
         layer: &ConvLayer,
         kind: SpaceKind,
+        hw: &VtaConfig,
         max_records: usize,
     ) -> Option<Database> {
         let target = LayerMeta::of(layer);
-        let mut scored: Vec<(f64, &Database)> = self
+        let hw_meta = TargetMeta::of(hw);
+        let mut scored: Vec<(f64, f64, &Database)> = self
             .sources
             .iter()
             .filter_map(|src| {
@@ -553,13 +619,20 @@ impl TransferDb {
                     None if src.layer == layer.name => 1.0,
                     None => return None,
                 };
-                (sim >= MIN_TRANSFER_SIMILARITY).then_some((sim, src))
+                if sim < MIN_TRANSFER_SIMILARITY {
+                    return None;
+                }
+                let hw_sim = src
+                    .target
+                    .as_ref()
+                    .map_or(1.0, |t| t.hw_similarity(&hw_meta));
+                Some((sim * hw_sim, hw_sim, src.as_ref()))
             })
             .collect();
         // best source first; ties keep load order (sort is stable)
         scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut warm = Database::for_layer_in(layer, kind);
-        for (_, src) in scored {
+        let mut warm = Database::for_layer_on(layer, kind, hw);
+        for (_, hw_sim, src) in scored {
             if warm.len() >= max_records {
                 break;
             }
@@ -576,10 +649,30 @@ impl TransferDb {
             let projectable = src.kind == kind
                 || (src.kind == SpaceKind::Extended
                     && kind == SpaceKind::Paper);
-            for rec in &src.records {
+            // the source ran on different capacities iff its stamp's
+            // geometry differs from hw's; that both triggers the
+            // validity audit and scales the per-source record budget
+            let cross_capacity = src
+                .target
+                .as_ref()
+                .is_some_and(|t| !t.same_capacities(&hw_meta));
+            let budget = if cross_capacity {
+                ((src.len() as f64 * hw_sim).ceil() as usize)
+                    .clamp(1, src.len())
+            } else {
+                src.len()
+            };
+            // deterministic stride subsample over the WHOLE log: logs
+            // are chronological, so a prefix-take would keep only the
+            // random-warmup records and always drop the model-guided
+            // tail — exactly the highest-quality labels. With
+            // `budget == len` this is the identity walk (same-target
+            // transfer is unchanged record-for-record).
+            for k in 0..budget {
                 if warm.len() >= max_records {
                     break;
                 }
+                let rec = &src.records[k * src.len() / budget];
                 let mut r = rec.clone();
                 r.visible = kind.visible_features(&r.schedule);
                 if projectable
@@ -588,6 +681,19 @@ impl TransferDb {
                     r.hidden.truncate(features::hidden_len(kind));
                 } else {
                     r.hidden.clear(); // trains P/V only
+                }
+                // capacity audit (see the method docs): a "valid" label
+                // minted on different hardware only survives if the
+                // config can at least ideally fit the target's buffers
+                if cross_capacity && r.outcome.is_valid() {
+                    let a = crate::compiler::passes::analyze(
+                        hw, layer, &r.schedule,
+                    );
+                    if !crate::compiler::validity::static_check(hw, &a)
+                        .is_plausible()
+                    {
+                        r.outcome = Outcome::Crash;
+                    }
                 }
                 if let Outcome::Valid { cycles } = r.outcome {
                     let scaled = (cycles as f64 * ratio).round().max(1.0);
@@ -781,7 +887,8 @@ mod tests {
         let mut store = TransferDb::new();
         store.add(src);
         let warm =
-            store.warm_start_for(&pw5, SpaceKind::Paper, 100).unwrap();
+            store.warm_start_for(&pw5, SpaceKind::Paper,
+                                 &VtaConfig::zcu102(), 100).unwrap();
         assert_eq!(warm.layer, "pw5");
         assert_eq!(warm.len(), 2);
         assert_eq!(warm.records[0].outcome,
@@ -806,7 +913,8 @@ mod tests {
             store.add(db);
         }
         let warm =
-            store.warm_start_for(&pw5, SpaceKind::Paper, 7).unwrap();
+            store.warm_start_for(&pw5, SpaceKind::Paper,
+                                 &VtaConfig::zcu102(), 7).unwrap();
         assert_eq!(warm.len(), 7, "cap respected");
         // most similar source (pw4) first: its 5 records lead
         assert!(warm.records[..5]
@@ -831,7 +939,8 @@ mod tests {
         let mut store = TransferDb::new();
         store.add(src);
         let warm =
-            store.warm_start_for(&pw5, SpaceKind::Paper, 10).unwrap();
+            store.warm_start_for(&pw5, SpaceKind::Paper,
+                                 &VtaConfig::zcu102(), 10).unwrap();
         assert_eq!(warm.len(), 1);
         assert!(warm.records[0].hidden.is_empty());
         let (xa, _) = warm.train_a();
@@ -852,7 +961,8 @@ mod tests {
         let mut store = TransferDb::new();
         store.add(paper_src);
         let warm = store
-            .warm_start_for(&pw5, SpaceKind::Extended, 10)
+            .warm_start_for(&pw5, SpaceKind::Extended,
+                            &VtaConfig::zcu102(), 10)
             .unwrap();
         assert_eq!(warm.kind, SpaceKind::Extended);
         let r = &warm.records[0];
@@ -876,12 +986,176 @@ mod tests {
         let mut store2 = TransferDb::new();
         store2.add(ext_src);
         let warm2 = store2
-            .warm_start_for(&pw5, SpaceKind::Paper, 10)
+            .warm_start_for(&pw5, SpaceKind::Paper,
+                            &VtaConfig::zcu102(), 10)
             .unwrap();
         let r2 = &warm2.records[0];
         assert_eq!(r2.visible.len(), SpaceKind::Paper.n_visible());
         assert_eq!(r2.hidden.len(),
                    features::hidden_len(SpaceKind::Paper));
         assert_eq!(r2.hidden[3], 3.0, "prefix preserved");
+    }
+
+    #[test]
+    fn target_stamp_round_trips_and_legacy_logs_have_none() {
+        let layer = crate::workloads::resnet18::layer("conv3").unwrap();
+        let mut db = Database::for_layer_on(&layer, SpaceKind::Paper,
+                                            &VtaConfig::zcu104());
+        db.push(rec(0, Outcome::Valid { cycles: 42 }));
+        let text = db.to_json().to_string_pretty();
+        assert!(text.contains("\"zcu104\""), "{text}");
+        let back = Database::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.target,
+                   Some(TargetMeta::of(&VtaConfig::zcu104())));
+        // pre-registry logs (no stamp) still load, with None
+        let mut legacy = Database::for_layer(&layer);
+        legacy.push(rec(0, Outcome::Valid { cycles: 42 }));
+        let back2 =
+            Database::from_json(&legacy.to_json()).unwrap();
+        assert_eq!(back2.target, None);
+    }
+
+    #[test]
+    fn cross_target_transfer_audits_valid_labels_against_capacity() {
+        // conv1 (56×56×64, 3×3): tile_h = 28, tile_w = 28, tic = 64 has
+        // an input halo of 30·30·4 = 3600 vectors — statically fine on
+        // the zcu102 (4096) but impossible on edge-small (1024). A
+        // source log minted on the zcu102 that labels it valid must NOT
+        // hand edge-small's model V a "valid" there.
+        let conv1 = crate::workloads::resnet18::layer("conv1").unwrap();
+        let edge = VtaConfig::edge_small();
+        let big = Schedule { tile_h: 28, tile_w: 28, tile_oc: 16,
+                             tile_ic: 64, n_vthreads: 1,
+                             ..Default::default() };
+        let small = Schedule { tile_h: 4, tile_w: 4, tile_oc: 16,
+                               tile_ic: 64, n_vthreads: 1,
+                               ..Default::default() };
+        let src_of = |i: usize, s: Schedule| {
+            let mut src = Database::for_layer_on(
+                &conv1, SpaceKind::Paper, &VtaConfig::zcu102(),
+            );
+            src.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: SpaceKind::Paper.visible_features(&s),
+                hidden: vec![1.0;
+                             features::hidden_len(SpaceKind::Paper)],
+                outcome: Outcome::Valid { cycles: 1000 },
+            });
+            src
+        };
+        let mut store = TransferDb::new();
+        store.add(src_of(0, big));
+        store.add(src_of(1, small));
+        let warm = store
+            .warm_start_for(&conv1, SpaceKind::Paper, &edge, 10)
+            .unwrap();
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm.records[0].outcome, Outcome::Crash,
+                   "capacity-impossible valid label must be audited out");
+        assert_eq!(warm.records[0].valid_label(), 0.0);
+        assert!(warm.records[1].outcome.is_valid(),
+                "a config that fits edge-small transfers its label");
+        // same-capacity transfer never audits: zcu102 → zcu102 keeps
+        // the label even though the tile would overflow *edge-small*
+        let mut store2 = TransferDb::new();
+        store2.add(src_of(0, big));
+        let same = store2
+            .warm_start_for(&conv1, SpaceKind::Paper,
+                            &VtaConfig::zcu102(), 10)
+            .unwrap();
+        assert!(same.records[0].outcome.is_valid());
+    }
+
+    #[test]
+    fn cross_target_v_does_not_cross_the_veto_margin() {
+        // End-to-end version of the audit: a zcu102 source log full of
+        // valid labels whose big-tile half is impossible on edge-small.
+        // After transfer, a model V trained on the warm database alone
+        // must veto the impossible region at the default margin.
+        use crate::tuner::models::ModelV;
+        use crate::tuner::DEFAULT_V_MARGIN;
+        let conv1 = crate::workloads::resnet18::layer("conv1").unwrap();
+        let edge = VtaConfig::edge_small();
+        let mut src = Database::for_layer_on(&conv1, SpaceKind::Paper,
+                                             &VtaConfig::zcu102());
+        // th sweeps 1..=28 (tw fixed 28): inp halo = (th+2)·30·4 vecs,
+        // > 1024 — edge-small-Hopeless — exactly when th ≥ 7
+        for i in 0..480usize {
+            let th = 1 + (i % 28);
+            let s = Schedule { tile_h: th, tile_w: 28, tile_oc: 16,
+                               tile_ic: 64, n_vthreads: 1,
+                               ..Default::default() };
+            src.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: SpaceKind::Paper.visible_features(&s),
+                hidden: vec![1.0;
+                             features::hidden_len(SpaceKind::Paper)],
+                outcome: Outcome::Valid {
+                    cycles: 1_000_000 / th as u64,
+                },
+            });
+        }
+        let n_src = src.len();
+        let mut store = TransferDb::new();
+        store.add(src);
+        let warm = store
+            .warm_start_for(&conv1, SpaceKind::Paper, &edge, 400)
+            .unwrap();
+        // down-weighting: a cross-capacity source contributes at most
+        // ceil(len × hw_sim) records
+        let hw_sim = TargetMeta::of(&VtaConfig::zcu102())
+            .hw_similarity(&TargetMeta::of(&edge));
+        assert!(hw_sim < 1.0);
+        let budget = (n_src as f64 * hw_sim).ceil() as usize;
+        assert_eq!(warm.len(), budget,
+                   "cross-target records must be down-weighted");
+        // every surviving big-tile record is relabelled invalid
+        for r in &warm.records {
+            assert_eq!(r.outcome.is_valid(), r.schedule.tile_h < 7,
+                       "th={} label", r.schedule.tile_h);
+        }
+        let v = ModelV::train(&warm, 80, 1).unwrap();
+        let feats = |th: usize| {
+            let s = Schedule { tile_h: th, tile_w: 28, tile_oc: 16,
+                               tile_ic: 64, n_vthreads: 1,
+                               ..Default::default() };
+            SpaceKind::Paper.visible_features(&s)
+        };
+        assert!(!v.predict_valid(&feats(20), DEFAULT_V_MARGIN),
+                "V pre-trained past the veto margin on an impossible \
+                 config");
+        assert!(v.predict_valid(&feats(2), DEFAULT_V_MARGIN),
+                "V must still accept configs that fit the target");
+    }
+
+    #[test]
+    fn same_target_sources_lead_cross_target_ones() {
+        // two sources with the SAME layer shape: one minted on
+        // edge-small itself, one on the (distant) zcu102 — the
+        // same-target log's records must come first in the warm set
+        let conv5 = crate::workloads::resnet18::layer("conv5").unwrap();
+        let edge = VtaConfig::edge_small();
+        let mut native = Database::for_layer_on(&conv5, SpaceKind::Paper,
+                                                &edge);
+        let mut foreign = Database::for_layer_on(&conv5, SpaceKind::Paper,
+                                                 &VtaConfig::zcu102());
+        for i in 0..4 {
+            native.push(full_hidden_rec(i, Outcome::Crash));
+            foreign.push(full_hidden_rec(100 + i, Outcome::Crash));
+        }
+        let mut store = TransferDb::new();
+        store.add(foreign); // load order favours the foreign log...
+        store.add(native);
+        let warm = store
+            .warm_start_for(&conv5, SpaceKind::Paper, &edge, 100)
+            .unwrap();
+        assert!(warm.records[..4]
+                    .iter()
+                    .all(|r| r.space_index < 100),
+                "...but hardware distance must rank the native log \
+                 first");
     }
 }

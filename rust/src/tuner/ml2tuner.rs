@@ -87,7 +87,8 @@ impl Tuner for Ml2Tuner {
         let cfg = &self.cfg;
         let mut rng = Rng::new(cfg.seed ^ salt::ML2);
         let mut space = env.space.clone();
-        let mut db = Database::for_layer_in(&env.layer, env.kind());
+        let mut db =
+            Database::for_layer_on(&env.layer, env.kind(), env.hw());
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
@@ -294,7 +295,7 @@ mod tests {
         let warm = store
             .warm_start_for(&e.layer,
                             crate::compiler::schedule::SpaceKind::Paper,
-                            100)
+                            e.hw(), 100)
             .unwrap();
         let cfg = TunerConfig { max_trials: 30, seed: 3,
                                 ..Default::default() };

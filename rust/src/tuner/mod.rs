@@ -155,6 +155,12 @@ impl TuningEnv {
         self.space.kind()
     }
 
+    /// The hardware target this environment profiles on (compiler and
+    /// simulator always share one config).
+    pub fn hw(&self) -> &crate::vta::config::VtaConfig {
+        &self.compiler.cfg
+    }
+
     /// "Run on hardware": compile, execute on the simulator, classify the
     /// outcome (paper §2 Profiling & Training).
     ///

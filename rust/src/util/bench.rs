@@ -146,6 +146,57 @@ impl Bench {
         self.results.push(result);
     }
 
+    /// Machine-readable sink for CI bench-regression tracking: when the
+    /// `ML2_BENCH_JSON` env var names a file, append one JSON object per
+    /// result (`{"suite", "name", "iters", "median_ns", "mean_ns"}`,
+    /// newline-delimited). Appending is what lets the sequential `cargo
+    /// bench` binaries share one file; `scripts/bench_report.py` folds
+    /// the lines into `BENCH_<pr>.json` and diffs the medians against
+    /// the committed `BENCH_baseline.json`. A no-op without the env var,
+    /// and never fatal — benches must not fail on a read-only FS.
+    pub fn maybe_write_json(&self, suite: &str) {
+        let Ok(path) = std::env::var("ML2_BENCH_JSON") else {
+            return;
+        };
+        if path.is_empty() {
+            return;
+        }
+        self.write_json_to(suite, path.as_ref());
+    }
+
+    /// The env-var-free body of [`Bench::maybe_write_json`] (also what
+    /// tests exercise — mutating the process environment under the
+    /// multi-threaded test harness is a getenv/setenv race).
+    pub fn write_json_to(&self, suite: &str, path: &std::path::Path) {
+        let mut lines = String::new();
+        for r in &self.results {
+            let mut o = crate::util::json::Json::obj();
+            o.set("suite", suite)
+                .set("name", r.name.as_str())
+                .set("iters", r.iters)
+                .set("median_ns", r.median.as_nanos() as u64)
+                .set("mean_ns", r.mean.as_nanos() as u64);
+            lines.push_str(&o.to_string());
+            lines.push('\n');
+        }
+        use std::io::Write;
+        match std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            Ok(mut f) => {
+                if let Err(e) = f.write_all(lines.as_bytes()) {
+                    eprintln!("ML2_BENCH_JSON: write to {path:?} \
+                               failed: {e}");
+                }
+            }
+            Err(e) => {
+                eprintln!("ML2_BENCH_JSON: cannot open {path:?}: {e}")
+            }
+        }
+    }
+
     /// Final summary block (also returned for EXPERIMENTS.md capture).
     pub fn summary(&self) -> String {
         let mut s = String::from("\n== bench summary ==\n");
@@ -181,6 +232,41 @@ mod tests {
         let mut b = Bench::with_budget(0.02);
         b.run_items("items", 1000.0, || std::hint::black_box(3 * 7));
         assert!(b.results[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_sink_appends_one_line_per_result() {
+        use crate::util::json::Json;
+        // write_json_to is the env-free body of maybe_write_json; the
+        // test drives it directly rather than racing set_var against
+        // the multi-threaded test harness
+        let path = std::env::temp_dir().join("ml2tuner_bench_json_test");
+        std::fs::remove_file(&path).ok();
+        let mut b = Bench::with_budget(0.02);
+        let work = || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        };
+        b.run("first", work);
+        b.run("second", work);
+        b.write_json_to("suite_a", &path);
+        b.write_json_to("suite_b", &path); // appends, never truncates
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            assert!(j.get("median_ns").and_then(Json::as_i64).unwrap()
+                    > 0);
+            assert!(j.get("suite").and_then(Json::as_str).is_some());
+        }
+        assert!(lines[0].contains("suite_a"));
+        assert!(lines[3].contains("suite_b"));
     }
 
     #[test]

@@ -1,16 +1,24 @@
-//! Extended-VTA hardware parameters — paper Appendix A.1, Table 1.
+//! Extended-VTA hardware parameters — paper Appendix A.1, Table 1, plus
+//! the wider design-point family served by the
+//! [`crate::vta::targets`] registry.
 //!
 //! The paper adapted TVM's ZCU104 preset for the ZCU102 by bumping the four
 //! buffer-size attributes by one (log2) step; those exact values are the
-//! defaults here. The timing coefficients parameterize the cycle model in
-//! [`crate::vta::timing`] (they are our calibration of a 100 MHz VTA design
-//! with a DDR4 DMA engine, not Table 1 values — see DESIGN.md).
+//! defaults here. [`VtaConfig::zcu102`]/[`VtaConfig::zcu104`] are the two
+//! Table-1 design points; [`VtaConfig::edge_small`] and
+//! [`VtaConfig::hiband`] extend the family toward the capacity extremes
+//! (all four are routed by name through `vta::targets` and the CLI's
+//! `--target` flag). The timing coefficients parameterize the cycle model
+//! in [`crate::vta::timing`] (they are our calibration of a 100 MHz VTA
+//! design with a DDR4 DMA engine, not Table 1 values — see DESIGN.md).
 
 /// Table 1 + cycle-model coefficients.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VtaConfig {
-    /// `TARGET` — TVM device target string.
-    pub target: &'static str,
+    /// `TARGET` — device target name (a registry key; owned so targets
+    /// defined outside the built-in table — e.g. file-loaded custom
+    /// design points — need no static string).
+    pub target: String,
     /// `HW_VER` — VTA hardware version.
     pub hw_ver: &'static str,
     /// `LOG_INP_WIDTH` = 3 → int8 inputs.
@@ -67,7 +75,7 @@ impl VtaConfig {
     /// The extended-VTA ZCU102 configuration of paper Table 1.
     pub fn zcu102() -> Self {
         VtaConfig {
-            target: "zcu102",
+            target: "zcu102".to_string(),
             hw_ver: "0.0.1",
             log_inp_width: 3,
             log_wgt_width: 3,
@@ -95,12 +103,65 @@ impl VtaConfig {
     /// ablations to show capacity pressure shifts the invalidity structure.
     pub fn zcu104() -> Self {
         VtaConfig {
-            target: "zcu104",
+            target: "zcu104".to_string(),
             log_uop_buff_size: 15,
             log_inp_buff_size: 15,
             log_wgt_buff_size: 18,
             log_acc_buff_size: 17,
             ..Self::zcu102()
+        }
+    }
+
+    /// Edge design point: one more log2 step down on *all* buffers from
+    /// the ZCU104 preset, on a narrower/slower DMA engine. Shrinks every
+    /// scratchpad to a quarter of the ZCU102's — the invalid-config
+    /// boundary moves far into regions that are comfortably valid on the
+    /// board targets, which is what makes it a non-degenerate transfer
+    /// stressor.
+    pub fn edge_small() -> Self {
+        VtaConfig {
+            target: "edge-small".to_string(),
+            log_uop_buff_size: 14,
+            log_inp_buff_size: 14,
+            log_wgt_buff_size: 17,
+            log_acc_buff_size: 16,
+            dma_latency: 192,
+            dma_bytes_per_cycle: 8,
+            ..Self::zcu102()
+        }
+    }
+
+    /// High-bandwidth design point: ZCU102 buffers with a doubled DMA
+    /// stream width, lower DMA setup latency, and a doubled micro-op
+    /// buffer — compute-bound where the board targets are DMA-bound, and
+    /// with uop headroom that un-binds the kernel-unroll primitive's
+    /// tightest constraint.
+    pub fn hiband() -> Self {
+        VtaConfig {
+            target: "hiband".to_string(),
+            log_uop_buff_size: 17,
+            dma_latency: 96,
+            dma_bytes_per_cycle: 32,
+            ..Self::zcu102()
+        }
+    }
+
+    /// The fields that shape the *lowered program* (and hence the hidden
+    /// features extracted from it). Two targets with equal signatures
+    /// compile any (layer, schedule) pair to the byte-identical kernel,
+    /// which is what lets the engine's compile cache be shared across
+    /// such targets in a fleet run.
+    pub fn codegen_sig(&self) -> CodegenSig {
+        CodegenSig {
+            log_inp_width: self.log_inp_width,
+            log_wgt_width: self.log_wgt_width,
+            log_acc_width: self.log_acc_width,
+            log_batch: self.log_batch,
+            log_block: self.log_block,
+            log_inp_buff_size: self.log_inp_buff_size,
+            log_wgt_buff_size: self.log_wgt_buff_size,
+            log_acc_buff_size: self.log_acc_buff_size,
+            shift: self.shift,
         }
     }
 
@@ -165,6 +226,28 @@ impl VtaConfig {
     }
 }
 
+/// Compile-shaping subset of [`VtaConfig`] (see
+/// [`VtaConfig::codegen_sig`]): data widths and block/batch geometry fix
+/// the tensorization, the INP/WGT/ACC buffer sizes fix the per-thread
+/// scratchpad slices codegen addresses by, and `shift` is baked into the
+/// requantizing store path. The uop-buffer size and every timing
+/// coefficient are deliberately *absent* — lowering emits the uop table
+/// unconditionally (overflow is a runtime register error the per-target
+/// simulator and static check see), and DMA/clock parameters only exist
+/// in the cycle model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CodegenSig {
+    pub log_inp_width: u32,
+    pub log_wgt_width: u32,
+    pub log_acc_width: u32,
+    pub log_batch: u32,
+    pub log_block: u32,
+    pub log_inp_buff_size: u32,
+    pub log_wgt_buff_size: u32,
+    pub log_acc_buff_size: u32,
+    pub shift: u32,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +275,36 @@ mod tests {
         assert_eq!(b.wgt_capacity() * 2, a.wgt_capacity());
         assert_eq!(b.acc_capacity() * 2, a.acc_capacity());
         assert_eq!(b.uop_capacity() * 2, a.uop_capacity());
+    }
+
+    #[test]
+    fn edge_small_is_quarter_sized_and_narrow() {
+        let a = VtaConfig::zcu102();
+        let e = VtaConfig::edge_small();
+        assert_eq!(e.inp_capacity() * 4, a.inp_capacity());
+        assert_eq!(e.wgt_capacity() * 4, a.wgt_capacity());
+        assert_eq!(e.acc_capacity() * 4, a.acc_capacity());
+        assert_eq!(e.uop_capacity() * 4, a.uop_capacity());
+        assert_eq!(e.dma_bytes_per_cycle * 2, a.dma_bytes_per_cycle);
+        assert_eq!(e.block(), a.block(), "GEMM geometry is shared");
+    }
+
+    #[test]
+    fn hiband_differs_only_off_the_codegen_path() {
+        let a = VtaConfig::zcu102();
+        let h = VtaConfig::hiband();
+        assert_eq!(h.codegen_sig(), a.codegen_sig(),
+                   "hiband must share zcu102 lowering (fleet cache reuse)");
+        assert_eq!(h.uop_capacity(), 2 * a.uop_capacity());
+        assert_eq!(h.dma_bytes_per_cycle, 2 * a.dma_bytes_per_cycle);
+    }
+
+    #[test]
+    fn codegen_sig_separates_buffer_families() {
+        assert_ne!(VtaConfig::zcu102().codegen_sig(),
+                   VtaConfig::zcu104().codegen_sig());
+        assert_ne!(VtaConfig::zcu104().codegen_sig(),
+                   VtaConfig::edge_small().codegen_sig());
     }
 
     #[test]

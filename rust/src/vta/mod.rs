@@ -6,6 +6,10 @@
 //!
 //! * [`config`] — the Table 1 hardware parameters (buffer sizes, block
 //!   geometry, data widths) plus the timing coefficients of the cycle model.
+//! * [`targets`] — the name → config registry (`--target`): the Table-1
+//!   design points plus the edge-small/hiband capacity variants, and the
+//!   [`targets::TargetMeta`] stamp tuning logs carry for cross-target
+//!   transfer.
 //! * [`isa`] — the instruction stream the backend compiler emits: 2-D DMA
 //!   loads/stores, memsets, uop-programmed GEMM with two hardware loops, the
 //!   requantizing ALU, and the 4 dependency-token flags VTA uses to overlap
@@ -31,6 +35,7 @@ pub mod config;
 pub mod functional;
 pub mod isa;
 pub mod layout;
+pub mod targets;
 pub mod timing;
 
 use config::VtaConfig;

@@ -1,0 +1,215 @@
+//! Hardware target registry — name → [`VtaConfig`], the hardware axis of
+//! the tuning problem.
+//!
+//! The paper's premise is that the *hardware* shapes both landscapes the
+//! multi-level models learn: the extended-VTA ZCU102 and TVM's stock
+//! ZCU104 preset differ only in buffer capacities, and that alone moves
+//! the invalid-config boundary (§A.1/§A.2). The registry makes the
+//! target a first-class, name-routed axis — like `--network` for
+//! workloads and `--space` for knob sets — so `tune`, `tune-net`,
+//! `simulate`, the experiment harnesses, and the fleet scheduler
+//! ([`crate::engine::FleetTuner`]) all select hardware the same way.
+//!
+//! [`TargetMeta`] is the capacity-defining subset of a config that gets
+//! stamped into tuning logs (the hardware analogue of
+//! [`crate::tuner::database::LayerMeta`]): it is what lets
+//! [`crate::tuner::database::TransferDb`] compute a hardware distance
+//! between a stored log and a new run and down-weight cross-target
+//! transfer accordingly (cf. the HW-Aware Initialization and MetaTune
+//! lines in PAPERS.md).
+
+use super::config::VtaConfig;
+use crate::util::json::Json;
+
+/// Registered target names: the paper's default first, then the other
+/// design points. Listing order is presentational only — the order
+/// [`crate::engine::FleetTuner`] visits targets in is derived from the
+/// configs' capacities ([`capacity_score`]), not from this array.
+pub const TARGET_NAMES: [&str; 4] =
+    ["zcu102", "zcu104", "edge-small", "hiband"];
+
+/// Look up a registered target by name.
+pub fn target(name: &str) -> Option<VtaConfig> {
+    match name {
+        "zcu102" => Some(VtaConfig::zcu102()),
+        "zcu104" => Some(VtaConfig::zcu104()),
+        "edge-small" => Some(VtaConfig::edge_small()),
+        "hiband" => Some(VtaConfig::hiband()),
+        _ => None,
+    }
+}
+
+/// All registered targets, in [`TARGET_NAMES`] order.
+pub fn all() -> Vec<VtaConfig> {
+    TARGET_NAMES.iter().map(|n| target(n).unwrap()).collect()
+}
+
+/// Capacity-ordering key: total scratchpad log-size first, DMA width as
+/// the tiebreak (a lexicographic tuple, not a packed scalar — packing
+/// would silently misorder a future custom target with a huge DMA
+/// width). The fleet scheduler tunes the smallest target first so its
+/// (cheap, conservative) logs seed the bigger targets' warm starts.
+pub fn capacity_score(cfg: &VtaConfig) -> (u64, u64) {
+    let logs = (cfg.log_inp_buff_size
+        + cfg.log_wgt_buff_size
+        + cfg.log_acc_buff_size
+        + cfg.log_uop_buff_size) as u64;
+    (logs, cfg.dma_bytes_per_cycle)
+}
+
+/// The capacity-defining fields of a target, as persisted in tuning logs
+/// (`"target"` object) and consumed by the transfer store's hardware
+/// distance. Mirrors the [`VtaConfig`] fields that move the validity
+/// boundary (buffer log-sizes, block/batch geometry) plus the DMA stream
+/// width (the dominant throughput knob of the cycle model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TargetMeta {
+    pub name: String,
+    pub log_uop_buff_size: u32,
+    pub log_inp_buff_size: u32,
+    pub log_wgt_buff_size: u32,
+    pub log_acc_buff_size: u32,
+    pub log_batch: u32,
+    pub log_block: u32,
+    pub dma_bytes_per_cycle: u64,
+}
+
+impl TargetMeta {
+    pub fn of(cfg: &VtaConfig) -> TargetMeta {
+        TargetMeta {
+            name: cfg.target.clone(),
+            log_uop_buff_size: cfg.log_uop_buff_size,
+            log_inp_buff_size: cfg.log_inp_buff_size,
+            log_wgt_buff_size: cfg.log_wgt_buff_size,
+            log_acc_buff_size: cfg.log_acc_buff_size,
+            log_batch: cfg.log_batch,
+            log_block: cfg.log_block,
+            dma_bytes_per_cycle: cfg.dma_bytes_per_cycle,
+        }
+    }
+
+    /// Log-space capacity signature (the name is identity, not
+    /// geometry, and stays out).
+    fn signature(&self) -> [f64; 7] {
+        [
+            self.log_inp_buff_size as f64,
+            self.log_wgt_buff_size as f64,
+            self.log_acc_buff_size as f64,
+            self.log_uop_buff_size as f64,
+            self.log_batch as f64,
+            self.log_block as f64,
+            (self.dma_bytes_per_cycle.max(1) as f64).log2(),
+        ]
+    }
+
+    /// Hardware similarity in `(0, 1]`: 1 for capacity-identical
+    /// targets, decaying with the Euclidean distance between log-space
+    /// capacity signatures (one log2 step on every buffer — the
+    /// zcu102↔zcu104 gap — lands at 1/3). Same decay shape as
+    /// [`crate::tuner::database::LayerMeta::similarity`], so the two
+    /// distances compose multiplicatively in the transfer store.
+    pub fn hw_similarity(&self, other: &TargetMeta) -> f64 {
+        let (a, b) = (self.signature(), other.signature());
+        let d2: f64 =
+            a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        1.0 / (1.0 + d2.sqrt())
+    }
+
+    /// Same capacity fields (names may differ — equality of geometry is
+    /// what decides whether a transferred validity label needs the
+    /// capacity audit).
+    pub fn same_capacities(&self, other: &TargetMeta) -> bool {
+        self.signature() == other.signature()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("log_uop_buff_size", self.log_uop_buff_size as usize)
+            .set("log_inp_buff_size", self.log_inp_buff_size as usize)
+            .set("log_wgt_buff_size", self.log_wgt_buff_size as usize)
+            .set("log_acc_buff_size", self.log_acc_buff_size as usize)
+            .set("log_batch", self.log_batch as usize)
+            .set("log_block", self.log_block as usize)
+            .set("dma_bytes_per_cycle", self.dma_bytes_per_cycle);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<TargetMeta> {
+        let geti = |k: &str| {
+            j.get(k).and_then(Json::as_usize).map(|v| v as u32)
+        };
+        Some(TargetMeta {
+            name: j.get("name").and_then(Json::as_str)?.to_string(),
+            log_uop_buff_size: geti("log_uop_buff_size")?,
+            log_inp_buff_size: geti("log_inp_buff_size")?,
+            log_wgt_buff_size: geti("log_wgt_buff_size")?,
+            log_acc_buff_size: geti("log_acc_buff_size")?,
+            log_batch: geti("log_batch")?,
+            log_block: geti("log_block")?,
+            dma_bytes_per_cycle: j
+                .get("dma_bytes_per_cycle")
+                .and_then(Json::as_i64)? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_listed_name() {
+        for name in TARGET_NAMES {
+            let cfg = target(name).unwrap_or_else(|| {
+                panic!("registered target '{name}' must resolve")
+            });
+            assert_eq!(cfg.target, name);
+        }
+        assert!(target("zcu999").is_none());
+        assert_eq!(all().len(), TARGET_NAMES.len());
+    }
+
+    #[test]
+    fn capacity_score_orders_small_to_large() {
+        let score = |n: &str| capacity_score(&target(n).unwrap());
+        assert!(score("edge-small") < score("zcu104"));
+        assert!(score("zcu104") < score("zcu102"));
+        assert!(score("zcu102") < score("hiband"));
+    }
+
+    #[test]
+    fn hw_similarity_identity_and_ordering() {
+        let m = |n: &str| TargetMeta::of(&target(n).unwrap());
+        let z102 = m("zcu102");
+        assert_eq!(z102.hw_similarity(&z102), 1.0);
+        // one log2 step on all four buffers: dist 2 → 1/3 exactly
+        let s104 = z102.hw_similarity(&m("zcu104"));
+        assert!((s104 - 1.0 / 3.0).abs() < 1e-12);
+        // edge-small is two steps + a DMA halving away: strictly farther
+        assert!(z102.hw_similarity(&m("edge-small")) < s104);
+        // hiband shares every buffer but uop: closer than zcu104
+        assert!(z102.hw_similarity(&m("hiband")) > s104);
+    }
+
+    #[test]
+    fn same_capacities_ignores_name() {
+        let a = TargetMeta::of(&target("zcu102").unwrap());
+        let mut b = a.clone();
+        b.name = "custom-clone".to_string();
+        assert!(a.same_capacities(&b));
+        assert_ne!(a, b, "PartialEq still sees the name");
+        let c = TargetMeta::of(&target("zcu104").unwrap());
+        assert!(!a.same_capacities(&c));
+    }
+
+    #[test]
+    fn target_meta_json_round_trip() {
+        for name in TARGET_NAMES {
+            let meta = TargetMeta::of(&target(name).unwrap());
+            let back = TargetMeta::from_json(&meta.to_json()).unwrap();
+            assert_eq!(back, meta);
+        }
+        assert!(TargetMeta::from_json(&Json::obj()).is_none());
+    }
+}

@@ -216,7 +216,8 @@ fn transfer_crosses_space_versions_end_to_end() {
     let mut store = TransferDb::new();
     store.add(log);
     let warm = store
-        .warm_start_for(&pw5, SpaceKind::Extended, 100)
+        .warm_start_for(&pw5, SpaceKind::Extended, &VtaConfig::zcu102(),
+                        100)
         .expect("paper logs must transfer into extended runs");
     assert_eq!(warm.kind, SpaceKind::Extended);
     assert!(warm

@@ -89,7 +89,9 @@ fn warm_start_flows_through_the_network_scheduler() {
     let pw4 = net.layer("pw4").unwrap();
     let mut store = TransferDb::new();
     store.add(profiled_log(&pw5, 80));
-    assert!(store.warm_start_for(&pw4, SpaceKind::Paper, 200).is_some(),
+    assert!(store
+        .warm_start_for(&pw4, SpaceKind::Paper, &VtaConfig::zcu102(), 200)
+        .is_some(),
             "pw5 must be a transfer source for pw4");
     let cfg = NetworkConfig {
         tuner: TunerKind::Ml2,
@@ -117,8 +119,9 @@ fn warm_started_tuner_is_jobs_invariant() {
     let pw4 = net.layer("pw4").unwrap();
     let mut store = TransferDb::new();
     store.add(profiled_log(&pw4, 60));
-    let warm =
-        store.warm_start_for(&pw5, SpaceKind::Paper, 100).unwrap();
+    let warm = store
+        .warm_start_for(&pw5, SpaceKind::Paper, &VtaConfig::zcu102(), 100)
+        .unwrap();
     let env = TuningEnv::new(VtaConfig::zcu102(), pw5);
     let cfg = TunerConfig { max_trials: 30, seed: 11,
                             ..TunerConfig::default() };

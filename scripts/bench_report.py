@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Fold the benches' ML2_BENCH_JSON line stream into one machine-readable
+medians file and (optionally) diff it against a committed baseline.
+
+Usage (what CI's bench-regression job runs):
+
+    ML2_BENCH_JSON=$PWD/bench_raw.jsonl cargo bench \
+        --bench engine_bench --bench vta_sim_bench
+    python3 scripts/bench_report.py --raw bench_raw.jsonl \
+        --out BENCH_4.json --baseline BENCH_baseline.json
+
+Exit codes: 0 clean (or baseline still bootstrap-empty), 1 when any
+shared benchmark's median regressed more than --threshold. The CI job is
+advisory (continue-on-error), so a red result annotates the run without
+blocking the merge — but the uploaded BENCH_*.json is what you promote
+to BENCH_baseline.json to move the committed trajectory forward.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fold(raw_path):
+    """JSONL → {"suite/name": {median_ns, mean_ns, iters}} (last write
+    wins if a bench ran twice)."""
+    benches = {}
+    with open(raw_path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            key = f"{rec['suite']}/{rec['name']}"
+            benches[key] = {
+                "median_ns": int(rec["median_ns"]),
+                "mean_ns": int(rec["mean_ns"]),
+                "iters": int(rec["iters"]),
+            }
+    return benches
+
+
+def compare(current, baseline, threshold):
+    """Return (regressions, improvements, compared) on shared keys."""
+    regressions, improvements, compared = [], [], 0
+    for key, cur in sorted(current.items()):
+        base = baseline.get(key)
+        if base is None or not base.get("median_ns"):
+            continue
+        compared += 1
+        rel = cur["median_ns"] / base["median_ns"] - 1.0
+        if rel > threshold:
+            regressions.append((key, rel, base["median_ns"],
+                                cur["median_ns"]))
+        elif rel < -threshold:
+            improvements.append((key, rel))
+    return regressions, improvements, compared
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--raw", required=True,
+                    help="ML2_BENCH_JSON line file written by the benches")
+    ap.add_argument("--out", required=True,
+                    help="folded medians JSON to write (the CI artifact)")
+    ap.add_argument("--baseline",
+                    help="committed BENCH_baseline.json to diff against")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative median regression that fails "
+                         "(default 0.20)")
+    args = ap.parse_args()
+
+    benches = fold(args.raw)
+    if not benches:
+        print(f"error: no bench records in {args.raw}", file=sys.stderr)
+        return 1
+    out = {"schema": 1, "benches": benches}
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}: {len(benches)} benchmark medians")
+
+    if not args.baseline:
+        return 0
+    try:
+        with open(args.baseline, encoding="utf-8") as f:
+            baseline = json.load(f).get("benches", {})
+    except FileNotFoundError:
+        print(f"note: no baseline at {args.baseline}; skipping "
+              "comparison")
+        return 0
+    if not baseline:
+        print(f"note: {args.baseline} has no measured entries yet "
+              "(bootstrap); promote this run's artifact to start the "
+              "trajectory")
+        return 0
+
+    regs, imps, compared = compare(benches, baseline, args.threshold)
+    print(f"compared {compared} benchmarks against {args.baseline} "
+          f"(threshold {args.threshold:.0%})")
+    for key, rel in imps:
+        print(f"  improved  {key}: {rel:+.1%}")
+    for key, rel, base_ns, cur_ns in regs:
+        print(f"  REGRESSED {key}: {rel:+.1%} "
+              f"({base_ns} ns -> {cur_ns} ns median)")
+    if regs:
+        print(f"{len(regs)} median regression(s) beyond the threshold")
+        return 1
+    print("no median regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
