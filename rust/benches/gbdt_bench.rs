@@ -1,7 +1,9 @@
 //! GBDT substrate benchmarks: training + batched prediction throughput
 //! (the explorer scores the entire space every tuning round — predict
 //! throughput is the L3 hot path, see EXPERIMENTS.md §Perf).
-use ml2tuner::gbdt::{Booster, Dataset, GbdtParams, Objective};
+use ml2tuner::gbdt::{
+    Booster, Dataset, FeatureMatrix, GbdtParams, Objective,
+};
 use ml2tuner::util::bench::Bench;
 use ml2tuner::util::rng::Rng;
 
@@ -58,6 +60,15 @@ fn main() {
             acc += model.predict_row_f32(row);
         }
         acc
+    });
+    // flattened SoA batch kernel (PR 5): trees-outer/rows-inner over a
+    // row-major matrix, bit-identical outputs
+    let flat = model.flatten();
+    let matrix = FeatureMatrix::from_rows(&space);
+    let mut out: Vec<f64> = Vec::new();
+    b.run_items("predict 20k rows (flat batch)", 20_000.0, || {
+        flat.predict_batch_into(&matrix, &mut out);
+        out.last().copied()
     });
     print!("{}", b.summary());
     b.maybe_write_json("gbdt_bench");

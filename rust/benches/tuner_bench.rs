@@ -1,12 +1,101 @@
 //! Tuning-loop benchmarks: full trials/second per tuner — the end-to-end
-//! rate every experiment (fig2a/fig5/headline) is built on.
+//! rate every experiment (fig2a/fig5/headline) is built on — plus the
+//! PR-5 scoring-sweep bench: decode+score a 400k-candidate extended
+//! space through the legacy row-at-a-time path (frozen here as the
+//! reference) vs the flattened batched sweep at `--jobs` 1 and 4. See
+//! EXPERIMENTS.md §Performance methodology for how these rows feed
+//! `BENCH_5.json` and the regression gate.
+use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::tuner::database::{Database, Outcome, TrialRecord};
+use ml2tuner::tuner::explorer::score_candidates;
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::models::{ModelP, ModelV};
 use ml2tuner::tuner::random_baseline::RandomTuner;
+use ml2tuner::tuner::space::SearchSpace;
 use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::util::bench::Bench;
 use ml2tuner::vta::config::VtaConfig;
-use ml2tuner::workloads::resnet18;
+use ml2tuner::workloads::{self, resnet18};
+
+/// The ISSUE-5 headline numbers: decode+score ≥400k extended-space
+/// candidates. Models are trained on a synthetic labelling (no
+/// profiling in the setup), then the same candidate list is scored by
+/// (a) the frozen pre-flattening reference — one fresh `Vec<f64>` and
+/// two pointer-chasing per-row walks per candidate, one core — and
+/// (b) the batched flattened sweep at jobs=1 and jobs=4.
+fn scoring_sweep(b: &mut Bench) {
+    // vgg16/conv2_2 extended: 737,280 points — comfortably over the
+    // 400k sweep this bench pins
+    let layer = workloads::network("vgg16")
+        .unwrap()
+        .layer("conv2_2")
+        .unwrap();
+    let space = SearchSpace::with_kind(&layer, SpaceKind::Extended);
+    assert!(space.len() >= 400_000, "bench layer shrank: {}", space.len());
+    let mut db = Database::new("conv2_2");
+    let stride = space.len() / 512;
+    for k in 0..512usize {
+        let i = k * stride;
+        let s = space.schedule(i);
+        let valid = s.tile_h * s.n_vthreads <= 28;
+        let cycles = (1_000_000 / (s.tile_h * s.tile_w)
+            + 5_000 * s.n_vthreads) as u64;
+        db.push(TrialRecord {
+            space_index: i,
+            schedule: s,
+            visible: space.visible(i),
+            hidden: vec![],
+            outcome: if valid {
+                Outcome::Valid { cycles }
+            } else {
+                Outcome::Crash
+            },
+        });
+    }
+    let p = ModelP::train(&db, 60, 1).unwrap();
+    let v = ModelV::train(&db, 60, 1).unwrap();
+    let idx: Vec<usize> = (0..400_000).collect();
+    let n = idx.len() as f64;
+    b.run_items("scoring-sweep legacy row-at-a-time", n, || {
+        // frozen reference: what Explorer::select did before PR 5
+        let mut acc = 0.0f64;
+        for &i in &idx {
+            let feats = space.visible(i);
+            let tie = -v.margin(&feats);
+            acc += p.predict(&feats) + tie;
+        }
+        acc
+    });
+    for jobs in [1usize, 4] {
+        b.run_items(&format!("scoring-sweep flat jobs={jobs}"), n, || {
+            score_candidates(&space, &p, Some(&v), &idx, jobs)
+        });
+    }
+}
+
+/// Median-over-median speedups of the sweep rows (the ratios the PR-5
+/// acceptance gate reads off BENCH_5.json).
+fn print_sweep_speedups(b: &Bench) {
+    let median = |name: &str| {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median.as_secs_f64())
+    };
+    let Some(legacy) = median("scoring-sweep legacy row-at-a-time") else {
+        return;
+    };
+    for jobs in [1usize, 4] {
+        if let Some(flat) = median(&format!("scoring-sweep flat jobs={jobs}"))
+        {
+            println!(
+                "scoring-sweep speedup vs legacy at jobs={jobs}: {:.2}x",
+                legacy / flat
+            );
+        }
+    }
+}
 
 fn main() {
     let mut b = Bench::with_budget(3.0);
@@ -29,6 +118,8 @@ fn main() {
                     trials as f64,
                     || RandomTuner::new(cfgs()).tune(&env));
     }
+    scoring_sweep(&mut b);
     print!("{}", b.summary());
+    print_sweep_speedups(&b);
     b.maybe_write_json("tuner_bench");
 }

@@ -114,6 +114,22 @@ impl Default for Schedule {
 }
 
 impl Schedule {
+    /// All knob values in [`ALL_KNOB_NAMES`] order. [`FeatureGen`]
+    /// resolves knob names to indices of this array once, so the
+    /// scoring sweep never does per-candidate string lookups.
+    #[inline]
+    pub fn knob_values(&self) -> [f64; 7] {
+        [
+            self.tile_h as f64,
+            self.tile_w as f64,
+            self.tile_oc as f64,
+            self.tile_ic as f64,
+            self.n_vthreads as f64,
+            self.n_load_slots as f64,
+            self.k_unroll as f64,
+        ]
+    }
+
     /// Read a knob value by name (`None` for names outside the universe).
     pub fn knob(&self, name: &str) -> Option<usize> {
         match name {
@@ -282,6 +298,55 @@ impl SpaceKind {
     }
 }
 
+// ------------------------------------------------------------ featuregen --
+
+/// Precompiled visible-feature generator: the declarative registry of
+/// [`SpaceKind::feature_terms`] resolved once into indices of
+/// [`Schedule::knob_values`], so the explorer's scoring sweep fills
+/// feature rows with no per-candidate name lookups or allocations.
+/// [`FeatureGen::fill`] is bit-identical to
+/// [`SpaceKind::visible_features`] (same term order, same f64 product
+/// order).
+#[derive(Clone, Debug)]
+pub struct FeatureGen {
+    /// Per feature: knob indices whose values are multiplied.
+    terms: Vec<Vec<usize>>,
+}
+
+impl FeatureGen {
+    pub fn new(kind: SpaceKind) -> FeatureGen {
+        let terms = kind
+            .feature_terms()
+            .iter()
+            .map(|term| {
+                term.iter()
+                    .map(|name| {
+                        ALL_KNOB_NAMES
+                            .iter()
+                            .position(|n| n == name)
+                            .expect("registry knob")
+                    })
+                    .collect()
+            })
+            .collect();
+        FeatureGen { terms }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Fill `out` (cleared first) with the visible features of `s`.
+    pub fn fill(&self, s: &Schedule, out: &mut Vec<f64>) {
+        let vals = s.knob_values();
+        out.clear();
+        out.reserve(self.terms.len());
+        for term in &self.terms {
+            out.push(term.iter().map(|&k| vals[k]).product());
+        }
+    }
+}
+
 // ----------------------------------------------------------- config space --
 
 /// One named tuning knob: an ordered candidate-value list.
@@ -310,6 +375,8 @@ pub struct ConfigSpace {
     kind: SpaceKind,
     knobs: Vec<Knob>,
     len: usize,
+    /// Precompiled visible-feature generator for this kind.
+    features: FeatureGen,
 }
 
 impl ConfigSpace {
@@ -319,7 +386,7 @@ impl ConfigSpace {
             .map(|k| k.values.len())
             .try_fold(1usize, usize::checked_mul)
             .expect("config space size overflows usize");
-        ConfigSpace { kind, knobs, len }
+        ConfigSpace { kind, knobs, len, features: FeatureGen::new(kind) }
     }
 
     pub fn kind(&self) -> SpaceKind {
@@ -374,11 +441,16 @@ impl ConfigSpace {
 
     /// Materialize the `i`-th configuration as a resolved [`Schedule`]
     /// (knobs outside this space keep their paper defaults).
+    /// Allocation-free: decodes the mixed-radix digits straight into
+    /// the schedule instead of materializing a [`Config`] first —
+    /// same digits, same values as [`ConfigSpace::nth`].
     pub fn schedule(&self, i: usize) -> Schedule {
-        let c = self.nth(i);
+        assert!(i < self.len, "index {i} out of range ({})", self.len);
+        let mut r = i;
         let mut s = Schedule::default();
-        for (knob, &v) in self.knobs.iter().zip(&c.values) {
-            s.set_knob(knob.name, v);
+        for knob in self.knobs.iter().rev() {
+            s.set_knob(knob.name, knob.values[r % knob.values.len()]);
+            r /= knob.values.len();
         }
         s
     }
@@ -404,7 +476,23 @@ impl ConfigSpace {
 
     /// Visible feature vector of the `i`-th configuration.
     pub fn visible(&self, i: usize) -> Vec<f64> {
-        self.kind.visible_features(&self.schedule(i))
+        let mut out = Vec::new();
+        self.visible_into(i, &mut out);
+        out
+    }
+
+    /// Fill `out` (cleared first) with the visible features of the
+    /// `i`-th configuration — the allocation-free variant of
+    /// [`ConfigSpace::visible`] the scoring sweep uses (bit-identical
+    /// values).
+    pub fn visible_into(&self, i: usize, out: &mut Vec<f64>) {
+        self.features.fill(&self.schedule(i), out);
+    }
+
+    /// Visible-feature count (the row width of a scoring sweep's
+    /// feature matrix).
+    pub fn n_visible(&self) -> usize {
+        self.features.n_features()
     }
 }
 
@@ -605,6 +693,37 @@ mod tests {
             SpaceKind::Paper.visible_features(&a),
             SpaceKind::Paper.visible_features(&b)
         );
+    }
+
+    #[test]
+    fn featuregen_and_direct_decode_match_the_registry_paths() {
+        // the hot-path decode (`schedule`, `visible_into`) must be
+        // bit-identical to the declarative paths (`nth` + set_knob,
+        // `SpaceKind::visible_features`) on both kinds
+        let l = resnet18::layer("conv3").unwrap();
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let space = space_for(&l, kind);
+            let fgen = FeatureGen::new(kind);
+            assert_eq!(fgen.n_features(), kind.n_visible());
+            let mut buf = Vec::new();
+            for i in (0..space.len()).step_by(97) {
+                // nth-based reference decode
+                let c = space.nth(i);
+                let mut want = Schedule::default();
+                for (knob, &v) in space.knobs().iter().zip(&c.values) {
+                    want.set_knob(knob.name, v);
+                }
+                let got = space.schedule(i);
+                assert_eq!(got, want, "{kind:?} index {i}");
+                let feats = kind.visible_features(&got);
+                fgen.fill(&got, &mut buf);
+                assert_eq!(buf, feats, "{kind:?} index {i}");
+                space.visible_into(i, &mut buf);
+                assert_eq!(buf, feats, "{kind:?} index {i}");
+                assert_eq!(space.visible(i), feats, "{kind:?} index {i}");
+            }
+            assert_eq!(space.n_visible(), kind.n_visible());
+        }
     }
 
     #[test]

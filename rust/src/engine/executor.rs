@@ -8,8 +8,7 @@
 //! candidate selection and model training stay on the caller's thread —
 //! only the embarrassingly parallel compile+check hot path fans out.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use super::cache::{
     CachedCompile, CompileCache, DEFAULT_MAX_ENTRIES,
@@ -19,6 +18,7 @@ use crate::tuner::database::{Database, TrialRecord};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{outcome_of, TuningEnv};
+use crate::util::par::par_map;
 
 /// Worker count when `--jobs` is not given: all available cores.
 pub fn default_jobs() -> usize {
@@ -169,44 +169,6 @@ impl Engine {
     }
 }
 
-/// Order-preserving parallel map over `0..n` on `jobs` scoped threads.
-///
-/// Work is distributed dynamically (atomic cursor), results land in
-/// per-index slots — output order equals input order by construction, so
-/// callers see deterministic results for any worker count. Falls back to
-/// a plain sequential map when a pool cannot help (`jobs ≤ 1` or `n ≤ 1`).
-pub(crate) fn par_map<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    if jobs <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let workers = jobs.min(n);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner().unwrap().expect("worker filled every slot")
-        })
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,20 +178,6 @@ mod tests {
     fn env() -> TuningEnv {
         TuningEnv::new(VtaConfig::zcu102(),
                        resnet18::layer("conv5").unwrap())
-    }
-
-    #[test]
-    fn par_map_preserves_order() {
-        for jobs in [1, 2, 4, 9] {
-            let out = par_map(jobs, 100, |i| i * i);
-            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
-        }
-    }
-
-    #[test]
-    fn par_map_empty_and_single() {
-        assert_eq!(par_map(4, 0, |i| i), Vec::<usize>::new());
-        assert_eq!(par_map(4, 1, |i| i + 7), vec![7]);
     }
 
     #[test]

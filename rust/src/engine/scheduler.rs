@@ -175,7 +175,7 @@ impl LayerSession {
                 }
                 TunerKind::Tvm => tvm_baseline::select_batch(
                     &self.cfg, &self.space, &self.db, &mut self.rng,
-                    self.round, take,
+                    self.round, take, engine.jobs(),
                 ),
                 TunerKind::Ml2 => ml2tuner::select_batch(
                     &self.cfg, true, true, &self.env, engine,

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use super::{data, ExpConfig};
 use crate::gbdt::booster::{binary_accuracy, pairwise_accuracy};
-use crate::gbdt::{Booster, Dataset, GbdtParams, Objective};
+use crate::gbdt::{Booster, Dataset, FeatureMatrix, GbdtParams, Objective};
 use crate::tuner::database::TrialRecord;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
@@ -98,7 +98,9 @@ pub fn run(cfg: &ExpConfig) -> String {
                 &params,
                 &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
             );
-            let preds = b.predict(&s.xs_te);
+            let preds = b
+                .flatten()
+                .predict_batch(&FeatureMatrix::from_rows(&s.xs_te));
             // ranking accuracy: correct pairwise ordering (note rank
             // objective maximizes score for FAST configs, i.e. inverse
             // ordering of the log-cycles label)
@@ -132,7 +134,9 @@ pub fn run(cfg: &ExpConfig) -> String {
                 &params,
                 &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
             );
-            let preds = b.predict(&s.xs_te);
+            let preds = b
+                .flatten()
+                .predict_batch(&FeatureMatrix::from_rows(&s.xs_te));
             accs.push(binary_accuracy(obj, &preds, &s.ys_te) * 100.0);
         }
         t.row(&[

@@ -1,6 +1,7 @@
 //! Gradient boosting driver + evaluation metrics.
 
 use super::dataset::{BinnedDataset, Dataset};
+use super::flat::FlatEnsemble;
 use super::objective::Objective;
 use super::params::GbdtParams;
 use super::tree::{grow, GrowCfg, Tree};
@@ -76,9 +77,11 @@ impl Booster {
             };
             let tree = grow(&binned, &grad, &hess, &rows, &feats,
                             &grow_cfg);
-            for i in 0..data.n_rows {
-                preds[i] += tree.predict_row(data.row(i));
-            }
+            // margin update through the flattened single-tree layout
+            // (same per-row adds, SoA traversal)
+            FlatEnsemble::from_trees(data.n_features, 0.0,
+                                     std::slice::from_ref(&tree))
+                .accumulate_dataset(data, &mut preds);
             trees.push(tree);
         }
         Booster {
@@ -104,16 +107,13 @@ impl Booster {
         s
     }
 
-    /// Raw scores for many rows.
-    pub fn predict(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        rows.iter().map(|r| self.predict_row(r)).collect()
-    }
-
-    /// Probability/transformed output (sigmoid for logistic).
-    pub fn predict_transformed(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        rows.iter()
-            .map(|r| self.params.objective.transform(self.predict_row(r)))
-            .collect()
+    /// Flatten into the SoA inference layout. Batched predictions over
+    /// a [`crate::gbdt::FeatureMatrix`] are bit-identical to
+    /// [`Booster::predict_row`]; this replaced the old
+    /// `predict(&[Vec<f64>])` row-of-Vecs path.
+    pub fn flatten(&self) -> FlatEnsemble {
+        FlatEnsemble::from_trees(self.n_features, self.base_score,
+                                 &self.trees)
     }
 
     /// Binary decision using the objective's raw-score threshold.
@@ -187,7 +187,14 @@ pub fn binary_accuracy(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gbdt::dataset::FeatureMatrix;
     use crate::util::stats;
+
+    /// Batched predictions via the flattened layout (the replacement
+    /// for the removed `Booster::predict(&[Vec<f64>])`).
+    fn predict_all(b: &Booster, rows: &[Vec<f64>]) -> Vec<f64> {
+        b.flatten().predict_batch(&FeatureMatrix::from_rows(rows))
+    }
 
     fn synth_regression(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
         let mut r = Rng::new(seed);
@@ -214,7 +221,7 @@ mod tests {
         };
         let b = Booster::train(&p, &d);
         let (test_rows, test_labels) = synth_regression(200, 2);
-        let preds = b.predict(&test_rows);
+        let preds = predict_all(&b, &test_rows);
         let rmse = stats::rmse(&preds, &test_labels);
         let spread = stats::std_dev(&test_labels);
         assert!(rmse < 0.25 * spread, "rmse={rmse}, spread={spread}");
@@ -239,11 +246,14 @@ mod tests {
             ..Default::default()
         };
         let b = Booster::train(&p, &d);
-        let preds = b.predict(&rows);
+        let preds = predict_all(&b, &rows);
         let acc = binary_accuracy(Objective::Logistic, &preds, &labels);
         assert!(acc > 0.95, "acc={acc}");
-        // transformed outputs are probabilities
-        let probs = b.predict_transformed(&rows);
+        // transformed raw scores are probabilities
+        let probs: Vec<f64> = preds
+            .iter()
+            .map(|&p| b.params.objective.transform(p))
+            .collect();
         assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
     }
 
@@ -264,7 +274,7 @@ mod tests {
             ..Default::default()
         };
         let b = Booster::train(&p, &d);
-        let preds = b.predict(&rows);
+        let preds = predict_all(&b, &rows);
         let acc = binary_accuracy(Objective::Hinge, &preds, &labels);
         assert!(acc > 0.97, "acc={acc}");
     }
@@ -286,7 +296,7 @@ mod tests {
             ..Default::default()
         };
         let b = Booster::train(&p, &d);
-        let preds = b.predict(&rows);
+        let preds = predict_all(&b, &rows);
         let acc = pairwise_accuracy(&preds, &labels);
         assert!(acc > 0.9, "pairwise acc={acc}");
     }
@@ -305,7 +315,7 @@ mod tests {
             ..Default::default()
         };
         let b = Booster::train(&p, &d);
-        let preds = b.predict(&rows);
+        let preds = predict_all(&b, &rows);
         let acc = pairwise_accuracy(&preds, &labels);
         assert!(acc > 0.93, "acc={acc}");
     }
@@ -334,7 +344,25 @@ mod tests {
                              ..Default::default() };
         let a = Booster::train(&p, &d);
         let b = Booster::train(&p, &d);
-        assert_eq!(a.predict(&rows), b.predict(&rows));
+        assert_eq!(predict_all(&a, &rows), predict_all(&b, &rows));
+    }
+
+    #[test]
+    fn flattened_batch_matches_per_row_bitwise() {
+        let (rows, labels) = synth_regression(300, 21);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams {
+            boost_rounds: 60,
+            max_depth: 5,
+            learning_rate: 0.2,
+            ..Default::default()
+        };
+        let b = Booster::train(&p, &d);
+        let batch = predict_all(&b, &rows);
+        assert_eq!(batch.len(), rows.len());
+        for (r, &s) in rows.iter().zip(&batch) {
+            assert_eq!(b.predict_row(r).to_bits(), s.to_bits());
+        }
     }
 
     #[test]

@@ -1,4 +1,87 @@
-//! Tabular dataset + quantile binning for histogram split finding.
+//! Tabular dataset + quantile binning for histogram split finding, and
+//! the reusable [`FeatureMatrix`] input buffer of the batched inference
+//! path.
+
+/// Row-major f32 feature matrix *without* labels — the input buffer of
+/// [`crate::gbdt::FlatEnsemble`]'s batched prediction kernel.
+///
+/// Rows are appended (f64 rows are narrowed per element exactly like
+/// [`crate::gbdt::Booster::predict_row`] always did) and the backing
+/// storage survives [`FeatureMatrix::clear`], so a scoring sweep fills
+/// one allocation per chunk instead of one `Vec<f64>` per candidate.
+#[derive(Clone, Debug)]
+pub struct FeatureMatrix {
+    n_features: usize,
+    values: Vec<f32>,
+}
+
+impl FeatureMatrix {
+    pub fn new(n_features: usize) -> FeatureMatrix {
+        FeatureMatrix { n_features, values: Vec::new() }
+    }
+
+    /// Preallocate room for `rows` rows.
+    pub fn with_capacity(n_features: usize, rows: usize) -> FeatureMatrix {
+        FeatureMatrix {
+            n_features,
+            values: Vec::with_capacity(n_features * rows),
+        }
+    }
+
+    /// Build from f64 rows (test/experiment convenience; the hot paths
+    /// fill a reused matrix incrementally instead).
+    pub fn from_rows(rows: &[Vec<f64>]) -> FeatureMatrix {
+        let nf = rows.first().map_or(0, |r| r.len());
+        let mut m = FeatureMatrix::with_capacity(nf, rows.len());
+        for r in rows {
+            m.push_row_f64(r);
+        }
+        m
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_rows(&self) -> usize {
+        if self.n_features == 0 {
+            0
+        } else {
+            self.values.len() / self.n_features
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Drop all rows, keeping the backing allocation.
+    pub fn clear(&mut self) {
+        self.values.clear();
+    }
+
+    /// Append one row, narrowing each value to f32.
+    pub fn push_row_f64(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.n_features, "row width");
+        self.values.extend(row.iter().map(|&v| v as f32));
+    }
+
+    /// Append one f32 row.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.n_features, "row width");
+        self.values.extend_from_slice(row);
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// The raw row-major storage (the batch kernel iterates this).
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+}
 
 /// Row-major float feature matrix with labels.
 #[derive(Clone, Debug, Default)]
@@ -180,6 +263,32 @@ mod tests {
         let b = BinnedDataset::bin(&d, 256);
         assert_eq!(b.n_bins(0), 1);
         assert!(b.feature_bins(0).iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn feature_matrix_push_row_and_clear() {
+        let mut m = FeatureMatrix::new(3);
+        assert!(m.is_empty());
+        assert_eq!(m.n_rows(), 0);
+        m.push_row_f64(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.row(1), &[4.0f32, 5.0, 6.0]);
+        assert_eq!(m.values().len(), 6);
+        m.clear();
+        assert!(m.is_empty());
+        m.push_row_f64(&[7.0, 8.0, 9.0]);
+        assert_eq!(m.n_rows(), 1);
+        assert_eq!(m.row(0), &[7.0f32, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn feature_matrix_narrows_exactly_like_predict_row() {
+        // the f64 → f32 narrowing must match `row as f32` per element
+        let rows = vec![vec![0.1f64, 1e9 + 1.0]];
+        let m = FeatureMatrix::from_rows(&rows);
+        assert_eq!(m.row(0)[0].to_bits(), (0.1f64 as f32).to_bits());
+        assert_eq!(m.row(0)[1].to_bits(), ((1e9f64 + 1.0) as f32).to_bits());
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Flattened ensemble — the cache-friendly inference layout of a trained
+//! booster.
+//!
+//! [`crate::gbdt::tree::Tree`] stores an array-of-structs `Vec<Node>` per
+//! tree; walking it row-at-a-time loads a 40-byte node to read ~10 bytes
+//! and re-streams every tree's nodes once *per row*. [`FlatEnsemble`]
+//! concatenates all trees into structure-of-arrays node storage
+//! (`feature[]` / `threshold[]` / `left[]` / `right[]` / leaf `value[]`,
+//! children addressed by global index) and predicts trees-outer /
+//! rows-inner over a row-major [`FeatureMatrix`], so each tree's small,
+//! hot node arrays stream once over the whole batch.
+//!
+//! Scores accumulate in f64 in the exact order of
+//! [`crate::gbdt::Booster::predict_row`] (base score, then trees in
+//! boosting order), so batched outputs are **bit-identical** to the
+//! per-row path — the explorer's golden traces cannot move
+//! (`tests/flat_inference.rs` pins this across spaces, targets and
+//! objectives).
+
+use super::dataset::{Dataset, FeatureMatrix};
+use super::tree::Tree;
+
+/// An immutable SoA copy of a trained ensemble, built once per trained
+/// model ([`crate::gbdt::Booster::flatten`]).
+#[derive(Clone, Debug, Default)]
+pub struct FlatEnsemble {
+    n_features: usize,
+    base_score: f64,
+    /// Split feature per node; `u32::MAX` marks a leaf.
+    feature: Vec<u32>,
+    /// Split threshold per node (`x <= threshold` goes left).
+    threshold: Vec<f32>,
+    /// Global child indices (leaves: 0, unused).
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Leaf value per node (internal nodes: 0.0).
+    value: Vec<f64>,
+    /// Root node index of each tree, boosting order.
+    roots: Vec<u32>,
+}
+
+impl FlatEnsemble {
+    /// Flatten `trees` (each non-empty) over `n_features`-wide rows.
+    pub fn from_trees(
+        n_features: usize,
+        base_score: f64,
+        trees: &[Tree],
+    ) -> FlatEnsemble {
+        let total: usize = trees.iter().map(|t| t.nodes.len()).sum();
+        let mut f = FlatEnsemble {
+            n_features,
+            base_score,
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            roots: Vec::with_capacity(trees.len()),
+        };
+        for t in trees {
+            assert!(!t.nodes.is_empty(), "cannot flatten an empty tree");
+            let off = f.feature.len() as u32;
+            f.roots.push(off);
+            for n in &t.nodes {
+                f.feature.push(n.feature);
+                f.threshold.push(n.threshold);
+                // leaves keep 0 children; internal nodes rebase to
+                // global indices
+                f.left.push(if n.is_leaf() { 0 } else { n.left + off });
+                f.right.push(if n.is_leaf() { 0 } else { n.right + off });
+                f.value.push(n.value);
+            }
+        }
+        f
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn base_score(&self) -> f64 {
+        self.base_score
+    }
+
+    /// Walk one tree for one row.
+    #[inline]
+    fn leaf_value(&self, root: usize, row: &[f32]) -> f64 {
+        let mut i = root;
+        loop {
+            let f = self.feature[i];
+            if f == u32::MAX {
+                return self.value[i];
+            }
+            i = if row[f as usize] <= self.threshold[i] {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
+    }
+
+    /// Raw score of one f32 row — bit-identical to
+    /// [`crate::gbdt::Booster::predict_row_f32`] (same f64 accumulation
+    /// order).
+    pub fn predict_row(&self, row: &[f32]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut s = self.base_score;
+        for &root in &self.roots {
+            s += self.leaf_value(root as usize, row);
+        }
+        s
+    }
+
+    /// Core batched kernel: trees outer, rows inner, adding each tree's
+    /// leaf into `out` on top of whatever is there (`values` is
+    /// `out.len()` rows of `n_features` f32s, row-major).
+    fn accumulate(&self, values: &[f32], out: &mut [f64]) {
+        if out.is_empty() {
+            return;
+        }
+        let nf = self.n_features;
+        debug_assert_eq!(values.len(), out.len() * nf);
+        if nf == 0 {
+            // degenerate zero-feature data: every tree is a stump
+            for &root in &self.roots {
+                let v = self.value[root as usize];
+                for s in out.iter_mut() {
+                    *s += v;
+                }
+            }
+            return;
+        }
+        for &root in &self.roots {
+            let root = root as usize;
+            for (row, s) in values.chunks_exact(nf).zip(out.iter_mut()) {
+                *s += self.leaf_value(root, row);
+            }
+        }
+    }
+
+    /// Batched raw scores over a feature matrix, written into `out`
+    /// (cleared and resized to the row count). Per row this is
+    /// bit-identical to [`FlatEnsemble::predict_row`] — only the loop
+    /// nest is transposed.
+    pub fn predict_batch_into(
+        &self,
+        m: &FeatureMatrix,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(m.n_features(), self.n_features, "feature width");
+        out.clear();
+        out.resize(m.n_rows(), self.base_score);
+        self.accumulate(m.values(), out);
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`FlatEnsemble::predict_batch_into`].
+    pub fn predict_batch(&self, m: &FeatureMatrix) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.predict_batch_into(m, &mut out);
+        out
+    }
+
+    /// Add this ensemble's tree contributions (no base score) to `out`
+    /// over a dataset — the training-time margin-update path of
+    /// [`crate::gbdt::Booster::train_grouped`].
+    pub fn accumulate_dataset(&self, data: &Dataset, out: &mut [f64]) {
+        assert_eq!(data.n_rows, out.len(), "row count");
+        assert_eq!(data.n_features, self.n_features, "feature width");
+        self.accumulate(&data.values, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::tree::Node;
+
+    /// Hand-built two-level tree: x0 <= 1.0 ? (x1 <= 5.0 ? 1.0 : 2.0) : 3.0
+    fn small_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node { feature: 0, threshold: 1.0, left: 1, right: 2,
+                       value: 0.0, gain: 1.0 },
+                Node { feature: 1, threshold: 5.0, left: 3, right: 4,
+                       value: 0.0, gain: 1.0 },
+                Node::leaf(3.0),
+                Node::leaf(1.0),
+                Node::leaf(2.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn flatten_rebases_children_across_trees() {
+        let t = small_tree();
+        let flat = FlatEnsemble::from_trees(2, 0.5, &[t.clone(), t]);
+        assert_eq!(flat.n_trees(), 2);
+        // both trees agree with the AoS walk; the ensemble sums them
+        for row in [[0.0f32, 0.0], [0.0, 9.0], [2.0, 0.0]] {
+            let one = small_tree().predict_row(&row);
+            assert_eq!(flat.predict_row(&row).to_bits(),
+                       (0.5 + one + one).to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_matches_row_bitwise() {
+        let flat = FlatEnsemble::from_trees(2, -1.25, &[small_tree()]);
+        let rows: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![(i % 3) as f64, (i % 7) as f64])
+            .collect();
+        let m = FeatureMatrix::from_rows(&rows);
+        let batch = flat.predict_batch(&m);
+        assert_eq!(batch.len(), rows.len());
+        for (i, &s) in batch.iter().enumerate() {
+            assert_eq!(s.to_bits(), flat.predict_row(m.row(i)).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_ensemble_predicts_base_score() {
+        let flat = FlatEnsemble::from_trees(3, 2.5, &[]);
+        assert_eq!(flat.n_trees(), 0);
+        assert_eq!(flat.predict_row(&[0.0, 0.0, 0.0]), 2.5);
+        let m = FeatureMatrix::from_rows(&[vec![1.0, 2.0, 3.0]]);
+        assert_eq!(flat.predict_batch(&m), vec![2.5]);
+    }
+
+    #[test]
+    fn accumulate_dataset_adds_without_base() {
+        let flat = FlatEnsemble::from_trees(2, 100.0, &[small_tree()]);
+        let rows = vec![vec![0.0, 0.0], vec![2.0, 0.0]];
+        let d = Dataset::from_rows(&rows, &[0.0, 0.0]);
+        let mut out = vec![10.0f64; 2];
+        flat.accumulate_dataset(&d, &mut out);
+        assert_eq!(out, vec![11.0, 13.0], "base score must not leak in");
+    }
+}

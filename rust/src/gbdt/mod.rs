@@ -9,15 +9,21 @@
 //! * regularization: `max_depth`, `min_child_weight`, `gamma`, `subsample`,
 //!   `colsample_bytree`, `learning_rate`, `reg_alpha` (L1 on leaves, via
 //!   soft thresholding) and `reg_lambda` ([`params::GbdtParams`]);
-//! * gain-based feature importance for the Table 5 report.
+//! * gain-based feature importance for the Table 5 report;
+//! * a flattened SoA inference layout ([`flat::FlatEnsemble`], built by
+//!   [`Booster::flatten`]) with a batched `predict` over a reusable
+//!   row-major [`dataset::FeatureMatrix`] — the explorer's scoring-sweep
+//!   hot path; outputs are bit-identical to the per-row walk.
 
 pub mod booster;
 pub mod dataset;
+pub mod flat;
 pub mod objective;
 pub mod params;
 pub mod tree;
 
 pub use booster::Booster;
-pub use dataset::Dataset;
+pub use dataset::{Dataset, FeatureMatrix};
+pub use flat::FlatEnsemble;
 pub use objective::Objective;
 pub use params::GbdtParams;

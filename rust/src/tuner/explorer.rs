@@ -5,10 +5,22 @@
 //! candidates model V predicts invalid ("Even if Model P predicts a
 //! configuration as highly optimal, ML²Tuner avoids profiling it if Model V
 //! predicts it to be invalid", §2).
+//!
+//! The decode+score sweep is the tuner's dominant non-profiling cost (the
+//! whole space is consulted every round), so it runs batched and sharded:
+//! fixed [`SCORE_CHUNK`]-index chunks each fill one reusable
+//! [`FeatureMatrix`] (no per-candidate `Vec`), the models' flattened
+//! ensembles score each chunk in one batched walk, and chunks fan out
+//! across the engine's `--jobs` worker pool with an ordered merge — so
+//! scores, rankings, and therefore traces are **bit-identical** for any
+//! worker count and to the old row-at-a-time sweep
+//! (`tests/flat_inference.rs` pins both).
 
 use super::models::{ModelP, ModelV};
 use super::space::SearchSpace;
 use super::DEFAULT_V_MARGIN;
+use crate::gbdt::FeatureMatrix;
+use crate::util::par::par_map;
 use crate::util::rng::Rng;
 
 /// Explorer policy knobs.
@@ -16,6 +28,10 @@ pub struct Explorer {
     pub epsilon: f64,
     /// Model-V veto margin (see `TunerConfig::v_margin`).
     pub v_margin: f64,
+    /// Worker threads for the decode+score sweep (the engine's `--jobs`;
+    /// results merge in fixed chunk order, so rankings are invariant in
+    /// this value).
+    pub jobs: usize,
 }
 
 /// Per-round scoring budget: above this many unmeasured candidates the
@@ -30,13 +46,137 @@ pub struct Explorer {
 /// largest layers are subsampled.
 pub const MAX_SCORED_CANDIDATES: usize = 400_000;
 
+/// Candidates per parallel scoring chunk: large enough to amortize the
+/// chunk's feature matrix and score buffers over thousands of
+/// candidates, small enough to keep every `--jobs` worker busy on
+/// mid-size spaces.
+pub const SCORE_CHUNK: usize = 4096;
+
+/// Decode and score `candidates` against model P (and model V's margin
+/// when given): returns one `(p_score, v_margin, index)` triple per
+/// candidate, in input order. Without a V model the margin slot is 0.0.
+///
+/// This is the explorer's hot path — per fixed-size chunk it fills one
+/// reusable row-major [`FeatureMatrix`] and runs the flattened batch
+/// kernels; chunks fan out over `jobs` workers and merge back in chunk
+/// order, so the result is invariant in `jobs` and bit-identical to a
+/// sequential per-row sweep.
+pub fn score_candidates(
+    space: &SearchSpace,
+    p: &ModelP,
+    v: Option<&ModelV>,
+    candidates: &[usize],
+    jobs: usize,
+) -> Vec<(f64, f64, usize)> {
+    let chunks: Vec<&[usize]> = candidates.chunks(SCORE_CHUNK).collect();
+    let scored: Vec<Vec<(f64, f64, usize)>> =
+        par_map(jobs, chunks.len(), |c| {
+            let chunk = chunks[c];
+            let mut feats: Vec<f64> =
+                Vec::with_capacity(space.n_visible());
+            let mut m = FeatureMatrix::with_capacity(space.n_visible(),
+                                                     chunk.len());
+            for &i in chunk {
+                space.visible_into(i, &mut feats);
+                m.push_row_f64(&feats);
+            }
+            let mut scores = Vec::with_capacity(chunk.len());
+            p.predict_batch_into(&m, &mut scores);
+            let mut margins = vec![0.0f64; chunk.len()];
+            if let Some(vm) = v {
+                vm.margin_batch_into(&m, &mut margins);
+            }
+            chunk
+                .iter()
+                .zip(scores)
+                .zip(margins)
+                .map(|((&i, s), mg)| (s, mg, i))
+                .collect()
+        });
+    scored.into_iter().flatten().collect()
+}
+
+/// Incremental pool of untaken rank positions with O(log n) k-th
+/// -smallest selection and removal (a Fenwick tree over position
+/// occupancy). Replaces the ε-exploration inner loop's O(n) rebuild of
+/// the untaken-position list per hit — O(n²) over a ranking walk — while
+/// selecting exactly the same position for the same draw: `kth(j)` is
+/// the j-th untaken position in ascending order, which is what indexing
+/// the rebuilt list at `j` returned.
+struct FreePool {
+    /// 1-based Fenwick tree; `tree[i]` counts untaken positions in the
+    /// block `(i - lowbit(i), i]`.
+    tree: Vec<u32>,
+    len: usize,
+    remaining: usize,
+}
+
+impl FreePool {
+    /// All `n` positions start untaken. O(n) build.
+    fn new(n: usize) -> FreePool {
+        let mut tree = vec![0u32; n + 1];
+        for i in 1..=n {
+            tree[i] += 1;
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                tree[j] += tree[i];
+            }
+        }
+        FreePool { tree, len: n, remaining: n }
+    }
+
+    fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// The k-th (0-based) untaken position, ascending; `None` when
+    /// `k >= remaining()`.
+    fn kth(&self, k: usize) -> Option<usize> {
+        if k >= self.remaining {
+            return None;
+        }
+        let mut bit = 1usize;
+        while bit << 1 <= self.len {
+            bit <<= 1;
+        }
+        let mut pos = 0usize;
+        let mut rank = (k + 1) as u32;
+        while bit > 0 {
+            let next = pos + bit;
+            if next <= self.len && self.tree[next] < rank {
+                rank -= self.tree[next];
+                pos = next;
+            }
+            bit >>= 1;
+        }
+        Some(pos)
+    }
+
+    /// Mark the 0-based position taken (must currently be untaken).
+    fn take(&mut self, pos: usize) {
+        let mut i = pos + 1;
+        while i <= self.len {
+            self.tree[i] -= 1;
+            i += i & i.wrapping_neg();
+        }
+        self.remaining -= 1;
+    }
+}
+
 impl Explorer {
     pub fn new(epsilon: f64) -> Self {
-        Explorer { epsilon, v_margin: DEFAULT_V_MARGIN }
+        Explorer { epsilon, v_margin: DEFAULT_V_MARGIN, jobs: 1 }
     }
 
     pub fn with_v_margin(mut self, v_margin: f64) -> Self {
         self.v_margin = v_margin;
+        self
+    }
+
+    /// Shard the scoring sweep across `jobs` workers (traces are
+    /// invariant in this — see [`score_candidates`]).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
         self
     }
 
@@ -86,32 +226,35 @@ impl Explorer {
         // the "iteratively applies models P and V" of paper §2 and avoids
         // the degenerate behaviour of walking an invalid-dominated tie
         // front and harvesting exactly V's false positives.
-        let mut scored: Vec<(f64, f64, usize)> = unmeasured
-            .iter()
-            .map(|&i| {
-                let feats = space.visible(i);
-                let tie = v.map_or(0.0, |m| -m.margin(&feats));
-                (p.predict(&feats), tie, i)
-            })
-            .collect();
+        let mut scored =
+            score_candidates(space, p, v, &unmeasured, self.jobs);
         scored.sort_by(|a, b| {
-            (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap()
+            // ascending P score, then descending V margin — the same
+            // total preorder the old (score, -margin) tie key induced
+            (a.0, -a.1).partial_cmp(&(b.0, -b.1)).unwrap()
         });
-        let scored: Vec<(f64, usize)> =
-            scored.into_iter().map(|(s, _, i)| (s, i)).collect();
         let mut picked: Vec<usize> = Vec::with_capacity(count);
         let mut taken = vec![false; scored.len()];
+        let mut pool = FreePool::new(scored.len());
         let mut skipped: Vec<usize> = Vec::new(); // rank positions V vetoed
         let mut pos = 0usize;
         while picked.len() < count && pos < scored.len() {
             if rng.bool(self.epsilon) {
-                // ε-exploration: uniform random untaken candidate
-                let free: Vec<usize> = (0..scored.len())
-                    .filter(|&k| !taken[k])
-                    .collect();
-                if let Some(&k) = free.get(rng.below(free.len())) {
+                if pool.remaining() == 0 {
+                    // every rank position is already taken (possible
+                    // under a veto-all margin once the walk exhausts
+                    // the ranking): break to the fallback fills
+                    // instead of drawing from an empty pool — the old
+                    // free-list rebuild panicked (`below(0)`) here
+                    break;
+                }
+                // ε-exploration: uniform random untaken candidate (the
+                // j-th untaken rank position, via the incremental pool)
+                let j = rng.below(pool.remaining());
+                if let Some(k) = pool.kth(j) {
+                    pool.take(k);
                     taken[k] = true;
-                    picked.push(scored[k].1);
+                    picked.push(scored[k].2);
                 }
                 continue;
             }
@@ -122,11 +265,12 @@ impl Explorer {
             if pos >= scored.len() {
                 break;
             }
-            let idx = scored[pos].1;
+            let (_, margin, idx) = scored[pos];
             taken[pos] = true;
-            let vetoed = v.is_some_and(|m| {
-                !m.predict_valid(&space.visible(idx), self.v_margin)
-            });
+            pool.take(pos);
+            // the precomputed margin is exactly what predict_valid
+            // recomputed per candidate before the batched sweep
+            let vetoed = v.is_some() && margin <= self.v_margin;
             if vetoed {
                 skipped.push(pos);
             } else {
@@ -139,7 +283,7 @@ impl Explorer {
             if picked.len() >= count {
                 break;
             }
-            picked.push(scored[k].1);
+            picked.push(scored[k].2);
         }
         // still short (tiny spaces): fill with remaining ranking order
         if picked.len() < count {
@@ -149,7 +293,7 @@ impl Explorer {
                 }
                 if !taken[k] {
                     taken[k] = true;
-                    picked.push(scored[k].1);
+                    picked.push(scored[k].2);
                 }
             }
         }
@@ -265,5 +409,69 @@ mod tests {
         let e = Explorer::new(1.0);
         let picks = e.select(&space, &p, Some(&v), 15, &mut rng);
         assert_eq!(picks.len(), 15);
+    }
+
+    #[test]
+    fn selection_is_invariant_in_jobs() {
+        let (space, p, v) = trained_models();
+        let mut picks: Vec<Vec<usize>> = Vec::new();
+        for jobs in [1, 2, 8] {
+            let mut rng = Rng::new(6);
+            let e = Explorer::new(0.1).with_jobs(jobs);
+            picks.push(e.select(&space, &p, Some(&v), 25, &mut rng));
+        }
+        assert_eq!(picks[0], picks[1]);
+        assert_eq!(picks[0], picks[2]);
+    }
+
+    #[test]
+    fn score_candidates_is_jobs_invariant_and_matches_row_path() {
+        let (space, p, v) = trained_models();
+        let idx: Vec<usize> =
+            (0..space.len()).step_by(2).collect();
+        let seq = score_candidates(&space, &p, Some(&v), &idx, 1);
+        let par = score_candidates(&space, &p, Some(&v), &idx, 4);
+        assert_eq!(seq.len(), idx.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+            assert_eq!(a.2, b.2);
+        }
+        // batched sweep == the old per-row predict on a sample
+        for &(s, mg, i) in seq.iter().step_by(101) {
+            let feats = space.visible(i);
+            assert_eq!(s.to_bits(), p.predict(&feats).to_bits());
+            assert_eq!(mg.to_bits(), v.margin(&feats).to_bits());
+        }
+    }
+
+    #[test]
+    fn free_pool_matches_naive_untaken_list() {
+        let mut pool = FreePool::new(13);
+        let mut taken = vec![false; 13];
+        // deterministic take pattern exercising ends and middle
+        for &t in &[0usize, 12, 6, 1, 11, 5, 7] {
+            pool.take(t);
+            taken[t] = true;
+            let free: Vec<usize> =
+                (0..13).filter(|&k| !taken[k]).collect();
+            assert_eq!(pool.remaining(), free.len());
+            for (j, &want) in free.iter().enumerate() {
+                assert_eq!(pool.kth(j), Some(want), "after taking {t}");
+            }
+            assert_eq!(pool.kth(free.len()), None);
+        }
+    }
+
+    #[test]
+    fn free_pool_empty_and_exhausted() {
+        let empty = FreePool::new(0);
+        assert_eq!(empty.remaining(), 0);
+        assert_eq!(empty.kth(0), None);
+        let mut one = FreePool::new(1);
+        assert_eq!(one.kth(0), Some(0));
+        one.take(0);
+        assert_eq!(one.remaining(), 0);
+        assert_eq!(one.kth(0), None);
     }
 }

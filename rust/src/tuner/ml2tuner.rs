@@ -19,8 +19,8 @@ use super::models::{ModelA, ModelP, ModelV};
 use super::report::TuningTrace;
 use super::space::SearchSpace;
 use super::{salt, Tuner, TunerConfig, TuningEnv};
-use crate::compiler::features::combined_features;
 use crate::engine::Engine;
+use crate::gbdt::FeatureMatrix;
 use crate::util::rng::Rng;
 
 /// The multi-level tuner.
@@ -171,6 +171,7 @@ pub(crate) fn select_batch(
     let pool_n = if use_a { cfg.pool_size() } else { n };
     let pool = Explorer::new(cfg.epsilon)
         .with_v_margin(cfg.v_margin)
+        .with_jobs(engine.jobs())
         .select(space, &p, v.as_ref(), pool_n, rng);
     if use_a && pool.len() > n {
         // Compile the whole pool (batched, cached), harvest hidden
@@ -187,17 +188,23 @@ pub(crate) fn select_batch(
             None => pool.into_iter().take(n).collect(),
             Some(a) => {
                 let compiled = engine.compile_batch(env, &pool);
-                let mut scored: Vec<(f64, usize)> = pool
-                    .iter()
-                    .zip(&compiled)
-                    .map(|(&i, c)| {
-                        let feats = combined_features(
-                            &space.visible(i),
-                            &c.hidden,
-                        );
-                        (a.predict(&feats), i)
-                    })
-                    .collect();
+                // one reused buffer + one matrix for the whole pool:
+                // each row is visible ⊕ hidden, exactly what
+                // `combined_features` used to allocate per candidate
+                let width = space.n_visible()
+                    + compiled.first().map_or(0, |c| c.hidden.len());
+                let mut feats: Vec<f64> = Vec::with_capacity(width);
+                let mut m =
+                    FeatureMatrix::with_capacity(width, pool.len());
+                for (&i, c) in pool.iter().zip(&compiled) {
+                    space.visible_into(i, &mut feats);
+                    feats.extend_from_slice(&c.hidden);
+                    m.push_row_f64(&feats);
+                }
+                let mut scores = Vec::with_capacity(pool.len());
+                a.predict_batch_into(&m, &mut scores);
+                let mut scored: Vec<(f64, usize)> =
+                    scores.into_iter().zip(pool).collect();
                 // stable sort: ties keep pool (P-ranking) order
                 scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
                 scored.into_iter().take(n).map(|(_, i)| i).collect()

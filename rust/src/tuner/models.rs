@@ -10,7 +10,9 @@
 //! All three predict from raw feature vectors; P and A predict
 //! `log2(cycles)` (lower is better).
 
-use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::gbdt::{
+    Booster, Dataset, FeatureMatrix, FlatEnsemble, GbdtParams,
+};
 use crate::tuner::database::Database;
 
 /// Shared training tail: readiness guard (≥ 2 rows) + boosting.
@@ -41,6 +43,8 @@ fn warm_rows(
 /// A trained P model.
 pub struct ModelP {
     pub booster: Booster,
+    /// Flattened inference layout (bit-identical predictions).
+    flat: FlatEnsemble,
 }
 
 impl ModelP {
@@ -48,10 +52,14 @@ impl ModelP {
         GbdtParams::model_p().with_rounds(rounds).with_seed(seed)
     }
 
+    fn from_booster(booster: Booster) -> ModelP {
+        ModelP { flat: booster.flatten(), booster }
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
         let (xs, ys) = db.train_p();
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelP { booster })
+            .map(ModelP::from_booster)
     }
 
     /// Transfer warm-start variant: transferred rows first, fresh rows
@@ -64,7 +72,7 @@ impl ModelP {
     ) -> Option<ModelP> {
         let (xs, ys) = warm_rows(fresh.train_p(), warm.train_p());
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelP { booster })
+            .map(ModelP::from_booster)
     }
 
     /// TVM-approach variant: all records, invalids penalized.
@@ -75,18 +83,31 @@ impl ModelP {
     ) -> Option<ModelP> {
         let (xs, ys) = db.train_p_with_penalty();
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelP { booster })
+            .map(ModelP::from_booster)
     }
 
     /// Predicted `log2(cycles)` — lower is better.
     pub fn predict(&self, visible: &[f64]) -> f64 {
         self.booster.predict_row(visible)
     }
+
+    /// Batched predictions over a visible-feature matrix (flattened
+    /// ensemble; per row bit-identical to [`ModelP::predict`]). `out`
+    /// is cleared and resized.
+    pub fn predict_batch_into(
+        &self,
+        m: &FeatureMatrix,
+        out: &mut Vec<f64>,
+    ) {
+        self.flat.predict_batch_into(m, out);
+    }
 }
 
 /// A trained V model.
 pub struct ModelV {
     pub booster: Booster,
+    /// Flattened inference layout (bit-identical margins).
+    flat: FlatEnsemble,
 }
 
 impl ModelV {
@@ -94,12 +115,16 @@ impl ModelV {
         GbdtParams::model_v().with_rounds(rounds).with_seed(seed)
     }
 
+    fn from_booster(booster: Booster) -> ModelV {
+        ModelV { flat: booster.flatten(), booster }
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
         // degenerate labels (all same class) would still train but predict a
         // constant; that is fine — the explorer falls back gracefully.
         let (xs, ys) = db.train_v();
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelV { booster })
+            .map(ModelV::from_booster)
     }
 
     /// Transfer warm-start variant of [`ModelV::train`]: transferred
@@ -114,7 +139,7 @@ impl ModelV {
     ) -> Option<ModelV> {
         let (xs, ys) = warm_rows(fresh.train_v(), warm.train_v());
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelV { booster })
+            .map(ModelV::from_booster)
     }
 
     /// True if the model's hinge score clears `margin` — the V veto.
@@ -135,11 +160,24 @@ impl ModelV {
     pub fn margin(&self, visible: &[f64]) -> f64 {
         self.booster.predict_row(visible)
     }
+
+    /// Batched raw margins over a visible-feature matrix (per row
+    /// bit-identical to [`ModelV::margin`]). `out` is cleared and
+    /// resized.
+    pub fn margin_batch_into(
+        &self,
+        m: &FeatureMatrix,
+        out: &mut Vec<f64>,
+    ) {
+        self.flat.predict_batch_into(m, out);
+    }
 }
 
 /// A trained A model.
 pub struct ModelA {
     pub booster: Booster,
+    /// Flattened inference layout (bit-identical predictions).
+    flat: FlatEnsemble,
 }
 
 impl ModelA {
@@ -147,10 +185,14 @@ impl ModelA {
         GbdtParams::model_a().with_rounds(rounds).with_seed(seed)
     }
 
+    fn from_booster(booster: Booster) -> ModelA {
+        ModelA { flat: booster.flatten(), booster }
+    }
+
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
         let (xs, ys) = db.train_a();
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelA { booster })
+            .map(ModelA::from_booster)
     }
 
     /// Transfer warm-start variant of [`ModelA::train`]: transferred
@@ -163,12 +205,23 @@ impl ModelA {
     ) -> Option<ModelA> {
         let (xs, ys) = warm_rows(fresh.train_a(), warm.train_a());
         fit(Self::params(rounds, seed), xs, ys)
-            .map(|booster| ModelA { booster })
+            .map(ModelA::from_booster)
     }
 
     /// Predicted `log2(cycles)` from visible ⊕ hidden features.
     pub fn predict(&self, combined: &[f64]) -> f64 {
         self.booster.predict_row(combined)
+    }
+
+    /// Batched predictions over a combined (visible ⊕ hidden) feature
+    /// matrix (per row bit-identical to [`ModelA::predict`]). `out` is
+    /// cleared and resized.
+    pub fn predict_batch_into(
+        &self,
+        m: &FeatureMatrix,
+        out: &mut Vec<f64>,
+    ) {
+        self.flat.predict_batch_into(m, out);
     }
 
     /// Feature importance over the combined feature space (Table 5).
@@ -256,6 +309,42 @@ mod tests {
         assert_eq!(imp.len(), SpaceKind::Paper.n_visible() + 2);
         // the hidden features are informative (th*4 mirrors th)
         assert!(imp.iter().sum::<f64>() > 99.0);
+    }
+
+    #[test]
+    fn batch_apis_match_single_row_bitwise() {
+        use crate::gbdt::FeatureMatrix;
+        let db = synth_db(256);
+        let p = ModelP::train(&db, 60, 3).unwrap();
+        let v = ModelV::train(&db, 60, 3).unwrap();
+        let a = ModelA::train(&db, 60, 3).unwrap();
+        let rows: Vec<Vec<f64>> =
+            (1..=16).map(|th| vis(&sched(th, 1 + th % 4))).collect();
+        let m = FeatureMatrix::from_rows(&rows);
+        let mut out = Vec::new();
+        p.predict_batch_into(&m, &mut out);
+        assert_eq!(out.len(), rows.len());
+        for (r, &s) in rows.iter().zip(&out) {
+            assert_eq!(p.predict(r).to_bits(), s.to_bits());
+        }
+        v.margin_batch_into(&m, &mut out);
+        for (r, &s) in rows.iter().zip(&out) {
+            assert_eq!(v.margin(r).to_bits(), s.to_bits());
+        }
+        // A consumes visible ⊕ hidden rows
+        let arows: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|r| {
+                let mut x = r.clone();
+                x.extend_from_slice(&[3.0, 7.0]);
+                x
+            })
+            .collect();
+        let am = FeatureMatrix::from_rows(&arows);
+        a.predict_batch_into(&am, &mut out);
+        for (r, &s) in arows.iter().zip(&out) {
+            assert_eq!(a.predict(r).to_bits(), s.to_bits());
+        }
     }
 
     #[test]

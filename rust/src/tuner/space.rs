@@ -55,6 +55,19 @@ impl SearchSpace {
         self.space.visible(i)
     }
 
+    /// Fill `out` (cleared first) with the `i`-th configuration's
+    /// visible features — the allocation-free variant of
+    /// [`SearchSpace::visible`] the explorer's scoring sweep uses to
+    /// reuse one buffer per chunk (bit-identical values).
+    pub fn visible_into(&self, i: usize, out: &mut Vec<f64>) {
+        self.space.visible_into(i, out);
+    }
+
+    /// Visible-feature count (row width of a scoring-sweep matrix).
+    pub fn n_visible(&self) -> usize {
+        self.space.n_visible()
+    }
+
     pub fn config_space(&self) -> &ConfigSpace {
         &self.space
     }
@@ -149,5 +162,19 @@ mod tests {
         assert_eq!(ext.config_space().index_of_schedule(&s),
                    Some(ext.len() - 1));
         assert_eq!(ext.visible(0).len(), SpaceKind::Extended.n_visible());
+    }
+
+    #[test]
+    fn visible_into_reuses_the_buffer_and_matches_visible() {
+        let l = resnet18::layer("conv5").unwrap();
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let s = SearchSpace::with_kind(&l, kind);
+            assert_eq!(s.n_visible(), kind.n_visible());
+            let mut buf = Vec::new();
+            for i in (0..s.len()).step_by(211) {
+                s.visible_into(i, &mut buf);
+                assert_eq!(buf, s.visible(i), "{kind:?} index {i}");
+            }
+        }
     }
 }

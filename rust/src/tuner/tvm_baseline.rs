@@ -41,8 +41,8 @@ impl Tuner for TvmTuner {
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let batch =
-                select_batch(cfg, &space, &db, &mut rng, round, n);
+            let batch = select_batch(cfg, &space, &db, &mut rng, round,
+                                     n, engine.jobs());
             if batch.is_empty() {
                 break;
             }
@@ -56,6 +56,8 @@ impl Tuner for TvmTuner {
 /// One round of TVM-approach candidate selection: penalty-P top-N with
 /// ε-greedy exploration, no validity model, no hidden features. Shared
 /// by [`TvmTuner`] and the network scheduler's incremental sessions.
+/// `jobs` shards the scoring sweep (trace-invariant, see
+/// [`crate::tuner::explorer::score_candidates`]).
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
     space: &SearchSpace,
@@ -63,15 +65,16 @@ pub(crate) fn select_batch(
     rng: &mut Rng,
     round: u64,
     n: usize,
+    jobs: usize,
 ) -> Vec<usize> {
     if db.len() < cfg.min_train {
         return space.sample_unmeasured(rng, n);
     }
     match ModelP::train_tvm(db, cfg.boost_rounds, cfg.seed ^ round) {
         None => space.sample_unmeasured(rng, n),
-        Some(p) => {
-            Explorer::new(cfg.epsilon).select(space, &p, None, n, rng)
-        }
+        Some(p) => Explorer::new(cfg.epsilon)
+            .with_jobs(jobs)
+            .select(space, &p, None, n, rng),
     }
 }
 

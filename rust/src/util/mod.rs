@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

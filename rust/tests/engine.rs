@@ -39,6 +39,42 @@ fn ml2tuner_trace_is_identical_for_1_and_4_jobs() {
 }
 
 #[test]
+fn ml2tuner_trace_is_identical_for_1_2_and_8_jobs() {
+    // PR 5: `--jobs` now also shards the explorer's scoring sweep, so
+    // worker-count invariance covers candidate *selection*, not just
+    // profiling order
+    let e = env("conv3");
+    let cfg = TunerConfig { max_trials: 50, seed: 17, ..Default::default() };
+    let traces: Vec<String> = [1usize, 2, 8]
+        .iter()
+        .map(|&j| {
+            fingerprint(
+                &Ml2Tuner::new(cfg.clone())
+                    .tune_with(&e, &Engine::with_jobs(j)),
+            )
+        })
+        .collect();
+    assert_eq!(traces[0], traces[1]);
+    assert_eq!(traces[0], traces[2]);
+}
+
+#[test]
+fn extended_space_trace_is_jobs_invariant() {
+    use ml2tuner::compiler::schedule::SpaceKind;
+    // the 6x extended space exercises multi-chunk parallel sweeps
+    let e = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        resnet18::layer("conv5").unwrap(),
+        SpaceKind::Extended,
+    );
+    let cfg = TunerConfig { max_trials: 40, seed: 5, ..Default::default() };
+    let t1 = Ml2Tuner::new(cfg.clone()).tune_with(&e, &Engine::with_jobs(1));
+    let t8 = Ml2Tuner::new(cfg).tune_with(&e, &Engine::with_jobs(8));
+    assert_eq!(t1.len(), 40);
+    assert_eq!(fingerprint(&t1), fingerprint(&t8));
+}
+
+#[test]
 fn baseline_traces_are_identical_for_1_and_4_jobs() {
     let e = env("conv3");
     let cfg = TunerConfig { max_trials: 40, seed: 3, ..Default::default() };

@@ -1,0 +1,246 @@
+//! PR-5 guarantees for the flattened, batched, parallel inference path.
+//!
+//! 1. `FlatEnsemble::predict_batch` equals per-row `Booster::predict_row`
+//!    **bit-for-bit** on real profiled data across both spaces, all four
+//!    registered hardware targets, and all three model objectives — the
+//!    invariant that keeps every golden trace pinned.
+//! 2. The rewritten explorer (batched chunked sweep + incremental
+//!    ε-pool) selects exactly what the pre-PR row-at-a-time
+//!    implementation selected, for the same RNG stream — checked against
+//!    a frozen verbatim copy of the old algorithm across ε, margin,
+//!    V-present and worker-count combinations.
+//! 3. The chunked scoring sweep is invariant in `jobs`.
+
+use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
+use ml2tuner::gbdt::{Booster, Dataset, FeatureMatrix, GbdtParams, Objective};
+use ml2tuner::tuner::database::{Database, Outcome, TrialRecord};
+use ml2tuner::tuner::explorer::{score_candidates, Explorer};
+use ml2tuner::tuner::models::{ModelP, ModelV};
+use ml2tuner::tuner::space::SearchSpace;
+use ml2tuner::tuner::TuningEnv;
+use ml2tuner::util::rng::Rng;
+use ml2tuner::vta::targets;
+use ml2tuner::workloads::resnet18;
+
+// ---- 1. flat batch == per-row, bitwise --------------------------------
+
+#[test]
+fn flat_batch_equals_per_row_bitwise_across_targets_spaces_objectives() {
+    let layer = resnet18::layer("conv5").unwrap();
+    for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+        for name in targets::TARGET_NAMES {
+            let hw = targets::target(name).unwrap();
+            let env = TuningEnv::with_space(hw, layer, kind);
+            // real labels: profile a strided sample on this target
+            let step = (env.space.len() / 64).max(1);
+            let mut xs: Vec<Vec<f64>> = Vec::new();
+            let mut perf: Vec<f64> = Vec::new();
+            let mut validity: Vec<f64> = Vec::new();
+            for k in 0..64 {
+                let r = env.profile(k * step);
+                match r.outcome {
+                    Outcome::Valid { cycles } => {
+                        perf.push((cycles as f64).log2());
+                        validity.push(1.0);
+                    }
+                    _ => {
+                        perf.push(30.0);
+                        validity.push(0.0);
+                    }
+                }
+                xs.push(r.visible);
+            }
+            let m = FeatureMatrix::from_rows(&xs);
+            for obj in [
+                Objective::SquaredError,
+                Objective::Hinge,
+                Objective::RankPairwise,
+            ] {
+                let ys =
+                    if obj == Objective::Hinge { &validity } else { &perf };
+                let params = GbdtParams::model_p()
+                    .with_rounds(40)
+                    .with_objective(obj)
+                    .with_seed(7);
+                let b = Booster::train(&params,
+                                       &Dataset::from_rows(&xs, ys));
+                let batch = b.flatten().predict_batch(&m);
+                assert_eq!(batch.len(), xs.len());
+                for (row, &got) in xs.iter().zip(&batch) {
+                    assert_eq!(
+                        b.predict_row(row).to_bits(),
+                        got.to_bits(),
+                        "{kind:?}/{name}/{obj:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- 2. explorer equivalence against the frozen pre-PR algorithm ------
+
+/// Verbatim copy of the pre-PR-5 `Explorer::select` (row-at-a-time
+/// scoring, per-hit rebuild of the ε free list). Do not modernize: this
+/// is the reference the rewritten explorer must replay exactly.
+fn legacy_select(
+    space: &SearchSpace,
+    p: &ModelP,
+    v: Option<&ModelV>,
+    epsilon: f64,
+    v_margin: f64,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n_left = space.n_unmeasured();
+    if n_left <= count {
+        return space.unmeasured();
+    }
+    let unmeasured = space.unmeasured();
+    let mut scored: Vec<(f64, f64, usize)> = unmeasured
+        .iter()
+        .map(|&i| {
+            let feats = space.visible(i);
+            let tie = v.map_or(0.0, |m| -m.margin(&feats));
+            (p.predict(&feats), tie, i)
+        })
+        .collect();
+    scored.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    let scored: Vec<(f64, usize)> =
+        scored.into_iter().map(|(s, _, i)| (s, i)).collect();
+    let mut picked: Vec<usize> = Vec::with_capacity(count);
+    let mut taken = vec![false; scored.len()];
+    let mut skipped: Vec<usize> = Vec::new();
+    let mut pos = 0usize;
+    while picked.len() < count && pos < scored.len() {
+        if rng.bool(epsilon) {
+            let free: Vec<usize> =
+                (0..scored.len()).filter(|&k| !taken[k]).collect();
+            if let Some(&k) = free.get(rng.below(free.len())) {
+                taken[k] = true;
+                picked.push(scored[k].1);
+            }
+            continue;
+        }
+        while pos < scored.len() && taken[pos] {
+            pos += 1;
+        }
+        if pos >= scored.len() {
+            break;
+        }
+        let idx = scored[pos].1;
+        taken[pos] = true;
+        let vetoed = v.is_some_and(|m| {
+            !m.predict_valid(&space.visible(idx), v_margin)
+        });
+        if vetoed {
+            skipped.push(pos);
+        } else {
+            picked.push(idx);
+        }
+        pos += 1;
+    }
+    for k in skipped {
+        if picked.len() >= count {
+            break;
+        }
+        picked.push(scored[k].1);
+    }
+    if picked.len() < count {
+        for k in 0..scored.len() {
+            if picked.len() >= count {
+                break;
+            }
+            if !taken[k] {
+                taken[k] = true;
+                picked.push(scored[k].1);
+            }
+        }
+    }
+    picked
+}
+
+/// P/V trained on a synthetic labelling of the real conv5 space (same
+/// setup as the explorer's unit tests), in the given kind's feature
+/// layout.
+fn trained_models(kind: SpaceKind) -> (SearchSpace, ModelP, ModelV) {
+    let layer = resnet18::layer("conv5").unwrap();
+    let space = SearchSpace::with_kind(&layer, kind);
+    let mut db = Database::new("conv5");
+    for i in (0..space.len()).step_by(3) {
+        let s: Schedule = space.schedule(i);
+        let valid = s.tile_h * s.n_vthreads <= 28;
+        let cycles = (1_000_000 / (s.tile_h * s.tile_w)
+            + 5_000 * s.n_vthreads) as u64;
+        db.push(TrialRecord {
+            space_index: i,
+            schedule: s,
+            visible: space.visible(i),
+            hidden: vec![],
+            outcome: if valid {
+                Outcome::Valid { cycles }
+            } else {
+                Outcome::Crash
+            },
+        });
+    }
+    let p = ModelP::train(&db, 60, 1).unwrap();
+    let v = ModelV::train(&db, 60, 1).unwrap();
+    (space, p, v)
+}
+
+#[test]
+fn rewritten_explorer_replays_the_frozen_legacy_selection() {
+    let (space, p, v) = trained_models(SpaceKind::Paper);
+    for seed in [1u64, 9, 42] {
+        for epsilon in [0.0f64, 0.05, 0.3, 1.0] {
+            for (v_opt, margin) in [
+                (Some(&v), ml2tuner::tuner::DEFAULT_V_MARGIN),
+                (Some(&v), 2.0),  // veto-all: skipped-best fallback
+                (None, ml2tuner::tuner::DEFAULT_V_MARGIN),
+            ] {
+                let mut legacy_rng = Rng::new(seed);
+                let want = legacy_select(&space, &p, v_opt, epsilon,
+                                         margin, 25, &mut legacy_rng);
+                // post-selection stream position, for the lockstep check
+                let want_next = legacy_rng.next_u64();
+                for jobs in [1usize, 4] {
+                    let mut rng = Rng::new(seed);
+                    let got = Explorer::new(epsilon)
+                        .with_v_margin(margin)
+                        .with_jobs(jobs)
+                        .select(&space, &p, v_opt, 25, &mut rng);
+                    assert_eq!(
+                        got, want,
+                        "seed={seed} eps={epsilon} margin={margin} \
+                         v={} jobs={jobs}",
+                        v_opt.is_some()
+                    );
+                    // and the rng streams stayed in lockstep
+                    assert_eq!(rng.next_u64(), want_next,
+                               "rng stream diverged");
+                }
+            }
+        }
+    }
+}
+
+// ---- 3. sweep jobs-invariance on the extended space -------------------
+
+#[test]
+fn extended_space_sweep_is_jobs_invariant() {
+    let (space, p, v) = trained_models(SpaceKind::Extended);
+    // strided extended-space candidate list crossing many chunk
+    // boundaries
+    let idx: Vec<usize> = (0..space.len()).step_by(3).collect();
+    let baseline = score_candidates(&space, &p, Some(&v), &idx, 1);
+    for jobs in [2usize, 8] {
+        let par = score_candidates(&space, &p, Some(&v), &idx, jobs);
+        assert_eq!(baseline.len(), par.len());
+        for (a, b) in baseline.iter().zip(&par) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "jobs={jobs}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "jobs={jobs}");
+            assert_eq!(a.2, b.2, "jobs={jobs}");
+        }
+    }
+}

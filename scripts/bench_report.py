@@ -5,9 +5,14 @@ medians file and (optionally) diff it against a committed baseline.
 Usage (what CI's bench-regression job runs):
 
     ML2_BENCH_JSON=$PWD/bench_raw.jsonl cargo bench \
-        --bench engine_bench --bench vta_sim_bench
+        --bench engine_bench --bench vta_sim_bench --bench tuner_bench
     python3 scripts/bench_report.py --raw bench_raw.jsonl \
-        --out BENCH_4.json --baseline BENCH_baseline.json
+        --out BENCH_5.json --baseline BENCH_baseline.json
+
+Promoting a measured baseline (one command, from a downloaded
+bench-medians CI artifact):
+
+    python3 scripts/bench_report.py --update-baseline BENCH_5.json
 
 Exit codes: 0 clean (or baseline still bootstrap-empty), 1 when any
 shared benchmark's median regressed more than --threshold. The CI job is
@@ -18,6 +23,7 @@ to BENCH_baseline.json to move the committed trajectory forward.
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -57,18 +63,65 @@ def compare(current, baseline, threshold):
     return regressions, improvements, compared
 
 
+def update_baseline(artifact_path, baseline_path):
+    """Promote a downloaded BENCH_*.json artifact into the committed
+    baseline file (the one-command promotion flow; baselines must be
+    measured on the CI runner class, never a developer box)."""
+    try:
+        with open(artifact_path, encoding="utf-8") as f:
+            artifact = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"error: cannot read artifact {artifact_path}: {e}",
+              file=sys.stderr)
+        return 1
+    benches = artifact.get("benches", {})
+    if not benches:
+        print(f"error: {artifact_path} has no measured benches — "
+              "download a bench-medians artifact from a green "
+              "bench-regression run", file=sys.stderr)
+        return 1
+    out = {
+        "schema": 1,
+        "note": (
+            "Committed bench-median baseline for CI's bench-regression "
+            "job. Promoted from "
+            f"{os.path.basename(artifact_path)} via scripts/"
+            "bench_report.py --update-baseline; to move the trajectory "
+            "forward, download a newer bench-medians artifact and "
+            "re-run that command."
+        ),
+        "benches": benches,
+    }
+    with open(baseline_path, "w", encoding="utf-8") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"promoted {len(benches)} benchmark medians from "
+          f"{artifact_path} into {baseline_path}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--raw", required=True,
+    ap.add_argument("--raw",
                     help="ML2_BENCH_JSON line file written by the benches")
-    ap.add_argument("--out", required=True,
+    ap.add_argument("--out",
                     help="folded medians JSON to write (the CI artifact)")
-    ap.add_argument("--baseline",
-                    help="committed BENCH_baseline.json to diff against")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed baseline to diff against / promote "
+                         "into (default BENCH_baseline.json)")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="relative median regression that fails "
                          "(default 0.20)")
+    ap.add_argument("--update-baseline", metavar="ARTIFACT",
+                    help="promote a downloaded BENCH_*.json artifact "
+                         "into --baseline and exit")
     args = ap.parse_args()
+
+    if args.update_baseline:
+        return update_baseline(args.update_baseline, args.baseline)
+    if not args.raw or not args.out:
+        ap.error("--raw and --out are required unless --update-baseline "
+                 "is given")
 
     benches = fold(args.raw)
     if not benches:
@@ -80,8 +133,6 @@ def main():
         f.write("\n")
     print(f"wrote {args.out}: {len(benches)} benchmark medians")
 
-    if not args.baseline:
-        return 0
     try:
         with open(args.baseline, encoding="utf-8") as f:
             baseline = json.load(f).get("benches", {})
@@ -92,7 +143,7 @@ def main():
     if not baseline:
         print(f"note: {args.baseline} has no measured entries yet "
               "(bootstrap); promote this run's artifact to start the "
-              "trajectory")
+              "trajectory (scripts/bench_report.py --update-baseline)")
         return 0
 
     regs, imps, compared = compare(benches, baseline, args.threshold)
