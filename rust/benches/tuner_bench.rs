@@ -6,6 +6,7 @@
 //! EXPERIMENTS.md §Performance methodology for how these rows feed
 //! `BENCH_5.json` and the regression gate.
 use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::obs::Recorder;
 use ml2tuner::tuner::database::{Database, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::score_candidates;
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
@@ -69,9 +70,16 @@ fn scoring_sweep(b: &mut Bench) {
     });
     for jobs in [1usize, 4] {
         b.run_items(&format!("scoring-sweep flat jobs={jobs}"), n, || {
-            score_candidates(&space, &p, Some(&v), &idx, jobs)
+            score_candidates(&space, &p, Some(&v), &idx, jobs, None)
         });
     }
+    // ISSUE-6 row: the same sweep with a live telemetry recorder
+    // (span + per-chunk histogram + counters). The acceptance gate
+    // wants this within 2% of the recorder-free row.
+    let rec = Recorder::new();
+    b.run_items("scoring-sweep flat jobs=4 +telemetry", n, || {
+        score_candidates(&space, &p, Some(&v), &idx, 4, Some(&rec))
+    });
 }
 
 /// Median-over-median speedups of the sweep rows (the ratios the PR-5
@@ -94,6 +102,19 @@ fn print_sweep_speedups(b: &Bench) {
                 legacy / flat
             );
         }
+    }
+    // telemetry overhead: recorder-on vs recorder-off at jobs=4
+    // (ISSUE-6 gate: < 2%)
+    if let (Some(off), Some(on)) = (
+        median("scoring-sweep flat jobs=4"),
+        median("scoring-sweep flat jobs=4 +telemetry"),
+    ) {
+        println!(
+            "telemetry overhead at jobs=4: {:+.2}% (off {:.3}s, on {:.3}s)",
+            (on / off - 1.0) * 100.0,
+            off,
+            on
+        );
     }
 }
 

@@ -26,11 +26,11 @@
 //! is affected.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::compiler::{Compiled, Compiler};
+use crate::obs::{Counter, Recorder};
 use crate::vta::config::CodegenSig;
 use crate::workloads::ConvLayer;
 
@@ -98,8 +98,12 @@ struct Inner {
 /// hardware axis (see the `Key` comment above).
 pub struct CompileCache {
     inner: Mutex<Inner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    /// Hit/miss counters live on the shared telemetry recorder
+    /// ([`Counter::CompileCacheHit`]/[`Counter::CompileCacheMiss`]) so
+    /// one recorder owns every number a run report needs. A standalone
+    /// cache gets a private recorder; an [`super::Engine`] shares its
+    /// own (see [`CompileCache::with_recorder`]).
+    recorder: Arc<Recorder>,
     /// Entry-count bound.
     max_entries: usize,
     /// Total cached instructions+uops bound (memory proxy).
@@ -130,14 +134,25 @@ impl CompileCache {
     /// compiles, nothing is retained) — useful for one-shot sweeps that
     /// never re-profile a schedule.
     pub fn with_capacity(max_entries: usize, max_total_cost: usize) -> Self {
+        Self::with_recorder(max_entries, max_total_cost,
+                            Arc::new(Recorder::new()))
+    }
+
+    /// Like [`with_capacity`](Self::with_capacity) but counting
+    /// hits/misses on a caller-supplied recorder — how the engine shares
+    /// one recorder between its cache and its own spans.
+    pub fn with_recorder(
+        max_entries: usize,
+        max_total_cost: usize,
+        recorder: Arc<Recorder>,
+    ) -> Self {
         CompileCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 order: VecDeque::new(),
                 total_cost: 0,
             }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            recorder,
             max_entries: max_entries.max(1),
             max_total_cost,
         }
@@ -154,8 +169,8 @@ impl CompileCache {
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            hits: self.recorder.get(Counter::CompileCacheHit),
+            misses: self.recorder.get(Counter::CompileCacheMiss),
         }
     }
 
@@ -179,10 +194,10 @@ impl CompileCache {
         let key = (compiler.cfg.codegen_sig(), compiler.kind, layer.name,
                    sched);
         if let Some(hit) = self.inner.lock().unwrap().map.get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.recorder.incr(Counter::CompileCacheHit);
             return Arc::clone(hit);
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.recorder.incr(Counter::CompileCacheMiss);
         // Compile outside the lock: other workers keep hitting the cache
         // while this (comparatively expensive) lowering runs.
         let compiled = compiler.compile(layer, &sched);

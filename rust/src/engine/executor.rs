@@ -14,7 +14,8 @@ use super::cache::{
     CachedCompile, CompileCache, DEFAULT_MAX_ENTRIES,
     DEFAULT_MAX_TOTAL_COST,
 };
-use crate::tuner::database::{Database, TrialRecord};
+use crate::obs::{Counter, Recorder, Stage};
+use crate::tuner::database::{Database, Outcome, TrialRecord};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{outcome_of, TuningEnv};
@@ -57,6 +58,10 @@ impl Default for EngineConfig {
 pub struct Engine {
     pub cfg: EngineConfig,
     cache: CompileCache,
+    /// Telemetry recorder shared with the cache (and handed to the
+    /// tuning loops via [`Engine::recorder`]): stage spans, outcome
+    /// counters, and the optional `--metrics-out` event sink.
+    recorder: Arc<Recorder>,
 }
 
 impl Default for Engine {
@@ -67,9 +72,19 @@ impl Default for Engine {
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
-        let cache = CompileCache::with_capacity(cfg.max_cache_entries,
-                                                cfg.max_cache_cost);
-        Engine { cfg, cache }
+        Engine::with_recorder(cfg, Arc::new(Recorder::new()))
+    }
+
+    /// Engine recording onto a caller-supplied recorder (how the CLI
+    /// attaches one `--metrics-out` sink to a whole run). The compile
+    /// cache counts its hits/misses on the same recorder.
+    pub fn with_recorder(cfg: EngineConfig, recorder: Arc<Recorder>) -> Self {
+        let cache = CompileCache::with_recorder(
+            cfg.max_cache_entries,
+            cfg.max_cache_cost,
+            Arc::clone(&recorder),
+        );
+        Engine { cfg, cache, recorder }
     }
 
     /// Engine with `jobs` workers and default cache sizing.
@@ -91,6 +106,11 @@ impl Engine {
 
     pub fn cache(&self) -> &CompileCache {
         &self.cache
+    }
+
+    /// The engine's telemetry recorder (always present; sink optional).
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
     }
 
     /// Compile one space index through the cache.
@@ -131,6 +151,7 @@ impl Engine {
         env: &TuningEnv,
         batch: &[usize],
     ) -> Vec<TrialRecord> {
+        let _span = self.recorder.span(Stage::Profile);
         par_map(self.jobs(), batch.len(), |k| {
             self.profile_one(env, batch[k])
         })
@@ -148,6 +169,12 @@ impl Engine {
         trace: &mut TuningTrace,
     ) {
         for rec in self.profile_batch(env, batch) {
+            self.recorder.incr(Counter::TrialsProfiled);
+            self.recorder.incr(match rec.outcome {
+                Outcome::Valid { .. } => Counter::TrialsValid,
+                Outcome::Crash => Counter::TrialsCrash,
+                Outcome::WrongOutput => Counter::TrialsWrongOutput,
+            });
             space.mark_measured(rec.space_index);
             if let Some(d) = &mut db {
                 d.push(rec.clone());
@@ -163,6 +190,7 @@ impl Engine {
         env: &TuningEnv,
         batch: &[usize],
     ) -> Vec<Arc<CachedCompile>> {
+        let _span = self.recorder.span(Stage::Compile);
         par_map(self.jobs(), batch.len(), |k| {
             self.compile_one(env, batch[k])
         })

@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 
 use super::executor::Engine;
 use crate::compiler::schedule::{Schedule, SpaceKind};
+use crate::obs::{console, Stage};
 use crate::tuner::database::{Database, TransferDb};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
@@ -169,13 +170,20 @@ impl LayerSession {
                 .min(self.cfg.max_trials - self.trials())
                 .min(self.space.n_unmeasured());
             self.round += 1;
-            let batch: Vec<usize> = match self.kind {
+            let scope = engine.recorder().begin_round();
+            let before = self.trace.len();
+            let (batch, stats) = match self.kind {
                 TunerKind::Random => {
-                    self.space.sample_unmeasured(&mut self.rng, take)
+                    let _select = engine.recorder().span(Stage::Select);
+                    (self.space.sample_unmeasured(&mut self.rng, take),
+                     None)
                 }
-                TunerKind::Tvm => tvm_baseline::select_batch(
-                    &self.cfg, &self.space, &self.db, &mut self.rng,
-                    self.round, take, engine.jobs(),
+                TunerKind::Tvm => (
+                    tvm_baseline::select_batch(
+                        &self.cfg, &self.space, &self.db, &mut self.rng,
+                        self.round, take, engine,
+                    ),
+                    None,
                 ),
                 TunerKind::Ml2 => ml2tuner::select_batch(
                     &self.cfg, true, true, &self.env, engine,
@@ -189,6 +197,12 @@ impl LayerSession {
             done += batch.len();
             engine.profile_into(&self.env, &batch, &mut self.space,
                                 Some(&mut self.db), &mut self.trace);
+            let round = self.round;
+            let v_margin = self.cfg.v_margin;
+            engine.recorder().end_round(scope, || {
+                crate::tuner::round_event(&self.env, &self.trace, before,
+                                          round, v_margin, stats)
+            });
         }
         done
     }
@@ -397,6 +411,18 @@ impl NetworkTuner {
             let grant =
                 cfg.round_trials.max(1).min(cfg.total_trials - spent);
             let done = sessions[pick].step(engine, grant);
+            console::verbose(&format!(
+                "[sched] round {:>4}  layer {:<8} granted {:>3} \
+                 profiled {:>3}  best {}",
+                total_rounds + 1,
+                sessions[pick].layer_name(),
+                grant,
+                done,
+                sessions[pick]
+                    .best_cycles()
+                    .map(|c| c.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ));
             total_rounds += 1;
             rounds[pick] += 1;
             if done == 0 {

@@ -41,6 +41,12 @@
 //!   kills the A-stage double compilation, and a network-level scheduler
 //!   (`tune-net`) that splits one global budget across all layers with a
 //!   UCB allocator.
+//! * [`obs`] — observability: the always-on telemetry [`obs::Recorder`]
+//!   (atomic counters, span timers, duration histograms shared across
+//!   the worker pool), the versioned JSONL event sink behind
+//!   `--metrics-out`, the leveled console sink (`--quiet`/`-v`), and
+//!   the `ml2tuner report` aggregator. Telemetry observes, never
+//!   participates: traces are byte-identical with and without it.
 //! * [`experiments`] — one harness per paper table/figure (Fig 2–5,
 //!   Table 2b/4/5, headline metrics) plus the beyond-paper `transfer`
 //!   study (cold vs warm sample-efficiency).
@@ -49,6 +55,7 @@ pub mod compiler;
 pub mod engine;
 pub mod experiments;
 pub mod gbdt;
+pub mod obs;
 pub mod runtime;
 pub mod tuner;
 pub mod util;

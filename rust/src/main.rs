@@ -6,6 +6,12 @@
 //!               [--tuner ml2tuner|tvm|random] [--trials N] [--seed S]
 //!               [--jobs J] [--space paper|extended] [--v-margin M]
 //!               [--db out.json] [--transfer-from dir]
+//!               [--metrics-out events.jsonl]
+//!
+//! All commands accept --quiet (results only) and --verbose / -v
+//! (per-grant scheduler progress); the tuning commands accept
+//! --metrics-out <file> to stream structured telemetry events (JSONL,
+//! consumed by `report`).
 //! ml2tuner tune-net [--network resnet18|vgg16|mobilenet|synth-gemm]
 //!               [--target zcu102] [--tuner ml2tuner|tvm|random]
 //!               [--trials N] [--round N] [--seed S] [--jobs J]
@@ -16,6 +22,9 @@
 //!               [--trials N] [..tune-net flags..] [--out dir]
 //!               one network across a hardware fleet, one global budget;
 //!               smallest target first, logs chained as warm starts
+//! ml2tuner report <events.jsonl...>
+//!               aggregate --metrics-out telemetry into per-stage time,
+//!               cache, and model-quality tables
 //! ml2tuner simulate [--network N] --layer conv1 [--target zcu102]
 //!               --schedule TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]
 //! ml2tuner validate [--layer conv1] [--samples N] [--seed S] [--space K]
@@ -36,6 +45,7 @@ use ml2tuner::engine::{
     NetworkTuner, TunerKind,
 };
 use ml2tuner::experiments::{self, ExpConfig};
+use ml2tuner::obs::{self, console, EventSink};
 use ml2tuner::runtime::{golden, Runtime};
 use ml2tuner::tuner::database::{Database, TransferDb};
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
@@ -49,7 +59,14 @@ use ml2tuner::vta::{config::VtaConfig, functional, layout, targets,
                     Simulator};
 use ml2tuner::workloads::{self, resnet18, synth, ConvLayer, Network};
 
-/// Tiny flag parser: `--key value` pairs + positionals.
+/// Flags that never take a value — the parser must not swallow the
+/// next token as their argument (`tune --quiet --layer conv1` would
+/// otherwise read `--layer` fine but `tune --quiet events.jsonl` in
+/// `report` would eat the positional).
+const BOOL_FLAGS: &[&str] = &["quiet", "verbose", "numeric", "quick"];
+
+/// Tiny flag parser: `--key value` pairs + positionals. `-v` is
+/// shorthand for `--verbose`.
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
@@ -61,9 +78,14 @@ impl Args {
         let mut flags = HashMap::new();
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
+            if a == "-v" {
+                flags.insert("verbose".to_string(), "true".to_string());
+            } else if let Some(key) = a.strip_prefix("--") {
                 let val = match it.peek() {
-                    Some(v) if !v.starts_with("--") => {
+                    Some(v)
+                        if !v.starts_with("--")
+                            && !BOOL_FLAGS.contains(&key) =>
+                    {
                         it.next().unwrap().clone()
                     }
                     _ => "true".to_string(),
@@ -126,11 +148,20 @@ fn dispatch(argv: &[String]) -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..]);
+    if args.has("quiet") && args.has("verbose") {
+        bail!("--quiet and --verbose are mutually exclusive");
+    }
+    if args.has("quiet") {
+        console::set_level(console::Level::Quiet);
+    } else if args.has("verbose") {
+        console::set_level(console::Level::Verbose);
+    }
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "tune" => cmd_tune(&args),
         "tune-net" => cmd_tune_net(&args),
         "tune-fleet" => cmd_tune_fleet(&args),
+        "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
         "validate" => cmd_validate(&args),
         "experiment" => cmd_experiment(&args),
@@ -151,14 +182,16 @@ fn print_usage() {
          tune [--network N] --layer conv1 [--target T] \
          [--tuner ml2tuner|tvm|random]\n       [--trials N] [--seed S] \
          [--jobs J] [--space paper|extended]\n       [--v-margin M] \
-         [--db out.json] [--transfer-from dir]\n  \
+         [--db out.json] [--transfer-from dir]\n       \
+         [--metrics-out events.jsonl]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
          [--target T]\n       [--tuner ..] [--trials N] [--round N] \
          [--seed S] [--jobs J]\n       [--layers a,b,..] [--space \
          paper|extended] [--v-margin M] [--out dir]\n       \
-         [--transfer-from dir] [--transfer-cap N]\n  \
+         [--transfer-from dir] [--transfer-cap N] [--metrics-out f]\n  \
          tune-fleet --targets T1,T2,.. [--network N] [--trials N] \
          [--out dir]\n       [..tune-net flags..]\n  \
+         report <events.jsonl...>   aggregate --metrics-out telemetry\n  \
          simulate [--network N] --layer conv1 [--target T] --schedule \
          \n       TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
@@ -180,6 +213,12 @@ fn print_usage() {
          0.25).\n\
          --jobs: profiling/compile worker threads (default: all cores); \
          traces are\n        identical for any worker count.\n\
+         --metrics-out: stream structured telemetry (JSONL: run_start, \
+         per-round\n        events with stage timings + model-V quality, \
+         run_end) to a file;\n        traces are byte-identical with or \
+         without it. Aggregate with `report`.\n\
+         --quiet / --verbose (-v): console verbosity (results only / \
+         per-grant\n        scheduler progress).\n\
          --transfer-from: directory of prior tuning logs (tune --db / \
          tune-net --out);\n        shape-similar layers warm-start the \
          models before the first batch\n        (knob values are \
@@ -318,6 +357,27 @@ fn expect_flags(args: &Args, allowed: &[&str]) -> Result<()> {
     );
 }
 
+/// Wire `--metrics-out <file>` into the engine's recorder: create the
+/// JSONL sink, attach it, and emit the `run_start` event. Telemetry is
+/// strictly observational — the tuning trace is byte-identical with or
+/// without a sink (pinned in `tests/telemetry.rs`).
+fn attach_metrics(
+    args: &Args,
+    cmd: &str,
+    engine: &Engine,
+    fields: Vec<(&str, Json)>,
+) -> Result<()> {
+    let Some(path) = args.get("metrics-out") else {
+        return Ok(());
+    };
+    let sink = EventSink::create(path)
+        .with_context(|| format!("--metrics-out {path}"))?;
+    engine.recorder().attach_sink(sink);
+    engine.recorder().emit_run_start(cmd, fields);
+    console::verbose(&format!("telemetry: events -> {path}"));
+    Ok(())
+}
+
 fn layer_arg(args: &Args, net: &Network) -> Result<ConvLayer> {
     match args.get("layer") {
         None => Ok(net.layers[0]),
@@ -339,8 +399,11 @@ fn transfer_arg(args: &Args, kind: TunerKind) -> Result<Option<TransferDb>> {
         return Ok(None);
     };
     if kind != TunerKind::Ml2 {
-        println!("note: --transfer-from only warm-starts the ml2tuner \
-                  policy; {} runs cold", kind.name());
+        console::info(&format!(
+            "note: --transfer-from only warm-starts the ml2tuner \
+             policy; {} runs cold",
+            kind.name()
+        ));
         return Ok(None);
     }
     let store = TransferDb::load_dir(dir)?;
@@ -352,11 +415,11 @@ fn transfer_arg(args: &Args, kind: TunerKind) -> Result<Option<TransferDb>> {
     } else {
         String::new()
     };
-    println!(
+    console::info(&format!(
         "transfer store: {} layer logs, {} records{skipped} from {dir}",
         store.n_layers(),
         store.total_records()
-    );
+    ));
     Ok(Some(store))
 }
 
@@ -433,7 +496,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_tune(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "layer", "target", "tuner",
                          "trials", "seed", "jobs", "space", "v-margin",
-                         "db", "transfer-from", "transfer-cap"])?;
+                         "db", "transfer-from", "transfer-cap",
+                         "metrics-out", "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
     let hw = target_arg(args)?;
@@ -446,8 +510,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let cfg = TunerConfig { seed, max_trials: trials, v_margin,
                             ..Default::default() };
     let env = TuningEnv::with_space(hw.clone(), layer, space);
-    println!("target: {}   space: {} ({} configurations)", hw.target,
-             space.name(), env.space.len());
+    console::info(&format!(
+        "target: {}   space: {} ({} configurations)",
+        hw.target,
+        space.name(),
+        env.space.len()
+    ));
     let tuner_name = args.get("tuner").unwrap_or("ml2tuner");
     let kind = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
@@ -459,18 +527,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 let cap = args.get_usize("transfer-cap", 400)?;
                 match store.warm_start_for(&layer, space, &hw, cap) {
                     Some(warm) => {
-                        println!(
+                        console::info(&format!(
                             "warm start: {} transferred records for {}",
                             warm.len(),
                             layer.name
-                        );
+                        ));
                         t = t.with_warm_start(warm);
                     }
-                    None => println!(
+                    None => console::info(&format!(
                         "warm start: no shape-similar source for {} — \
                          starting cold",
                         layer.name
-                    ),
+                    )),
                 }
             }
             Box::new(t)
@@ -479,11 +547,23 @@ fn cmd_tune(args: &Args) -> Result<()> {
         TunerKind::Random => Box::new(RandomTuner::new(cfg)),
     };
     let engine = Engine::with_jobs(jobs);
+    attach_metrics(args, "tune", &engine, vec![
+        ("network", Json::Str(net.name.to_string())),
+        ("layer", Json::Str(layer.name.to_string())),
+        ("target", Json::Str(hw.target.clone())),
+        ("tuner", Json::Str(kind.name().to_string())),
+        ("space", Json::Str(space.name().to_string())),
+        ("trials", Json::Num(trials as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("jobs", Json::Num(jobs as f64)),
+        ("v_margin", Json::Num(v_margin)),
+    ])?;
     let t0 = std::time::Instant::now();
     let trace = tuner.tune_with(&env, &engine);
+    engine.recorder().emit_run_end();
     let sim = Simulator::new(hw.clone());
     let cache = engine.cache().stats();
-    println!(
+    console::info(&format!(
         "{} on {}: {} trials in {:.1}s ({} jobs, compile cache {} hits / \
          {} lookups)",
         trace.tuner,
@@ -493,7 +573,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         engine.jobs(),
         cache.hits,
         cache.lookups()
-    );
+    ));
     match trace.best_cycles() {
         Some(c) => {
             let best = trace
@@ -501,32 +581,32 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 .iter()
                 .find(|t| t.outcome.cycles() == Some(c))
                 .unwrap();
-            println!(
+            console::result(&format!(
                 "best: {} = {} cycles ({:.3} ms @ {} MHz)",
                 best.schedule,
                 c,
                 sim.cycles_to_ms(c),
                 sim.cfg.clock_mhz
-            );
+            ));
         }
-        None => println!("no valid configuration found"),
+        None => console::result("no valid configuration found"),
     }
-    println!(
+    console::result(&format!(
         "invalidity ratio: {:.3} (crash/wrong: {:?})",
         trace.invalidity_ratio(),
         trace.invalid_counts()
-    );
-    println!(
+    ));
+    console::info(&format!(
         "estimated board wall-clock: {:.0}s",
         trace.estimated_wall_clock(&ProfilingCostModel::default())
-    );
+    ));
     if let Some(path) = args.get("db") {
         let mut db = Database::for_layer_on(&layer, space, &hw);
         for r in &trace.trials {
             db.push(r.clone());
         }
         db.save(path)?;
-        println!("tuning log saved to {path}");
+        console::info(&format!("tuning log saved to {path}"));
     }
     Ok(())
 }
@@ -535,7 +615,8 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "target", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
                          "v-margin", "out", "transfer-from",
-                         "transfer-cap"])?;
+                         "transfer-cap", "metrics-out", "quiet",
+                         "verbose"])?;
     let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
     let round = args.get_usize("round", 10)?;
@@ -561,13 +642,31 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
+    attach_metrics(args, "tune-net", &engine, vec![
+        ("network", Json::Str(net.name.to_string())),
+        ("target", Json::Str(hw.target.clone())),
+        ("tuner", Json::Str(tuner.name().to_string())),
+        ("space", Json::Str(space.name().to_string())),
+        ("layers", Json::Num(layers.len() as f64)),
+        ("trials", Json::Num(trials as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("jobs", Json::Num(jobs as f64)),
+        ("v_margin", Json::Num(v_margin)),
+    ])?;
     let t0 = std::time::Instant::now();
-    println!("tuning {} on {} ({} layers, {} trials, {} space)",
-             net.name, hw.target, layers.len(), trials, space.name());
+    console::info(&format!(
+        "tuning {} on {} ({} layers, {} trials, {} space)",
+        net.name,
+        hw.target,
+        layers.len(),
+        trials,
+        space.name()
+    ));
     let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
-    print!("{}", outcome.report.render());
+    engine.recorder().emit_run_end();
+    console::result(outcome.report.render().trim_end());
     let cache = engine.cache().stats();
-    println!(
+    console::info(&format!(
         "wall-clock {:.1}s ({} jobs, compile cache {} hits / {} lookups, \
          {:.1}% hit rate)",
         t0.elapsed().as_secs_f64(),
@@ -575,10 +674,13 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
         cache.hits,
         cache.lookups(),
         cache.hit_rate() * 100.0
-    );
+    ));
     if let Some(dir) = args.get("out") {
         let paths = outcome.save_databases(dir)?;
-        println!("{} per-layer tuning logs saved to {dir}/", paths.len());
+        console::info(&format!(
+            "{} per-layer tuning logs saved to {dir}/",
+            paths.len()
+        ));
     }
     Ok(())
 }
@@ -587,7 +689,8 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "targets", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
                          "v-margin", "out", "transfer-from",
-                         "transfer-cap"])?;
+                         "transfer-cap", "metrics-out", "quiet",
+                         "verbose"])?;
     let net = network_arg(args)?;
     let fleet_targets = targets_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
@@ -613,8 +716,24 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
+    attach_metrics(args, "tune-fleet", &engine, vec![
+        ("network", Json::Str(net.name.to_string())),
+        ("targets", Json::Arr(
+            fleet_targets
+                .iter()
+                .map(|t| Json::Str(t.target.clone()))
+                .collect(),
+        )),
+        ("tuner", Json::Str(tuner.name().to_string())),
+        ("space", Json::Str(space.name().to_string())),
+        ("layers", Json::Num(layers.len() as f64)),
+        ("trials", Json::Num(trials as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("jobs", Json::Num(jobs as f64)),
+        ("v_margin", Json::Num(v_margin)),
+    ])?;
     let t0 = std::time::Instant::now();
-    println!(
+    console::info(&format!(
         "fleet-tuning {} across {} targets ({} layers, {} global \
          trials, {} space)",
         net.name,
@@ -622,15 +741,16 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
         layers.len(),
         trials,
         space.name()
-    );
+    ));
     let outcome = FleetTuner::new(cfg).tune(&engine, &layers);
-    print!("{}", outcome.render());
+    engine.recorder().emit_run_end();
+    console::result(outcome.render().trim_end());
     for run in &outcome.runs {
-        println!("\n-- {} --", run.target);
-        print!("{}", run.outcome.report.render());
+        console::result(&format!("\n-- {} --", run.target));
+        console::result(run.outcome.report.render().trim_end());
     }
     let cache = engine.cache().stats();
-    println!(
+    console::info(&format!(
         "wall-clock {:.1}s ({} jobs, fleet-shared compile cache {} hits \
          / {} lookups, {:.1}% hit rate)",
         t0.elapsed().as_secs_f64(),
@@ -638,12 +758,29 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
         cache.hits,
         cache.lookups(),
         cache.hit_rate() * 100.0
-    );
+    ));
     if let Some(dir) = args.get("out") {
         let paths = outcome.save_databases(dir)?;
-        println!("{} tuning logs saved under {dir}/<target>/",
-                 paths.len());
+        console::info(&format!(
+            "{} tuning logs saved under {dir}/<target>/",
+            paths.len()
+        ));
     }
+    Ok(())
+}
+
+/// `ml2tuner report <events.jsonl...>`: aggregate telemetry event files
+/// written by `--metrics-out` into per-stage time, cache, and
+/// model-quality tables. Every line is schema-validated; a malformed
+/// event is a hard error (CI runs this as the schema check).
+fn cmd_report(args: &Args) -> Result<()> {
+    expect_flags(args, &["quiet", "verbose"])?;
+    if args.positional.is_empty() {
+        bail!("report expects one or more event files \
+               (ml2tuner report events.jsonl ...)");
+    }
+    let report = obs::report::aggregate(&args.positional)?;
+    console::result(report.render().trim_end());
     Ok(())
 }
 

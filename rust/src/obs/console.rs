@@ -1,0 +1,71 @@
+//! Leveled console sink: the single place human-facing progress output
+//! goes through, so `--quiet`/`-v` act uniformly across `tune`,
+//! `tune-net`, and `tune-fleet`.
+//!
+//! Three levels: `Quiet` (results only), `Normal` (default: results +
+//! progress), `Verbose` (adds per-grant scheduler lines). The level is
+//! a process-global atomic — set once at CLI startup, read everywhere —
+//! because threading a handle through every tuning loop would couple
+//! the tuner API to presentation concerns.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// `--quiet`: only final results and errors.
+    Quiet = 0,
+    /// Default: progress notes + results.
+    Normal = 1,
+    /// `-v`: adds per-grant / per-step detail.
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        2 => Level::Verbose,
+        _ => Level::Normal,
+    }
+}
+
+/// Progress note — suppressed by `--quiet`.
+pub fn info(msg: impl AsRef<str>) {
+    if level() >= Level::Normal {
+        println!("{}", msg.as_ref());
+    }
+}
+
+/// Detail line — printed only with `-v`.
+pub fn verbose(msg: impl AsRef<str>) {
+    if level() >= Level::Verbose {
+        println!("{}", msg.as_ref());
+    }
+}
+
+/// Final result — always printed, even under `--quiet`.
+pub fn result(msg: impl AsRef<str>) {
+    println!("{}", msg.as_ref());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_round_trips() {
+        // Tests run in one process; restore the default when done.
+        set_level(Level::Quiet);
+        assert_eq!(level(), Level::Quiet);
+        set_level(Level::Verbose);
+        assert_eq!(level(), Level::Verbose);
+        set_level(Level::Normal);
+        assert_eq!(level(), Level::Normal);
+        assert!(Level::Quiet < Level::Normal && Level::Normal < Level::Verbose);
+    }
+}

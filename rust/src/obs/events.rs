@@ -1,0 +1,295 @@
+//! JSONL event stream: schema, sink, and the per-round event builder.
+//!
+//! Every line is a self-contained JSON object carrying
+//! `"schema": SCHEMA_VERSION` and an `"event"` discriminator
+//! (`run_start` / `round` / `run_end` — see EXPERIMENTS.md
+//! §Observability for the field tables). All emission happens on the
+//! coordinator thread between rounds, so line order is deterministic;
+//! worker threads only touch the recorder's atomics.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::recorder::{Counter, Recorder, Snapshot, Stage};
+use crate::util::json::Json;
+
+/// Version stamped on every event line. Bump when a field is renamed,
+/// removed, or changes meaning; `report` refuses other versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Buffered, line-flushed JSONL writer. Event rate is one line per
+/// round, so a flush per line is cheap and keeps partially-written
+/// files valid if the run is killed.
+pub struct EventSink {
+    out: Box<dyn Write + Send>,
+}
+
+impl EventSink {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<EventSink> {
+        let file = std::fs::File::create(path)?;
+        Ok(EventSink::from_writer(Box::new(std::io::BufWriter::new(file))))
+    }
+
+    pub fn from_writer(out: Box<dyn Write + Send>) -> EventSink {
+        EventSink { out }
+    }
+
+    /// Best-effort write: I/O errors are dropped so telemetry can never
+    /// fail (or perturb) the run it is observing.
+    pub(crate) fn write_event(&mut self, event: &Json) {
+        let _ = writeln!(self.out, "{event}");
+        let _ = self.out.flush();
+    }
+}
+
+/// Model-V quality numbers for one round: veto count plus the confusion
+/// of V's verdict (at the run's `v_margin`) over the trials that were
+/// actually profiled this round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VQuality {
+    pub vetoes: u64,
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+    pub v_margin: f64,
+}
+
+/// Confusion of predicted validity (`margin > v_margin`) against actual
+/// profiled validity, zipped pairwise: `(tp, fp, tn, fn)`.
+pub fn confusion(
+    margins: &[f64],
+    v_margin: f64,
+    actual_valid: &[bool],
+) -> (u64, u64, u64, u64) {
+    let (mut tp, mut fp, mut tn, mut fn_) = (0, 0, 0, 0);
+    for (&m, &valid) in margins.iter().zip(actual_valid) {
+        match (m > v_margin, valid) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fn_ += 1,
+        }
+    }
+    (tp, fp, tn, fn_)
+}
+
+/// One per-round event, built by the tuning loops (`tuner::round_event`)
+/// and serialized together with the round's recorder delta.
+#[derive(Clone, Debug)]
+pub struct RoundEvent {
+    pub target: String,
+    pub layer: String,
+    pub tuner: String,
+    pub space: String,
+    /// 1-based round number within this layer's tuning stream.
+    pub round: u64,
+    pub trials_new: u64,
+    pub trials_total: u64,
+    pub valid_new: u64,
+    pub crash_new: u64,
+    pub wrong_new: u64,
+    pub best_cycles: Option<u64>,
+    /// 1-based trial index that first reached `best_cycles`
+    /// ("samples to best-so-far").
+    pub trials_to_best: Option<u64>,
+    /// Present only on rounds where model V was trained and filtering.
+    pub v: Option<VQuality>,
+}
+
+impl RoundEvent {
+    /// Serialize, folding in the round's stage/cache deltas.
+    pub fn to_json(&self, delta: &Snapshot) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", SCHEMA_VERSION)
+            .set("event", "round")
+            .set("target", self.target.as_str())
+            .set("layer", self.layer.as_str())
+            .set("tuner", self.tuner.as_str())
+            .set("space", self.space.as_str())
+            .set("round", self.round)
+            .set("trials_new", self.trials_new)
+            .set("trials_total", self.trials_total)
+            .set("valid_new", self.valid_new)
+            .set("crash_new", self.crash_new)
+            .set("wrong_new", self.wrong_new)
+            .set("select_ns", delta.stage(Stage::Select).total_ns)
+            .set("train_ns", delta.stage(Stage::Train).total_ns)
+            .set("sweep_ns", delta.stage(Stage::Sweep).total_ns)
+            .set("sweep_chunks", delta.stage(Stage::SweepChunk).count)
+            .set("compile_ns", delta.stage(Stage::Compile).total_ns)
+            .set("profile_ns", delta.stage(Stage::Profile).total_ns)
+            .set("cache_hits", delta.counter(Counter::CompileCacheHit))
+            .set("cache_misses", delta.counter(Counter::CompileCacheMiss));
+        if let Some(best) = self.best_cycles {
+            o.set("best_cycles", best);
+        }
+        if let Some(n) = self.trials_to_best {
+            o.set("trials_to_best", n);
+        }
+        if let Some(v) = &self.v {
+            o.set("vetoes", v.vetoes)
+                .set("v_tp", v.tp)
+                .set("v_fp", v.fp)
+                .set("v_tn", v.tn)
+                .set("v_fn", v.fn_)
+                .set("v_margin", v.v_margin);
+        }
+        o
+    }
+}
+
+/// Guard marking the start of one round: a snapshot the matching
+/// `end_round` diffs against.
+pub struct RoundScope {
+    start: Snapshot,
+}
+
+impl Recorder {
+    /// Snapshot counters/stage totals at the top of a round.
+    pub fn begin_round(&self) -> RoundScope {
+        RoundScope { start: self.snapshot() }
+    }
+
+    /// Emit the round event; `build` runs only when a sink is attached,
+    /// so sink-less runs skip event construction entirely.
+    pub fn end_round<F: FnOnce() -> RoundEvent>(
+        &self,
+        scope: RoundScope,
+        build: F,
+    ) {
+        if !self.has_sink() {
+            return;
+        }
+        let delta = self.snapshot().delta_since(&scope.start);
+        self.emit(&build().to_json(&delta));
+    }
+
+    /// Emit the `run_start` header line (command + its salient args).
+    pub fn emit_run_start(&self, cmd: &str, fields: Vec<(&str, Json)>) {
+        if !self.has_sink() {
+            return;
+        }
+        let mut o = Json::obj();
+        o.set("schema", SCHEMA_VERSION)
+            .set("event", "run_start")
+            .set("cmd", cmd);
+        for (k, v) in fields {
+            o.set(k, v);
+        }
+        self.emit(&o);
+    }
+
+    /// Emit the `run_end` trailer: lifetime counters plus per-stage
+    /// count/total (histogram buckets stay in-process; the report
+    /// derives shares from totals).
+    pub fn emit_run_end(&self) {
+        if !self.has_sink() {
+            return;
+        }
+        let snap = self.snapshot();
+        let mut o = Json::obj();
+        o.set("schema", SCHEMA_VERSION).set("event", "run_end");
+        for c in Counter::ALL {
+            o.set(c.name(), snap.counter(c));
+        }
+        let mut stages = Json::obj();
+        for s in Stage::ALL {
+            let t = snap.stage(s);
+            let mut st = Json::obj();
+            st.set("count", t.count).set("total_ns", t.total_ns);
+            stages.set(s.name(), st);
+        }
+        o.set("stages", stages);
+        self.emit(&o);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_event(v: Option<VQuality>) -> RoundEvent {
+        RoundEvent {
+            target: "zcu102".into(),
+            layer: "conv1".into(),
+            tuner: "ml2tuner".into(),
+            space: "paper".into(),
+            round: 3,
+            trials_new: 10,
+            trials_total: 30,
+            valid_new: 7,
+            crash_new: 2,
+            wrong_new: 1,
+            best_cycles: Some(12345),
+            trials_to_best: Some(17),
+            v,
+        }
+    }
+
+    #[test]
+    fn confusion_counts_quadrants() {
+        let margins = [0.5, 0.5, 0.1, 0.1, 0.3];
+        let actual = [true, false, false, true, true];
+        // margin > 0.25 ⇒ predicted valid
+        assert_eq!(confusion(&margins, 0.25, &actual), (2, 1, 1, 1));
+        assert_eq!(confusion(&[], 0.25, &[]), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn round_event_serializes_with_delta() {
+        let rec = Recorder::new();
+        rec.record_duration_ns(Stage::Train, 1000);
+        rec.record_duration_ns(Stage::Select, 5000);
+        rec.add(Counter::CompileCacheHit, 3);
+        let delta = rec.snapshot().delta_since(&Recorder::new().snapshot());
+        let ev = sample_event(Some(VQuality {
+            vetoes: 8,
+            tp: 6,
+            fp: 1,
+            tn: 2,
+            fn_: 1,
+            v_margin: 0.25,
+        }));
+        let j = ev.to_json(&delta);
+        assert_eq!(j.get("schema").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("event").unwrap().as_str(), Some("round"));
+        assert_eq!(j.get("train_ns").unwrap().as_i64(), Some(1000));
+        assert_eq!(j.get("select_ns").unwrap().as_i64(), Some(5000));
+        assert_eq!(j.get("cache_hits").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("v_tp").unwrap().as_i64(), Some(6));
+        assert_eq!(j.get("vetoes").unwrap().as_i64(), Some(8));
+        // line round-trips through the parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn v_fields_absent_without_v() {
+        let ev = sample_event(None);
+        let delta = Recorder::new().snapshot().delta_since(
+            &Recorder::new().snapshot(),
+        );
+        let j = ev.to_json(&delta);
+        assert!(j.get("vetoes").is_none());
+        assert!(j.get("v_margin").is_none());
+    }
+
+    #[test]
+    fn sink_gates_emission_and_build() {
+        let rec = Recorder::new();
+        let scope = rec.begin_round();
+        // no sink: the closure must not even run
+        rec.end_round(scope, || panic!("built event without a sink"));
+        assert_eq!(rec.get(Counter::EventsEmitted), 0);
+        assert!(!rec.has_sink());
+    }
+
+    #[test]
+    fn run_end_lists_all_counters_and_stages() {
+        let rec = Recorder::new();
+        rec.attach_sink(EventSink::from_writer(Box::new(std::io::sink())));
+        rec.emit_run_end();
+        assert_eq!(rec.get(Counter::EventsEmitted), 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: the telemetry subsystem behind `--metrics-out`,
+//! `--quiet`/`-v`, and the `ml2tuner report` subcommand.
+//!
+//! Four pieces:
+//!
+//! - [`recorder`] — the always-on [`Recorder`]: atomic counters,
+//!   monotonic span timers, and fixed log2-bucket duration histograms,
+//!   shared across the `--jobs` worker pool (relaxed atomics, no locks
+//!   on hot paths).
+//! - [`events`] — the versioned JSONL event schema and [`EventSink`]
+//!   (`--metrics-out <file>`): one `run_start` header, one `round`
+//!   event per tuning round (stage/cache deltas + model-quality
+//!   confusion), one `run_end` trailer. Emission happens only on the
+//!   coordinator thread, so event order is deterministic.
+//! - [`console`] — the leveled human-output sink (`--quiet`/`-v`).
+//! - [`report`] — the `ml2tuner report` aggregator: strict schema
+//!   validation plus per-stage, cache, and per-target model-quality
+//!   tables.
+//!
+//! The governing invariant: telemetry observes, never participates. No
+//! code in this module touches an rng stream, reorders work, or feeds
+//! anything back into tuning — traces stay byte-identical with and
+//! without a sink (`tests/telemetry.rs` pins this on both spaces).
+
+pub mod console;
+pub mod events;
+pub mod recorder;
+pub mod report;
+
+pub use events::{
+    confusion, EventSink, RoundEvent, RoundScope, VQuality, SCHEMA_VERSION,
+};
+pub use recorder::{
+    Counter, Recorder, Snapshot, Span, Stage, StageTotal, HIST_BUCKETS,
+};

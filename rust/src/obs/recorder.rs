@@ -1,0 +1,406 @@
+//! The telemetry recorder: atomic counters, monotonic span timers, and
+//! fixed-bucket duration histograms.
+//!
+//! One [`Recorder`] is shared (via `Arc`) by the engine, its compile
+//! cache, and the explorer's scoring sweep, so it must be cheap and safe
+//! to hit from every `--jobs` worker: all state is plain atomics with
+//! relaxed ordering, no locks on the hot paths. The only lock guards the
+//! optional [`super::EventSink`], which is touched exclusively by the
+//! coordinator thread (event order is therefore deterministic).
+//!
+//! Nothing here consumes randomness or reorders work — recording a span
+//! or bumping a counter can never change a tuning trace. That invariant
+//! is pinned by `tests/telemetry.rs` (trace equality with and without a
+//! sink) and by the golden-trace suites, which run with the recorder
+//! always active.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::events::EventSink;
+use crate::util::json::Json;
+
+/// Monotonic event counters. Cache hit/miss live here (not on the
+/// cache) so one recorder owns every number a run report needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Compile-cache lookups served from memory.
+    CompileCacheHit,
+    /// Compile-cache lookups that actually compiled.
+    CompileCacheMiss,
+    /// Configurations profiled (attempts, valid or not).
+    TrialsProfiled,
+    TrialsValid,
+    TrialsCrash,
+    TrialsWrongOutput,
+    /// Candidates model V vetoed during ranking walks.
+    VVetoes,
+    /// Candidates decoded+scored by the explorer sweep.
+    SweepCandidates,
+    /// JSONL events written to the sink.
+    EventsEmitted,
+}
+
+pub const N_COUNTERS: usize = 9;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::CompileCacheHit,
+        Counter::CompileCacheMiss,
+        Counter::TrialsProfiled,
+        Counter::TrialsValid,
+        Counter::TrialsCrash,
+        Counter::TrialsWrongOutput,
+        Counter::VVetoes,
+        Counter::SweepCandidates,
+        Counter::EventsEmitted,
+    ];
+
+    /// Stable snake_case name (the `run_end` event key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::CompileCacheHit => "compile_cache_hits",
+            Counter::CompileCacheMiss => "compile_cache_misses",
+            Counter::TrialsProfiled => "trials_profiled",
+            Counter::TrialsValid => "trials_valid",
+            Counter::TrialsCrash => "trials_crash",
+            Counter::TrialsWrongOutput => "trials_wrong_output",
+            Counter::VVetoes => "v_vetoes",
+            Counter::SweepCandidates => "sweep_candidates",
+            Counter::EventsEmitted => "events_emitted",
+        }
+    }
+}
+
+/// Timed round-lifecycle stages. `Select` is the umbrella over one
+/// whole candidate-selection call and *contains* `Train`, `Sweep`, and
+/// the A-stage pool `Compile`; `SweepChunk` is nested inside `Sweep`
+/// (per-worker chunk timings, so its total is CPU time, not wall time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Select,
+    Train,
+    Sweep,
+    SweepChunk,
+    Compile,
+    Profile,
+}
+
+pub const N_STAGES: usize = 6;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Select,
+        Stage::Train,
+        Stage::Sweep,
+        Stage::SweepChunk,
+        Stage::Compile,
+        Stage::Profile,
+    ];
+
+    /// Stable snake_case name (event keys are `<name>_ns`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Select => "select",
+            Stage::Train => "train",
+            Stage::Sweep => "sweep",
+            Stage::SweepChunk => "sweep_chunk",
+            Stage::Compile => "compile",
+            Stage::Profile => "profile",
+        }
+    }
+}
+
+/// Histogram buckets per stage: bucket `i` counts durations in
+/// `[2^i, 2^(i+1))` ns (bucket 0 additionally holds 0 ns; the last
+/// bucket is open-ended, ≈ 9+ minutes).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Bucket index for a duration (log2 of the nanosecond count, clamped).
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        return 0;
+    }
+    ((63 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of a bucket, in ns.
+pub fn bucket_floor_ns(bucket: usize) -> u64 {
+    if bucket == 0 {
+        0
+    } else {
+        1u64 << bucket
+    }
+}
+
+struct StageStats {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl StageStats {
+    fn new() -> StageStats {
+        StageStats {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Count + wall total of one stage, as captured in a [`Snapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTotal {
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+/// Point-in-time copy of every counter and stage total. Per-round
+/// deltas come from two snapshots taken on the coordinator thread
+/// ([`Snapshot::delta_since`]), so no per-round state lives on the
+/// recorder itself.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    counters: [u64; N_COUNTERS],
+    stages: [StageTotal; N_STAGES],
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn stage(&self, s: Stage) -> StageTotal {
+        self.stages[s as usize]
+    }
+
+    /// Component-wise `self - earlier` (saturating, so a snapshot pair
+    /// taken out of order degrades to zeros instead of garbage).
+    pub fn delta_since(&self, earlier: &Snapshot) -> Snapshot {
+        let mut counters = [0u64; N_COUNTERS];
+        for (i, c) in counters.iter_mut().enumerate() {
+            *c = self.counters[i].saturating_sub(earlier.counters[i]);
+        }
+        let mut stages = [StageTotal::default(); N_STAGES];
+        for (i, s) in stages.iter_mut().enumerate() {
+            s.count =
+                self.stages[i].count.saturating_sub(earlier.stages[i].count);
+            s.total_ns = self.stages[i]
+                .total_ns
+                .saturating_sub(earlier.stages[i].total_ns);
+        }
+        Snapshot { counters, stages }
+    }
+}
+
+/// The shared telemetry recorder. Always active (counters and spans are
+/// a handful of relaxed atomics — negligible next to a compile or a
+/// model sweep); the JSONL sink is only attached when `--metrics-out`
+/// is given.
+pub struct Recorder {
+    counters: [AtomicU64; N_COUNTERS],
+    stages: [StageStats; N_STAGES],
+    sink: Mutex<Option<EventSink>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            stages: std::array::from_fn(|_| StageStats::new()),
+            sink: Mutex::new(None),
+        }
+    }
+
+    pub fn add(&self, c: Counter, n: u64) {
+        self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Start a span; it records into `stage` when dropped (or
+    /// explicitly via [`Span::stop`]).
+    pub fn span(&self, stage: Stage) -> Span<'_> {
+        Span { rec: self, stage, start: Instant::now(), armed: true }
+    }
+
+    /// Record an already-measured duration (used by worker threads that
+    /// time their own chunk).
+    pub fn record_duration_ns(&self, stage: Stage, ns: u64) {
+        self.stages[stage as usize].record(ns);
+    }
+
+    pub fn stage_total(&self, stage: Stage) -> StageTotal {
+        let s = &self.stages[stage as usize];
+        StageTotal {
+            count: s.count.load(Ordering::Relaxed),
+            total_ns: s.total_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The stage's duration histogram (bucket `i` = durations in
+    /// `[2^i, 2^(i+1))` ns).
+    pub fn stage_buckets(&self, stage: Stage) -> [u64; HIST_BUCKETS] {
+        let s = &self.stages[stage as usize];
+        std::array::from_fn(|i| s.buckets[i].load(Ordering::Relaxed))
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: std::array::from_fn(|i| {
+                self.counters[i].load(Ordering::Relaxed)
+            }),
+            stages: std::array::from_fn(|i| StageTotal {
+                count: self.stages[i].count.load(Ordering::Relaxed),
+                total_ns: self.stages[i].total_ns.load(Ordering::Relaxed),
+            }),
+        }
+    }
+
+    /// Attach the JSONL sink (`--metrics-out`); replaces any previous
+    /// one.
+    pub fn attach_sink(&self, sink: EventSink) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    pub fn has_sink(&self) -> bool {
+        self.sink.lock().unwrap().is_some()
+    }
+
+    /// Write one event line to the sink, if attached (no-op otherwise).
+    /// Sink I/O errors are swallowed: telemetry must never fail a run.
+    pub fn emit(&self, event: &Json) {
+        let mut guard = self.sink.lock().unwrap();
+        if let Some(sink) = guard.as_mut() {
+            sink.write_event(event);
+            drop(guard);
+            self.incr(Counter::EventsEmitted);
+        }
+    }
+}
+
+/// Monotonic span timer guard — records its elapsed time into the
+/// stage when dropped.
+pub struct Span<'a> {
+    rec: &'a Recorder,
+    stage: Stage,
+    start: Instant,
+    armed: bool,
+}
+
+impl Span<'_> {
+    /// Stop explicitly; returns the recorded duration in ns.
+    pub fn stop(mut self) -> u64 {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        self.rec.record_duration_ns(self.stage, ns);
+        self.armed = false;
+        ns
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let ns = self.start.elapsed().as_nanos() as u64;
+            self.rec.record_duration_ns(self.stage, ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Recorder::new();
+        assert_eq!(r.get(Counter::VVetoes), 0);
+        r.incr(Counter::VVetoes);
+        r.add(Counter::VVetoes, 4);
+        assert_eq!(r.get(Counter::VVetoes), 5);
+        assert_eq!(r.get(Counter::TrialsProfiled), 0);
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(2047), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_floor_ns(0), 0);
+        assert_eq!(bucket_floor_ns(10), 1024);
+    }
+
+    #[test]
+    fn durations_land_in_their_bucket() {
+        let r = Recorder::new();
+        r.record_duration_ns(Stage::Train, 1500); // [1024, 2048)
+        r.record_duration_ns(Stage::Train, 1600);
+        r.record_duration_ns(Stage::Train, 5); // [4, 8)
+        let t = r.stage_total(Stage::Train);
+        assert_eq!(t.count, 3);
+        assert_eq!(t.total_ns, 3105);
+        let b = r.stage_buckets(Stage::Train);
+        assert_eq!(b[10], 2);
+        assert_eq!(b[2], 1);
+        assert_eq!(b.iter().sum::<u64>(), 3);
+        assert_eq!(r.stage_total(Stage::Sweep).count, 0);
+    }
+
+    #[test]
+    fn span_guard_records_on_drop_and_stop() {
+        let r = Recorder::new();
+        {
+            let _s = r.span(Stage::Profile);
+        }
+        assert_eq!(r.stage_total(Stage::Profile).count, 1);
+        let ns = r.span(Stage::Profile).stop();
+        let t = r.stage_total(Stage::Profile);
+        assert_eq!(t.count, 2);
+        assert!(t.total_ns >= ns);
+    }
+
+    #[test]
+    fn snapshot_deltas() {
+        let r = Recorder::new();
+        r.add(Counter::SweepCandidates, 100);
+        r.record_duration_ns(Stage::Sweep, 500);
+        let a = r.snapshot();
+        r.add(Counter::SweepCandidates, 50);
+        r.record_duration_ns(Stage::Sweep, 300);
+        let d = r.snapshot().delta_since(&a);
+        assert_eq!(d.counter(Counter::SweepCandidates), 50);
+        assert_eq!(d.stage(Stage::Sweep),
+                   StageTotal { count: 1, total_ns: 300 });
+        assert_eq!(d.counter(Counter::TrialsValid), 0);
+    }
+
+    #[test]
+    fn recorder_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Recorder>();
+    }
+}

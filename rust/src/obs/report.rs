@@ -1,0 +1,496 @@
+//! `ml2tuner report`: aggregate one or more `--metrics-out` JSONL event
+//! files into per-stage time-breakdown, compile-cache, and model-quality
+//! tables (per-target rollup, so a fleet run's single file reports each
+//! target separately).
+//!
+//! Parsing is strict on purpose — CI runs `report` over every smoke
+//! run's event file as a schema check, so a malformed line, an unknown
+//! event, a wrong schema version, or a missing required field is a hard
+//! error naming the file and line.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::events::SCHEMA_VERSION;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// Required numeric fields of a `round` event (beyond the string
+/// identity fields and the optional best/V groups).
+const ROUND_NUM_FIELDS: [&str; 14] = [
+    "round",
+    "trials_new",
+    "trials_total",
+    "valid_new",
+    "crash_new",
+    "wrong_new",
+    "select_ns",
+    "train_ns",
+    "sweep_ns",
+    "sweep_chunks",
+    "compile_ns",
+    "profile_ns",
+    "cache_hits",
+    "cache_misses",
+];
+
+const ROUND_STR_FIELDS: [&str; 4] = ["target", "layer", "tuner", "space"];
+
+/// V-group fields: all present or all absent.
+const ROUND_V_FIELDS: [&str; 6] =
+    ["vetoes", "v_tp", "v_fp", "v_tn", "v_fn", "v_margin"];
+
+fn num(obj: &Json, key: &str) -> Result<u64> {
+    match obj.get(key) {
+        Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
+        Some(_) => bail!("field {key:?} is not a non-negative number"),
+        None => bail!("missing required field {key:?}"),
+    }
+}
+
+fn fnum(obj: &Json, key: &str) -> Result<f64> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing numeric field {key:?}"))
+}
+
+fn string<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing string field {key:?}"))
+}
+
+/// Parse and schema-validate one JSONL line; returns the event object.
+pub fn validate_line(line: &str) -> Result<Json> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if j.as_obj().is_none() {
+        bail!("event line is not a JSON object");
+    }
+    let schema = num(&j, "schema")?;
+    if schema != SCHEMA_VERSION {
+        bail!("unsupported schema version {schema} (expected {SCHEMA_VERSION})");
+    }
+    match string(&j, "event")? {
+        "round" => {
+            for k in ROUND_STR_FIELDS {
+                string(&j, k)?;
+            }
+            for k in ROUND_NUM_FIELDS {
+                num(&j, k)?;
+            }
+            let n_v =
+                ROUND_V_FIELDS.iter().filter(|k| j.get(k).is_some()).count();
+            if n_v != 0 && n_v != ROUND_V_FIELDS.len() {
+                bail!(
+                    "partial V-quality group: expected all or none of \
+                     {ROUND_V_FIELDS:?}"
+                );
+            }
+            if n_v > 0 {
+                for k in &ROUND_V_FIELDS[..5] {
+                    num(&j, k)?;
+                }
+                fnum(&j, "v_margin")?;
+            }
+        }
+        "run_start" => {
+            string(&j, "cmd")?;
+        }
+        "run_end" => {
+            num(&j, "compile_cache_hits")?;
+            num(&j, "compile_cache_misses")?;
+            num(&j, "trials_profiled")?;
+            let stages = j
+                .get("stages")
+                .and_then(Json::as_obj)
+                .context("missing \"stages\" object")?;
+            for (name, st) in stages {
+                num(st, "count").with_context(|| format!("stage {name:?}"))?;
+                num(st, "total_ns")
+                    .with_context(|| format!("stage {name:?}"))?;
+            }
+        }
+        other => bail!("unknown event type {other:?}"),
+    }
+    Ok(j)
+}
+
+/// Per-target model-quality rollup.
+#[derive(Clone, Debug, Default)]
+pub struct TargetAgg {
+    pub rounds: u64,
+    pub trials: u64,
+    pub valid: u64,
+    pub crash: u64,
+    pub wrong: u64,
+    pub vetoes: u64,
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+    /// Rounds that carried a V-quality group.
+    pub v_rounds: u64,
+    /// Last-seen `(trials_to_best, best_cycles)` per layer — the final
+    /// round event per layer holds the run's samples-to-best.
+    pub per_layer_best: BTreeMap<String, (Option<u64>, Option<u64>)>,
+}
+
+impl TargetAgg {
+    /// V precision: of the candidates V passed, how many profiled valid.
+    pub fn precision(&self) -> Option<f64> {
+        let denom = self.tp + self.fp;
+        (denom > 0).then(|| self.tp as f64 / denom as f64)
+    }
+
+    /// V recall: of the actually-valid candidates, how many V passed.
+    pub fn recall(&self) -> Option<f64> {
+        let denom = self.tp + self.fn_;
+        (denom > 0).then(|| self.tp as f64 / denom as f64)
+    }
+
+    /// Negative predictive value of V's veto over the profiled sample;
+    /// defaults to 1.0 when no vetoed-then-profiled trials exist.
+    pub fn npv(&self) -> f64 {
+        let denom = self.tn + self.fn_;
+        if denom > 0 {
+            self.tn as f64 / denom as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Estimated invalid profiling attempts avoided: vetoes scaled by
+    /// how often a veto is right (NPV) — the paper's "60.8% fewer
+    /// invalid profiling attempts" measured continuously.
+    pub fn invalid_avoided(&self) -> f64 {
+        self.vetoes as f64 * self.npv()
+    }
+
+    /// Mean samples-to-best over layers that reached a valid best.
+    pub fn mean_trials_to_best(&self) -> Option<f64> {
+        let known: Vec<u64> = self
+            .per_layer_best
+            .values()
+            .filter_map(|(ttb, _)| *ttb)
+            .collect();
+        (!known.is_empty()).then(|| {
+            known.iter().sum::<u64>() as f64 / known.len() as f64
+        })
+    }
+}
+
+/// Aggregate over every parsed event file.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub files: usize,
+    pub runs: u64,
+    pub rounds: u64,
+    pub select_ns: u64,
+    pub train_ns: u64,
+    pub sweep_ns: u64,
+    pub compile_ns: u64,
+    pub profile_ns: u64,
+    pub sweep_chunks: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// True once a `run_end` supplied lifetime cache totals (otherwise
+    /// the cache numbers are summed round deltas).
+    pub cache_from_run_end: bool,
+    pub targets: BTreeMap<String, TargetAgg>,
+}
+
+impl Report {
+    fn add_round(&mut self, j: &Json) -> Result<()> {
+        self.rounds += 1;
+        self.select_ns += num(j, "select_ns")?;
+        self.train_ns += num(j, "train_ns")?;
+        self.sweep_ns += num(j, "sweep_ns")?;
+        self.compile_ns += num(j, "compile_ns")?;
+        self.profile_ns += num(j, "profile_ns")?;
+        self.sweep_chunks += num(j, "sweep_chunks")?;
+        if !self.cache_from_run_end {
+            self.cache_hits += num(j, "cache_hits")?;
+            self.cache_misses += num(j, "cache_misses")?;
+        }
+        let target = string(j, "target")?.to_string();
+        let t = self.targets.entry(target).or_default();
+        t.rounds += 1;
+        t.trials += num(j, "trials_new")?;
+        t.valid += num(j, "valid_new")?;
+        t.crash += num(j, "crash_new")?;
+        t.wrong += num(j, "wrong_new")?;
+        if j.get("vetoes").is_some() {
+            t.v_rounds += 1;
+            t.vetoes += num(j, "vetoes")?;
+            t.tp += num(j, "v_tp")?;
+            t.fp += num(j, "v_fp")?;
+            t.tn += num(j, "v_tn")?;
+            t.fn_ += num(j, "v_fn")?;
+        }
+        let layer = string(j, "layer")?.to_string();
+        let ttb = j.get("trials_to_best").and_then(Json::as_f64);
+        let best = j.get("best_cycles").and_then(Json::as_f64);
+        t.per_layer_best
+            .insert(layer, (ttb.map(|v| v as u64), best.map(|v| v as u64)));
+        Ok(())
+    }
+
+    fn add_run_end(&mut self, j: &Json) -> Result<()> {
+        // Lifetime totals are authoritative over summed round deltas
+        // (they also cover cache traffic outside any round).
+        if !self.cache_from_run_end {
+            self.cache_from_run_end = true;
+            self.cache_hits = 0;
+            self.cache_misses = 0;
+        }
+        self.cache_hits += num(j, "compile_cache_hits")?;
+        self.cache_misses += num(j, "compile_cache_misses")?;
+        Ok(())
+    }
+
+    /// Wall time outside train/sweep/A-compile but inside selection
+    /// (feature building, ranking walks, bookkeeping).
+    pub fn select_other_ns(&self) -> u64 {
+        self.select_ns
+            .saturating_sub(self.train_ns)
+            .saturating_sub(self.sweep_ns)
+            .saturating_sub(self.compile_ns)
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.select_ns + self.profile_ns
+    }
+
+    pub fn cache_lookups(&self) -> u64 {
+        self.cache_hits + self.cache_misses
+    }
+
+    /// Render the human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "telemetry report: {} file(s), {} run(s), {} round event(s)\n\n",
+            self.files, self.runs, self.rounds
+        );
+
+        out.push_str("per-stage time breakdown (coordinator wall time):\n");
+        let total = self.total_ns().max(1) as f64;
+        let mut t = Table::new(&["stage", "time", "share"]);
+        let rows: [(&str, u64); 5] = [
+            ("train (P/V/A)", self.train_ns),
+            ("score-sweep", self.sweep_ns),
+            ("compile (A-stage pool)", self.compile_ns),
+            ("select-other", self.select_other_ns()),
+            ("profile", self.profile_ns),
+        ];
+        for (name, ns) in rows {
+            t.row(&[
+                name.to_string(),
+                fmt_ns(ns),
+                format!("{:.1}%", ns as f64 / total * 100.0),
+            ]);
+        }
+        t.row(&["total".to_string(), fmt_ns(self.total_ns()), "100%".into()]);
+        out.push_str(&t.render());
+        if self.sweep_chunks > 0 {
+            out.push_str(&format!(
+                "score-sweep chunks: {} (worker CPU time, not wall)\n",
+                self.sweep_chunks
+            ));
+        }
+
+        out.push('\n');
+        let lookups = self.cache_lookups();
+        if lookups > 0 {
+            out.push_str(&format!(
+                "compile cache: {} hits / {} lookups ({:.1}% hit rate{})\n",
+                self.cache_hits,
+                lookups,
+                self.cache_hits as f64 / lookups as f64 * 100.0,
+                if self.cache_from_run_end { "" } else {
+                    "; summed from round deltas — no run_end event"
+                },
+            ));
+        } else {
+            out.push_str("compile cache: no lookups recorded\n");
+        }
+
+        out.push_str("\nmodel quality (per target):\n");
+        let mut mt = Table::new(&[
+            "target",
+            "rounds",
+            "trials",
+            "invalid%",
+            "vetoes",
+            "V prec",
+            "V recall",
+            "invalid avoided",
+            "trials-to-best",
+        ]);
+        for (target, agg) in &self.targets {
+            let invalid = agg.crash + agg.wrong;
+            let inv_pct = if agg.trials > 0 {
+                format!("{:.1}%", invalid as f64 / agg.trials as f64 * 100.0)
+            } else {
+                "-".into()
+            };
+            let opt = |v: Option<f64>| match v {
+                Some(x) => f(x, 3),
+                None => "-".into(),
+            };
+            let avoided = if agg.v_rounds > 0 {
+                format!("~{:.0}", agg.invalid_avoided())
+            } else {
+                "-".into()
+            };
+            let ttb = match agg.mean_trials_to_best() {
+                Some(m) => format!("{m:.1}"),
+                None => "-".into(),
+            };
+            mt.row(&[
+                target.clone(),
+                agg.rounds.to_string(),
+                agg.trials.to_string(),
+                inv_pct,
+                agg.vetoes.to_string(),
+                opt(agg.precision()),
+                opt(agg.recall()),
+                avoided,
+                ttb,
+            ]);
+        }
+        out.push_str(&mt.render());
+        out.push_str(
+            "invalid avoided = vetoes x NPV (NPV = tn/(tn+fn) over \
+             vetoed-then-profiled fallback trials; 1.0 when none were \
+             profiled). trials-to-best = mean over layers of the final \
+             samples-to-best-so-far.\n",
+        );
+        out
+    }
+}
+
+/// Parse + validate + aggregate a set of event files.
+pub fn aggregate<P: AsRef<std::path::Path>>(paths: &[P]) -> Result<Report> {
+    let mut report = Report { files: paths.len(), ..Report::default() };
+    for path in paths {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut saw_event = false;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = validate_line(line).with_context(|| {
+                format!("{}:{}", path.display(), lineno + 1)
+            })?;
+            saw_event = true;
+            match j.get("event").and_then(Json::as_str) {
+                Some("round") => report.add_round(&j).with_context(|| {
+                    format!("{}:{}", path.display(), lineno + 1)
+                })?,
+                Some("run_start") => report.runs += 1,
+                Some("run_end") => {
+                    report.add_run_end(&j).with_context(|| {
+                        format!("{}:{}", path.display(), lineno + 1)
+                    })?
+                }
+                _ => unreachable!("validate_line admits only known events"),
+            }
+        }
+        if !saw_event {
+            bail!("{}: no events (empty or blank file)", path.display());
+        }
+    }
+    Ok(report)
+}
+
+/// Human-scale duration formatting (ns → us/ms/s).
+pub fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.5us");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_200_000_000), "3.20s");
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        for bad in [
+            "not json",
+            "[1,2]",
+            r#"{"event":"round"}"#,                       // no schema
+            r#"{"schema":2,"event":"run_start","cmd":"x"}"#, // wrong version
+            r#"{"schema":1,"event":"mystery"}"#,          // unknown event
+            r#"{"schema":1}"#,                            // no event
+        ] {
+            assert!(validate_line(bad).is_err(), "{bad}");
+        }
+        assert!(
+            validate_line(r#"{"schema":1,"event":"run_start","cmd":"tune"}"#)
+                .is_ok()
+        );
+    }
+
+    #[test]
+    fn partial_v_group_rejected() {
+        // a round line with vetoes but no confusion fields
+        let mut j = Json::obj();
+        j.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            j.set(k, "x");
+        }
+        for k in ROUND_NUM_FIELDS {
+            j.set(k, 1u64);
+        }
+        assert!(validate_line(&j.to_string()).is_ok());
+        j.set("vetoes", 5u64);
+        assert!(validate_line(&j.to_string()).is_err());
+        j.set("v_tp", 1u64)
+            .set("v_fp", 1u64)
+            .set("v_tn", 1u64)
+            .set("v_fn", 1u64)
+            .set("v_margin", 0.25);
+        assert!(validate_line(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn target_agg_metrics() {
+        let agg = TargetAgg {
+            tp: 6,
+            fp: 2,
+            tn: 3,
+            fn_: 1,
+            vetoes: 10,
+            v_rounds: 1,
+            ..TargetAgg::default()
+        };
+        assert_eq!(agg.precision(), Some(0.75));
+        assert_eq!(agg.recall(), Some(6.0 / 7.0));
+        assert_eq!(agg.npv(), 0.75);
+        assert_eq!(agg.invalid_avoided(), 7.5);
+        // no vetoed trials profiled → NPV defaults to 1.0
+        let blind = TargetAgg { vetoes: 4, v_rounds: 1, ..TargetAgg::default() };
+        assert_eq!(blind.npv(), 1.0);
+        assert_eq!(blind.invalid_avoided(), 4.0);
+        assert_eq!(blind.precision(), None);
+    }
+}

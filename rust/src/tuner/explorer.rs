@@ -16,15 +16,18 @@
 //! worker count and to the old row-at-a-time sweep
 //! (`tests/flat_inference.rs` pins both).
 
+use std::time::Instant;
+
 use super::models::{ModelP, ModelV};
 use super::space::SearchSpace;
 use super::DEFAULT_V_MARGIN;
 use crate::gbdt::FeatureMatrix;
+use crate::obs::{Counter, Recorder, Stage};
 use crate::util::par::par_map;
 use crate::util::rng::Rng;
 
 /// Explorer policy knobs.
-pub struct Explorer {
+pub struct Explorer<'r> {
     pub epsilon: f64,
     /// Model-V veto margin (see `TunerConfig::v_margin`).
     pub v_margin: f64,
@@ -32,6 +35,19 @@ pub struct Explorer {
     /// results merge in fixed chunk order, so rankings are invariant in
     /// this value).
     pub jobs: usize,
+    /// Telemetry recorder for sweep spans / chunk timings (pure
+    /// observation — never consulted for any decision).
+    pub recorder: Option<&'r Recorder>,
+}
+
+/// What one selection round observed about model V: the veto count and
+/// the V margins of the picked candidates (parallel to the returned
+/// indices), from which the loop computes the round's precision/recall
+/// confusion once the picks are profiled.
+#[derive(Clone, Debug, Default)]
+pub struct SelectStats {
+    pub vetoes: u64,
+    pub margins: Vec<f64>,
 }
 
 /// Per-round scoring budget: above this many unmeasured candidates the
@@ -67,11 +83,14 @@ pub fn score_candidates(
     v: Option<&ModelV>,
     candidates: &[usize],
     jobs: usize,
+    recorder: Option<&Recorder>,
 ) -> Vec<(f64, f64, usize)> {
+    let _sweep = recorder.map(|r| r.span(Stage::Sweep));
     let chunks: Vec<&[usize]> = candidates.chunks(SCORE_CHUNK).collect();
     let scored: Vec<Vec<(f64, f64, usize)>> =
         par_map(jobs, chunks.len(), |c| {
             let chunk = chunks[c];
+            let t0 = Instant::now();
             let mut feats: Vec<f64> =
                 Vec::with_capacity(space.n_visible());
             let mut m = FeatureMatrix::with_capacity(space.n_visible(),
@@ -86,12 +105,18 @@ pub fn score_candidates(
             if let Some(vm) = v {
                 vm.margin_batch_into(&m, &mut margins);
             }
-            chunk
+            let out: Vec<(f64, f64, usize)> = chunk
                 .iter()
                 .zip(scores)
                 .zip(margins)
                 .map(|((&i, s), mg)| (s, mg, i))
-                .collect()
+                .collect();
+            if let Some(r) = recorder {
+                r.record_duration_ns(Stage::SweepChunk,
+                                     t0.elapsed().as_nanos() as u64);
+                r.add(Counter::SweepCandidates, chunk.len() as u64);
+            }
+            out
         });
     scored.into_iter().flatten().collect()
 }
@@ -163,9 +188,14 @@ impl FreePool {
     }
 }
 
-impl Explorer {
+impl<'r> Explorer<'r> {
     pub fn new(epsilon: f64) -> Self {
-        Explorer { epsilon, v_margin: DEFAULT_V_MARGIN, jobs: 1 }
+        Explorer {
+            epsilon,
+            v_margin: DEFAULT_V_MARGIN,
+            jobs: 1,
+            recorder: None,
+        }
     }
 
     pub fn with_v_margin(mut self, v_margin: f64) -> Self {
@@ -177,6 +207,13 @@ impl Explorer {
     /// invariant in this — see [`score_candidates`]).
     pub fn with_jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Record sweep spans / chunk timings on `recorder` (observation
+    /// only; selection is identical with or without it).
+    pub fn with_recorder(mut self, recorder: &'r Recorder) -> Self {
+        self.recorder = Some(recorder);
         self
     }
 
@@ -195,9 +232,25 @@ impl Explorer {
         count: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
+        self.select_with_stats(space, p, v, count, rng).0
+    }
+
+    /// [`select`](Self::select) plus the round's [`SelectStats`]
+    /// (vetoes + picked-candidate margins). The stats are `None` on the
+    /// space-nearly-exhausted shortcut, where no scoring happens. The
+    /// rng stream and the returned picks are byte-identical to
+    /// `select`'s.
+    pub fn select_with_stats(
+        &self,
+        space: &SearchSpace,
+        p: &ModelP,
+        v: Option<&ModelV>,
+        count: usize,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, Option<SelectStats>) {
         let n_left = space.n_unmeasured();
         if n_left <= count {
-            return space.unmeasured();
+            return (space.unmeasured(), None);
         }
         let unmeasured: Vec<usize> = if n_left > MAX_SCORED_CANDIDATES {
             // bound the model sweep on huge spaces (see
@@ -226,14 +279,16 @@ impl Explorer {
         // the "iteratively applies models P and V" of paper §2 and avoids
         // the degenerate behaviour of walking an invalid-dominated tie
         // front and harvesting exactly V's false positives.
-        let mut scored =
-            score_candidates(space, p, v, &unmeasured, self.jobs);
+        let mut scored = score_candidates(space, p, v, &unmeasured,
+                                          self.jobs, self.recorder);
         scored.sort_by(|a, b| {
             // ascending P score, then descending V margin — the same
             // total preorder the old (score, -margin) tie key induced
             (a.0, -a.1).partial_cmp(&(b.0, -b.1)).unwrap()
         });
         let mut picked: Vec<usize> = Vec::with_capacity(count);
+        let mut margins: Vec<f64> = Vec::with_capacity(count);
+        let mut vetoes = 0u64;
         let mut taken = vec![false; scored.len()];
         let mut pool = FreePool::new(scored.len());
         let mut skipped: Vec<usize> = Vec::new(); // rank positions V vetoed
@@ -255,6 +310,7 @@ impl Explorer {
                     pool.take(k);
                     taken[k] = true;
                     picked.push(scored[k].2);
+                    margins.push(scored[k].1);
                 }
                 continue;
             }
@@ -272,9 +328,11 @@ impl Explorer {
             // recomputed per candidate before the batched sweep
             let vetoed = v.is_some() && margin <= self.v_margin;
             if vetoed {
+                vetoes += 1;
                 skipped.push(pos);
             } else {
                 picked.push(idx);
+                margins.push(margin);
             }
             pos += 1;
         }
@@ -284,6 +342,7 @@ impl Explorer {
                 break;
             }
             picked.push(scored[k].2);
+            margins.push(scored[k].1);
         }
         // still short (tiny spaces): fill with remaining ranking order
         if picked.len() < count {
@@ -294,10 +353,14 @@ impl Explorer {
                 if !taken[k] {
                     taken[k] = true;
                     picked.push(scored[k].2);
+                    margins.push(scored[k].1);
                 }
             }
         }
-        picked
+        if let Some(r) = self.recorder {
+            r.add(Counter::VVetoes, vetoes);
+        }
+        (picked, Some(SelectStats { vetoes, margins }))
     }
 }
 
@@ -429,8 +492,8 @@ mod tests {
         let (space, p, v) = trained_models();
         let idx: Vec<usize> =
             (0..space.len()).step_by(2).collect();
-        let seq = score_candidates(&space, &p, Some(&v), &idx, 1);
-        let par = score_candidates(&space, &p, Some(&v), &idx, 4);
+        let seq = score_candidates(&space, &p, Some(&v), &idx, 1, None);
+        let par = score_candidates(&space, &p, Some(&v), &idx, 4, None);
         assert_eq!(seq.len(), idx.len());
         for (a, b) in seq.iter().zip(&par) {
             assert_eq!(a.0.to_bits(), b.0.to_bits());
@@ -443,6 +506,50 @@ mod tests {
             assert_eq!(s.to_bits(), p.predict(&feats).to_bits());
             assert_eq!(mg.to_bits(), v.margin(&feats).to_bits());
         }
+    }
+
+    #[test]
+    fn select_with_stats_matches_select_and_reports_margins() {
+        let (space, p, v) = trained_models();
+        let e = Explorer::new(0.1);
+        let mut rng_a = Rng::new(7);
+        let plain = e.select(&space, &p, Some(&v), 20, &mut rng_a);
+        let mut rng_b = Rng::new(7);
+        let (picked, stats) =
+            e.select_with_stats(&space, &p, Some(&v), 20, &mut rng_b);
+        assert_eq!(plain, picked, "stats variant must not change picks");
+        let stats = stats.expect("scoring ran, stats must be present");
+        assert_eq!(stats.margins.len(), picked.len(),
+                   "one margin per picked candidate");
+        // margins must be the sweep's margins for exactly those picks
+        for (&i, &m) in picked.iter().zip(&stats.margins) {
+            assert_eq!(m.to_bits(), v.margin(&space.visible(i)).to_bits());
+        }
+        // a veto-all margin reports every walked candidate as vetoed
+        let mut rng_c = Rng::new(7);
+        let (_, vstats) = Explorer::new(0.0)
+            .with_v_margin(2.0)
+            .select_with_stats(&space, &p, Some(&v), 10, &mut rng_c);
+        assert!(vstats.unwrap().vetoes > 0);
+    }
+
+    #[test]
+    fn recorder_attachment_does_not_change_selection() {
+        let (space, p, v) = trained_models();
+        let rec = crate::obs::Recorder::new();
+        let mut rng_a = Rng::new(11);
+        let without = Explorer::new(0.1)
+            .with_jobs(2)
+            .select(&space, &p, Some(&v), 20, &mut rng_a);
+        let mut rng_b = Rng::new(11);
+        let with = Explorer::new(0.1)
+            .with_jobs(2)
+            .with_recorder(&rec)
+            .select(&space, &p, Some(&v), 20, &mut rng_b);
+        assert_eq!(without, with);
+        assert!(rec.get(Counter::SweepCandidates) > 0);
+        assert_eq!(rec.stage_total(Stage::Sweep).count, 1);
+        assert!(rec.stage_total(Stage::SweepChunk).count >= 1);
     }
 
     #[test]

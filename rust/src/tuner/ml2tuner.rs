@@ -13,14 +13,17 @@
 //! `use_v=false, use_a=false` degenerates to the TVM approach with a
 //! valid-only P (an intermediate the ablation bench reports).
 
+use std::collections::HashMap;
+
 use super::database::Database;
-use super::explorer::Explorer;
+use super::explorer::{Explorer, SelectStats};
 use super::models::{ModelA, ModelP, ModelV};
 use super::report::TuningTrace;
 use super::space::SearchSpace;
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
 use crate::gbdt::FeatureMatrix;
+use crate::obs::Stage;
 use crate::util::rng::Rng;
 
 /// The multi-level tuner.
@@ -93,11 +96,13 @@ impl Tuner for Ml2Tuner {
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
+            let scope = engine.recorder().begin_round();
+            let before = trace.len();
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let batch = select_batch(cfg, self.use_v, self.use_a, env,
-                                     engine, &space, &db,
-                                     self.warm.as_ref(), &mut rng, round,
-                                     n);
+            let (batch, stats) =
+                select_batch(cfg, self.use_v, self.use_a, env, engine,
+                             &space, &db, self.warm.as_ref(), &mut rng,
+                             round, n);
             if batch.is_empty() {
                 break;
             }
@@ -107,6 +112,10 @@ impl Tuner for Ml2Tuner {
             // any worker count.
             engine.profile_into(env, &batch, &mut space, Some(&mut db),
                                 &mut trace);
+            engine.recorder().end_round(scope, || {
+                super::round_event(env, &trace, before, round,
+                                   cfg.v_margin, stats)
+            });
         }
         trace
     }
@@ -124,6 +133,12 @@ impl Tuner for Ml2Tuner {
 /// from its very first batch instead of burning `min_train` random
 /// trials. With `warm = None` the behaviour is byte-identical to the
 /// cold tuner.
+///
+/// Besides the batch, returns the round's [`SelectStats`] (V veto count
+/// + the picked candidates' V margins, re-aligned through the A
+/// re-ranking) when model V actually filtered this round — the raw
+/// material for the per-round precision/recall telemetry. `None` on the
+/// model-not-ready fallback and on V-less rounds.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
@@ -137,13 +152,16 @@ pub(crate) fn select_batch(
     rng: &mut Rng,
     round: u64,
     n: usize,
-) -> Vec<usize> {
+) -> (Vec<usize>, Option<SelectStats>) {
+    let rec = engine.recorder();
+    let _select = rec.span(Stage::Select);
     let warm = warm.filter(|w| !w.is_empty());
     let n_valid = db.n_valid() + warm.map_or(0, Database::n_valid);
     let n_seen = db.len() + warm.map_or(0, Database::len);
     // Train P once and reuse it (the readiness probe used to train a
     // throwaway model first); P is trainable iff ≥ 2 valid records.
     let p = if n_valid >= 2 && n_seen >= cfg.min_train {
+        let _train = rec.span(Stage::Train);
         match warm {
             Some(w) => {
                 ModelP::train_warm(db, w, cfg.boost_rounds,
@@ -155,9 +173,10 @@ pub(crate) fn select_batch(
         None
     };
     let Some(p) = p else {
-        return space.sample_unmeasured(rng, n);
+        return (space.sample_unmeasured(rng, n), None);
     };
     let v = if use_v {
+        let _train = rec.span(Stage::Train);
         match warm {
             Some(w) => {
                 ModelV::train_warm(db, w, cfg.boost_rounds,
@@ -169,23 +188,29 @@ pub(crate) fn select_batch(
         None
     };
     let pool_n = if use_a { cfg.pool_size() } else { n };
-    let pool = Explorer::new(cfg.epsilon)
+    let (pool, pool_stats) = Explorer::new(cfg.epsilon)
         .with_v_margin(cfg.v_margin)
         .with_jobs(engine.jobs())
-        .select(space, &p, v.as_ref(), pool_n, rng);
-    if use_a && pool.len() > n {
+        .with_recorder(rec)
+        .select_with_stats(space, &p, v.as_ref(), pool_n, rng);
+    let batch: Vec<usize> = if use_a && pool.len() > n {
         // Compile the whole pool (batched, cached), harvest hidden
         // features, re-rank with A. The engine's cache means the `n`
         // winners are NOT recompiled when profiled right after.
-        let a = match warm {
-            Some(w) => {
-                ModelA::train_warm(db, w, cfg.boost_rounds,
-                                   cfg.seed ^ round)
+        let a = {
+            let _train = rec.span(Stage::Train);
+            match warm {
+                Some(w) => {
+                    ModelA::train_warm(db, w, cfg.boost_rounds,
+                                       cfg.seed ^ round)
+                }
+                None => {
+                    ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round)
+                }
             }
-            None => ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round),
         };
         match a {
-            None => pool.into_iter().take(n).collect(),
+            None => pool.iter().copied().take(n).collect(),
             Some(a) => {
                 let compiled = engine.compile_batch(env, &pool);
                 // one reused buffer + one matrix for the whole pool:
@@ -204,15 +229,33 @@ pub(crate) fn select_batch(
                 let mut scores = Vec::with_capacity(pool.len());
                 a.predict_batch_into(&m, &mut scores);
                 let mut scored: Vec<(f64, usize)> =
-                    scores.into_iter().zip(pool).collect();
+                    scores.into_iter().zip(pool.iter().copied()).collect();
                 // stable sort: ties keep pool (P-ranking) order
                 scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
                 scored.into_iter().take(n).map(|(_, i)| i).collect()
             }
         }
     } else {
-        pool.into_iter().take(n).collect()
-    }
+        pool.iter().copied().take(n).collect()
+    };
+    // Re-align the explorer's pool-order margins to the final batch so
+    // the round event can confront V's verdict with each profiled
+    // outcome (pure bookkeeping — no effect on the batch itself).
+    let stats = match (v.is_some(), pool_stats) {
+        (true, Some(s)) => {
+            let by_idx: HashMap<usize, f64> =
+                pool.iter().copied().zip(s.margins).collect();
+            Some(SelectStats {
+                vetoes: s.vetoes,
+                margins: batch
+                    .iter()
+                    .map(|i| by_idx.get(i).copied().unwrap_or(0.0))
+                    .collect(),
+            })
+        }
+        _ => None,
+    };
+    (batch, stats)
 }
 
 #[cfg(test)]

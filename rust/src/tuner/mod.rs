@@ -46,6 +46,52 @@ pub mod salt {
     pub const RANDOM: u64 = 0x52_414e_44;
 }
 
+/// Build the telemetry round event every tuning loop emits after
+/// profiling a batch: outcome counts over the round's new trials
+/// (`trace.trials[before..]`), best-so-far, and — when the explorer
+/// reported [`explorer::SelectStats`] — the V-quality confusion of
+/// predicted validity (`margin > v_margin`) against what profiling
+/// actually observed. Fallback-filled vetoed candidates that got
+/// profiled anyway land in the TN/FN cells, grounding the veto's
+/// negative predictive value.
+pub(crate) fn round_event(
+    env: &TuningEnv,
+    trace: &TuningTrace,
+    before: usize,
+    round: u64,
+    v_margin: f64,
+    stats: Option<explorer::SelectStats>,
+) -> crate::obs::RoundEvent {
+    let new = &trace.trials[before..];
+    let valid = new.iter().filter(|t| t.outcome.is_valid()).count();
+    let crash =
+        new.iter().filter(|t| t.outcome == Outcome::Crash).count();
+    let wrong =
+        new.iter().filter(|t| t.outcome == Outcome::WrongOutput).count();
+    let v = stats.map(|s| {
+        let actual: Vec<bool> =
+            new.iter().map(|t| t.outcome.is_valid()).collect();
+        let (tp, fp, tn, fn_) =
+            crate::obs::confusion(&s.margins, v_margin, &actual);
+        crate::obs::VQuality { vetoes: s.vetoes, tp, fp, tn, fn_, v_margin }
+    });
+    crate::obs::RoundEvent {
+        target: env.hw().target.to_string(),
+        layer: trace.layer.clone(),
+        tuner: trace.tuner.clone(),
+        space: env.kind().name().to_string(),
+        round,
+        trials_new: new.len() as u64,
+        trials_total: trace.len() as u64,
+        valid_new: valid as u64,
+        crash_new: crash as u64,
+        wrong_new: wrong as u64,
+        best_cycles: trace.best_cycles(),
+        trials_to_best: trace.trials_to_best().map(|t| t as u64),
+        v,
+    }
+}
+
 /// Classify a simulator verdict into a profiling outcome (paper §A.2:
 /// register errors crash the board, hazard corruption "succeeds" with a
 /// wrong result; both are invalid).

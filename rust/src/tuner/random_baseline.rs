@@ -5,6 +5,7 @@
 use super::report::TuningTrace;
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
+use crate::obs::Stage;
 use crate::util::rng::Rng;
 
 pub struct RandomTuner {
@@ -31,10 +32,21 @@ impl Tuner for RandomTuner {
         let mut rng = Rng::new(cfg.seed ^ salt::RANDOM);
         let mut space = env.space.clone();
         let mut trace = TuningTrace::new(env.layer.name, self.name());
+        let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
+            round += 1;
+            let scope = engine.recorder().begin_round();
+            let before = trace.len();
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let batch = space.sample_unmeasured(&mut rng, n);
+            let batch = {
+                let _select = engine.recorder().span(Stage::Select);
+                space.sample_unmeasured(&mut rng, n)
+            };
             engine.profile_into(env, &batch, &mut space, None, &mut trace);
+            engine.recorder().end_round(scope, || {
+                super::round_event(env, &trace, before, round,
+                                   cfg.v_margin, None)
+            });
         }
         trace
     }

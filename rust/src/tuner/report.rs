@@ -86,6 +86,17 @@ impl TuningTrace {
         self.best_curve().iter().position(|&b| b <= target).map(|i| i + 1)
     }
 
+    /// 1-based trial count at which the run's overall best was first
+    /// reached ("samples to best-so-far"; the telemetry round events
+    /// carry this per round). `None` until the first valid trial.
+    pub fn trials_to_best(&self) -> Option<usize> {
+        let best = self.best_cycles()?;
+        self.trials
+            .iter()
+            .position(|t| t.outcome.cycles() == Some(best))
+            .map(|i| i + 1)
+    }
+
     /// Paper's convergence criterion ("the same value repeated more than
     /// 10 times", i.e. no improvement for `window` trailing trials):
     /// returns `(trials_to_converge, converged_value)` where

@@ -10,6 +10,7 @@ use super::report::TuningTrace;
 use super::space::SearchSpace;
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
+use crate::obs::Stage;
 use crate::util::rng::Rng;
 
 pub struct TvmTuner {
@@ -40,14 +41,20 @@ impl Tuner for TvmTuner {
         let mut round = 0u64;
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
+            let scope = engine.recorder().begin_round();
+            let before = trace.len();
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let batch = select_batch(cfg, &space, &db, &mut rng, round,
-                                     n, engine.jobs());
+            let batch =
+                select_batch(cfg, &space, &db, &mut rng, round, n, engine);
             if batch.is_empty() {
                 break;
             }
             engine.profile_into(env, &batch, &mut space, Some(&mut db),
                                 &mut trace);
+            engine.recorder().end_round(scope, || {
+                super::round_event(env, &trace, before, round,
+                                   cfg.v_margin, None)
+            });
         }
         trace
     }
@@ -56,8 +63,9 @@ impl Tuner for TvmTuner {
 /// One round of TVM-approach candidate selection: penalty-P top-N with
 /// ε-greedy exploration, no validity model, no hidden features. Shared
 /// by [`TvmTuner`] and the network scheduler's incremental sessions.
-/// `jobs` shards the scoring sweep (trace-invariant, see
-/// [`crate::tuner::explorer::score_candidates`]).
+/// The engine contributes its `jobs` count (sharding the scoring sweep,
+/// trace-invariant — see [`crate::tuner::explorer::score_candidates`])
+/// and its telemetry recorder.
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
     space: &SearchSpace,
@@ -65,15 +73,22 @@ pub(crate) fn select_batch(
     rng: &mut Rng,
     round: u64,
     n: usize,
-    jobs: usize,
+    engine: &Engine,
 ) -> Vec<usize> {
+    let rec = engine.recorder();
+    let _select = rec.span(Stage::Select);
     if db.len() < cfg.min_train {
         return space.sample_unmeasured(rng, n);
     }
-    match ModelP::train_tvm(db, cfg.boost_rounds, cfg.seed ^ round) {
+    let p = {
+        let _train = rec.span(Stage::Train);
+        ModelP::train_tvm(db, cfg.boost_rounds, cfg.seed ^ round)
+    };
+    match p {
         None => space.sample_unmeasured(rng, n),
         Some(p) => Explorer::new(cfg.epsilon)
-            .with_jobs(jobs)
+            .with_jobs(engine.jobs())
+            .with_recorder(rec)
             .select(space, &p, None, n, rng),
     }
 }

@@ -233,9 +233,10 @@ fn extended_space_sweep_is_jobs_invariant() {
     // strided extended-space candidate list crossing many chunk
     // boundaries
     let idx: Vec<usize> = (0..space.len()).step_by(3).collect();
-    let baseline = score_candidates(&space, &p, Some(&v), &idx, 1);
+    let baseline = score_candidates(&space, &p, Some(&v), &idx, 1, None);
     for jobs in [2usize, 8] {
-        let par = score_candidates(&space, &p, Some(&v), &idx, jobs);
+        let par =
+            score_candidates(&space, &p, Some(&v), &idx, jobs, None);
         assert_eq!(baseline.len(), par.len());
         for (a, b) in baseline.iter().zip(&par) {
             assert_eq!(a.0.to_bits(), b.0.to_bits(), "jobs={jobs}");

@@ -1,0 +1,316 @@
+//! ISSUE-6 guarantees for the telemetry subsystem.
+//!
+//! 1. **Non-interference**: a run with `--metrics-out` attached produces
+//!    the byte-identical tuning trace of a sink-less run — on both knob
+//!    spaces, for the standalone tuner and the network scheduler.
+//!    Telemetry observes; it never touches an rng stream or reorders
+//!    work.
+//! 2. **Schema**: every emitted line passes the strict `report`
+//!    validator (the same code CI runs as its schema check), events
+//!    arrive in deterministic order (`run_start`, rounds, `run_end`),
+//!    and malformed lines are rejected with a file:line context.
+//! 3. **Aggregation**: `report::aggregate` folds a real event stream
+//!    into totals consistent with the trace that produced it, and folds
+//!    a hand-written fixture into exactly the expected numbers.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::engine::{Engine, NetworkConfig, NetworkTuner, TunerKind};
+use ml2tuner::obs::report::{aggregate, validate_line};
+use ml2tuner::obs::{Counter, EventSink};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::json::Json;
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::resnet18;
+
+/// `Write` into a shared buffer, so the test can hand an owned sink to
+/// the recorder and still read everything it wrote.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn into_string(self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One standalone ml2tuner run on conv5; returns the trace fingerprint
+/// and (when `sink`) the emitted JSONL.
+fn ml2_run(kind: SpaceKind, sink: bool) -> (Vec<(usize, Option<u64>)>, String) {
+    let env = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        resnet18::layer("conv5").unwrap(),
+        kind,
+    );
+    let engine = Engine::with_jobs(2);
+    let buf = SharedBuf::default();
+    if sink {
+        engine
+            .recorder()
+            .attach_sink(EventSink::from_writer(Box::new(buf.clone())));
+        engine.recorder().emit_run_start(
+            "tune",
+            vec![
+                ("layer", Json::Str("conv5".to_string())),
+                ("seed", Json::Num(3.0)),
+            ],
+        );
+    }
+    let cfg = TunerConfig { seed: 3, max_trials: 60, ..Default::default() };
+    let trace = Ml2Tuner::new(cfg).tune_with(&env, &engine);
+    engine.recorder().emit_run_end();
+    let fp = trace
+        .trials
+        .iter()
+        .map(|t| (t.space_index, t.outcome.cycles()))
+        .collect();
+    (fp, buf.into_string())
+}
+
+#[test]
+fn metrics_sink_does_not_perturb_traces_on_either_space() {
+    for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+        let (bare, _) = ml2_run(kind, false);
+        let (observed, events) = ml2_run(kind, true);
+        assert_eq!(bare, observed,
+                   "telemetry changed the {kind:?} trace");
+        assert!(!events.is_empty());
+    }
+}
+
+#[test]
+fn emitted_stream_is_schema_valid_and_deterministically_ordered() {
+    let (trace, events) = ml2_run(SpaceKind::Paper, true);
+    let lines: Vec<&str> = events.lines().collect();
+    assert!(lines.len() >= 3, "expected start + rounds + end");
+    let kinds: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            let j = validate_line(l).expect("schema-valid line");
+            assert_eq!(j.get("schema").unwrap().as_i64(), Some(1));
+            j.get("event").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(kinds.first().map(String::as_str), Some("run_start"));
+    assert_eq!(kinds.last().map(String::as_str), Some("run_end"));
+    let rounds = kinds.iter().filter(|k| *k == "round").count();
+    assert!(rounds >= 2, "one event per tuning round, got {rounds}");
+    assert_eq!(kinds.len(), rounds + 2, "only start/round/end events");
+    // round numbers strictly increase: emission is coordinator-ordered
+    let mut last = 0i64;
+    let mut trials_total = 0i64;
+    for l in &lines {
+        let j = Json::parse(l).unwrap();
+        if j.get("event").unwrap().as_str() == Some("round") {
+            let r = j.get("round").unwrap().as_i64().unwrap();
+            assert!(r > last, "round {r} after {last}");
+            last = r;
+            trials_total += j.get("trials_new").unwrap().as_i64().unwrap();
+        }
+    }
+    assert_eq!(trials_total as usize, trace.len(),
+               "round events must account for every profiled trial");
+}
+
+#[test]
+fn run_counters_match_the_trace() {
+    let env = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        resnet18::layer("conv5").unwrap(),
+        SpaceKind::Paper,
+    );
+    let engine = Engine::with_jobs(2);
+    let cfg = TunerConfig { seed: 5, max_trials: 40, ..Default::default() };
+    let trace = Ml2Tuner::new(cfg).tune_with(&env, &engine);
+    let rec = engine.recorder();
+    assert_eq!(rec.get(Counter::TrialsProfiled), trace.len() as u64);
+    let valid = trace.trials.iter().filter(|t| t.outcome.is_valid()).count();
+    assert_eq!(rec.get(Counter::TrialsValid), valid as u64);
+    assert_eq!(
+        rec.get(Counter::TrialsCrash) + rec.get(Counter::TrialsWrongOutput),
+        (trace.len() - valid) as u64
+    );
+    // the scoring sweep ran and the cache saw the A-stage compiles
+    assert!(rec.get(Counter::SweepCandidates) > 0);
+    let stats = engine.cache().stats();
+    assert_eq!(stats.hits, rec.get(Counter::CompileCacheHit));
+    assert_eq!(stats.misses, rec.get(Counter::CompileCacheMiss));
+}
+
+fn network_fingerprint(sink: bool) -> Vec<(usize, Option<u64>)> {
+    let layers = vec![
+        resnet18::layer("conv4").unwrap(),
+        resnet18::layer("conv5").unwrap(),
+    ];
+    let engine = Engine::with_jobs(2);
+    if sink {
+        engine
+            .recorder()
+            .attach_sink(EventSink::from_writer(Box::new(std::io::sink())));
+        engine.recorder().emit_run_start("tune-net", vec![]);
+    }
+    let cfg = NetworkConfig {
+        vta: VtaConfig::zcu102(),
+        tuner: TunerKind::Ml2,
+        total_trials: 60,
+        round_trials: 10,
+        base: TunerConfig { seed: 7, ..Default::default() },
+        ..Default::default()
+    };
+    let outcome = NetworkTuner::new(cfg).tune(&engine, &layers);
+    engine.recorder().emit_run_end();
+    outcome
+        .traces
+        .iter()
+        .flat_map(|t| {
+            t.trials.iter().map(|r| (r.space_index, r.outcome.cycles()))
+        })
+        .collect()
+}
+
+#[test]
+fn network_scheduler_traces_are_sink_invariant() {
+    assert_eq!(network_fingerprint(false), network_fingerprint(true));
+}
+
+#[test]
+fn aggregate_folds_a_real_run_consistently() {
+    let (trace, events) = ml2_run(SpaceKind::Paper, true);
+    let dir = std::env::temp_dir().join("ml2tuner_telemetry_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.jsonl");
+    std::fs::write(&path, &events).unwrap();
+    let report = aggregate(&[&path]).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(report.files, 1);
+    assert_eq!(report.runs, 1);
+    assert!(report.rounds >= 2);
+    let agg = report.targets.get("zcu102").expect("zcu102 rollup");
+    assert_eq!(agg.trials as usize, trace.len());
+    assert_eq!(
+        agg.valid as usize,
+        trace.iter().filter(|(_, cycles)| cycles.is_some()).count()
+    );
+    // run_end lifetime totals are authoritative for the cache line
+    assert!(report.cache_from_run_end);
+    assert!(report.cache_lookups() > 0);
+    let rendered = report.render();
+    for needle in [
+        "per-stage time breakdown",
+        "compile cache",
+        "model quality",
+        "zcu102",
+    ] {
+        assert!(rendered.contains(needle), "missing {needle:?}");
+    }
+}
+
+#[test]
+fn aggregate_computes_model_quality_from_a_fixture() {
+    let mk_round = |round: u64, layer: &str, with_v: bool| {
+        let mut o = Json::obj();
+        o.set("schema", 1)
+            .set("event", "round")
+            .set("target", "zcu102")
+            .set("layer", layer)
+            .set("tuner", "ml2tuner")
+            .set("space", "paper")
+            .set("round", round)
+            .set("trials_new", 10)
+            .set("trials_total", 10 * round)
+            .set("valid_new", 8)
+            .set("crash_new", 2)
+            .set("wrong_new", 0)
+            .set("select_ns", 400)
+            .set("train_ns", 100)
+            .set("sweep_ns", 150)
+            .set("sweep_chunks", 4)
+            .set("compile_ns", 50)
+            .set("profile_ns", 600)
+            .set("cache_hits", 5)
+            .set("cache_misses", 15)
+            .set("best_cycles", 9000)
+            .set("trials_to_best", 4 + round);
+        if with_v {
+            o.set("vetoes", 12)
+                .set("v_tp", 6)
+                .set("v_fp", 2)
+                .set("v_tn", 1)
+                .set("v_fn", 1)
+                .set("v_margin", 0.25);
+        }
+        o.to_string()
+    };
+    let mut start = Json::obj();
+    start.set("schema", 1).set("event", "run_start").set("cmd", "tune");
+    let fixture = format!(
+        "{}\n{}\n{}\n",
+        start,
+        mk_round(1, "conv1", false),
+        mk_round(2, "conv1", true),
+    );
+    let dir = std::env::temp_dir().join("ml2tuner_telemetry_fixture");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fixture.jsonl");
+    std::fs::write(&path, &fixture).unwrap();
+    let report = aggregate(&[&path]).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!((report.runs, report.rounds), (1, 2));
+    assert_eq!(report.select_ns, 800);
+    assert_eq!(report.train_ns, 200);
+    assert_eq!(report.total_ns(), 800 + 1200);
+    // select-other = select − train − sweep − compile
+    assert_eq!(report.select_other_ns(), 800 - 200 - 300 - 100);
+    // no run_end in the fixture: cache totals are summed round deltas
+    assert!(!report.cache_from_run_end);
+    assert_eq!((report.cache_hits, report.cache_misses), (10, 30));
+    let agg = &report.targets["zcu102"];
+    assert_eq!(agg.v_rounds, 1);
+    assert_eq!(agg.precision(), Some(6.0 / 8.0));
+    assert_eq!(agg.recall(), Some(6.0 / 7.0));
+    assert_eq!(agg.npv(), 0.5);
+    assert_eq!(agg.invalid_avoided(), 6.0);
+    // last round's samples-to-best wins
+    assert_eq!(agg.per_layer_best["conv1"], (Some(6), Some(9000)));
+    assert_eq!(agg.mean_trials_to_best(), Some(6.0));
+}
+
+#[test]
+fn malformed_events_are_rejected_with_line_context() {
+    assert!(validate_line("not json").is_err());
+    assert!(validate_line("{\"event\": \"round\"}").is_err(),
+            "missing schema field must fail");
+    assert!(
+        validate_line("{\"schema\": 99, \"event\": \"run_start\", \
+                       \"cmd\": \"tune\"}")
+        .is_err(),
+        "unknown schema version must fail"
+    );
+    let dir = std::env::temp_dir().join("ml2tuner_telemetry_bad");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.jsonl");
+    std::fs::write(
+        &path,
+        "{\"schema\": 1, \"event\": \"run_start\", \"cmd\": \"tune\"}\n\
+         {\"schema\": 1, \"event\": \"nonsense\"}\n",
+    )
+    .unwrap();
+    let err = aggregate(&[&path]).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(":2"), "error should carry file:line: {msg}");
+}

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Tests for scripts/bench_report.py — the bench-regression gate's
+folding and baseline-comparison logic.
+
+Run with either of:
+
+    python3 -m unittest scripts.test_bench_report
+    python3 -m pytest scripts/test_bench_report.py
+
+Focus: the bootstrap-empty-baseline advisory pass (a fresh repo ships
+BENCH_baseline.json with "benches": {}) and partial-overlap
+comparisons, per ISSUE 6.
+"""
+
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_report  # noqa: E402
+
+
+def entry(median_ns):
+    return {"median_ns": median_ns, "mean_ns": median_ns, "iters": 10}
+
+
+class FoldTest(unittest.TestCase):
+    def test_fold_last_write_wins(self):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".jsonl", delete=False
+        ) as f:
+            for median in (100, 200):
+                f.write(json.dumps({
+                    "suite": "tuner_bench", "name": "sweep",
+                    "median_ns": median, "mean_ns": median, "iters": 3,
+                }) + "\n")
+            f.write("\n")  # blank lines are skipped
+            path = f.name
+        try:
+            benches = bench_report.fold(path)
+        finally:
+            os.unlink(path)
+        self.assertEqual(list(benches), ["tuner_bench/sweep"])
+        self.assertEqual(benches["tuner_bench/sweep"]["median_ns"], 200)
+
+
+class CompareTest(unittest.TestCase):
+    def test_partial_overlap_compares_shared_keys_only(self):
+        current = {"a": entry(100), "b": entry(300), "new": entry(50)}
+        baseline = {"a": entry(100), "b": entry(200), "gone": entry(10)}
+        regs, imps, compared = bench_report.compare(
+            current, baseline, 0.20
+        )
+        # "new" has no baseline, "gone" no longer runs: neither counts
+        self.assertEqual(compared, 2)
+        self.assertEqual([k for k, *_ in regs], ["b"])  # +50% > 20%
+        self.assertEqual(imps, [])
+
+    def test_zero_median_baseline_entry_is_skipped(self):
+        # a hand-edited or corrupt baseline entry must not divide by zero
+        current = {"a": entry(100)}
+        baseline = {"a": entry(0)}
+        regs, imps, compared = bench_report.compare(
+            current, baseline, 0.20
+        )
+        self.assertEqual((regs, imps, compared), ([], [], 0))
+
+    def test_improvement_is_reported_not_failed(self):
+        current = {"a": entry(50)}
+        baseline = {"a": entry(100)}
+        regs, imps, compared = bench_report.compare(
+            current, baseline, 0.20
+        )
+        self.assertEqual(regs, [])
+        self.assertEqual([k for k, _ in imps], ["a"])
+        self.assertEqual(compared, 1)
+
+
+class BaselineGateTest(unittest.TestCase):
+    def _run(self, benches, baseline_obj, threshold=0.20):
+        """check_against_baseline with a temp baseline file (or a
+        missing path when baseline_obj is None); returns (code, out)."""
+        if baseline_obj is None:
+            path = os.path.join(tempfile.mkdtemp(), "missing.json")
+        else:
+            with tempfile.NamedTemporaryFile(
+                "w", suffix=".json", delete=False
+            ) as f:
+                json.dump(baseline_obj, f)
+                path = f.name
+        buf = io.StringIO()
+        try:
+            with redirect_stdout(buf):
+                code = bench_report.check_against_baseline(
+                    benches, path, threshold
+                )
+        finally:
+            if baseline_obj is not None:
+                os.unlink(path)
+        return code, buf.getvalue()
+
+    def test_bootstrap_empty_baseline_is_advisory_pass(self):
+        code, out = self._run(
+            {"a": entry(100)}, {"schema": 1, "benches": {}}
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("no baseline — advisory pass", out)
+        self.assertNotIn("compared", out)
+
+    def test_missing_baseline_file_is_advisory_pass(self):
+        code, out = self._run({"a": entry(100)}, None)
+        self.assertEqual(code, 0)
+        self.assertIn("no baseline — advisory pass", out)
+
+    def test_regression_beyond_threshold_fails(self):
+        code, out = self._run(
+            {"a": entry(150)},
+            {"schema": 1, "benches": {"a": entry(100)}},
+        )
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSED a", out)
+
+    def test_within_threshold_passes_with_comparison_summary(self):
+        code, out = self._run(
+            {"a": entry(110), "only-current": entry(5)},
+            {"schema": 1, "benches": {"a": entry(100)}},
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("compared 1 benchmarks", out)
+        self.assertIn("no median regressions", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
