@@ -5,7 +5,7 @@ with extended-VTA semantics (int8 x int8 -> int32 accumulate -> shift + clip
 -> int8). We express it as an im2col GEMM whose inner blocked matmul is a
 Pallas kernel.
 
-Hardware-adaptation notes (DESIGN.md SS Hardware-Adaptation):
+Hardware-adaptation notes (how VTA's scratchpad schedule maps to Pallas):
 
   * VTA stages (block=16)-sized input/weight tiles in its INP/WGT scratchpads
     and accumulates in the ACC scratchpad. The Pallas BlockSpec plays the same

@@ -36,35 +36,51 @@ use crate::workloads::ConvLayer;
 /// half of the hidden features (paper §B.2), plus cost accounting.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CompileStats {
+    /// Instructions emitted.
     pub n_instrs: usize,
+    /// DMA load instructions.
     pub n_loads: usize,
+    /// Memset (reset) instructions.
     pub n_memsets: usize,
+    /// GEMM instructions.
     pub n_gemms: usize,
+    /// ALU instructions.
     pub n_alus: usize,
+    /// DMA store instructions.
     pub n_stores: usize,
-    /// Dummy (zero-fill) vectors emitted for interior tiles / boundary tiles
-    /// — the paper's `outDummyH(b0==0)` / `outDummyH(b0!=0)`.
+    /// Dummy (zero-fill) vectors emitted for interior tiles — the
+    /// paper's `outDummyH(b0==0)`.
     pub dummy_vecs_interior: u64,
+    /// Dummy vectors for boundary tiles — `outDummyH(b0!=0)`.
     pub dummy_vecs_boundary: u64,
-    /// Dummy halo *rows* per tile class.
+    /// Dummy halo rows emitted for interior tiles.
     pub dummy_rows_interior: u64,
+    /// Dummy halo rows emitted for boundary tiles.
     pub dummy_rows_boundary: u64,
+    /// Full-size (interior) tiles lowered.
     pub tiles_interior: usize,
+    /// Remainder (boundary) tiles lowered.
     pub tiles_boundary: usize,
+    /// GEMM block operations emitted.
     pub gemm_block_ops: u64,
     /// Block-ops spent in reset (zero-fill) passes — not real MACs.
     pub reset_block_ops: u64,
+    /// Total DMA traffic in bytes.
     pub dma_bytes: u64,
-    /// Branch flags observed during lowering.
+    /// Whether the virtual-thread lowering branch was taken.
     pub vthread_branch_taken: bool,
+    /// Whether the thread split left uneven per-thread work.
     pub uneven_thread_split: bool,
 }
 
 /// Output of one compilation.
 #[derive(Clone, Debug)]
 pub struct Compiled {
+    /// The lowered VTA program.
     pub program: Program,
+    /// Dynamic emission statistics collected while lowering.
     pub stats: CompileStats,
+    /// The resolved tile geometry the program was lowered under.
     pub analysis: TileAnalysis,
 }
 

@@ -22,7 +22,7 @@ use super::passes::TileAnalysis;
 use super::schedule::SpaceKind;
 
 /// Paper hidden-feature names, aligned with the first
-/// [`hidden_len(SpaceKind::Paper)`] entries of [`hidden_features`].
+/// [`hidden_len`]`(SpaceKind::Paper)` entries of [`hidden_features`].
 ///
 /// Exactly the paper's Table 5 hidden-feature list: geometry resolved by
 /// legalization, boundary/dummy regions, and branch flags. Raw codegen

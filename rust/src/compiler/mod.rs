@@ -24,7 +24,9 @@ use schedule::{Schedule, SpaceKind};
 /// [`SpaceKind::Extended`].
 #[derive(Clone, Debug)]
 pub struct Compiler {
+    /// The hardware target compiled for.
     pub cfg: VtaConfig,
+    /// Knob-space kind selecting the hidden-feature layout.
     pub kind: SpaceKind,
 }
 
@@ -34,6 +36,7 @@ impl Compiler {
         Compiler::with_kind(cfg, SpaceKind::Paper)
     }
 
+    /// Compiler for an explicit space kind.
     pub fn with_kind(cfg: VtaConfig, kind: SpaceKind) -> Self {
         Compiler { cfg, kind }
     }

@@ -13,49 +13,67 @@ use crate::workloads::ConvLayer;
 /// Resolved tile geometry for one (layer, schedule) pair.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TileAnalysis {
-    /// Legalized knobs (clamped to the layer, `tile_ic` snapped to a
-    /// divisor of `C`).
+    /// Legalized tile height (clamped to the layer).
     pub th: usize,
+    /// Legalized tile width.
     pub tw: usize,
+    /// Legalized output-channel tile.
     pub toc: usize,
+    /// Legalized input-channel tile (snapped to a divisor of `C`).
     pub tic: usize,
+    /// Legalized virtual-thread count.
     pub nvt: usize,
 
-    /// Tile grid.
+    /// Tile-grid extent along output height.
     pub tiles_h: usize,
+    /// Tile-grid extent along output width.
     pub tiles_w: usize,
+    /// Tile-grid extent along output channels.
     pub tiles_oc: usize,
     /// Channel chunks per tile (`C / tic`).
     pub n_ci: usize,
 
-    /// Block counts: `toc/16`, `tic/16`, `KC/16`, `C/16`.
+    /// Output-channel blocks per tile (`toc/16`).
     pub nbc: usize,
+    /// Input-channel blocks per chunk (`tic/16`).
     pub cbc: usize,
+    /// Output-channel blocks of the whole layer (`KC/16`).
     pub kcb: usize,
+    /// Input-channel blocks of the whole layer (`C/16`).
     pub cb_total: usize,
 
-    /// Boundary remainders (0 ⇒ exact division; the `b0 != 0` branch of the
-    /// paper's feature names is "this tile is a boundary tile").
+    /// Boundary-tile height remainder (0 ⇒ exact division; the
+    /// `b0 != 0` branch of the paper's feature names is "this tile is a
+    /// boundary tile").
     pub th_last: usize,
+    /// Boundary-tile width remainder.
     pub tw_last: usize,
+    /// Boundary-tile output-channel-block remainder.
     pub nbc_last: usize,
 
-    /// Input halo extents for an interior (full-size) tile.
+    /// Input halo height of an interior (full-size) tile.
     pub in_tile_h: usize,
+    /// Input halo width of an interior tile.
     pub in_tile_w: usize,
-    /// …and for the boundary (remainder) tile.
+    /// Input halo height of the boundary (remainder) tile.
     pub in_tile_h_last: usize,
+    /// Input halo width of the boundary tile.
     pub in_tile_w_last: usize,
 
-    /// Scratchpad footprints (element units) for a full-size tile.
+    /// Accumulator footprint (elements) of a full-size tile.
     pub acc_tile: usize,
+    /// Input footprint (elements) of a full-size tile.
     pub inp_tile: usize,
+    /// Weight-chunk footprint (elements).
     pub wgt_chunk: usize,
+    /// Micro-op table entries one tile needs.
     pub uop_count: usize,
 
-    /// Per-virtual-thread scratchpad slices the compiler *assumes*.
+    /// Per-virtual-thread input scratchpad slice the compiler assumes.
     pub inp_slice: usize,
+    /// Per-virtual-thread weight scratchpad slice.
     pub wgt_slice: usize,
+    /// Per-virtual-thread accumulator slice.
     pub acc_slice: usize,
 
     /// Load-buffer slots per thread (2 = double buffering, paper-fixed;
@@ -74,6 +92,7 @@ pub struct TileAnalysis {
 }
 
 impl TileAnalysis {
+    /// Total tiles in the grid.
     pub fn n_tiles(&self) -> usize {
         self.tiles_h * self.tiles_w * self.tiles_oc
     }

@@ -39,16 +39,24 @@ use crate::workloads::ConvLayer;
 
 // ------------------------------------------------------------ knob defs --
 
-/// Knob names, in declaration order. `Schedule` field accessors are keyed
-/// by these names; serialization writes them next to their values so
-/// tuning logs stay readable across space versions (unknown names in old
-/// or future logs are simply skipped on load).
+// Knob names, in declaration order. `Schedule` field accessors are keyed
+// by these names; serialization writes them next to their values so
+// tuning logs stay readable across space versions (unknown names in old
+// or future logs are simply skipped on load).
+
+/// Output-tile height knob.
 pub const KNOB_TH: &str = "TH";
+/// Output-tile width knob.
 pub const KNOB_TW: &str = "TW";
+/// Output-channels-per-tile knob.
 pub const KNOB_OC: &str = "tileOC";
+/// Input-channels-per-chunk knob.
 pub const KNOB_IC: &str = "tileIC";
+/// Virtual-thread-count knob.
 pub const KNOB_VT: &str = "nVirtualThread";
+/// Load-buffer-slots knob (extended space).
 pub const KNOB_SLOTS: &str = "nLoadSlots";
+/// Kernel-unroll knob (extended space).
 pub const KNOB_UNROLL: &str = "kernelUnroll";
 
 /// The knob universe this build understands (paper five + extensions).
@@ -224,6 +232,7 @@ const EXTENDED_EXTRA_FEATURES: &[&[&str]] = &[
 ];
 
 impl SpaceKind {
+    /// Parse a CLI space name (`paper`, `extended`/`ext`).
     pub fn parse(name: &str) -> Option<SpaceKind> {
         match name {
             "paper" => Some(SpaceKind::Paper),
@@ -232,6 +241,7 @@ impl SpaceKind {
         }
     }
 
+    /// Canonical space name, as stamped into logs.
     pub fn name(&self) -> &'static str {
         match self {
             SpaceKind::Paper => "paper",
@@ -277,6 +287,7 @@ impl SpaceKind {
             .collect()
     }
 
+    /// Width of the visible feature vector.
     pub fn n_visible(&self) -> usize {
         self.feature_terms().len()
     }
@@ -314,6 +325,7 @@ pub struct FeatureGen {
 }
 
 impl FeatureGen {
+    /// Resolve the kind's feature registry into knob indices.
     pub fn new(kind: SpaceKind) -> FeatureGen {
         let terms = kind
             .feature_terms()
@@ -332,6 +344,7 @@ impl FeatureGen {
         FeatureGen { terms }
     }
 
+    /// Width of the generated feature rows.
     pub fn n_features(&self) -> usize {
         self.terms.len()
     }
@@ -352,7 +365,9 @@ impl FeatureGen {
 /// One named tuning knob: an ordered candidate-value list.
 #[derive(Clone, Debug)]
 pub struct Knob {
+    /// Knob name (one of the `KNOB_*` constants).
     pub name: &'static str,
+    /// Candidate values, enumeration order.
     pub values: Vec<usize>,
 }
 
@@ -360,6 +375,7 @@ pub struct Knob {
 /// the space's knob order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Config {
+    /// One value per knob, space knob order.
     pub values: Vec<usize>,
 }
 
@@ -380,6 +396,7 @@ pub struct ConfigSpace {
 }
 
 impl ConfigSpace {
+    /// Space over the cross product of the given knobs.
     pub fn new(kind: SpaceKind, knobs: Vec<Knob>) -> Self {
         let len = knobs
             .iter()
@@ -389,10 +406,12 @@ impl ConfigSpace {
         ConfigSpace { kind, knobs, len, features: FeatureGen::new(kind) }
     }
 
+    /// The knob-set kind this space was built from.
     pub fn kind(&self) -> SpaceKind {
         self.kind
     }
 
+    /// The knobs, declaration order.
     pub fn knobs(&self) -> &[Knob] {
         &self.knobs
     }
@@ -402,6 +421,7 @@ impl ConfigSpace {
         self.len
     }
 
+    /// Whether the space has no points.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -498,7 +518,7 @@ impl ConfigSpace {
 
 // ------------------------------------------------------------ candidates --
 
-/// Per-layer candidate knobs (DESIGN.md §Search space): divisors of the
+/// Per-layer candidate knobs (ARCHITECTURE.md §Search space): divisors of the
 /// output extent plus multiples of 4, channel-block multiples, 1/2/4/8/16
 /// virtual threads; the extended kind adds the load-slot toggle and the
 /// kernel-unroll factor. The space is the lazy cross product.

@@ -22,6 +22,7 @@ pub enum StaticCheck {
 }
 
 impl StaticCheck {
+    /// Whether the check passed (which still guarantees nothing).
     pub fn is_plausible(&self) -> bool {
         matches!(self, StaticCheck::Plausible)
     }

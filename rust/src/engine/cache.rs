@@ -38,7 +38,9 @@ use crate::workloads::ConvLayer;
 /// (model A's extra inputs), extracted once.
 #[derive(Clone, Debug)]
 pub struct CachedCompile {
+    /// The lowered kernel.
     pub compiled: Compiled,
+    /// Hidden features extracted from the lowered kernel.
     pub hidden: Vec<f64>,
 }
 
@@ -53,15 +55,19 @@ impl CachedCompile {
 /// Cache hit/miss counters (a *miss* is an actual compilation).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that compiled.
     pub misses: u64,
 }
 
 impl CacheStats {
+    /// Total lookups (hits + misses).
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// Hit fraction of all lookups (0.0 when none yet).
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             0.0
@@ -124,6 +130,7 @@ impl Default for CompileCache {
 }
 
 impl CompileCache {
+    /// Cache with the default entry and instruction bounds.
     pub fn new() -> Self {
         Self::with_capacity(DEFAULT_MAX_ENTRIES, DEFAULT_MAX_TOTAL_COST)
     }
@@ -163,10 +170,12 @@ impl CompileCache {
         self.inner.lock().unwrap().map.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Lifetime hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.recorder.get(Counter::CompileCacheHit),

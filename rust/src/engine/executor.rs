@@ -56,8 +56,13 @@ impl Default for EngineConfig {
 /// during hidden-feature extraction are never repaid at profiling time or
 /// in later rounds.
 pub struct Engine {
+    /// Executor knobs this engine was built with.
     pub cfg: EngineConfig,
-    cache: CompileCache,
+    /// Shared-ownership compile cache: single-run engines own theirs
+    /// exclusively, while the serve daemon hands one cache to every
+    /// per-job engine ([`Engine::with_shared_cache`]) so concurrent jobs
+    /// compile each `(layer, schedule)` once.
+    cache: Arc<CompileCache>,
     /// Telemetry recorder shared with the cache (and handed to the
     /// tuning loops via [`Engine::recorder`]): stage spans, outcome
     /// counters, and the optional `--metrics-out` event sink.
@@ -71,6 +76,7 @@ impl Default for Engine {
 }
 
 impl Engine {
+    /// Engine with a fresh private recorder.
     pub fn new(cfg: EngineConfig) -> Self {
         Engine::with_recorder(cfg, Arc::new(Recorder::new()))
     }
@@ -79,11 +85,25 @@ impl Engine {
     /// attaches one `--metrics-out` sink to a whole run). The compile
     /// cache counts its hits/misses on the same recorder.
     pub fn with_recorder(cfg: EngineConfig, recorder: Arc<Recorder>) -> Self {
-        let cache = CompileCache::with_recorder(
+        let cache = Arc::new(CompileCache::with_recorder(
             cfg.max_cache_entries,
             cfg.max_cache_cost,
             Arc::clone(&recorder),
-        );
+        ));
+        Engine { cfg, cache, recorder }
+    }
+
+    /// Engine borrowing an existing compile cache — the serve daemon's
+    /// session shape: each tuning job gets its own engine (and recorder,
+    /// so per-job round events stay separable) over the one daemon-wide
+    /// cache. Cache hit/miss telemetry lands on the recorder the *cache*
+    /// was built with, not `recorder` — cache traffic is a property of
+    /// the shared resource, not of any one job.
+    pub fn with_shared_cache(
+        cfg: EngineConfig,
+        cache: Arc<CompileCache>,
+        recorder: Arc<Recorder>,
+    ) -> Self {
         Engine { cfg, cache, recorder }
     }
 
@@ -100,12 +120,20 @@ impl Engine {
         Engine::with_jobs(1)
     }
 
+    /// Effective worker count (≥ 1).
     pub fn jobs(&self) -> usize {
         self.cfg.jobs.max(1)
     }
 
+    /// The engine's compile cache (shared view).
     pub fn cache(&self) -> &CompileCache {
         &self.cache
+    }
+
+    /// Owning handle to the compile cache, for building further engines
+    /// over the same cache ([`Engine::with_shared_cache`]).
+    pub fn cache_handle(&self) -> Arc<CompileCache> {
+        Arc::clone(&self.cache)
     }
 
     /// The engine's telemetry recorder (always present; sink optional).

@@ -45,8 +45,11 @@ pub struct FleetConfig {
     /// Hardware targets to tune (visit order is derived from their
     /// capacities, not from this list's order).
     pub targets: Vec<VtaConfig>,
+    /// Tuner to run on every target.
     pub tuner: TunerKind,
+    /// Knob space to search on every target.
     pub space: SpaceKind,
+    /// Base per-layer tuner knobs (seed, rounds, pool sizes).
     pub base: TunerConfig,
     /// Global profiling budget over the whole fleet.
     pub total_trials: usize,
@@ -80,13 +83,17 @@ impl Default for FleetConfig {
 
 /// One target's slice of a fleet run.
 pub struct FleetTargetRun {
+    /// Target name this slice tuned on.
     pub target: String,
+    /// Target clock, for cycles→ms conversion in the summary.
     pub clock_mhz: f64,
+    /// The full per-network tuning outcome on this target.
     pub outcome: NetworkOutcome,
 }
 
 /// Everything a fleet run produces, in tuned (cheapest-first) order.
 pub struct FleetOutcome {
+    /// Per-target runs, in the order they were tuned.
     pub runs: Vec<FleetTargetRun>,
 }
 
@@ -150,10 +157,12 @@ pub fn tune_order(targets: &[VtaConfig]) -> Vec<usize> {
 
 /// The fleet scheduler. See the module docs for the policy.
 pub struct FleetTuner {
+    /// Fleet-run knobs.
     pub cfg: FleetConfig,
 }
 
 impl FleetTuner {
+    /// Scheduler over the given fleet configuration.
     pub fn new(cfg: FleetConfig) -> Self {
         FleetTuner { cfg }
     }

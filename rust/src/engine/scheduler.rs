@@ -37,12 +37,16 @@ use crate::workloads::ConvLayer;
 /// Which tuning policy a session runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TunerKind {
+    /// The paper's multi-level tuner (models P/V/A).
     Ml2,
+    /// TVM-style single-level cost-model baseline.
     Tvm,
+    /// Uniform random search baseline.
     Random,
 }
 
 impl TunerKind {
+    /// Parse a CLI tuner name (`ml2tuner`/`ml2`, `tvm`, `random`).
     pub fn parse(name: &str) -> Option<TunerKind> {
         match name {
             "ml2tuner" | "ml2" => Some(TunerKind::Ml2),
@@ -52,6 +56,7 @@ impl TunerKind {
         }
     }
 
+    /// Canonical tuner name, as stamped into traces and logs.
     pub fn name(&self) -> &'static str {
         match self {
             TunerKind::Ml2 => "ml2tuner",
@@ -75,7 +80,9 @@ impl TunerKind {
 /// Incremental tuning state for one layer: the scheduler advances it one
 /// round at a time instead of running a whole budget in one call.
 pub struct LayerSession {
+    /// Layer + space + compiler + simulator the session tunes against.
     pub env: TuningEnv,
+    /// Per-layer tuner knobs (seed, rounds, pool sizes).
     pub cfg: TunerConfig,
     kind: TunerKind,
     space: SearchSpace,
@@ -83,12 +90,14 @@ pub struct LayerSession {
     /// Transferred records pre-training the ML² models (training-only —
     /// never profiled, never in the trace or the persisted log).
     warm: Option<Database>,
+    /// Per-trial tuning trace accumulated so far.
     pub trace: TuningTrace,
     rng: Rng,
     round: u64,
 }
 
 impl LayerSession {
+    /// Fresh (cold) session for one layer under one policy.
     pub fn new(kind: TunerKind, cfg: TunerConfig, env: TuningEnv) -> Self {
         let rng = Rng::new(cfg.seed ^ kind.rng_salt());
         let space = env.space.clone();
@@ -115,18 +124,22 @@ impl LayerSession {
         self
     }
 
+    /// Name of the layer this session tunes.
     pub fn layer_name(&self) -> &'static str {
         self.env.layer.name
     }
 
+    /// Trials profiled so far.
     pub fn trials(&self) -> usize {
         self.trace.len()
     }
 
+    /// Tuning rounds advanced so far.
     pub fn rounds(&self) -> u64 {
         self.round
     }
 
+    /// Best valid cycle count so far, if any.
     pub fn best_cycles(&self) -> Option<u64> {
         self.trace.best_cycles()
     }
@@ -146,6 +159,7 @@ impl LayerSession {
         self.space.n_unmeasured() == 0
     }
 
+    /// The session's profiling database (every profiled trial).
     pub fn database(&self) -> &Database {
         &self.db
     }
@@ -216,7 +230,9 @@ impl LayerSession {
 /// Network-run knobs.
 #[derive(Clone, Debug)]
 pub struct NetworkConfig {
+    /// Hardware target every layer tunes on.
     pub vta: VtaConfig,
+    /// Tuning policy every layer session runs.
     pub tuner: TunerKind,
     /// Knob set every layer session enumerates (`--space`).
     pub space: SpaceKind,
@@ -255,11 +271,17 @@ impl Default for NetworkConfig {
 /// Per-layer summary of a network run.
 #[derive(Clone, Debug)]
 pub struct LayerResult {
+    /// Layer name.
     pub layer: &'static str,
+    /// Trials profiled on this layer.
     pub trials: usize,
+    /// Tuning rounds this layer was granted.
     pub rounds: u64,
+    /// Fraction of profiled trials that were invalid.
     pub invalidity: f64,
+    /// Best valid cycle count found, if any.
     pub best_cycles: Option<u64>,
+    /// Schedule achieving `best_cycles`, if any.
     pub best_schedule: Option<Schedule>,
 }
 
@@ -267,8 +289,11 @@ pub struct LayerResult {
 /// totals.
 #[derive(Clone, Debug)]
 pub struct NetworkReport {
+    /// Tuner name the run used.
     pub tuner: &'static str,
+    /// Trials profiled across all layers.
     pub total_trials: usize,
+    /// Per-layer winners, network order.
     pub layers: Vec<LayerResult>,
 }
 
@@ -327,8 +352,11 @@ impl NetworkReport {
 /// Everything a network run produces: the report plus the per-layer
 /// traces and databases (one tuning log per layer, TVM-style).
 pub struct NetworkOutcome {
+    /// The rendered-ready per-layer summary.
     pub report: NetworkReport,
+    /// Per-layer tuning traces, network order.
     pub traces: Vec<TuningTrace>,
+    /// Per-layer profiling databases, network order.
     pub databases: Vec<Database>,
 }
 
@@ -351,10 +379,12 @@ impl NetworkOutcome {
 
 /// The budget allocator. See the module docs for the policy.
 pub struct NetworkTuner {
+    /// Network-run knobs.
     pub cfg: NetworkConfig,
 }
 
 impl NetworkTuner {
+    /// Allocator over the given network configuration.
     pub fn new(cfg: NetworkConfig) -> Self {
         NetworkTuner { cfg }
     }

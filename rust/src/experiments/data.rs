@@ -73,9 +73,13 @@ pub fn space_profile(
 /// One repeated tuning comparison on a layer: (ml2tuner, tvm, random)
 /// traces per repeat.
 pub struct ComparisonRuns {
+    /// The compared layer.
     pub layer: ConvLayer,
+    /// One ML²Tuner trace per repeat.
     pub ml2: Vec<TuningTrace>,
+    /// One TVM-baseline trace per repeat.
     pub tvm: Vec<TuningTrace>,
+    /// One random-baseline trace per repeat.
     pub random: Vec<TuningTrace>,
 }
 

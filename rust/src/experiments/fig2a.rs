@@ -7,6 +7,7 @@ use super::{data, ExpConfig};
 use crate::tuner::report::average_curves;
 use crate::util::table::{ascii_curve, f, Table};
 
+/// Render the Fig. 2(a) tuning-curve reproduction.
 pub fn run(cfg: &ExpConfig) -> String {
     let (repeats, ml2_t, tvm_t) = if cfg.quick {
         (cfg.repeats, 120, 240)

@@ -6,6 +6,7 @@ use super::{data, ExpConfig};
 use crate::util::stats::normalized_histogram;
 use crate::util::table::{f, Table};
 
+/// Render the Fig. 2(b) invalidity/histogram reproduction.
 pub fn run(cfg: &ExpConfig) -> String {
     let (repeats, ml2_t, tvm_t) =
         if cfg.quick { (cfg.repeats, 120, 120) } else { (cfg.repeats, 300, 300) };

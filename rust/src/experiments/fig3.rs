@@ -62,6 +62,7 @@ pub fn rmse_pair(
     Some((rmse(&pred_p, &y_te), rmse(&pred_a, &y_te)))
 }
 
+/// Render the Fig. 3 RMSE-ratio reproduction.
 pub fn run(cfg: &ExpConfig) -> String {
     let (limit, rounds, train_n) =
         if cfg.quick { (500, 100, 150) } else { (3000, 300, 600) };

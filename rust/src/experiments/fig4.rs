@@ -8,6 +8,7 @@ use crate::util::stats::mean;
 use crate::util::table::{f, Table};
 use crate::workloads::resnet18;
 
+/// Render the Fig. 4 samples-vs-rounds RMSE study.
 pub fn run(cfg: &ExpConfig) -> String {
     let limit = if cfg.quick { 600 } else { 3000 };
     let sample_counts: &[usize] =

@@ -10,6 +10,7 @@ use crate::util::stats::mean;
 use crate::util::table::{f, Table};
 use crate::workloads::resnet18;
 
+/// Render the headline sample-efficiency / invalid-avoided metrics.
 pub fn run(cfg: &ExpConfig) -> String {
     let (repeats, ml2_t, tvm_t) = if cfg.quick {
         (cfg.repeats.min(2), 100, 200)

@@ -1,5 +1,5 @@
-//! Experiment harnesses — one per paper table/figure (DESIGN.md
-//! §Experiment index). Each prints the same rows/series the paper reports;
+//! Experiment harnesses — one per paper table/figure (EXPERIMENTS.md
+//! records the results). Each prints the same rows/series the paper reports;
 //! absolute values come from our simulated testbed, the paper's values are
 //! shown alongside where the paper states them.
 //!
@@ -13,6 +13,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod headline;
+pub mod storm;
 pub mod table2;
 pub mod table4;
 pub mod table5;
@@ -37,11 +38,13 @@ pub struct ExpConfig {
 }
 
 impl ExpConfig {
+    /// Full-scale knobs — what EXPERIMENTS.md records.
     pub fn full() -> Self {
         ExpConfig { repeats: 10, seed: 2024, quick: false,
                     hw: VtaConfig::zcu102() }
     }
 
+    /// Shrunk knobs for integration tests and CI smoke runs.
     pub fn quick() -> Self {
         ExpConfig { repeats: 2, seed: 2024, quick: true,
                     hw: VtaConfig::zcu102() }
@@ -49,10 +52,10 @@ impl ExpConfig {
 }
 
 /// All experiment ids: the paper's tables/figures in paper order, then
-/// the beyond-paper transfer warm-start study.
-pub const ALL: [&str; 10] = [
+/// the beyond-paper transfer warm-start and serving-storm studies.
+pub const ALL: [&str; 11] = [
     "fig2a", "fig2b", "fig3", "fig4", "fig5", "table2", "table4", "table5",
-    "headline", "transfer",
+    "headline", "transfer", "storm",
 ];
 
 /// Dispatch an experiment by id; returns the printed report.
@@ -68,6 +71,7 @@ pub fn run(id: &str, cfg: &ExpConfig) -> Result<String> {
         "table5" => table5::run(cfg),
         "headline" => headline::run(cfg),
         "transfer" => transfer::run(cfg),
+        "storm" => storm::run(cfg)?,
         other => bail!("unknown experiment '{other}'; known: {ALL:?}"),
     };
     println!("{report}");

@@ -1,0 +1,287 @@
+//! Serving storm: schedule-db lookup latency under a mixed hit/miss
+//! query flood (EXPERIMENTS.md §Serving).
+//!
+//! Protocol:
+//!
+//! 1. seed a throwaway [`ScheduleDb`] with one synthetic best-schedule
+//!    entry per (layer shape, codegen signature) across every registered
+//!    network and target, in the paper knob space;
+//! 2. pre-render ≥ 1000 query request lines — two thirds against seeded
+//!    keys (hits), one third against the same shapes in the extended
+//!    space (misses), deterministically shuffled;
+//! 3. drive each line through the daemon's synchronous answer path
+//!    (request parse + registry resolution + key build + in-memory
+//!    lookup) and record per-query wall latency.
+//!
+//! Reported: p50 / p99 / mean per class (all, hit, miss) plus the
+//! daemon's hit/miss counters, which must account for every query.
+//! Where the paper frames savings as invalid profilings avoided,
+//! serving frames them as whole *tunings* avoided: a hit replaces an
+//! entire tuning run with a microsecond-scale map probe. With
+//! `ML2_STORM_JSON=<path>` set (CI's smoke-serve job), the percentiles
+//! are also written as a `BENCH_7.json`-style medians file for the
+//! bench-regression promotion flow.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::ExpConfig;
+use crate::compiler::schedule::{Schedule, SpaceKind};
+use crate::obs::Counter;
+use crate::serve::{
+    Daemon, Request, ScheduleDb, ScheduleEntry, ScheduleKey, ServeConfig,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::vta::targets;
+use crate::workloads;
+
+/// Entry point for `ml2tuner experiment storm`; honours
+/// `ML2_STORM_JSON` for the medians file.
+pub fn run(cfg: &ExpConfig) -> Result<String> {
+    let out = std::env::var("ML2_STORM_JSON")
+        .ok()
+        .filter(|p| !p.is_empty());
+    run_to(cfg, out.as_deref().map(Path::new))
+}
+
+/// Env-var-free body of [`run`] (what tests and CI drive directly):
+/// when `out` is given, the percentile summary is written there as a
+/// `BENCH_7.json`-style medians file.
+pub fn run_to(cfg: &ExpConfig, out: Option<&Path>) -> Result<String> {
+    let n_queries = if cfg.quick { 1_200 } else { 10_000 };
+    let dir = std::env::temp_dir()
+        .join(format!("ml2tuner_storm_{}", cfg.seed));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    let db = ScheduleDb::open(&dir)?;
+
+    // -- 1. seed synthetic best entries (paper space = the hit set) ---
+    let mut hit_lines: Vec<String> = Vec::new();
+    let mut miss_lines: Vec<String> = Vec::new();
+    for net in &workloads::NETWORKS {
+        for layer in net.layers {
+            for hw in targets::all() {
+                let key = ScheduleKey::for_layer_on(
+                    layer,
+                    SpaceKind::Paper,
+                    &hw,
+                );
+                // synthetic but deterministic "best" — storm measures
+                // lookup latency, not schedule quality
+                db.promote(ScheduleEntry {
+                    key,
+                    version: 0,
+                    cycles: layer.macs() / 8 + key.hash64() % 997 + 1,
+                    schedule: Schedule::default(),
+                    layer: layer.name.to_string(),
+                    target: hw.target.clone(),
+                    tuner: "storm-seed".to_string(),
+                    trials: 1,
+                })?;
+                hit_lines.push(query_line(
+                    net.name, layer.name, &hw.target, "paper",
+                ));
+                // same shapes, unseeded space → guaranteed miss
+                miss_lines.push(query_line(
+                    net.name, layer.name, &hw.target, "extended",
+                ));
+            }
+        }
+    }
+
+    // -- 2. mixed query stream, deterministically shuffled ------------
+    let mut rng = Rng::new(cfg.seed ^ 0x5708_31a7);
+    let mut stream: Vec<(bool, String)> = Vec::with_capacity(n_queries);
+    for i in 0..n_queries {
+        let hit = i % 3 != 2; // two thirds hits
+        let pool = if hit { &hit_lines } else { &miss_lines };
+        stream.push((hit, pool[rng.below(pool.len())].clone()));
+    }
+    rng.shuffle(&mut stream);
+
+    // -- 3. drive the synchronous answer path, timing each query ------
+    let n_entries = db.len();
+    let daemon = Daemon::new(ServeConfig::default(), Arc::new(db));
+    let mut hit_ns: Vec<u64> = Vec::new();
+    let mut miss_ns: Vec<u64> = Vec::new();
+    for (expect_hit, line) in &stream {
+        let t = Instant::now();
+        let req = Request::parse(line).map_err(|e| {
+            anyhow::anyhow!("storm query rejected: {}", e.message)
+        })?;
+        let Request::Query(q) = req else {
+            bail!("storm line parsed as a non-query request");
+        };
+        let key = ScheduleKey::for_layer_on(&q.layer, q.space, &q.target);
+        let found = std::hint::black_box(daemon.answer_lookup(&key));
+        let ns = t.elapsed().as_nanos() as u64;
+        if found.is_some() != *expect_hit {
+            bail!("storm hit/miss expectation violated for: {line}");
+        }
+        if found.is_some() {
+            hit_ns.push(ns);
+        } else {
+            miss_ns.push(ns);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // -- 4. percentiles + counter cross-check -------------------------
+    let mut all_ns: Vec<u64> =
+        hit_ns.iter().chain(&miss_ns).copied().collect();
+    all_ns.sort_unstable();
+    hit_ns.sort_unstable();
+    miss_ns.sort_unstable();
+    let snap = daemon.recorder().snapshot();
+    let (c_hits, c_misses) = (
+        snap.counter(Counter::ScheduleDbHit),
+        snap.counter(Counter::ScheduleDbMiss),
+    );
+    if c_hits != hit_ns.len() as u64 || c_misses != miss_ns.len() as u64 {
+        bail!(
+            "daemon counters disagree with observed outcomes: \
+             {c_hits}/{c_misses} vs {}/{}",
+            hit_ns.len(),
+            miss_ns.len()
+        );
+    }
+
+    let mut report = format!(
+        "== serving storm: {n_queries} queries over a {n_entries}-entry \
+         schedule db ==\n(per-query path: request parse + registry \
+         resolution + key build + lookup)\n\n"
+    );
+    let classes: [(&str, &[u64]); 3] = [
+        ("all", &all_ns),
+        ("hit", &hit_ns),
+        ("miss", &miss_ns),
+    ];
+    let mut t =
+        Table::new(&["class", "queries", "p50 µs", "p99 µs", "mean µs"]);
+    for (name, ns) in classes {
+        t.row(&[
+            name.to_string(),
+            ns.len().to_string(),
+            us(pct(ns, 0.50)),
+            us(pct(ns, 0.99)),
+            us(mean_ns(ns)),
+        ]);
+    }
+    report.push_str(&t.render());
+    report.push_str(&format!(
+        "\ncounters: {c_hits} schedule_db_hits, {c_misses} \
+         schedule_db_misses (every query accounted for)\n\
+         each hit answered a best-schedule request with zero \
+         compilation and zero profiling\n"
+    ));
+
+    // -- 5. optional BENCH_7.json-style medians file -------------------
+    if let Some(path) = out {
+        let mut benches = Json::obj();
+        for (name, ns) in [
+            ("storm/lookup_all", &all_ns),
+            ("storm/lookup_hit", &hit_ns),
+            ("storm/lookup_miss", &miss_ns),
+        ] {
+            let mut b = Json::obj();
+            b.set("median_ns", pct(ns, 0.50))
+                .set("mean_ns", mean_ns(ns))
+                .set("iters", ns.len())
+                .set("p50_ns", pct(ns, 0.50))
+                .set("p99_ns", pct(ns, 0.99));
+            benches.set(name, b);
+        }
+        let mut o = Json::obj();
+        o.set("schema", 1)
+            .set(
+                "note",
+                "Measured serving-storm lookup latencies (experiment \
+                 storm). Regenerated by CI's smoke-serve job; promote \
+                 with scripts/bench_report.py --update-baseline.",
+            )
+            .set("queries", n_queries)
+            .set("benches", benches);
+        std::fs::write(path, format!("{}\n", o.to_string_pretty()))
+            .with_context(|| {
+                format!("writing storm medians to {}", path.display())
+            })?;
+        report.push_str(&format!(
+            "medians written to {}\n",
+            path.display()
+        ));
+    }
+    Ok(report)
+}
+
+fn query_line(net: &str, layer: &str, target: &str, space: &str) -> String {
+    format!(
+        "{{\"op\":\"query\",\"id\":1,\"network\":\"{net}\",\
+         \"layer\":\"{layer}\",\"target\":\"{target}\",\
+         \"space\":\"{space}\"}}"
+    )
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn mean_ns(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    (xs.iter().sum::<u64>() as f64 / xs.len() as f64) as u64
+}
+
+fn us(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_storm_runs_and_writes_medians() {
+        let cfg = ExpConfig {
+            seed: 0xd15c0,
+            ..ExpConfig::quick()
+        };
+        let out =
+            std::env::temp_dir().join("ml2tuner_storm_medians_test.json");
+        std::fs::remove_file(&out).ok();
+        let report = run_to(&cfg, Some(&out)).unwrap();
+        assert!(report.contains("schedule_db_hits"));
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let j = Json::parse(&text).unwrap();
+        assert!(
+            j.get("queries").and_then(Json::as_usize).unwrap() >= 1000
+        );
+        let b = j.at(&["benches", "storm/lookup_all"]).unwrap();
+        assert!(b.get("p99_ns").and_then(Json::as_u64).unwrap() > 0);
+        assert_eq!(
+            b.get("iters").and_then(Json::as_usize).unwrap(),
+            j.get("queries").and_then(Json::as_usize).unwrap()
+        );
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(pct(&xs, 0.0), 1);
+        assert_eq!(pct(&xs, 1.0), 100);
+        assert_eq!(pct(&xs, 0.50), 51); // round((n-1)*0.5) = 50 → xs[50]
+        assert_eq!(pct(&[], 0.5), 0);
+    }
+}

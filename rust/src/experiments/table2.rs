@@ -5,6 +5,7 @@ use super::{data, ExpConfig};
 use crate::util::table::{f, Table};
 use crate::workloads::resnet18;
 
+/// Render the Table 2(b) invalidity-ratio reproduction.
 pub fn run(cfg: &ExpConfig) -> String {
     let limit = if cfg.quick { 400 } else { 2000 };
     let mut out = String::from(

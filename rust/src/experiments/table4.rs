@@ -57,6 +57,7 @@ fn split(xs: Vec<Vec<f64>>, ys: Vec<f64>, seed: u64) -> Split {
     Split { xs_tr, ys_tr, xs_te, ys_te }
 }
 
+/// Render the Table 4 objective-function comparison.
 pub fn run(cfg: &ExpConfig) -> String {
     let limit = if cfg.quick { 400 } else { 1500 };
     let rounds = if cfg.quick { 100 } else { 300 };

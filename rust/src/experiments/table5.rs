@@ -34,6 +34,7 @@ fn importance_for(records: &[TrialRecord], rounds: usize, seed: u64)
     Some(b.feature_importance())
 }
 
+/// Render the Table 5 feature-importance reproduction.
 pub fn run(cfg: &ExpConfig) -> String {
     let (limit, rounds) = if cfg.quick { (500, 100) } else { (2500, 300) };
     // the experiment reproduces the paper's table: paper feature layout

@@ -29,6 +29,7 @@ use crate::workloads;
 const SOURCE_LAYERS: [&str; 3] = ["pw3", "pw4", "pw6"];
 const TARGET_LAYER: &str = "pw5";
 
+/// Render the cold-vs-warm transfer warm-start study.
 pub fn run(cfg: &ExpConfig) -> String {
     let (src_trials, tgt_trials, cap) = if cfg.quick {
         (60, 60, 200)

@@ -10,9 +10,13 @@ use crate::util::rng::Rng;
 /// A trained ensemble.
 #[derive(Clone, Debug)]
 pub struct Booster {
+    /// Hyper-parameters the ensemble was trained with.
     pub params: GbdtParams,
+    /// Initial raw prediction every tree sum starts from.
     pub base_score: f64,
+    /// The boosted trees, training order.
     pub trees: Vec<Tree>,
+    /// Feature-vector width the ensemble expects.
     pub n_features: usize,
 }
 
@@ -98,6 +102,7 @@ impl Booster {
         self.predict_row_f32(&rowf)
     }
 
+    /// Raw score for one `f32` feature row (the hot-path layout).
     #[inline]
     pub fn predict_row_f32(&self, row: &[f32]) -> f64 {
         let mut s = self.base_score;

@@ -16,6 +16,7 @@ pub struct FeatureMatrix {
 }
 
 impl FeatureMatrix {
+    /// Empty matrix of the given row width.
     pub fn new(n_features: usize) -> FeatureMatrix {
         FeatureMatrix { n_features, values: Vec::new() }
     }
@@ -39,10 +40,12 @@ impl FeatureMatrix {
         m
     }
 
+    /// Row width.
     pub fn n_features(&self) -> usize {
         self.n_features
     }
 
+    /// Rows currently held.
     pub fn n_rows(&self) -> usize {
         if self.n_features == 0 {
             0
@@ -51,6 +54,7 @@ impl FeatureMatrix {
         }
     }
 
+    /// Whether the matrix holds no rows.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
@@ -72,6 +76,7 @@ impl FeatureMatrix {
         self.values.extend_from_slice(row);
     }
 
+    /// Borrow row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.values[i * self.n_features..(i + 1) * self.n_features]
@@ -86,19 +91,24 @@ impl FeatureMatrix {
 /// Row-major float feature matrix with labels.
 #[derive(Clone, Debug, Default)]
 pub struct Dataset {
+    /// Rows currently held.
     pub n_rows: usize,
+    /// Row width.
     pub n_features: usize,
     /// `values[row * n_features + f]`.
     pub values: Vec<f32>,
+    /// One training label per row.
     pub labels: Vec<f64>,
 }
 
 impl Dataset {
+    /// Empty dataset of the given row width.
     pub fn new(n_features: usize) -> Self {
         Dataset { n_rows: 0, n_features, values: Vec::new(),
                   labels: Vec::new() }
     }
 
+    /// Append one labelled row, narrowing each value to f32.
     pub fn push(&mut self, row: &[f64], label: f64) {
         assert_eq!(row.len(), self.n_features);
         self.values.extend(row.iter().map(|&v| v as f32));
@@ -106,6 +116,7 @@ impl Dataset {
         self.n_rows += 1;
     }
 
+    /// Build from parallel row/label slices.
     pub fn from_rows(rows: &[Vec<f64>], labels: &[f64]) -> Self {
         assert_eq!(rows.len(), labels.len());
         let nf = rows.first().map_or(0, |r| r.len());
@@ -116,6 +127,7 @@ impl Dataset {
         d
     }
 
+    /// Borrow row `i` (labels excluded).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.values[i * self.n_features..(i + 1) * self.n_features]
@@ -125,7 +137,9 @@ impl Dataset {
 /// Quantile-binned view of a dataset (feature-major u8 bin matrix).
 #[derive(Clone, Debug)]
 pub struct BinnedDataset {
+    /// Rows binned.
     pub n_rows: usize,
+    /// Features binned.
     pub n_features: usize,
     /// `bins[f * n_rows + row]` — feature-major for histogram locality.
     pub bins: Vec<u8>,
@@ -154,6 +168,7 @@ impl BinnedDataset {
         BinnedDataset { n_rows: n, n_features: nf, bins, cuts }
     }
 
+    /// Borrow the bin column of feature `f` (one u8 per row).
     #[inline]
     pub fn feature_bins(&self, f: usize) -> &[u8] {
         &self.bins[f * self.n_rows..(f + 1) * self.n_rows]

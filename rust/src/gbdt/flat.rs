@@ -74,14 +74,17 @@ impl FlatEnsemble {
         f
     }
 
+    /// Number of flattened trees.
     pub fn n_trees(&self) -> usize {
         self.roots.len()
     }
 
+    /// Feature-vector width the ensemble expects.
     pub fn n_features(&self) -> usize {
         self.n_features
     }
 
+    /// Initial raw prediction every tree sum starts from.
     pub fn base_score(&self) -> f64 {
         self.base_score
     }

@@ -15,6 +15,7 @@ pub enum Objective {
     RankPairwise,
 }
 
+/// Logistic sigmoid.
 #[inline]
 pub fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())

@@ -5,6 +5,7 @@ use super::objective::Objective;
 /// XGBoost-style boosting hyper-parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GbdtParams {
+    /// Training objective (loss).
     pub objective: Objective,
     /// `boost round` (Table 3: 300 for all models).
     pub boost_rounds: usize,
@@ -26,6 +27,7 @@ pub struct GbdtParams {
     pub reg_lambda: f64,
     /// Histogram bins per feature.
     pub max_bins: usize,
+    /// RNG seed for row/column subsampling.
     pub seed: u64,
 }
 
@@ -94,11 +96,13 @@ impl GbdtParams {
         self
     }
 
+    /// Same parameters, different subsampling seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Same parameters, different objective.
     pub fn with_objective(mut self, obj: Objective) -> Self {
         self.objective = obj;
         self

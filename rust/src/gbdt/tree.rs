@@ -9,8 +9,9 @@ pub struct Node {
     pub feature: u32,
     /// Raw-value threshold: `x <= threshold` goes left.
     pub threshold: f32,
-    /// Children indices (leaf: unused).
+    /// Left child index (leaf: unused).
     pub left: u32,
+    /// Right child index (leaf: unused).
     pub right: u32,
     /// Leaf output (already scaled by the learning rate).
     pub value: f64,
@@ -19,11 +20,13 @@ pub struct Node {
 }
 
 impl Node {
+    /// Whether this node is a leaf.
     #[inline]
     pub fn is_leaf(&self) -> bool {
         self.feature == u32::MAX
     }
 
+    /// A leaf node with the given output value.
     pub fn leaf(value: f64) -> Node {
         Node { feature: u32::MAX, threshold: 0.0, left: 0, right: 0,
                value, gain: 0.0 }
@@ -33,6 +36,7 @@ impl Node {
 /// One boosted tree.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Tree {
+    /// Flat node storage; index 0 is the root.
     pub nodes: Vec<Node>,
 }
 
@@ -63,10 +67,12 @@ impl Tree {
         }
     }
 
+    /// Number of leaf nodes.
     pub fn n_leaves(&self) -> usize {
         self.nodes.iter().filter(|n| n.is_leaf()).count()
     }
 
+    /// Depth of the deepest leaf (0 for a stump).
     pub fn depth(&self) -> usize {
         fn rec(t: &Tree, i: usize) -> usize {
             let n = &t.nodes[i];
@@ -86,11 +92,17 @@ impl Tree {
 
 /// Split-finding configuration (subset of `GbdtParams` the grower needs).
 pub struct GrowCfg {
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Minimum hessian sum per child.
     pub min_child_weight: f64,
+    /// Minimum split gain.
     pub gamma: f64,
+    /// L1 penalty on leaf weights.
     pub reg_alpha: f64,
+    /// L2 penalty on leaf weights.
     pub reg_lambda: f64,
+    /// Shrinkage applied to leaf outputs.
     pub learning_rate: f64,
 }
 

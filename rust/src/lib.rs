@@ -2,7 +2,7 @@
 //!
 //! Reproduction of *ML²Tuner: Efficient Code Tuning via Multi-Level Machine
 //! Learning Models* (Cha et al., 2024) on a simulated extended-VTA
-//! accelerator. See `DESIGN.md` for the system inventory and the
+//! accelerator. See `ARCHITECTURE.md` for the system inventory and the
 //! paper-to-module mapping.
 //!
 //! The crate is organised bottom-up:
@@ -47,9 +47,18 @@
 //!   `--metrics-out`, the leveled console sink (`--quiet`/`-v`), and
 //!   the `ml2tuner report` aggregator. Telemetry observes, never
 //!   participates: traces are byte-identical with and without it.
+//! * [`serve`] — tuning-as-a-service: the persistent best-schedule store
+//!   ([`serve::ScheduleDb`], appended to by every `--schedule-db` tuning
+//!   run) and the `serve` daemon that answers schedule queries instantly
+//!   from it, falling back to warm-started tuning jobs on a bounded
+//!   worker pool over one shared engine on a miss.
 //! * [`experiments`] — one harness per paper table/figure (Fig 2–5,
 //!   Table 2b/4/5, headline metrics) plus the beyond-paper `transfer`
-//!   study (cold vs warm sample-efficiency).
+//!   study (cold vs warm sample-efficiency) and the `storm` serving
+//!   stress harness (lookup-latency percentiles under mixed hit/miss
+//!   query load).
+
+#![warn(missing_docs)]
 
 pub mod compiler;
 pub mod engine;
@@ -57,6 +66,7 @@ pub mod experiments;
 pub mod gbdt;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod tuner;
 pub mod util;
 pub mod vta;

@@ -22,6 +22,15 @@
 //!               [--trials N] [..tune-net flags..] [--out dir]
 //!               one network across a hardware fleet, one global budget;
 //!               smallest target first, logs chained as warm starts
+//! ml2tuner serve --schedule-db dir [--listen addr:port] [--workers N]
+//!               [--queue N] [--miss-trials N] [--seed S] [--jobs J]
+//!               [--transfer-from dir] [--metrics-out events.jsonl]
+//!               tuning-as-a-service daemon: answers best-schedule
+//!               queries (line-oriented JSON on stdin/stdout or TCP)
+//!               from the store; misses can enqueue warm-started tuning
+//!               jobs whose results are promoted back into the store.
+//!               The tune commands take --schedule-db too, appending
+//!               their best schedules on completion.
 //! ml2tuner report <events.jsonl...>
 //!               aggregate --metrics-out telemetry into per-stage time,
 //!               cache, and model-quality tables
@@ -35,6 +44,7 @@
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -47,12 +57,17 @@ use ml2tuner::engine::{
 use ml2tuner::experiments::{self, ExpConfig};
 use ml2tuner::obs::{self, console, EventSink};
 use ml2tuner::runtime::{golden, Runtime};
+use ml2tuner::serve::{
+    Daemon, Promotion, ScheduleDb, ScheduleEntry, ScheduleKey,
+    ServeConfig, SharedSink,
+};
 use ml2tuner::tuner::database::{Database, TransferDb};
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
 use ml2tuner::tuner::random_baseline::RandomTuner;
-use ml2tuner::tuner::report::ProfilingCostModel;
+use ml2tuner::tuner::report::{ProfilingCostModel, TuningTrace};
 use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::util::json::Json;
 use ml2tuner::util::rng::Rng;
 use ml2tuner::util::table::Table;
 use ml2tuner::vta::{config::VtaConfig, functional, layout, targets,
@@ -161,6 +176,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(&args),
         "tune-net" => cmd_tune_net(&args),
         "tune-fleet" => cmd_tune_fleet(&args),
+        "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
         "validate" => cmd_validate(&args),
@@ -182,21 +198,26 @@ fn print_usage() {
          tune [--network N] --layer conv1 [--target T] \
          [--tuner ml2tuner|tvm|random]\n       [--trials N] [--seed S] \
          [--jobs J] [--space paper|extended]\n       [--v-margin M] \
-         [--db out.json] [--transfer-from dir]\n       \
-         [--metrics-out events.jsonl]\n  \
+         [--db out.json] [--schedule-db dir]\n       \
+         [--transfer-from dir] [--metrics-out events.jsonl]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
          [--target T]\n       [--tuner ..] [--trials N] [--round N] \
          [--seed S] [--jobs J]\n       [--layers a,b,..] [--space \
          paper|extended] [--v-margin M] [--out dir]\n       \
-         [--transfer-from dir] [--transfer-cap N] [--metrics-out f]\n  \
+         [--schedule-db dir] [--transfer-from dir] [--transfer-cap N]\n       \
+         [--metrics-out f]\n  \
          tune-fleet --targets T1,T2,.. [--network N] [--trials N] \
          [--out dir]\n       [..tune-net flags..]\n  \
+         serve --schedule-db dir [--listen addr:port] [--workers N] \
+         [--queue N]\n       [--miss-trials N] [--seed S] [--jobs J] \
+         [--transfer-from dir]\n       [--metrics-out f]   \
+         best-schedule query daemon (JSON lines)\n  \
          report <events.jsonl...>   aggregate --metrics-out telemetry\n  \
          simulate [--network N] --layer conv1 [--target T] --schedule \
          \n       TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
-         headline|transfer|all> [--quick] [--repeats N] [--seed S] \
+         headline|transfer|storm|all> [--quick] [--repeats N] [--seed S] \
          [--target T]\n\n\
          --network: a registered workload ({}); layer names are resolved\n\
         \x20       within it.\n\
@@ -223,6 +244,11 @@ fn print_usage() {
          tune-net --out);\n        shape-similar layers warm-start the \
          models before the first batch\n        (knob values are \
          similarity-matched across space versions).\n\
+         --schedule-db: persistent best-schedule store (one JSON file \
+         per\n        layer-shape x codegen-signature x space key, \
+         versioned, better-only\n        promotion). The tune commands \
+         append on completion; `serve` answers\n        queries from it \
+         without compiling or profiling anything on a hit.\n\
          tune-net splits one global --trials budget across the layers \
          with a\n        round-robin + UCB allocator and saves one tuning \
          log per layer to --out;\n        tune-fleet saves them per \
@@ -378,6 +404,60 @@ fn attach_metrics(
     Ok(())
 }
 
+/// Best-schedule candidate from one finished trace (when it found a
+/// valid configuration), ready for [`promote_schedules`].
+fn schedule_candidate(
+    trace: &TuningTrace,
+    layer: &ConvLayer,
+    space: SpaceKind,
+    hw: &VtaConfig,
+) -> Option<ScheduleEntry> {
+    let cycles = trace.best_cycles()?;
+    let best = trace
+        .trials
+        .iter()
+        .find(|t| t.outcome.cycles() == Some(cycles))?;
+    Some(ScheduleEntry {
+        key: ScheduleKey::for_layer_on(layer, space, hw),
+        version: 0, // assigned by the store
+        cycles,
+        schedule: best.schedule,
+        layer: layer.name.to_string(),
+        target: hw.target.clone(),
+        tuner: trace.tuner.clone(),
+        trials: trace.len() as u64,
+    })
+}
+
+/// Append a run's best schedules to the `--schedule-db` store (open or
+/// create, better-only versioned promotion) and report the tally.
+fn promote_schedules(
+    dir: &str,
+    candidates: Vec<ScheduleEntry>,
+) -> Result<()> {
+    if candidates.is_empty() {
+        console::info(&format!(
+            "schedule db {dir}: no valid results to promote"
+        ));
+        return Ok(());
+    }
+    let db = ScheduleDb::open(dir)?;
+    let (mut inserted, mut promoted, mut kept) = (0usize, 0usize, 0usize);
+    for c in candidates {
+        match db.promote(c)? {
+            Promotion::Inserted => inserted += 1,
+            Promotion::Promoted { .. } => promoted += 1,
+            Promotion::Kept { .. } => kept += 1,
+        }
+    }
+    console::info(&format!(
+        "schedule db {dir}: {inserted} inserted, {promoted} promoted, \
+         {kept} kept ({} entries total)",
+        db.len()
+    ));
+    Ok(())
+}
+
 fn layer_arg(args: &Args, net: &Network) -> Result<ConvLayer> {
     match args.get("layer") {
         None => Ok(net.layers[0]),
@@ -496,8 +576,9 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_tune(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "layer", "target", "tuner",
                          "trials", "seed", "jobs", "space", "v-margin",
-                         "db", "transfer-from", "transfer-cap",
-                         "metrics-out", "quiet", "verbose"])?;
+                         "db", "schedule-db", "transfer-from",
+                         "transfer-cap", "metrics-out", "quiet",
+                         "verbose"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
     let hw = target_arg(args)?;
@@ -608,15 +689,21 @@ fn cmd_tune(args: &Args) -> Result<()> {
         db.save(path)?;
         console::info(&format!("tuning log saved to {path}"));
     }
+    if let Some(dir) = args.get("schedule-db") {
+        let candidates = schedule_candidate(&trace, &layer, space, &hw)
+            .into_iter()
+            .collect();
+        promote_schedules(dir, candidates)?;
+    }
     Ok(())
 }
 
 fn cmd_tune_net(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "target", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
-                         "v-margin", "out", "transfer-from",
-                         "transfer-cap", "metrics-out", "quiet",
-                         "verbose"])?;
+                         "v-margin", "out", "schedule-db",
+                         "transfer-from", "transfer-cap", "metrics-out",
+                         "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
     let round = args.get_usize("round", 10)?;
@@ -682,15 +769,27 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
             paths.len()
         ));
     }
+    if let Some(dir) = args.get("schedule-db") {
+        let candidates = outcome
+            .traces
+            .iter()
+            .filter_map(|trace| {
+                let layer =
+                    layers.iter().find(|l| l.name == trace.layer)?;
+                schedule_candidate(trace, layer, space, &hw)
+            })
+            .collect();
+        promote_schedules(dir, candidates)?;
+    }
     Ok(())
 }
 
 fn cmd_tune_fleet(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "targets", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
-                         "v-margin", "out", "transfer-from",
-                         "transfer-cap", "metrics-out", "quiet",
-                         "verbose"])?;
+                         "v-margin", "out", "schedule-db",
+                         "transfer-from", "transfer-cap", "metrics-out",
+                         "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let fleet_targets = targets_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
@@ -766,7 +865,98 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
             paths.len()
         ));
     }
+    if let Some(dir) = args.get("schedule-db") {
+        let mut candidates = Vec::new();
+        for run in &outcome.runs {
+            let Some(hw) =
+                fleet_targets.iter().find(|t| t.target == run.target)
+            else {
+                continue;
+            };
+            for trace in &run.outcome.traces {
+                let Some(layer) =
+                    layers.iter().find(|l| l.name == trace.layer)
+                else {
+                    continue;
+                };
+                candidates
+                    .extend(schedule_candidate(trace, layer, space, hw));
+            }
+        }
+        promote_schedules(dir, candidates)?;
+    }
     Ok(())
+}
+
+/// `ml2tuner serve`: long-running tuning-as-a-service daemon over a
+/// `--schedule-db` store. Protocol responses go to stdout (or the TCP
+/// client); all daemon status chatter goes to stderr so the stdio
+/// transport stays machine-readable.
+fn cmd_serve(args: &Args) -> Result<()> {
+    expect_flags(args, &["schedule-db", "listen", "workers", "queue",
+                         "miss-trials", "seed", "jobs", "transfer-from",
+                         "transfer-cap", "metrics-out", "quiet",
+                         "verbose"])?;
+    let dir = args
+        .get("schedule-db")
+        .ok_or_else(|| anyhow!("serve requires --schedule-db <dir>"))?;
+    let db = Arc::new(ScheduleDb::open(dir)?);
+    let skipped = if db.skipped() > 0 {
+        format!(" ({} unparseable files skipped)", db.skipped())
+    } else {
+        String::new()
+    };
+    eprintln!(
+        "ml2tuner serve: schedule db {dir}: {} entries{skipped}",
+        db.len()
+    );
+    // not transfer_arg(): that helper narrates on stdout, which here
+    // belongs to the response protocol
+    let transfer = match args.get("transfer-from") {
+        None => None,
+        Some(tdir) => {
+            let store = TransferDb::load_dir(tdir)?;
+            if store.is_empty() {
+                bail!("--transfer-from {tdir}: no tuning logs found");
+            }
+            eprintln!(
+                "ml2tuner serve: transfer store: {} layer logs, {} \
+                 records from {tdir}",
+                store.n_layers(),
+                store.total_records()
+            );
+            Some(store)
+        }
+    };
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers", 2)?.max(1),
+        queue_cap: args.get_usize("queue", 16)?.max(1),
+        miss_trials: args.get_usize("miss-trials", 60)?.max(1),
+        seed: args.get_u64("seed", 0)?,
+        jobs: args.get_usize("jobs", 1)?.max(1),
+        transfer,
+        transfer_cap: args.get_usize("transfer-cap", 400)?,
+    };
+    eprintln!(
+        "ml2tuner serve: {} workers, queue {}, {} miss trials",
+        cfg.workers, cfg.queue_cap, cfg.miss_trials
+    );
+    let mut daemon = Daemon::new(cfg, db);
+    if let Some(path) = args.get("metrics-out") {
+        let sink = SharedSink::create(path)
+            .with_context(|| format!("--metrics-out {path}"))?;
+        daemon = daemon.with_metrics(sink);
+        eprintln!("ml2tuner serve: job telemetry -> {path}");
+    }
+    match args.get("listen") {
+        Some(addr) => daemon.serve_tcp(addr),
+        None => {
+            eprintln!("ml2tuner serve: reading requests from stdin");
+            daemon
+                .run(std::io::stdin().lock(), std::io::stdout())
+                .map(|_| ())
+        }
+    }
 }
 
 /// `ml2tuner report <events.jsonl...>`: aggregate telemetry event files

@@ -10,6 +10,7 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Console verbosity, ordered `Quiet < Normal < Verbose`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
     /// `--quiet`: only final results and errors.
@@ -22,10 +23,12 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
 
+/// Set the process-global console level (CLI startup).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Current process-global console level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Quiet,

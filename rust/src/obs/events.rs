@@ -25,11 +25,13 @@ pub struct EventSink {
 }
 
 impl EventSink {
+    /// Create (truncate) a JSONL file sink at `path`.
     pub fn create(path: impl AsRef<Path>) -> std::io::Result<EventSink> {
         let file = std::fs::File::create(path)?;
         Ok(EventSink::from_writer(Box::new(std::io::BufWriter::new(file))))
     }
 
+    /// Sink over any open stream (tests use in-memory buffers).
     pub fn from_writer(out: Box<dyn Write + Send>) -> EventSink {
         EventSink { out }
     }
@@ -47,11 +49,17 @@ impl EventSink {
 /// actually profiled this round.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VQuality {
+    /// Candidates V filtered out this round.
     pub vetoes: u64,
+    /// Predicted-valid, actually valid.
     pub tp: u64,
+    /// Predicted-valid, actually invalid.
     pub fp: u64,
+    /// Predicted-invalid, actually invalid.
     pub tn: u64,
+    /// Predicted-invalid, actually valid.
     pub fn_: u64,
+    /// Margin threshold the verdicts were taken at.
     pub v_margin: f64,
 }
 
@@ -78,17 +86,27 @@ pub fn confusion(
 /// and serialized together with the round's recorder delta.
 #[derive(Clone, Debug)]
 pub struct RoundEvent {
+    /// Target name the round profiled on.
     pub target: String,
+    /// Layer being tuned.
     pub layer: String,
+    /// Tuner name (`ml2tuner` / `tvm-approach` / `random`).
     pub tuner: String,
+    /// Knob-space name the round searched.
     pub space: String,
     /// 1-based round number within this layer's tuning stream.
     pub round: u64,
+    /// Trials profiled this round.
     pub trials_new: u64,
+    /// Cumulative trials profiled.
     pub trials_total: u64,
+    /// Valid results this round.
     pub valid_new: u64,
+    /// Crash-faulted results this round.
     pub crash_new: u64,
+    /// Wrong-output results this round.
     pub wrong_new: u64,
+    /// Best cycle count so far, if any valid result exists.
     pub best_cycles: Option<u64>,
     /// 1-based trial index that first reached `best_cycles`
     /// ("samples to best-so-far").

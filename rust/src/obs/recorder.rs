@@ -31,8 +31,11 @@ pub enum Counter {
     CompileCacheMiss,
     /// Configurations profiled (attempts, valid or not).
     TrialsProfiled,
+    /// Profiled configurations that executed cleanly.
     TrialsValid,
+    /// Profiled configurations that crash-faulted.
     TrialsCrash,
+    /// Profiled configurations with corrupted output.
     TrialsWrongOutput,
     /// Candidates model V vetoed during ranking walks.
     VVetoes,
@@ -40,11 +43,24 @@ pub enum Counter {
     SweepCandidates,
     /// JSONL events written to the sink.
     EventsEmitted,
+    /// Serve queries answered straight from the schedule db (no
+    /// compilation, no profiling — the "invalid profiling avoided"
+    /// end-state at serving scale).
+    ScheduleDbHit,
+    /// Serve queries with no stored schedule for the key.
+    ScheduleDbMiss,
+    /// Miss-triggered tuning jobs the serve daemon completed.
+    ServeJobsTuned,
+    /// Miss-triggered tuning jobs rejected by admission control (queue
+    /// full).
+    ServeJobsRejected,
 }
 
-pub const N_COUNTERS: usize = 9;
+/// Number of [`Counter`] variants (array sizing).
+pub const N_COUNTERS: usize = 13;
 
 impl Counter {
+    /// Every counter, in `run_end` emission order.
     pub const ALL: [Counter; N_COUNTERS] = [
         Counter::CompileCacheHit,
         Counter::CompileCacheMiss,
@@ -55,6 +71,10 @@ impl Counter {
         Counter::VVetoes,
         Counter::SweepCandidates,
         Counter::EventsEmitted,
+        Counter::ScheduleDbHit,
+        Counter::ScheduleDbMiss,
+        Counter::ServeJobsTuned,
+        Counter::ServeJobsRejected,
     ];
 
     /// Stable snake_case name (the `run_end` event key).
@@ -69,6 +89,10 @@ impl Counter {
             Counter::VVetoes => "v_vetoes",
             Counter::SweepCandidates => "sweep_candidates",
             Counter::EventsEmitted => "events_emitted",
+            Counter::ScheduleDbHit => "schedule_db_hits",
+            Counter::ScheduleDbMiss => "schedule_db_misses",
+            Counter::ServeJobsTuned => "serve_jobs_tuned",
+            Counter::ServeJobsRejected => "serve_jobs_rejected",
         }
     }
 }
@@ -79,17 +103,25 @@ impl Counter {
 /// (per-worker chunk timings, so its total is CPU time, not wall time).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage {
+    /// One whole candidate-selection call (umbrella).
     Select,
+    /// Model P/V/A training inside selection.
     Train,
+    /// Explorer sweep over the space inside selection.
     Sweep,
+    /// One per-worker sweep chunk (nested inside `Sweep`).
     SweepChunk,
+    /// Schedule compilation (A-stage pool and profiling path).
     Compile,
+    /// Simulated hardware profiling of a batch.
     Profile,
 }
 
+/// Number of [`Stage`] variants (array sizing).
 pub const N_STAGES: usize = 6;
 
 impl Stage {
+    /// Every stage, in `run_end` emission order.
     pub const ALL: [Stage; N_STAGES] = [
         Stage::Select,
         Stage::Train,
@@ -159,7 +191,9 @@ impl StageStats {
 /// Count + wall total of one stage, as captured in a [`Snapshot`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StageTotal {
+    /// Spans recorded for the stage.
     pub count: u64,
+    /// Summed span duration in nanoseconds.
     pub total_ns: u64,
 }
 
@@ -174,10 +208,12 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// Value of one counter at snapshot time.
     pub fn counter(&self, c: Counter) -> u64 {
         self.counters[c as usize]
     }
 
+    /// Count + wall total of one stage at snapshot time.
     pub fn stage(&self, s: Stage) -> StageTotal {
         self.stages[s as usize]
     }
@@ -218,6 +254,7 @@ impl Default for Recorder {
 }
 
 impl Recorder {
+    /// Fresh recorder with all counters zero and no sink.
     pub fn new() -> Recorder {
         Recorder {
             counters: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -226,14 +263,17 @@ impl Recorder {
         }
     }
 
+    /// Add `n` to a counter.
     pub fn add(&self, c: Counter, n: u64) {
         self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Add 1 to a counter.
     pub fn incr(&self, c: Counter) {
         self.add(c, 1);
     }
 
+    /// Current value of a counter.
     pub fn get(&self, c: Counter) -> u64 {
         self.counters[c as usize].load(Ordering::Relaxed)
     }
@@ -250,6 +290,7 @@ impl Recorder {
         self.stages[stage as usize].record(ns);
     }
 
+    /// Current count + wall total of one stage.
     pub fn stage_total(&self, stage: Stage) -> StageTotal {
         let s = &self.stages[stage as usize];
         StageTotal {
@@ -265,6 +306,7 @@ impl Recorder {
         std::array::from_fn(|i| s.buckets[i].load(Ordering::Relaxed))
     }
 
+    /// Point-in-time copy of every counter and stage total.
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             counters: std::array::from_fn(|i| {
@@ -283,6 +325,7 @@ impl Recorder {
         *self.sink.lock().unwrap() = Some(sink);
     }
 
+    /// Whether a JSONL sink is attached.
     pub fn has_sink(&self) -> bool {
         self.sink.lock().unwrap().is_some()
     }

@@ -119,15 +119,25 @@ pub fn validate_line(line: &str) -> Result<Json> {
 /// Per-target model-quality rollup.
 #[derive(Clone, Debug, Default)]
 pub struct TargetAgg {
+    /// Round events seen for this target.
     pub rounds: u64,
+    /// Trials profiled.
     pub trials: u64,
+    /// Trials that profiled valid.
     pub valid: u64,
+    /// Trials that crash-faulted.
     pub crash: u64,
+    /// Trials that produced wrong output.
     pub wrong: u64,
+    /// Candidates model V filtered out before profiling.
     pub vetoes: u64,
+    /// V predicted valid, profiled valid.
     pub tp: u64,
+    /// V predicted valid, profiled invalid.
     pub fp: u64,
+    /// V predicted invalid, profiled invalid.
     pub tn: u64,
+    /// V predicted invalid, profiled valid.
     pub fn_: u64,
     /// Rounds that carried a V-quality group.
     pub v_rounds: u64,
@@ -183,20 +193,32 @@ impl TargetAgg {
 /// Aggregate over every parsed event file.
 #[derive(Clone, Debug, Default)]
 pub struct Report {
+    /// Event files parsed.
     pub files: usize,
+    /// `run_start` lines seen.
     pub runs: u64,
+    /// Round events seen.
     pub rounds: u64,
+    /// Wall time in candidate selection (train/sweep/compile inclusive).
     pub select_ns: u64,
+    /// Wall time training models.
     pub train_ns: u64,
+    /// Wall time sweeping candidates through the models.
     pub sweep_ns: u64,
+    /// Wall time compiling (model A features + profiling prep).
     pub compile_ns: u64,
+    /// Wall time profiling on the simulator.
     pub profile_ns: u64,
+    /// Parallel sweep chunks dispatched.
     pub sweep_chunks: u64,
+    /// Compile-cache hits.
     pub cache_hits: u64,
+    /// Compile-cache misses.
     pub cache_misses: u64,
     /// True once a `run_end` supplied lifetime cache totals (otherwise
     /// the cache numbers are summed round deltas).
     pub cache_from_run_end: bool,
+    /// Per-target rollups, keyed by target name.
     pub targets: BTreeMap<String, TargetAgg>,
 }
 
@@ -258,10 +280,12 @@ impl Report {
             .saturating_sub(self.compile_ns)
     }
 
+    /// Total tracked wall time (selection + profiling).
     pub fn total_ns(&self) -> u64 {
         self.select_ns + self.profile_ns
     }
 
+    /// Total compile-cache lookups (hits + misses).
     pub fn cache_lookups(&self) -> u64 {
         self.cache_hits + self.cache_misses
     }

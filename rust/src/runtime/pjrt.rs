@@ -2,7 +2,7 @@
 //!
 //! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//! reassigns ids (see /opt/xla-example/README.md).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -15,8 +15,11 @@ use crate::workloads::ConvLayer;
 /// Per-layer artifact metadata from `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct LayerArtifact {
+    /// HLO-text artifact filename (relative to the artifact dir).
     pub artifact: String,
+    /// Requantization shift the golden model bakes in.
     pub shift: u32,
+    /// Layer shape the artifact computes.
     pub layer: ConvLayer,
 }
 

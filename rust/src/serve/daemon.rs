@@ -1,0 +1,445 @@
+//! The serve daemon: instant schedule lookups, miss-triggered tuning
+//! jobs on a bounded worker pool, one shared compile cache.
+//!
+//! ## Who owns what state
+//!
+//! The [`Daemon`] owns the long-lived, shared resources: the
+//! [`ScheduleDb`] (interior-locked), one [`CompileCache`], the
+//! daemon-lifetime [`Recorder`] (lookup hit/miss and job counters), and
+//! the startup-loaded transfer store. Each miss-triggered tuning job
+//! gets *private* session state: its own [`LayerSession`] (search
+//! space, database, models, RNG), its own [`Engine`] over the shared
+//! cache, and its own [`Recorder`]+sink so the job's
+//! `run_start`/`round`/`run_end` events interleave line-atomically with
+//! other jobs' events in one JSONL stream.
+//!
+//! ## Determinism
+//!
+//! A job's RNG seed is `cfg.seed ^ fnv64(key.canonical())` — a pure
+//! function of the query, independent of arrival order, queue position,
+//! or worker count. Warm starts come only from the transfer store
+//! loaded at startup (never from schedules other jobs produced
+//! mid-session), and the shared compile cache stores pure functions of
+//! its keys — so the same query set produces byte-identical schedules
+//! for any `--workers` value and any job interleaving (pinned by
+//! `tests/serve.rs`).
+//!
+//! ## Admission control
+//!
+//! Miss queries with `tune_on_miss` go through a bounded
+//! [`mpsc::sync_channel`]: `try_send` either enqueues (response
+//! `queued`, then `tuned`/`no_valid` later) or fails fast (response
+//! `busy`) when the backlog is full — the daemon never buffers
+//! unbounded tuning work.
+//!
+//! The daemon's own status chatter goes to *stderr*: on stdio
+//! transport, stdout belongs to the response protocol.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{CompileCache, Engine, EngineConfig, LayerSession, TunerKind};
+use crate::obs::{Counter, EventSink, Recorder};
+use crate::serve::protocol::{self, Query, Request};
+use crate::serve::schedule_db::{
+    fnv64, ScheduleDb, ScheduleEntry, ScheduleKey,
+};
+use crate::tuner::database::TransferDb;
+use crate::tuner::{TunerConfig, TuningEnv};
+use crate::util::json::Json;
+
+/// Daemon knobs (CLI flags of the `serve` subcommand).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Tuning-job worker threads (`--workers`, ≥ 1).
+    pub workers: usize,
+    /// Queued-job bound for admission control (`--queue`, ≥ 1).
+    pub queue_cap: usize,
+    /// Default trial budget for a miss-triggered job (`--miss-trials`;
+    /// a query's `trials` field overrides per job).
+    pub miss_trials: usize,
+    /// Base seed; each job derives its own stream from this and its key.
+    pub seed: u64,
+    /// Worker threads *inside* each job's engine (`--jobs`).
+    pub jobs: usize,
+    /// Transfer store loaded at startup (`--transfer-from`) — the only
+    /// warm-start source jobs may use (see the determinism note above).
+    pub transfer: Option<TransferDb>,
+    /// Warm-start record cap per job (`--transfer-cap`).
+    pub transfer_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            queue_cap: 16,
+            miss_trials: 60,
+            seed: 0,
+            jobs: 1,
+            transfer: None,
+            transfer_cap: 400,
+        }
+    }
+}
+
+/// Cloneable fan-in writer for the per-job event sinks: every clone
+/// appends to one underlying stream, and each `write` call transfers
+/// its whole buffer under one lock acquisition. Paired with a
+/// [`BufWriter`] per job (which accumulates a full JSONL line before
+/// flushing), concurrent jobs produce line-atomic interleavings.
+#[derive(Clone)]
+pub struct SharedSink {
+    inner: Arc<Mutex<Box<dyn Write + Send>>>,
+}
+
+impl SharedSink {
+    /// Wrap an open stream.
+    pub fn new(out: Box<dyn Write + Send>) -> SharedSink {
+        SharedSink { inner: Arc::new(Mutex::new(out)) }
+    }
+
+    /// Create (truncate) a file sink at `path`.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<SharedSink> {
+        let file = std::fs::File::create(path)?;
+        Ok(SharedSink::new(Box::new(file)))
+    }
+}
+
+impl Write for SharedSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut out = self.inner.lock().unwrap();
+        out.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.lock().unwrap().flush()
+    }
+}
+
+/// Why a serve session ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeExit {
+    /// Input stream closed.
+    Eof,
+    /// An explicit `{"op":"shutdown"}` request.
+    Shutdown,
+}
+
+/// The serve daemon (see the module docs for the state-ownership and
+/// determinism story). One `Daemon` can serve several sessions in
+/// sequence ([`Daemon::serve_tcp`]); the schedule db, compile cache,
+/// and counters persist across them.
+pub struct Daemon {
+    cfg: ServeConfig,
+    db: Arc<ScheduleDb>,
+    /// Daemon-lifetime counters: schedule-db hits/misses, jobs
+    /// tuned/rejected, total trials profiled. (Per-job engines carry
+    /// their own recorders; the shared compile cache counts on this
+    /// one.)
+    recorder: Arc<Recorder>,
+    cache: Arc<CompileCache>,
+    metrics: Option<SharedSink>,
+}
+
+impl Daemon {
+    /// Daemon over an opened schedule db.
+    pub fn new(cfg: ServeConfig, db: Arc<ScheduleDb>) -> Daemon {
+        let recorder = Arc::new(Recorder::new());
+        let ecfg = EngineConfig::default();
+        let cache = Arc::new(CompileCache::with_recorder(
+            ecfg.max_cache_entries,
+            ecfg.max_cache_cost,
+            Arc::clone(&recorder),
+        ));
+        Daemon { cfg, db, recorder, cache, metrics: None }
+    }
+
+    /// Attach a JSONL metrics stream; every tuning job emits its
+    /// `run_start`/`round`/`run_end` events into it.
+    pub fn with_metrics(mut self, sink: SharedSink) -> Daemon {
+        self.metrics = Some(sink);
+        self
+    }
+
+    /// Daemon-lifetime counters.
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
+    }
+
+    /// The schedule store this daemon answers from.
+    pub fn db(&self) -> &ScheduleDb {
+        &self.db
+    }
+
+    /// The hit path: one in-memory map probe, counted. No I/O, no
+    /// compilation, no profiling (pinned by `tests/serve.rs`).
+    pub fn answer_lookup(&self, key: &ScheduleKey) -> Option<ScheduleEntry> {
+        let found = self.db.lookup(key);
+        self.recorder.incr(match found {
+            Some(_) => Counter::ScheduleDbHit,
+            None => Counter::ScheduleDbMiss,
+        });
+        found
+    }
+
+    /// Serve one session: read request lines from `input`, write
+    /// response lines to `output`, until EOF or a `shutdown` request.
+    /// Hits, misses, `stats`, admission rejections, and parse errors
+    /// are answered synchronously in request order; `tuned`/`no_valid`
+    /// responses land whenever their worker finishes (correlate by id).
+    pub fn run<R, W>(&self, input: R, output: W) -> Result<ServeExit>
+    where
+        R: BufRead,
+        W: Write + Send,
+    {
+        let out = Mutex::new(output);
+        let (tx, rx) = mpsc::sync_channel::<Query>(self.cfg.queue_cap.max(1));
+        let rx = Mutex::new(rx);
+        std::thread::scope(|s| -> Result<ServeExit> {
+            for _ in 0..self.cfg.workers.max(1) {
+                s.spawn(|| loop {
+                    let next = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match next {
+                        Ok(q) => self.run_job(&q, &out),
+                        Err(_) => break,
+                    }
+                });
+            }
+            let exit = self.read_loop(input, &out, &tx);
+            drop(tx);
+            exit
+        })
+    }
+
+    fn read_loop<R: BufRead, W: Write>(
+        &self,
+        input: R,
+        out: &Mutex<W>,
+        tx: &SyncSender<Query>,
+    ) -> Result<ServeExit> {
+        for line in input.lines() {
+            let line = line.context("reading request line")?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Request::parse(&line) {
+                Err(e) => self.respond(out, &protocol::response_error(&e)),
+                Ok(Request::Shutdown) => return Ok(ServeExit::Shutdown),
+                Ok(Request::Stats { id }) => {
+                    let j = self.stats_json(id);
+                    self.respond(out, &j);
+                }
+                Ok(Request::Query(q)) => {
+                    let id = q.id;
+                    let key = ScheduleKey::for_layer_on(
+                        &q.layer, q.space, &q.target,
+                    );
+                    match self.answer_lookup(&key) {
+                        Some(entry) => self.respond(
+                            out,
+                            &protocol::response_hit(id, &entry),
+                        ),
+                        None if !q.tune_on_miss => self
+                            .respond(out, &protocol::response_miss(id)),
+                        None => match tx.try_send(q) {
+                            Ok(()) => self.respond(
+                                out,
+                                &protocol::response_queued(id),
+                            ),
+                            Err(
+                                TrySendError::Full(_)
+                                | TrySendError::Disconnected(_),
+                            ) => {
+                                self.recorder
+                                    .incr(Counter::ServeJobsRejected);
+                                self.respond(
+                                    out,
+                                    &protocol::response_busy(id),
+                                );
+                            }
+                        },
+                    }
+                }
+            }
+        }
+        Ok(ServeExit::Eof)
+    }
+
+    /// One miss-triggered tuning job: private session + engine over the
+    /// shared cache, warm-started from the startup transfer store,
+    /// result promoted into the db.
+    fn run_job<W: Write>(&self, q: &Query, out: &Mutex<W>) {
+        let key = ScheduleKey::for_layer_on(&q.layer, q.space, &q.target);
+        let seed = self.cfg.seed ^ fnv64(key.canonical().as_bytes());
+        let trials = q.trials.unwrap_or(self.cfg.miss_trials).max(1);
+
+        let job_recorder = Arc::new(Recorder::new());
+        if let Some(sink) = &self.metrics {
+            job_recorder.attach_sink(EventSink::from_writer(Box::new(
+                BufWriter::with_capacity(64 * 1024, sink.clone()),
+            )));
+        }
+        job_recorder.emit_run_start(
+            "serve-job",
+            vec![
+                ("network", Json::from(q.network.as_str())),
+                ("layer", Json::from(q.layer_name.as_str())),
+                ("target", Json::from(q.target_name.as_str())),
+                ("space", Json::from(q.space.name())),
+                ("trials", Json::from(trials)),
+                ("seed", Json::from(seed)),
+            ],
+        );
+
+        let engine = Engine::with_shared_cache(
+            EngineConfig {
+                jobs: self.cfg.jobs.max(1),
+                ..EngineConfig::default()
+            },
+            Arc::clone(&self.cache),
+            Arc::clone(&job_recorder),
+        );
+        let env = TuningEnv::with_space(q.target.clone(), q.layer, q.space);
+        let mut session = LayerSession::new(
+            TunerKind::Ml2,
+            TunerConfig::default().with_seed(seed).with_trials(trials),
+            env,
+        );
+        if let Some(store) = &self.cfg.transfer {
+            if let Some(warm) = store.warm_start_for(
+                &q.layer,
+                q.space,
+                &q.target,
+                self.cfg.transfer_cap,
+            ) {
+                session = session.with_warm_start(warm);
+            }
+        }
+        let trials_run = session.step(&engine, trials);
+        job_recorder.emit_run_end();
+        self.recorder.add(Counter::TrialsProfiled, trials_run as u64);
+        self.recorder.incr(Counter::ServeJobsTuned);
+
+        let best = session.best_cycles().zip(session.best_schedule());
+        let Some((cycles, schedule)) = best else {
+            self.respond(out, &protocol::response_no_valid(q.id, trials_run));
+            return;
+        };
+        let candidate = ScheduleEntry {
+            key,
+            version: 0, // assigned by promote
+            cycles,
+            schedule,
+            layer: q.layer_name.clone(),
+            target: q.target_name.clone(),
+            tuner: session.trace.tuner.clone(),
+            trials: trials_run as u64,
+        };
+        match self.db.promote(candidate) {
+            Ok(promotion) => {
+                // respond with what the store now holds for the key
+                // (on `kept`, that is the better pre-existing entry)
+                let stored = self.db.lookup(&key).expect(
+                    "promote left no entry for the key",
+                );
+                self.respond(
+                    out,
+                    &protocol::response_tuned(
+                        q.id, &stored, promotion, trials_run,
+                    ),
+                );
+            }
+            Err(e) => {
+                eprintln!("ml2tuner serve: promote failed: {e:#}");
+                self.respond(
+                    out,
+                    &protocol::response_error(
+                        &protocol::RequestError {
+                            id: Some(q.id),
+                            message: format!("promote failed: {e:#}"),
+                        },
+                    ),
+                );
+            }
+        }
+    }
+
+    fn respond<W: Write>(&self, out: &Mutex<W>, j: &Json) {
+        let mut guard = out.lock().unwrap();
+        let _ = writeln!(*guard, "{j}");
+        let _ = guard.flush();
+    }
+
+    fn stats_json(&self, id: u64) -> Json {
+        let snap = self.recorder.snapshot();
+        let cache = self.cache.stats();
+        let mut o = Json::obj();
+        o.set("id", id)
+            .set("status", "stats")
+            .set("entries", self.db.len())
+            .set("skipped_files", self.db.skipped())
+            .set("schedule_db_hits", snap.counter(Counter::ScheduleDbHit))
+            .set(
+                "schedule_db_misses",
+                snap.counter(Counter::ScheduleDbMiss),
+            )
+            .set("serve_jobs_tuned", snap.counter(Counter::ServeJobsTuned))
+            .set(
+                "serve_jobs_rejected",
+                snap.counter(Counter::ServeJobsRejected),
+            )
+            .set("trials_profiled", snap.counter(Counter::TrialsProfiled))
+            .set("compile_cache_hits", cache.hits)
+            .set("compile_cache_misses", cache.misses)
+            .set("workers", self.cfg.workers.max(1))
+            .set("queue_cap", self.cfg.queue_cap.max(1));
+        o
+    }
+
+    /// Serve TCP clients one at a time (queries are cheap and tuning
+    /// happens on the worker pool regardless; a connection holds the
+    /// line only for its own request stream). A client's `shutdown`
+    /// stops the whole daemon; a disconnect just ends that session.
+    pub fn serve_tcp(&self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        eprintln!(
+            "ml2tuner serve: listening on {}",
+            listener.local_addr().context("reading local addr")?
+        );
+        for stream in listener.incoming() {
+            let stream = stream.context("accepting connection")?;
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".to_string());
+            eprintln!("ml2tuner serve: client {peer} connected");
+            let reader = std::io::BufReader::new(
+                stream.try_clone().context("cloning stream")?,
+            );
+            match self.run(reader, stream) {
+                Ok(ServeExit::Shutdown) => {
+                    eprintln!("ml2tuner serve: shutdown requested");
+                    return Ok(());
+                }
+                Ok(ServeExit::Eof) => {
+                    eprintln!("ml2tuner serve: client {peer} disconnected");
+                }
+                Err(e) => {
+                    eprintln!("ml2tuner serve: session error: {e:#}");
+                }
+            }
+        }
+        Ok(())
+    }
+}

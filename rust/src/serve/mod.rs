@@ -1,0 +1,35 @@
+//! Tuning-as-a-service: the persistent best-schedule store and the
+//! daemon that serves it.
+//!
+//! ML²Tuner's economics are that tuning samples are expensive — so at
+//! production scale the winning move is to never re-tune: every
+//! `tune`/`tune-net`/`tune-fleet` run can append its best schedules to
+//! a [`ScheduleDb`] (`--schedule-db <dir>`), and the `serve` daemon
+//! answers "best schedule for this layer/target/space" queries from it
+//! in-memory — compiling and profiling *nothing* on a hit. Genuine
+//! misses fall back to a warm-started tuning job on a bounded worker
+//! pool ([`Daemon`]), and the result is promoted into the store for
+//! every later query.
+//!
+//! Three layers:
+//!
+//! * [`schedule_db`] — the versioned, better-only, atomically-written
+//!   store, keyed on (layer shape, codegen signature, space kind);
+//! * [`protocol`] — the line-oriented JSON request/response schema;
+//! * [`daemon`] — session orchestration: instant lookups, admission
+//!   control, per-job engines over one shared compile cache.
+//!
+//! `experiment storm` (see [`crate::experiments`]) stress-drives the
+//! lookup path with thousands of mixed hit/miss queries and reports
+//! latency percentiles; EXPERIMENTS.md §Serving documents layout,
+//! protocol, and methodology.
+
+pub mod daemon;
+pub mod protocol;
+pub mod schedule_db;
+
+pub use daemon::{Daemon, ServeConfig, ServeExit, SharedSink};
+pub use protocol::{Query, Request, RequestError};
+pub use schedule_db::{
+    fnv64, Promotion, ScheduleDb, ScheduleEntry, ScheduleKey,
+};

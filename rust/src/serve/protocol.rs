@@ -1,0 +1,296 @@
+//! Line-oriented JSON query protocol for the serve daemon.
+//!
+//! One request per line in, one (or two — see below) response objects
+//! per request out, correlated by a caller-chosen `id`; responses may
+//! arrive out of order because miss-triggered tuning jobs complete on
+//! worker threads while later lookups are answered synchronously.
+//! EXPERIMENTS.md §Serving carries the full request/response field
+//! tables with examples; the shapes in short:
+//!
+//! ```text
+//! {"op":"query","id":1,"network":"synth-gemm",
+//!  "layer":"gemm_256x256x128","target":"zcu102","space":"paper",
+//!  "tune_on_miss":true,"trials":60}
+//! {"op":"stats","id":2}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! A `query` resolves to a [`crate::serve::ScheduleKey`] and answers
+//! `hit` instantly from the db; on a miss it answers `miss` (when
+//! `tune_on_miss` is false), or `queued` followed eventually by `tuned`
+//! / `no_valid` from the worker that ran the tuning job, or `busy` when
+//! admission control rejects the job (queue full).
+
+use crate::compiler::schedule::{Schedule, SpaceKind};
+use crate::serve::schedule_db::{Promotion, ScheduleEntry};
+use crate::util::json::Json;
+use crate::vta::config::VtaConfig;
+use crate::workloads::ConvLayer;
+
+/// A resolved `op: "query"` request: names kept for provenance, plus
+/// the workload/target objects the lookup and any fallback tuning job
+/// need.
+#[derive(Clone, Debug)]
+pub struct Query {
+    /// Caller-chosen correlation id, echoed on every response.
+    pub id: u64,
+    /// Requested network name (as registered in [`crate::workloads`]).
+    pub network: String,
+    /// Requested layer name within the network.
+    pub layer_name: String,
+    /// Requested target name (as registered in [`crate::vta::targets`]).
+    pub target_name: String,
+    /// Resolved layer shape.
+    pub layer: ConvLayer,
+    /// Resolved target config.
+    pub target: VtaConfig,
+    /// Requested knob space (defaults to `paper`).
+    pub space: SpaceKind,
+    /// Whether a miss should enqueue a tuning job (defaults to false:
+    /// lookups are free, tuning is not).
+    pub tune_on_miss: bool,
+    /// Per-job trial budget override; `None` uses the daemon default.
+    pub trials: Option<usize>,
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Best-schedule lookup (with optional tuning fallback).
+    Query(Query),
+    /// Daemon-lifetime counters + store/cache sizes.
+    Stats {
+        /// Correlation id echoed on the response.
+        id: u64,
+    },
+    /// End this serve session (EOF is equivalent).
+    Shutdown,
+}
+
+/// Why a request line was rejected; `id` is echoed when the line was
+/// parseable enough to carry one, so callers can correlate the error.
+#[derive(Clone, Debug)]
+pub struct RequestError {
+    /// Correlation id, when one could be extracted.
+    pub id: Option<u64>,
+    /// Human-readable rejection reason.
+    pub message: String,
+}
+
+impl RequestError {
+    fn new(id: Option<u64>, message: impl Into<String>) -> RequestError {
+        RequestError { id, message: message.into() }
+    }
+}
+
+impl Request {
+    /// Parse and resolve one request line.
+    pub fn parse(line: &str) -> Result<Request, RequestError> {
+        let j = Json::parse(line).map_err(|e| {
+            RequestError::new(None, format!("malformed JSON: {e}"))
+        })?;
+        let id = j.get("id").and_then(Json::as_u64);
+        let op = j.get("op").and_then(Json::as_str).ok_or_else(|| {
+            RequestError::new(id, "missing op")
+        })?;
+        match op {
+            "shutdown" => Ok(Request::Shutdown),
+            "stats" => Ok(Request::Stats {
+                id: id.ok_or_else(|| {
+                    RequestError::new(None, "stats requires id")
+                })?,
+            }),
+            "query" => {
+                let id = id.ok_or_else(|| {
+                    RequestError::new(None, "query requires id")
+                })?;
+                let gets = |k: &str| -> Result<&str, RequestError> {
+                    j.get(k).and_then(Json::as_str).ok_or_else(|| {
+                        RequestError::new(Some(id), format!("missing {k}"))
+                    })
+                };
+                let network = gets("network")?.to_string();
+                let layer_name = gets("layer")?.to_string();
+                let target_name = gets("target")?.to_string();
+                let net =
+                    crate::workloads::network(&network).ok_or_else(|| {
+                        RequestError::new(
+                            Some(id),
+                            format!("unknown network '{network}'"),
+                        )
+                    })?;
+                let layer = net.layer(&layer_name).ok_or_else(|| {
+                    RequestError::new(
+                        Some(id),
+                        format!("unknown layer '{layer_name}'"),
+                    )
+                })?;
+                let target = crate::vta::targets::target(&target_name)
+                    .ok_or_else(|| {
+                        RequestError::new(
+                            Some(id),
+                            format!("unknown target '{target_name}'"),
+                        )
+                    })?;
+                let space = match j.get("space").and_then(Json::as_str) {
+                    None => SpaceKind::Paper,
+                    Some(name) => SpaceKind::parse(name).ok_or_else(|| {
+                        RequestError::new(
+                            Some(id),
+                            format!("unknown space '{name}'"),
+                        )
+                    })?,
+                };
+                Ok(Request::Query(Query {
+                    id,
+                    network,
+                    layer_name,
+                    target_name,
+                    layer,
+                    target,
+                    space,
+                    tune_on_miss: j
+                        .get("tune_on_miss")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                    trials: j.get("trials").and_then(Json::as_usize),
+                }))
+            }
+            other => Err(RequestError::new(
+                id,
+                format!("unknown op '{other}'"),
+            )),
+        }
+    }
+}
+
+/// Schedule knobs keyed by name (the same layout tuning logs and
+/// schedule-db entries use).
+pub fn knobs_json(space: SpaceKind, schedule: &Schedule) -> Json {
+    let mut knobs = Json::obj();
+    for name in space.knob_names() {
+        knobs.set(name, schedule.knob(name).unwrap_or(0));
+    }
+    knobs
+}
+
+fn base(id: u64, status: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("id", id).set("status", status);
+    o
+}
+
+/// `hit`: stored best schedule, its version, and its provenance.
+pub fn response_hit(id: u64, entry: &ScheduleEntry) -> Json {
+    let mut o = base(id, "hit");
+    o.set("version", entry.version)
+        .set("cycles", entry.cycles)
+        .set("knobs", knobs_json(entry.key.space, &entry.schedule))
+        .set("layer", entry.layer.as_str())
+        .set("target", entry.target.as_str())
+        .set("tuner", entry.tuner.as_str())
+        .set("trials", entry.trials);
+    o
+}
+
+/// `miss` without fallback: nothing stored, nothing enqueued.
+pub fn response_miss(id: u64) -> Json {
+    base(id, "miss")
+}
+
+/// `queued`: the miss enqueued a tuning job; a `tuned` / `no_valid`
+/// response with the same id follows when the job completes.
+pub fn response_queued(id: u64) -> Json {
+    base(id, "queued")
+}
+
+/// `busy`: admission control rejected the tuning job (queue full).
+pub fn response_busy(id: u64) -> Json {
+    base(id, "busy")
+}
+
+/// `tuned`: the fallback job finished with a valid best schedule; says
+/// what the store did with it ([`Promotion`]) and the resulting entry.
+pub fn response_tuned(
+    id: u64,
+    entry: &ScheduleEntry,
+    promotion: Promotion,
+    trials_run: usize,
+) -> Json {
+    let label = match promotion {
+        Promotion::Inserted => "inserted",
+        Promotion::Promoted { .. } => "promoted",
+        Promotion::Kept { .. } => "kept",
+    };
+    let mut o = base(id, "tuned");
+    o.set("promotion", label)
+        .set("version", entry.version)
+        .set("cycles", entry.cycles)
+        .set("knobs", knobs_json(entry.key.space, &entry.schedule))
+        .set("trials_run", trials_run);
+    o
+}
+
+/// `no_valid`: the fallback job found no valid configuration within its
+/// budget; nothing was stored.
+pub fn response_no_valid(id: u64, trials_run: usize) -> Json {
+    let mut o = base(id, "no_valid");
+    o.set("trials_run", trials_run);
+    o
+}
+
+/// `error`: the request line was rejected.
+pub fn response_error(err: &RequestError) -> Json {
+    let mut o = Json::obj();
+    if let Some(id) = err.id {
+        o.set("id", id);
+    }
+    o.set("status", "error").set("message", err.message.as_str());
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_query_with_defaults() {
+        let r = Request::parse(
+            r#"{"op":"query","id":7,"network":"synth-gemm",
+                "layer":"gemm_256x256x128","target":"zcu102"}"#,
+        )
+        .unwrap();
+        let Request::Query(q) = r else { panic!("not a query") };
+        assert_eq!(q.id, 7);
+        assert_eq!(q.space, SpaceKind::Paper);
+        assert!(!q.tune_on_miss);
+        assert_eq!(q.trials, None);
+    }
+
+    #[test]
+    fn rejects_unknowns_with_id_echo() {
+        let e = Request::parse(
+            r#"{"op":"query","id":9,"network":"nope",
+                "layer":"gemm","target":"zcu102"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.id, Some(9));
+        assert!(e.message.contains("unknown network"));
+        let e = Request::parse("not json").unwrap_err();
+        assert_eq!(e.id, None);
+        let j = response_error(&e);
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("error"));
+    }
+
+    #[test]
+    fn shutdown_and_stats_parse() {
+        assert!(matches!(
+            Request::parse(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op":"stats","id":3}"#).unwrap(),
+            Request::Stats { id: 3 }
+        ));
+    }
+}

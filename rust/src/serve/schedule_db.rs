@@ -1,0 +1,483 @@
+//! Persistent, versioned best-schedule store — the "never re-tune"
+//! memory behind `serve`.
+//!
+//! A [`ScheduleDb`] is a directory of small JSON files, one per
+//! [`ScheduleKey`] — (layer shape, target codegen-signature, space
+//! kind). The key deliberately mirrors the compile cache's sharing rule:
+//! two targets with the same [`CodegenSig`] (e.g. `zcu102` and `hiband`,
+//! which differ only in cycle-model coefficients) produce identical
+//! code for identical schedules, so a best schedule found on one is
+//! *definitionally* the same artifact on the other and is served to
+//! both. The provenance fields ([`ScheduleEntry::target`] et al.) record
+//! where a result actually came from; the key records where it applies.
+//!
+//! Promotion is strictly better-only and versioned: the first result
+//! for a key is stored as version 1, a later result replaces it only
+//! when its cycle count is strictly lower (bumping the version), and
+//! anything else is kept out ([`Promotion::Kept`]) — a worse result can
+//! never overwrite a better one, so the store is monotone under any
+//! interleaving of writers. Every write goes through a temp file and an
+//! atomic `rename`, so readers (and crashed writers) never observe a
+//! half-written entry.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compiler::schedule::{Schedule, SpaceKind};
+use crate::obs::SCHEMA_VERSION;
+use crate::tuner::database::LayerMeta;
+use crate::util::json::Json;
+use crate::vta::config::{CodegenSig, VtaConfig};
+use crate::workloads::ConvLayer;
+
+/// FNV-1a 64-bit over a byte string. Used for entry filenames and the
+/// per-job RNG seed salt in [`crate::serve::Daemon`] — stable across
+/// runs and platforms, unlike `std::hash`.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// What a stored best schedule is keyed on: everything that determines
+/// whether a schedule artifact is interchangeable between two tuning
+/// requests, and nothing that is not (names and cycle-model coefficients
+/// are provenance, not identity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduleKey {
+    /// Layer shape (the schedule space depends only on this).
+    pub shape: LayerMeta,
+    /// Compile-shaping subset of the target config.
+    pub sig: CodegenSig,
+    /// Knob set the schedule was searched in.
+    pub space: SpaceKind,
+}
+
+impl ScheduleKey {
+    /// Build the key for tuning `layer` on `hw` in `space`.
+    pub fn for_layer_on(
+        layer: &ConvLayer,
+        space: SpaceKind,
+        hw: &VtaConfig,
+    ) -> ScheduleKey {
+        ScheduleKey {
+            shape: LayerMeta::of(layer),
+            sig: hw.codegen_sig(),
+            space,
+        }
+    }
+
+    /// Canonical text form — the hashing/seeding substrate. Field order
+    /// is fixed; changing it invalidates every stored filename.
+    pub fn canonical(&self) -> String {
+        let s = &self.shape;
+        let g = &self.sig;
+        format!(
+            "h{} w{} c{} kc{} kh{} kw{} oh{} ow{} pad{} stride{} | \
+             iw{} ww{} aw{} b{} blk{} ib{} wb{} ab{} sh{} | {}",
+            s.h,
+            s.w,
+            s.c,
+            s.kc,
+            s.kh,
+            s.kw,
+            s.oh,
+            s.ow,
+            s.pad,
+            s.stride,
+            g.log_inp_width,
+            g.log_wgt_width,
+            g.log_acc_width,
+            g.log_batch,
+            g.log_block,
+            g.log_inp_buff_size,
+            g.log_wgt_buff_size,
+            g.log_acc_buff_size,
+            g.shift,
+            self.space.name(),
+        )
+    }
+
+    /// Stable 64-bit identity: FNV-1a of [`ScheduleKey::canonical`].
+    pub fn hash64(&self) -> u64 {
+        fnv64(self.canonical().as_bytes())
+    }
+}
+
+fn sig_to_json(sig: &CodegenSig) -> Json {
+    let mut o = Json::obj();
+    o.set("log_inp_width", sig.log_inp_width as usize)
+        .set("log_wgt_width", sig.log_wgt_width as usize)
+        .set("log_acc_width", sig.log_acc_width as usize)
+        .set("log_batch", sig.log_batch as usize)
+        .set("log_block", sig.log_block as usize)
+        .set("log_inp_buff_size", sig.log_inp_buff_size as usize)
+        .set("log_wgt_buff_size", sig.log_wgt_buff_size as usize)
+        .set("log_acc_buff_size", sig.log_acc_buff_size as usize)
+        .set("shift", sig.shift as usize);
+    o
+}
+
+fn sig_from_json(j: &Json) -> Result<CodegenSig> {
+    let geti = |k: &str| -> Result<u32> {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .map(|v| v as u32)
+            .ok_or_else(|| anyhow!("codegen_sig missing {k}"))
+    };
+    Ok(CodegenSig {
+        log_inp_width: geti("log_inp_width")?,
+        log_wgt_width: geti("log_wgt_width")?,
+        log_acc_width: geti("log_acc_width")?,
+        log_batch: geti("log_batch")?,
+        log_block: geti("log_block")?,
+        log_inp_buff_size: geti("log_inp_buff_size")?,
+        log_wgt_buff_size: geti("log_wgt_buff_size")?,
+        log_acc_buff_size: geti("log_acc_buff_size")?,
+        shift: geti("shift")?,
+    })
+}
+
+/// One stored best-schedule record: the key it answers, the monotone
+/// version counter, and the winning result with its provenance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleEntry {
+    /// What this entry answers.
+    pub key: ScheduleKey,
+    /// 1-based, bumped on every better-only replacement. Assigned by
+    /// [`ScheduleDb::promote`]; the value on a candidate is ignored.
+    pub version: u64,
+    /// Simulated cycle count of `schedule` — the promotion criterion.
+    pub cycles: u64,
+    /// The best known schedule for the key.
+    pub schedule: Schedule,
+    /// Provenance: workload layer name the result was tuned as.
+    pub layer: String,
+    /// Provenance: target the tuning run simulated (entries are served
+    /// to every target sharing the key's codegen signature).
+    pub target: String,
+    /// Provenance: tuner name from the trace (e.g. `ml2tuner-warm`).
+    pub tuner: String,
+    /// Provenance: trials the producing run spent.
+    pub trials: u64,
+}
+
+impl ScheduleEntry {
+    /// Serialize one entry file.
+    pub fn to_json(&self) -> Json {
+        let mut best = Json::obj();
+        let mut knobs = Json::obj();
+        for name in self.key.space.knob_names() {
+            knobs.set(name, self.schedule.knob(name).unwrap_or(0));
+        }
+        best.set("cycles", self.cycles)
+            .set("knobs", knobs)
+            .set("layer", self.layer.as_str())
+            .set("target", self.target.as_str())
+            .set("tuner", self.tuner.as_str())
+            .set("trials", self.trials);
+        let mut o = Json::obj();
+        o.set("schema", SCHEMA_VERSION)
+            .set("space", self.key.space.name())
+            .set("version", self.version)
+            .set("shape", self.key.shape.to_json())
+            .set("codegen_sig", sig_to_json(&self.key.sig))
+            .set("best", best);
+        o
+    }
+
+    /// Parse one entry file (strict: every knob the declared space
+    /// enumerates must be present, same rule as tuning-log loading).
+    pub fn from_json(j: &Json) -> Result<ScheduleEntry> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing schema"))?;
+        if schema != SCHEMA_VERSION {
+            return Err(anyhow!("unsupported schema {schema}"));
+        }
+        let space = j
+            .get("space")
+            .and_then(Json::as_str)
+            .and_then(SpaceKind::parse)
+            .ok_or_else(|| anyhow!("missing/unknown space"))?;
+        let shape = LayerMeta::from_json(
+            j.get("shape").ok_or_else(|| anyhow!("missing shape"))?,
+        )?;
+        let sig = sig_from_json(
+            j.get("codegen_sig")
+                .ok_or_else(|| anyhow!("missing codegen_sig"))?,
+        )?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing version"))?;
+        let best = j.get("best").ok_or_else(|| anyhow!("missing best"))?;
+        let knobs = best
+            .get("knobs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing knobs"))?;
+        let mut schedule = Schedule::default();
+        for (name, val) in knobs {
+            if let Some(v) = val.as_usize() {
+                schedule.set_knob(name, v);
+            }
+        }
+        for name in space.knob_names() {
+            if knobs.get(*name).and_then(Json::as_usize).is_none() {
+                return Err(anyhow!("knob {name} missing or non-numeric"));
+            }
+        }
+        let gets = |k: &str| -> Result<String> {
+            best.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("best missing {k}"))
+        };
+        Ok(ScheduleEntry {
+            key: ScheduleKey { shape, sig, space },
+            version,
+            cycles: best
+                .get("cycles")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("best missing cycles"))?,
+            schedule,
+            layer: gets("layer")?,
+            target: gets("target")?,
+            tuner: gets("tuner")?,
+            trials: best.get("trials").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// What [`ScheduleDb::promote`] did with a candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Promotion {
+    /// First result for the key — stored as version 1.
+    Inserted,
+    /// Strictly better than the stored entry — replaced it, version
+    /// bumped; carries the cycles it beat.
+    Promoted {
+        /// Cycle count of the entry that was replaced.
+        prev_cycles: u64,
+    },
+    /// Not better than the stored entry — store unchanged; carries the
+    /// cycles that held the slot.
+    Kept {
+        /// Cycle count of the entry that kept the slot.
+        best_cycles: u64,
+    },
+}
+
+/// The on-disk best-schedule store: an in-memory index over a directory
+/// of entry files, safe to share across the serve daemon's worker
+/// threads (interior [`Mutex`]; promotion holds the lock across the
+/// compare *and* the file write, so concurrent appenders serialize and
+/// better-only stays true under any interleaving).
+pub struct ScheduleDb {
+    dir: PathBuf,
+    entries: Mutex<HashMap<u64, ScheduleEntry>>,
+    skipped: usize,
+}
+
+impl ScheduleDb {
+    /// Open (creating if needed) the store at `dir`, loading every
+    /// parseable `*.json` entry. Unparseable files are skipped and
+    /// counted ([`ScheduleDb::skipped`]), not fatal — a foreign or
+    /// future-schema file must not brick the daemon.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ScheduleDb> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating schedule db dir {}", dir.display())
+        })?;
+        let mut entries: HashMap<u64, ScheduleEntry> = HashMap::new();
+        let mut skipped = 0usize;
+        let mut names: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .with_context(|| {
+                format!("reading schedule db dir {}", dir.display())
+            })?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|e| e == "json"))
+            .collect();
+        // sorted so duplicate-key resolution below is order-independent
+        names.sort();
+        for path in names {
+            let parsed = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .and_then(|j| ScheduleEntry::from_json(&j).ok());
+            let Some(entry) = parsed else {
+                skipped += 1;
+                continue;
+            };
+            let h = entry.key.hash64();
+            // two files for one key can only come from hand-copied
+            // stores; better-only applies to loading too
+            match entries.get(&h) {
+                Some(old) if old.cycles <= entry.cycles => {}
+                _ => {
+                    entries.insert(h, entry);
+                }
+            }
+        }
+        Ok(ScheduleDb { dir, entries: Mutex::new(entries), skipped })
+    }
+
+    /// Directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether the store holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Files present at open time that did not parse as entries.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Pure in-memory lookup — no I/O, no compilation, no profiling.
+    /// The full-key equality check guards the (astronomically unlikely)
+    /// 64-bit hash collision.
+    pub fn lookup(&self, key: &ScheduleKey) -> Option<ScheduleEntry> {
+        let entries = self.entries.lock().unwrap();
+        entries.get(&key.hash64()).filter(|e| e.key == *key).cloned()
+    }
+
+    /// All entries, sorted by canonical key text (deterministic across
+    /// sessions regardless of insertion order).
+    pub fn entries(&self) -> Vec<ScheduleEntry> {
+        let entries = self.entries.lock().unwrap();
+        let mut all: Vec<ScheduleEntry> = entries.values().cloned().collect();
+        all.sort_by_key(|e| e.key.canonical());
+        all
+    }
+
+    /// Offer a candidate result for its key. Better-only and versioned:
+    /// first result for a key is stored as version 1; a strictly lower
+    /// cycle count replaces the stored entry and bumps its version; ties
+    /// and worse results leave the store untouched. The decision and the
+    /// entry-file write happen under one lock, and the file itself is
+    /// written temp-then-rename, so a reader of the directory never sees
+    /// a torn or regressed entry.
+    pub fn promote(&self, mut candidate: ScheduleEntry) -> Result<Promotion> {
+        let h = candidate.key.hash64();
+        let mut entries = self.entries.lock().unwrap();
+        let (promotion, version) = match entries.get(&h) {
+            None => (Promotion::Inserted, 1),
+            Some(old) if candidate.cycles < old.cycles => (
+                Promotion::Promoted { prev_cycles: old.cycles },
+                old.version + 1,
+            ),
+            Some(old) => {
+                return Ok(Promotion::Kept { best_cycles: old.cycles })
+            }
+        };
+        candidate.version = version;
+        self.write_entry(&candidate)?;
+        entries.insert(h, candidate);
+        Ok(promotion)
+    }
+
+    fn write_entry(&self, entry: &ScheduleEntry) -> Result<()> {
+        let name = format!(
+            "{}-{:016x}.json",
+            entry.key.space.name(),
+            entry.key.hash64()
+        );
+        let path = self.dir.join(&name);
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        std::fs::write(&tmp, format!("{}\n", entry.to_json().to_string_pretty()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> ScheduleKey {
+        let layer = crate::workloads::network("synth-gemm").unwrap().layers[0];
+        ScheduleKey::for_layer_on(
+            &layer,
+            SpaceKind::Paper,
+            &VtaConfig::zcu102(),
+        )
+    }
+
+    fn entry(cycles: u64) -> ScheduleEntry {
+        ScheduleEntry {
+            key: key(),
+            version: 0,
+            cycles,
+            schedule: Schedule::default(),
+            layer: "gemm".into(),
+            target: "zcu102".into(),
+            tuner: "ml2tuner".into(),
+            trials: 60,
+        }
+    }
+
+    #[test]
+    fn canonical_is_stable_and_space_sensitive() {
+        let k = key();
+        assert_eq!(k.canonical(), k.canonical());
+        let ext = ScheduleKey { space: SpaceKind::Extended, ..k };
+        assert_ne!(k.hash64(), ext.hash64());
+    }
+
+    #[test]
+    fn entry_json_round_trips() {
+        let e = ScheduleEntry { version: 3, ..entry(1234) };
+        let back =
+            ScheduleEntry::from_json(&Json::parse(&e.to_json().to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn entry_json_rejects_missing_knob() {
+        let e = entry(99);
+        let mut j = e.to_json();
+        let knobs = j
+            .get("best")
+            .and_then(|b| b.get("knobs"))
+            .and_then(Json::as_obj)
+            .unwrap()
+            .clone();
+        let mut pruned = Json::obj();
+        for (name, val) in &knobs {
+            if name != "TH" {
+                pruned.set(name, val.clone());
+            }
+        }
+        let mut best = j.get("best").unwrap().clone();
+        best.set("knobs", pruned);
+        j.set("best", best);
+        assert!(ScheduleEntry::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -26,7 +26,11 @@ use crate::workloads::ConvLayer;
 /// wrong-result; both are invalid).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Outcome {
-    Valid { cycles: u64 },
+    /// Ran correctly; `cycles` is the measured latency.
+    Valid {
+        /// Measured execution latency in hardware cycles.
+        cycles: u64,
+    },
     /// Register error — on the real board this needs a manual reboot.
     Crash,
     /// Runs to completion but the output differs from the golden model.
@@ -34,10 +38,12 @@ pub enum Outcome {
 }
 
 impl Outcome {
+    /// Whether the trial profiled valid.
     pub fn is_valid(&self) -> bool {
         matches!(self, Outcome::Valid { .. })
     }
 
+    /// Measured cycles, if the trial was valid.
     pub fn cycles(&self) -> Option<u64> {
         match self {
             Outcome::Valid { cycles } => Some(*cycles),
@@ -49,10 +55,15 @@ impl Outcome {
 /// One profiling attempt.
 #[derive(Clone, Debug)]
 pub struct TrialRecord {
+    /// Index of the schedule in its layer's search space.
     pub space_index: usize,
+    /// The profiled schedule.
     pub schedule: Schedule,
+    /// Visible feature vector (models P/V input).
     pub visible: Vec<f64>,
+    /// Hidden feature vector (model A's extra input).
     pub hidden: Vec<f64>,
+    /// What profiling observed.
     pub outcome: Outcome,
 }
 
@@ -74,19 +85,30 @@ impl TrialRecord {
 /// hand. Mirrors [`ConvLayer`] minus the name.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerMeta {
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Input channels.
     pub c: usize,
+    /// Output channels.
     pub kc: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Output height.
     pub oh: usize,
+    /// Output width.
     pub ow: usize,
+    /// Spatial padding.
     pub pad: usize,
+    /// Spatial stride.
     pub stride: usize,
 }
 
 impl LayerMeta {
+    /// Snapshot the shape of a workload layer.
     pub fn of(l: &ConvLayer) -> LayerMeta {
         LayerMeta {
             h: l.h, w: l.w, c: l.c, kc: l.kc, kh: l.kh, kw: l.kw,
@@ -134,7 +156,10 @@ impl LayerMeta {
         1.0 / (1.0 + d2.sqrt())
     }
 
-    fn to_json(&self) -> Json {
+    /// Serialize the shape (flat object of the ten dimension fields).
+    /// Public because [`crate::serve::ScheduleDb`] embeds shapes in its
+    /// entry files with the same layout tuning logs use.
+    pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("h", self.h)
             .set("w", self.w)
@@ -149,7 +174,9 @@ impl LayerMeta {
         o
     }
 
-    fn from_json(j: &Json) -> Result<LayerMeta> {
+    /// Parse a shape serialized by [`LayerMeta::to_json`]; every
+    /// dimension field is required.
+    pub fn from_json(j: &Json) -> Result<LayerMeta> {
         let geti = |k: &str| {
             j.get(k)
                 .and_then(Json::as_usize)
@@ -173,6 +200,7 @@ impl LayerMeta {
 /// The profiling database.
 #[derive(Clone, Debug)]
 pub struct Database {
+    /// Name of the layer the records belong to.
     pub layer: String,
     /// Layer shape, when known. Logs written before shape persistence
     /// (or hand-built test databases) have `None` — they still train
@@ -187,6 +215,7 @@ pub struct Database {
     /// stamping have `None` — [`TransferDb`] treats them as
     /// same-hardware sources (the pre-registry behaviour).
     pub target: Option<TargetMeta>,
+    /// Every profiling attempt, in profiling order.
     pub records: Vec<TrialRecord>,
 }
 
@@ -197,6 +226,7 @@ impl Default for Database {
 }
 
 impl Database {
+    /// Bare database with only a layer name (no shape/target stamp).
     pub fn new(layer: &str) -> Self {
         Database { layer: layer.to_string(), meta: None,
                    kind: SpaceKind::Paper, target: None,
@@ -234,18 +264,22 @@ impl Database {
         }
     }
 
+    /// Append one profiling record.
     pub fn push(&mut self, rec: TrialRecord) {
         self.records.push(rec);
     }
 
+    /// Number of records.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether the database holds no records.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// Number of records that profiled valid.
     pub fn n_valid(&self) -> usize {
         self.records.iter().filter(|r| r.outcome.is_valid()).count()
     }
@@ -318,6 +352,7 @@ impl Database {
 
     // ------------------------------------------------------------- JSON --
 
+    /// Serialize the whole log (shape/target stamps + every record).
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("layer", self.layer.as_str());
@@ -362,6 +397,7 @@ impl Database {
         root
     }
 
+    /// Parse a tuning log (current knob-object or legacy flat format).
     pub fn from_json(j: &Json) -> Result<Self> {
         let layer = j
             .get("layer")
@@ -465,11 +501,13 @@ impl Database {
         Ok(db)
     }
 
+    /// Write the log to `path` as pretty-printed JSON.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
             .with_context(|| format!("writing {:?}", path.as_ref()))
     }
 
+    /// Read a tuning log from `path`.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
@@ -501,6 +539,7 @@ pub struct TransferDb {
 }
 
 impl TransferDb {
+    /// Empty store.
     pub fn new() -> Self {
         TransferDb::default()
     }
@@ -540,14 +579,17 @@ impl TransferDb {
         Ok(store)
     }
 
+    /// Number of source logs loaded.
     pub fn n_layers(&self) -> usize {
         self.sources.len()
     }
 
+    /// Total records across all source logs.
     pub fn total_records(&self) -> usize {
         self.sources.iter().map(|d| d.len()).sum()
     }
 
+    /// Whether the store holds no source logs.
     pub fn is_empty(&self) -> bool {
         self.sources.is_empty()
     }

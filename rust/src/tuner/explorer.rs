@@ -28,6 +28,7 @@ use crate::util::rng::Rng;
 
 /// Explorer policy knobs.
 pub struct Explorer<'r> {
+    /// ε-greedy exploration fraction of each selected batch.
     pub epsilon: f64,
     /// Model-V veto margin (see `TunerConfig::v_margin`).
     pub v_margin: f64,
@@ -46,7 +47,9 @@ pub struct Explorer<'r> {
 /// confusion once the picks are profiled.
 #[derive(Clone, Debug, Default)]
 pub struct SelectStats {
+    /// Candidates V filtered out this round.
     pub vetoes: u64,
+    /// V margins of the picked candidates, pick order.
     pub margins: Vec<f64>,
 }
 
@@ -189,6 +192,7 @@ impl FreePool {
 }
 
 impl<'r> Explorer<'r> {
+    /// Single-threaded explorer with the default V margin.
     pub fn new(epsilon: f64) -> Self {
         Explorer {
             epsilon,
@@ -198,6 +202,7 @@ impl<'r> Explorer<'r> {
         }
     }
 
+    /// Override the model-V veto margin.
     pub fn with_v_margin(mut self, v_margin: f64) -> Self {
         self.v_margin = v_margin;
         self

@@ -28,6 +28,7 @@ use crate::util::rng::Rng;
 
 /// The multi-level tuner.
 pub struct Ml2Tuner {
+    /// Tuning-loop knobs.
     pub cfg: TunerConfig,
     /// Ablation: apply the validity filter (model V).
     pub use_v: bool,
@@ -41,15 +42,18 @@ pub struct Ml2Tuner {
 }
 
 impl Ml2Tuner {
+    /// Full three-model tuner (V and A enabled, cold start).
     pub fn new(cfg: TunerConfig) -> Self {
         Ml2Tuner { cfg, use_v: true, use_a: true, warm: None }
     }
 
+    /// Ablation: disable the model-V validity filter.
     pub fn without_v(mut self) -> Self {
         self.use_v = false;
         self
     }
 
+    /// Ablation: disable the model-A re-ranking stage.
     pub fn without_a(mut self) -> Self {
         self.use_a = false;
         self

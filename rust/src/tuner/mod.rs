@@ -41,8 +41,11 @@ use space::SearchSpace;
 /// as `seed ^ salt`, so a session stepped round-by-round replays the
 /// standalone tuner exactly (tested in `engine::scheduler`).
 pub mod salt {
+    /// Stream salt for [`crate::tuner::ml2tuner::Ml2Tuner`].
     pub const ML2: u64 = 0x4d4c_3254;
+    /// Stream salt for the TVM-style baseline.
     pub const TVM: u64 = 0x5456_4d21;
+    /// Stream salt for the random-search baseline.
     pub const RANDOM: u64 = 0x52_414e_44;
 }
 
@@ -128,6 +131,7 @@ pub struct TunerConfig {
     /// Boost rounds for in-loop retraining (full Table 3 uses 300; the
     /// loop default trades a little accuracy for retrain latency).
     pub boost_rounds: usize,
+    /// RNG seed; the per-tuner stream is `seed ^ salt`.
     pub seed: u64,
 }
 
@@ -151,11 +155,13 @@ impl Default for TunerConfig {
 pub const DEFAULT_V_MARGIN: f64 = 0.25;
 
 impl TunerConfig {
+    /// Builder: set the RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Builder: set the total profiling budget.
     pub fn with_trials(mut self, trials: usize) -> Self {
         self.max_trials = trials;
         self
@@ -171,9 +177,13 @@ impl TunerConfig {
 /// Everything a tuner needs to profile configurations on the simulated
 /// board: layer, search space, compiler, simulator.
 pub struct TuningEnv {
+    /// The convolution layer being tuned.
     pub layer: ConvLayer,
+    /// Enumerable schedule search space for the layer.
     pub space: SearchSpace,
+    /// Compiler lowering schedules for this target.
     pub compiler: Compiler,
+    /// Cycle-accurate simulator standing in for the board.
     pub simulator: Simulator,
 }
 
@@ -197,6 +207,7 @@ impl TuningEnv {
         }
     }
 
+    /// Which knob set this environment searches.
     pub fn kind(&self) -> SpaceKind {
         self.space.kind()
     }
@@ -251,12 +262,16 @@ pub trait Tuner {
 /// Result summary used by examples and experiments.
 #[derive(Clone, Debug)]
 pub struct TuningOutcome {
+    /// Full per-trial trace of the run.
     pub trace: TuningTrace,
+    /// Best valid latency found, if any.
     pub best_cycles: Option<u64>,
+    /// Fraction of profiled trials that were invalid.
     pub invalidity_ratio: f64,
 }
 
 impl TuningOutcome {
+    /// Summarize a finished trace.
     pub fn from_trace(trace: TuningTrace) -> Self {
         let best_cycles = trace.best_cycles();
         let invalidity_ratio = trace.invalidity_ratio();

@@ -42,6 +42,7 @@ fn warm_rows(
 
 /// A trained P model.
 pub struct ModelP {
+    /// Underlying GBDT ensemble.
     pub booster: Booster,
     /// Flattened inference layout (bit-identical predictions).
     flat: FlatEnsemble,
@@ -56,6 +57,7 @@ impl ModelP {
         ModelP { flat: booster.flatten(), booster }
     }
 
+    /// Train on the database's valid records (`None` if < 2 rows).
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
         let (xs, ys) = db.train_p();
         fit(Self::params(rounds, seed), xs, ys)
@@ -105,6 +107,7 @@ impl ModelP {
 
 /// A trained V model.
 pub struct ModelV {
+    /// Underlying GBDT ensemble.
     pub booster: Booster,
     /// Flattened inference layout (bit-identical margins).
     flat: FlatEnsemble,
@@ -119,6 +122,7 @@ impl ModelV {
         ModelV { flat: booster.flatten(), booster }
     }
 
+    /// Train on all records, labelled by validity (`None` if < 2 rows).
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
         // degenerate labels (all same class) would still train but predict a
         // constant; that is fine — the explorer falls back gracefully.
@@ -175,6 +179,7 @@ impl ModelV {
 
 /// A trained A model.
 pub struct ModelA {
+    /// Underlying GBDT ensemble.
     pub booster: Booster,
     /// Flattened inference layout (bit-identical predictions).
     flat: FlatEnsemble,
@@ -189,6 +194,7 @@ impl ModelA {
         ModelA { flat: booster.flatten(), booster }
     }
 
+    /// Train on valid records, visible ⊕ hidden (`None` if < 2 rows).
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
         let (xs, ys) = db.train_a();
         fit(Self::params(rounds, seed), xs, ys)

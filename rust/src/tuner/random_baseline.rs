@@ -8,11 +8,14 @@ use crate::engine::Engine;
 use crate::obs::Stage;
 use crate::util::rng::Rng;
 
+/// Uniform random search over the unmeasured space.
 pub struct RandomTuner {
+    /// Tuning-loop knobs.
     pub cfg: TunerConfig,
 }
 
 impl RandomTuner {
+    /// Baseline over the given knobs.
     pub fn new(cfg: TunerConfig) -> Self {
         RandomTuner { cfg }
     }

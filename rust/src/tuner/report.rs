@@ -5,21 +5,27 @@ use super::database::{Outcome, TrialRecord};
 /// Complete record of one tuning run, in profiling order.
 #[derive(Clone, Debug, Default)]
 pub struct TuningTrace {
+    /// Layer name the run tuned.
     pub layer: String,
+    /// Tuner name that produced the run.
     pub tuner: String,
+    /// Every profiled trial, in order.
     pub trials: Vec<TrialRecord>,
 }
 
 impl TuningTrace {
+    /// Empty trace for a (layer, tuner) pair.
     pub fn new(layer: &str, tuner: &str) -> Self {
         TuningTrace { layer: layer.to_string(), tuner: tuner.to_string(),
                       trials: Vec::new() }
     }
 
+    /// Trials profiled so far.
     pub fn len(&self) -> usize {
         self.trials.len()
     }
 
+    /// True if nothing has been profiled yet.
     pub fn is_empty(&self) -> bool {
         self.trials.is_empty()
     }
@@ -145,6 +151,7 @@ impl TuningTrace {
 /// reboot" — dominant cost; defaults model a ZCU102 flow).
 #[derive(Clone, Debug)]
 pub struct ProfilingCostModel {
+    /// Board clock used to convert cycles to seconds.
     pub clock_mhz: f64,
     /// Measurement repeats per valid config.
     pub repeats: usize,

@@ -25,6 +25,7 @@ impl SearchSpace {
         Self::with_kind(layer, SpaceKind::Paper)
     }
 
+    /// Space over a chosen knob set.
     pub fn with_kind(layer: &ConvLayer, kind: SpaceKind) -> Self {
         SearchSpace {
             space: schedule::space_for(layer, kind),
@@ -32,14 +33,17 @@ impl SearchSpace {
         }
     }
 
+    /// Which knob set this space enumerates.
     pub fn kind(&self) -> SpaceKind {
         self.space.kind()
     }
 
+    /// Total number of configurations.
     pub fn len(&self) -> usize {
         self.space.len()
     }
 
+    /// True if the space has no configurations.
     pub fn is_empty(&self) -> bool {
         self.space.is_empty()
     }
@@ -68,22 +72,27 @@ impl SearchSpace {
         self.space.n_visible()
     }
 
+    /// The underlying lazy configuration space.
     pub fn config_space(&self) -> &ConfigSpace {
         &self.space
     }
 
+    /// True if index `i` has been profiled.
     pub fn is_measured(&self, i: usize) -> bool {
         self.measured.contains(&i)
     }
 
+    /// Record index `i` as profiled.
     pub fn mark_measured(&mut self, i: usize) {
         self.measured.insert(i);
     }
 
+    /// Configurations profiled so far.
     pub fn n_measured(&self) -> usize {
         self.measured.len()
     }
 
+    /// Configurations not yet profiled.
     pub fn n_unmeasured(&self) -> usize {
         self.len() - self.measured.len()
     }

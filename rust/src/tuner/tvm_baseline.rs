@@ -13,11 +13,14 @@ use crate::engine::Engine;
 use crate::obs::Stage;
 use crate::util::rng::Rng;
 
+/// Single-model AutoTVM-style baseline (see module docs).
 pub struct TvmTuner {
+    /// Tuning-loop knobs.
     pub cfg: TunerConfig,
 }
 
 impl TvmTuner {
+    /// Baseline over the given knobs.
     pub fn new(cfg: TunerConfig) -> Self {
         TvmTuner { cfg }
     }

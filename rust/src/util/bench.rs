@@ -1,5 +1,5 @@
 //! Mini micro-benchmark harness (offline substitute for `criterion`,
-//! DESIGN.md §Substitutions).
+//! ARCHITECTURE.md §Substitutions).
 //!
 //! Measures wall time over warmup + timed iterations, reports
 //! median / mean / p10 / p90 and a derived throughput. All `cargo bench`
@@ -10,22 +10,31 @@ use std::time::{Duration, Instant};
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name as passed to [`Bench::run`].
     pub name: String,
+    /// Timed iterations actually executed.
     pub iters: usize,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Median wall time per iteration.
     pub median: Duration,
+    /// 10th-percentile wall time per iteration.
     pub p10: Duration,
+    /// 90th-percentile wall time per iteration.
     pub p90: Duration,
     /// Optional items-per-iteration for throughput reporting.
     pub items_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Items per second derived from the mean, when
+    /// [`BenchResult::items_per_iter`] was given.
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter
             .map(|items| items / self.mean.as_secs_f64())
     }
 
+    /// One human-readable summary line.
     pub fn report(&self) -> String {
         let tp = match self.throughput() {
             Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
@@ -65,6 +74,7 @@ pub struct Bench {
     pub budget: Duration,
     /// Maximum timed iterations.
     pub max_iters: usize,
+    /// Results collected so far, in run order.
     pub results: Vec<BenchResult>,
 }
 
@@ -79,10 +89,12 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Runner with the default 2-second budget per benchmark.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Runner with a custom per-benchmark time budget in seconds.
     pub fn with_budget(secs: f64) -> Self {
         Bench {
             budget: Duration::from_secs_f64(secs),

@@ -2,7 +2,7 @@
 //!
 //! Used for the artifact manifest, the profiling database, and experiment
 //! result dumps. The offline vendor set has no `serde`/`serde_json`, so this
-//! is a deliberate substrate (DESIGN.md §Substitutions). It supports the full
+//! is a deliberate substrate (ARCHITECTURE.md §Substitutions). It supports the full
 //! JSON grammar except `\u` surrogate pairs beyond the BMP.
 
 use std::collections::BTreeMap;
@@ -11,15 +11,22 @@ use std::fmt;
 /// A JSON value. Objects use `BTreeMap` for deterministic serialization.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers are `f64`, as in JavaScript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// New empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -35,6 +42,7 @@ impl Json {
         self
     }
 
+    /// Object member lookup; `None` on non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Numeric value; `None` for non-numbers.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -49,14 +58,23 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `i64`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
 
+    /// Numeric value truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// Numeric value as `u64` (saturating at 0 for negatives, like the
+    /// other integer accessors' `as` casts).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    /// String value; `None` for non-strings.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -64,6 +82,7 @@ impl Json {
         }
     }
 
+    /// Boolean value; `None` for non-booleans.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -71,6 +90,7 @@ impl Json {
         }
     }
 
+    /// Array elements; `None` for non-arrays.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -78,6 +98,7 @@ impl Json {
         }
     }
 
+    /// Object members; `None` for non-objects.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -94,12 +115,14 @@ impl Json {
         Some(cur)
     }
 
+    /// Serialize with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         write_json(self, &mut s, Some(0));
         s
     }
 
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -260,7 +283,9 @@ fn write_json(v: &Json, out: &mut String, indent: Option<usize>) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 

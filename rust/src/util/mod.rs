@@ -3,7 +3,7 @@
 //!
 //! The build is fully offline against a small vendored crate set (no `rand`,
 //! `serde`, `proptest` or `criterion`), so these are deliberate from-scratch
-//! substrates — see DESIGN.md §Substitutions.
+//! substrates — see ARCHITECTURE.md §Substitutions.
 
 pub mod bench;
 pub mod json;

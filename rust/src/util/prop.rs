@@ -1,5 +1,5 @@
 //! Mini property-testing harness (offline substitute for `proptest`,
-//! DESIGN.md §Substitutions).
+//! ARCHITECTURE.md §Substitutions).
 //!
 //! A property is checked over `cases` seeded random inputs; on failure the
 //! harness re-runs a bounded shrink loop (halving numeric generators toward
@@ -41,12 +41,14 @@ impl Gen {
         span >> self.shrink.min(63)
     }
 
+    /// Uniform `u64` (shrink levels mask high bits toward 0).
     pub fn u64(&mut self) -> u64 {
         let v = self.rng.next_u64() & (u64::MAX >> self.shrink.min(63));
         self.log.push(format!("u64={v}"));
         v
     }
 
+    /// Uniform `usize` in `[lo, hi]` (shrinks toward `lo`).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         let span = self.shrunk_span((hi - lo) as u64);
@@ -55,6 +57,7 @@ impl Gen {
         v
     }
 
+    /// Uniform `i64` in `[lo, hi]` (shrinks toward `lo`).
     pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo <= hi);
         let span = self.shrunk_span((hi - lo) as u64);
@@ -63,6 +66,7 @@ impl Gen {
         v
     }
 
+    /// Uniform `f64` in `[lo, hi)` (shrinks toward `lo`).
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         let frac = self.rng.f64() / (1u64 << self.shrink.min(52)) as f64;
         let v = lo + frac * (hi - lo);
@@ -70,22 +74,27 @@ impl Gen {
         v
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         let v = self.rng.bool(0.5);
         self.log.push(format!("bool={v}"));
         v
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         let i = self.rng.below(xs.len().max(1));
         self.log.push(format!("pick#{i}"));
         &xs[i]
     }
 
+    /// `len` uniform `f64` values in `[lo, hi)` (not shrunk).
     pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..len).map(|_| self.rng.range_f64(lo, hi)).collect()
     }
 
+    /// Escape hatch: the underlying RNG, for draws the `Gen` surface
+    /// does not cover (these are not shrunk).
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }

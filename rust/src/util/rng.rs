@@ -36,6 +36,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the xoshiro256** stream.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

@@ -58,10 +58,12 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Minimum of a sample (`+inf` when empty).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum of a sample (`-inf` when empty).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }

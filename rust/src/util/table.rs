@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -16,6 +17,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics if the width differs from the header.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -26,11 +28,13 @@ impl Table {
         self
     }
 
+    /// Append one row of anything `Display`able.
     pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
         let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
         self.row(&cells);
     }
 
+    /// Render to a column-aligned string (header, rule, rows).
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut width = vec![0usize; ncol];
@@ -69,6 +73,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

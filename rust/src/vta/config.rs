@@ -10,7 +10,7 @@
 //! (all four are routed by name through `vta::targets` and the CLI's
 //! `--target` flag). The timing coefficients parameterize the cycle model
 //! in [`crate::vta::timing`] (they are our calibration of a 100 MHz VTA
-//! design with a DDR4 DMA engine, not Table 1 values — see DESIGN.md).
+//! design with a DDR4 DMA engine, not Table 1 values — see ARCHITECTURE.md).
 
 /// Table 1 + cycle-model coefficients.
 #[derive(Clone, Debug, PartialEq)]
@@ -237,14 +237,23 @@ impl VtaConfig {
 /// in the cycle model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CodegenSig {
+    /// log2 input element width in bits.
     pub log_inp_width: u32,
+    /// log2 weight element width in bits.
     pub log_wgt_width: u32,
+    /// log2 accumulator element width in bits.
     pub log_acc_width: u32,
+    /// log2 GEMM batch dimension.
     pub log_batch: u32,
+    /// log2 GEMM block dimension.
     pub log_block: u32,
+    /// log2 input scratchpad bytes.
     pub log_inp_buff_size: u32,
+    /// log2 weight scratchpad bytes.
     pub log_wgt_buff_size: u32,
+    /// log2 accumulator scratchpad bytes.
     pub log_acc_buff_size: u32,
+    /// Requantization right-shift baked into the store path.
     pub shift: u32,
 }
 

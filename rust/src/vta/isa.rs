@@ -24,6 +24,7 @@ pub struct Dep {
 }
 
 impl Dep {
+    /// No dependency tokens at all.
     pub const NONE: Dep = Dep {
         pop_prev: false,
         pop_next: false,
@@ -31,18 +32,22 @@ impl Dep {
         push_next: false,
     };
 
+    /// Only `pop_next` set.
     pub fn pop_next() -> Dep {
         Dep { pop_next: true, ..Dep::NONE }
     }
 
+    /// Only `push_next` set.
     pub fn push_next() -> Dep {
         Dep { push_next: true, ..Dep::NONE }
     }
 
+    /// Only `pop_prev` set.
     pub fn pop_prev() -> Dep {
         Dep { pop_prev: true, ..Dep::NONE }
     }
 
+    /// Only `push_prev` set.
     pub fn push_prev() -> Dep {
         Dep { push_prev: true, ..Dep::NONE }
     }
@@ -51,8 +56,11 @@ impl Dep {
 /// Which scratchpad a memory instruction touches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Buffer {
+    /// Input-vector scratchpad.
     Inp,
+    /// Weight-block scratchpad.
     Wgt,
+    /// Accumulator scratchpad.
     Acc,
 }
 
@@ -61,14 +69,20 @@ pub enum Buffer {
 /// `sram[sram_base + r*cols + c] <-> dram[dram_base + r*dram_stride + c]`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dma {
+    /// First scratchpad element written/read.
     pub sram_base: usize,
+    /// First DRAM element read/written.
     pub dram_base: usize,
+    /// Row count of the 2-D transfer.
     pub rows: usize,
+    /// Contiguous elements per row.
     pub cols: usize,
+    /// DRAM elements between consecutive row starts.
     pub dram_stride: usize,
 }
 
 impl Dma {
+    /// Total elements transferred.
     pub fn elems(&self) -> usize {
         self.rows * self.cols
     }
@@ -96,17 +110,24 @@ impl Dma {
 /// (1×16 int8 vector × 16×16 int8 block accumulated into 1×16 int32).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Uop {
+    /// Accumulator-vector index written.
     pub acc: usize,
+    /// Input-vector index read.
     pub inp: usize,
+    /// Weight-block index read.
     pub wgt: usize,
 }
 
 /// One GEMM hardware loop level: per-iteration offsets added to every uop.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct GemmLoop {
+    /// Iteration count of this hardware loop.
     pub extent: usize,
+    /// Accumulator offset added per iteration.
     pub acc_off: usize,
+    /// Input offset added per iteration.
     pub inp_off: usize,
+    /// Weight offset added per iteration.
     pub wgt_off: usize,
 }
 
@@ -175,6 +196,7 @@ impl Instr {
         }
     }
 
+    /// This instruction's dependency-token flags.
     pub fn dep(&self) -> Dep {
         match self {
             Instr::Load { dep, .. }
@@ -191,19 +213,26 @@ impl Instr {
 /// The three concurrent VTA modules.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Module {
+    /// DMA-in + memset + uop-table loads.
     Load = 0,
+    /// GEMM, ALU, and pipeline drain.
     Compute = 1,
+    /// DMA-out of requantized results.
     Store = 2,
 }
 
 /// A compiled program: instruction stream + the uop table LoadUop draws from.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Program {
+    /// The instruction stream, in issue order.
     pub instrs: Vec<Instr>,
+    /// Uop table [`Instr::LoadUop`] copies slices of.
     pub uops: Vec<Uop>,
     /// DRAM sizes the program assumes (element units; validated at run).
     pub dram_inp_vecs: usize,
+    /// Weight DRAM size the program assumes (blocks).
     pub dram_wgt_blocks: usize,
+    /// Output DRAM size the program assumes (vectors).
     pub dram_out_vecs: usize,
 }
 
@@ -240,10 +269,12 @@ impl Program {
             .sum()
     }
 
+    /// Instruction count.
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// Whether the program has no instructions.
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }

@@ -2,7 +2,7 @@
 //!
 //! The paper profiles configurations on an extended VTA [32] implemented on a
 //! Xilinx ZCU102; we reproduce the *mechanisms that shape the tuning problem*
-//! in a simulator (DESIGN.md §Substitutions):
+//! in a simulator (ARCHITECTURE.md §Substitutions):
 //!
 //! * [`config`] — the Table 1 hardware parameters (buffer sizes, block
 //!   geometry, data widths) plus the timing coefficients of the cycle model.
@@ -73,10 +73,12 @@ pub enum Verdict {
 }
 
 impl Verdict {
+    /// Whether the configuration executed cleanly.
     pub fn is_valid(&self) -> bool {
         matches!(self, Verdict::Valid { .. })
     }
 
+    /// Estimated execution cycles (also reported for invalid runs).
     pub fn cycles(&self) -> u64 {
         match self {
             Verdict::Valid { cycles } | Verdict::Invalid { cycles, .. } => {
@@ -89,10 +91,12 @@ impl Verdict {
 /// The simulator facade used by the tuner and the experiment harnesses.
 #[derive(Clone, Debug)]
 pub struct Simulator {
+    /// Hardware configuration being simulated.
     pub cfg: VtaConfig,
 }
 
 impl Simulator {
+    /// Simulator for the given hardware configuration.
     pub fn new(cfg: VtaConfig) -> Self {
         Simulator { cfg }
     }

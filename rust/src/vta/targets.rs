@@ -64,17 +64,26 @@ pub fn capacity_score(cfg: &VtaConfig) -> (u64, u64) {
 /// width (the dominant throughput knob of the cycle model).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TargetMeta {
+    /// Registered target name (identity only, not geometry).
     pub name: String,
+    /// log2 uop-buffer bytes.
     pub log_uop_buff_size: u32,
+    /// log2 input scratchpad bytes.
     pub log_inp_buff_size: u32,
+    /// log2 weight scratchpad bytes.
     pub log_wgt_buff_size: u32,
+    /// log2 accumulator scratchpad bytes.
     pub log_acc_buff_size: u32,
+    /// log2 GEMM batch dimension.
     pub log_batch: u32,
+    /// log2 GEMM block dimension.
     pub log_block: u32,
+    /// DMA stream width (bytes per cycle).
     pub dma_bytes_per_cycle: u64,
 }
 
 impl TargetMeta {
+    /// Extract the capacity fields of a full config.
     pub fn of(cfg: &VtaConfig) -> TargetMeta {
         TargetMeta {
             name: cfg.target.clone(),
@@ -122,6 +131,7 @@ impl TargetMeta {
         self.signature() == other.signature()
     }
 
+    /// Serialize as the tuning-log `"target"` object.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", self.name.as_str())
@@ -135,6 +145,7 @@ impl TargetMeta {
         o
     }
 
+    /// Parse a tuning-log `"target"` object; `None` on missing fields.
     pub fn from_json(j: &Json) -> Option<TargetMeta> {
         let geti = |k: &str| {
             j.get(k).and_then(Json::as_usize).map(|v| v as u32)

@@ -25,7 +25,9 @@ use super::Fault;
 /// (ascending `(start_cycle, program_index)`).
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// Total pipeline cycles from first issue to drain.
     pub cycles: u64,
+    /// Execution order as ascending `(start_cycle, program_index)`.
     pub order: Vec<(u64, usize)>,
     /// Per-module busy cycles (utilization reporting).
     pub busy: [u64; 3],

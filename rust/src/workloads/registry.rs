@@ -15,8 +15,11 @@ use super::vgg16;
 /// A registered network: a name and the conv layers the tuner profiles.
 #[derive(Clone, Copy, Debug)]
 pub struct Network {
+    /// Registry name (`--network` argument).
     pub name: &'static str,
+    /// One-line description shown by `--list-networks`.
     pub description: &'static str,
+    /// The profiled conv-layer table.
     pub layers: &'static [ConvLayer],
 }
 

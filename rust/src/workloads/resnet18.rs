@@ -7,19 +7,27 @@
 /// One convolution workload (single-image inference, NHWC/HWIO).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvLayer {
+    /// Layer name, unique within its network.
     pub name: &'static str,
-    /// Input height/width/channels.
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Input channels.
     pub c: usize,
-    /// Output channels (paper's `KC`) and kernel height/width.
+    /// Output channels (paper's `KC`).
     pub kc: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
-    /// Output height/width.
+    /// Output height.
     pub oh: usize,
+    /// Output width.
     pub ow: usize,
+    /// Spatial padding.
     pub pad: usize,
+    /// Spatial stride.
     pub stride: usize,
 }
 

@@ -1,0 +1,337 @@
+//! ISSUE-7 guarantees for tuning-as-a-service.
+//!
+//! 1. **Store**: `ScheduleDb` entries survive a reopen byte-faithfully;
+//!    promotion is versioned and strictly better-only; concurrent
+//!    appenders never lose the minimum.
+//! 2. **Daemon**: hit / miss / miss-with-fallback answer correctly end
+//!    to end over the line protocol, and the hit path compiles and
+//!    profiles *nothing* (counter-pinned).
+//! 3. **Determinism**: the same query script produces identical stored
+//!    schedules for any worker count — job seeds derive from the query
+//!    key, never from arrival order.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
+use ml2tuner::obs::Counter;
+use ml2tuner::serve::{
+    Daemon, Promotion, ScheduleDb, ScheduleEntry, ScheduleKey,
+    ServeConfig, ServeExit,
+};
+use ml2tuner::util::json::Json;
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads;
+
+/// `Write` into a shared buffer, so the test can hand an owned response
+/// sink to the daemon and still read everything it wrote.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn into_string(self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn fresh_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    dir
+}
+
+fn gemm_layer(name: &str) -> ml2tuner::workloads::ConvLayer {
+    workloads::network("synth-gemm").unwrap().layer(name).unwrap()
+}
+
+fn entry_for(layer_name: &str, cycles: u64) -> ScheduleEntry {
+    let layer = gemm_layer(layer_name);
+    ScheduleEntry {
+        key: ScheduleKey::for_layer_on(
+            &layer,
+            SpaceKind::Paper,
+            &VtaConfig::zcu102(),
+        ),
+        version: 0,
+        cycles,
+        schedule: Schedule::default(),
+        layer: layer_name.to_string(),
+        target: "zcu102".to_string(),
+        tuner: "test".to_string(),
+        trials: 10,
+    }
+}
+
+/// Responses keyed by id, in arrival order per id.
+fn responses_by_id(output: &str) -> Vec<(u64, Json)> {
+    output
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let j = Json::parse(l).expect("response line parses");
+            (j.get("id").and_then(Json::as_u64).unwrap_or(0), j)
+        })
+        .collect()
+}
+
+fn status_of(j: &Json) -> &str {
+    j.get("status").and_then(Json::as_str).unwrap()
+}
+
+#[test]
+fn schedule_db_round_trips_through_reopen() {
+    let dir = fresh_dir("ml2tuner_serve_roundtrip");
+    {
+        let db = ScheduleDb::open(&dir).unwrap();
+        assert!(db.is_empty());
+        assert_eq!(
+            db.promote(entry_for("gemm_256x256x128", 5000)).unwrap(),
+            Promotion::Inserted
+        );
+        assert_eq!(
+            db.promote(entry_for("dense_512x1024", 7000)).unwrap(),
+            Promotion::Inserted
+        );
+        assert_eq!(db.len(), 2);
+    }
+    let db = ScheduleDb::open(&dir).unwrap();
+    assert_eq!((db.len(), db.skipped()), (2, 0));
+    let found = db
+        .lookup(&entry_for("gemm_256x256x128", 0).key)
+        .expect("reopened entry");
+    assert_eq!(found.cycles, 5000);
+    assert_eq!(found.version, 1);
+    assert_eq!(found.schedule, Schedule::default());
+    assert_eq!(found.tuner, "test");
+    // a different space is a different key — never answered by this entry
+    let ext_key = ScheduleKey {
+        space: SpaceKind::Extended,
+        ..entry_for("gemm_256x256x128", 0).key
+    };
+    assert!(db.lookup(&ext_key).is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn promotion_is_versioned_and_better_only() {
+    let dir = fresh_dir("ml2tuner_serve_promotion");
+    let db = ScheduleDb::open(&dir).unwrap();
+    let key = entry_for("gemm_256x256x128", 0).key;
+    assert_eq!(
+        db.promote(entry_for("gemm_256x256x128", 100)).unwrap(),
+        Promotion::Inserted
+    );
+    // worse and equal candidates leave the store untouched
+    assert_eq!(
+        db.promote(entry_for("gemm_256x256x128", 120)).unwrap(),
+        Promotion::Kept { best_cycles: 100 }
+    );
+    assert_eq!(
+        db.promote(entry_for("gemm_256x256x128", 100)).unwrap(),
+        Promotion::Kept { best_cycles: 100 }
+    );
+    assert_eq!(db.lookup(&key).unwrap().version, 1);
+    // strictly better replaces and bumps the version
+    assert_eq!(
+        db.promote(entry_for("gemm_256x256x128", 80)).unwrap(),
+        Promotion::Promoted { prev_cycles: 100 }
+    );
+    let stored = db.lookup(&key).unwrap();
+    assert_eq!((stored.cycles, stored.version), (80, 2));
+    drop(db);
+    // the reopened store sees exactly the promoted state
+    let db = ScheduleDb::open(&dir).unwrap();
+    let stored = db.lookup(&key).unwrap();
+    assert_eq!((stored.cycles, stored.version), (80, 2));
+    assert_eq!(db.len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_promotes_keep_the_minimum() {
+    let dir = fresh_dir("ml2tuner_serve_concurrent");
+    let db = Arc::new(ScheduleDb::open(&dir).unwrap());
+    let key = entry_for("gemm_256x256x128", 0).key;
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let db = Arc::clone(&db);
+            s.spawn(move || {
+                for i in 0..20u64 {
+                    // interleaved descending/ascending offers from every
+                    // thread; global minimum is 301 (t=7, i=19)
+                    let cycles = 1000 - t * 13 - i * 32;
+                    db.promote(entry_for("gemm_256x256x128", cycles))
+                        .unwrap();
+                }
+            });
+        }
+    });
+    let stored = db.lookup(&key).unwrap();
+    assert_eq!(stored.cycles, 1000 - 7 * 13 - 19 * 32);
+    assert_eq!(db.len(), 1);
+    drop(db);
+    // one key → one entry file, and it reloads to the same minimum
+    let files = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().is_some_and(|x| x == "json")
+        })
+        .count();
+    assert_eq!(files, 1);
+    let db = ScheduleDb::open(&dir).unwrap();
+    assert_eq!(db.lookup(&key).unwrap().cycles, 1000 - 7 * 13 - 19 * 32);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_answers_hit_miss_and_tunes_fallback() {
+    let dir = fresh_dir("ml2tuner_serve_e2e");
+    let db = ScheduleDb::open(&dir).unwrap();
+    db.promote(entry_for("gemm_256x256x128", 123_456)).unwrap();
+    let daemon = Daemon::new(ServeConfig::default(), Arc::new(db));
+    let script = r#"{"op":"query","id":1,"network":"synth-gemm","layer":"gemm_256x256x128","target":"zcu102"}
+{"op":"query","id":2,"network":"synth-gemm","layer":"gemm_4096x64x64","target":"zcu102"}
+{"op":"query","id":3,"network":"synth-gemm","layer":"gemm_4096x64x64","target":"zcu102","tune_on_miss":true,"trials":40}
+{"op":"stats","id":4}
+{"op":"query","id":5,"network":"nope","layer":"x","target":"zcu102"}
+{"op":"shutdown"}
+"#;
+    let out = SharedBuf::default();
+    let exit = daemon.run(script.as_bytes(), out.clone()).unwrap();
+    assert_eq!(exit, ServeExit::Shutdown);
+    let responses = responses_by_id(&out.into_string());
+
+    let hit = &responses.iter().find(|(id, _)| *id == 1).unwrap().1;
+    assert_eq!(status_of(hit), "hit");
+    assert_eq!(hit.get("cycles").and_then(Json::as_u64), Some(123_456));
+    assert_eq!(hit.get("version").and_then(Json::as_u64), Some(1));
+    assert!(hit.at(&["knobs", "TH"]).is_some());
+
+    let miss = &responses.iter().find(|(id, _)| *id == 2).unwrap().1;
+    assert_eq!(status_of(miss), "miss");
+
+    // the fallback job answers twice: queued synchronously, tuned when
+    // the worker finishes (run() joins its workers before returning)
+    let fallback: Vec<&Json> = responses
+        .iter()
+        .filter(|(id, _)| *id == 3)
+        .map(|(_, j)| j)
+        .collect();
+    assert_eq!(fallback.len(), 2);
+    assert!(fallback.iter().any(|j| status_of(j) == "queued"));
+    let tuned = fallback
+        .iter()
+        .find(|j| status_of(j) == "tuned")
+        .expect("tuned response");
+    assert_eq!(
+        tuned.get("promotion").and_then(Json::as_str),
+        Some("inserted")
+    );
+    assert_eq!(tuned.get("version").and_then(Json::as_u64), Some(1));
+    let tuned_cycles = tuned.get("cycles").and_then(Json::as_u64).unwrap();
+    assert!(tuned_cycles > 0);
+
+    let stats = &responses.iter().find(|(id, _)| *id == 4).unwrap().1;
+    assert_eq!(status_of(stats), "stats");
+    assert_eq!(
+        stats.get("schedule_db_hits").and_then(Json::as_u64),
+        Some(1)
+    );
+    assert_eq!(
+        stats.get("schedule_db_misses").and_then(Json::as_u64),
+        Some(2)
+    );
+
+    let err = &responses.iter().find(|(id, _)| *id == 5).unwrap().1;
+    assert_eq!(status_of(err), "error");
+
+    // the tuned result is now served from the store
+    let key = ScheduleKey::for_layer_on(
+        &gemm_layer("gemm_4096x64x64"),
+        SpaceKind::Paper,
+        &VtaConfig::zcu102(),
+    );
+    let stored = daemon.db().lookup(&key).expect("promoted entry");
+    assert_eq!(stored.cycles, tuned_cycles);
+    assert_eq!(daemon.recorder().get(Counter::ServeJobsTuned), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hits_answer_without_compiling_or_profiling() {
+    let dir = fresh_dir("ml2tuner_serve_hitpath");
+    let db = ScheduleDb::open(&dir).unwrap();
+    let net = workloads::network("synth-gemm").unwrap();
+    for l in net.layers {
+        db.promote(entry_for(l.name, 1 + l.macs())).unwrap();
+    }
+    let daemon = Daemon::new(ServeConfig::default(), Arc::new(db));
+    let mut script = String::new();
+    for i in 0..20 {
+        let l = net.layers[i % net.layers.len()];
+        script.push_str(&format!(
+            "{{\"op\":\"query\",\"id\":{i},\"network\":\"synth-gemm\",\
+             \"layer\":\"{}\",\"target\":\"zcu102\"}}\n",
+            l.name
+        ));
+    }
+    let out = SharedBuf::default();
+    let exit = daemon.run(script.as_bytes(), out.clone()).unwrap();
+    assert_eq!(exit, ServeExit::Eof);
+    let responses = responses_by_id(&out.into_string());
+    assert_eq!(responses.len(), 20);
+    assert!(responses.iter().all(|(_, j)| status_of(j) == "hit"));
+    // the acceptance pin: a db hit answers with zero compilation and
+    // zero profiling — the whole point of serving from the store
+    let rec = daemon.recorder();
+    assert_eq!(rec.get(Counter::ScheduleDbHit), 20);
+    assert_eq!(rec.get(Counter::ScheduleDbMiss), 0);
+    assert_eq!(rec.get(Counter::TrialsProfiled), 0);
+    assert_eq!(rec.get(Counter::CompileCacheHit), 0);
+    assert_eq!(rec.get(Counter::CompileCacheMiss), 0);
+    assert_eq!(rec.get(Counter::ServeJobsTuned), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Run one fallback-tuning script against a fresh store with `workers`
+/// worker threads; return the resulting store entries.
+fn tuned_entries(dir_name: &str, workers: usize) -> Vec<ScheduleEntry> {
+    let dir = fresh_dir(dir_name);
+    let db = ScheduleDb::open(&dir).unwrap();
+    let cfg = ServeConfig { workers, ..ServeConfig::default() };
+    let daemon = Daemon::new(cfg, Arc::new(db));
+    let script = r#"{"op":"query","id":1,"network":"synth-gemm","layer":"gemm_1024x128x256","target":"zcu102","tune_on_miss":true,"trials":25}
+{"op":"query","id":2,"network":"synth-gemm","layer":"dense_512x1024","target":"zcu102","tune_on_miss":true,"trials":25}
+{"op":"shutdown"}
+"#;
+    let out = SharedBuf::default();
+    daemon.run(script.as_bytes(), out).unwrap();
+    let entries = daemon.db().entries();
+    std::fs::remove_dir_all(&dir).ok();
+    entries
+}
+
+#[test]
+fn tuned_schedules_are_identical_for_any_worker_count() {
+    // job seeds derive from the query key, warm starts only from the
+    // startup transfer store, and the shared compile cache stores pure
+    // functions — so worker count and interleaving must not change what
+    // gets stored
+    let serial = tuned_entries("ml2tuner_serve_det_w1", 1);
+    let parallel = tuned_entries("ml2tuner_serve_det_w4", 4);
+    assert_eq!(serial, parallel);
+    assert!(!serial.is_empty());
+}

@@ -66,7 +66,13 @@ def compare(current, baseline, threshold):
 def update_baseline(artifact_path, baseline_path):
     """Promote a downloaded BENCH_*.json artifact into the committed
     baseline file (the one-command promotion flow; baselines must be
-    measured on the CI runner class, never a developer box)."""
+    measured on the CI runner class, never a developer box).
+
+    Merges into the existing baseline rather than replacing it: the
+    bench suites ship in separate artifacts (BENCH_5.json from
+    bench-regression, BENCH_7.json from smoke-serve), and promoting one
+    must not drop the other's keys. The artifact wins on shared keys.
+    """
     try:
         with open(artifact_path, encoding="utf-8") as f:
             artifact = json.load(f)
@@ -80,17 +86,27 @@ def update_baseline(artifact_path, baseline_path):
               "download a bench-medians artifact from a green "
               "bench-regression run", file=sys.stderr)
         return 1
+    merged = {}
+    try:
+        with open(baseline_path, encoding="utf-8") as f:
+            merged = json.load(f).get("benches", {})
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    merged.update(benches)
     out = {
         "schema": 1,
         "note": (
             "Committed bench-median baseline for CI's bench-regression "
-            "job. Promoted from "
+            "and smoke-serve jobs. Last promoted from "
             f"{os.path.basename(artifact_path)} via scripts/"
-            "bench_report.py --update-baseline; to move the trajectory "
-            "forward, download a newer bench-medians artifact and "
-            "re-run that command."
+            "bench_report.py --update-baseline. PROMOTION FLOW: "
+            "download a green run's 'bench-medians' (BENCH_5.json) or "
+            "'smoke-serve-logs' (BENCH_7.json) artifact and re-run that "
+            "command — it merges, so the two suites can be promoted "
+            "independently. Baselines must be measured on the CI runner "
+            "class, never a developer box."
         ),
-        "benches": benches,
+        "benches": merged,
     }
     with open(baseline_path, "w", encoding="utf-8") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -152,13 +168,31 @@ def main():
     ap.add_argument("--update-baseline", metavar="ARTIFACT",
                     help="promote a downloaded BENCH_*.json artifact "
                          "into --baseline and exit")
+    ap.add_argument("--current", metavar="MEDIANS",
+                    help="compare an already-folded medians file (e.g. "
+                         "the BENCH_7.json the storm harness writes) "
+                         "against --baseline, skipping the fold step")
     args = ap.parse_args()
 
     if args.update_baseline:
         return update_baseline(args.update_baseline, args.baseline)
+    if args.current:
+        try:
+            with open(args.current, encoding="utf-8") as f:
+                benches = json.load(f).get("benches", {})
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            print(f"error: cannot read {args.current}: {e}",
+                  file=sys.stderr)
+            return 1
+        if not benches:
+            print(f"error: no bench records in {args.current}",
+                  file=sys.stderr)
+            return 1
+        return check_against_baseline(benches, args.baseline,
+                                      args.threshold)
     if not args.raw or not args.out:
         ap.error("--raw and --out are required unless --update-baseline "
-                 "is given")
+                 "or --current is given")
 
     benches = fold(args.raw)
     if not benches:
