@@ -7,7 +7,7 @@
 //! `BENCH_5.json` and the regression gate.
 use ml2tuner::compiler::schedule::SpaceKind;
 use ml2tuner::obs::Recorder;
-use ml2tuner::tuner::database::{Database, Outcome, TrialRecord};
+use ml2tuner::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::score_candidates;
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
 use ml2tuner::tuner::models::{ModelP, ModelV};
@@ -16,6 +16,7 @@ use ml2tuner::tuner::space::SearchSpace;
 use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::util::bench::Bench;
+use ml2tuner::vta::coarse::{self, CoarseEstimate};
 use ml2tuner::vta::config::VtaConfig;
 use ml2tuner::workloads::{self, resnet18};
 
@@ -52,6 +53,7 @@ fn scoring_sweep(b: &mut Bench) {
             } else {
                 Outcome::Crash
             },
+            fidelity: Fidelity::Full,
         });
     }
     let p = ModelP::train(&db, 60, 1).unwrap();
@@ -80,6 +82,59 @@ fn scoring_sweep(b: &mut Bench) {
     b.run_items("scoring-sweep flat jobs=4 +telemetry", n, || {
         score_candidates(&space, &p, Some(&v), &idx, 4, Some(&rec))
     });
+}
+
+/// The ISSUE-8 multi-fidelity rows: per-candidate cost of the tier-0
+/// coarse analytic estimate vs full compile + three-timeline timing on
+/// the same ≥400k extended sweep shape. The coarse row walks the whole
+/// 400k-candidate list (decode + static check + cycle formulas, no
+/// program build); the tier-1 reference compiles and simulates a
+/// strided 1,024-candidate subsample — compiling 400k configs per
+/// iteration would take hours, and the gate compares *per-candidate*
+/// medians anyway (target ≥20x, read off BENCH_8.json).
+fn coarse_vs_timing(b: &mut Bench) {
+    let layer = workloads::network("vgg16")
+        .unwrap()
+        .layer("conv2_2")
+        .unwrap();
+    let env = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        layer,
+        SpaceKind::Extended,
+    );
+    assert!(
+        env.space.len() >= 400_000,
+        "bench layer shrank: {}",
+        env.space.len()
+    );
+    let idx: Vec<usize> = (0..400_000).collect();
+    b.run_items("coarse-estimate batch (tier 0)", idx.len() as f64, || {
+        let mut acc = 0u64;
+        for &i in &idx {
+            let sched = env.space.schedule(i);
+            if let CoarseEstimate::Cycles(c) =
+                coarse::estimate(env.hw(), &env.layer, &sched)
+            {
+                acc = acc.wrapping_add(c);
+            }
+        }
+        acc
+    });
+    let stride = env.space.len() / 1_024;
+    let sample: Vec<usize> = (0..1_024).map(|k| k * stride).collect();
+    b.run_items(
+        "full compile+timing (tier 1, sampled)",
+        sample.len() as f64,
+        || {
+            let mut acc = 0u64;
+            for &i in &sample {
+                if let Outcome::Valid { cycles } = env.profile(i).outcome {
+                    acc = acc.wrapping_add(cycles);
+                }
+            }
+            acc
+        },
+    );
 }
 
 /// Median-over-median speedups of the sweep rows (the ratios the PR-5
@@ -116,6 +171,25 @@ fn print_sweep_speedups(b: &Bench) {
             on
         );
     }
+    // ISSUE-8 gate: per-candidate tier-0 vs tier-1 cost (target ≥20x)
+    let per_item = |name: &str| {
+        b.results.iter().find(|r| r.name == name).map(|r| {
+            r.median.as_secs_f64() / r.items_per_iter.unwrap_or(1.0)
+        })
+    };
+    if let (Some(coarse), Some(full)) = (
+        per_item("coarse-estimate batch (tier 0)"),
+        per_item("full compile+timing (tier 1, sampled)"),
+    ) {
+        println!(
+            "tier-0 coarse estimate vs tier-1 compile+timing: {:.1}x \
+             cheaper per candidate (coarse {:.0} ns, full {:.0} ns; \
+             target >=20x)",
+            full / coarse,
+            coarse * 1e9,
+            full * 1e9
+        );
+    }
 }
 
 fn main() {
@@ -140,6 +214,7 @@ fn main() {
                     || RandomTuner::new(cfgs()).tune(&env));
     }
     scoring_sweep(&mut b);
+    coarse_vs_timing(&mut b);
     print!("{}", b.summary());
     print_sweep_speedups(&b);
     b.maybe_write_json("tuner_bench");

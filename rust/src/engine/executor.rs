@@ -15,11 +15,12 @@ use super::cache::{
     DEFAULT_MAX_TOTAL_COST,
 };
 use crate::obs::{Counter, Recorder, Stage};
-use crate::tuner::database::{Database, Outcome, TrialRecord};
+use crate::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{outcome_of, TuningEnv};
 use crate::util::par::par_map;
+use crate::vta::coarse::{self, CoarseEstimate};
 
 /// Worker count when `--jobs` is not given: all available cores.
 pub fn default_jobs() -> usize {
@@ -169,7 +170,36 @@ impl Engine {
             visible: env.space.visible(space_index),
             hidden: cached.hidden.clone(),
             outcome,
+            fidelity: Fidelity::Full,
         }
+    }
+
+    /// Tier-0 coarse prescreen of a candidate pool: analytic cycle
+    /// estimates ([`crate::vta::coarse`]) sharded across the worker pool
+    /// like the scoring sweep, merged back in candidate order so the
+    /// result is byte-identical for any `--jobs`.
+    ///
+    /// No program is built and nothing is profiled: candidates never hit
+    /// the compile cache, `mark_measured`, or the trial counters, so
+    /// fleet/budget accounting keeps counting full-fidelity profiles
+    /// only. Estimates land in `estimates` (cleared first; reusable
+    /// across rounds).
+    pub fn prescreen_into(
+        &self,
+        env: &TuningEnv,
+        candidates: &[usize],
+        estimates: &mut Vec<CoarseEstimate>,
+    ) {
+        let _span = self.recorder.span(Stage::Prescreen);
+        self.recorder
+            .add(Counter::CandidatesPrescreened, candidates.len() as u64);
+        let cfg = &env.simulator.cfg;
+        let merged = par_map(self.jobs(), candidates.len(), |k| {
+            let sched = env.space.schedule(candidates[k]);
+            coarse::estimate(cfg, &env.layer, &sched)
+        });
+        estimates.clear();
+        estimates.extend(merged);
     }
 
     /// Profile a candidate batch across the worker pool. Results come back
@@ -271,6 +301,24 @@ mod tests {
         assert_eq!(stats.misses, misses_after_compile,
                    "profiling recompiled a pooled candidate");
         assert!(stats.hits >= batch.len() as u64);
+    }
+
+    #[test]
+    fn prescreen_is_jobs_invariant_and_profiles_nothing() {
+        let e = env();
+        let batch: Vec<usize> = (0..64).map(|i| i * 17).collect();
+        let e1 = Engine::with_jobs(1);
+        let e4 = Engine::with_jobs(4);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        e1.prescreen_into(&e, &batch, &mut a);
+        e4.prescreen_into(&e, &batch, &mut b);
+        assert_eq!(a, b, "tier-0 merge must be jobs-invariant");
+        assert_eq!(a.len(), batch.len());
+        // tier 0 never compiles, profiles, or counts trials
+        assert_eq!(e4.recorder().get(Counter::TrialsProfiled), 0);
+        assert_eq!(e4.recorder().get(Counter::CandidatesPrescreened), 64);
+        assert_eq!(e4.cache().stats().misses, 0,
+                   "prescreen must not touch the compile cache");
     }
 
     #[test]

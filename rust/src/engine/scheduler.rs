@@ -159,7 +159,9 @@ impl LayerSession {
         self.space.n_unmeasured() == 0
     }
 
-    /// The session's profiling database (every profiled trial).
+    /// The session's profiling database: every profiled trial, plus —
+    /// when `prescreen_factor` is on — coarse-fidelity records of the
+    /// candidates the tier-0 cut pruned.
     pub fn database(&self) -> &Database {
         &self.db
     }
@@ -199,11 +201,19 @@ impl LayerSession {
                     ),
                     None,
                 ),
-                TunerKind::Ml2 => ml2tuner::select_batch(
-                    &self.cfg, true, true, &self.env, engine,
-                    &self.space, &self.db, self.warm.as_ref(),
-                    &mut self.rng, self.round, take,
-                ),
+                TunerKind::Ml2 => {
+                    let (batch, stats, coarse) = ml2tuner::select_batch(
+                        &self.cfg, true, true, &self.env, engine,
+                        &self.space, &self.db, self.warm.as_ref(),
+                        &mut self.rng, self.round, take,
+                    );
+                    // tier-0 estimates of pruned candidates train the
+                    // models but never enter the trace or the budget
+                    for c in coarse {
+                        self.db.push(c);
+                    }
+                    (batch, stats)
+                }
             };
             if batch.is_empty() {
                 break;

@@ -1,0 +1,258 @@
+//! Multi-fidelity ladder: end-to-end tuning cost at prescreen factors
+//! {off, 2, 4, 8} (EXPERIMENTS.md §Multi-fidelity).
+//!
+//! Beyond-paper experiment for the tier-0 prescreen
+//! ([`crate::vta::coarse`] + `--prescreen-factor`). Protocol:
+//!
+//! 1. for each pinned (network, layer) config and each repeat, run the
+//!    full-fidelity baseline (`prescreen_factor = 0`) and one run per
+//!    ladder rung (2, 4, 8) with the *same* seed — every rung of a
+//!    repeat answers "what would this exact run have cost with the
+//!    prescreen on";
+//! 2. each run gets a fresh engine (cold compile cache) and is wall-
+//!    clock timed end to end;
+//! 3. report, per rung, the median tune time and speedup over the
+//!    baseline, the mean best cycles, how many repeats matched the
+//!    baseline's final best, and the median full-fidelity samples the
+//!    rung needed to reach it.
+//!
+//! The per-rung time medians are also pushed through the standard
+//! [`Bench`] sink (`ML2_BENCH_JSON`), so CI's bench-regression job
+//! folds them into `BENCH_8.json` exactly like the `cargo bench`
+//! suites.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::ExpConfig;
+use crate::compiler::schedule::SpaceKind;
+use crate::engine::Engine;
+use crate::tuner::ml2tuner::Ml2Tuner;
+use crate::tuner::report::TuningTrace;
+use crate::tuner::{Tuner, TunerConfig, TuningEnv};
+use crate::util::bench::{Bench, BenchResult};
+use crate::util::stats::mean;
+use crate::util::table::{f, Table};
+use crate::workloads;
+
+/// The ladder: prescreen off, then 2x / 4x / 8x over-selection.
+const FACTORS: [usize; 4] = [0, 2, 4, 8];
+
+/// Entry point for `ml2tuner experiment fidelity`; honours
+/// `ML2_BENCH_JSON` for the medians sink.
+pub fn run(cfg: &ExpConfig) -> String {
+    let out = std::env::var("ML2_BENCH_JSON")
+        .ok()
+        .filter(|p| !p.is_empty());
+    run_to(cfg, out.as_deref().map(Path::new))
+}
+
+/// Env-var-free body of [`run`] (what tests drive directly): when `out`
+/// is given, per-rung time medians are appended there as `Bench` JSONL.
+pub fn run_to(cfg: &ExpConfig, out: Option<&Path>) -> String {
+    let (configs, trials): (&[(&str, &str)], usize) = if cfg.quick {
+        (&[("resnet18", "conv5")], 40)
+    } else {
+        (&[("resnet18", "conv5"), ("vgg16", "conv3_1")], 150)
+    };
+    let mut bench = Bench::new();
+    let mut report = format!(
+        "== multi-fidelity ladder: prescreen factors {FACTORS:?} ==\n\
+         ({} repeats x {} trials per rung, extended space, paired seeds, \
+         fresh engine per run)\n",
+        cfg.repeats, trials
+    );
+
+    for &(net_name, layer_name) in configs {
+        let layer = workloads::network(net_name)
+            .unwrap()
+            .layer(layer_name)
+            .unwrap();
+        // per factor: wall times, final bests, and (matched, samples)
+        let mut times: Vec<Vec<Duration>> =
+            vec![Vec::new(); FACTORS.len()];
+        let mut bests: Vec<Vec<f64>> = vec![Vec::new(); FACTORS.len()];
+        let mut matched: Vec<usize> = vec![0; FACTORS.len()];
+        let mut samples: Vec<Vec<f64>> = vec![Vec::new(); FACTORS.len()];
+        let mut paired = 0usize;
+        for r in 0..cfg.repeats {
+            let seed = cfg.seed ^ (r as u64).wrapping_mul(0x9e37_79b9);
+            let mut baseline_best: Option<u64> = None;
+            for (fi, &factor) in FACTORS.iter().enumerate() {
+                let t_cfg = TunerConfig {
+                    seed,
+                    max_trials: trials,
+                    prescreen_factor: factor,
+                    ..Default::default()
+                };
+                let env = TuningEnv::with_space(
+                    cfg.hw.clone(),
+                    layer,
+                    SpaceKind::Extended,
+                );
+                let engine = Engine::default();
+                let t0 = Instant::now();
+                let trace =
+                    Ml2Tuner::new(t_cfg).tune_with(&env, &engine);
+                times[fi].push(t0.elapsed());
+                if let Some(b) = trace.best_cycles() {
+                    bests[fi].push(b as f64);
+                }
+                if factor == 0 {
+                    baseline_best = trace.best_cycles();
+                    paired += usize::from(baseline_best.is_some());
+                } else if let Some(target) = baseline_best {
+                    if let Some(at) = reach(&trace, target) {
+                        matched[fi] += 1;
+                        samples[fi].push(at as f64);
+                    }
+                }
+            }
+        }
+
+        report.push_str(&format!(
+            "\n-- {net_name}/{layer_name} --\n"
+        ));
+        let mut t = Table::new(&[
+            "factor",
+            "median tune s",
+            "speedup",
+            "best (mean cycles)",
+            "matched best",
+            "median samples-to-match",
+        ]);
+        let base_median = median_dur(&times[0]);
+        for (fi, &factor) in FACTORS.iter().enumerate() {
+            let med = median_dur(&times[fi]);
+            let stats = dur_stats(
+                &format!(
+                    "fidelity/{net_name}_{layer_name}/factor_{factor}"
+                ),
+                &times[fi],
+            );
+            bench.results.push(stats);
+            t.row(&[
+                if factor == 0 {
+                    "off".to_string()
+                } else {
+                    format!("{factor}x")
+                },
+                f(med.as_secs_f64(), 2),
+                if factor == 0 {
+                    "1.00x".to_string()
+                } else {
+                    format!(
+                        "{:.2}x",
+                        base_median.as_secs_f64() / med.as_secs_f64()
+                    )
+                },
+                if bests[fi].is_empty() {
+                    "-".to_string()
+                } else {
+                    f(mean(&bests[fi]), 0)
+                },
+                if factor == 0 {
+                    format!("{paired}/{} (baseline)", cfg.repeats)
+                } else {
+                    format!("{}/{paired}", matched[fi])
+                },
+                if samples[fi].is_empty() {
+                    "-".to_string()
+                } else {
+                    f(median_f64(&samples[fi]), 0)
+                },
+            ]);
+        }
+        report.push_str(&t.render());
+    }
+    report.push_str(
+        "\n'matched best': repeats whose rung run reached the paired \
+         baseline run's final best cycles within the same trial budget; \
+         'samples-to-match' counts full-fidelity profilings only (the \
+         trace never contains tier-0 estimates).\n",
+    );
+    if let Some(path) = out {
+        bench.write_json_to("fidelity", path);
+        report.push_str(&format!(
+            "medians appended to {}\n",
+            path.display()
+        ));
+    }
+    report
+}
+
+/// First 1-based trial index at which `trace` reaches `target` cycles.
+fn reach(trace: &TuningTrace, target: u64) -> Option<usize> {
+    trace.trials_to_reach(target as f64)
+}
+
+fn median_dur(xs: &[Duration]) -> Duration {
+    let mut s = xs.to_vec();
+    s.sort();
+    s[s.len() / 2]
+}
+
+fn median_f64(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[s.len() / 2]
+}
+
+/// Fold one rung's wall times into a [`BenchResult`] row so the ladder
+/// shares the `ML2_BENCH_JSON` → `bench_report.py` pipeline.
+fn dur_stats(name: &str, xs: &[Duration]) -> BenchResult {
+    let mut s = xs.to_vec();
+    s.sort();
+    let n = s.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: s.iter().sum::<Duration>() / n as u32,
+        median: s[n / 2],
+        p10: s[n / 10],
+        p90: s[(n * 9 / 10).min(n - 1)],
+        items_per_iter: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn quick_ladder_runs_and_writes_bench_lines() {
+        let cfg = ExpConfig {
+            repeats: 1,
+            seed: 0xf1de,
+            ..ExpConfig::quick()
+        };
+        let out = std::env::temp_dir()
+            .join("ml2tuner_fidelity_bench_test.jsonl");
+        std::fs::remove_file(&out).ok();
+        let report = run_to(&cfg, Some(&out));
+        assert!(report.contains("multi-fidelity ladder"));
+        assert!(report.contains("factor"));
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        // one Bench row per (config, factor)
+        assert_eq!(lines.len(), FACTORS.len());
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(
+                j.get("suite").and_then(Json::as_str).unwrap(),
+                "fidelity"
+            );
+            assert!(j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap()
+                .starts_with("fidelity/resnet18_conv5/factor_"));
+            assert!(
+                j.get("median_ns").and_then(Json::as_u64).unwrap() > 0
+            );
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! (used by integration tests); full mode is what EXPERIMENTS.md records.
 
 pub mod data;
+pub mod fidelity;
 pub mod fig2a;
 pub mod fig2b;
 pub mod fig3;
@@ -53,9 +54,9 @@ impl ExpConfig {
 
 /// All experiment ids: the paper's tables/figures in paper order, then
 /// the beyond-paper transfer warm-start and serving-storm studies.
-pub const ALL: [&str; 11] = [
+pub const ALL: [&str; 12] = [
     "fig2a", "fig2b", "fig3", "fig4", "fig5", "table2", "table4", "table5",
-    "headline", "transfer", "storm",
+    "headline", "transfer", "storm", "fidelity",
 ];
 
 /// Dispatch an experiment by id; returns the printed report.
@@ -72,6 +73,7 @@ pub fn run(id: &str, cfg: &ExpConfig) -> Result<String> {
         "headline" => headline::run(cfg),
         "transfer" => transfer::run(cfg),
         "storm" => storm::run(cfg)?,
+        "fidelity" => fidelity::run(cfg),
         other => bail!("unknown experiment '{other}'; known: {ALL:?}"),
     };
     println!("{report}");

@@ -23,7 +23,21 @@ pub struct Booster {
 impl Booster {
     /// Train on `data` (optionally with ranking groups).
     pub fn train(params: &GbdtParams, data: &Dataset) -> Booster {
-        Self::train_grouped(params, data, None)
+        Self::train_impl(params, data, None, None)
+    }
+
+    /// Train with per-row sample weights: each row's gradient and
+    /// hessian are scaled by its weight, so a 0.25-weighted row pulls
+    /// every split and leaf value a quarter as hard as a full row (the
+    /// multi-fidelity label path — coarse tier-0 estimates train at
+    /// [`crate::tuner::database::COARSE_LABEL_WEIGHT`]). `weights:
+    /// None` is bit-identical to [`Booster::train`].
+    pub fn train_weighted(
+        params: &GbdtParams,
+        data: &Dataset,
+        weights: Option<&[f64]>,
+    ) -> Booster {
+        Self::train_impl(params, data, None, weights)
     }
 
     /// Train with explicit ranking query groups (sizes summing to n_rows).
@@ -32,7 +46,19 @@ impl Booster {
         data: &Dataset,
         groups: Option<&[usize]>,
     ) -> Booster {
+        Self::train_impl(params, data, groups, None)
+    }
+
+    fn train_impl(
+        params: &GbdtParams,
+        data: &Dataset,
+        groups: Option<&[usize]>,
+        weights: Option<&[f64]>,
+    ) -> Booster {
         assert!(data.n_rows > 0, "empty training set");
+        if let Some(w) = weights {
+            assert_eq!(w.len(), data.n_rows, "one weight per row");
+        }
         let binned = BinnedDataset::bin(data, params.max_bins);
         let mut rng = Rng::new(params.seed ^ 0x9bd1_77c3);
         let base = params.objective.base_score(&data.labels);
@@ -54,6 +80,12 @@ impl Booster {
             params.objective.grad_hess(
                 &preds, &data.labels, groups, &mut grad, &mut hess,
             );
+            if let Some(w) = weights {
+                for i in 0..data.n_rows {
+                    grad[i] *= w[i];
+                    hess[i] *= w[i];
+                }
+            }
             // row subsampling
             let rows: Vec<u32> = if params.subsample < 1.0 {
                 let k = ((data.n_rows as f64 * params.subsample).ceil()
@@ -368,6 +400,40 @@ mod tests {
         for (r, &s) in rows.iter().zip(&batch) {
             assert_eq!(b.predict_row(r).to_bits(), s.to_bits());
         }
+    }
+
+    #[test]
+    fn weighted_training_none_is_bit_identical_and_weights_pull() {
+        let (rows, labels) = synth_regression(200, 23);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams { boost_rounds: 40, max_depth: 4,
+                             learning_rate: 0.2, ..Default::default() };
+        let plain = Booster::train(&p, &d);
+        let none = Booster::train_weighted(&p, &d, None);
+        let a = predict_all(&plain, &rows);
+        let b = predict_all(&none, &rows);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "weights: None must not perturb training");
+        }
+        // duplicate the data with the copy's labels shifted +10; with
+        // the corrupted half near-zero-weighted, predictions track the
+        // clean labels far more closely than under uniform weights
+        let mut rows2 = rows.clone();
+        rows2.extend(rows.iter().cloned());
+        let mut labels2 = labels.clone();
+        labels2.extend(labels.iter().map(|y| y + 10.0));
+        let d2 = Dataset::from_rows(&rows2, &labels2);
+        let mut w = vec![1.0; labels.len()];
+        w.extend(std::iter::repeat(0.01).take(labels.len()));
+        let down = Booster::train_weighted(&p, &d2, Some(&w));
+        let uniform = Booster::train(&p, &d2);
+        let err = |b: &Booster| {
+            stats::rmse(&predict_all(b, &rows), &labels)
+        };
+        assert!(err(&down) < 0.5 * err(&uniform),
+                "down-weighting must mute the corrupted labels: {} vs {}",
+                err(&down), err(&uniform));
     }
 
     #[test]

@@ -198,12 +198,13 @@ fn print_usage() {
          tune [--network N] --layer conv1 [--target T] \
          [--tuner ml2tuner|tvm|random]\n       [--trials N] [--seed S] \
          [--jobs J] [--space paper|extended]\n       [--v-margin M] \
-         [--db out.json] [--schedule-db dir]\n       \
+         [--prescreen-factor K] [--db out.json] [--schedule-db dir]\n       \
          [--transfer-from dir] [--metrics-out events.jsonl]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
          [--target T]\n       [--tuner ..] [--trials N] [--round N] \
          [--seed S] [--jobs J]\n       [--layers a,b,..] [--space \
-         paper|extended] [--v-margin M] [--out dir]\n       \
+         paper|extended] [--v-margin M] [--prescreen-factor K] \
+         [--out dir]\n       \
          [--schedule-db dir] [--transfer-from dir] [--transfer-cap N]\n       \
          [--metrics-out f]\n  \
          tune-fleet --targets T1,T2,.. [--network N] [--trials N] \
@@ -217,8 +218,8 @@ fn print_usage() {
          \n       TH,TW,OC,IC,VT[,SLOTS,UNROLL] [--numeric]\n  \
          validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
-         headline|transfer|storm|all> [--quick] [--repeats N] [--seed S] \
-         [--target T]\n\n\
+         headline|transfer|storm|fidelity|all> [--quick] [--repeats N] \
+         [--seed S] [--target T]\n\n\
          --network: a registered workload ({}); layer names are resolved\n\
         \x20       within it.\n\
          --target: a registered hardware target ({}); default zcu102 \
@@ -232,6 +233,12 @@ fn print_usage() {
          (kernelUnroll 1|2|4) — 6x the space per layer.\n\
          --v-margin: model-V veto margin on the hinge score (default \
          0.25).\n\
+         --prescreen-factor: tier-0 multi-fidelity prescreen. At K >= 2 \
+         the\n        ML2Tuner round over-selects a Kx candidate pool, \
+         ranks it with the\n        coarse analytic cycle estimator (no \
+         compile, no simulation), and\n        spends full profiling \
+         only on the survivors. 0 (default) disables\n        it — \
+         traces are byte-identical to the single-fidelity loop.\n\
          --jobs: profiling/compile worker threads (default: all cores); \
          traces are\n        identical for any worker count.\n\
          --metrics-out: stream structured telemetry (JSONL: run_start, \
@@ -576,9 +583,9 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_tune(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "layer", "target", "tuner",
                          "trials", "seed", "jobs", "space", "v-margin",
-                         "db", "schedule-db", "transfer-from",
-                         "transfer-cap", "metrics-out", "quiet",
-                         "verbose"])?;
+                         "prescreen-factor", "db", "schedule-db",
+                         "transfer-from", "transfer-cap", "metrics-out",
+                         "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
     let hw = target_arg(args)?;
@@ -588,8 +595,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let space = space_arg(args)?;
     let v_margin =
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
+    let prescreen_factor = args.get_usize("prescreen-factor", 0)?;
     let cfg = TunerConfig { seed, max_trials: trials, v_margin,
-                            ..Default::default() };
+                            prescreen_factor, ..Default::default() };
     let env = TuningEnv::with_space(hw.clone(), layer, space);
     console::info(&format!(
         "target: {}   space: {} ({} configurations)",
@@ -638,6 +646,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ("seed", Json::Num(seed as f64)),
         ("jobs", Json::Num(jobs as f64)),
         ("v_margin", Json::Num(v_margin)),
+        ("prescreen_factor", Json::Num(prescreen_factor as f64)),
     ])?;
     let t0 = std::time::Instant::now();
     let trace = tuner.tune_with(&env, &engine);
@@ -701,9 +710,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
 fn cmd_tune_net(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "target", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
-                         "v-margin", "out", "schedule-db",
-                         "transfer-from", "transfer-cap", "metrics-out",
-                         "quiet", "verbose"])?;
+                         "v-margin", "prescreen-factor", "out",
+                         "schedule-db", "transfer-from", "transfer-cap",
+                         "metrics-out", "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
     let round = args.get_usize("round", 10)?;
@@ -717,13 +726,15 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
     let hw = target_arg(args)?;
     let v_margin =
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
+    let prescreen_factor = args.get_usize("prescreen-factor", 0)?;
     let cfg = NetworkConfig {
         vta: hw.clone(),
         tuner,
         space,
         total_trials: trials,
         round_trials: round,
-        base: TunerConfig { seed, v_margin, ..Default::default() },
+        base: TunerConfig { seed, v_margin, prescreen_factor,
+                            ..Default::default() },
         transfer: transfer_arg(args, tuner)?,
         transfer_cap: args.get_usize("transfer-cap", 400)?,
         ..Default::default()
@@ -739,6 +750,7 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
         ("seed", Json::Num(seed as f64)),
         ("jobs", Json::Num(jobs as f64)),
         ("v_margin", Json::Num(v_margin)),
+        ("prescreen_factor", Json::Num(prescreen_factor as f64)),
     ])?;
     let t0 = std::time::Instant::now();
     console::info(&format!(
@@ -787,9 +799,9 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
 fn cmd_tune_fleet(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "targets", "tuner", "trials",
                          "round", "seed", "jobs", "layers", "space",
-                         "v-margin", "out", "schedule-db",
-                         "transfer-from", "transfer-cap", "metrics-out",
-                         "quiet", "verbose"])?;
+                         "v-margin", "prescreen-factor", "out",
+                         "schedule-db", "transfer-from", "transfer-cap",
+                         "metrics-out", "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let fleet_targets = targets_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
@@ -803,11 +815,13 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
     let space = space_arg(args)?;
     let v_margin =
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
+    let prescreen_factor = args.get_usize("prescreen-factor", 0)?;
     let cfg = FleetConfig {
         targets: fleet_targets.clone(),
         tuner,
         space,
-        base: TunerConfig { seed, v_margin, ..Default::default() },
+        base: TunerConfig { seed, v_margin, prescreen_factor,
+                            ..Default::default() },
         total_trials: trials,
         round_trials: round,
         transfer: transfer_arg(args, tuner)?,
@@ -830,6 +844,7 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
         ("seed", Json::Num(seed as f64)),
         ("jobs", Json::Num(jobs as f64)),
         ("v_margin", Json::Num(v_margin)),
+        ("prescreen_factor", Json::Num(prescreen_factor as f64)),
     ])?;
     let t0 = std::time::Instant::now();
     console::info(&format!(

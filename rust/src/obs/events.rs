@@ -139,6 +139,17 @@ impl RoundEvent {
             .set("profile_ns", delta.stage(Stage::Profile).total_ns)
             .set("cache_hits", delta.counter(Counter::CompileCacheHit))
             .set("cache_misses", delta.counter(Counter::CompileCacheMiss));
+        // prescreen group: present only on rounds that ran the tier-0
+        // cut, so prescreen-off runs serialize byte-identically to the
+        // pre-multi-fidelity schema (still version 1, additive fields)
+        let prescreened = delta.counter(Counter::CandidatesPrescreened);
+        if prescreened > 0 {
+            o.set("prescreened", prescreened)
+                .set("survivors",
+                     delta.counter(Counter::PrescreenSurvivors))
+                .set("prescreen_ns",
+                     delta.stage(Stage::Prescreen).total_ns);
+        }
         if let Some(best) = self.best_cycles {
             o.set("best_cycles", best);
         }
@@ -280,6 +291,28 @@ mod tests {
         // line round-trips through the parser
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);
+    }
+
+    #[test]
+    fn prescreen_fields_gate_on_the_counter() {
+        let rec = Recorder::new();
+        rec.add(Counter::CandidatesPrescreened, 80);
+        rec.add(Counter::PrescreenSurvivors, 20);
+        rec.record_duration_ns(Stage::Prescreen, 4200);
+        let delta =
+            rec.snapshot().delta_since(&Recorder::new().snapshot());
+        let j = sample_event(None).to_json(&delta);
+        assert_eq!(j.get("prescreened").unwrap().as_i64(), Some(80));
+        assert_eq!(j.get("survivors").unwrap().as_i64(), Some(20));
+        assert_eq!(j.get("prescreen_ns").unwrap().as_i64(), Some(4200));
+        // a round that never prescreened emits none of the group
+        let empty = Recorder::new()
+            .snapshot()
+            .delta_since(&Recorder::new().snapshot());
+        let j0 = sample_event(None).to_json(&empty);
+        assert!(j0.get("prescreened").is_none());
+        assert!(j0.get("survivors").is_none());
+        assert!(j0.get("prescreen_ns").is_none());
     }
 
     #[test]

@@ -54,10 +54,16 @@ pub enum Counter {
     /// Miss-triggered tuning jobs rejected by admission control (queue
     /// full).
     ServeJobsRejected,
+    /// Candidates ranked by the tier-0 coarse estimator during
+    /// prescreen (`--prescreen-factor`).
+    CandidatesPrescreened,
+    /// Prescreened candidates that survived the tier-0 cut and went on
+    /// to full profiling.
+    PrescreenSurvivors,
 }
 
 /// Number of [`Counter`] variants (array sizing).
-pub const N_COUNTERS: usize = 13;
+pub const N_COUNTERS: usize = 15;
 
 impl Counter {
     /// Every counter, in `run_end` emission order.
@@ -75,6 +81,8 @@ impl Counter {
         Counter::ScheduleDbMiss,
         Counter::ServeJobsTuned,
         Counter::ServeJobsRejected,
+        Counter::CandidatesPrescreened,
+        Counter::PrescreenSurvivors,
     ];
 
     /// Stable snake_case name (the `run_end` event key).
@@ -93,6 +101,8 @@ impl Counter {
             Counter::ScheduleDbMiss => "schedule_db_misses",
             Counter::ServeJobsTuned => "serve_jobs_tuned",
             Counter::ServeJobsRejected => "serve_jobs_rejected",
+            Counter::CandidatesPrescreened => "candidates_prescreened",
+            Counter::PrescreenSurvivors => "prescreen_survivors",
         }
     }
 }
@@ -115,10 +125,13 @@ pub enum Stage {
     Compile,
     /// Simulated hardware profiling of a batch.
     Profile,
+    /// Tier-0 coarse prescreen of an over-selected candidate pool
+    /// (nested inside `Select` like `Train`/`Sweep`/`Compile`).
+    Prescreen,
 }
 
 /// Number of [`Stage`] variants (array sizing).
-pub const N_STAGES: usize = 6;
+pub const N_STAGES: usize = 7;
 
 impl Stage {
     /// Every stage, in `run_end` emission order.
@@ -129,6 +142,7 @@ impl Stage {
         Stage::SweepChunk,
         Stage::Compile,
         Stage::Profile,
+        Stage::Prescreen,
     ];
 
     /// Stable snake_case name (event keys are `<name>_ns`).
@@ -140,6 +154,7 @@ impl Stage {
             Stage::SweepChunk => "sweep_chunk",
             Stage::Compile => "compile",
             Stage::Profile => "profile",
+            Stage::Prescreen => "prescreen",
         }
     }
 }

@@ -41,6 +41,12 @@ const ROUND_STR_FIELDS: [&str; 4] = ["target", "layer", "tuner", "space"];
 const ROUND_V_FIELDS: [&str; 6] =
     ["vetoes", "v_tp", "v_fp", "v_tn", "v_fn", "v_margin"];
 
+/// Prescreen-group fields (tier-0 coarse cut): all present or all
+/// absent. Absent on every pre-multi-fidelity event file and on rounds
+/// that ran with the prescreen off, so old logs keep validating.
+const ROUND_PRESCREEN_FIELDS: [&str; 3] =
+    ["prescreened", "survivors", "prescreen_ns"];
+
 fn num(obj: &Json, key: &str) -> Result<u64> {
     match obj.get(key) {
         Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
@@ -93,6 +99,21 @@ pub fn validate_line(line: &str) -> Result<Json> {
                 }
                 fnum(&j, "v_margin")?;
             }
+            let n_ps = ROUND_PRESCREEN_FIELDS
+                .iter()
+                .filter(|k| j.get(k).is_some())
+                .count();
+            if n_ps != 0 && n_ps != ROUND_PRESCREEN_FIELDS.len() {
+                bail!(
+                    "partial prescreen group: expected all or none of \
+                     {ROUND_PRESCREEN_FIELDS:?}"
+                );
+            }
+            if n_ps > 0 {
+                for k in ROUND_PRESCREEN_FIELDS {
+                    num(&j, k)?;
+                }
+            }
         }
         "run_start" => {
             string(&j, "cmd")?;
@@ -129,6 +150,10 @@ pub struct TargetAgg {
     pub crash: u64,
     /// Trials that produced wrong output.
     pub wrong: u64,
+    /// Candidates ranked by the tier-0 coarse estimator.
+    pub prescreened: u64,
+    /// Prescreened candidates that went on to full profiling.
+    pub survivors: u64,
     /// Candidates model V filtered out before profiling.
     pub vetoes: u64,
     /// V predicted valid, profiled valid.
@@ -209,6 +234,12 @@ pub struct Report {
     pub compile_ns: u64,
     /// Wall time profiling on the simulator.
     pub profile_ns: u64,
+    /// Wall time in the tier-0 coarse prescreen (inside selection).
+    pub prescreen_ns: u64,
+    /// Candidates ranked at tier 0 across all rounds.
+    pub prescreened: u64,
+    /// Tier-0 survivors that went on to full profiling.
+    pub survivors: u64,
     /// Parallel sweep chunks dispatched.
     pub sweep_chunks: u64,
     /// Compile-cache hits.
@@ -231,6 +262,14 @@ impl Report {
         self.compile_ns += num(j, "compile_ns")?;
         self.profile_ns += num(j, "profile_ns")?;
         self.sweep_chunks += num(j, "sweep_chunks")?;
+        let round_prescreened = if j.get("prescreened").is_some() {
+            self.prescreen_ns += num(j, "prescreen_ns")?;
+            self.prescreened += num(j, "prescreened")?;
+            self.survivors += num(j, "survivors")?;
+            (num(j, "prescreened")?, num(j, "survivors")?)
+        } else {
+            (0, 0)
+        };
         if !self.cache_from_run_end {
             self.cache_hits += num(j, "cache_hits")?;
             self.cache_misses += num(j, "cache_misses")?;
@@ -242,6 +281,8 @@ impl Report {
         t.valid += num(j, "valid_new")?;
         t.crash += num(j, "crash_new")?;
         t.wrong += num(j, "wrong_new")?;
+        t.prescreened += round_prescreened.0;
+        t.survivors += round_prescreened.1;
         if j.get("vetoes").is_some() {
             t.v_rounds += 1;
             t.vetoes += num(j, "vetoes")?;
@@ -271,13 +312,14 @@ impl Report {
         Ok(())
     }
 
-    /// Wall time outside train/sweep/A-compile but inside selection
-    /// (feature building, ranking walks, bookkeeping).
+    /// Wall time outside train/sweep/prescreen/A-compile but inside
+    /// selection (feature building, ranking walks, bookkeeping).
     pub fn select_other_ns(&self) -> u64 {
         self.select_ns
             .saturating_sub(self.train_ns)
             .saturating_sub(self.sweep_ns)
             .saturating_sub(self.compile_ns)
+            .saturating_sub(self.prescreen_ns)
     }
 
     /// Total tracked wall time (selection + profiling).
@@ -300,13 +342,16 @@ impl Report {
         out.push_str("per-stage time breakdown (coordinator wall time):\n");
         let total = self.total_ns().max(1) as f64;
         let mut t = Table::new(&["stage", "time", "share"]);
-        let rows: [(&str, u64); 5] = [
+        let mut rows: Vec<(&str, u64)> = vec![
             ("train (P/V/A)", self.train_ns),
             ("score-sweep", self.sweep_ns),
             ("compile (A-stage pool)", self.compile_ns),
-            ("select-other", self.select_other_ns()),
-            ("profile", self.profile_ns),
         ];
+        if self.prescreened > 0 {
+            rows.push(("prescreen (tier 0)", self.prescreen_ns));
+        }
+        rows.push(("select-other", self.select_other_ns()));
+        rows.push(("profile", self.profile_ns));
         for (name, ns) in rows {
             t.row(&[
                 name.to_string(),
@@ -320,6 +365,19 @@ impl Report {
             out.push_str(&format!(
                 "score-sweep chunks: {} (worker CPU time, not wall)\n",
                 self.sweep_chunks
+            ));
+        }
+        if self.prescreened > 0 {
+            out.push_str(&format!(
+                "tier-0 prescreen: {} candidates -> {} survivors \
+                 ({:.1}% culled); tier-0 time {} vs tier-1 profile {}\n",
+                self.prescreened,
+                self.survivors,
+                self.prescreened.saturating_sub(self.survivors) as f64
+                    / self.prescreened as f64
+                    * 100.0,
+                fmt_ns(self.prescreen_ns),
+                fmt_ns(self.profile_ns),
             ));
         }
 
@@ -384,6 +442,27 @@ impl Report {
             ]);
         }
         out.push_str(&mt.render());
+        if self.prescreened > 0 {
+            out.push_str("\nmulti-fidelity (per target):\n");
+            let mut pt =
+                Table::new(&["target", "prescreened", "survivors",
+                             "survival%"]);
+            for (target, agg) in &self.targets {
+                if agg.prescreened == 0 {
+                    continue;
+                }
+                pt.row(&[
+                    target.clone(),
+                    agg.prescreened.to_string(),
+                    agg.survivors.to_string(),
+                    format!("{:.1}%",
+                            agg.survivors as f64
+                                / agg.prescreened as f64
+                                * 100.0),
+                ]);
+            }
+            out.push_str(&pt.render());
+        }
         out.push_str(
             "invalid avoided = vetoes x NPV (NPV = tn/(tn+fn) over \
              vetoed-then-profiled fallback trials; 1.0 when none were \
@@ -494,6 +573,75 @@ mod tests {
             .set("v_fn", 1u64)
             .set("v_margin", 0.25);
         assert!(validate_line(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn partial_prescreen_group_rejected() {
+        // PR-6/7 event files carry no prescreen fields — they must keep
+        // validating (schema stays 1), while a partial group is a hard
+        // error and a complete one passes
+        let mut j = Json::obj();
+        j.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            j.set(k, "x");
+        }
+        for k in ROUND_NUM_FIELDS {
+            j.set(k, 1u64);
+        }
+        assert!(validate_line(&j.to_string()).is_ok(),
+                "legacy round line must stay valid");
+        j.set("prescreened", 80u64);
+        assert!(validate_line(&j.to_string()).is_err());
+        j.set("survivors", 20u64);
+        assert!(validate_line(&j.to_string()).is_err());
+        j.set("prescreen_ns", 4200u64);
+        assert!(validate_line(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn prescreen_fields_aggregate_into_the_report() {
+        let mut j = Json::obj();
+        j.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            j.set(k, "zcu102");
+        }
+        for k in ROUND_NUM_FIELDS {
+            j.set(k, 2u64);
+        }
+        j.set("prescreened", 80u64)
+            .set("survivors", 20u64)
+            .set("prescreen_ns", 4200u64);
+        let mut r = Report::default();
+        r.add_round(&j).unwrap();
+        r.add_round(&j).unwrap();
+        assert_eq!(r.prescreened, 160);
+        assert_eq!(r.survivors, 40);
+        assert_eq!(r.prescreen_ns, 8400);
+        let t = &r.targets["zcu102"];
+        assert_eq!((t.prescreened, t.survivors), (160, 40));
+        // prescreen time is carved out of select-other
+        assert_eq!(r.select_other_ns(),
+                   r.select_ns
+                       .saturating_sub(r.train_ns)
+                       .saturating_sub(r.sweep_ns)
+                       .saturating_sub(r.compile_ns)
+                       .saturating_sub(8400));
+        let text = r.render();
+        assert!(text.contains("prescreen (tier 0)"));
+        assert!(text.contains("multi-fidelity (per target):"));
+        // a report with no prescreen rounds renders none of it
+        let mut plain = Json::obj();
+        plain.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            plain.set(k, "zcu102");
+        }
+        for k in ROUND_NUM_FIELDS {
+            plain.set(k, 2u64);
+        }
+        let mut cold = Report::default();
+        cold.add_round(&plain).unwrap();
+        let text = cold.render();
+        assert!(!text.contains("prescreen"));
     }
 
     #[test]

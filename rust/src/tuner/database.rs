@@ -52,6 +52,27 @@ impl Outcome {
     }
 }
 
+/// Measurement tier a record's outcome came from.
+///
+/// `Full` is the cycle-accurate `vta::timing` co-simulation (the only
+/// tier that counts against trial budgets); `Coarse` is the tier-0
+/// analytic estimate from [`crate::vta::coarse`] — rank-useful, but
+/// never to be confused with a measured cycle count. Legacy tuning logs
+/// carry no tag and load as `Full`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Full-fidelity profile: three-timeline co-simulated cycles.
+    #[default]
+    Full,
+    /// Tier-0 prescreen: analytic per-module cycle estimate, no build.
+    Coarse,
+}
+
+/// Training weight of a coarse (tier-0) label relative to a full
+/// profile (1.0). Coarse estimates order the landscape but carry level
+/// error, so they steer the models without outvoting measured labels.
+pub const COARSE_LABEL_WEIGHT: f64 = 0.25;
+
 /// One profiling attempt.
 #[derive(Clone, Debug)]
 pub struct TrialRecord {
@@ -65,6 +86,8 @@ pub struct TrialRecord {
     pub hidden: Vec<f64>,
     /// What profiling observed.
     pub outcome: Outcome,
+    /// Measurement tier the outcome came from.
+    pub fidelity: Fidelity,
 }
 
 impl TrialRecord {
@@ -284,12 +307,17 @@ impl Database {
         self.records.iter().filter(|r| r.outcome.is_valid()).count()
     }
 
-    /// Training set for P: visible features of *valid* records only
-    /// (the paper trains P exclusively on valid configurations).
+    /// Training set for P: visible features of *full-fidelity valid*
+    /// records only (the paper trains P exclusively on valid
+    /// configurations; coarse estimates join only through the weighted
+    /// view, [`Database::train_p_tiered`]).
     pub fn train_p(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
         let mut xs = Vec::new();
         let mut ys = Vec::new();
         for r in &self.records {
+            if r.fidelity != Fidelity::Full {
+                continue;
+            }
             if let Some(y) = r.perf_label() {
                 xs.push(r.visible.clone());
                 ys.push(y);
@@ -298,11 +326,57 @@ impl Database {
         (xs, ys)
     }
 
-    /// Training set for V: visible features of *all* records,
-    /// label = validity.
+    /// Weighted P training set across fidelity tiers: full-fidelity
+    /// valid records at weight 1.0 plus coarse-estimate records at
+    /// [`COARSE_LABEL_WEIGHT`]. The weight vector is `None` when the
+    /// database holds no coarse record — in that case `(xs, ys)` is
+    /// exactly [`Database::train_p`] and the unweighted training path
+    /// runs bit-identically.
+    pub fn train_p_tiered(
+        &self,
+    ) -> (Vec<Vec<f64>>, Vec<f64>, Option<Vec<f64>>) {
+        if !self.records.iter().any(|r| r.fidelity == Fidelity::Coarse) {
+            let (xs, ys) = self.train_p();
+            return (xs, ys, None);
+        }
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut ws = Vec::new();
+        for r in &self.records {
+            if let Some(y) = r.perf_label() {
+                xs.push(r.visible.clone());
+                ys.push(y);
+                ws.push(match r.fidelity {
+                    Fidelity::Full => 1.0,
+                    Fidelity::Coarse => COARSE_LABEL_WEIGHT,
+                });
+            }
+        }
+        (xs, ys, Some(ws))
+    }
+
+    /// Training set for V: visible features of all *full-fidelity*
+    /// records plus coarse *invalid* records, label = validity. A
+    /// tier-0 "valid" is only a plausibility estimate and must not
+    /// teach V the config actually runs; a tier-0 invalid comes from
+    /// the static capacity check, which is a sound subset of
+    /// runtime-invalid, so it is a real label.
     pub fn train_v(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let xs = self.records.iter().map(|r| r.visible.clone()).collect();
-        let ys = self.records.iter().map(|r| r.valid_label()).collect();
+        let trains_v = |r: &&TrialRecord| {
+            r.fidelity == Fidelity::Full || !r.outcome.is_valid()
+        };
+        let xs = self
+            .records
+            .iter()
+            .filter(trains_v)
+            .map(|r| r.visible.clone())
+            .collect();
+        let ys = self
+            .records
+            .iter()
+            .filter(trains_v)
+            .map(|r| r.valid_label())
+            .collect();
         (xs, ys)
     }
 
@@ -310,6 +384,8 @@ impl Database {
     /// Records without hidden features (e.g. transferred from a space
     /// version whose hidden layout cannot be projected onto this one)
     /// are skipped — they still train P and V, which are visible-only.
+    /// Coarse records never compile, so they carry no hidden features
+    /// and the same skip keeps tier-0 estimates out of A.
     pub fn train_a(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
         let mut xs = Vec::new();
         let mut ys = Vec::new();
@@ -327,27 +403,32 @@ impl Database {
         (xs, ys)
     }
 
-    /// TVM-approach training set: ALL records; invalid ones get a penalty
-    /// label (worst observed + 1, i.e. "slower than anything seen").
+    /// TVM-approach training set: all *full-fidelity* records; invalid
+    /// ones get a penalty label (worst observed + 1, i.e. "slower than
+    /// anything seen"). The TVM baseline never prescreens, but a log
+    /// replayed through this view could carry coarse records — they
+    /// are estimates, not measurements, and are excluded.
     pub fn train_p_with_penalty(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let worst = self
-            .records
-            .iter()
+        let full = || {
+            self.records.iter().filter(|r| r.fidelity == Fidelity::Full)
+        };
+        let worst = full()
             .filter_map(|r| r.perf_label())
             .fold(f64::NEG_INFINITY, f64::max);
         let penalty = if worst.is_finite() { worst + 1.0 } else { 30.0 };
-        let xs = self.records.iter().map(|r| r.visible.clone()).collect();
-        let ys = self
-            .records
-            .iter()
-            .map(|r| r.perf_label().unwrap_or(penalty))
-            .collect();
+        let xs = full().map(|r| r.visible.clone()).collect();
+        let ys = full().map(|r| r.perf_label().unwrap_or(penalty)).collect();
         (xs, ys)
     }
 
-    /// Best valid cycles so far.
+    /// Best valid cycles so far, *measured* records only — a coarse
+    /// estimate must never masquerade as a run's best.
     pub fn best_cycles(&self) -> Option<u64> {
-        self.records.iter().filter_map(|r| r.outcome.cycles()).min()
+        self.records
+            .iter()
+            .filter(|r| r.fidelity == Fidelity::Full)
+            .filter_map(|r| r.outcome.cycles())
+            .min()
     }
 
     // ------------------------------------------------------------- JSON --
@@ -379,6 +460,11 @@ impl Database {
                 o.set("i", r.space_index)
                     .set("knobs", knobs)
                     .set("hidden", r.hidden.clone());
+                // full fidelity is the default — omitting it keeps
+                // every pre-tier log byte-identical on re-save
+                if r.fidelity == Fidelity::Coarse {
+                    o.set("fidelity", "coarse");
+                }
                 match r.outcome {
                     Outcome::Valid { cycles } => {
                         o.set("outcome", "valid").set("cycles", cycles);
@@ -487,6 +573,16 @@ impl Database {
                 Some("wrong") => Outcome::WrongOutput,
                 other => return Err(anyhow!("bad outcome {other:?}")),
             };
+            let fidelity = match r.get("fidelity").and_then(Json::as_str) {
+                Some("coarse") => Fidelity::Coarse,
+                Some("full") => Fidelity::Full,
+                Some(other) => {
+                    return Err(anyhow!("bad fidelity {other:?}"))
+                }
+                // legacy logs predate the tier split: everything in
+                // them was measured by the full simulator
+                None => Fidelity::Full,
+            };
             db.push(TrialRecord {
                 space_index: geti("i")?,
                 schedule,
@@ -496,6 +592,7 @@ impl Database {
                 visible: db.kind.visible_features(&schedule),
                 hidden,
                 outcome,
+                fidelity,
             });
         }
         Ok(db)
@@ -678,6 +775,17 @@ impl TransferDb {
             if warm.len() >= max_records {
                 break;
             }
+            // only measured outcomes transfer: a coarse estimate from
+            // a prior run is a ranking device, not a label another
+            // run's models may treat as ground truth
+            let full: Vec<&TrialRecord> = src
+                .records
+                .iter()
+                .filter(|r| r.fidelity == Fidelity::Full)
+                .collect();
+            if full.is_empty() {
+                continue;
+            }
             let ratio = match &src.meta {
                 Some(m) => target.macs() as f64 / m.macs() as f64,
                 None => 1.0,
@@ -699,10 +807,10 @@ impl TransferDb {
                 .as_ref()
                 .is_some_and(|t| !t.same_capacities(&hw_meta));
             let budget = if cross_capacity {
-                ((src.len() as f64 * hw_sim).ceil() as usize)
-                    .clamp(1, src.len())
+                ((full.len() as f64 * hw_sim).ceil() as usize)
+                    .clamp(1, full.len())
             } else {
-                src.len()
+                full.len()
             };
             // deterministic stride subsample over the WHOLE log: logs
             // are chronological, so a prefix-take would keep only the
@@ -714,7 +822,7 @@ impl TransferDb {
                 if warm.len() >= max_records {
                     break;
                 }
-                let rec = &src.records[k * src.len() / budget];
+                let rec = full[k * full.len() / budget];
                 let mut r = rec.clone();
                 r.visible = kind.visible_features(&r.schedule);
                 if projectable
@@ -766,7 +874,13 @@ mod tests {
             visible: SpaceKind::Paper.visible_features(&schedule),
             hidden: vec![1.0, 2.0, 3.0],
             outcome,
+            fidelity: Fidelity::Full,
         }
+    }
+
+    fn coarse_rec(i: usize, outcome: Outcome) -> TrialRecord {
+        TrialRecord { hidden: vec![], fidelity: Fidelity::Coarse,
+                      ..rec(i, outcome) }
     }
 
     #[test]
@@ -1084,6 +1198,7 @@ mod tests {
                 hidden: vec![1.0;
                              features::hidden_len(SpaceKind::Paper)],
                 outcome: Outcome::Valid { cycles: 1000 },
+                fidelity: Fidelity::Full,
             });
             src
         };
@@ -1138,6 +1253,7 @@ mod tests {
                 outcome: Outcome::Valid {
                     cycles: 1_000_000 / th as u64,
                 },
+                fidelity: Fidelity::Full,
             });
         }
         let n_src = src.len();
@@ -1199,5 +1315,93 @@ mod tests {
                     .all(|r| r.space_index < 100),
                 "...but hardware distance must rank the native log \
                  first");
+    }
+
+    #[test]
+    fn fidelity_round_trips_and_legacy_defaults_full() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 100 }));
+        db.push(coarse_rec(1, Outcome::Valid { cycles: 90 }));
+        db.push(coarse_rec(2, Outcome::Crash));
+        let text = db.to_json().to_string_pretty();
+        assert_eq!(text.matches("\"fidelity\": \"coarse\"").count(), 2,
+                   "full records carry no tag: {text}");
+        let back = Database::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.records[0].fidelity, Fidelity::Full);
+        assert_eq!(back.records[1].fidelity, Fidelity::Coarse);
+        assert_eq!(back.records[2].fidelity, Fidelity::Coarse);
+        // a pre-tier log (no fidelity field anywhere) loads as Full
+        let legacy = text.replace("\"fidelity\": \"coarse\",", "")
+            .replace(",\n      \"fidelity\": \"coarse\"", "");
+        let old = Database::from_json(&Json::parse(&legacy).unwrap())
+            .unwrap();
+        assert!(old.records.iter()
+                    .all(|r| r.fidelity == Fidelity::Full));
+    }
+
+    #[test]
+    fn training_views_respect_fidelity_tiers() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Crash));
+        db.push(coarse_rec(2, Outcome::Valid { cycles: 2048 }));
+        db.push(coarse_rec(3, Outcome::Crash));
+        // P: full valid only
+        let (xp, yp) = db.train_p();
+        assert_eq!((xp.len(), yp[0]), (1, 10.0));
+        // tiered P: both valids, the coarse one down-weighted
+        let (xt, yt, wt) = db.train_p_tiered();
+        assert_eq!(xt.len(), 2);
+        assert_eq!(yt, vec![10.0, 11.0]);
+        assert_eq!(wt, Some(vec![1.0, COARSE_LABEL_WEIGHT]));
+        // V: full records + coarse invalid; coarse "valid" is only a
+        // plausibility estimate and is excluded
+        let (xv, yv) = db.train_v();
+        assert_eq!(xv.len(), 3);
+        assert_eq!(yv, vec![1.0, 0.0, 0.0]);
+        // TVM penalty view: full records only
+        let (xpen, _) = db.train_p_with_penalty();
+        assert_eq!(xpen.len(), 2);
+        // best-so-far never reads a coarse estimate
+        assert_eq!(db.best_cycles(), Some(1024));
+    }
+
+    #[test]
+    fn tiered_weights_absent_without_coarse_records() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Valid { cycles: 2048 }));
+        let (xs, ys, ws) = db.train_p_tiered();
+        assert!(ws.is_none(), "no coarse records -> unweighted path");
+        let (xp, yp) = db.train_p();
+        assert_eq!((xs, ys), (xp, yp));
+    }
+
+    #[test]
+    fn transfer_never_exports_coarse_records() {
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
+        let mut src = Database::for_layer(&pw4);
+        src.push(coarse_rec(0, Outcome::Valid { cycles: 10 }));
+        src.push(full_hidden_rec(1, Outcome::Valid { cycles: 1000 }));
+        src.push(coarse_rec(2, Outcome::Crash));
+        let mut store = TransferDb::new();
+        store.add(src);
+        let warm = store
+            .warm_start_for(&pw5, SpaceKind::Paper,
+                            &VtaConfig::zcu102(), 100)
+            .unwrap();
+        assert_eq!(warm.len(), 1, "only the measured record transfers");
+        assert_eq!(warm.records[0].space_index, 1);
+        // an all-coarse source transfers nothing at all
+        let mut src2 = Database::for_layer(&pw4);
+        src2.push(coarse_rec(0, Outcome::Valid { cycles: 10 }));
+        let mut store2 = TransferDb::new();
+        store2.add(src2);
+        assert!(store2
+            .warm_start_for(&pw5, SpaceKind::Paper,
+                            &VtaConfig::zcu102(), 100)
+            .is_none());
     }
 }

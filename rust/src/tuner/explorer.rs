@@ -373,7 +373,7 @@ impl<'r> Explorer<'r> {
 mod tests {
     use super::*;
     use crate::compiler::schedule::Schedule;
-    use crate::tuner::database::{Database, Outcome, TrialRecord};
+    use crate::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
     use crate::workloads::resnet18;
 
     /// Train P/V on a synthetic labelling of the real conv5 space.
@@ -396,6 +396,7 @@ mod tests {
                 } else {
                     Outcome::Crash
                 },
+                fidelity: Fidelity::Full,
             });
         }
         let p = ModelP::train(&db, 60, 1).unwrap();

@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 
-use super::database::Database;
+use super::database::{Database, Fidelity, Outcome, TrialRecord};
 use super::explorer::{Explorer, SelectStats};
 use super::models::{ModelA, ModelP, ModelV};
 use super::report::TuningTrace;
@@ -23,8 +23,9 @@ use super::space::SearchSpace;
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
 use crate::gbdt::FeatureMatrix;
-use crate::obs::Stage;
+use crate::obs::{Counter, Stage};
 use crate::util::rng::Rng;
+use crate::vta::coarse::CoarseEstimate;
 
 /// The multi-level tuner.
 pub struct Ml2Tuner {
@@ -103,10 +104,15 @@ impl Tuner for Ml2Tuner {
             let scope = engine.recorder().begin_round();
             let before = trace.len();
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
-            let (batch, stats) =
+            let (batch, stats, coarse) =
                 select_batch(cfg, self.use_v, self.use_a, env, engine,
                              &space, &db, self.warm.as_ref(), &mut rng,
                              round, n);
+            // tier-0 estimates of pruned candidates train the models
+            // (down-weighted) but never touch the trace or the budget
+            for c in coarse {
+                db.push(c);
+            }
             if batch.is_empty() {
                 break;
             }
@@ -143,6 +149,15 @@ impl Tuner for Ml2Tuner {
 /// re-ranking) when model V actually filtered this round — the raw
 /// material for the per-round precision/recall telemetry. `None` on the
 /// model-not-ready fallback and on V-less rounds.
+///
+/// With `cfg.prescreen_factor ≥ 2` the explorer over-selects a
+/// `factor×` pool, the tier-0 coarse estimator ranks it
+/// ([`Engine::prescreen_into`]), and only the best statically-plausible
+/// candidates proceed to the A-stage and profiling. The third return
+/// value carries [`Fidelity::Coarse`] records for the pruned candidates
+/// — the caller pushes them into its database (training signal) but
+/// never into the trace or the budget. With the factor off it is always
+/// empty and the selection path is structurally unchanged.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
@@ -156,7 +171,7 @@ pub(crate) fn select_batch(
     rng: &mut Rng,
     round: u64,
     n: usize,
-) -> (Vec<usize>, Option<SelectStats>) {
+) -> (Vec<usize>, Option<SelectStats>, Vec<TrialRecord>) {
     let rec = engine.recorder();
     let _select = rec.span(Stage::Select);
     let warm = warm.filter(|w| !w.is_empty());
@@ -176,8 +191,22 @@ pub(crate) fn select_batch(
     } else {
         None
     };
+    let factor = cfg.prescreen_factor;
     let Some(p) = p else {
-        return (space.sample_unmeasured(rng, n), None);
+        // random warmup: with prescreen on, over-sample and keep the
+        // tier-0 survivors so even the cold rounds skip doomed configs
+        if factor >= 2 {
+            let cand =
+                space.sample_unmeasured(rng, n.saturating_mul(factor));
+            if cand.len() > n {
+                let mut coarse = Vec::new();
+                let keep = prescreen_survivors(engine, env, space, &cand,
+                                               n, &mut coarse);
+                return (keep, None, coarse);
+            }
+            return (cand, None, Vec::new());
+        }
+        return (space.sample_unmeasured(rng, n), None, Vec::new());
     };
     let v = if use_v {
         let _train = rec.span(Stage::Train);
@@ -192,12 +221,27 @@ pub(crate) fn select_batch(
         None
     };
     let pool_n = if use_a { cfg.pool_size() } else { n };
+    // over-select a factor× pool for the tier-0 cut; the A-stage then
+    // compiles only pool_n survivors, so compile cost never grows with
+    // the factor
+    let want = if factor >= 2 {
+        pool_n.saturating_mul(factor)
+    } else {
+        pool_n
+    };
     let (pool, pool_stats) = Explorer::new(cfg.epsilon)
         .with_v_margin(cfg.v_margin)
         .with_jobs(engine.jobs())
         .with_recorder(rec)
-        .select_with_stats(space, &p, v.as_ref(), pool_n, rng);
-    let batch: Vec<usize> = if use_a && pool.len() > n {
+        .select_with_stats(space, &p, v.as_ref(), want, rng);
+    let mut coarse: Vec<TrialRecord> = Vec::new();
+    let ranked: Vec<usize> = if factor >= 2 && pool.len() > pool_n {
+        prescreen_survivors(engine, env, space, &pool, pool_n,
+                            &mut coarse)
+    } else {
+        pool.clone()
+    };
+    let batch: Vec<usize> = if use_a && ranked.len() > n {
         // Compile the whole pool (batched, cached), harvest hidden
         // features, re-rank with A. The engine's cache means the `n`
         // winners are NOT recompiled when profiled right after.
@@ -214,9 +258,9 @@ pub(crate) fn select_batch(
             }
         };
         match a {
-            None => pool.iter().copied().take(n).collect(),
+            None => ranked.iter().copied().take(n).collect(),
             Some(a) => {
-                let compiled = engine.compile_batch(env, &pool);
+                let compiled = engine.compile_batch(env, &ranked);
                 // one reused buffer + one matrix for the whole pool:
                 // each row is visible ⊕ hidden, exactly what
                 // `combined_features` used to allocate per candidate
@@ -224,23 +268,25 @@ pub(crate) fn select_batch(
                     + compiled.first().map_or(0, |c| c.hidden.len());
                 let mut feats: Vec<f64> = Vec::with_capacity(width);
                 let mut m =
-                    FeatureMatrix::with_capacity(width, pool.len());
-                for (&i, c) in pool.iter().zip(&compiled) {
+                    FeatureMatrix::with_capacity(width, ranked.len());
+                for (&i, c) in ranked.iter().zip(&compiled) {
                     space.visible_into(i, &mut feats);
                     feats.extend_from_slice(&c.hidden);
                     m.push_row_f64(&feats);
                 }
-                let mut scores = Vec::with_capacity(pool.len());
+                let mut scores = Vec::with_capacity(ranked.len());
                 a.predict_batch_into(&m, &mut scores);
-                let mut scored: Vec<(f64, usize)> =
-                    scores.into_iter().zip(pool.iter().copied()).collect();
+                let mut scored: Vec<(f64, usize)> = scores
+                    .into_iter()
+                    .zip(ranked.iter().copied())
+                    .collect();
                 // stable sort: ties keep pool (P-ranking) order
                 scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
                 scored.into_iter().take(n).map(|(_, i)| i).collect()
             }
         }
     } else {
-        pool.iter().copied().take(n).collect()
+        ranked.iter().copied().take(n).collect()
     };
     // Re-align the explorer's pool-order margins to the final batch so
     // the round event can confront V's verdict with each profiled
@@ -259,7 +305,65 @@ pub(crate) fn select_batch(
         }
         _ => None,
     };
-    (batch, stats)
+    (batch, stats, coarse)
+}
+
+/// Rank `pool` with the tier-0 coarse estimator and keep the best
+/// `keep` statically-plausible candidates, ordered by estimate (ties by
+/// pool position, so the cut is deterministic and `--jobs`-invariant).
+/// A Hopeless verdict can never survive. Pruned candidates are appended
+/// to `coarse` as [`Fidelity::Coarse`] records: Hopeless prunes become
+/// `Crash` labels for model V, finite estimates become down-weighted
+/// `Valid` labels for model P.
+///
+/// Edge case: if *nothing* in the pool is statically plausible the
+/// unfiltered prefix is returned instead, so the round still spends its
+/// budget and the (certain-to-crash) profiles feed V full-fidelity
+/// negatives.
+fn prescreen_survivors(
+    engine: &Engine,
+    env: &TuningEnv,
+    space: &SearchSpace,
+    pool: &[usize],
+    keep: usize,
+    coarse: &mut Vec<TrialRecord>,
+) -> Vec<usize> {
+    let mut est: Vec<CoarseEstimate> = Vec::with_capacity(pool.len());
+    engine.prescreen_into(env, pool, &mut est);
+    let mut order: Vec<usize> = (0..pool.len()).collect();
+    order.sort_by_key(|&k| (est[k].rank_key(), k));
+    let mut kept = vec![false; pool.len()];
+    let mut survivors = Vec::with_capacity(keep);
+    for &k in &order {
+        if survivors.len() >= keep || est[k].is_hopeless() {
+            break; // Hopeless sorts last: nothing after it is plausible
+        }
+        kept[k] = true;
+        survivors.push(pool[k]);
+    }
+    if survivors.is_empty() {
+        return pool.iter().copied().take(keep).collect();
+    }
+    engine
+        .recorder()
+        .add(Counter::PrescreenSurvivors, survivors.len() as u64);
+    for (k, &i) in pool.iter().enumerate() {
+        if kept[k] {
+            continue;
+        }
+        coarse.push(TrialRecord {
+            space_index: i,
+            schedule: space.schedule(i),
+            visible: space.visible(i),
+            hidden: vec![],
+            outcome: match est[k] {
+                CoarseEstimate::Hopeless => Outcome::Crash,
+                CoarseEstimate::Cycles(c) => Outcome::Valid { cycles: c },
+            },
+            fidelity: Fidelity::Coarse,
+        });
+    }
+    survivors
 }
 
 #[cfg(test)]
@@ -307,7 +411,6 @@ mod tests {
 
     #[test]
     fn ablation_names() {
-        use crate::tuner::database::{Outcome, TrialRecord};
         let cfg = TunerConfig::default();
         assert_eq!(Ml2Tuner::new(cfg.clone()).name(), "ml2tuner");
         assert_eq!(Ml2Tuner::new(cfg.clone()).without_v().name(),
@@ -330,9 +433,31 @@ mod tests {
                 .visible_features(&s),
             hidden: vec![],
             outcome: Outcome::Crash,
+            fidelity: Fidelity::Full,
         });
         assert_eq!(Ml2Tuner::new(cfg).with_warm_start(warm).name(),
                    "ml2tuner-warm");
+    }
+
+    #[test]
+    fn prescreen_runs_are_deterministic_and_respect_budget() {
+        let cfg = TunerConfig { max_trials: 40, seed: 3,
+                                prescreen_factor: 4,
+                                ..Default::default() };
+        let a = Ml2Tuner::new(cfg.clone()).tune(&env());
+        let b = Ml2Tuner::new(cfg).tune(&env());
+        assert_eq!(a.len(), 40, "prescreen must not eat the budget");
+        let ai: Vec<usize> =
+            a.trials.iter().map(|t| t.space_index).collect();
+        let bi: Vec<usize> =
+            b.trials.iter().map(|t| t.space_index).collect();
+        assert_eq!(ai, bi, "prescreen runs are deterministic per seed");
+        let mut idx = ai.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 40, "no config profiled twice");
+        // every trial in the trace is full-fidelity
+        assert!(a.trials.iter().all(|t| t.fidelity == Fidelity::Full));
     }
 
     #[test]

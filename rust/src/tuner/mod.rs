@@ -32,7 +32,7 @@ use crate::compiler::Compiler;
 use crate::engine::Engine;
 use crate::vta::{Fault, Simulator, Verdict};
 use crate::workloads::ConvLayer;
-use database::{Outcome, TrialRecord};
+use database::{Fidelity, Outcome, TrialRecord};
 use report::TuningTrace;
 use space::SearchSpace;
 
@@ -133,6 +133,14 @@ pub struct TunerConfig {
     pub boost_rounds: usize,
     /// RNG seed; the per-tuner stream is `seed ^ salt`.
     pub seed: u64,
+    /// Tier-0 prescreen over-selection factor (`--prescreen-factor`).
+    /// `0` or `1` disables prescreening entirely — the selection path is
+    /// structurally unchanged and cold traces stay byte-identical to the
+    /// pre-multi-fidelity behaviour. At `k ≥ 2` the explorer over-selects
+    /// a `k×` candidate pool, ranks it with the coarse analytic estimator
+    /// ([`crate::vta::coarse`]), and spends full profiling only on the
+    /// survivors.
+    pub prescreen_factor: usize,
 }
 
 impl Default for TunerConfig {
@@ -146,6 +154,7 @@ impl Default for TunerConfig {
             min_train: 20,
             boost_rounds: 120,
             seed: 0,
+            prescreen_factor: 0,
         }
     }
 }
@@ -235,6 +244,7 @@ impl TuningEnv {
             visible: self.space.visible(space_index),
             hidden,
             outcome,
+            fidelity: Fidelity::Full,
         }
     }
 }

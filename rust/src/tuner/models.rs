@@ -19,11 +19,24 @@ use crate::tuner::database::Database;
 fn fit(params: GbdtParams, xs: Vec<Vec<f64>>, ys: Vec<f64>)
     -> Option<Booster>
 {
+    fit_weighted(params, xs, ys, None)
+}
+
+/// Weighted variant of [`fit`]: per-row sample weights for
+/// mixed-fidelity training sets. `weights: None` is bit-identical to
+/// the unweighted path, which is what keeps prescreen-off runs
+/// byte-identical.
+fn fit_weighted(
+    params: GbdtParams,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    weights: Option<Vec<f64>>,
+) -> Option<Booster> {
     if xs.len() < 2 {
         return None;
     }
     let data = Dataset::from_rows(&xs, &ys);
-    Some(Booster::train(&params, &data))
+    Some(Booster::train_weighted(&params, &data, weights.as_deref()))
 }
 
 /// Warm-start training set: rows from `warm` (a transferred database,
@@ -58,22 +71,34 @@ impl ModelP {
     }
 
     /// Train on the database's valid records (`None` if < 2 rows).
+    /// Coarse tier-0 estimates participate at
+    /// [`crate::tuner::database::COARSE_LABEL_WEIGHT`]; a database
+    /// without them trains through the unweighted path bit-identically.
     pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
-        let (xs, ys) = db.train_p();
-        fit(Self::params(rounds, seed), xs, ys)
+        let (xs, ys, ws) = db.train_p_tiered();
+        fit_weighted(Self::params(rounds, seed), xs, ys, ws)
             .map(ModelP::from_booster)
     }
 
     /// Transfer warm-start variant: transferred rows first, fresh rows
-    /// after (see [`warm_rows`]).
+    /// after (see [`warm_rows`]). Transferred rows are always measured
+    /// (the transfer store drops coarse records) and weigh 1.0; fresh
+    /// coarse rows keep their tier weight.
     pub fn train_warm(
         fresh: &Database,
         warm: &Database,
         rounds: usize,
         seed: u64,
     ) -> Option<ModelP> {
-        let (xs, ys) = warm_rows(fresh.train_p(), warm.train_p());
-        fit(Self::params(rounds, seed), xs, ys)
+        let (fx, fy, fw) = fresh.train_p_tiered();
+        let (wx, wy) = warm.train_p();
+        let ws = fw.map(|fw| {
+            let mut w = vec![1.0; wx.len()];
+            w.extend(fw);
+            w
+        });
+        let (xs, ys) = warm_rows((fx, fy), (wx, wy));
+        fit_weighted(Self::params(rounds, seed), xs, ys, ws)
             .map(ModelP::from_booster)
     }
 
@@ -240,7 +265,7 @@ impl ModelA {
 mod tests {
     use super::*;
     use crate::compiler::schedule::{Schedule, SpaceKind};
-    use crate::tuner::database::{Outcome, TrialRecord};
+    use crate::tuner::database::{Fidelity, Outcome, TrialRecord};
     use crate::tuner::DEFAULT_V_MARGIN;
 
     fn vis(s: &Schedule) -> Vec<f64> {
@@ -271,6 +296,7 @@ mod tests {
                 } else {
                     Outcome::Crash
                 },
+                fidelity: Fidelity::Full,
             });
         }
         db
@@ -377,6 +403,54 @@ mod tests {
     }
 
     #[test]
+    fn coarse_labels_steer_but_do_not_outvote_measured_ones() {
+        // a cold database of coarse estimates alone can train P (the
+        // prescreen bootstrap), and mixing coarse rows into a measured
+        // database keeps predictions bit-close to measured-only when
+        // the coarse labels agree in ordering
+        let mut coarse_only = Database::new("t");
+        for i in 0..64usize {
+            let th = 1 + (i % 16);
+            let s = sched(th, 1);
+            coarse_only.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: vis(&s),
+                hidden: vec![],
+                outcome: Outcome::Valid {
+                    cycles: (300_000 / th) as u64,
+                },
+                fidelity: Fidelity::Coarse,
+            });
+        }
+        let p = ModelP::train(&coarse_only, 80, 1).unwrap();
+        let f = |th: usize| p.predict(&vis(&sched(th, 1)));
+        assert!(f(2) > f(12),
+                "coarse-only training must order the landscape");
+        // mixed db: the measured rows dominate where they disagree
+        let mut mixed = synth_db(128);
+        for i in 0..128usize {
+            let th = 1 + (i % 16);
+            let s = sched(th, 1);
+            mixed.push(TrialRecord {
+                space_index: 1000 + i,
+                schedule: s,
+                visible: vis(&s),
+                hidden: vec![],
+                // adversarial coarse labels: inverted ordering
+                outcome: Outcome::Valid {
+                    cycles: (10_000 * th) as u64,
+                },
+                fidelity: Fidelity::Coarse,
+            });
+        }
+        let pm = ModelP::train(&mixed, 80, 1).unwrap();
+        let fm = |th: usize| pm.predict(&vis(&sched(th, 1)));
+        assert!(fm(2) > fm(12),
+                "measured labels must outvote down-weighted coarse ones");
+    }
+
+    #[test]
     fn warm_start_combines_fresh_and_transferred_rows() {
         // 1 fresh valid record alone cannot train P; with a warm source
         // it can, and the fresh row participates (xs = warm ⊕ fresh).
@@ -389,6 +463,7 @@ mod tests {
             visible: vis(&s),
             hidden: vec![12.0, 3.0],
             outcome: Outcome::Valid { cycles: 70_000 },
+            fidelity: Fidelity::Full,
         });
         assert!(ModelP::train(&fresh, 10, 0).is_none());
         assert!(ModelP::train_warm(&fresh, &warm, 10, 0).is_some());

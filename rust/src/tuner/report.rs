@@ -206,6 +206,7 @@ pub fn average_curves(curves: &[Vec<f64>]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::compiler::schedule::Schedule;
+    use crate::tuner::database::Fidelity;
 
     fn trace_with(outcomes: &[Outcome]) -> TuningTrace {
         let mut t = TuningTrace::new("conv1", "test");
@@ -220,6 +221,7 @@ mod tests {
                     .visible_features(&s),
                 hidden: vec![],
                 outcome: o,
+                fidelity: Fidelity::Full,
             });
         }
         t

@@ -1,0 +1,190 @@
+//! Tier-0 analytic cycle estimator — the coarse prescreen fidelity tier.
+//!
+//! Full profiling builds a program and co-simulates three module timelines
+//! ([`crate::vta::timing`]); that cycle-accuracy is what a tuning round
+//! pays for every selected candidate. This module estimates the same
+//! quantity *without lowering anything*: it resolves the tile geometry
+//! ([`crate::compiler::passes::analyze`]), applies the weak static
+//! capacity check ([`crate::compiler::validity::static_check`]), and sums
+//! per-module cycle contributions from the [`VtaConfig`] timing
+//! coefficients — DMA bytes over stream width, GEMM block-operations at
+//! one per cycle, uop-table fetch, requantization ALU — assuming perfect
+//! pipeline overlap (the per-tile bottleneck module dominates).
+//!
+//! The estimate is *not* cycle-accurate: it ignores token-FIFO stalls,
+//! per-thread slice pressure, and boundary-tile raggedness. It exists to
+//! **rank** a candidate pool so the round loop can spend full
+//! `vta::timing` profiling on the survivors only (`--prescreen-factor`),
+//! and its contract is correspondingly weak: monotone-consistent with the
+//! static check (Hopeless here ⇒ Hopeless there, so a statically doomed
+//! config can never out-rank a plausible one) and rank-correlated with
+//! the full simulator on plausible configs. Estimates that do enter the
+//! tuning database are tagged [`crate::tuner::database::Fidelity::Coarse`]
+//! so no model or transfer consumer mistakes them for measurements.
+
+use crate::compiler::passes::{analyze, TileAnalysis};
+use crate::compiler::schedule::Schedule;
+use crate::compiler::validity::{static_check, StaticCheck};
+use crate::vta::config::VtaConfig;
+use crate::workloads::ConvLayer;
+
+/// Tier-0 verdict for one (layer, schedule) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoarseEstimate {
+    /// The static capacity check rejected the footprint: the config can
+    /// never execute, so it must never survive a prescreen ranking.
+    Hopeless,
+    /// Analytic cycle estimate (rank signal, not a measurement).
+    Cycles(u64),
+}
+
+impl CoarseEstimate {
+    /// Whether the static check rejected the configuration.
+    pub fn is_hopeless(&self) -> bool {
+        matches!(self, CoarseEstimate::Hopeless)
+    }
+
+    /// The estimated cycles, if the config is statically plausible.
+    pub fn cycles(&self) -> Option<u64> {
+        match self {
+            CoarseEstimate::Hopeless => None,
+            CoarseEstimate::Cycles(c) => Some(*c),
+        }
+    }
+
+    /// Ranking key: plausible estimates order by cycles, Hopeless sorts
+    /// after every finite estimate.
+    pub fn rank_key(&self) -> u64 {
+        match self {
+            CoarseEstimate::Hopeless => u64::MAX,
+            CoarseEstimate::Cycles(c) => *c,
+        }
+    }
+}
+
+/// Estimate execution cycles for one (layer, schedule) pair on `cfg`
+/// without building a program.
+///
+/// Cost: one [`analyze`] pass plus O(1) arithmetic — no instruction
+/// stream, no three-timeline co-simulation. See the module docs for the
+/// accuracy contract.
+pub fn estimate(
+    cfg: &VtaConfig,
+    layer: &ConvLayer,
+    sched: &Schedule,
+) -> CoarseEstimate {
+    let a = analyze(cfg, layer, sched);
+    estimate_analyzed(cfg, layer, &a)
+}
+
+/// [`estimate`] over an already-resolved [`TileAnalysis`] (callers that
+/// have one avoid the duplicate `analyze` pass).
+pub fn estimate_analyzed(
+    cfg: &VtaConfig,
+    layer: &ConvLayer,
+    a: &TileAnalysis,
+) -> CoarseEstimate {
+    if let StaticCheck::Hopeless(_) = static_check(cfg, a) {
+        return CoarseEstimate::Hopeless;
+    }
+
+    let bpc = cfg.dma_bytes_per_cycle.max(1);
+    let dma = |bytes: u64, rows: u64| {
+        cfg.dma_latency + bytes.div_ceil(bpc) + rows * cfg.dma_row_overhead
+    };
+
+    // LOAD timeline: per channel chunk, one input-halo DMA and one
+    // weight-chunk DMA (mirrors `instr_cycles` for `Opcode::Load`).
+    let inp_bytes = (a.inp_tile * cfg.inp_vec_bytes()) as u64;
+    let wgt_bytes = (a.wgt_chunk * cfg.wgt_block_bytes()) as u64;
+    let load = a.n_ci as u64
+        * (dma(inp_bytes, a.in_tile_h as u64)
+            + dma(wgt_bytes, a.nbc as u64));
+
+    // COMPUTE timeline: uop-table fetch, accumulator memset, the GEMM
+    // block-operations (one 16×16×16 MAC block per cycle, plus the issue
+    // overhead per GEMM instruction), and the requantizing ALU pass.
+    let uop_fetch = dma((a.uop_count * cfg.uop_bytes()) as u64, 0);
+    let memset = 8 + a.acc_tile as u64 * cfg.memset_cycles_per_vec;
+    let block_ops =
+        (a.th * a.tw * a.nbc * a.cbc * a.n_pos * a.n_ci) as u64;
+    let gemm_issue =
+        (a.th * a.tw * a.n_chunks * a.n_ci) as u64 * cfg.gemm_overhead;
+    let alu =
+        cfg.alu_overhead + a.acc_tile as u64 * cfg.alu_cycles_per_vec;
+    let compute = uop_fetch + memset + block_ops + gemm_issue + alu;
+
+    // STORE timeline: the requantized int8 output tile back to DRAM.
+    let store = dma((a.acc_tile * cfg.block()) as u64, a.th as u64);
+
+    // Steady state: with double buffering or virtual threads the three
+    // modules overlap and the slowest one paces the pipeline; a
+    // single-buffered single-thread schedule serializes them. One
+    // DMA-latency of pipeline fill plus the FINISH handshake on top.
+    let overlapped = a.slots >= 2 || a.nvt >= 2;
+    let per_tile = if overlapped {
+        load.max(compute).max(store)
+    } else {
+        load + compute + store
+    };
+    let _ = layer; // geometry is fully captured by the analysis
+    CoarseEstimate::Cycles(
+        a.n_tiles() as u64 * per_tile + cfg.dma_latency + cfg.finish_cycles,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet18;
+
+    fn sched(th: usize, tw: usize, oc: usize, ic: usize, vt: usize)
+        -> Schedule
+    {
+        Schedule { tile_h: th, tile_w: tw, tile_oc: oc, tile_ic: ic,
+                   n_vthreads: vt, ..Default::default() }
+    }
+
+    #[test]
+    fn hopeless_mirrors_static_check() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        // acc 56·56·4 = 12544 > 4096 → statically hopeless
+        let s = sched(56, 56, 64, 64, 1);
+        assert_eq!(estimate(&cfg, &l, &s), CoarseEstimate::Hopeless);
+        assert!(!static_check(&cfg, &analyze(&cfg, &l, &s)).is_plausible());
+        // and a comfortably plausible one gets a finite estimate
+        let ok = estimate(&cfg, &l, &sched(8, 8, 32, 32, 1));
+        assert!(ok.cycles().is_some());
+    }
+
+    #[test]
+    fn hopeless_ranks_after_every_estimate() {
+        assert!(CoarseEstimate::Hopeless.rank_key()
+                > CoarseEstimate::Cycles(u64::MAX - 1).rank_key());
+    }
+
+    #[test]
+    fn per_tile_overheads_penalize_tiny_tiles() {
+        // 1×1 tiles pay the DMA setup latency per output pixel; a tile
+        // an order of magnitude larger amortizes it. The estimator must
+        // preserve that first-order ordering.
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        let tiny = estimate(&cfg, &l, &sched(1, 1, 16, 16, 1));
+        let big = estimate(&cfg, &l, &sched(14, 14, 32, 32, 1));
+        assert!(tiny.cycles().unwrap() > 4 * big.cycles().unwrap(),
+                "tiny {tiny:?} vs big {big:?}");
+    }
+
+    #[test]
+    fn serial_schedules_estimate_slower_than_overlapped() {
+        let cfg = VtaConfig::zcu102();
+        let l = resnet18::layer("conv1").unwrap();
+        let base = sched(8, 8, 32, 32, 1);
+        let serial = Schedule { n_load_slots: 1, ..base };
+        let e_overlap = estimate(&cfg, &l, &base).cycles().unwrap();
+        let e_serial = estimate(&cfg, &l, &serial).cycles().unwrap();
+        assert!(e_serial > e_overlap);
+    }
+}

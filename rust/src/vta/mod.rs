@@ -21,6 +21,9 @@
 //!   (crash; on the real board this required a manual reboot), while ACC and
 //!   cross-thread aliasing *wraps silently* and corrupts the output — the two
 //!   invalidity classes of paper §A.2.
+//! * [`coarse`] — tier-0 analytic cycle estimator: no program build, no
+//!   co-simulation — the cheap fidelity tier the round loop uses to
+//!   prescreen candidate pools (`--prescreen-factor`).
 //! * [`timing`] — cycle-approximate model: each module has its own timeline
 //!   and the dependency-token FIFOs (credit-primed for double buffering /
 //!   virtual threads) decide the overlap, exactly the mechanism by which
@@ -31,6 +34,7 @@
 //! `execute` (full numeric run, used by tests and final validation) and
 //! `cycles` (timing only).
 
+pub mod coarse;
 pub mod config;
 pub mod functional;
 pub mod isa;

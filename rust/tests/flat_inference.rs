@@ -13,7 +13,7 @@
 
 use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
 use ml2tuner::gbdt::{Booster, Dataset, FeatureMatrix, GbdtParams, Objective};
-use ml2tuner::tuner::database::{Database, Outcome, TrialRecord};
+use ml2tuner::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::{score_candidates, Explorer};
 use ml2tuner::tuner::models::{ModelP, ModelV};
 use ml2tuner::tuner::space::SearchSpace;
@@ -182,6 +182,7 @@ fn trained_models(kind: SpaceKind) -> (SearchSpace, ModelP, ModelV) {
             } else {
                 Outcome::Crash
             },
+            fidelity: Fidelity::Full,
         });
     }
     let p = ModelP::train(&db, 60, 1).unwrap();

@@ -1,0 +1,165 @@
+//! Multi-fidelity prescreen guarantees (ISSUE 8).
+//!
+//! 1. disabled prescreen values (0 and 1) share one code path: traces
+//!    are byte-identical across both spaces and all four registered
+//!    targets — together with `tests/space_golden.rs` /
+//!    `tests/target_golden.rs` (which pin the default config, now
+//!    carrying `prescreen_factor: 0`) this freezes cold traces against
+//!    the pre-multi-fidelity seed;
+//! 2. with the prescreen on, traces are deterministic and worker-count
+//!    invariant (tier-0 ranking is batched over the `--jobs` pool with
+//!    an ordered merge);
+//! 3. tier-0 estimates are consistent with the static capacity check
+//!    (Hopeless ⟺ statically impossible), so a statically-Hopeless
+//!    config can never out-rank a finite estimate — and a prescreened
+//!    run never spends full profiling on one;
+//! 4. on a pinned deterministic sample, finite tier-0 estimates
+//!    rank-concordant with full three-timeline timing well above
+//!    chance (the estimator's job is ordering, not cycle accuracy).
+
+use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::compiler::Compiler;
+use ml2tuner::engine::Engine;
+use ml2tuner::tuner::database::Outcome;
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::report::TuningTrace;
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::vta::coarse::{self, CoarseEstimate};
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::vta::targets;
+use ml2tuner::workloads::resnet18;
+
+fn trace_with(
+    env: &TuningEnv,
+    trials: usize,
+    seed: u64,
+    factor: usize,
+    engine: &Engine,
+) -> TuningTrace {
+    let cfg = TunerConfig {
+        max_trials: trials,
+        seed,
+        prescreen_factor: factor,
+        ..TunerConfig::default()
+    };
+    Ml2Tuner::new(cfg).tune_with(env, engine)
+}
+
+#[test]
+fn disabled_prescreen_values_share_one_code_path_everywhere() {
+    let layer = resnet18::layer("conv5").unwrap();
+    for name in targets::TARGET_NAMES {
+        let hw = targets::target(name).unwrap();
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let env = TuningEnv::with_space(hw.clone(), layer, kind);
+            let t0 = trace_with(&env, 24, 9, 0,
+                                &Engine::single_threaded());
+            let t1 = trace_with(&env, 24, 9, 1,
+                                &Engine::single_threaded());
+            assert_eq!(
+                format!("{:?}", t0.trials),
+                format!("{:?}", t1.trials),
+                "{name}/{}: factor 0 and 1 must both be the unmodified \
+                 single-fidelity path",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prescreened_traces_are_jobs_invariant_and_deterministic() {
+    let layer = resnet18::layer("conv5").unwrap();
+    let env = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        layer,
+        SpaceKind::Extended,
+    );
+    let t1 = trace_with(&env, 40, 5, 4, &Engine::with_jobs(1));
+    let t4 = trace_with(&env, 40, 5, 4, &Engine::with_jobs(4));
+    assert_eq!(
+        format!("{:?}", t1.trials),
+        format!("{:?}", t4.trials),
+        "prescreened traces must be worker-count invariant"
+    );
+    let again = trace_with(&env, 40, 5, 4, &Engine::with_jobs(1));
+    assert_eq!(
+        format!("{:?}", t1.trials),
+        format!("{:?}", again.trials),
+        "prescreened traces must replay byte-identically"
+    );
+}
+
+#[test]
+fn prescreened_runs_never_profile_statically_hopeless_configs() {
+    let layer = resnet18::layer("conv5").unwrap();
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let trace = trace_with(&env, 60, 5, 4, &Engine::single_threaded());
+    assert_eq!(trace.len(), 60);
+    let compiler = Compiler::new(env.hw().clone());
+    for t in &trace.trials {
+        assert!(
+            compiler.static_check(&env.layer, &t.schedule).is_plausible(),
+            "statically-Hopeless config survived the tier-0 prescreen \
+             into full profiling: {}",
+            t.schedule
+        );
+    }
+}
+
+#[test]
+fn coarse_estimates_match_static_check_and_rank_correlate_with_timing() {
+    let layer = resnet18::layer("conv5").unwrap();
+    let env = TuningEnv::new(VtaConfig::zcu102(), layer);
+    let compiler = Compiler::new(env.hw().clone());
+    let mut pts: Vec<(u64, u64)> = Vec::new(); // (tier-0, tier-1)
+    for i in (0..env.space.len()).step_by(7) {
+        let sched = env.space.schedule(i);
+        let plausible =
+            compiler.static_check(&env.layer, &sched).is_plausible();
+        match coarse::estimate(env.hw(), &env.layer, &sched) {
+            CoarseEstimate::Hopeless => assert!(
+                !plausible,
+                "tier-0 Hopeless but statically plausible: {sched}"
+            ),
+            CoarseEstimate::Cycles(c) => {
+                assert!(
+                    plausible,
+                    "finite tier-0 estimate for a statically impossible \
+                     config: {sched}"
+                );
+                assert!(c > 0);
+                if let Outcome::Valid { cycles } =
+                    env.profile(i).outcome
+                {
+                    pts.push((c, cycles));
+                }
+            }
+        }
+    }
+    assert!(
+        pts.len() >= 30,
+        "pinned sample too small to test concordance: {}",
+        pts.len()
+    );
+    let (mut agree, mut total) = (0usize, 0usize);
+    for a in 0..pts.len() {
+        for b in (a + 1)..pts.len() {
+            let (ca, ma) = pts[a];
+            let (cb, mb) = pts[b];
+            if ca == cb || ma == mb {
+                continue;
+            }
+            total += 1;
+            if (ca < cb) == (ma < mb) {
+                agree += 1;
+            }
+        }
+    }
+    let concordance = agree as f64 / total as f64;
+    assert!(
+        concordance > 0.55,
+        "tier-0 estimates must rank-correlate with full timing: \
+         concordance {concordance:.3} over {total} pairs"
+    );
+}

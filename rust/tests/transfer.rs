@@ -10,7 +10,7 @@ use ml2tuner::compiler::features;
 use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
 use ml2tuner::engine::{Engine, NetworkConfig, NetworkTuner, TunerKind};
 use ml2tuner::tuner::database::{
-    Database, LayerMeta, Outcome, TransferDb, TrialRecord,
+    Database, Fidelity, LayerMeta, Outcome, TransferDb, TrialRecord,
 };
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
@@ -27,6 +27,7 @@ fn rec(i: usize, outcome: Outcome) -> TrialRecord {
         visible: SpaceKind::Paper.visible_features(&schedule),
         hidden: vec![0.5; features::hidden_len(SpaceKind::Paper)],
         outcome,
+        fidelity: Fidelity::Full,
     }
 }
 
