@@ -2,7 +2,7 @@
 //! (the explorer scores the entire space every tuning round — predict
 //! throughput is the L3 hot path, see EXPERIMENTS.md §Perf).
 use ml2tuner::gbdt::{
-    Booster, Dataset, FeatureMatrix, GbdtParams, Objective,
+    Booster, Dataset, FeatureMatrix, GbdtParams, Objective, TrainOpts,
 };
 use ml2tuner::util::bench::Bench;
 use ml2tuner::util::rng::Rng;
@@ -27,21 +27,21 @@ fn main() {
     // in-loop retrain cost (ModelP during tuning: 120 rounds, depth 14)
     let p_loop = GbdtParams::model_p().with_rounds(120);
     b.run("train P (300 rows, 120 rounds)", || {
-        Booster::train(&p_loop, &d)
+        Booster::fit(&p_loop, &d, &TrainOpts::default())
     });
     let v = GbdtParams::model_v().with_rounds(120);
     b.run("train V (300 rows, 120 rounds)", || {
-        Booster::train(&v, &d)
+        Booster::fit(&v, &d, &TrainOpts::default())
     });
     let rank = GbdtParams::model_p()
         .with_rounds(60)
         .with_objective(Objective::RankPairwise);
     b.run("train rank:pairwise (300 rows, 60 rounds)", || {
-        Booster::train(&rank, &d)
+        Booster::fit(&rank, &d, &TrainOpts::default())
     });
 
     // batched predict: the explorer scores ~20k configs per round
-    let model = Booster::train(&p_loop, &d);
+    let model = Booster::fit(&p_loop, &d, &TrainOpts::default());
     let (space, _) = synth(20_000, 11, 2);
     b.run_items("predict 20k rows (Vec<f64> path)", 20_000.0, || {
         let mut acc = 0.0;

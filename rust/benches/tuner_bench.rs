@@ -10,9 +10,10 @@ use ml2tuner::obs::Recorder;
 use ml2tuner::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::score_candidates;
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
-use ml2tuner::tuner::models::{ModelP, ModelV};
+use ml2tuner::tuner::models::{FitOpts, ModelP, ModelV};
 use ml2tuner::tuner::random_baseline::RandomTuner;
 use ml2tuner::tuner::space::SearchSpace;
+use ml2tuner::tuner::train::{Provenance, TrainSet};
 use ml2tuner::tuner::tvm_baseline::TvmTuner;
 use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
 use ml2tuner::util::bench::Bench;
@@ -56,8 +57,13 @@ fn scoring_sweep(b: &mut Bench) {
             fidelity: Fidelity::Full,
         });
     }
-    let p = ModelP::train(&db, 60, 1).unwrap();
-    let v = ModelV::train(&db, 60, 1).unwrap();
+    let opts = FitOpts::new(60, 1);
+    let mut pset = TrainSet::new();
+    pset.extend_p(&db, Provenance::Cold);
+    let mut vset = TrainSet::new();
+    vset.extend_v(&db, Provenance::Cold);
+    let p = ModelP::fit(&pset, &opts).unwrap();
+    let v = ModelV::fit(&vset, &opts).unwrap();
     let idx: Vec<usize> = (0..400_000).collect();
     let n = idx.len() as f64;
     b.run_items("scoring-sweep legacy row-at-a-time", n, || {
@@ -137,6 +143,54 @@ fn coarse_vs_timing(b: &mut Bench) {
     );
 }
 
+/// The ISSUE-9 incremental-training rows: per-round P-model train cost
+/// at round-5/10/20 record counts (50/100/200 rows at the default 10
+/// trials per round), full 120-round refit vs warm continuation — the
+/// per-round plan appends `(boost_rounds/10).max(4) = 12` trees onto
+/// the previous round's booster instead of regrowing all 120. The
+/// acceptance gate reads the round-20 ratio off BENCH_9.json
+/// (target >=3x).
+fn continuation_vs_refit(b: &mut Bench) {
+    let layer = resnet18::layer("conv5").unwrap();
+    let space = SearchSpace::new(&layer);
+    let synth = |rows: usize| {
+        let stride = space.len() / rows;
+        let mut db = Database::new("conv5");
+        for k in 0..rows {
+            let i = k * stride;
+            let s = space.schedule(i);
+            let cycles = (1_000_000 / (s.tile_h * s.tile_w)
+                + 5_000 * s.n_vthreads) as u64;
+            db.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: space.visible(i),
+                hidden: vec![],
+                outcome: Outcome::Valid { cycles },
+                fidelity: Fidelity::Full,
+            });
+        }
+        let mut set = TrainSet::new();
+        set.extend_p(&db, Provenance::Cold);
+        set
+    };
+    for round in [5usize, 10, 20] {
+        let rows = round * 10;
+        // last round's model: a full fit on everything but the newest
+        // batch — what ModelState carries into this round
+        let prev = synth(rows - 10);
+        let base = ModelP::fit(&prev, &FitOpts::new(120, 7)).unwrap();
+        let set = synth(rows);
+        b.run(&format!("train P full refit (round {round}, {rows} rows)"),
+              || ModelP::fit(&set, &FitOpts::new(120, 7)));
+        b.run(
+            &format!("train P continuation (round {round}, {rows} rows)"),
+            || ModelP::fit(&set,
+                           &FitOpts::new(12, 7).with_base(&base.booster)),
+        );
+    }
+}
+
 /// Median-over-median speedups of the sweep rows (the ratios the PR-5
 /// acceptance gate reads off BENCH_5.json).
 fn print_sweep_speedups(b: &Bench) {
@@ -190,6 +244,26 @@ fn print_sweep_speedups(b: &Bench) {
             full * 1e9
         );
     }
+    // ISSUE-9 gate: warm continuation vs full refit per round
+    // (target >=3x at round 20)
+    for round in [5usize, 10, 20] {
+        let rows = round * 10;
+        if let (Some(full), Some(cont)) = (
+            median(&format!(
+                "train P full refit (round {round}, {rows} rows)"
+            )),
+            median(&format!(
+                "train P continuation (round {round}, {rows} rows)"
+            )),
+        ) {
+            println!(
+                "per-round train, continuation vs full refit at round \
+                 {round} ({rows} rows): {:.2}x faster{}",
+                full / cont,
+                if round == 20 { " (target >=3x)" } else { "" }
+            );
+        }
+    }
 }
 
 fn main() {
@@ -215,6 +289,7 @@ fn main() {
     }
     scoring_sweep(&mut b);
     coarse_vs_timing(&mut b);
+    continuation_vs_refit(&mut b);
     print!("{}", b.summary());
     print_sweep_speedups(&b);
     b.maybe_write_json("tuner_bench");

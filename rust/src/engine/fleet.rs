@@ -22,6 +22,7 @@
 //! for any worker count.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -30,6 +31,7 @@ use super::scheduler::{NetworkConfig, NetworkOutcome, NetworkTuner,
                        TunerKind};
 use crate::compiler::schedule::SpaceKind;
 use crate::tuner::database::TransferDb;
+use crate::tuner::meta::MetaArtifact;
 use crate::tuner::TunerConfig;
 use crate::util::table::Table;
 use crate::vta::config::VtaConfig;
@@ -62,6 +64,9 @@ pub struct FleetConfig {
     pub transfer: Option<TransferDb>,
     /// Max transferred records per layer.
     pub transfer_cap: usize,
+    /// Corpus-trained meta ensembles (`--meta`) shared by every
+    /// per-target run.
+    pub meta: Option<Arc<MetaArtifact>>,
 }
 
 impl Default for FleetConfig {
@@ -77,6 +82,7 @@ impl Default for FleetConfig {
             ucb_c: net.ucb_c,
             transfer: None,
             transfer_cap: net.transfer_cap,
+            meta: None,
         }
     }
 }
@@ -205,6 +211,7 @@ impl FleetTuner {
                     Some(store.clone())
                 },
                 transfer_cap: cfg.transfer_cap,
+                meta: cfg.meta.clone(),
             };
             let outcome = NetworkTuner::new(net_cfg).tune(engine, layers);
             // chain this target's logs as transfer sources for the next

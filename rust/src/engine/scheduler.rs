@@ -19,6 +19,7 @@
 //! outcomes, which the executor returns in batch order.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -26,6 +27,7 @@ use super::executor::Engine;
 use crate::compiler::schedule::{Schedule, SpaceKind};
 use crate::obs::{console, Stage};
 use crate::tuner::database::{Database, TransferDb};
+use crate::tuner::meta::MetaArtifact;
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{ml2tuner, salt, tvm_baseline, TunerConfig, TuningEnv};
@@ -90,6 +92,11 @@ pub struct LayerSession {
     /// Transferred records pre-training the ML² models (training-only —
     /// never profiled, never in the trace or the persisted log).
     warm: Option<Database>,
+    /// Corpus-trained base ensembles the ML² models adapt from
+    /// (training-only, like `warm`); shared across sessions.
+    meta: Option<Arc<MetaArtifact>>,
+    /// Carried-over boosters for incremental per-round continuation.
+    mstate: ml2tuner::ModelState,
     /// Per-trial tuning trace accumulated so far.
     pub trace: TuningTrace,
     rng: Rng,
@@ -104,8 +111,9 @@ impl LayerSession {
         let db =
             Database::for_layer_on(&env.layer, env.kind(), env.hw());
         let trace = TuningTrace::new(env.layer.name, kind.name());
-        LayerSession { env, cfg, kind, space, db, warm: None, trace, rng,
-                       round: 0 }
+        LayerSession { env, cfg, kind, space, db, warm: None, meta: None,
+                       mstate: ml2tuner::ModelState::default(), trace,
+                       rng, round: 0 }
     }
 
     /// Warm-start the session's models from a transferred database
@@ -117,11 +125,35 @@ impl LayerSession {
         if warm.is_empty() {
             return self;
         }
-        if self.kind == TunerKind::Ml2 {
-            self.trace.tuner = "ml2tuner-warm".to_string();
-        }
         self.warm = Some(warm);
+        self.relabel();
         self
+    }
+
+    /// Adapt the session's models from a corpus-trained meta artifact
+    /// (effective for the ML² policy; the baselines stay cold). Like
+    /// warm starts, meta ensembles only ever train models — they never
+    /// enter the trace or the persisted log.
+    pub fn with_meta(mut self, meta: Arc<MetaArtifact>) -> Self {
+        self.meta = Some(meta);
+        self.relabel();
+        self
+    }
+
+    /// Restamp the trace with the standalone tuner's name for the
+    /// current (warm, meta) combination.
+    fn relabel(&mut self) {
+        if self.kind != TunerKind::Ml2 {
+            return;
+        }
+        self.trace.tuner = match (self.warm.is_some(), self.meta.is_some())
+        {
+            (false, false) => "ml2tuner",
+            (true, false) => "ml2tuner-warm",
+            (false, true) => "ml2tuner-meta",
+            (true, true) => "ml2tuner-warm-meta",
+        }
+        .to_string();
     }
 
     /// Name of the layer this session tunes.
@@ -205,6 +237,7 @@ impl LayerSession {
                     let (batch, stats, coarse) = ml2tuner::select_batch(
                         &self.cfg, true, true, &self.env, engine,
                         &self.space, &self.db, self.warm.as_ref(),
+                        self.meta.as_deref(), Some(&mut self.mstate),
                         &mut self.rng, self.round, take,
                     );
                     // tier-0 estimates of pruned candidates train the
@@ -260,6 +293,9 @@ pub struct NetworkConfig {
     pub transfer: Option<TransferDb>,
     /// Max transferred records per layer.
     pub transfer_cap: usize,
+    /// Corpus-trained meta ensembles adapting every layer's models (the
+    /// `--meta` artifact for this run's space); `None` = cold start.
+    pub meta: Option<Arc<MetaArtifact>>,
 }
 
 impl Default for NetworkConfig {
@@ -274,6 +310,7 @@ impl Default for NetworkConfig {
             ucb_c: 0.5,
             transfer: None,
             transfer_cap: 400,
+            meta: None,
         }
     }
 }
@@ -419,8 +456,8 @@ impl NetworkTuner {
                     TuningEnv::with_space(cfg.vta.clone(), *layer,
                                           cfg.space),
                 );
-                // only the ML² policy consumes warm data — don't pay
-                // for similarity matching on the baseline kinds
+                // only the ML² policy consumes warm/meta data — don't
+                // pay for similarity matching on the baseline kinds
                 if cfg.tuner == TunerKind::Ml2 {
                     if let Some(store) = &cfg.transfer {
                         if let Some(warm) = store.warm_start_for(
@@ -429,6 +466,9 @@ impl NetworkTuner {
                         ) {
                             session = session.with_warm_start(warm);
                         }
+                    }
+                    if let Some(meta) = &cfg.meta {
+                        session = session.with_meta(Arc::clone(meta));
                     }
                 }
                 session

@@ -4,7 +4,7 @@
 
 use super::{data, ExpConfig};
 use crate::compiler::features::combined_features;
-use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::gbdt::{Booster, Dataset, GbdtParams, TrainOpts};
 use crate::tuner::database::TrialRecord;
 use crate::util::rng::Rng;
 use crate::util::stats::{geomean, mean, rmse};
@@ -38,13 +38,15 @@ pub fn rmse_pair(
     let xp: Vec<Vec<f64>> =
         tr.iter().map(|&i| valid[i].visible.clone()).collect();
     let yp: Vec<f64> = tr.iter().map(|&i| label(valid[i])).collect();
-    let p = Booster::train(&params, &Dataset::from_rows(&xp, &yp));
+    let p = Booster::fit(&params, &Dataset::from_rows(&xp, &yp),
+                         &TrainOpts::default());
     // model A: visible ⊕ hidden
     let xa: Vec<Vec<f64>> = tr
         .iter()
         .map(|&i| combined_features(&valid[i].visible, &valid[i].hidden))
         .collect();
-    let a = Booster::train(&params, &Dataset::from_rows(&xa, &yp));
+    let a = Booster::fit(&params, &Dataset::from_rows(&xa, &yp),
+                         &TrainOpts::default());
     let y_te: Vec<f64> = te.iter().map(|&i| label(valid[i])).collect();
     let pred_p: Vec<f64> = te
         .iter()

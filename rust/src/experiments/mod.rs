@@ -36,19 +36,23 @@ pub struct ExpConfig {
     /// Hardware target every harness profiles on (`--target`; default
     /// the paper's zcu102, so recorded numbers regenerate unchanged).
     pub hw: VtaConfig,
+    /// `experiment transfer --meta`: add a third arm that adapts from a
+    /// corpus-trained meta artifact built over the source-layer logs
+    /// (off by default so recorded numbers regenerate unchanged).
+    pub meta: bool,
 }
 
 impl ExpConfig {
     /// Full-scale knobs — what EXPERIMENTS.md records.
     pub fn full() -> Self {
         ExpConfig { repeats: 10, seed: 2024, quick: false,
-                    hw: VtaConfig::zcu102() }
+                    hw: VtaConfig::zcu102(), meta: false }
     }
 
     /// Shrunk knobs for integration tests and CI smoke runs.
     pub fn quick() -> Self {
         ExpConfig { repeats: 2, seed: 2024, quick: true,
-                    hw: VtaConfig::zcu102() }
+                    hw: VtaConfig::zcu102(), meta: false }
     }
 }
 

@@ -10,7 +10,9 @@ use std::time::Instant;
 
 use super::{data, ExpConfig};
 use crate::gbdt::booster::{binary_accuracy, pairwise_accuracy};
-use crate::gbdt::{Booster, Dataset, FeatureMatrix, GbdtParams, Objective};
+use crate::gbdt::{
+    Booster, Dataset, FeatureMatrix, GbdtParams, Objective, TrainOpts,
+};
 use crate::tuner::database::TrialRecord;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
@@ -95,9 +97,10 @@ pub fn run(cfg: &ExpConfig) -> String {
                 .with_rounds(rounds)
                 .with_objective(obj)
                 .with_seed(cfg.seed);
-            let b = Booster::train(
+            let b = Booster::fit(
                 &params,
                 &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
+                &TrainOpts::default(),
             );
             let preds = b
                 .flatten()
@@ -131,9 +134,10 @@ pub fn run(cfg: &ExpConfig) -> String {
                 .with_rounds(rounds)
                 .with_objective(obj)
                 .with_seed(cfg.seed);
-            let b = Booster::train(
+            let b = Booster::fit(
                 &params,
                 &Dataset::from_rows(&s.xs_tr, &s.ys_tr),
+                &TrainOpts::default(),
             );
             let preds = b
                 .flatten()

@@ -5,7 +5,7 @@
 use super::{data, ExpConfig};
 use crate::compiler::features::combined_names;
 use crate::compiler::schedule::SpaceKind;
-use crate::gbdt::{Booster, Dataset, GbdtParams};
+use crate::gbdt::{Booster, Dataset, GbdtParams, TrainOpts};
 use crate::tuner::database::TrialRecord;
 use crate::util::stats::geomean;
 use crate::util::table::{f, Table};
@@ -30,7 +30,8 @@ fn importance_for(records: &[TrialRecord], rounds: usize, seed: u64)
     let ys: Vec<f64> =
         valid.iter().map(|r| r.perf_label().unwrap()).collect();
     let params = GbdtParams::model_a().with_rounds(rounds).with_seed(seed);
-    let b = Booster::train(&params, &Dataset::from_rows(&xs, &ys));
+    let b = Booster::fit(&params, &Dataset::from_rows(&xs, &ys),
+                         &TrainOpts::default());
     Some(b.feature_importance())
 }
 

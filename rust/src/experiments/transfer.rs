@@ -15,10 +15,18 @@
 //! records satisfy the `min_train` gate), so the expected effect is the
 //! MetaTune one: same final quality, reached with a fraction of the
 //! profiled samples.
+//!
+//! With `--meta` a third arm is added: warm start *plus* a
+//! corpus-trained [`MetaArtifact`] built over the same source logs
+//! (what `train-meta` would produce offline). Its per-round fits adapt
+//! the meta ensembles instead of starting cold, so the comparison
+//! isolates what the meta base buys on top of transferred records.
 
 use super::ExpConfig;
+use crate::compiler::schedule::SpaceKind;
 use crate::engine::Engine;
 use crate::tuner::database::{Database, TransferDb};
+use crate::tuner::meta::{MetaArtifact, META_BOOST_ROUNDS};
 use crate::tuner::ml2tuner::Ml2Tuner;
 use crate::tuner::report::{average_curves, TuningTrace};
 use crate::tuner::{Tuner, TunerConfig, TuningEnv};
@@ -51,23 +59,31 @@ pub fn run(cfg: &ExpConfig) -> String {
             ..Default::default()
         };
         let trace = Ml2Tuner::new(t_cfg).tune_with(&env, &engine);
-        let mut db = Database::for_layer_on(
-            &layer, crate::compiler::schedule::SpaceKind::Paper, &cfg.hw,
-        );
+        let mut db =
+            Database::for_layer_on(&layer, SpaceKind::Paper, &cfg.hw);
         for r in &trace.trials {
             db.push(r.clone());
         }
         store.add(db);
     }
     let warm = store
-        .warm_start_for(&target, crate::compiler::schedule::SpaceKind::Paper,
-                        &cfg.hw, cap)
+        .warm_start_for(&target, SpaceKind::Paper, &cfg.hw, cap)
         .expect("sibling layers must transfer");
+    // the --meta arm's artifact: offline corpus training over the same
+    // source logs (exactly what `train-meta` on the banked dirs yields)
+    let meta = cfg.meta.then(|| {
+        let dbs: Vec<&Database> =
+            store.sources.iter().map(|d| d.as_ref()).collect();
+        let rounds =
+            if cfg.quick { 120 } else { META_BOOST_ROUNDS };
+        MetaArtifact::build(SpaceKind::Paper, &dbs, rounds)
+    });
 
     // -- 2. cold vs warm on the held-out layer, paired seeds --------------
     let env = TuningEnv::new(cfg.hw.clone(), target);
     let mut cold_runs: Vec<TuningTrace> = Vec::new();
     let mut warm_runs: Vec<TuningTrace> = Vec::new();
+    let mut meta_runs: Vec<TuningTrace> = Vec::new();
     for r in 0..cfg.repeats {
         let s = cfg.seed ^ (r as u64).wrapping_mul(0x9e37_79b9);
         let t_cfg = TunerConfig {
@@ -78,33 +94,48 @@ pub fn run(cfg: &ExpConfig) -> String {
         cold_runs
             .push(Ml2Tuner::new(t_cfg.clone()).tune_with(&env, &engine));
         warm_runs.push(
-            Ml2Tuner::new(t_cfg)
+            Ml2Tuner::new(t_cfg.clone())
                 .with_warm_start(warm.clone())
                 .tune_with(&env, &engine),
         );
+        if let Some(art) = &meta {
+            meta_runs.push(
+                Ml2Tuner::new(t_cfg)
+                    .with_warm_start(warm.clone())
+                    .with_meta(art.clone())
+                    .tune_with(&env, &engine),
+            );
+        }
     }
 
     // -- 3. report --------------------------------------------------------
     let mut out = format!(
-        "== transfer warm-start: cold vs warm on mobilenet/{TARGET_LAYER} \
-         ==\n(sources: {}; {} transferred records; {} repeats x {} \
-         trials)\n\n",
+        "== transfer warm-start: cold vs warm{} on \
+         mobilenet/{TARGET_LAYER} ==\n(sources: {}; {} transferred \
+         records; {} repeats x {} trials)\n\n",
+        if meta.is_some() { " vs warm+meta" } else { "" },
         SOURCE_LAYERS.join(", "),
         warm.len(),
         cfg.repeats,
         tgt_trials
     );
-    let cold_avg = average_curves(
-        &cold_runs.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
-    );
-    let warm_avg = average_curves(
-        &warm_runs.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
-    );
-    let mut t = Table::new(&[
+    let curve_avg = |runs: &[TuningTrace]| {
+        average_curves(
+            &runs.iter().map(|t| t.best_curve()).collect::<Vec<_>>(),
+        )
+    };
+    let cold_avg = curve_avg(&cold_runs);
+    let warm_avg = curve_avg(&warm_runs);
+    let meta_avg = meta.as_ref().map(|_| curve_avg(&meta_runs));
+    let mut headers = vec![
         "configs tested",
         "cold best (cycles)",
         "warm best (cycles)",
-    ]);
+    ];
+    if meta.is_some() {
+        headers.push("warm+meta best (cycles)");
+    }
+    let mut t = Table::new(&headers);
     let cell = |curve: &[f64], i: usize| {
         let v = curve.get(i).copied().unwrap_or(f64::INFINITY);
         if v.is_finite() { f(v, 0) } else { "-".to_string() }
@@ -112,68 +143,85 @@ pub fn run(cfg: &ExpConfig) -> String {
     let step = 10;
     let mut i = step - 1;
     while i < cold_avg.len().max(warm_avg.len()) {
-        t.row(&[
+        let mut row = vec![
             (i + 1).to_string(),
             cell(&cold_avg, i),
             cell(&warm_avg, i),
-        ]);
+        ];
+        if let Some(m) = &meta_avg {
+            row.push(cell(m, i));
+        }
+        t.row(&row);
         i += step;
     }
     out.push_str(&t.render());
 
-    // paired sample-efficiency: samples the warm run needs to match the
-    // cold run's final best, over the samples the cold run took to get
-    // there
-    let mut fracs = Vec::new();
-    let mut warm_wins = 0usize;
-    let mut reached = 0usize;
-    for (c, w) in cold_runs.iter().zip(&warm_runs) {
-        let Some(cold_best) = c.best_cycles() else { continue };
-        let cold_at = c.trials_to_reach(cold_best as f64).unwrap();
-        match w.trials_to_reach(cold_best as f64) {
-            Some(warm_at) => {
-                reached += 1;
-                if warm_at < cold_at {
-                    warm_wins += 1;
+    // paired sample-efficiency: samples an arm needs to match the cold
+    // run's final best, over the samples the cold run took to get there
+    let pair = |runs: &[TuningTrace]| {
+        let mut fracs = Vec::new();
+        let mut wins = 0usize;
+        let mut reached = 0usize;
+        for (c, w) in cold_runs.iter().zip(runs) {
+            let Some(cold_best) = c.best_cycles() else { continue };
+            let cold_at = c.trials_to_reach(cold_best as f64).unwrap();
+            match w.trials_to_reach(cold_best as f64) {
+                Some(at) => {
+                    reached += 1;
+                    if at < cold_at {
+                        wins += 1;
+                    }
+                    fracs.push(at as f64 / cold_at as f64);
                 }
-                fracs.push(warm_at as f64 / cold_at as f64);
+                None => fracs.push(f64::NAN),
             }
-            None => fracs.push(f64::NAN),
         }
+        (reached, wins, fracs)
+    };
+    let mut arm_line = |label: &str, runs: &[TuningTrace]| {
+        let (reached, wins, fracs) = pair(runs);
+        let finite: Vec<f64> =
+            fracs.iter().copied().filter(|v| v.is_finite()).collect();
+        if finite.is_empty() {
+            out.push_str(&format!(
+                "\n{label} runs never reached the cold best within \
+                 budget\n"
+            ));
+        } else {
+            out.push_str(&format!(
+                "\n{label} reaches the cold run's best cycles in {}/{} \
+                 repeats, using {:.1}% of the cold run's samples on \
+                 average ({label} strictly fewer in {}/{})\n",
+                reached,
+                cold_runs.len(),
+                100.0 * mean(&finite),
+                wins,
+                cold_runs.len(),
+            ));
+        }
+    };
+    arm_line("warm", &warm_runs);
+    if meta.is_some() {
+        arm_line("warm+meta", &meta_runs);
     }
-    let finite: Vec<f64> =
-        fracs.iter().copied().filter(|v| v.is_finite()).collect();
-    if finite.is_empty() {
-        out.push_str("\nwarm runs never reached the cold best within \
-                      budget\n");
-    } else {
-        out.push_str(&format!(
-            "\nwarm reaches the cold run's best cycles in {}/{} repeats, \
-             using {:.1}% of the cold run's samples on average \
-             (warm strictly fewer in {}/{})\n",
-            reached,
-            cold_runs.len(),
-            100.0 * mean(&finite),
-            warm_wins,
-            cold_runs.len(),
-        ));
-    }
-    let cold_final = mean(
-        &cold_runs
-            .iter()
-            .filter_map(|t| t.best_cycles().map(|c| c as f64))
-            .collect::<Vec<_>>(),
-    );
-    let warm_final = mean(
-        &warm_runs
-            .iter()
-            .filter_map(|t| t.best_cycles().map(|c| c as f64))
-            .collect::<Vec<_>>(),
-    );
+    let final_mean = |runs: &[TuningTrace]| {
+        mean(
+            &runs
+                .iter()
+                .filter_map(|t| t.best_cycles().map(|c| c as f64))
+                .collect::<Vec<_>>(),
+        )
+    };
     out.push_str(&format!(
         "final best (mean): cold {} vs warm {} cycles\n",
-        f(cold_final, 0),
-        f(warm_final, 0)
+        f(final_mean(&cold_runs), 0),
+        f(final_mean(&warm_runs), 0)
     ));
+    if meta.is_some() {
+        out.push_str(&format!(
+            "final best (mean), warm+meta: {} cycles\n",
+            f(final_mean(&meta_runs), 0)
+        ));
+    }
     out
 }

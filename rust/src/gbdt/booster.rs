@@ -1,11 +1,56 @@
 //! Gradient boosting driver + evaluation metrics.
+//!
+//! Training goes through exactly one entry point, [`Booster::fit`]: per-row
+//! weights, ranking groups, and warm continuation from a previously trained
+//! ensemble are composable [`TrainOpts`] rather than separate `train_*`
+//! methods. Continuation replays the base booster's subsampling RNG stream
+//! and rebuilds its margins tree-at-a-time, so appending `k` rounds to an
+//! `r`-round base on an unchanged dataset is bit-identical to training
+//! `r + k` rounds from scratch (pinned by tests here and in
+//! `tests/meta_training.rs`).
+
+use anyhow::{bail, Context, Result};
 
 use super::dataset::{BinnedDataset, Dataset};
 use super::flat::FlatEnsemble;
 use super::objective::Objective;
 use super::params::GbdtParams;
-use super::tree::{grow, GrowCfg, Tree};
+use super::tree::{grow, GrowCfg, Node, Tree};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Composable options for one [`Booster::fit`] call. The default is plain
+/// cold training: no weights, one ranking group, no continuation base.
+#[derive(Clone, Copy, Default)]
+pub struct TrainOpts<'a> {
+    /// Per-row sample weights: each row's gradient and hessian are scaled
+    /// by its weight, so a 0.25-weighted row pulls every split and leaf
+    /// value a quarter as hard as a full row (the multi-fidelity label
+    /// path — coarse tier-0 estimates train at
+    /// [`crate::tuner::database::COARSE_LABEL_WEIGHT`]). `None` is
+    /// bit-identical to all-ones.
+    pub weights: Option<&'a [f64]>,
+    /// Ranking query-group sizes (summing to `n_rows`); `None` ⇒ one group.
+    pub groups: Option<&'a [usize]>,
+    /// Warm-continuation base: keep its trees and `base_score`, append
+    /// `params.boost_rounds` new trees on top of its margins. All other
+    /// hyper-parameters (binning, depth, subsampling, seed) come from the
+    /// base so the appended trees see exactly the stream a longer fresh
+    /// run would have seen.
+    pub init: Option<&'a Booster>,
+}
+
+impl<'a> TrainOpts<'a> {
+    /// Cold training with per-row weights.
+    pub fn weighted(weights: Option<&'a [f64]>) -> Self {
+        TrainOpts { weights, ..Default::default() }
+    }
+
+    /// Continue from a previously trained ensemble.
+    pub fn continuing(base: &'a Booster) -> Self {
+        TrainOpts { init: Some(base), ..Default::default() }
+    }
+}
 
 /// A trained ensemble.
 #[derive(Clone, Debug)]
@@ -21,74 +66,90 @@ pub struct Booster {
 }
 
 impl Booster {
-    /// Train on `data` (optionally with ranking groups).
-    pub fn train(params: &GbdtParams, data: &Dataset) -> Booster {
-        Self::train_impl(params, data, None, None)
-    }
-
-    /// Train with per-row sample weights: each row's gradient and
-    /// hessian are scaled by its weight, so a 0.25-weighted row pulls
-    /// every split and leaf value a quarter as hard as a full row (the
-    /// multi-fidelity label path — coarse tier-0 estimates train at
-    /// [`crate::tuner::database::COARSE_LABEL_WEIGHT`]). `weights:
-    /// None` is bit-identical to [`Booster::train`].
-    pub fn train_weighted(
-        params: &GbdtParams,
-        data: &Dataset,
-        weights: Option<&[f64]>,
-    ) -> Booster {
-        Self::train_impl(params, data, None, weights)
-    }
-
-    /// Train with explicit ranking query groups (sizes summing to n_rows).
-    pub fn train_grouped(
-        params: &GbdtParams,
-        data: &Dataset,
-        groups: Option<&[usize]>,
-    ) -> Booster {
-        Self::train_impl(params, data, groups, None)
-    }
-
-    fn train_impl(
-        params: &GbdtParams,
-        data: &Dataset,
-        groups: Option<&[usize]>,
-        weights: Option<&[f64]>,
-    ) -> Booster {
+    /// Train on `data`. With `opts.init` set this is warm continuation:
+    /// the base's trees are kept, `params.boost_rounds` more are appended
+    /// (every other field of `params` is ignored in favor of the base's),
+    /// and on an unchanged dataset the result is bit-identical to a
+    /// from-scratch fit of the combined round count.
+    pub fn fit(params: &GbdtParams, data: &Dataset, opts: &TrainOpts) -> Booster {
         assert!(data.n_rows > 0, "empty training set");
-        if let Some(w) = weights {
+        if let Some(w) = opts.weights {
             assert_eq!(w.len(), data.n_rows, "one weight per row");
         }
-        let binned = BinnedDataset::bin(data, params.max_bins);
-        let mut rng = Rng::new(params.seed ^ 0x9bd1_77c3);
-        let base = params.objective.base_score(&data.labels);
+        static NO_TREES: &[Tree] = &[];
+        let (eff, base_trees, init_score) = match opts.init {
+            Some(b) => {
+                assert_eq!(
+                    b.n_features, data.n_features,
+                    "continuation base expects {} features, data has {}",
+                    b.n_features, data.n_features
+                );
+                let eff = GbdtParams {
+                    boost_rounds: params.boost_rounds,
+                    ..b.params.clone()
+                };
+                (eff, b.trees.as_slice(), Some(b.base_score))
+            }
+            None => (params.clone(), NO_TREES, None),
+        };
+        let binned = BinnedDataset::bin(data, eff.max_bins);
+        let mut rng = Rng::new(eff.seed ^ 0x9bd1_77c3);
+        let base = init_score
+            .unwrap_or_else(|| eff.objective.base_score(&data.labels));
         let mut preds = vec![base; data.n_rows];
+        // Continuation: replay the base's per-round subsampling draws so
+        // the appended rounds consume the stream from where a fresh
+        // `base + appended`-round run would, then rebuild the base's
+        // margins one tree at a time — the exact per-row adds training
+        // performed, so `preds` is bitwise what round `base_trees.len()`
+        // saw when the record set is unchanged.
+        for _ in 0..base_trees.len() {
+            if eff.subsample < 1.0 {
+                let k = ((data.n_rows as f64 * eff.subsample).ceil()
+                    as usize)
+                    .clamp(1, data.n_rows);
+                rng.sample_indices(data.n_rows, k);
+            }
+            if eff.colsample_bytree < 1.0 {
+                let k = ((data.n_features as f64 * eff.colsample_bytree)
+                    .ceil() as usize)
+                    .clamp(1, data.n_features);
+                rng.sample_indices(data.n_features, k);
+            }
+        }
+        for tree in base_trees {
+            FlatEnsemble::from_trees(data.n_features, 0.0,
+                                     std::slice::from_ref(tree))
+                .accumulate_dataset(data, &mut preds);
+        }
         let mut grad: Vec<f64> = Vec::new();
         let mut hess: Vec<f64> = Vec::new();
         let grow_cfg = GrowCfg {
-            max_depth: params.max_depth,
-            min_child_weight: params.min_child_weight,
-            gamma: params.gamma,
-            reg_alpha: params.reg_alpha,
-            reg_lambda: params.reg_lambda,
-            learning_rate: params.learning_rate,
+            max_depth: eff.max_depth,
+            min_child_weight: eff.min_child_weight,
+            gamma: eff.gamma,
+            reg_alpha: eff.reg_alpha,
+            reg_lambda: eff.reg_lambda,
+            learning_rate: eff.learning_rate,
         };
         let all_rows: Vec<u32> = (0..data.n_rows as u32).collect();
         let all_feats: Vec<u32> = (0..data.n_features as u32).collect();
-        let mut trees = Vec::with_capacity(params.boost_rounds);
-        for _round in 0..params.boost_rounds {
-            params.objective.grad_hess(
-                &preds, &data.labels, groups, &mut grad, &mut hess,
+        let mut trees = Vec::with_capacity(base_trees.len()
+            + eff.boost_rounds);
+        trees.extend_from_slice(base_trees);
+        for _round in 0..eff.boost_rounds {
+            eff.objective.grad_hess(
+                &preds, &data.labels, opts.groups, &mut grad, &mut hess,
             );
-            if let Some(w) = weights {
+            if let Some(w) = opts.weights {
                 for i in 0..data.n_rows {
                     grad[i] *= w[i];
                     hess[i] *= w[i];
                 }
             }
             // row subsampling
-            let rows: Vec<u32> = if params.subsample < 1.0 {
-                let k = ((data.n_rows as f64 * params.subsample).ceil()
+            let rows: Vec<u32> = if eff.subsample < 1.0 {
+                let k = ((data.n_rows as f64 * eff.subsample).ceil()
                     as usize)
                     .clamp(1, data.n_rows);
                 rng.sample_indices(data.n_rows, k)
@@ -99,9 +160,9 @@ impl Booster {
                 all_rows.clone()
             };
             // feature subsampling
-            let feats: Vec<u32> = if params.colsample_bytree < 1.0 {
+            let feats: Vec<u32> = if eff.colsample_bytree < 1.0 {
                 let k = ((data.n_features as f64
-                    * params.colsample_bytree)
+                    * eff.colsample_bytree)
                     .ceil() as usize)
                     .clamp(1, data.n_features);
                 rng.sample_indices(data.n_features, k)
@@ -121,7 +182,7 @@ impl Booster {
             trees.push(tree);
         }
         Booster {
-            params: params.clone(),
+            params: GbdtParams { boost_rounds: trees.len(), ..eff },
             base_score: base,
             trees,
             n_features: data.n_features,
@@ -172,6 +233,129 @@ impl Booster {
             }
         }
         gains
+    }
+
+    // -------------------------------------------------- serialization ---
+
+    /// Serialize the full ensemble (hyper-parameters, base score, trees)
+    /// for the meta-model artifact. Node fields round-trip exactly: the
+    /// JSON writer prints integral `f64`s as integers and everything else
+    /// with enough digits to re-parse bit-identically, and thresholds are
+    /// `f32` (exact in `f64`).
+    pub fn to_json(&self) -> Json {
+        let p = &self.params;
+        let mut pj = Json::obj();
+        pj.set("objective", p.objective.name())
+            .set("boost_rounds", p.boost_rounds as i64)
+            .set("max_depth", p.max_depth as i64)
+            .set("min_child_weight", p.min_child_weight)
+            .set("gamma", p.gamma)
+            .set("subsample", p.subsample)
+            .set("colsample_bytree", p.colsample_bytree)
+            .set("learning_rate", p.learning_rate)
+            .set("reg_alpha", p.reg_alpha)
+            .set("reg_lambda", p.reg_lambda)
+            .set("max_bins", p.max_bins as i64)
+            // decimal string: u64 seeds above 2^53 don't fit an f64
+            .set("seed", p.seed.to_string());
+        let trees: Vec<Json> = self
+            .trees
+            .iter()
+            .map(|t| {
+                Json::Arr(
+                    t.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::Arr(vec![
+                                Json::Num(n.feature as f64),
+                                Json::Num(n.threshold as f64),
+                                Json::Num(n.left as f64),
+                                Json::Num(n.right as f64),
+                                Json::Num(n.value),
+                                Json::Num(n.gain),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("params", pj)
+            .set("base_score", self.base_score)
+            .set("n_features", self.n_features as i64)
+            .set("trees", Json::Arr(trees));
+        j
+    }
+
+    /// Inverse of [`Booster::to_json`]. Strict: every hyper-parameter and
+    /// node field must be present and well-typed.
+    pub fn from_json(j: &Json) -> Result<Booster> {
+        let pj = j.get("params").context("booster missing 'params'")?;
+        let num = |k: &str| -> Result<f64> {
+            pj.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("booster params missing '{k}'"))
+        };
+        let objective = pj
+            .get("objective")
+            .and_then(Json::as_str)
+            .and_then(Objective::parse_name)
+            .context("booster params missing a known 'objective'")?;
+        let seed: u64 = pj
+            .get("seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse().ok())
+            .context("booster params missing decimal-string 'seed'")?;
+        let params = GbdtParams {
+            objective,
+            boost_rounds: num("boost_rounds")? as usize,
+            max_depth: num("max_depth")? as usize,
+            min_child_weight: num("min_child_weight")?,
+            gamma: num("gamma")?,
+            subsample: num("subsample")?,
+            colsample_bytree: num("colsample_bytree")?,
+            learning_rate: num("learning_rate")?,
+            reg_alpha: num("reg_alpha")?,
+            reg_lambda: num("reg_lambda")?,
+            max_bins: num("max_bins")? as usize,
+            seed,
+        };
+        let base_score = j
+            .get("base_score")
+            .and_then(Json::as_f64)
+            .context("booster missing 'base_score'")?;
+        let n_features = j
+            .get("n_features")
+            .and_then(Json::as_usize)
+            .context("booster missing 'n_features'")?;
+        let mut trees = Vec::new();
+        for tj in j
+            .get("trees")
+            .and_then(Json::as_arr)
+            .context("booster missing 'trees'")?
+        {
+            let njs = tj.as_arr().context("tree must be a node array")?;
+            let mut nodes = Vec::with_capacity(njs.len());
+            for nj in njs {
+                let a = nj.as_arr().context("node must be an array")?;
+                if a.len() != 6 {
+                    bail!("node must have 6 fields, got {}", a.len());
+                }
+                let f = |i: usize| -> Result<f64> {
+                    a[i].as_f64().context("non-numeric node field")
+                };
+                nodes.push(Node {
+                    feature: f(0)? as u32,
+                    threshold: f(1)? as f32,
+                    left: f(2)? as u32,
+                    right: f(3)? as u32,
+                    value: f(4)?,
+                    gain: f(5)?,
+                });
+            }
+            trees.push(Tree { nodes });
+        }
+        Ok(Booster { params, base_score, trees, n_features })
     }
 }
 
@@ -227,6 +411,10 @@ mod tests {
     use crate::gbdt::dataset::FeatureMatrix;
     use crate::util::stats;
 
+    fn cold(params: &GbdtParams, data: &Dataset) -> Booster {
+        Booster::fit(params, data, &TrainOpts::default())
+    }
+
     /// Batched predictions via the flattened layout (the replacement
     /// for the removed `Booster::predict(&[Vec<f64>])`).
     fn predict_all(b: &Booster, rows: &[Vec<f64>]) -> Vec<f64> {
@@ -256,7 +444,7 @@ mod tests {
             learning_rate: 0.2,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let (test_rows, test_labels) = synth_regression(200, 2);
         let preds = predict_all(&b, &test_rows);
         let rmse = stats::rmse(&preds, &test_labels);
@@ -282,7 +470,7 @@ mod tests {
             learning_rate: 0.3,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let preds = predict_all(&b, &rows);
         let acc = binary_accuracy(Objective::Logistic, &preds, &labels);
         assert!(acc > 0.95, "acc={acc}");
@@ -310,7 +498,7 @@ mod tests {
             learning_rate: 0.3,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let preds = predict_all(&b, &rows);
         let acc = binary_accuracy(Objective::Hinge, &preds, &labels);
         assert!(acc > 0.97, "acc={acc}");
@@ -332,7 +520,7 @@ mod tests {
             learning_rate: 0.2,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let preds = predict_all(&b, &rows);
         let acc = pairwise_accuracy(&preds, &labels);
         assert!(acc > 0.9, "pairwise acc={acc}");
@@ -351,7 +539,7 @@ mod tests {
             seed: 4,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let preds = predict_all(&b, &rows);
         let acc = pairwise_accuracy(&preds, &labels);
         assert!(acc > 0.93, "acc={acc}");
@@ -361,7 +549,7 @@ mod tests {
     fn importance_finds_the_signal_feature() {
         let (rows, labels) = synth_regression(400, 13);
         let d = Dataset::from_rows(&rows, &labels);
-        let b = Booster::train(
+        let b = cold(
             &GbdtParams { boost_rounds: 50, max_depth: 4,
                           learning_rate: 0.2, ..Default::default() },
             &d,
@@ -379,8 +567,8 @@ mod tests {
         let d = Dataset::from_rows(&rows, &labels);
         let p = GbdtParams { boost_rounds: 10, subsample: 0.7, seed: 9,
                              ..Default::default() };
-        let a = Booster::train(&p, &d);
-        let b = Booster::train(&p, &d);
+        let a = cold(&p, &d);
+        let b = cold(&p, &d);
         assert_eq!(predict_all(&a, &rows), predict_all(&b, &rows));
     }
 
@@ -394,7 +582,7 @@ mod tests {
             learning_rate: 0.2,
             ..Default::default()
         };
-        let b = Booster::train(&p, &d);
+        let b = cold(&p, &d);
         let batch = predict_all(&b, &rows);
         assert_eq!(batch.len(), rows.len());
         for (r, &s) in rows.iter().zip(&batch) {
@@ -408,8 +596,8 @@ mod tests {
         let d = Dataset::from_rows(&rows, &labels);
         let p = GbdtParams { boost_rounds: 40, max_depth: 4,
                              learning_rate: 0.2, ..Default::default() };
-        let plain = Booster::train(&p, &d);
-        let none = Booster::train_weighted(&p, &d, None);
+        let plain = cold(&p, &d);
+        let none = Booster::fit(&p, &d, &TrainOpts::weighted(None));
         let a = predict_all(&plain, &rows);
         let b = predict_all(&none, &rows);
         for (x, y) in a.iter().zip(&b) {
@@ -426,8 +614,8 @@ mod tests {
         let d2 = Dataset::from_rows(&rows2, &labels2);
         let mut w = vec![1.0; labels.len()];
         w.extend(std::iter::repeat(0.01).take(labels.len()));
-        let down = Booster::train_weighted(&p, &d2, Some(&w));
-        let uniform = Booster::train(&p, &d2);
+        let down = Booster::fit(&p, &d2, &TrainOpts::weighted(Some(&w)));
+        let uniform = cold(&p, &d2);
         let err = |b: &Booster| {
             stats::rmse(&predict_all(b, &rows), &labels)
         };
@@ -436,10 +624,123 @@ mod tests {
                 err(&down), err(&uniform));
     }
 
+    /// base(r) + continue(k) on the same dataset ≡ fresh train(r+k),
+    /// bitwise — both for the deterministic P/A-style parameters and for
+    /// V-style row/column subsampling (which needs the RNG-draw replay).
+    #[test]
+    fn continuation_matches_fresh_training_bitwise() {
+        let (rows, labels) = synth_regression(250, 29);
+        let d = Dataset::from_rows(&rows, &labels);
+        let shapes = [
+            GbdtParams { max_depth: 5, learning_rate: 0.2, seed: 6,
+                         ..Default::default() },
+            GbdtParams { max_depth: 4, learning_rate: 0.2,
+                         subsample: 0.6, colsample_bytree: 0.7, seed: 6,
+                         ..Default::default() },
+        ];
+        for p in shapes {
+            let base = cold(&p.clone().with_rounds(20), &d);
+            let cont = Booster::fit(&p.clone().with_rounds(15), &d,
+                                    &TrainOpts::continuing(&base));
+            let fresh = cold(&p.clone().with_rounds(35), &d);
+            assert_eq!(cont.trees.len(), 35);
+            assert_eq!(cont.base_score.to_bits(),
+                       fresh.base_score.to_bits());
+            for (a, b) in predict_all(&cont, &rows)
+                .iter()
+                .zip(&predict_all(&fresh, &rows))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "continuation must be bit-identical \
+                            (subsample={})", p.subsample);
+            }
+            // and continuation composes: two 5-round extensions on top
+            // of the 35-tree chain still match a fresh 45-round fit
+            let cont2 = Booster::fit(&p.clone().with_rounds(5), &d,
+                                     &TrainOpts::continuing(&cont));
+            let cont3 = Booster::fit(&p.clone().with_rounds(5), &d,
+                                     &TrainOpts::continuing(&cont2));
+            let fresh45 = cold(&p.clone().with_rounds(45), &d);
+            for (a, b) in predict_all(&cont3, &rows)
+                .iter()
+                .zip(&predict_all(&fresh45, &rows))
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Continuation keeps the base's `base_score` even when the labels
+    /// grew (the incremental per-round path: margins shift via appended
+    /// trees, not via a recomputed intercept).
+    #[test]
+    fn continuation_on_grown_data_appends_and_keeps_base_score() {
+        let (rows, labels) = synth_regression(120, 31);
+        let d = Dataset::from_rows(&rows, &labels);
+        let p = GbdtParams { boost_rounds: 12, max_depth: 4,
+                             learning_rate: 0.2, ..Default::default() };
+        let base = cold(&p, &d);
+        let (more_rows, more_labels) = synth_regression(40, 37);
+        let mut rows2 = rows.clone();
+        rows2.extend(more_rows);
+        let mut labels2 = labels.clone();
+        labels2.extend(more_labels);
+        let d2 = Dataset::from_rows(&rows2, &labels2);
+        let cont = Booster::fit(&p.clone().with_rounds(6), &d2,
+                                &TrainOpts::continuing(&base));
+        assert_eq!(cont.trees.len(), base.trees.len() + 6);
+        assert_eq!(cont.base_score.to_bits(), base.base_score.to_bits());
+        // the appended trees still reduce error on the grown set
+        let err = |b: &Booster| {
+            stats::rmse(&predict_all(b, &rows2), &labels2)
+        };
+        assert!(err(&cont) < err(&base),
+                "appended trees must fit the new rows: {} vs {}",
+                err(&cont), err(&base));
+    }
+
     #[test]
     fn pairwise_accuracy_bounds() {
         assert_eq!(pairwise_accuracy(&[1.0, 2.0], &[1.0, 2.0]), 1.0);
         assert_eq!(pairwise_accuracy(&[2.0, 1.0], &[1.0, 2.0]), 0.0);
         assert_eq!(pairwise_accuracy(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_identical() {
+        let (rows, labels) = synth_regression(150, 41);
+        let p = GbdtParams {
+            objective: Objective::Hinge,
+            boost_rounds: 25,
+            subsample: 0.6,
+            colsample_bytree: 0.6,
+            seed: u64::MAX - 7, // above 2^53: exercises the string seed
+            ..Default::default()
+        };
+        let labels01: Vec<f64> =
+            labels.iter().map(|&y| (y > 8.0) as u8 as f64).collect();
+        let b = cold(&p, &Dataset::from_rows(&rows, &labels01));
+        let text = b.to_json().to_string_pretty();
+        let back = Booster::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.params, b.params);
+        assert_eq!(back.n_features, b.n_features);
+        assert_eq!(back.trees, b.trees);
+        assert_eq!(back.base_score.to_bits(), b.base_score.to_bits());
+        for r in &rows {
+            assert_eq!(back.predict_row(r).to_bits(),
+                       b.predict_row(r).to_bits());
+        }
+        // and a deserialized base continues bit-identically
+        let cont_a = Booster::fit(&p.clone().with_rounds(5),
+                                  &Dataset::from_rows(&rows, &labels01),
+                                  &TrainOpts::continuing(&b));
+        let cont_b = Booster::fit(&p.clone().with_rounds(5),
+                                  &Dataset::from_rows(&rows, &labels01),
+                                  &TrainOpts::continuing(&back));
+        for r in &rows {
+            assert_eq!(cont_a.predict_row(r).to_bits(),
+                       cont_b.predict_row(r).to_bits());
+        }
     }
 }

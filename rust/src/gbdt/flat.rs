@@ -170,7 +170,7 @@ impl FlatEnsemble {
 
     /// Add this ensemble's tree contributions (no base score) to `out`
     /// over a dataset — the training-time margin-update path of
-    /// [`crate::gbdt::Booster::train_grouped`].
+    /// [`crate::gbdt::Booster::fit`].
     pub fn accumulate_dataset(&self, data: &Dataset, out: &mut [f64]) {
         assert_eq!(data.n_rows, out.len(), "row count");
         assert_eq!(data.n_features, self.n_features, "feature width");

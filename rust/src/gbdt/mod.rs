@@ -13,7 +13,12 @@
 //! * a flattened SoA inference layout ([`flat::FlatEnsemble`], built by
 //!   [`Booster::flatten`]) with a batched `predict` over a reusable
 //!   row-major [`dataset::FeatureMatrix`] — the explorer's scoring-sweep
-//!   hot path; outputs are bit-identical to the per-row walk.
+//!   hot path; outputs are bit-identical to the per-row walk;
+//! * one training entry point, [`Booster::fit`], whose [`TrainOpts`]
+//!   compose per-row weights, ranking groups, and warm continuation
+//!   (append rounds on top of a trained base — bit-identical to a longer
+//!   fresh fit when the record set is unchanged), plus JSON
+//!   serialization for the corpus-trained meta-model artifacts.
 
 pub mod booster;
 pub mod dataset;
@@ -22,7 +27,7 @@ pub mod objective;
 pub mod params;
 pub mod tree;
 
-pub use booster::Booster;
+pub use booster::{Booster, TrainOpts};
 pub use dataset::{Dataset, FeatureMatrix};
 pub use flat::FlatEnsemble;
 pub use objective::Objective;

@@ -22,6 +22,27 @@ pub fn sigmoid(x: f64) -> f64 {
 }
 
 impl Objective {
+    /// Stable identifier used by serialized model artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::SquaredError => "squared_error",
+            Objective::Logistic => "logistic",
+            Objective::Hinge => "hinge",
+            Objective::RankPairwise => "rank_pairwise",
+        }
+    }
+
+    /// Inverse of [`Objective::name`].
+    pub fn parse_name(name: &str) -> Option<Objective> {
+        match name {
+            "squared_error" => Some(Objective::SquaredError),
+            "logistic" => Some(Objective::Logistic),
+            "hinge" => Some(Objective::Hinge),
+            "rank_pairwise" => Some(Objective::RankPairwise),
+            _ => None,
+        }
+    }
+
     /// Initial raw prediction.
     pub fn base_score(&self, labels: &[f64]) -> f64 {
         match self {

@@ -22,6 +22,12 @@
 //!               [--trials N] [..tune-net flags..] [--out dir]
 //!               one network across a hardware fleet, one global budget;
 //!               smallest target first, logs chained as warm starts
+//! ml2tuner train-meta --corpus dir --out dir [--rounds N]
+//!               offline corpus training: fit base P/V/A ensembles over
+//!               a directory of accumulated tuning logs and write one
+//!               versioned artifact per space kind; the tune commands
+//!               and serve load them back with --meta <dir> and adapt
+//!               per round instead of fitting cold
 //! ml2tuner serve --schedule-db dir [--listen addr:port] [--workers N]
 //!               [--queue N] [--miss-trials N] [--seed S] [--jobs J]
 //!               [--transfer-from dir] [--metrics-out events.jsonl]
@@ -62,6 +68,7 @@ use ml2tuner::serve::{
     ServeConfig, SharedSink,
 };
 use ml2tuner::tuner::database::{Database, TransferDb};
+use ml2tuner::tuner::meta::{MetaArtifact, MetaStore, META_BOOST_ROUNDS};
 use ml2tuner::tuner::ml2tuner::Ml2Tuner;
 use ml2tuner::tuner::random_baseline::RandomTuner;
 use ml2tuner::tuner::report::{ProfilingCostModel, TuningTrace};
@@ -78,7 +85,8 @@ use ml2tuner::workloads::{self, resnet18, synth, ConvLayer, Network};
 /// next token as their argument (`tune --quiet --layer conv1` would
 /// otherwise read `--layer` fine but `tune --quiet events.jsonl` in
 /// `report` would eat the positional).
-const BOOL_FLAGS: &[&str] = &["quiet", "verbose", "numeric", "quick"];
+const BOOL_FLAGS: &[&str] =
+    &["quiet", "verbose", "numeric", "quick", "incremental"];
 
 /// Tiny flag parser: `--key value` pairs + positionals. `-v` is
 /// shorthand for `--verbose`.
@@ -176,6 +184,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(&args),
         "tune-net" => cmd_tune_net(&args),
         "tune-fleet" => cmd_tune_fleet(&args),
+        "train-meta" => cmd_train_meta(&args),
         "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
@@ -199,19 +208,25 @@ fn print_usage() {
          [--tuner ml2tuner|tvm|random]\n       [--trials N] [--seed S] \
          [--jobs J] [--space paper|extended]\n       [--v-margin M] \
          [--prescreen-factor K] [--db out.json] [--schedule-db dir]\n       \
-         [--transfer-from dir] [--metrics-out events.jsonl]\n  \
+         [--transfer-from dir] [--meta dir] [--incremental] \
+         [--retrain-every R]\n       [--metrics-out events.jsonl]\n  \
          tune-net [--network resnet18|vgg16|mobilenet|synth-gemm] \
          [--target T]\n       [--tuner ..] [--trials N] [--round N] \
          [--seed S] [--jobs J]\n       [--layers a,b,..] [--space \
          paper|extended] [--v-margin M] [--prescreen-factor K] \
          [--out dir]\n       \
          [--schedule-db dir] [--transfer-from dir] [--transfer-cap N]\n       \
+         [--meta dir] [--incremental] [--retrain-every R] \
          [--metrics-out f]\n  \
          tune-fleet --targets T1,T2,.. [--network N] [--trials N] \
          [--out dir]\n       [..tune-net flags..]\n  \
+         train-meta --corpus dir --out dir [--rounds N]   offline corpus \
+         training:\n       fit base P/V/A ensembles over accumulated \
+         tuning logs, one versioned\n       artifact per space kind \
+         (loaded back via --meta)\n  \
          serve --schedule-db dir [--listen addr:port] [--workers N] \
          [--queue N]\n       [--miss-trials N] [--seed S] [--jobs J] \
-         [--transfer-from dir]\n       [--metrics-out f]   \
+         [--transfer-from dir]\n       [--meta dir] [--metrics-out f]   \
          best-schedule query daemon (JSON lines)\n  \
          report <events.jsonl...>   aggregate --metrics-out telemetry\n  \
          simulate [--network N] --layer conv1 [--target T] --schedule \
@@ -219,7 +234,7 @@ fn print_usage() {
          validate [--layer conv1] [--samples N] [--seed S] [--space ..]\n  \
          experiment <fig2a|fig2b|fig3|fig4|fig5|table2|table4|table5|\
          headline|transfer|storm|fidelity|all> [--quick] [--repeats N] \
-         [--seed S] [--target T]\n\n\
+         [--seed S] [--target T] [--meta]\n\n\
          --network: a registered workload ({}); layer names are resolved\n\
         \x20       within it.\n\
          --target: a registered hardware target ({}); default zcu102 \
@@ -251,6 +266,17 @@ fn print_usage() {
          tune-net --out);\n        shape-similar layers warm-start the \
          models before the first batch\n        (knob values are \
          similarity-matched across space versions).\n\
+         --meta: directory of train-meta artifacts. Per-round fits \
+         adapt the\n        corpus-trained base ensembles (a few \
+         recalibrated trees) instead of\n        fitting cold, so the \
+         run is model-guided from its first batch.\n        `experiment \
+         transfer --meta` adds a warm+meta arm to that study.\n\
+         --incremental: per-round refits continue the previous round's \
+         boosters\n        (append a few trees on the grown record set) \
+         instead of refitting\n        from scratch; --retrain-every R \
+         forces a full refit every R rounds\n        (0 = never). \
+         Continuation on an unchanged prefix is bit-identical\n        \
+         to the full refit.\n\
          --schedule-db: persistent best-schedule store (one JSON file \
          per\n        layer-shape x codegen-signature x space key, \
          versioned, better-only\n        promotion). The tune commands \
@@ -510,6 +536,53 @@ fn transfer_arg(args: &Args, kind: TunerKind) -> Result<Option<TransferDb>> {
     Ok(Some(store))
 }
 
+/// Load the `--meta <dir>` artifact store, when given — like
+/// [`transfer_arg`], only for the policy that can adapt from it.
+fn meta_arg(args: &Args, kind: TunerKind) -> Result<Option<MetaStore>> {
+    let Some(dir) = args.get("meta") else {
+        return Ok(None);
+    };
+    if kind != TunerKind::Ml2 {
+        console::info(&format!(
+            "note: --meta only seeds the ml2tuner policy; {} runs cold",
+            kind.name()
+        ));
+        return Ok(None);
+    }
+    let store = MetaStore::load(dir)?;
+    console::info(&format!(
+        "meta store: {} artifact(s) from {dir}",
+        store.len()
+    ));
+    Ok(Some(store))
+}
+
+/// `--meta` narrowed to the one space the run searches: the artifact
+/// for that space kind, or a console note when the store has none.
+fn meta_for_space(
+    store: Option<MetaStore>,
+    space: SpaceKind,
+) -> Option<MetaArtifact> {
+    let mut store = store?;
+    match store.take_kind(space) {
+        Some(art) => {
+            console::info(&format!(
+                "meta: adapting from {} corpus records ({} space)",
+                art.records,
+                space.name()
+            ));
+            Some(art)
+        }
+        None => {
+            console::info(&format!(
+                "meta: no artifact for the {} space — starting cold",
+                space.name()
+            ));
+            None
+        }
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     // info reports the whole registry, so it reads no flags — but it
     // still errors on stray ones like every sibling command
@@ -584,7 +657,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
     expect_flags(args, &["network", "layer", "target", "tuner",
                          "trials", "seed", "jobs", "space", "v-margin",
                          "prescreen-factor", "db", "schedule-db",
-                         "transfer-from", "transfer-cap", "metrics-out",
+                         "transfer-from", "transfer-cap", "meta",
+                         "incremental", "retrain-every", "metrics-out",
                          "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let layer = layer_arg(args, net)?;
@@ -597,7 +671,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
         args.get_f64("v-margin", ml2tuner::tuner::DEFAULT_V_MARGIN)?;
     let prescreen_factor = args.get_usize("prescreen-factor", 0)?;
     let cfg = TunerConfig { seed, max_trials: trials, v_margin,
-                            prescreen_factor, ..Default::default() };
+                            prescreen_factor,
+                            incremental: args.has("incremental"),
+                            retrain_every:
+                                args.get_usize("retrain-every", 0)?,
+                            ..Default::default() };
     let env = TuningEnv::with_space(hw.clone(), layer, space);
     console::info(&format!(
         "target: {}   space: {} ({} configurations)",
@@ -609,6 +687,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let kind = TunerKind::parse(tuner_name)
         .ok_or_else(|| anyhow!("unknown tuner '{tuner_name}'"))?;
     let transfer = transfer_arg(args, kind)?;
+    let meta = meta_arg(args, kind)?;
     let mut tuner: Box<dyn Tuner> = match kind {
         TunerKind::Ml2 => {
             let mut t = Ml2Tuner::new(cfg);
@@ -629,6 +708,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
                         layer.name
                     )),
                 }
+            }
+            if let Some(art) = meta_for_space(meta, space) {
+                t = t.with_meta(art);
             }
             Box::new(t)
         }
@@ -712,6 +794,7 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
                          "round", "seed", "jobs", "layers", "space",
                          "v-margin", "prescreen-factor", "out",
                          "schedule-db", "transfer-from", "transfer-cap",
+                         "meta", "incremental", "retrain-every",
                          "metrics-out", "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let trials = args.get_usize("trials", 1000)?;
@@ -734,9 +817,14 @@ fn cmd_tune_net(args: &Args) -> Result<()> {
         total_trials: trials,
         round_trials: round,
         base: TunerConfig { seed, v_margin, prescreen_factor,
+                            incremental: args.has("incremental"),
+                            retrain_every:
+                                args.get_usize("retrain-every", 0)?,
                             ..Default::default() },
         transfer: transfer_arg(args, tuner)?,
         transfer_cap: args.get_usize("transfer-cap", 400)?,
+        meta: meta_for_space(meta_arg(args, tuner)?, space)
+            .map(Arc::new),
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
@@ -801,6 +889,7 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
                          "round", "seed", "jobs", "layers", "space",
                          "v-margin", "prescreen-factor", "out",
                          "schedule-db", "transfer-from", "transfer-cap",
+                         "meta", "incremental", "retrain-every",
                          "metrics-out", "quiet", "verbose"])?;
     let net = network_arg(args)?;
     let fleet_targets = targets_arg(args)?;
@@ -821,11 +910,16 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
         tuner,
         space,
         base: TunerConfig { seed, v_margin, prescreen_factor,
+                            incremental: args.has("incremental"),
+                            retrain_every:
+                                args.get_usize("retrain-every", 0)?,
                             ..Default::default() },
         total_trials: trials,
         round_trials: round,
         transfer: transfer_arg(args, tuner)?,
         transfer_cap: args.get_usize("transfer-cap", 400)?,
+        meta: meta_for_space(meta_arg(args, tuner)?, space)
+            .map(Arc::new),
         ..Default::default()
     };
     let engine = Engine::with_jobs(jobs);
@@ -903,6 +997,61 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ml2tuner train-meta`: offline corpus training. Ingest a directory
+/// of accumulated tuning logs, fit the base P/V/A ensembles per space
+/// kind at the full offline budget, and write one versioned artifact
+/// file per kind — what the tune commands and `serve` load back with
+/// `--meta <dir>`.
+fn cmd_train_meta(args: &Args) -> Result<()> {
+    expect_flags(args, &["corpus", "out", "rounds", "quiet",
+                         "verbose"])?;
+    let corpus_dir = args
+        .get("corpus")
+        .ok_or_else(|| anyhow!("train-meta requires --corpus <dir>"))?;
+    let out_dir = args
+        .get("out")
+        .ok_or_else(|| anyhow!("train-meta requires --out <dir>"))?;
+    let rounds = args.get_usize("rounds", META_BOOST_ROUNDS)?;
+    let corpus = TransferDb::load_dir(corpus_dir)?;
+    if corpus.is_empty() {
+        bail!("--corpus {corpus_dir}: no tuning logs found");
+    }
+    let skipped = if corpus.skipped > 0 {
+        format!(" ({} unparseable files skipped)", corpus.skipped)
+    } else {
+        String::new()
+    };
+    console::info(&format!(
+        "corpus: {} layer logs, {} records{skipped} from {corpus_dir}",
+        corpus.n_layers(),
+        corpus.total_records()
+    ));
+    let store = MetaStore::build_with(&corpus, rounds);
+    if store.is_empty() {
+        bail!(
+            "corpus produced no trainable meta ensembles (need at \
+             least 2 perf-labelled records of one space kind)"
+        );
+    }
+    let paths = store.save(out_dir)?;
+    for (kind, art) in store.iter() {
+        console::result(&format!(
+            "meta[{kind}]: {} source logs, {} records -> P {}, A {}, \
+             {} V bucket(s)",
+            art.sources,
+            art.records,
+            if art.p.is_some() { "yes" } else { "no" },
+            if art.a.is_some() { "yes" } else { "no" },
+            art.v.len()
+        ));
+    }
+    console::info(&format!(
+        "{} artifact file(s) written to {out_dir}/",
+        paths.len()
+    ));
+    Ok(())
+}
+
 /// `ml2tuner serve`: long-running tuning-as-a-service daemon over a
 /// `--schedule-db` store. Protocol responses go to stdout (or the TCP
 /// client); all daemon status chatter goes to stderr so the stdio
@@ -910,7 +1059,7 @@ fn cmd_tune_fleet(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     expect_flags(args, &["schedule-db", "listen", "workers", "queue",
                          "miss-trials", "seed", "jobs", "transfer-from",
-                         "transfer-cap", "metrics-out", "quiet",
+                         "transfer-cap", "meta", "metrics-out", "quiet",
                          "verbose"])?;
     let dir = args
         .get("schedule-db")
@@ -943,6 +1092,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(store)
         }
     };
+    // --meta likewise narrates on stderr only
+    let meta = match args.get("meta") {
+        None => None,
+        Some(mdir) => {
+            let store = MetaStore::load(mdir)?;
+            eprintln!(
+                "ml2tuner serve: meta store: {} artifact(s) from {mdir}",
+                store.len()
+            );
+            Some(store)
+        }
+    };
     let cfg = ServeConfig {
         workers: args.get_usize("workers", 2)?.max(1),
         queue_cap: args.get_usize("queue", 16)?.max(1),
@@ -951,6 +1112,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         jobs: args.get_usize("jobs", 1)?.max(1),
         transfer,
         transfer_cap: args.get_usize("transfer-cap", 400)?,
+        meta,
     };
     eprintln!(
         "ml2tuner serve: {} workers, queue {}, {} miss trials",
@@ -1158,7 +1320,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
-    expect_flags(args, &["quick", "repeats", "seed", "target"])?;
+    expect_flags(args, &["quick", "repeats", "seed", "target", "meta"])?;
     let id = args
         .positional
         .first()
@@ -1172,6 +1334,18 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     cfg.repeats = args.get_usize("repeats", cfg.repeats)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.hw = target_arg(args)?;
+    // --meta is a value flag elsewhere (tune --meta <dir>), so the
+    // parser swallows a following bare token; insist it was used as a
+    // bare switch here rather than eating the experiment id
+    cfg.meta = match args.get("meta") {
+        None => false,
+        Some("true") => true,
+        Some("false") => false,
+        Some(v) => bail!(
+            "--meta takes no value for `experiment` (got '{v}'); place \
+             it after the experiment id"
+        ),
+    };
     if id == "all" {
         for id in experiments::ALL {
             experiments::run(id, &cfg)?;

@@ -60,10 +60,15 @@ pub enum Counter {
     /// Prescreened candidates that survived the tier-0 cut and went on
     /// to full profiling.
     PrescreenSurvivors,
+    /// Trees appended by warm-continuation fits (incremental per-round
+    /// training and meta adaptation) instead of full refits.
+    TreesAppended,
+    /// Model fits that adapted a corpus-trained meta base (`--meta`).
+    MetaAdapted,
 }
 
 /// Number of [`Counter`] variants (array sizing).
-pub const N_COUNTERS: usize = 15;
+pub const N_COUNTERS: usize = 17;
 
 impl Counter {
     /// Every counter, in `run_end` emission order.
@@ -83,6 +88,8 @@ impl Counter {
         Counter::ServeJobsRejected,
         Counter::CandidatesPrescreened,
         Counter::PrescreenSurvivors,
+        Counter::TreesAppended,
+        Counter::MetaAdapted,
     ];
 
     /// Stable snake_case name (the `run_end` event key).
@@ -103,6 +110,8 @@ impl Counter {
             Counter::ServeJobsRejected => "serve_jobs_rejected",
             Counter::CandidatesPrescreened => "candidates_prescreened",
             Counter::PrescreenSurvivors => "prescreen_survivors",
+            Counter::TreesAppended => "trees_appended",
+            Counter::MetaAdapted => "meta_adapted",
         }
     }
 }

@@ -242,6 +242,11 @@ pub struct Report {
     pub survivors: u64,
     /// Parallel sweep chunks dispatched.
     pub sweep_chunks: u64,
+    /// Trees appended by warm-continuation fits (incremental training
+    /// and meta adaptation) — from `run_end` trailers; 0 on old logs.
+    pub trees_appended: u64,
+    /// Model fits that adapted a corpus-trained meta base (`--meta`).
+    pub meta_adapted: u64,
     /// Compile-cache hits.
     pub cache_hits: u64,
     /// Compile-cache misses.
@@ -309,6 +314,14 @@ impl Report {
         }
         self.cache_hits += num(j, "compile_cache_hits")?;
         self.cache_misses += num(j, "compile_cache_misses")?;
+        // incremental-training counters: absent on pre-meta logs, which
+        // must keep validating, so both are optional reads
+        if j.get("trees_appended").is_some() {
+            self.trees_appended += num(j, "trees_appended")?;
+        }
+        if j.get("meta_adapted").is_some() {
+            self.meta_adapted += num(j, "meta_adapted")?;
+        }
         Ok(())
     }
 
@@ -378,6 +391,13 @@ impl Report {
                     * 100.0,
                 fmt_ns(self.prescreen_ns),
                 fmt_ns(self.profile_ns),
+            ));
+        }
+        if self.trees_appended > 0 || self.meta_adapted > 0 {
+            out.push_str(&format!(
+                "incremental training: {} trees appended by \
+                 continuation; {} meta-adapted fits\n",
+                self.trees_appended, self.meta_adapted,
             ));
         }
 

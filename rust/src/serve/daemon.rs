@@ -35,6 +35,7 @@
 //! The daemon's own status chatter goes to *stderr*: on stdio
 //! transport, stdout belongs to the response protocol.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufWriter, Write};
 use std::net::TcpListener;
 use std::path::Path;
@@ -50,6 +51,7 @@ use crate::serve::schedule_db::{
     fnv64, ScheduleDb, ScheduleEntry, ScheduleKey,
 };
 use crate::tuner::database::TransferDb;
+use crate::tuner::meta::{MetaArtifact, MetaStore};
 use crate::tuner::{TunerConfig, TuningEnv};
 use crate::util::json::Json;
 
@@ -72,6 +74,11 @@ pub struct ServeConfig {
     pub transfer: Option<TransferDb>,
     /// Warm-start record cap per job (`--transfer-cap`).
     pub transfer_cap: usize,
+    /// Meta artifacts loaded at startup (`--meta`); each job adapts
+    /// from the artifact matching its query's space. Like warm starts,
+    /// a startup-only input, so job results stay arrival-order
+    /// independent.
+    pub meta: Option<MetaStore>,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +91,7 @@ impl Default for ServeConfig {
             jobs: 1,
             transfer: None,
             transfer_cap: 400,
+            meta: None,
         }
     }
 }
@@ -146,6 +154,9 @@ pub struct Daemon {
     recorder: Arc<Recorder>,
     cache: Arc<CompileCache>,
     metrics: Option<SharedSink>,
+    /// `cfg.meta` re-wrapped per space kind so each job can share the
+    /// artifact without cloning the ensembles.
+    meta: BTreeMap<&'static str, Arc<MetaArtifact>>,
 }
 
 impl Daemon {
@@ -158,7 +169,16 @@ impl Daemon {
             ecfg.max_cache_cost,
             Arc::clone(&recorder),
         ));
-        Daemon { cfg, db, recorder, cache, metrics: None }
+        let meta = cfg
+            .meta
+            .as_ref()
+            .map(|s| {
+                s.iter()
+                    .map(|(k, a)| (k, Arc::new(a.clone())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Daemon { cfg, db, recorder, cache, metrics: None, meta }
     }
 
     /// Attach a JSONL metrics stream; every tuning job emits its
@@ -324,6 +344,9 @@ impl Daemon {
             ) {
                 session = session.with_warm_start(warm);
             }
+        }
+        if let Some(art) = self.meta.get(q.space.name()) {
+            session = session.with_meta(Arc::clone(art));
         }
         let trials_run = session.step(&engine, trials);
         job_recorder.emit_run_end();

@@ -307,120 +307,6 @@ impl Database {
         self.records.iter().filter(|r| r.outcome.is_valid()).count()
     }
 
-    /// Training set for P: visible features of *full-fidelity valid*
-    /// records only (the paper trains P exclusively on valid
-    /// configurations; coarse estimates join only through the weighted
-    /// view, [`Database::train_p_tiered`]).
-    pub fn train_p(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
-        for r in &self.records {
-            if r.fidelity != Fidelity::Full {
-                continue;
-            }
-            if let Some(y) = r.perf_label() {
-                xs.push(r.visible.clone());
-                ys.push(y);
-            }
-        }
-        (xs, ys)
-    }
-
-    /// Weighted P training set across fidelity tiers: full-fidelity
-    /// valid records at weight 1.0 plus coarse-estimate records at
-    /// [`COARSE_LABEL_WEIGHT`]. The weight vector is `None` when the
-    /// database holds no coarse record — in that case `(xs, ys)` is
-    /// exactly [`Database::train_p`] and the unweighted training path
-    /// runs bit-identically.
-    pub fn train_p_tiered(
-        &self,
-    ) -> (Vec<Vec<f64>>, Vec<f64>, Option<Vec<f64>>) {
-        if !self.records.iter().any(|r| r.fidelity == Fidelity::Coarse) {
-            let (xs, ys) = self.train_p();
-            return (xs, ys, None);
-        }
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
-        let mut ws = Vec::new();
-        for r in &self.records {
-            if let Some(y) = r.perf_label() {
-                xs.push(r.visible.clone());
-                ys.push(y);
-                ws.push(match r.fidelity {
-                    Fidelity::Full => 1.0,
-                    Fidelity::Coarse => COARSE_LABEL_WEIGHT,
-                });
-            }
-        }
-        (xs, ys, Some(ws))
-    }
-
-    /// Training set for V: visible features of all *full-fidelity*
-    /// records plus coarse *invalid* records, label = validity. A
-    /// tier-0 "valid" is only a plausibility estimate and must not
-    /// teach V the config actually runs; a tier-0 invalid comes from
-    /// the static capacity check, which is a sound subset of
-    /// runtime-invalid, so it is a real label.
-    pub fn train_v(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let trains_v = |r: &&TrialRecord| {
-            r.fidelity == Fidelity::Full || !r.outcome.is_valid()
-        };
-        let xs = self
-            .records
-            .iter()
-            .filter(trains_v)
-            .map(|r| r.visible.clone())
-            .collect();
-        let ys = self
-            .records
-            .iter()
-            .filter(trains_v)
-            .map(|r| r.valid_label())
-            .collect();
-        (xs, ys)
-    }
-
-    /// Training set for A: visible ⊕ hidden features of valid records.
-    /// Records without hidden features (e.g. transferred from a space
-    /// version whose hidden layout cannot be projected onto this one)
-    /// are skipped — they still train P and V, which are visible-only.
-    /// Coarse records never compile, so they carry no hidden features
-    /// and the same skip keeps tier-0 estimates out of A.
-    pub fn train_a(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
-        for r in &self.records {
-            if r.hidden.is_empty() {
-                continue;
-            }
-            if let Some(y) = r.perf_label() {
-                xs.push(crate::compiler::features::combined_features(
-                    &r.visible, &r.hidden,
-                ));
-                ys.push(y);
-            }
-        }
-        (xs, ys)
-    }
-
-    /// TVM-approach training set: all *full-fidelity* records; invalid
-    /// ones get a penalty label (worst observed + 1, i.e. "slower than
-    /// anything seen"). The TVM baseline never prescreens, but a log
-    /// replayed through this view could carry coarse records — they
-    /// are estimates, not measurements, and are excluded.
-    pub fn train_p_with_penalty(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let full = || {
-            self.records.iter().filter(|r| r.fidelity == Fidelity::Full)
-        };
-        let worst = full()
-            .filter_map(|r| r.perf_label())
-            .fold(f64::NEG_INFINITY, f64::max);
-        let penalty = if worst.is_finite() { worst + 1.0 } else { 30.0 };
-        let xs = full().map(|r| r.visible.clone()).collect();
-        let ys = full().map(|r| r.perf_label().unwrap_or(penalty)).collect();
-        (xs, ys)
-    }
-
     /// Best valid cycles so far, *measured* records only — a coarse
     /// estimate must never masquerade as a run's best.
     pub fn best_cycles(&self) -> Option<u64> {
@@ -734,7 +620,8 @@ impl TransferDb {
     /// were already skipped at load). Hidden features transfer when the
     /// source layout covers the target's (extended ⊇ paper: truncated);
     /// otherwise they are cleared — such records still pre-train the
-    /// visible-only P and V, and [`Database::train_a`] skips them.
+    /// visible-only P and V, and [`crate::tuner::train::TrainSet::extend_a`]
+    /// skips them.
     ///
     /// Returns `None` when nothing transfers. The returned database's
     /// `space_index` values refer to the *source* layers' spaces and are
@@ -884,24 +771,15 @@ mod tests {
     }
 
     #[test]
-    fn training_set_views() {
+    fn counts_and_best_cycles() {
+        // (the per-model training views live in `tuner::train` now —
+        // see its tests for the row-assembly semantics)
         let mut db = Database::new("conv1");
         db.push(rec(0, Outcome::Valid { cycles: 1024 }));
         db.push(rec(1, Outcome::Crash));
         db.push(rec(2, Outcome::Valid { cycles: 2048 }));
         db.push(rec(3, Outcome::WrongOutput));
         assert_eq!(db.n_valid(), 2);
-        let (xs, ys) = db.train_p();
-        assert_eq!(xs.len(), 2);
-        assert_eq!(ys, vec![10.0, 11.0]); // log2
-        let (xv, yv) = db.train_v();
-        assert_eq!(xv.len(), 4);
-        assert_eq!(yv, vec![1.0, 0.0, 1.0, 0.0]);
-        let (xa, _) = db.train_a();
-        assert_eq!(xa[0].len(), rec(0, Outcome::Crash).visible.len() + 3);
-        let (_, yp) = db.train_p_with_penalty();
-        assert_eq!(yp.len(), 4);
-        assert_eq!(yp[1], 12.0); // worst (11) + 1
         assert_eq!(db.best_cycles(), Some(1024));
     }
 
@@ -1087,7 +965,7 @@ mod tests {
     fn foreign_hidden_layouts_transfer_as_visible_only_records() {
         // a record whose hidden vector cannot be projected onto the
         // target layout still pre-trains the visible-only P and V; its
-        // hidden features are cleared so train_a skips it
+        // hidden features are cleared so the A-view skips it
         let pw5 = crate::workloads::mobilenet::layer("pw5").unwrap();
         let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
         let mut src = Database::for_layer(&pw4);
@@ -1099,10 +977,13 @@ mod tests {
                                  &VtaConfig::zcu102(), 10).unwrap();
         assert_eq!(warm.len(), 1);
         assert!(warm.records[0].hidden.is_empty());
-        let (xa, _) = warm.train_a();
-        assert!(xa.is_empty(), "A must not train on cleared hidden");
-        let (xp, _) = warm.train_p();
-        assert_eq!(xp.len(), 1, "P still trains on the record");
+        use crate::tuner::train::{Provenance, TrainSet};
+        let mut a = TrainSet::new();
+        a.extend_a(&warm, Provenance::Warm);
+        assert!(a.is_empty(), "A must not train on cleared hidden");
+        let mut p = TrainSet::new();
+        p.extend_p(&warm, Provenance::Warm);
+        assert_eq!(p.len(), 1, "P still trains on the record");
     }
 
     #[test]
@@ -1231,7 +1112,8 @@ mod tests {
         // valid labels whose big-tile half is impossible on edge-small.
         // After transfer, a model V trained on the warm database alone
         // must veto the impossible region at the default margin.
-        use crate::tuner::models::ModelV;
+        use crate::tuner::models::{FitOpts, ModelV};
+        use crate::tuner::train::{Provenance, TrainSet};
         use crate::tuner::DEFAULT_V_MARGIN;
         let conv1 = crate::workloads::resnet18::layer("conv1").unwrap();
         let edge = VtaConfig::edge_small();
@@ -1275,7 +1157,9 @@ mod tests {
             assert_eq!(r.outcome.is_valid(), r.schedule.tile_h < 7,
                        "th={} label", r.schedule.tile_h);
         }
-        let v = ModelV::train(&warm, 80, 1).unwrap();
+        let mut set = TrainSet::new();
+        set.extend_v(&warm, Provenance::Warm);
+        let v = ModelV::fit(&set, &FitOpts::new(80, 1)).unwrap();
         let feats = |th: usize| {
             let s = Schedule { tile_h: th, tile_w: 28, tile_oc: 16,
                                tile_ic: 64, n_vthreads: 1,
@@ -1341,41 +1225,11 @@ mod tests {
     }
 
     #[test]
-    fn training_views_respect_fidelity_tiers() {
+    fn best_cycles_never_reads_a_coarse_estimate() {
         let mut db = Database::new("conv1");
         db.push(rec(0, Outcome::Valid { cycles: 1024 }));
-        db.push(rec(1, Outcome::Crash));
-        db.push(coarse_rec(2, Outcome::Valid { cycles: 2048 }));
-        db.push(coarse_rec(3, Outcome::Crash));
-        // P: full valid only
-        let (xp, yp) = db.train_p();
-        assert_eq!((xp.len(), yp[0]), (1, 10.0));
-        // tiered P: both valids, the coarse one down-weighted
-        let (xt, yt, wt) = db.train_p_tiered();
-        assert_eq!(xt.len(), 2);
-        assert_eq!(yt, vec![10.0, 11.0]);
-        assert_eq!(wt, Some(vec![1.0, COARSE_LABEL_WEIGHT]));
-        // V: full records + coarse invalid; coarse "valid" is only a
-        // plausibility estimate and is excluded
-        let (xv, yv) = db.train_v();
-        assert_eq!(xv.len(), 3);
-        assert_eq!(yv, vec![1.0, 0.0, 0.0]);
-        // TVM penalty view: full records only
-        let (xpen, _) = db.train_p_with_penalty();
-        assert_eq!(xpen.len(), 2);
-        // best-so-far never reads a coarse estimate
+        db.push(coarse_rec(2, Outcome::Valid { cycles: 16 }));
         assert_eq!(db.best_cycles(), Some(1024));
-    }
-
-    #[test]
-    fn tiered_weights_absent_without_coarse_records() {
-        let mut db = Database::new("conv1");
-        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
-        db.push(rec(1, Outcome::Valid { cycles: 2048 }));
-        let (xs, ys, ws) = db.train_p_tiered();
-        assert!(ws.is_none(), "no coarse records -> unweighted path");
-        let (xp, yp) = db.train_p();
-        assert_eq!((xs, ys), (xp, yp));
     }
 
     #[test]

@@ -374,6 +374,8 @@ mod tests {
     use super::*;
     use crate::compiler::schedule::Schedule;
     use crate::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
+    use crate::tuner::models::FitOpts;
+    use crate::tuner::train::{Provenance, TrainSet};
     use crate::workloads::resnet18;
 
     /// Train P/V on a synthetic labelling of the real conv5 space.
@@ -399,8 +401,13 @@ mod tests {
                 fidelity: Fidelity::Full,
             });
         }
-        let p = ModelP::train(&db, 60, 1).unwrap();
-        let v = ModelV::train(&db, 60, 1).unwrap();
+        let opts = FitOpts::new(60, 1);
+        let mut pset = TrainSet::new();
+        pset.extend_p(&db, Provenance::Cold);
+        let mut vset = TrainSet::new();
+        vset.extend_v(&db, Provenance::Cold);
+        let p = ModelP::fit(&pset, &opts).unwrap();
+        let v = ModelV::fit(&vset, &opts).unwrap();
         (space, p, v)
     }
 

@@ -1,0 +1,565 @@
+//! Corpus-trained meta cost models (`train-meta` / `--meta`).
+//!
+//! Every tuning run persists its log; over time a `--db` directory
+//! accumulates a *corpus* — many layers, many targets, both knob spaces.
+//! `train-meta` ingests the whole corpus ([`TransferDb::load_dir`]) and
+//! fits **base** P/V/A ensembles offline, serialized as one versioned
+//! JSON artifact per space kind (`meta_paper.json` /
+//! `meta_extended.json`). A later `tune --meta <dir>` loads the artifact
+//! for its space and hands the ensembles to the selection loop as
+//! continuation bases: the run is model-guided from round 1 (no
+//! `min_train` random warmup), and each round *adapts* the base with a
+//! few appended trees instead of training from scratch.
+//!
+//! What pools and what does not:
+//!
+//! * **P and A** pool across layers and targets. Their labels are
+//!   `log2(cycles)`, whose *level* is layer- and hardware-specific but
+//!   whose *shape* (which schedules beat which) is what transfers — so
+//!   each log's labels are centered around the log's own mean before
+//!   pooling ([`super::train::TrainSet::center_from`]), and the run-time
+//!   level comes back through the mean-residual recalibration in
+//!   [`super::models::FitOpts::recalibrate`].
+//! * **V does not pool across capacities.** Validity is a hard function
+//!   of buffer geometry: a "valid" minted on a bigger-buffered target is
+//!   a *wrong* label for a smaller one. V ensembles are therefore
+//!   bucketed per capacity signature
+//!   ([`crate::vta::targets::TargetMeta::capacity_key`]) and served only
+//!   on an exact match — a run on unseen hardware simply gets no meta V
+//!   (pre-registry logs without a target stamp land in a `"default"`
+//!   bucket that likewise only serves unstamped runs, never a known
+//!   target).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::database::{Database, TransferDb};
+use super::models::{FitOpts, ModelA, ModelP, ModelV};
+use super::train::{Provenance, TrainSet};
+use crate::compiler::features;
+use crate::compiler::schedule::SpaceKind;
+use crate::gbdt::Booster;
+use crate::util::json::Json;
+use crate::vta::config::VtaConfig;
+use crate::vta::targets::TargetMeta;
+
+/// Artifact format version; bumped on any incompatible layout change
+/// (load rejects unknown versions instead of guessing).
+pub const META_FORMAT_VERSION: i64 = 1;
+
+/// Default boost rounds for offline corpus training — the paper's full
+/// Table 3 budget; offline, so retrain latency is not a concern.
+pub const META_BOOST_ROUNDS: usize = 300;
+
+/// Fixed corpus-training seed: the same corpus always yields the same
+/// artifact, byte for byte.
+pub const META_SEED: u64 = 0x4d45_5441; // "META"
+
+/// Capacity bucket for corpus logs written before target stamping. Runs
+/// on a *known* target never read it — see the module docs.
+pub const UNSTAMPED_KEY: &str = "default";
+
+/// The meta-trained ensembles for one space kind.
+#[derive(Clone, Debug)]
+pub struct MetaArtifact {
+    /// Knob space the corpus logs (and hence the feature layouts) use.
+    pub space: SpaceKind,
+    /// Source logs ingested.
+    pub sources: usize,
+    /// Total records across those logs.
+    pub records: usize,
+    /// Base performance ensemble (visible features, per-log centered
+    /// labels); `None` when the corpus held < 2 perf-labelled rows.
+    pub p: Option<Booster>,
+    /// Base hidden-feature ensemble (visible ⊕ hidden, per-log centered
+    /// labels); `None` when too few rows carried hidden features of the
+    /// current layout.
+    pub a: Option<Booster>,
+    /// Base validity ensembles, bucketed per capacity signature.
+    pub v: BTreeMap<String, Booster>,
+}
+
+/// A log's A-rows are ingestible only when their hidden vectors match
+/// the current compiler's layout for the log's space kind — a stale
+/// layout would train A on misaligned columns.
+fn a_layout_ok(db: &Database) -> bool {
+    let want = features::hidden_len(db.kind);
+    db.records
+        .iter()
+        .all(|r| r.hidden.is_empty() || r.hidden.len() == want)
+}
+
+impl MetaArtifact {
+    /// Fit the ensembles for `kind` over the corpus logs of that kind.
+    pub fn build(
+        kind: SpaceKind,
+        dbs: &[&Database],
+        rounds: usize,
+    ) -> MetaArtifact {
+        let mut pset = TrainSet::new();
+        let mut aset = TrainSet::new();
+        let mut vsets: BTreeMap<String, TrainSet> = BTreeMap::new();
+        let mut records = 0;
+        for db in dbs {
+            records += db.len();
+            let start = pset.len();
+            pset.extend_p(db, Provenance::Meta).center_from(start);
+            if a_layout_ok(db) {
+                let start = aset.len();
+                aset.extend_a(db, Provenance::Meta).center_from(start);
+            }
+            let key = db
+                .target
+                .as_ref()
+                .map_or_else(|| UNSTAMPED_KEY.to_string(),
+                             TargetMeta::capacity_key);
+            vsets
+                .entry(key)
+                .or_default()
+                .extend_v(db, Provenance::Meta);
+        }
+        let opts = FitOpts::new(rounds, META_SEED);
+        MetaArtifact {
+            space: kind,
+            sources: dbs.len(),
+            records,
+            p: ModelP::fit(&pset, &opts).map(|m| m.booster),
+            a: ModelA::fit(&aset, &opts).map(|m| m.booster),
+            v: vsets
+                .into_iter()
+                .filter_map(|(k, set)| {
+                    ModelV::fit(&set, &opts).map(|m| (k, m.booster))
+                })
+                .collect(),
+        }
+    }
+
+    /// The V ensemble for `hw`'s capacity class — exact match only (see
+    /// the module docs for why there is deliberately no fallback).
+    pub fn v_for(&self, hw: &VtaConfig) -> Option<&Booster> {
+        self.v.get(&TargetMeta::of(hw).capacity_key())
+    }
+
+    /// Serialize (versioned; see [`META_FORMAT_VERSION`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", META_FORMAT_VERSION)
+            .set("space", self.space.name())
+            .set("sources", self.sources)
+            .set("records", self.records);
+        if let Some(p) = &self.p {
+            o.set("p", p.to_json());
+        }
+        if let Some(a) = &self.a {
+            o.set("a", a.to_json());
+        }
+        let mut v = Json::obj();
+        for (key, b) in &self.v {
+            v.set(key.as_str(), b.to_json());
+        }
+        o.set("v", v);
+        o
+    }
+
+    /// Strict parse of [`MetaArtifact::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<MetaArtifact> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("meta artifact missing version"))?;
+        if version != META_FORMAT_VERSION {
+            return Err(anyhow!(
+                "unsupported meta artifact version {version} \
+                 (this build reads {META_FORMAT_VERSION})"
+            ));
+        }
+        let space = j
+            .get("space")
+            .and_then(Json::as_str)
+            .and_then(SpaceKind::parse)
+            .ok_or_else(|| anyhow!("meta artifact missing space"))?;
+        let booster_at = |key: &str| -> Result<Option<Booster>> {
+            j.get(key).map(Booster::from_json).transpose()
+        };
+        let mut v = BTreeMap::new();
+        if let Some(obj) = j.get("v").and_then(Json::as_obj) {
+            for (key, b) in obj {
+                v.insert(key.clone(), Booster::from_json(b)?);
+            }
+        }
+        Ok(MetaArtifact {
+            space,
+            sources: j
+                .get("sources")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            records: j
+                .get("records")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            p: booster_at("p")?,
+            a: booster_at("a")?,
+            v,
+        })
+    }
+}
+
+/// All meta artifacts of one training run / one `--meta` directory,
+/// keyed on space kind.
+#[derive(Clone, Debug, Default)]
+pub struct MetaStore {
+    artifacts: BTreeMap<&'static str, MetaArtifact>,
+}
+
+impl MetaStore {
+    /// Fit artifacts over a loaded corpus, one per space kind that has
+    /// at least one source log, at the default offline budget.
+    pub fn build(corpus: &TransferDb) -> MetaStore {
+        Self::build_with(corpus, META_BOOST_ROUNDS)
+    }
+
+    /// [`MetaStore::build`] with an explicit boost-round budget
+    /// (`train-meta --rounds`).
+    pub fn build_with(corpus: &TransferDb, rounds: usize) -> MetaStore {
+        let mut store = MetaStore::default();
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let dbs: Vec<&Database> = corpus
+                .sources
+                .iter()
+                .filter(|d| d.kind == kind)
+                .map(|d| d.as_ref())
+                .collect();
+            if dbs.is_empty() {
+                continue;
+            }
+            store.artifacts.insert(
+                kind.name(),
+                MetaArtifact::build(kind, &dbs, rounds),
+            );
+        }
+        store
+    }
+
+    /// The artifact for a space kind, if the corpus covered it.
+    pub fn for_kind(&self, kind: SpaceKind) -> Option<&MetaArtifact> {
+        self.artifacts.get(kind.name())
+    }
+
+    /// Take ownership of the artifact for a space kind.
+    pub fn take_kind(&mut self, kind: SpaceKind) -> Option<MetaArtifact> {
+        self.artifacts.remove(kind.name())
+    }
+
+    /// Number of artifacts (space kinds covered).
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// Whether no space kind is covered.
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Iterate artifacts, space-name order.
+    pub fn iter(
+        &self,
+    ) -> impl Iterator<Item = (&'static str, &MetaArtifact)> {
+        self.artifacts.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Write one `meta_<space>.json` per artifact into `dir` (created if
+    /// missing); returns the written paths.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        let mut paths = Vec::new();
+        for (name, art) in &self.artifacts {
+            let path = dir.join(format!("meta_{name}.json"));
+            std::fs::write(&path, art.to_json().to_string_pretty())
+                .with_context(|| format!("writing {path:?}"))?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// Load every `meta_<space>.json` from `dir`. Unlike corpus loading,
+    /// a malformed artifact is a hard error — a `--meta` directory is a
+    /// deliberate input, and silently tuning without the requested base
+    /// models would be worse than failing.
+    pub fn load(dir: impl AsRef<Path>) -> Result<MetaStore> {
+        let dir = dir.as_ref();
+        let mut store = MetaStore::default();
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            let path = dir.join(format!("meta_{}.json", kind.name()));
+            if !path.exists() {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {path:?}"))?;
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow!("{path:?}: {e}"))?;
+            let art = MetaArtifact::from_json(&j)
+                .with_context(|| format!("parsing {path:?}"))?;
+            if art.space != kind {
+                return Err(anyhow!(
+                    "{path:?} declares space '{}' but is named for \
+                     '{}'",
+                    art.space.name(),
+                    kind.name()
+                ));
+            }
+            store.artifacts.insert(kind.name(), art);
+        }
+        if store.is_empty() {
+            return Err(anyhow!(
+                "no meta_<space>.json artifacts in {dir:?} \
+                 (run `train-meta` first)"
+            ));
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::Schedule;
+    use crate::tuner::database::{Fidelity, Outcome, TrialRecord};
+
+    fn vis(kind: SpaceKind, s: &Schedule) -> Vec<f64> {
+        kind.visible_features(s)
+    }
+
+    fn synth_log(
+        layer: &crate::workloads::ConvLayer,
+        kind: SpaceKind,
+        hw: &VtaConfig,
+        n: usize,
+        level: f64,
+    ) -> Database {
+        let mut db = Database::for_layer_on(layer, kind, hw);
+        for i in 0..n {
+            let th = 1 + (i % 16);
+            let vt = 1 + (i % 4);
+            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: vt,
+                               ..Default::default() };
+            let valid = th * vt <= 24;
+            let cycles =
+                (level * (200_000.0 / th as f64 + 10_000.0 * vt as f64))
+                    as u64;
+            db.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: vis(kind, &s),
+                hidden: vec![1.0; features::hidden_len(kind)],
+                outcome: if valid {
+                    Outcome::Valid { cycles }
+                } else {
+                    Outcome::Crash
+                },
+                fidelity: Fidelity::Full,
+            });
+        }
+        db
+    }
+
+    fn corpus() -> TransferDb {
+        let conv5 = crate::workloads::resnet18::layer("conv5").unwrap();
+        let pw4 = crate::workloads::mobilenet::layer("pw4").unwrap();
+        let mut c = TransferDb::new();
+        // two targets, two layers, wildly different levels: pooling
+        // must survive via per-log centering
+        c.add(synth_log(&conv5, SpaceKind::Paper,
+                        &VtaConfig::zcu102(), 96, 1.0));
+        c.add(synth_log(&pw4, SpaceKind::Paper,
+                        &VtaConfig::edge_small(), 96, 40.0));
+        c
+    }
+
+    #[test]
+    fn build_pools_p_and_buckets_v_per_capacity() {
+        let store = MetaStore::build_with(&corpus(), 60);
+        let art = store.for_kind(SpaceKind::Paper).unwrap();
+        assert_eq!(art.sources, 2);
+        assert_eq!(art.records, 192);
+        assert!(store.for_kind(SpaceKind::Extended).is_none());
+        let p = art.p.as_ref().expect("corpus trains P");
+        // centered pooling preserves the landscape's shape
+        let f = |th: usize| {
+            let s = Schedule { tile_h: th, tile_w: 4, tile_oc: 32,
+                               tile_ic: 32, n_vthreads: 1,
+                               ..Default::default() };
+            p.predict_row(&vis(SpaceKind::Paper, &s))
+        };
+        assert!(f(2) > f(12), "meta P must order the landscape");
+        // V: one bucket per capacity signature, exact-match serving
+        assert_eq!(art.v.len(), 2);
+        assert!(art.v_for(&VtaConfig::zcu102()).is_some());
+        assert!(art.v_for(&VtaConfig::edge_small()).is_some());
+        assert!(art.v_for(&VtaConfig::hiband()).is_none(),
+                "unseen capacity class gets no meta V");
+    }
+
+    #[test]
+    fn bigger_target_validity_never_enters_a_smaller_bucket() {
+        // conv1 th=28·tw=28·tic=64 fits the zcu102 but not edge-small;
+        // a corpus holding both targets' logs must keep the zcu102's
+        // "valid" out of edge-small's V bucket
+        let conv1 = crate::workloads::resnet18::layer("conv1").unwrap();
+        let big_tile = Schedule { tile_h: 28, tile_w: 28, tile_oc: 16,
+                                  tile_ic: 64, n_vthreads: 1,
+                                  ..Default::default() };
+        let mk = |hw: &VtaConfig, valid: bool| {
+            let mut db =
+                Database::for_layer_on(&conv1, SpaceKind::Paper, hw);
+            for i in 0..8usize {
+                // pad with small-tile valids so V has both classes
+                let s = Schedule { tile_h: 1 + i % 4, tile_w: 4,
+                                   tile_oc: 16, tile_ic: 64,
+                                   n_vthreads: 1, ..Default::default() };
+                db.push(TrialRecord {
+                    space_index: i,
+                    schedule: s,
+                    visible: vis(SpaceKind::Paper, &s),
+                    hidden: vec![],
+                    outcome: Outcome::Valid { cycles: 1000 },
+                    fidelity: Fidelity::Full,
+                });
+            }
+            db.push(TrialRecord {
+                space_index: 99,
+                schedule: big_tile,
+                visible: vis(SpaceKind::Paper, &big_tile),
+                hidden: vec![],
+                outcome: if valid {
+                    Outcome::Valid { cycles: 500 }
+                } else {
+                    Outcome::Crash
+                },
+                fidelity: Fidelity::Full,
+            });
+            db
+        };
+        let mut c = TransferDb::new();
+        c.add(mk(&VtaConfig::zcu102(), true));
+        c.add(mk(&VtaConfig::edge_small(), false));
+        let store = MetaStore::build_with(&c, 60);
+        let art = store.for_kind(SpaceKind::Paper).unwrap();
+        let feats = vis(SpaceKind::Paper, &big_tile);
+        let edge_v = art.v_for(&VtaConfig::edge_small()).unwrap();
+        let big_v = art.v_for(&VtaConfig::zcu102()).unwrap();
+        assert!(edge_v.predict_row(&feats) < 0.0,
+                "edge bucket learned its own Crash label");
+        assert!(big_v.predict_row(&feats) > 0.0,
+                "zcu102 bucket keeps its own valid label");
+    }
+
+    #[test]
+    fn artifact_round_trips_through_store_save_load() {
+        let store = MetaStore::build_with(&corpus(), 40);
+        let dir = std::env::temp_dir().join("ml2_meta_rt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let paths = store.save(&dir).unwrap();
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].ends_with("meta_paper.json"));
+        let back = MetaStore::load(&dir).unwrap();
+        let (a, b) = (
+            store.for_kind(SpaceKind::Paper).unwrap(),
+            back.for_kind(SpaceKind::Paper).unwrap(),
+        );
+        assert_eq!(a.sources, b.sources);
+        assert_eq!(a.records, b.records);
+        let s = Schedule { tile_h: 5, tile_w: 4, tile_oc: 32,
+                           tile_ic: 32, n_vthreads: 2,
+                           ..Default::default() };
+        let feats = vis(SpaceKind::Paper, &s);
+        assert_eq!(
+            a.p.as_ref().unwrap().predict_row(&feats).to_bits(),
+            b.p.as_ref().unwrap().predict_row(&feats).to_bits(),
+            "serialized meta P must predict bit-identically"
+        );
+        for (key, vb) in &a.v {
+            assert_eq!(vb.predict_row(&feats).to_bits(),
+                       b.v[key].predict_row(&feats).to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_version_and_empty_dir() {
+        let dir = std::env::temp_dir().join("ml2_meta_bad_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(MetaStore::load(&dir).is_err(), "empty dir is an error");
+        let store = MetaStore::build_with(&corpus(), 20);
+        store.save(&dir).unwrap();
+        let path = dir.join("meta_paper.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path,
+                       text.replace("\"version\": 1", "\"version\": 99"))
+            .unwrap();
+        assert!(MetaStore::load(&dir).is_err(),
+                "unknown version must be rejected, not guessed at");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_space_corpus_yields_one_artifact_per_kind() {
+        let conv5 = crate::workloads::resnet18::layer("conv5").unwrap();
+        let mut c = corpus();
+        c.add(synth_log(&conv5, SpaceKind::Extended,
+                        &VtaConfig::zcu102(), 64, 1.0));
+        let store = MetaStore::build_with(&c, 40);
+        assert_eq!(store.len(), 2);
+        let ext = store.for_kind(SpaceKind::Extended).unwrap();
+        assert_eq!(ext.sources, 1);
+        assert_eq!(
+            ext.p.as_ref().unwrap().n_features,
+            SpaceKind::Extended.n_visible(),
+            "per-kind artifacts keep their own feature widths"
+        );
+    }
+
+    #[test]
+    fn legacy_unstamped_logs_train_but_serve_no_known_target() {
+        // a pre-registry log (no target stamp): P still pools, V lands
+        // in the "default" bucket that no registered target reads
+        let conv5 = crate::workloads::resnet18::layer("conv5").unwrap();
+        let mut log = synth_log(&conv5, SpaceKind::Paper,
+                                &VtaConfig::zcu102(), 64, 1.0);
+        log.target = None;
+        let mut c = TransferDb::new();
+        c.add(log);
+        let store = MetaStore::build_with(&c, 40);
+        let art = store.for_kind(SpaceKind::Paper).unwrap();
+        assert!(art.p.is_some());
+        assert!(art.v.contains_key(UNSTAMPED_KEY));
+        for name in crate::vta::targets::TARGET_NAMES {
+            let hw = crate::vta::targets::target(name).unwrap();
+            assert!(art.v_for(&hw).is_none(),
+                    "unstamped V must not serve target '{name}'");
+        }
+    }
+
+    #[test]
+    fn stale_hidden_layouts_are_kept_out_of_meta_a() {
+        let conv5 = crate::workloads::resnet18::layer("conv5").unwrap();
+        let mut log = synth_log(&conv5, SpaceKind::Paper,
+                                &VtaConfig::zcu102(), 64, 1.0);
+        // truncate every hidden vector: a stale layout
+        for r in &mut log.records {
+            r.hidden.truncate(1);
+        }
+        let mut c = TransferDb::new();
+        c.add(log);
+        let store = MetaStore::build_with(&c, 40);
+        let art = store.for_kind(SpaceKind::Paper).unwrap();
+        assert!(art.p.is_some(), "P is layout-independent");
+        assert!(art.a.is_none(),
+                "stale hidden layout must not train meta A");
+    }
+}

@@ -17,15 +17,88 @@ use std::collections::HashMap;
 
 use super::database::{Database, Fidelity, Outcome, TrialRecord};
 use super::explorer::{Explorer, SelectStats};
-use super::models::{ModelA, ModelP, ModelV};
+use super::meta::MetaArtifact;
+use super::models::{FitOpts, ModelA, ModelP, ModelV};
 use super::report::TuningTrace;
 use super::space::SearchSpace;
+use super::train::{Provenance, TrainSet};
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
-use crate::gbdt::FeatureMatrix;
+use crate::gbdt::{Booster, FeatureMatrix};
 use crate::obs::{Counter, Stage};
 use crate::util::rng::Rng;
 use crate::vta::coarse::CoarseEstimate;
+
+/// Cross-round model carry-over: the last trained ensemble per model
+/// plus the training-set row count it saw. Incremental mode
+/// (`cfg.incremental`) continues these instead of refitting from
+/// scratch; a caller that passes `None` gets the stateless (cold or
+/// meta-refit) behaviour every round.
+#[derive(Default)]
+pub(crate) struct ModelState {
+    /// Model P's last ensemble and its training row count.
+    pub p: Option<(Booster, usize)>,
+    /// Model V's last ensemble and its training row count.
+    pub v: Option<(Booster, usize)>,
+    /// Model A's last ensemble and its training row count.
+    pub a: Option<(Booster, usize)>,
+}
+
+/// How one model trains this round: from which base, how many rounds,
+/// and whether the meta level-recalibration applies.
+struct FitPlan<'a> {
+    base: Option<&'a Booster>,
+    rounds: usize,
+    recalibrate: bool,
+    from_meta: bool,
+}
+
+/// Decide the round's training mode for one model.
+///
+/// Priority: continue the previous round's ensemble (incremental mode,
+/// record set grew or held) → adapt the meta base (recalibrated) → cold
+/// full fit. `--retrain-every R` forces the cold branch every `R`
+/// rounds to bound drift from stale early trees; a meta base whose
+/// feature width does not match this run's layout is ignored.
+fn plan_fit<'a>(
+    cfg: &TunerConfig,
+    round: u64,
+    prev: Option<&'a (Booster, usize)>,
+    meta: Option<&'a Booster>,
+    set_len: usize,
+    width: usize,
+) -> FitPlan<'a> {
+    let meta = meta.filter(|b| b.n_features == width);
+    let full_refit = !cfg.incremental
+        || (cfg.retrain_every > 0
+            && round % cfg.retrain_every as u64 == 0);
+    if !full_refit {
+        if let Some((b, rows)) = prev {
+            if set_len >= *rows {
+                return FitPlan {
+                    base: Some(b),
+                    rounds: (cfg.boost_rounds / 10).max(4),
+                    recalibrate: false,
+                    from_meta: false,
+                };
+            }
+        }
+    }
+    if let Some(m) = meta {
+        return FitPlan {
+            base: Some(m),
+            rounds: (cfg.boost_rounds / 5).max(8),
+            recalibrate: true,
+            from_meta: true,
+        };
+    }
+    FitPlan {
+        base: None,
+        rounds: cfg.boost_rounds,
+        recalibrate: false,
+        from_meta: false,
+    }
+}
 
 /// The multi-level tuner.
 pub struct Ml2Tuner {
@@ -40,12 +113,16 @@ pub struct Ml2Tuner {
     /// pre-train P/V/A before the first profiled batch. Training-only:
     /// they never count against the budget or enter the trace.
     pub warm: Option<Database>,
+    /// Corpus-trained base ensembles (see [`crate::tuner::meta`]) the
+    /// per-round fits adapt instead of starting cold.
+    pub meta: Option<MetaArtifact>,
 }
 
 impl Ml2Tuner {
     /// Full three-model tuner (V and A enabled, cold start).
     pub fn new(cfg: TunerConfig) -> Self {
-        Ml2Tuner { cfg, use_v: true, use_a: true, warm: None }
+        Ml2Tuner { cfg, use_v: true, use_a: true, warm: None,
+                   meta: None }
     }
 
     /// Ablation: disable the model-V validity filter.
@@ -69,21 +146,41 @@ impl Ml2Tuner {
         }
         self
     }
+
+    /// Adapt from a corpus-trained meta artifact (`--meta`). The
+    /// artifact's space kind must match the run's — a mismatched
+    /// artifact would feed the models the wrong feature layout, so the
+    /// builder ignores it (the CLI resolves per-kind artifacts before
+    /// getting here).
+    pub fn with_meta(mut self, meta: MetaArtifact) -> Self {
+        self.meta = Some(meta);
+        self
+    }
 }
 
 impl Tuner for Ml2Tuner {
     fn name(&self) -> &'static str {
-        match (self.use_v, self.use_a, self.warm.is_some()) {
-            (true, true, false) => "ml2tuner",
-            (false, true, false) => "ml2tuner-noV",
-            (true, false, false) => "ml2tuner-noA",
-            (false, false, false) => "ml2tuner-Ponly",
-            // warm-started variants carry the suffix so persisted
-            // traces always distinguish warm from cold runs
-            (true, true, true) => "ml2tuner-warm",
-            (false, true, true) => "ml2tuner-noV-warm",
-            (true, false, true) => "ml2tuner-noA-warm",
-            (false, false, true) => "ml2tuner-Ponly-warm",
+        // warm-started / meta-adapted variants carry suffixes so
+        // persisted traces always distinguish the run modes
+        match (self.use_v, self.use_a, self.warm.is_some(),
+               self.meta.is_some())
+        {
+            (true, true, false, false) => "ml2tuner",
+            (false, true, false, false) => "ml2tuner-noV",
+            (true, false, false, false) => "ml2tuner-noA",
+            (false, false, false, false) => "ml2tuner-Ponly",
+            (true, true, true, false) => "ml2tuner-warm",
+            (false, true, true, false) => "ml2tuner-noV-warm",
+            (true, false, true, false) => "ml2tuner-noA-warm",
+            (false, false, true, false) => "ml2tuner-Ponly-warm",
+            (true, true, false, true) => "ml2tuner-meta",
+            (false, true, false, true) => "ml2tuner-noV-meta",
+            (true, false, false, true) => "ml2tuner-noA-meta",
+            (false, false, false, true) => "ml2tuner-Ponly-meta",
+            (true, true, true, true) => "ml2tuner-warm-meta",
+            (false, true, true, true) => "ml2tuner-noV-warm-meta",
+            (true, false, true, true) => "ml2tuner-noA-warm-meta",
+            (false, false, true, true) => "ml2tuner-Ponly-warm-meta",
         }
     }
 
@@ -99,6 +196,7 @@ impl Tuner for Ml2Tuner {
             Database::for_layer_on(&env.layer, env.kind(), env.hw());
         let mut trace = TuningTrace::new(env.layer.name, self.name());
         let mut round = 0u64;
+        let mut mstate = ModelState::default();
         while trace.len() < cfg.max_trials && space.n_unmeasured() > 0 {
             round += 1;
             let scope = engine.recorder().begin_round();
@@ -106,8 +204,9 @@ impl Tuner for Ml2Tuner {
             let n = cfg.n_per_round.min(cfg.max_trials - trace.len());
             let (batch, stats, coarse) =
                 select_batch(cfg, self.use_v, self.use_a, env, engine,
-                             &space, &db, self.warm.as_ref(), &mut rng,
-                             round, n);
+                             &space, &db, self.warm.as_ref(),
+                             self.meta.as_ref(), Some(&mut mstate),
+                             &mut rng, round, n);
             // tier-0 estimates of pruned candidates train the models
             // (down-weighted) but never touch the trace or the budget
             for c in coarse {
@@ -158,6 +257,13 @@ impl Tuner for Ml2Tuner {
 /// — the caller pushes them into its database (training signal) but
 /// never into the trace or the budget. With the factor off it is always
 /// empty and the selection path is structurally unchanged.
+///
+/// `meta` supplies corpus-trained base ensembles: the P readiness gate
+/// widens to "meta P available", so a meta run is model-guided from
+/// round 1, and each fit adapts the base (recalibrated continuation)
+/// instead of training cold. `state` carries the previous round's
+/// ensembles for `cfg.incremental` warm continuation; each fit updates
+/// it. Both default the pre-meta behaviour when `None`/absent.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_batch(
     cfg: &TunerConfig,
@@ -168,6 +274,8 @@ pub(crate) fn select_batch(
     space: &SearchSpace,
     db: &Database,
     warm: Option<&Database>,
+    meta: Option<&MetaArtifact>,
+    mut state: Option<&mut ModelState>,
     rng: &mut Rng,
     round: u64,
     n: usize,
@@ -178,16 +286,45 @@ pub(crate) fn select_batch(
     let n_valid = db.n_valid() + warm.map_or(0, Database::n_valid);
     let n_seen = db.len() + warm.map_or(0, Database::len);
     // Train P once and reuse it (the readiness probe used to train a
-    // throwaway model first); P is trainable iff ≥ 2 valid records.
-    let p = if n_valid >= 2 && n_seen >= cfg.min_train {
+    // throwaway model first); P is trainable iff ≥ 2 valid records —
+    // or from round 1 when a meta base covers the gap.
+    let meta_p = meta.and_then(|m| m.p.as_ref());
+    let p = if (n_valid >= 2 && n_seen >= cfg.min_train)
+        || meta_p.is_some()
+    {
         let _train = rec.span(Stage::Train);
-        match warm {
-            Some(w) => {
-                ModelP::train_warm(db, w, cfg.boost_rounds,
-                                   cfg.seed ^ round)
-            }
-            None => ModelP::train(db, cfg.boost_rounds, cfg.seed ^ round),
+        let mut set = TrainSet::new();
+        if let Some(w) = warm {
+            set.extend_p(w, Provenance::Warm);
         }
+        set.extend_p(db, Provenance::Cold);
+        let prev = state.as_mut().and_then(|s| s.p.take());
+        let plan = plan_fit(cfg, round, prev.as_ref(), meta_p,
+                            set.len(), space.n_visible());
+        let base_trees =
+            plan.base.map_or(0, |b| b.trees.len());
+        let opts = FitOpts {
+            rounds: plan.rounds,
+            seed: cfg.seed ^ round,
+            base: plan.base,
+            recalibrate: plan.recalibrate,
+        };
+        let model = ModelP::fit(&set, &opts);
+        if let Some(m) = &model {
+            if plan.base.is_some() {
+                rec.add(Counter::TreesAppended,
+                        m.booster.trees.len()
+                            .saturating_sub(base_trees)
+                            as u64);
+                if plan.from_meta {
+                    rec.add(Counter::MetaAdapted, 1);
+                }
+            }
+            if let Some(s) = state.as_mut() {
+                s.p = Some((m.booster.clone(), set.len()));
+            }
+        }
+        model
     } else {
         None
     };
@@ -210,13 +347,42 @@ pub(crate) fn select_batch(
     };
     let v = if use_v {
         let _train = rec.span(Stage::Train);
-        match warm {
-            Some(w) => {
-                ModelV::train_warm(db, w, cfg.boost_rounds,
-                                   cfg.seed ^ round)
-            }
-            None => ModelV::train(db, cfg.boost_rounds, cfg.seed ^ round),
+        let mut set = TrainSet::new();
+        if let Some(w) = warm {
+            set.extend_v(w, Provenance::Warm);
         }
+        set.extend_v(db, Provenance::Cold);
+        // the V bucket is capacity-exact (see `tuner::meta`): unseen
+        // hardware simply gets no meta V
+        let meta_v = meta.and_then(|m| m.v_for(env.hw()));
+        let prev = state.as_mut().and_then(|s| s.v.take());
+        let plan = plan_fit(cfg, round, prev.as_ref(), meta_v,
+                            set.len(), space.n_visible());
+        let base_trees = plan.base.map_or(0, |b| b.trees.len());
+        let opts = FitOpts {
+            rounds: plan.rounds,
+            seed: cfg.seed ^ round,
+            base: plan.base,
+            // level recalibration is a perf-regressor correction; V's
+            // hinge margin has no "level" to shift
+            recalibrate: false,
+        };
+        let model = ModelV::fit(&set, &opts);
+        if let Some(m) = &model {
+            if plan.base.is_some() {
+                rec.add(Counter::TreesAppended,
+                        m.booster.trees.len()
+                            .saturating_sub(base_trees)
+                            as u64);
+                if plan.from_meta {
+                    rec.add(Counter::MetaAdapted, 1);
+                }
+            }
+            if let Some(s) = state.as_mut() {
+                s.v = Some((m.booster.clone(), set.len()));
+            }
+        }
+        model
     } else {
         None
     };
@@ -247,15 +413,40 @@ pub(crate) fn select_batch(
         // winners are NOT recompiled when profiled right after.
         let a = {
             let _train = rec.span(Stage::Train);
-            match warm {
-                Some(w) => {
-                    ModelA::train_warm(db, w, cfg.boost_rounds,
-                                       cfg.seed ^ round)
+            let mut set = TrainSet::new();
+            if let Some(w) = warm {
+                set.extend_a(w, Provenance::Warm);
+            }
+            set.extend_a(db, Provenance::Cold);
+            let meta_a = meta.and_then(|m| m.a.as_ref());
+            let prev = state.as_mut().and_then(|s| s.a.take());
+            let width = space.n_visible()
+                + crate::compiler::features::hidden_len(env.kind());
+            let plan = plan_fit(cfg, round, prev.as_ref(), meta_a,
+                                set.len(), width);
+            let base_trees = plan.base.map_or(0, |b| b.trees.len());
+            let opts = FitOpts {
+                rounds: plan.rounds,
+                seed: cfg.seed ^ round,
+                base: plan.base,
+                recalibrate: plan.recalibrate,
+            };
+            let model = ModelA::fit(&set, &opts);
+            if let Some(m) = &model {
+                if plan.base.is_some() {
+                    rec.add(Counter::TreesAppended,
+                            m.booster.trees.len()
+                                .saturating_sub(base_trees)
+                                as u64);
+                    if plan.from_meta {
+                        rec.add(Counter::MetaAdapted, 1);
+                    }
                 }
-                None => {
-                    ModelA::train(db, cfg.boost_rounds, cfg.seed ^ round)
+                if let Some(s) = state.as_mut() {
+                    s.a = Some((m.booster.clone(), set.len()));
                 }
             }
+            model
         };
         match a {
             None => ranked.iter().copied().take(n).collect(),

@@ -5,11 +5,18 @@
 //!   JSON persistence (TVM-style tuning log, shape-stamped), plus the
 //!   cross-run [`database::TransferDb`]: a directory of prior logs,
 //!   similarity-matched in shape space to warm-start new layers.
+//! * [`train`] — the unified [`train::TrainSet`] builder every model
+//!   trains through: cold, warm-transferred, and meta-corpus rows are
+//!   compositions of `extend_*` calls, not separate training methods.
 //! * [`models`] — cost models **P** (performance, visible features),
 //!   **V** (validity classifier, visible features) and **A** (performance,
-//!   visible ⊕ hidden features) over the [`crate::gbdt`] substrate; each
-//!   has a `train_warm` path that pre-trains on transferred records
-//!   before the first profiled batch.
+//!   visible ⊕ hidden features) over the [`crate::gbdt`] substrate; one
+//!   `fit(&TrainSet, &FitOpts)` per model covers cold fits, warm
+//!   continuation, and meta adaptation.
+//! * [`meta`] — corpus-trained meta cost models: `train-meta` fits base
+//!   P/V/A ensembles over a directory of tuning logs and serializes them
+//!   as versioned JSON artifacts; `--meta` loads them so runs are
+//!   model-guided from round 1.
 //! * [`explorer`] — candidate selection: P-ranking, V-filtering,
 //!   ε-greedy exploration, A re-ranking (paper Fig. 1).
 //! * [`ml2tuner`] — the full ML²Tuner loop; [`tvm_baseline`] — the
@@ -20,11 +27,13 @@
 
 pub mod database;
 pub mod explorer;
+pub mod meta;
 pub mod ml2tuner;
 pub mod models;
 pub mod random_baseline;
 pub mod report;
 pub mod space;
+pub mod train;
 pub mod tvm_baseline;
 
 use crate::compiler::schedule::SpaceKind;
@@ -141,6 +150,17 @@ pub struct TunerConfig {
     /// ([`crate::vta::coarse`]), and spends full profiling only on the
     /// survivors.
     pub prescreen_factor: usize,
+    /// Incremental per-round training (`--incremental`): instead of
+    /// refitting each model from scratch every round, continue the
+    /// previous round's ensemble and append a few trees
+    /// (`boost_rounds / 10`, min 4). Off by default — continuation
+    /// deliberately drops the per-round seed churn (`seed ^ round`), so
+    /// traces differ from the cold paper behaviour.
+    pub incremental: bool,
+    /// With `incremental`, fully refit every `R` rounds
+    /// (`--retrain-every R`) to bound drift from stale early trees.
+    /// `0` never forces a refit.
+    pub retrain_every: usize,
 }
 
 impl Default for TunerConfig {
@@ -155,6 +175,8 @@ impl Default for TunerConfig {
             boost_rounds: 120,
             seed: 0,
             prescreen_factor: 0,
+            incremental: false,
+            retrain_every: 0,
         }
     }
 }

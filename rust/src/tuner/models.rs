@@ -9,48 +9,110 @@
 //!
 //! All three predict from raw feature vectors; P and A predict
 //! `log2(cycles)` (lower is better).
+//!
+//! Each model trains through exactly one entry point, `fit(&TrainSet,
+//! &FitOpts)`: the caller assembles rows with
+//! [`crate::tuner::train::TrainSet`] (cold records, warm-transferred
+//! records, tiered coarse weights, TVM penalty labels — all row-assembly
+//! concerns), and [`FitOpts`] composes the booster-level options: round
+//! count, subsampling seed, warm continuation from a previous round's
+//! ensemble, and meta-artifact adaptation (continuation + level
+//! recalibration).
 
 use crate::gbdt::{
-    Booster, Dataset, FeatureMatrix, FlatEnsemble, GbdtParams,
+    Booster, Dataset, FeatureMatrix, FlatEnsemble, GbdtParams, TrainOpts,
 };
-use crate::tuner::database::Database;
+use crate::tuner::train::TrainSet;
 
-/// Shared training tail: readiness guard (≥ 2 rows) + boosting.
-fn fit(params: GbdtParams, xs: Vec<Vec<f64>>, ys: Vec<f64>)
-    -> Option<Booster>
-{
-    fit_weighted(params, xs, ys, None)
+/// Booster-level options for one model `fit` call.
+#[derive(Clone, Copy, Default)]
+pub struct FitOpts<'a> {
+    /// Boosting rounds — appended rounds when `base` is set, total
+    /// rounds otherwise.
+    pub rounds: usize,
+    /// Subsampling seed (ignored under continuation: the base's seed
+    /// stream is replayed so appended trees are bit-exact).
+    pub seed: u64,
+    /// Continuation base: a previous round's ensemble (incremental
+    /// per-round training) or a corpus-trained meta ensemble. `fit`
+    /// keeps its trees and appends `rounds` more; with fewer than 2
+    /// training rows the base alone is returned, which is what makes a
+    /// meta-adapted run model-guided from round 1.
+    pub base: Option<&'a Booster>,
+    /// Shift the base's intercept by the mean residual over the training
+    /// set before appending trees — the meta-adaptation level correction
+    /// (a corpus model knows the landscape's shape; the run's records
+    /// know its level).
+    pub recalibrate: bool,
 }
 
-/// Weighted variant of [`fit`]: per-row sample weights for
-/// mixed-fidelity training sets. `weights: None` is bit-identical to
-/// the unweighted path, which is what keeps prescreen-off runs
-/// byte-identical.
-fn fit_weighted(
-    params: GbdtParams,
-    xs: Vec<Vec<f64>>,
-    ys: Vec<f64>,
-    weights: Option<Vec<f64>>,
-) -> Option<Booster> {
-    if xs.len() < 2 {
-        return None;
+impl<'a> FitOpts<'a> {
+    /// Cold fit: `rounds` boosting rounds under `seed`.
+    pub fn new(rounds: usize, seed: u64) -> Self {
+        FitOpts { rounds, seed, base: None, recalibrate: false }
     }
-    let data = Dataset::from_rows(&xs, &ys);
-    Some(Booster::train_weighted(&params, &data, weights.as_deref()))
+
+    /// Continue from `base`, appending `self.rounds` trees.
+    pub fn with_base(mut self, base: &'a Booster) -> Self {
+        self.base = Some(base);
+        self
+    }
+
+    /// Enable the mean-residual intercept correction (meta adaptation).
+    pub fn recalibrated(mut self) -> Self {
+        self.recalibrate = true;
+        self
+    }
 }
 
-/// Warm-start training set: rows from `warm` (a transferred database,
-/// see [`crate::tuner::database::TransferDb::warm_start_for`]) precede
-/// the freshly profiled rows, so a model is trainable *before the first
-/// profiled batch* of a run.
-fn warm_rows(
-    fresh: (Vec<Vec<f64>>, Vec<f64>),
-    warm: (Vec<Vec<f64>>, Vec<f64>),
-) -> (Vec<Vec<f64>>, Vec<f64>) {
-    let (mut xs, mut ys) = warm;
-    xs.extend(fresh.0);
-    ys.extend(fresh.1);
-    (xs, ys)
+/// Shared training tail: readiness guard (≥ 2 rows) + boosting, with
+/// optional continuation/recalibration. A `base` whose feature width
+/// does not match the set's rows (e.g. a meta artifact from a different
+/// feature layout) falls back to a cold fit rather than poisoning
+/// predictions.
+fn fit_impl(
+    params: GbdtParams,
+    set: &TrainSet,
+    opts: &FitOpts,
+) -> Option<Booster> {
+    if set.len() < 2 {
+        // too few rows to fit anything fresh — but a continuation base
+        // is already a usable ensemble; hand it back unchanged
+        return opts.base.cloned();
+    }
+    let data = Dataset::from_rows(set.xs(), set.ys());
+    let train_opts = TrainOpts::weighted(set.weights());
+    let base = match opts.base {
+        Some(b) if b.n_features == data.n_features => b,
+        _ => {
+            return Some(Booster::fit(
+                &params.with_seed(opts.seed).with_rounds(opts.rounds),
+                &data,
+                &train_opts,
+            ))
+        }
+    };
+    let recal;
+    let base = if opts.recalibrate {
+        let mut shifted = base.clone();
+        let resid: f64 = set
+            .xs()
+            .iter()
+            .zip(set.ys())
+            .map(|(x, y)| y - base.predict_row(x))
+            .sum::<f64>()
+            / set.len() as f64;
+        shifted.base_score += resid;
+        recal = shifted;
+        &recal
+    } else {
+        base
+    };
+    Some(Booster::fit(
+        &params.with_rounds(opts.rounds),
+        &data,
+        &TrainOpts { init: Some(base), ..train_opts },
+    ))
 }
 
 /// A trained P model.
@@ -62,54 +124,17 @@ pub struct ModelP {
 }
 
 impl ModelP {
-    fn params(rounds: usize, seed: u64) -> GbdtParams {
-        GbdtParams::model_p().with_rounds(rounds).with_seed(seed)
-    }
-
-    fn from_booster(booster: Booster) -> ModelP {
+    /// Wrap a trained/deserialized ensemble (e.g. a meta artifact).
+    pub fn from_booster(booster: Booster) -> ModelP {
         ModelP { flat: booster.flatten(), booster }
     }
 
-    /// Train on the database's valid records (`None` if < 2 rows).
-    /// Coarse tier-0 estimates participate at
-    /// [`crate::tuner::database::COARSE_LABEL_WEIGHT`]; a database
-    /// without them trains through the unweighted path bit-identically.
-    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
-        let (xs, ys, ws) = db.train_p_tiered();
-        fit_weighted(Self::params(rounds, seed), xs, ys, ws)
-            .map(ModelP::from_booster)
-    }
-
-    /// Transfer warm-start variant: transferred rows first, fresh rows
-    /// after (see [`warm_rows`]). Transferred rows are always measured
-    /// (the transfer store drops coarse records) and weigh 1.0; fresh
-    /// coarse rows keep their tier weight.
-    pub fn train_warm(
-        fresh: &Database,
-        warm: &Database,
-        rounds: usize,
-        seed: u64,
-    ) -> Option<ModelP> {
-        let (fx, fy, fw) = fresh.train_p_tiered();
-        let (wx, wy) = warm.train_p();
-        let ws = fw.map(|fw| {
-            let mut w = vec![1.0; wx.len()];
-            w.extend(fw);
-            w
-        });
-        let (xs, ys) = warm_rows((fx, fy), (wx, wy));
-        fit_weighted(Self::params(rounds, seed), xs, ys, ws)
-            .map(ModelP::from_booster)
-    }
-
-    /// TVM-approach variant: all records, invalids penalized.
-    pub fn train_tvm(
-        db: &Database,
-        rounds: usize,
-        seed: u64,
-    ) -> Option<ModelP> {
-        let (xs, ys) = db.train_p_with_penalty();
-        fit(Self::params(rounds, seed), xs, ys)
+    /// Train on an assembled [`TrainSet`] (see
+    /// [`crate::tuner::train::TrainSet::extend_p`] /
+    /// [`crate::tuner::train::TrainSet::extend_p_penalty`]); `None` if
+    /// the set has < 2 rows and no continuation base.
+    pub fn fit(set: &TrainSet, opts: &FitOpts) -> Option<ModelP> {
+        fit_impl(GbdtParams::model_p(), set, opts)
             .map(ModelP::from_booster)
     }
 
@@ -139,35 +164,18 @@ pub struct ModelV {
 }
 
 impl ModelV {
-    fn params(rounds: usize, seed: u64) -> GbdtParams {
-        GbdtParams::model_v().with_rounds(rounds).with_seed(seed)
-    }
-
-    fn from_booster(booster: Booster) -> ModelV {
+    /// Wrap a trained/deserialized ensemble (e.g. a meta artifact).
+    pub fn from_booster(booster: Booster) -> ModelV {
         ModelV { flat: booster.flatten(), booster }
     }
 
-    /// Train on all records, labelled by validity (`None` if < 2 rows).
-    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
-        // degenerate labels (all same class) would still train but predict a
-        // constant; that is fine — the explorer falls back gracefully.
-        let (xs, ys) = db.train_v();
-        fit(Self::params(rounds, seed), xs, ys)
-            .map(ModelV::from_booster)
-    }
-
-    /// Transfer warm-start variant of [`ModelV::train`]: transferred
-    /// rows first, fresh rows after. The validity boundary is
-    /// scratchpad-pressure driven — a near-layer-independent function of
-    /// the schedule — so V is the model that transfers best.
-    pub fn train_warm(
-        fresh: &Database,
-        warm: &Database,
-        rounds: usize,
-        seed: u64,
-    ) -> Option<ModelV> {
-        let (xs, ys) = warm_rows(fresh.train_v(), warm.train_v());
-        fit(Self::params(rounds, seed), xs, ys)
+    /// Train on an assembled [`TrainSet`] (see
+    /// [`crate::tuner::train::TrainSet::extend_v`]); `None` if the set
+    /// has < 2 rows and no continuation base. Degenerate labels (all
+    /// same class) still train but predict a constant; that is fine —
+    /// the explorer falls back gracefully.
+    pub fn fit(set: &TrainSet, opts: &FitOpts) -> Option<ModelV> {
+        fit_impl(GbdtParams::model_v(), set, opts)
             .map(ModelV::from_booster)
     }
 
@@ -211,31 +219,16 @@ pub struct ModelA {
 }
 
 impl ModelA {
-    fn params(rounds: usize, seed: u64) -> GbdtParams {
-        GbdtParams::model_a().with_rounds(rounds).with_seed(seed)
-    }
-
-    fn from_booster(booster: Booster) -> ModelA {
+    /// Wrap a trained/deserialized ensemble (e.g. a meta artifact).
+    pub fn from_booster(booster: Booster) -> ModelA {
         ModelA { flat: booster.flatten(), booster }
     }
 
-    /// Train on valid records, visible ⊕ hidden (`None` if < 2 rows).
-    pub fn train(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
-        let (xs, ys) = db.train_a();
-        fit(Self::params(rounds, seed), xs, ys)
-            .map(ModelA::from_booster)
-    }
-
-    /// Transfer warm-start variant of [`ModelA::train`]: transferred
-    /// rows (visible ⊕ stored hidden features) first, fresh rows after.
-    pub fn train_warm(
-        fresh: &Database,
-        warm: &Database,
-        rounds: usize,
-        seed: u64,
-    ) -> Option<ModelA> {
-        let (xs, ys) = warm_rows(fresh.train_a(), warm.train_a());
-        fit(Self::params(rounds, seed), xs, ys)
+    /// Train on an assembled [`TrainSet`] (see
+    /// [`crate::tuner::train::TrainSet::extend_a`]); `None` if the set
+    /// has < 2 rows and no continuation base.
+    pub fn fit(set: &TrainSet, opts: &FitOpts) -> Option<ModelA> {
+        fit_impl(GbdtParams::model_a(), set, opts)
             .map(ModelA::from_booster)
     }
 
@@ -265,8 +258,28 @@ impl ModelA {
 mod tests {
     use super::*;
     use crate::compiler::schedule::{Schedule, SpaceKind};
-    use crate::tuner::database::{Fidelity, Outcome, TrialRecord};
+    use crate::tuner::database::{Database, Fidelity, Outcome,
+                                 TrialRecord};
+    use crate::tuner::train::Provenance;
     use crate::tuner::DEFAULT_V_MARGIN;
+
+    fn fit_p(db: &Database, rounds: usize, seed: u64) -> Option<ModelP> {
+        let mut set = TrainSet::new();
+        set.extend_p(db, Provenance::Cold);
+        ModelP::fit(&set, &FitOpts::new(rounds, seed))
+    }
+
+    fn fit_v(db: &Database, rounds: usize, seed: u64) -> Option<ModelV> {
+        let mut set = TrainSet::new();
+        set.extend_v(db, Provenance::Cold);
+        ModelV::fit(&set, &FitOpts::new(rounds, seed))
+    }
+
+    fn fit_a(db: &Database, rounds: usize, seed: u64) -> Option<ModelA> {
+        let mut set = TrainSet::new();
+        set.extend_a(db, Provenance::Cold);
+        ModelA::fit(&set, &FitOpts::new(rounds, seed))
+    }
 
     fn vis(s: &Schedule) -> Vec<f64> {
         SpaceKind::Paper.visible_features(s)
@@ -305,7 +318,7 @@ mod tests {
     #[test]
     fn p_learns_cycle_ordering() {
         let db = synth_db(128);
-        let p = ModelP::train(&db, 80, 1).unwrap();
+        let p = fit_p(&db, 80, 1).unwrap();
         let f = |th: usize| p.predict(&vis(&sched(th, 1)));
         assert!(f(2) > f(12), "small tiles must predict slower");
     }
@@ -313,7 +326,7 @@ mod tests {
     #[test]
     fn v_learns_validity_boundary() {
         let db = synth_db(256);
-        let v = ModelV::train(&db, 80, 1).unwrap();
+        let v = fit_v(&db, 80, 1).unwrap();
         let f = |th: usize, vt: usize| {
             v.predict_valid(&vis(&sched(th, vt)), DEFAULT_V_MARGIN)
         };
@@ -324,7 +337,7 @@ mod tests {
     #[test]
     fn veto_margin_is_configurable() {
         let db = synth_db(256);
-        let v = ModelV::train(&db, 80, 1).unwrap();
+        let v = fit_v(&db, 80, 1).unwrap();
         let feats = vis(&sched(4, 1));
         let m = v.margin(&feats);
         assert!(v.predict_valid(&feats, DEFAULT_V_MARGIN));
@@ -336,7 +349,7 @@ mod tests {
     #[test]
     fn a_uses_hidden_features() {
         let db = synth_db(128);
-        let a = ModelA::train(&db, 80, 1).unwrap();
+        let a = fit_a(&db, 80, 1).unwrap();
         let imp = a.importance();
         assert_eq!(imp.len(), SpaceKind::Paper.n_visible() + 2);
         // the hidden features are informative (th*4 mirrors th)
@@ -347,9 +360,9 @@ mod tests {
     fn batch_apis_match_single_row_bitwise() {
         use crate::gbdt::FeatureMatrix;
         let db = synth_db(256);
-        let p = ModelP::train(&db, 60, 3).unwrap();
-        let v = ModelV::train(&db, 60, 3).unwrap();
-        let a = ModelA::train(&db, 60, 3).unwrap();
+        let p = fit_p(&db, 60, 3).unwrap();
+        let v = fit_v(&db, 60, 3).unwrap();
+        let a = fit_a(&db, 60, 3).unwrap();
         let rows: Vec<Vec<f64>> =
             (1..=16).map(|th| vis(&sched(th, 1 + th % 4))).collect();
         let m = FeatureMatrix::from_rows(&rows);
@@ -382,24 +395,33 @@ mod tests {
     #[test]
     fn too_few_records_returns_none() {
         let db = synth_db(1);
-        assert!(ModelP::train(&db, 10, 0).is_none());
-        assert!(ModelA::train(&db, 10, 0).is_none());
+        assert!(fit_p(&db, 10, 0).is_none());
+        assert!(fit_a(&db, 10, 0).is_none());
     }
 
     #[test]
     fn warm_start_trains_before_any_fresh_record() {
         let warm = synth_db(256);
         let fresh = Database::new("target");
-        assert!(ModelP::train(&fresh, 40, 1).is_none(),
+        assert!(fit_p(&fresh, 40, 1).is_none(),
                 "cold model needs fresh records");
-        let p = ModelP::train_warm(&fresh, &warm, 80, 1).unwrap();
+        let mut ps = TrainSet::new();
+        ps.extend_p(&warm, Provenance::Warm)
+            .extend_p(&fresh, Provenance::Cold);
+        let p = ModelP::fit(&ps, &FitOpts::new(80, 1)).unwrap();
         let f = |th: usize| p.predict(&vis(&sched(th, 1)));
         assert!(f(2) > f(12),
                 "transferred records alone must order the landscape");
-        let v = ModelV::train_warm(&fresh, &warm, 80, 1).unwrap();
+        let mut vs = TrainSet::new();
+        vs.extend_v(&warm, Provenance::Warm)
+            .extend_v(&fresh, Provenance::Cold);
+        let v = ModelV::fit(&vs, &FitOpts::new(80, 1)).unwrap();
         assert!(v.predict_valid(&vis(&sched(4, 1)), DEFAULT_V_MARGIN));
         assert!(!v.predict_valid(&vis(&sched(16, 4)), DEFAULT_V_MARGIN));
-        assert!(ModelA::train_warm(&fresh, &warm, 40, 1).is_some());
+        let mut as_ = TrainSet::new();
+        as_.extend_a(&warm, Provenance::Warm)
+            .extend_a(&fresh, Provenance::Cold);
+        assert!(ModelA::fit(&as_, &FitOpts::new(40, 1)).is_some());
     }
 
     #[test]
@@ -423,7 +445,7 @@ mod tests {
                 fidelity: Fidelity::Coarse,
             });
         }
-        let p = ModelP::train(&coarse_only, 80, 1).unwrap();
+        let p = fit_p(&coarse_only, 80, 1).unwrap();
         let f = |th: usize| p.predict(&vis(&sched(th, 1)));
         assert!(f(2) > f(12),
                 "coarse-only training must order the landscape");
@@ -444,7 +466,7 @@ mod tests {
                 fidelity: Fidelity::Coarse,
             });
         }
-        let pm = ModelP::train(&mixed, 80, 1).unwrap();
+        let pm = fit_p(&mixed, 80, 1).unwrap();
         let fm = |th: usize| pm.predict(&vis(&sched(th, 1)));
         assert!(fm(2) > fm(12),
                 "measured labels must outvote down-weighted coarse ones");
@@ -465,7 +487,95 @@ mod tests {
             outcome: Outcome::Valid { cycles: 70_000 },
             fidelity: Fidelity::Full,
         });
-        assert!(ModelP::train(&fresh, 10, 0).is_none());
-        assert!(ModelP::train_warm(&fresh, &warm, 10, 0).is_some());
+        assert!(fit_p(&fresh, 10, 0).is_none());
+        let mut set = TrainSet::new();
+        set.extend_p(&warm, Provenance::Warm)
+            .extend_p(&fresh, Provenance::Cold);
+        assert!(ModelP::fit(&set, &FitOpts::new(10, 0)).is_some());
+    }
+
+    #[test]
+    fn continuation_base_carries_a_model_with_too_few_rows() {
+        // the meta path: an empty run still gets a usable model when a
+        // base ensemble is supplied, so tuning is model-guided from
+        // round 1
+        let corpus = synth_db(128);
+        let base = fit_p(&corpus, 60, 1).unwrap().booster;
+        let empty = TrainSet::new();
+        assert!(ModelP::fit(&empty, &FitOpts::new(10, 0)).is_none());
+        let p = ModelP::fit(&empty,
+                            &FitOpts::new(10, 0).with_base(&base))
+            .unwrap();
+        let f = |th: usize| p.predict(&vis(&sched(th, 1)));
+        assert!(f(2) > f(12), "base alone must order the landscape");
+        assert_eq!(p.booster.trees.len(), base.trees.len(),
+                   "nothing to adapt on -> base returned unchanged");
+    }
+
+    #[test]
+    fn recalibration_shifts_the_level_not_the_shape() {
+        // corpus labels live 3 log2 units below the run's: after
+        // recalibrated adaptation on a handful of run rows, predictions
+        // land near the run's level
+        let corpus = synth_db(128);
+        let base = fit_p(&corpus, 120, 1).unwrap().booster;
+        let mut run = Database::new("run");
+        for i in 0..8usize {
+            let th = 1 + 2 * (i % 8);
+            let s = sched(th, 1);
+            run.push(TrialRecord {
+                space_index: i,
+                schedule: s,
+                visible: vis(&s),
+                hidden: vec![],
+                outcome: Outcome::Valid {
+                    cycles: 8 * (200_000 / th + 10_000) as u64,
+                },
+                fidelity: Fidelity::Full,
+            });
+        }
+        let mut set = TrainSet::new();
+        set.extend_p(&run, Provenance::Cold);
+        let adapted = ModelP::fit(
+            &set,
+            &FitOpts::new(12, 0).with_base(&base).recalibrated(),
+        )
+        .unwrap();
+        let before: f64 = set
+            .xs()
+            .iter()
+            .zip(set.ys())
+            .map(|(x, y)| (y - base.predict_row(x)).abs())
+            .sum::<f64>()
+            / set.len() as f64;
+        let after: f64 = set
+            .xs()
+            .iter()
+            .zip(set.ys())
+            .map(|(x, y)| (y - adapted.predict(x)).abs())
+            .sum::<f64>()
+            / set.len() as f64;
+        assert!(after < 0.5 * before,
+                "recalibrated adaptation must close the level gap: \
+                 {after} vs {before}");
+        // and the landscape shape survives
+        let f = |th: usize| adapted.predict(&vis(&sched(th, 1)));
+        assert!(f(2) > f(12));
+    }
+
+    #[test]
+    fn base_with_wrong_width_falls_back_to_cold_fit() {
+        let db = synth_db(128);
+        let base = fit_a(&db, 40, 1).unwrap().booster; // wider features
+        let mut set = TrainSet::new();
+        set.extend_p(&db, Provenance::Cold);
+        let p = ModelP::fit(&set,
+                            &FitOpts::new(30, 1).with_base(&base))
+            .unwrap();
+        let cold = fit_p(&db, 30, 1).unwrap();
+        let feats = vis(&sched(5, 1));
+        assert_eq!(p.predict(&feats).to_bits(),
+                   cold.predict(&feats).to_bits(),
+                   "width-mismatched base must be ignored");
     }
 }

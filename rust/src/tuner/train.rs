@@ -1,0 +1,344 @@
+//! Unified training-set assembly — the one path every model trains
+//! through.
+//!
+//! Historically each model grew its own row-assembly entry points — a
+//! per-model method on the models plus one per data source on the
+//! database — which multiplied whenever a new data source appeared. A
+//! [`TrainSet`] replaces the zoo: callers append rows from any number of
+//! databases — cold run records, warm-transferred records, meta-corpus
+//! records — via the per-model `extend_*` views, and each model's single
+//! `fit(&TrainSet, &FitOpts)` consumes the result. Warm-start, tiered
+//! COARSE weighting, the TVM penalty labelling, and meta-adaptation are
+//! compositions of extends + options, not separate methods.
+//!
+//! Row order is append order, and the builders walk records in database
+//! order — so "warm rows first, then fresh" reproduces the exact row
+//! layout (and therefore bit-identical boosters) of the pre-`TrainSet`
+//! training paths.
+
+use super::database::{Database, Fidelity, COARSE_LABEL_WEIGHT};
+use crate::compiler::features;
+
+/// Where a training row came from. Carried per row so fit options (and
+/// diagnostics) can treat run-local measurements differently from
+/// imported ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Measured by the current run.
+    Cold,
+    /// Imported from prior logs via [`super::database::TransferDb`]
+    /// warm-start matching.
+    Warm,
+    /// Drawn from the offline meta-training corpus.
+    Meta,
+}
+
+/// A model's assembled training set: feature rows, labels, per-row
+/// weights, and per-row provenance.
+#[derive(Clone, Debug, Default)]
+pub struct TrainSet {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    ws: Vec<f64>,
+    prov: Vec<Provenance>,
+    any_weighted: bool,
+}
+
+impl TrainSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        TrainSet::default()
+    }
+
+    /// Append one row. A weight of exactly 1.0 keeps the set on the
+    /// unweighted training path (bit-identical to pre-weighting code);
+    /// any other weight switches [`TrainSet::weights`] on for the whole
+    /// set.
+    pub fn push_row(
+        &mut self,
+        x: Vec<f64>,
+        y: f64,
+        w: f64,
+        prov: Provenance,
+    ) {
+        if w != 1.0 {
+            self.any_weighted = true;
+        }
+        self.xs.push(x);
+        self.ys.push(y);
+        self.ws.push(w);
+        self.prov.push(prov);
+    }
+
+    /// Model-P view of `db`: full-fidelity *valid* records at weight 1.0
+    /// (the paper trains P exclusively on valid configurations) plus
+    /// coarse tier-0 estimates down-weighted to [`COARSE_LABEL_WEIGHT`]
+    /// — they order the landscape but carry level error, so they steer
+    /// without outvoting measured labels. Label: `log2(cycles)`.
+    pub fn extend_p(&mut self, db: &Database, prov: Provenance) -> &mut Self {
+        for r in &db.records {
+            if let Some(y) = r.perf_label() {
+                let w = match r.fidelity {
+                    Fidelity::Full => 1.0,
+                    Fidelity::Coarse => COARSE_LABEL_WEIGHT,
+                };
+                self.push_row(r.visible.clone(), y, w, prov);
+            }
+        }
+        self
+    }
+
+    /// Model-V view of `db`: all *full-fidelity* records plus coarse
+    /// *invalid* records, label = validity. A tier-0 "valid" is only a
+    /// plausibility estimate and must not teach V the config actually
+    /// runs; a tier-0 invalid comes from the static capacity check,
+    /// which is a sound subset of runtime-invalid, so it is a real
+    /// label.
+    pub fn extend_v(&mut self, db: &Database, prov: Provenance) -> &mut Self {
+        for r in &db.records {
+            if r.fidelity == Fidelity::Full || !r.outcome.is_valid() {
+                self.push_row(r.visible.clone(), r.valid_label(), 1.0,
+                              prov);
+            }
+        }
+        self
+    }
+
+    /// Model-A view of `db`: visible ⊕ hidden features of valid records.
+    /// Records without hidden features (e.g. transferred from a space
+    /// version whose hidden layout cannot be projected onto this one)
+    /// are skipped — they still train P and V, which are visible-only.
+    /// Coarse records never compile, so they carry no hidden features
+    /// and the same skip keeps tier-0 estimates out of A.
+    pub fn extend_a(&mut self, db: &Database, prov: Provenance) -> &mut Self {
+        for r in &db.records {
+            if r.hidden.is_empty() {
+                continue;
+            }
+            if let Some(y) = r.perf_label() {
+                self.push_row(
+                    features::combined_features(&r.visible, &r.hidden),
+                    y,
+                    1.0,
+                    prov,
+                );
+            }
+        }
+        self
+    }
+
+    /// TVM-approach view of `db`: all *full-fidelity* records; invalid
+    /// ones get a penalty label (worst observed + 1, i.e. "slower than
+    /// anything seen" — 30.0 when nothing valid was seen). The TVM
+    /// baseline never prescreens, but a log replayed through this view
+    /// could carry coarse records — they are estimates, not
+    /// measurements, and are excluded.
+    pub fn extend_p_penalty(
+        &mut self,
+        db: &Database,
+        prov: Provenance,
+    ) -> &mut Self {
+        let worst = db
+            .records
+            .iter()
+            .filter(|r| r.fidelity == Fidelity::Full)
+            .filter_map(|r| r.perf_label())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let penalty = if worst.is_finite() { worst + 1.0 } else { 30.0 };
+        for r in &db.records {
+            if r.fidelity != Fidelity::Full {
+                continue;
+            }
+            self.push_row(
+                r.visible.clone(),
+                r.perf_label().unwrap_or(penalty),
+                1.0,
+                prov,
+            );
+        }
+        self
+    }
+
+    /// Center the labels of the rows appended since index `from` around
+    /// their mean. Meta training calls this once per ingested log: each
+    /// log's `log2(cycles)` labels carry a layer- and hardware-specific
+    /// level, and centering per log pools them into one corpus that
+    /// teaches the *shape* of the performance landscape without the
+    /// levels fighting each other (the run-time level comes back via
+    /// `FitOpts::recalibrate`).
+    pub fn center_from(&mut self, from: usize) -> &mut Self {
+        let tail = &mut self.ys[from..];
+        if tail.is_empty() {
+            return self;
+        }
+        let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+        for y in tail {
+            *y -= mean;
+        }
+        self
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Whether the set holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Rows appended with the given provenance.
+    pub fn n_from(&self, prov: Provenance) -> usize {
+        self.prov.iter().filter(|&&p| p == prov).count()
+    }
+
+    /// Feature rows, append order.
+    pub fn xs(&self) -> &[Vec<f64>] {
+        &self.xs
+    }
+
+    /// Labels, append order.
+    pub fn ys(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// Per-row weights — `None` when every row is weight 1.0, so the
+    /// unweighted boosting path (and its bit-exact traces) runs whenever
+    /// no down-weighted row is present.
+    pub fn weights(&self) -> Option<&[f64]> {
+        if self.any_weighted {
+            Some(&self.ws)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::{Schedule, SpaceKind};
+    use crate::tuner::database::{Outcome, TrialRecord};
+
+    fn rec(i: usize, outcome: Outcome) -> TrialRecord {
+        let schedule = Schedule { tile_h: i + 1, tile_w: 2, tile_oc: 16,
+                                  tile_ic: 16, n_vthreads: 1,
+                                  ..Default::default() };
+        TrialRecord {
+            space_index: i,
+            schedule,
+            visible: SpaceKind::Paper.visible_features(&schedule),
+            hidden: vec![1.0, 2.0, 3.0],
+            outcome,
+            fidelity: Fidelity::Full,
+        }
+    }
+
+    fn coarse_rec(i: usize, outcome: Outcome) -> TrialRecord {
+        TrialRecord { hidden: vec![], fidelity: Fidelity::Coarse,
+                      ..rec(i, outcome) }
+    }
+
+    #[test]
+    fn per_model_views() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Crash));
+        db.push(rec(2, Outcome::Valid { cycles: 2048 }));
+        db.push(rec(3, Outcome::WrongOutput));
+        let mut p = TrainSet::new();
+        p.extend_p(&db, Provenance::Cold);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.ys(), &[10.0, 11.0]); // log2
+        assert!(p.weights().is_none(), "no coarse row -> unweighted");
+        let mut v = TrainSet::new();
+        v.extend_v(&db, Provenance::Cold);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.ys(), &[1.0, 0.0, 1.0, 0.0]);
+        let mut a = TrainSet::new();
+        a.extend_a(&db, Provenance::Cold);
+        assert_eq!(a.xs()[0].len(),
+                   rec(0, Outcome::Crash).visible.len() + 3);
+        let mut pen = TrainSet::new();
+        pen.extend_p_penalty(&db, Provenance::Cold);
+        assert_eq!(pen.len(), 4);
+        assert_eq!(pen.ys()[1], 12.0); // worst (11) + 1
+    }
+
+    #[test]
+    fn views_respect_fidelity_tiers() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Crash));
+        db.push(coarse_rec(2, Outcome::Valid { cycles: 2048 }));
+        db.push(coarse_rec(3, Outcome::Crash));
+        // P: both valids, the coarse one down-weighted
+        let mut p = TrainSet::new();
+        p.extend_p(&db, Provenance::Cold);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.ys(), &[10.0, 11.0]);
+        assert_eq!(p.weights(), Some(&[1.0, COARSE_LABEL_WEIGHT][..]));
+        // V: full records + coarse invalid; coarse "valid" is only a
+        // plausibility estimate and is excluded
+        let mut v = TrainSet::new();
+        v.extend_v(&db, Provenance::Cold);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.ys(), &[1.0, 0.0, 0.0]);
+        // A: coarse records carry no hidden features and are skipped
+        let mut a = TrainSet::new();
+        a.extend_a(&db, Provenance::Cold);
+        assert_eq!(a.len(), 1);
+        // TVM penalty view: full records only
+        let mut pen = TrainSet::new();
+        pen.extend_p_penalty(&db, Provenance::Cold);
+        assert_eq!(pen.len(), 2);
+    }
+
+    #[test]
+    fn weights_stay_none_without_downweighted_rows() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        db.push(rec(1, Outcome::Valid { cycles: 2048 }));
+        let mut warm = TrainSet::new();
+        warm.extend_p(&db, Provenance::Warm);
+        warm.extend_p(&db, Provenance::Cold);
+        assert_eq!(warm.len(), 4);
+        assert!(warm.weights().is_none());
+        assert_eq!(warm.n_from(Provenance::Warm), 2);
+        // one coarse row anywhere flips the whole set to weighted
+        let mut tiered = Database::new("conv1");
+        tiered.push(rec(0, Outcome::Valid { cycles: 1024 }));
+        tiered.push(coarse_rec(1, Outcome::Valid { cycles: 2048 }));
+        let mut mixed = TrainSet::new();
+        mixed.extend_p(&db, Provenance::Warm);
+        mixed.extend_p(&tiered, Provenance::Cold);
+        assert_eq!(mixed.weights(),
+                   Some(&[1.0, 1.0, 1.0, COARSE_LABEL_WEIGHT][..]));
+    }
+
+    #[test]
+    fn center_from_touches_only_the_tail() {
+        let mut set = TrainSet::new();
+        set.push_row(vec![0.0], 10.0, 1.0, Provenance::Meta);
+        let start = set.len();
+        set.push_row(vec![1.0], 4.0, 1.0, Provenance::Meta);
+        set.push_row(vec![2.0], 8.0, 1.0, Provenance::Meta);
+        set.center_from(start);
+        assert_eq!(set.ys(), &[10.0, -2.0, 2.0]);
+        // empty tail is a no-op
+        let n = set.len();
+        set.center_from(n);
+        assert_eq!(set.ys(), &[10.0, -2.0, 2.0]);
+    }
+
+    #[test]
+    fn penalty_defaults_when_nothing_valid() {
+        let mut db = Database::new("conv1");
+        db.push(rec(0, Outcome::Crash));
+        db.push(rec(1, Outcome::WrongOutput));
+        let mut pen = TrainSet::new();
+        pen.extend_p_penalty(&db, Provenance::Cold);
+        assert_eq!(pen.ys(), &[30.0, 30.0]);
+    }
+}

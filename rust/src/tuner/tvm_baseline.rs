@@ -5,9 +5,10 @@
 
 use super::database::Database;
 use super::explorer::Explorer;
-use super::models::ModelP;
+use super::models::{FitOpts, ModelP};
 use super::report::TuningTrace;
 use super::space::SearchSpace;
+use super::train::{Provenance, TrainSet};
 use super::{salt, Tuner, TunerConfig, TuningEnv};
 use crate::engine::Engine;
 use crate::obs::Stage;
@@ -85,7 +86,10 @@ pub(crate) fn select_batch(
     }
     let p = {
         let _train = rec.span(Stage::Train);
-        ModelP::train_tvm(db, cfg.boost_rounds, cfg.seed ^ round)
+        let mut set = TrainSet::new();
+        set.extend_p_penalty(db, Provenance::Cold);
+        ModelP::fit(&set,
+                    &FitOpts::new(cfg.boost_rounds, cfg.seed ^ round))
     };
     match p {
         None => space.sample_unmeasured(rng, n),

@@ -131,6 +131,24 @@ impl TargetMeta {
         self.signature() == other.signature()
     }
 
+    /// Stable text key over the capacity fields (name excluded): two
+    /// targets share a key iff [`TargetMeta::same_capacities`] holds.
+    /// The meta-training corpus buckets model-V ensembles under this key
+    /// — validity is a hard function of buffer geometry, so a V trained
+    /// on one capacity class must never serve another.
+    pub fn capacity_key(&self) -> String {
+        format!(
+            "i{}w{}a{}u{}b{}k{}d{}",
+            self.log_inp_buff_size,
+            self.log_wgt_buff_size,
+            self.log_acc_buff_size,
+            self.log_uop_buff_size,
+            self.log_batch,
+            self.log_block,
+            self.dma_bytes_per_cycle
+        )
+    }
+
     /// Serialize as the tuning-log `"target"` object.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
@@ -212,6 +230,19 @@ mod tests {
         assert_ne!(a, b, "PartialEq still sees the name");
         let c = TargetMeta::of(&target("zcu104").unwrap());
         assert!(!a.same_capacities(&c));
+    }
+
+    #[test]
+    fn capacity_key_tracks_same_capacities() {
+        let a = TargetMeta::of(&target("zcu102").unwrap());
+        let mut clone = a.clone();
+        clone.name = "custom-clone".to_string();
+        assert_eq!(a.capacity_key(), clone.capacity_key(),
+                   "key ignores the name");
+        for name in ["zcu104", "edge-small", "hiband"] {
+            let other = TargetMeta::of(&target(name).unwrap());
+            assert_ne!(a.capacity_key(), other.capacity_key());
+        }
     }
 
     #[test]

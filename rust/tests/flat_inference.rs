@@ -12,11 +12,14 @@
 //! 3. The chunked scoring sweep is invariant in `jobs`.
 
 use ml2tuner::compiler::schedule::{Schedule, SpaceKind};
-use ml2tuner::gbdt::{Booster, Dataset, FeatureMatrix, GbdtParams, Objective};
+use ml2tuner::gbdt::{
+    Booster, Dataset, FeatureMatrix, GbdtParams, Objective, TrainOpts,
+};
 use ml2tuner::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::{score_candidates, Explorer};
-use ml2tuner::tuner::models::{ModelP, ModelV};
+use ml2tuner::tuner::models::{FitOpts, ModelP, ModelV};
 use ml2tuner::tuner::space::SearchSpace;
+use ml2tuner::tuner::train::{Provenance, TrainSet};
 use ml2tuner::tuner::TuningEnv;
 use ml2tuner::util::rng::Rng;
 use ml2tuner::vta::targets;
@@ -62,8 +65,9 @@ fn flat_batch_equals_per_row_bitwise_across_targets_spaces_objectives() {
                     .with_rounds(40)
                     .with_objective(obj)
                     .with_seed(7);
-                let b = Booster::train(&params,
-                                       &Dataset::from_rows(&xs, ys));
+                let b = Booster::fit(&params,
+                                     &Dataset::from_rows(&xs, ys),
+                                     &TrainOpts::default());
                 let batch = b.flatten().predict_batch(&m);
                 assert_eq!(batch.len(), xs.len());
                 for (row, &got) in xs.iter().zip(&batch) {
@@ -185,8 +189,13 @@ fn trained_models(kind: SpaceKind) -> (SearchSpace, ModelP, ModelV) {
             fidelity: Fidelity::Full,
         });
     }
-    let p = ModelP::train(&db, 60, 1).unwrap();
-    let v = ModelV::train(&db, 60, 1).unwrap();
+    let opts = FitOpts::new(60, 1);
+    let mut pset = TrainSet::new();
+    pset.extend_p(&db, Provenance::Cold);
+    let mut vset = TrainSet::new();
+    vset.extend_v(&db, Provenance::Cold);
+    let p = ModelP::fit(&pset, &opts).unwrap();
+    let v = ModelV::fit(&vset, &opts).unwrap();
     (space, p, v)
 }
 

@@ -1,0 +1,154 @@
+//! Integration pins for the incremental/meta training paths: warm
+//! continuation appends trees without changing budget or determinism,
+//! `--retrain-every 1` degenerates bit-identically to the
+//! non-incremental loop, unchanged-prefix continuation is bit-identical
+//! to a full refit, and a corpus-trained meta artifact makes the run
+//! model-guided from its very first batch (and survives the
+//! save/load roundtrip unchanged).
+
+use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::engine::Engine;
+use ml2tuner::obs::Counter;
+use ml2tuner::tuner::database::{Database, TransferDb};
+use ml2tuner::tuner::meta::{MetaArtifact, MetaStore};
+use ml2tuner::tuner::ml2tuner::Ml2Tuner;
+use ml2tuner::tuner::models::{FitOpts, ModelP};
+use ml2tuner::tuner::report::TuningTrace;
+use ml2tuner::tuner::train::{Provenance, TrainSet};
+use ml2tuner::tuner::{Tuner, TunerConfig, TuningEnv};
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::workloads::resnet18;
+
+fn env() -> TuningEnv {
+    TuningEnv::new(VtaConfig::zcu102(),
+                   resnet18::layer("conv5").unwrap())
+}
+
+fn indices(t: &TuningTrace) -> Vec<usize> {
+    t.trials.iter().map(|r| r.space_index).collect()
+}
+
+/// A profiled conv5 corpus log (stamped for the env's target, so the
+/// meta V bucket matches the run's capacity signature).
+fn corpus_db(e: &TuningEnv, n: usize) -> Database {
+    let mut db =
+        Database::for_layer_on(&e.layer, SpaceKind::Paper, e.hw());
+    for i in 0..n {
+        db.push(e.profile((i * 31) % e.space.len()));
+    }
+    db
+}
+
+#[test]
+fn retrain_every_one_matches_non_incremental_bitwise() {
+    // --retrain-every 1 forces a full refit every round: the
+    // incremental loop must degenerate to the stock one exactly
+    let e = env();
+    let base = TunerConfig { max_trials: 60, seed: 5,
+                             ..Default::default() };
+    let plain = Ml2Tuner::new(base.clone()).tune(&e);
+    let fallback = Ml2Tuner::new(TunerConfig {
+        incremental: true,
+        retrain_every: 1,
+        ..base
+    })
+    .tune(&e);
+    assert_eq!(indices(&plain), indices(&fallback),
+               "retrain-every=1 must fall back to full refits \
+                bit-identically");
+}
+
+#[test]
+fn incremental_run_appends_trees_and_stays_deterministic() {
+    let e = env();
+    let cfg = TunerConfig { max_trials: 60, seed: 5, incremental: true,
+                            ..Default::default() };
+    let engine = Engine::single_threaded();
+    let mut t = Ml2Tuner::new(cfg.clone());
+    let a = t.tune_with(&e, &engine);
+    assert_eq!(a.len(), 60, "continuation must not eat the budget");
+    let appended =
+        engine.recorder().snapshot().counter(Counter::TreesAppended);
+    assert!(appended > 0,
+            "later rounds must continue the previous ensembles");
+    let mut t2 = Ml2Tuner::new(cfg);
+    let b = t2.tune_with(&e, &Engine::single_threaded());
+    assert_eq!(indices(&a), indices(&b),
+               "incremental runs are deterministic per seed");
+}
+
+#[test]
+fn continuation_on_unchanged_rows_is_bit_identical_to_full_refit() {
+    // the model-level pin behind `--incremental`: fitting R1+R2 rounds
+    // cold equals fitting R1 then appending R2 on the same rows
+    let e = env();
+    let db = corpus_db(&e, 60);
+    let mut set = TrainSet::new();
+    set.extend_p(&db, Provenance::Cold);
+    let full = ModelP::fit(&set, &FitOpts::new(40, 3)).unwrap();
+    let base = ModelP::fit(&set, &FitOpts::new(28, 3)).unwrap();
+    let cont = ModelP::fit(
+        &set,
+        &FitOpts::new(12, 3).with_base(&base.booster),
+    )
+    .unwrap();
+    assert_eq!(full.booster.trees.len(), cont.booster.trees.len());
+    for i in (0..e.space.len()).step_by(97) {
+        let f = e.space.visible(i);
+        assert_eq!(full.predict(&f).to_bits(),
+                   cont.predict(&f).to_bits(),
+                   "unchanged-prefix continuation must be bit-identical");
+    }
+}
+
+#[test]
+fn meta_adapted_run_is_model_guided_from_round_one() {
+    let e = env();
+    let src = corpus_db(&e, 80);
+    let art = MetaArtifact::build(SpaceKind::Paper, &[&src], 60);
+    assert!(art.p.is_some(), "corpus must train a meta P");
+    let cfg = TunerConfig { max_trials: 30, seed: 9,
+                            ..Default::default() };
+    let cold = Ml2Tuner::new(cfg.clone()).tune(&e);
+    let engine = Engine::single_threaded();
+    let mut t = Ml2Tuner::new(cfg.clone()).with_meta(art.clone());
+    let a = t.tune_with(&e, &engine);
+    assert_eq!(a.tuner, "ml2tuner-meta");
+    assert_eq!(a.len(), 30);
+    assert!(
+        engine.recorder().snapshot().counter(Counter::MetaAdapted) > 0,
+        "per-round fits must adapt the meta base"
+    );
+    // the cold run burns its first rounds on random sampling (the
+    // min_train gate); the meta run ranks candidates from round 1
+    assert_ne!(indices(&cold)[..10], indices(&a)[..10],
+               "meta run must be model-guided from the first batch");
+    let mut t2 = Ml2Tuner::new(cfg).with_meta(art);
+    let b = t2.tune_with(&e, &Engine::single_threaded());
+    assert_eq!(indices(&a), indices(&b),
+               "meta-adapted runs are deterministic per seed");
+}
+
+#[test]
+fn meta_store_roundtrip_preserves_tuning_behaviour() {
+    let e = env();
+    let mut corpus = TransferDb::new();
+    corpus.add(corpus_db(&e, 60));
+    let store = MetaStore::build_with(&corpus, 40);
+    let dir = std::env::temp_dir().join("ml2tuner_meta_training_test");
+    std::fs::remove_dir_all(&dir).ok();
+    store.save(&dir).unwrap();
+    let mut loaded = MetaStore::load(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let mut built = store.clone();
+    let cfg = TunerConfig { max_trials: 20, seed: 11,
+                            ..Default::default() };
+    let a = Ml2Tuner::new(cfg.clone())
+        .with_meta(built.take_kind(SpaceKind::Paper).unwrap())
+        .tune(&e);
+    let b = Ml2Tuner::new(cfg)
+        .with_meta(loaded.take_kind(SpaceKind::Paper).unwrap())
+        .tune(&e);
+    assert_eq!(indices(&a), indices(&b),
+               "saved+loaded artifacts must drive the exact same run");
+}

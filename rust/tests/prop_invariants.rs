@@ -137,7 +137,7 @@ fn prop_gbdt_predictions_bounded_by_labels() {
     // leaves are weighted averages: an ensemble over [lo, hi] labels stays
     // within [lo-ε, hi+ε] (no-extrapolation property the explorer relies
     // on, see tuner::explorer docs)
-    use ml2tuner::gbdt::{Booster, Dataset, GbdtParams};
+    use ml2tuner::gbdt::{Booster, Dataset, GbdtParams, TrainOpts};
     prop::check(20, |g| {
         let n = g.usize_in(20, 120);
         let rng = g.rng();
@@ -152,8 +152,9 @@ fn prop_gbdt_predictions_bounded_by_labels() {
         let params = GbdtParams { boost_rounds: 40, max_depth: 4,
                                   learning_rate: 0.3,
                                   ..Default::default() };
-        let b = Booster::train(&params,
-                               &Dataset::from_rows(&rows, &labels));
+        let b = Booster::fit(&params,
+                             &Dataset::from_rows(&rows, &labels),
+                             &TrainOpts::default());
         for _ in 0..20 {
             let probe =
                 vec![rng.range_f64(-20.0, 30.0), rng.range_f64(-20.0, 30.0)];

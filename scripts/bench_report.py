@@ -165,6 +165,11 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="relative median regression that fails "
                          "(default 0.20)")
+    ap.add_argument("--filter", metavar="SUBSTR",
+                    help="keep only folded keys containing SUBSTR "
+                         "(splits one raw stream into per-PR medians "
+                         "files, e.g. the 'train P' rows -> "
+                         "BENCH_9.json)")
     ap.add_argument("--update-baseline", metavar="ARTIFACT",
                     help="promote a downloaded BENCH_*.json artifact "
                          "into --baseline and exit")
@@ -195,8 +200,13 @@ def main():
                  "or --current is given")
 
     benches = fold(args.raw)
+    if args.filter:
+        benches = {k: v for k, v in benches.items()
+                   if args.filter in k}
     if not benches:
-        print(f"error: no bench records in {args.raw}", file=sys.stderr)
+        where = (f"{args.raw} matching --filter '{args.filter}'"
+                 if args.filter else args.raw)
+        print(f"error: no bench records in {where}", file=sys.stderr)
         return 1
     out = {"schema": 1, "benches": benches}
     with open(args.out, "w", encoding="utf-8") as f:

@@ -15,10 +15,12 @@ comparisons, per ISSUE 6.
 import io
 import json
 import os
+import shutil
 import sys
 import tempfile
 import unittest
 from contextlib import redirect_stdout
+from unittest import mock
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
@@ -133,6 +135,58 @@ class BaselineGateTest(unittest.TestCase):
         self.assertEqual(code, 0)
         self.assertIn("compared 1 benchmarks", out)
         self.assertIn("no median regressions", out)
+
+
+class FilterTest(unittest.TestCase):
+    def test_filter_keeps_matching_keys_only(self):
+        # the BENCH_9.json split: one raw stream, per-PR medians files
+        tmp = tempfile.mkdtemp()
+        try:
+            raw = os.path.join(tmp, "raw.jsonl")
+            out = os.path.join(tmp, "out.json")
+            names = ("train P full refit (round 5, 50 rows)", "sweep")
+            with open(raw, "w", encoding="utf-8") as f:
+                for name in names:
+                    f.write(json.dumps({
+                        "suite": "tuner_bench", "name": name,
+                        "median_ns": 10, "mean_ns": 10, "iters": 3,
+                    }) + "\n")
+            argv = ["bench_report.py", "--raw", raw, "--out", out,
+                    "--baseline", os.path.join(tmp, "missing.json"),
+                    "--filter", "train P"]
+            with mock.patch.object(sys, "argv", argv), \
+                    redirect_stdout(io.StringIO()):
+                code = bench_report.main()
+            self.assertEqual(code, 0)
+            with open(out, encoding="utf-8") as f:
+                keys = list(json.load(f)["benches"])
+            self.assertEqual(
+                keys,
+                ["tuner_bench/train P full refit (round 5, 50 rows)"],
+            )
+        finally:
+            shutil.rmtree(tmp)
+
+    def test_filter_matching_nothing_is_an_error(self):
+        tmp = tempfile.mkdtemp()
+        try:
+            raw = os.path.join(tmp, "raw.jsonl")
+            with open(raw, "w", encoding="utf-8") as f:
+                f.write(json.dumps({
+                    "suite": "tuner_bench", "name": "sweep",
+                    "median_ns": 10, "mean_ns": 10, "iters": 3,
+                }) + "\n")
+            argv = ["bench_report.py", "--raw", raw,
+                    "--out", os.path.join(tmp, "out.json"),
+                    "--filter", "no such row"]
+            err = io.StringIO()
+            with mock.patch.object(sys, "argv", argv), \
+                    mock.patch.object(sys, "stderr", err):
+                code = bench_report.main()
+            self.assertEqual(code, 1)
+            self.assertIn("no such row", err.getvalue())
+        finally:
+            shutil.rmtree(tmp)
 
 
 if __name__ == "__main__":
