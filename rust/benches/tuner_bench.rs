@@ -5,7 +5,11 @@
 //! reference) vs the flattened batched sweep at `--jobs` 1 and 4. See
 //! EXPERIMENTS.md §Performance methodology for how these rows feed
 //! `BENCH_5.json` and the regression gate.
+#[path = "../tests/common/legacy_sim.rs"]
+mod legacy_sim;
+
 use ml2tuner::compiler::schedule::SpaceKind;
+use ml2tuner::compiler::Compiler;
 use ml2tuner::obs::Recorder;
 use ml2tuner::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use ml2tuner::tuner::explorer::score_candidates;
@@ -191,6 +195,54 @@ fn continuation_vs_refit(b: &mut Bench) {
     }
 }
 
+/// The ISSUE-10 rows: per-trial full-fidelity check on a fixed compiled
+/// batch — the frozen pre-rewrite implementation vs the scratch-arena
+/// hot path, each sharded over the worker pool at `--jobs` 1 and 4 the
+/// way `Engine::profile_batch` shards trials (legacy gets plain
+/// `par_map`, scratch gets one [`SimScratch`] per worker via
+/// `par_map_with`). `scripts/bench_report.py --filter 'per-trial
+/// check'` folds these into BENCH_10.json (gate: scratch ≥2x faster at
+/// both worker counts).
+fn per_trial_check(b: &mut Bench) {
+    use ml2tuner::util::par::{par_map, par_map_with};
+    use ml2tuner::util::rng::Rng;
+    use ml2tuner::vta::{SimScratch, Simulator};
+
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let layer = resnet18::layer("conv5").unwrap();
+    let space = SearchSpace::with_kind(&layer, SpaceKind::Extended);
+    let mut rng = Rng::new(0xC0DE5);
+    let progs: Vec<_> = (0..128)
+        .map(|_| {
+            let s = space.schedule(rng.below(space.len()));
+            compiler.compile(&layer, &s).program
+        })
+        .collect();
+    let n = progs.len() as f64;
+    for jobs in [1usize, 4] {
+        b.run_items(
+            &format!("per-trial check legacy jobs={jobs}"),
+            n,
+            || {
+                par_map(jobs, progs.len(), |k| {
+                    legacy_sim::legacy_check(&cfg, &progs[k]).is_valid()
+                })
+            },
+        );
+        b.run_items(
+            &format!("per-trial check scratch jobs={jobs}"),
+            n,
+            || {
+                par_map_with(jobs, progs.len(), SimScratch::new, |s, k| {
+                    sim.check_with(&progs[k], s).is_valid()
+                })
+            },
+        );
+    }
+}
+
 /// Median-over-median speedups of the sweep rows (the ratios the PR-5
 /// acceptance gate reads off BENCH_5.json).
 fn print_sweep_speedups(b: &Bench) {
@@ -264,6 +316,20 @@ fn print_sweep_speedups(b: &Bench) {
             );
         }
     }
+    // ISSUE-10 gate: scratch-arena check vs frozen legacy per trial
+    // (target >=2x at both worker counts)
+    for jobs in [1usize, 4] {
+        if let (Some(old), Some(new)) = (
+            median(&format!("per-trial check legacy jobs={jobs}")),
+            median(&format!("per-trial check scratch jobs={jobs}")),
+        ) {
+            println!(
+                "per-trial check, scratch vs frozen legacy at \
+                 jobs={jobs}: {:.2}x faster (target >=2x)",
+                old / new
+            );
+        }
+    }
 }
 
 fn main() {
@@ -290,6 +356,7 @@ fn main() {
     scoring_sweep(&mut b);
     coarse_vs_timing(&mut b);
     continuation_vs_refit(&mut b);
+    per_trial_check(&mut b);
     print!("{}", b.summary());
     print_sweep_speedups(&b);
     b.maybe_write_json("tuner_bench");

@@ -1,9 +1,72 @@
 //! VTA simulator benchmarks: compile + check() is the profiling fast path
 //! (one per tuning trial); numeric execution is the validation slow path.
+//! The `per-trial check` rows compare the frozen pre-rewrite check
+//! (tests/common/legacy_sim.rs) against the scratch-arena hot path on
+//! one thread; `scripts/bench_report.py --filter 'per-trial check'`
+//! folds them into BENCH_10.json (gate: scratch ≥2x faster).
+
+#[path = "../tests/common/legacy_sim.rs"]
+mod legacy_sim;
+
+use ml2tuner::compiler::schedule::{space_for, SpaceKind};
 use ml2tuner::compiler::{schedule::Schedule, Compiler};
 use ml2tuner::util::bench::Bench;
-use ml2tuner::vta::{config::VtaConfig, functional, layout, Simulator};
+use ml2tuner::util::rng::Rng;
+use ml2tuner::vta::isa::Program;
+use ml2tuner::vta::{config::VtaConfig, functional, layout, SimScratch,
+                    Simulator};
 use ml2tuner::workloads::{resnet18, synth};
+
+/// Deterministic mixed corpus (valid + faulty) of compiled extended-space
+/// programs — the per-trial unit the tuning loop pays for every profile.
+fn check_corpus(compiler: &Compiler, n: usize) -> Vec<Program> {
+    let layer = resnet18::layer("conv5").unwrap();
+    let space = space_for(&layer, SpaceKind::Extended);
+    let mut rng = Rng::new(0xC0DE5);
+    (0..n)
+        .map(|_| {
+            let s = space.schedule(rng.below(space.len()));
+            compiler.compile(&layer, &s).program
+        })
+        .collect()
+}
+
+fn per_trial_check(b: &mut Bench, cfg: &VtaConfig, compiler: &Compiler) {
+    let sim = Simulator::new(cfg.clone());
+    let progs = check_corpus(compiler, 64);
+    let n = progs.len() as f64;
+    b.run_items("per-trial check legacy (frozen, 1 thread)", n, || {
+        let mut valid = 0usize;
+        for p in &progs {
+            valid += legacy_sim::legacy_check(cfg, p).is_valid() as usize;
+        }
+        valid
+    });
+    let mut scratch = SimScratch::new();
+    b.run_items("per-trial check scratch (warmed, 1 thread)", n, || {
+        let mut valid = 0usize;
+        for p in &progs {
+            valid += sim.check_with(p, &mut scratch).is_valid() as usize;
+        }
+        valid
+    });
+    let median = |name: &str| {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median.as_secs_f64())
+    };
+    if let (Some(old), Some(new)) = (
+        median("per-trial check legacy (frozen, 1 thread)"),
+        median("per-trial check scratch (warmed, 1 thread)"),
+    ) {
+        println!(
+            "per-trial check speedup vs frozen legacy: {:.2}x \
+             (target >=2x)",
+            old / new
+        );
+    }
+}
 
 fn main() {
     let cfg = VtaConfig::zcu102();
@@ -53,6 +116,7 @@ fn main() {
     b.run("numeric execute conv5 (25M MACs)", || {
         sim.execute(&compiled.program, &dram).unwrap()
     });
+    per_trial_check(&mut b, &cfg, &compiler);
     print!("{}", b.summary());
     b.maybe_write_json("vta_sim_bench");
 }

@@ -19,8 +19,9 @@ use crate::tuner::database::{Database, Fidelity, Outcome, TrialRecord};
 use crate::tuner::report::TuningTrace;
 use crate::tuner::space::SearchSpace;
 use crate::tuner::{outcome_of, TuningEnv};
-use crate::util::par::par_map;
+use crate::util::par::{par_map, par_map_with};
 use crate::vta::coarse::{self, CoarseEstimate};
+use crate::vta::SimScratch;
 
 /// Worker count when `--jobs` is not given: all available cores.
 pub fn default_jobs() -> usize {
@@ -154,16 +155,37 @@ impl Engine {
 
     /// "Run on hardware" through the cache: compile (or reuse), simulate,
     /// classify. Equivalent to [`TuningEnv::profile`] record-for-record.
+    ///
+    /// Allocating wrapper over [`Engine::profile_one_with`]; batch
+    /// profiling threads one scratch per worker instead.
     pub fn profile_one(
         &self,
         env: &TuningEnv,
         space_index: usize,
     ) -> TrialRecord {
+        self.profile_one_with(env, space_index, &mut SimScratch::new())
+    }
+
+    /// [`Engine::profile_one`] against a caller-owned simulator scratch
+    /// arena, and the unit of work [`Engine::profile_batch`] hands each
+    /// worker. Also records the `Timing`/`Hazard` sub-spans on the
+    /// engine recorder (per-worker CPU time, like the sweep chunks), so
+    /// `ml2tuner report` can break profile time into sim vs hazard vs
+    /// codegen.
+    pub fn profile_one_with(
+        &self,
+        env: &TuningEnv,
+        space_index: usize,
+        scratch: &mut SimScratch,
+    ) -> TrialRecord {
         let sched = env.space.schedule(space_index);
         let cached =
             self.cache.get_or_compile(&env.compiler, &env.layer, sched);
-        let outcome =
-            outcome_of(&env.simulator.check(&cached.compiled.program));
+        let verdict =
+            env.simulator.check_with(&cached.compiled.program, scratch);
+        self.recorder.record_duration_ns(Stage::Timing, scratch.timing_ns);
+        self.recorder.record_duration_ns(Stage::Hazard, scratch.hazard_ns);
+        let outcome = outcome_of(&verdict);
         TrialRecord {
             space_index,
             schedule: sched,
@@ -204,20 +226,29 @@ impl Engine {
 
     /// Profile a candidate batch across the worker pool. Results come back
     /// ordered by batch position regardless of worker count.
+    ///
+    /// Each worker owns one [`SimScratch`] for the whole batch (created
+    /// by `par_map_with`, dropped when the worker retires), so a warmed
+    /// steady state runs the simulator allocation-free per trial. The
+    /// scratch never crosses workers and never affects verdicts —
+    /// `tests/sim_scratch.rs` pins jobs-invariance.
     pub fn profile_batch(
         &self,
         env: &TuningEnv,
         batch: &[usize],
     ) -> Vec<TrialRecord> {
         let _span = self.recorder.span(Stage::Profile);
-        par_map(self.jobs(), batch.len(), |k| {
-            self.profile_one(env, batch[k])
+        par_map_with(self.jobs(), batch.len(), SimScratch::new, |s, k| {
+            self.profile_one_with(env, batch[k], s)
         })
     }
 
     /// Profile `batch` and do the record bookkeeping every tuning loop
     /// shares: mark each index measured, append the record to the
     /// database (when one is kept) and to the trace, in batch order.
+    /// Each record is moved into one shared [`Arc`] — the database and
+    /// the trace hold the same allocation, never a deep clone of the
+    /// `visible`/`hidden` feature vectors.
     pub fn profile_into(
         &self,
         env: &TuningEnv,
@@ -234,8 +265,9 @@ impl Engine {
                 Outcome::WrongOutput => Counter::TrialsWrongOutput,
             });
             space.mark_measured(rec.space_index);
+            let rec = Arc::new(rec);
             if let Some(d) = &mut db {
-                d.push(rec.clone());
+                d.push(Arc::clone(&rec));
             }
             trace.trials.push(rec);
         }

@@ -150,6 +150,15 @@ impl RoundEvent {
                 .set("prescreen_ns",
                      delta.stage(Stage::Prescreen).total_ns);
         }
+        // profile sub-breakdown group: present only on rounds that ran
+        // the full-fidelity checker (same additive-field discipline as
+        // the prescreen group — schema stays 1). Worker CPU time, so at
+        // jobs>1 the pair can sum past profile_ns wall time.
+        let timing = delta.stage(Stage::Timing);
+        if timing.count > 0 {
+            o.set("timing_ns", timing.total_ns)
+                .set("hazard_ns", delta.stage(Stage::Hazard).total_ns);
+        }
         if let Some(best) = self.best_cycles {
             o.set("best_cycles", best);
         }
@@ -313,6 +322,25 @@ mod tests {
         assert!(j0.get("prescreened").is_none());
         assert!(j0.get("survivors").is_none());
         assert!(j0.get("prescreen_ns").is_none());
+    }
+
+    #[test]
+    fn timing_hazard_fields_gate_on_the_stage_count() {
+        let rec = Recorder::new();
+        rec.record_duration_ns(Stage::Timing, 900);
+        rec.record_duration_ns(Stage::Hazard, 350);
+        let delta =
+            rec.snapshot().delta_since(&Recorder::new().snapshot());
+        let j = sample_event(None).to_json(&delta);
+        assert_eq!(j.get("timing_ns").unwrap().as_i64(), Some(900));
+        assert_eq!(j.get("hazard_ns").unwrap().as_i64(), Some(350));
+        // a round with no full-fidelity checks emits neither field
+        let empty = Recorder::new()
+            .snapshot()
+            .delta_since(&Recorder::new().snapshot());
+        let j0 = sample_event(None).to_json(&empty);
+        assert!(j0.get("timing_ns").is_none());
+        assert!(j0.get("hazard_ns").is_none());
     }
 
     #[test]

@@ -137,10 +137,17 @@ pub enum Stage {
     /// Tier-0 coarse prescreen of an over-selected candidate pool
     /// (nested inside `Select` like `Train`/`Sweep`/`Compile`).
     Prescreen,
+    /// One per-trial timing co-simulation inside `check_with` (nested
+    /// inside `Profile`; recorded per worker, so its total is CPU time
+    /// like `SweepChunk`).
+    Timing,
+    /// One per-trial bounds+hazard pass inside `check_with` (nested
+    /// inside `Profile`; per-worker CPU time like `SweepChunk`).
+    Hazard,
 }
 
 /// Number of [`Stage`] variants (array sizing).
-pub const N_STAGES: usize = 7;
+pub const N_STAGES: usize = 9;
 
 impl Stage {
     /// Every stage, in `run_end` emission order.
@@ -152,6 +159,8 @@ impl Stage {
         Stage::Compile,
         Stage::Profile,
         Stage::Prescreen,
+        Stage::Timing,
+        Stage::Hazard,
     ];
 
     /// Stable snake_case name (event keys are `<name>_ns`).
@@ -164,6 +173,8 @@ impl Stage {
             Stage::Compile => "compile",
             Stage::Profile => "profile",
             Stage::Prescreen => "prescreen",
+            Stage::Timing => "timing",
+            Stage::Hazard => "hazard",
         }
     }
 }

@@ -47,6 +47,12 @@ const ROUND_V_FIELDS: [&str; 6] =
 const ROUND_PRESCREEN_FIELDS: [&str; 3] =
     ["prescreened", "survivors", "prescreen_ns"];
 
+/// Profile sub-breakdown fields (timing co-sim vs bounds+hazard inside
+/// `check_with`): all present or all absent. Absent on every
+/// pre-scratch-arena event file and on rounds that profiled nothing at
+/// full fidelity, so old logs keep validating.
+const ROUND_CHECK_FIELDS: [&str; 2] = ["timing_ns", "hazard_ns"];
+
 fn num(obj: &Json, key: &str) -> Result<u64> {
     match obj.get(key) {
         Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
@@ -111,6 +117,21 @@ pub fn validate_line(line: &str) -> Result<Json> {
             }
             if n_ps > 0 {
                 for k in ROUND_PRESCREEN_FIELDS {
+                    num(&j, k)?;
+                }
+            }
+            let n_ck = ROUND_CHECK_FIELDS
+                .iter()
+                .filter(|k| j.get(k).is_some())
+                .count();
+            if n_ck != 0 && n_ck != ROUND_CHECK_FIELDS.len() {
+                bail!(
+                    "partial profile-breakdown group: expected all or \
+                     none of {ROUND_CHECK_FIELDS:?}"
+                );
+            }
+            if n_ck > 0 {
+                for k in ROUND_CHECK_FIELDS {
                     num(&j, k)?;
                 }
             }
@@ -236,6 +257,11 @@ pub struct Report {
     pub profile_ns: u64,
     /// Wall time in the tier-0 coarse prescreen (inside selection).
     pub prescreen_ns: u64,
+    /// Worker CPU time in the timing co-simulation inside profiling
+    /// (per-trial sub-span; can exceed `profile_ns` wall at `--jobs`>1).
+    pub timing_ns: u64,
+    /// Worker CPU time in the bounds+hazard passes inside profiling.
+    pub hazard_ns: u64,
     /// Candidates ranked at tier 0 across all rounds.
     pub prescreened: u64,
     /// Tier-0 survivors that went on to full profiling.
@@ -275,6 +301,10 @@ impl Report {
         } else {
             (0, 0)
         };
+        if j.get("timing_ns").is_some() {
+            self.timing_ns += num(j, "timing_ns")?;
+            self.hazard_ns += num(j, "hazard_ns")?;
+        }
         if !self.cache_from_run_end {
             self.cache_hits += num(j, "cache_hits")?;
             self.cache_misses += num(j, "cache_misses")?;
@@ -378,6 +408,15 @@ impl Report {
             out.push_str(&format!(
                 "score-sweep chunks: {} (worker CPU time, not wall)\n",
                 self.sweep_chunks
+            ));
+        }
+        if self.timing_ns + self.hazard_ns > 0 {
+            out.push_str(&format!(
+                "profile breakdown: timing sim {} + bounds/hazard {} \
+                 (worker CPU time; rest of profile is codegen + \
+                 bookkeeping)\n",
+                fmt_ns(self.timing_ns),
+                fmt_ns(self.hazard_ns),
             ));
         }
         if self.prescreened > 0 {
@@ -616,6 +655,57 @@ mod tests {
         assert!(validate_line(&j.to_string()).is_err());
         j.set("prescreen_ns", 4200u64);
         assert!(validate_line(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn partial_profile_breakdown_group_rejected() {
+        // pre-scratch-arena event files carry neither field — they must
+        // keep validating (schema stays 1); a partial group is a hard
+        // error and a complete one passes
+        let mut j = Json::obj();
+        j.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            j.set(k, "x");
+        }
+        for k in ROUND_NUM_FIELDS {
+            j.set(k, 1u64);
+        }
+        assert!(validate_line(&j.to_string()).is_ok(),
+                "legacy round line must stay valid");
+        j.set("timing_ns", 900u64);
+        assert!(validate_line(&j.to_string()).is_err());
+        j.set("hazard_ns", 350u64);
+        assert!(validate_line(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn profile_breakdown_aggregates_and_renders() {
+        let mut j = Json::obj();
+        j.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            j.set(k, "zcu102");
+        }
+        for k in ROUND_NUM_FIELDS {
+            j.set(k, 2u64);
+        }
+        j.set("timing_ns", 900u64).set("hazard_ns", 350u64);
+        let mut r = Report::default();
+        r.add_round(&j).unwrap();
+        r.add_round(&j).unwrap();
+        assert_eq!((r.timing_ns, r.hazard_ns), (1800, 700));
+        assert!(r.render().contains("profile breakdown:"));
+        // a report without the group renders no breakdown line
+        let mut plain = Json::obj();
+        plain.set("schema", 1u64).set("event", "round");
+        for k in ROUND_STR_FIELDS {
+            plain.set(k, "zcu102");
+        }
+        for k in ROUND_NUM_FIELDS {
+            plain.set(k, 2u64);
+        }
+        let mut cold = Report::default();
+        cold.add_round(&plain).unwrap();
+        assert!(!cold.render().contains("profile breakdown:"));
     }
 
     #[test]

@@ -238,8 +238,11 @@ pub struct Database {
     /// stamping have `None` — [`TransferDb`] treats them as
     /// same-hardware sources (the pre-registry behaviour).
     pub target: Option<TargetMeta>,
-    /// Every profiling attempt, in profiling order.
-    pub records: Vec<TrialRecord>,
+    /// Every profiling attempt, in profiling order. Records are
+    /// `Arc`-shared so keeping a database alongside a
+    /// [`crate::tuner::report::TuningTrace`] copies pointers, not
+    /// feature vectors; readers auto-deref.
+    pub records: Vec<Arc<TrialRecord>>,
 }
 
 impl Default for Database {
@@ -287,9 +290,10 @@ impl Database {
         }
     }
 
-    /// Append one profiling record.
-    pub fn push(&mut self, rec: TrialRecord) {
-        self.records.push(rec);
+    /// Append one profiling record — owned or already `Arc`-shared
+    /// (the engine pushes the same `Arc` it stores in the trace).
+    pub fn push(&mut self, rec: impl Into<Arc<TrialRecord>>) {
+        self.records.push(rec.into());
     }
 
     /// Number of records.
@@ -669,6 +673,7 @@ impl TransferDb {
                 .records
                 .iter()
                 .filter(|r| r.fidelity == Fidelity::Full)
+                .map(Arc::as_ref)
                 .collect();
             if full.is_empty() {
                 continue;

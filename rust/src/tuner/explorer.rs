@@ -23,7 +23,7 @@ use super::space::SearchSpace;
 use super::DEFAULT_V_MARGIN;
 use crate::gbdt::FeatureMatrix;
 use crate::obs::{Counter, Recorder, Stage};
-use crate::util::par::par_map;
+use crate::util::par::par_map_with;
 use crate::util::rng::Rng;
 
 /// Explorer policy knobs.
@@ -71,15 +71,30 @@ pub const MAX_SCORED_CANDIDATES: usize = 400_000;
 /// mid-size spaces.
 pub const SCORE_CHUNK: usize = 4096;
 
+/// Per-worker buffers of the scoring sweep, created once per worker by
+/// `par_map_with` and reused across every chunk that worker pulls. Each
+/// buffer is cleared (or fully overwritten) per chunk, so reuse never
+/// changes a score — only the allocation count.
+struct SweepScratch {
+    /// One decoded visible-feature row.
+    feats: Vec<f64>,
+    /// Row-major chunk matrix for the batch kernels.
+    m: FeatureMatrix,
+    /// Model-P scores, one per chunk row.
+    scores: Vec<f64>,
+    /// Model-V margins, one per chunk row (0.0 without a V model).
+    margins: Vec<f64>,
+}
+
 /// Decode and score `candidates` against model P (and model V's margin
 /// when given): returns one `(p_score, v_margin, index)` triple per
 /// candidate, in input order. Without a V model the margin slot is 0.0.
 ///
-/// This is the explorer's hot path — per fixed-size chunk it fills one
-/// reusable row-major [`FeatureMatrix`] and runs the flattened batch
-/// kernels; chunks fan out over `jobs` workers and merge back in chunk
-/// order, so the result is invariant in `jobs` and bit-identical to a
-/// sequential per-row sweep.
+/// This is the explorer's hot path — per fixed-size chunk it fills a
+/// per-worker reusable row-major [`FeatureMatrix`] (see [`SweepScratch`])
+/// and runs the flattened batch kernels; chunks fan out over `jobs`
+/// workers and merge back in chunk order, so the result is invariant in
+/// `jobs` and bit-identical to a sequential per-row sweep.
 pub fn score_candidates(
     space: &SearchSpace,
     p: &ModelP,
@@ -90,29 +105,34 @@ pub fn score_candidates(
 ) -> Vec<(f64, f64, usize)> {
     let _sweep = recorder.map(|r| r.span(Stage::Sweep));
     let chunks: Vec<&[usize]> = candidates.chunks(SCORE_CHUNK).collect();
+    let init = || SweepScratch {
+        feats: Vec::with_capacity(space.n_visible()),
+        m: FeatureMatrix::with_capacity(space.n_visible(), SCORE_CHUNK),
+        scores: Vec::with_capacity(SCORE_CHUNK),
+        margins: Vec::with_capacity(SCORE_CHUNK),
+    };
     let scored: Vec<Vec<(f64, f64, usize)>> =
-        par_map(jobs, chunks.len(), |c| {
+        par_map_with(jobs, chunks.len(), init, |s, c| {
             let chunk = chunks[c];
             let t0 = Instant::now();
-            let mut feats: Vec<f64> =
-                Vec::with_capacity(space.n_visible());
-            let mut m = FeatureMatrix::with_capacity(space.n_visible(),
-                                                     chunk.len());
+            s.m.clear();
             for &i in chunk {
-                space.visible_into(i, &mut feats);
-                m.push_row_f64(&feats);
+                space.visible_into(i, &mut s.feats);
+                s.m.push_row_f64(&s.feats);
             }
-            let mut scores = Vec::with_capacity(chunk.len());
-            p.predict_batch_into(&m, &mut scores);
-            let mut margins = vec![0.0f64; chunk.len()];
-            if let Some(vm) = v {
-                vm.margin_batch_into(&m, &mut margins);
+            p.predict_batch_into(&s.m, &mut s.scores);
+            match v {
+                Some(vm) => vm.margin_batch_into(&s.m, &mut s.margins),
+                None => {
+                    s.margins.clear();
+                    s.margins.resize(chunk.len(), 0.0);
+                }
             }
             let out: Vec<(f64, f64, usize)> = chunk
                 .iter()
-                .zip(scores)
-                .zip(margins)
-                .map(|((&i, s), mg)| (s, mg, i))
+                .zip(&s.scores)
+                .zip(&s.margins)
+                .map(|((&i, &sc), &mg)| (sc, mg, i))
                 .collect();
             if let Some(r) = recorder {
                 r.record_duration_ns(Stage::SweepChunk,

@@ -325,6 +325,8 @@ impl MetaStore {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::compiler::schedule::Schedule;
     use crate::tuner::database::{Fidelity, Outcome, TrialRecord};
@@ -552,7 +554,7 @@ mod tests {
                                 &VtaConfig::zcu102(), 64, 1.0);
         // truncate every hidden vector: a stale layout
         for r in &mut log.records {
-            r.hidden.truncate(1);
+            Arc::make_mut(r).hidden.truncate(1);
         }
         let mut c = TransferDb::new();
         c.add(log);

@@ -1,5 +1,7 @@
 //! Tuning traces and derived metrics (curves, ratios, convergence).
 
+use std::sync::Arc;
+
 use super::database::{Outcome, TrialRecord};
 
 /// Complete record of one tuning run, in profiling order.
@@ -9,8 +11,10 @@ pub struct TuningTrace {
     pub layer: String,
     /// Tuner name that produced the run.
     pub tuner: String,
-    /// Every profiled trial, in order.
-    pub trials: Vec<TrialRecord>,
+    /// Every profiled trial, in order. `Arc`-shared with the run's
+    /// [`super::database::Database`] — the engine stores one allocation
+    /// per trial, never a deep copy.
+    pub trials: Vec<Arc<TrialRecord>>,
 }
 
 impl TuningTrace {
@@ -214,7 +218,7 @@ mod tests {
             let s = Schedule { tile_h: 1 + i, tile_w: 1, tile_oc: 16,
                                tile_ic: 16, n_vthreads: 1,
                                ..Default::default() };
-            t.trials.push(TrialRecord {
+            t.trials.push(Arc::new(TrialRecord {
                 space_index: i,
                 schedule: s,
                 visible: crate::compiler::schedule::SpaceKind::Paper
@@ -222,7 +226,7 @@ mod tests {
                 hidden: vec![],
                 outcome: o,
                 fidelity: Fidelity::Full,
-            });
+            }));
         }
         t
     }

@@ -17,8 +17,30 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    par_map_with(jobs, n, || (), |(), i| f(i))
+}
+
+/// [`par_map`] with per-worker mutable state: each worker calls `init`
+/// once, then reuses that state across every index it pulls — the hook
+/// for per-worker scratch arenas (simulator scratch, sweep feature
+/// buffers) that are warmed once and never reallocated per item.
+///
+/// The state never crosses threads and never influences which index a
+/// worker pulls, so results stay byte-identical for any `jobs` as long
+/// as `f`'s output does not depend on the *history* encoded in the
+/// state — scratch reuse must be semantically invisible (the simulator
+/// scratch types clear themselves per call; `tests/sim_scratch.rs` pins
+/// this). The sequential fallback (`jobs ≤ 1` or `n ≤ 1`) runs one
+/// state through all indices, which is exactly a one-worker pool.
+pub fn par_map_with<T, S, I, F>(jobs: usize, n: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if jobs <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let workers = jobs.min(n);
     let next = AtomicUsize::new(0);
@@ -26,13 +48,16 @@ where
         (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut state, i);
+                    *slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
             });
         }
     });
@@ -60,5 +85,51 @@ mod tests {
     fn par_map_empty_and_single() {
         assert_eq!(par_map(4, 0, |i| i), Vec::<usize>::new());
         assert_eq!(par_map(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn par_map_with_preserves_order_for_any_jobs() {
+        for jobs in [1, 2, 4, 9] {
+            let out = par_map_with(
+                jobs,
+                100,
+                Vec::<u8>::new,
+                |scratch, i| {
+                    scratch.clear();
+                    scratch.extend(std::iter::repeat(1).take(i % 7));
+                    i * 2 + scratch.len()
+                },
+            );
+            let want: Vec<usize> =
+                (0..100).map(|i| i * 2 + i % 7).collect();
+            assert_eq!(out, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn par_map_with_reuses_one_state_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        // number of init() calls must equal the worker count, never n
+        let inits = AtomicUsize::new(0);
+        let n = 64;
+        for jobs in [1usize, 3] {
+            inits.store(0, Ordering::Relaxed);
+            let out = par_map_with(
+                jobs,
+                n,
+                || {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    0usize
+                },
+                |pulls, i| {
+                    *pulls += 1;
+                    i
+                },
+            );
+            assert_eq!(out, (0..n).collect::<Vec<_>>());
+            let created = inits.load(Ordering::Relaxed);
+            assert!(created <= jobs.max(1), "jobs={jobs}: {created} states");
+            assert!(created >= 1);
+        }
     }
 }

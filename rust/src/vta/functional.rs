@@ -37,8 +37,17 @@ pub struct Dram {
 
 /// Address-bounds pass: first crash or ACC-wrap corruption, program order.
 pub fn check_addresses(cfg: &VtaConfig, prog: &Program) -> Result<(), Fault> {
+    check_addresses_inner(cfg, prog, &uop_windows(prog))
+}
+
+/// The bounds pass proper, with the uop-window table supplied by the
+/// caller so [`check_program`] computes it once for both passes.
+fn check_addresses_inner(
+    cfg: &VtaConfig,
+    prog: &Program,
+    windows: &UopWindows,
+) -> Result<(), Fault> {
     let mut corruption: Option<Fault> = None;
-    let windows = uop_windows(prog);
     for (idx, ins) in prog.instrs.iter().enumerate() {
         match ins {
             Instr::Load { buf, dma, .. } => {
@@ -109,7 +118,7 @@ pub fn check_addresses(cfg: &VtaConfig, prog: &Program) -> Result<(), Fault> {
                 }
             }
             Instr::Gemm { reset, .. } => {
-                let r = gemm_ranges(prog, ins, idx, &windows)?;
+                let r = gemm_ranges(prog, ins, idx, windows)?;
                 if !reset && r.inp.1 > cfg.inp_capacity() {
                     return Err(Fault::RegisterError(format!(
                         "instr {idx}: GEMM reads INP past scratchpad \
@@ -222,16 +231,19 @@ struct GemmRanges {
 type UopWindows = Vec<(usize, usize, usize, usize)>;
 
 fn uop_windows(prog: &Program) -> UopWindows {
-    prog.instrs
-        .iter()
-        .enumerate()
-        .filter_map(|(i, ins)| match ins {
-            Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => {
-                Some((i, *sram_base, *uop_begin, *uop_end))
-            }
-            _ => None,
-        })
-        .collect()
+    let mut w = UopWindows::new();
+    uop_windows_into(prog, &mut w);
+    w
+}
+
+/// [`uop_windows`] into a reused buffer (cleared first).
+fn uop_windows_into(prog: &Program, out: &mut UopWindows) {
+    out.clear();
+    for (i, ins) in prog.instrs.iter().enumerate() {
+        if let Instr::LoadUop { sram_base, uop_begin, uop_end, .. } = ins {
+            out.push((i, *sram_base, *uop_begin, *uop_end));
+        }
+    }
 }
 
 /// Bounding element ranges a GEMM instruction touches (exact for the dense
@@ -321,13 +333,13 @@ impl AccessVec {
         AccessVec { len: 0, items: [NO_ACCESS; 4] }
     }
 
-    fn from_slice(xs: &[Access]) -> Self {
-        let mut v = AccessVec::new();
-        for &a in xs {
-            v.items[v.len as usize] = a;
-            v.len += 1;
-        }
-        v
+    fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    fn push(&mut self, a: Access) {
+        self.items[self.len as usize] = a;
+        self.len += 1;
     }
 
     fn as_slice(&self) -> &[Access] {
@@ -335,68 +347,85 @@ impl AccessVec {
     }
 }
 
-fn accesses(prog: &Program, idx: usize, windows: &UopWindows) -> AccessVec {
-    AccessVec::from_slice(&accesses_inner(prog, idx, windows))
-}
-
-fn accesses_inner(
+/// Collect the SRAM ranges instruction `idx` touches straight into the
+/// caller's fixed-capacity buffer — no per-instruction `vec!`. An
+/// instruction touches at most 4 ranges, so no spill path exists.
+fn accesses_into(
     prog: &Program,
     idx: usize,
     windows: &UopWindows,
-) -> Vec<Access> {
+    out: &mut AccessVec,
+) {
+    out.clear();
     match &prog.instrs[idx] {
-        Instr::Load { buf, dma, .. } => vec![Access {
+        Instr::Load { buf, dma, .. } => out.push(Access {
             space: space_of(*buf),
             lo: dma.sram_base,
             hi: dma.sram_end(),
             write: true,
-        }],
-        Instr::Memset { buf, sram_base, count, .. } => vec![Access {
+        }),
+        Instr::Memset { buf, sram_base, count, .. } => out.push(Access {
             space: space_of(*buf),
             lo: *sram_base,
             hi: sram_base + count,
             write: true,
-        }],
-        Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => vec![Access {
-            space: Space::Ubuf,
-            lo: *sram_base,
-            hi: sram_base + (uop_end - uop_begin),
-            write: true,
-        }],
-        ins @ Instr::Gemm { reset, .. } => match gemm_ranges(prog, ins, idx, windows)
-        {
-            // reset-mode GEMM only zero-fills ACC: no INP/WGT reads.
-            Ok(r) if *reset => vec![
-                Access { space: Space::Acc, lo: r.acc.0, hi: r.acc.1,
-                         write: true },
-                Access { space: Space::Ubuf, lo: r.ubuf.0, hi: r.ubuf.1,
-                         write: false },
-            ],
-            Ok(r) => vec![
-                Access { space: Space::Acc, lo: r.acc.0, hi: r.acc.1,
-                         write: true },
-                Access { space: Space::Inp, lo: r.inp.0, hi: r.inp.1,
-                         write: false },
-                Access { space: Space::Wgt, lo: r.wgt.0, hi: r.wgt.1,
-                         write: false },
-                Access { space: Space::Ubuf, lo: r.ubuf.0, hi: r.ubuf.1,
-                         write: false },
-            ],
-            Err(_) => Vec::new(), // bounds pass reports this as a crash
-        },
-        Instr::Alu { acc_base, count, .. } => vec![Access {
+        }),
+        Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => {
+            out.push(Access {
+                space: Space::Ubuf,
+                lo: *sram_base,
+                hi: sram_base + (uop_end - uop_begin),
+                write: true,
+            })
+        }
+        ins @ Instr::Gemm { reset, .. } => {
+            match gemm_ranges(prog, ins, idx, windows) {
+                Ok(r) => {
+                    out.push(Access {
+                        space: Space::Acc,
+                        lo: r.acc.0,
+                        hi: r.acc.1,
+                        write: true,
+                    });
+                    // reset-mode GEMM only zero-fills ACC: no INP/WGT
+                    // reads.
+                    if !*reset {
+                        out.push(Access {
+                            space: Space::Inp,
+                            lo: r.inp.0,
+                            hi: r.inp.1,
+                            write: false,
+                        });
+                        out.push(Access {
+                            space: Space::Wgt,
+                            lo: r.wgt.0,
+                            hi: r.wgt.1,
+                            write: false,
+                        });
+                    }
+                    out.push(Access {
+                        space: Space::Ubuf,
+                        lo: r.ubuf.0,
+                        hi: r.ubuf.1,
+                        write: false,
+                    });
+                }
+                Err(_) => {} // bounds pass reports this as a crash
+            }
+        }
+        Instr::Alu { acc_base, count, .. } => out.push(Access {
             space: Space::Acc,
             lo: *acc_base,
             hi: acc_base + count,
             write: true,
-        }],
-        Instr::Store { dma, .. } => vec![Access {
+        }),
+        Instr::Store { dma, .. } => out.push(Access {
             space: Space::Acc,
             lo: dma.sram_base,
             hi: dma.sram_end(),
             write: false,
-        }],
-        Instr::Finish => Vec::new(),
+        }),
+        Instr::Finish => {}
     }
 }
 
@@ -410,65 +439,152 @@ fn space_of(buf: Buffer) -> Space {
 
 // ----------------------------------------------------------------- hazard
 
+/// One SRAM access range flattened for the interval sweep: the owning
+/// instruction rides along so overlapping entries map back to a pair.
+#[derive(Clone, Copy, Debug)]
+struct SpanEntry {
+    lo: usize,
+    hi: usize,
+    idx: u32,
+    write: bool,
+}
+
+/// Reusable hazard/bounds-check arena: the uop-window table, the
+/// per-instruction access cache, the execution-position map, and the
+/// four per-space interval lists all keep their backing storage across
+/// [`check_program`] / [`check_hazards_with`] calls. One scratch
+/// belongs to one worker thread (`&mut` API, never shared).
+#[derive(Debug, Default)]
+pub struct HazardScratch {
+    windows: UopWindows,
+    acc: Vec<AccessVec>,
+    pos: Vec<u32>,
+    spans: [Vec<SpanEntry>; 4],
+}
+
+impl HazardScratch {
+    /// Fresh (cold) scratch; buffers grow on first use and are then
+    /// reused forever.
+    pub fn new() -> HazardScratch {
+        HazardScratch::default()
+    }
+}
+
 /// Pipelined-execution hazard pass. `schedule.order` is the serialized
 /// execution order (by start time) from the timing model; any conflicting
 /// pair that executes out of *program* order corrupts data.
+///
+/// Thin allocating wrapper over [`check_hazards_with`] — pinned
+/// bit-identical against a frozen copy of the pre-sweep pending-list
+/// implementation by `tests/sim_scratch.rs`.
 pub fn check_hazards(
     _cfg: &VtaConfig,
     prog: &Program,
     schedule: &Schedule,
 ) -> Result<(), Fault> {
-    // pending = program-earlier instructions that have not yet executed.
-    // When instruction k executes while j < k is pending, (j, k) runs out of
-    // program order: conflict ⇒ corruption.
-    let mut executed = vec![false; prog.instrs.len()];
-    let mut frontier = 0usize; // all idx < frontier executed
-    let mut pending: Vec<usize> = Vec::new();
-    let windows = uop_windows(prog);
-    let acc_cache: Vec<AccessVec> = (0..prog.instrs.len())
-        .map(|i| accesses(prog, i, &windows))
-        .collect();
-    for &(_, k) in &schedule.order {
-        // instructions k jumps over become pending FIRST — k itself may
-        // invert against them
-        if k >= frontier {
-            for j in frontier..k {
-                if !executed[j] {
-                    pending.push(j);
-                }
-            }
-            frontier = k + 1;
-        }
-        for &j in &pending {
-            if j < k
-                && conflicts(acc_cache[j].as_slice(),
-                             acc_cache[k].as_slice())
-            {
-                return Err(Fault::Corruption(format!(
-                    "instr {k} executes before conflicting instr {j} \
-                     (cross-thread/double-buffer scratchpad aliasing)"
-                )));
-            }
-        }
-        executed[k] = true;
-        pending.retain(|&j| !executed[j]);
-    }
-    Ok(())
+    let mut scratch = HazardScratch::new();
+    uop_windows_into(prog, &mut scratch.windows);
+    check_hazards_with(prog, &schedule.order, &mut scratch)
 }
 
-fn conflicts(a: &[Access], b: &[Access]) -> bool {
-    for x in a {
-        for y in b {
-            if x.space == y.space
-                && (x.write || y.write)
-                && x.lo < y.hi
-                && y.lo < x.hi
-            {
-                return true;
+/// Bounds pass + hazard pass back to back, sharing one scratch and one
+/// uop-window table — the full-fidelity verdict core that
+/// [`crate::vta::Simulator::check_with`] runs after the timing
+/// simulation. Fault precedence matches running [`check_addresses`]
+/// then [`check_hazards`] (the bounds fault wins).
+pub fn check_program(
+    cfg: &VtaConfig,
+    prog: &Program,
+    order: &[(u64, usize)],
+    scratch: &mut HazardScratch,
+) -> Result<(), Fault> {
+    uop_windows_into(prog, &mut scratch.windows);
+    check_addresses_inner(cfg, prog, &scratch.windows)?;
+    check_hazards_with(prog, order, scratch)
+}
+
+/// The hazard pass proper, on a caller-maintained scratch whose
+/// `windows` table is already filled for `prog`. Allocation-free once
+/// the scratch buffers have grown to the largest program seen.
+///
+/// Instead of the pending-list scan (for each executing instruction,
+/// walk every not-yet-executed program-earlier instruction), this
+/// flattens every access range into a per-space list sorted by range
+/// start and enumerates overlapping pairs with a forward sweep. A pair
+/// `(j, k)` with `j < k` in program order is a hazard iff it conflicts
+/// (same space, ≥1 write, ranges overlap) and executes inverted
+/// (`pos[k] < pos[j]`). The legacy scan reports the fault minimizing
+/// `(pos[k], j)` — first by execution time of the jumper, ties by
+/// earliest clobbered instruction — so the sweep minimizes the same
+/// key over all inverted conflicting pairs, making the two
+/// implementations answer-identical by construction.
+fn check_hazards_with(
+    prog: &Program,
+    order: &[(u64, usize)],
+    scratch: &mut HazardScratch,
+) -> Result<(), Fault> {
+    let n = prog.instrs.len();
+    let HazardScratch { windows, acc, pos, spans } = scratch;
+    acc.clear();
+    acc.resize(n, AccessVec::new());
+    for (i, slot) in acc.iter_mut().enumerate() {
+        accesses_into(prog, i, windows, slot);
+    }
+    // execution position of each instruction; an instruction missing
+    // from `order` never executes and sorts after everything.
+    pos.clear();
+    pos.resize(n, u32::MAX);
+    for (p, &(_, k)) in order.iter().enumerate() {
+        pos[k] = p as u32;
+    }
+    for s in spans.iter_mut() {
+        s.clear();
+    }
+    for (i, av) in acc.iter().enumerate() {
+        for a in av.as_slice() {
+            if a.lo < a.hi {
+                spans[a.space as usize].push(SpanEntry {
+                    lo: a.lo,
+                    hi: a.hi,
+                    idx: i as u32,
+                    write: a.write,
+                });
             }
         }
     }
-    false
+    // (pos[k], j, k) of the best (= legacy-first) hazard found so far
+    let mut best: Option<(u32, u32, u32)> = None;
+    for list in spans.iter_mut() {
+        list.sort_unstable_by_key(|e| e.lo);
+        for i in 0..list.len() {
+            let a = list[i];
+            for b in &list[i + 1..] {
+                if b.lo >= a.hi {
+                    break; // sorted by lo: nothing further overlaps a
+                }
+                // overlap is established (b.hi > b.lo >= a.lo); filter
+                // to real conflicts executing out of program order
+                if a.idx == b.idx || !(a.write || b.write) {
+                    continue;
+                }
+                let (j, k) = (a.idx.min(b.idx), a.idx.max(b.idx));
+                if pos[k as usize] >= pos[j as usize] {
+                    continue; // program order preserved
+                }
+                let key = (pos[k as usize], j, k);
+                if best.map_or(true, |cur| key < cur) {
+                    best = Some(key);
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, j, k)) => Err(Fault::Corruption(format!(
+            "instr {k} executes before conflicting instr {j} \
+             (cross-thread/double-buffer scratchpad aliasing)"
+        ))),
+        None => Ok(()),
+    }
 }
 
 // ---------------------------------------------------------------- numeric

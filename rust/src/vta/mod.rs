@@ -92,6 +92,33 @@ impl Verdict {
     }
 }
 
+/// Reusable per-worker arena for [`Simulator::check_with`]: the timing
+/// co-simulation scratch plus the bounds/hazard scratch, with the
+/// nanoseconds each sub-pass took on the last call (the engine feeds
+/// those into the `Timing`/`Hazard` telemetry stages). One scratch per
+/// worker thread; it never crosses workers (`&mut` API), and reuse is
+/// semantically invisible — every buffer is cleared per call, pinned by
+/// `tests/sim_scratch.rs`.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Timing co-simulation arena (streams, token queues, order).
+    pub timing: timing::TimingScratch,
+    /// Bounds + hazard-sweep arena (windows, access cache, spans).
+    pub hazard: functional::HazardScratch,
+    /// Wall nanoseconds the timing simulation took on the last check.
+    pub timing_ns: u64,
+    /// Wall nanoseconds the bounds+hazard passes took on the last check.
+    pub hazard_ns: u64,
+}
+
+impl SimScratch {
+    /// Fresh (cold) scratch; buffers grow on first use and are then
+    /// reused forever.
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
 /// The simulator facade used by the tuner and the experiment harnesses.
 #[derive(Clone, Debug)]
 pub struct Simulator {
@@ -111,20 +138,42 @@ impl Simulator {
     /// Fault precedence mirrors the board: a register error kills the run
     /// before any output comparison could happen; hazard corruption is only
     /// observable if the program addresses its buffers legally.
+    ///
+    /// Allocating convenience wrapper over [`Simulator::check_with`];
+    /// batch profiling threads one [`SimScratch`] per worker instead.
     pub fn check(&self, prog: &Program) -> Verdict {
-        let schedule = match timing::simulate_schedule(&self.cfg, prog) {
-            Ok(s) => s,
-            Err(f) => return Verdict::Invalid { fault: f, cycles: 0 },
-        };
-        if let Err(fault) = functional::check_addresses(&self.cfg, prog) {
-            return Verdict::Invalid { fault, cycles: schedule.cycles };
+        self.check_with(prog, &mut SimScratch::new())
+    }
+
+    /// [`Simulator::check`] against a reusable scratch arena —
+    /// allocation-free once the arena is warmed to the largest program
+    /// seen. Identical verdicts and fault precedence: timing deadlock
+    /// first (cycles unknown → 0), then address bounds, then hazards.
+    pub fn check_with(
+        &self,
+        prog: &Program,
+        scratch: &mut SimScratch,
+    ) -> Verdict {
+        let t0 = std::time::Instant::now();
+        let timed = timing::simulate_into(&self.cfg, prog, &mut scratch.timing);
+        scratch.timing_ns = t0.elapsed().as_nanos() as u64;
+        scratch.hazard_ns = 0;
+        if let Err(fault) = timed {
+            return Verdict::Invalid { fault, cycles: 0 };
         }
-        if let Err(fault) =
-            functional::check_hazards(&self.cfg, prog, &schedule)
-        {
-            return Verdict::Invalid { fault, cycles: schedule.cycles };
+        let cycles = scratch.timing.cycles();
+        let t1 = std::time::Instant::now();
+        let checked = functional::check_program(
+            &self.cfg,
+            prog,
+            scratch.timing.order(),
+            &mut scratch.hazard,
+        );
+        scratch.hazard_ns = t1.elapsed().as_nanos() as u64;
+        match checked {
+            Err(fault) => Verdict::Invalid { fault, cycles },
+            Ok(()) => Verdict::Valid { cycles },
         }
-        Verdict::Valid { cycles: schedule.cycles }
     }
 
     /// Full numeric execution (slow path). Returns the output DRAM image and

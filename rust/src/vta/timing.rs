@@ -33,8 +33,9 @@ pub struct Schedule {
     pub busy: [u64; 3],
 }
 
-/// Duration of one instruction in cycles.
-pub fn instr_cycles(cfg: &VtaConfig, prog: &Program, ins: &Instr) -> u64 {
+/// Duration of one instruction in cycles. Purely local to the
+/// instruction: the cost model never consults the rest of the program.
+pub fn instr_cycles(cfg: &VtaConfig, ins: &Instr) -> u64 {
     match ins {
         Instr::Load { buf, dma, .. } => {
             let bytes = (dma.elems() * buf_bytes(cfg, *buf)) as u64;
@@ -51,7 +52,6 @@ pub fn instr_cycles(cfg: &VtaConfig, prog: &Program, ins: &Instr) -> u64 {
         }
         Instr::Gemm { ubuf_begin, ubuf_end, lp0, lp1, .. } => {
             // MXU issues one block-op per cycle once streaming.
-            let _ = prog; // uop table not needed for the op count
             let ops = (ubuf_end - ubuf_begin) as u64
                 * lp0.extent.max(1) as u64
                 * lp1.extent.max(1) as u64;
@@ -80,21 +80,121 @@ struct Queues {
     s2g: std::collections::VecDeque<u64>, // store → compute (buffer free)
 }
 
+impl Queues {
+    fn clear(&mut self) {
+        self.l2g.clear();
+        self.g2l.clear();
+        self.g2s.clear();
+        self.s2g.clear();
+    }
+}
+
+/// Reusable timing-simulation arena: the per-module instruction
+/// streams, the four token queues, and the result (order/cycles/busy)
+/// all keep their backing storage across [`simulate_into`] calls, so a
+/// warmed scratch runs the co-simulation with zero heap allocations
+/// per trial. One scratch belongs to one worker thread — it is `Send`
+/// but deliberately not shared (`&mut` API).
+#[derive(Debug, Default)]
+pub struct TimingScratch {
+    streams: [Vec<usize>; 3],
+    q: Queues,
+    order: Vec<(u64, usize)>,
+    cycles: u64,
+    busy: [u64; 3],
+}
+
+impl std::fmt::Debug for Queues {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Queues")
+            .field("l2g", &self.l2g.len())
+            .field("g2l", &self.g2l.len())
+            .field("g2s", &self.g2s.len())
+            .field("s2g", &self.s2g.len())
+            .finish()
+    }
+}
+
+impl TimingScratch {
+    /// Fresh (cold) scratch; buffers grow on first use and are then
+    /// reused forever.
+    pub fn new() -> TimingScratch {
+        TimingScratch::default()
+    }
+
+    /// Serialized execution order of the last successful
+    /// [`simulate_into`] run (ascending `(start_cycle, program_index)`).
+    pub fn order(&self) -> &[(u64, usize)] {
+        &self.order
+    }
+
+    /// Total pipeline cycles of the last successful run.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Per-module busy cycles of the last successful run.
+    pub fn busy(&self) -> [u64; 3] {
+        self.busy
+    }
+
+    /// Copy the last run's results out as an owned [`Schedule`]
+    /// (allocates; the profiling hot path reads the borrowing getters
+    /// instead).
+    pub fn to_schedule(&self) -> Schedule {
+        Schedule {
+            cycles: self.cycles,
+            order: self.order.clone(),
+            busy: self.busy,
+        }
+    }
+}
+
 /// Run the co-simulation; returns the schedule or a deadlock fault.
+///
+/// Thin allocating wrapper over [`simulate_into`] — bit-identical by
+/// construction (it returns the scratch's result buffers), pinned by
+/// `tests/sim_scratch.rs` against a frozen copy of the pre-scratch
+/// implementation.
 pub fn simulate_schedule(
     cfg: &VtaConfig,
     prog: &Program,
 ) -> Result<Schedule, Fault> {
+    let mut scratch = TimingScratch::new();
+    simulate_into(cfg, prog, &mut scratch)?;
+    Ok(Schedule {
+        cycles: scratch.cycles,
+        order: scratch.order,
+        busy: scratch.busy,
+    })
+}
+
+/// Run the co-simulation into a reusable scratch arena. On `Ok`, the
+/// schedule lives in the scratch ([`TimingScratch::order`] /
+/// [`TimingScratch::cycles`] / [`TimingScratch::busy`]) until the next
+/// call. Allocation-free once the scratch buffers have grown to the
+/// largest program seen.
+pub fn simulate_into(
+    cfg: &VtaConfig,
+    prog: &Program,
+    scratch: &mut TimingScratch,
+) -> Result<(), Fault> {
     // split instruction indices per module (order preserved)
-    let mut streams: [Vec<usize>; 3] = Default::default();
+    let streams = &mut scratch.streams;
+    for s in streams.iter_mut() {
+        s.clear();
+    }
     for (i, ins) in prog.instrs.iter().enumerate() {
         streams[ins.module() as usize].push(i);
     }
     let mut ptr = [0usize; 3]; // next instruction per module
     let mut free = [0u64; 3]; // module-ready times
     let mut busy = [0u64; 3];
-    let mut q = Queues::default();
-    let mut order: Vec<(u64, usize)> = Vec::with_capacity(prog.instrs.len());
+    let q = &mut scratch.q;
+    q.clear();
+    let order = &mut scratch.order;
+    order.clear();
+    order.reserve(prog.instrs.len());
     let mut done = 0usize;
     let total = prog.instrs.len();
     while done < total {
@@ -163,7 +263,7 @@ pub fn simulate_schedule(
                     }
                 }
             }
-            let dur = instr_cycles(cfg, prog, ins);
+            let dur = instr_cycles(cfg, ins);
             let end = start + dur;
             free[m] = end;
             busy[m] += dur;
@@ -204,10 +304,13 @@ pub fn simulate_schedule(
             )));
         }
     }
-    // serialized order = (start, program index); stable tie-break on index
-    order.sort();
-    let cycles = free.iter().copied().max().unwrap_or(0);
-    Ok(Schedule { cycles, order, busy })
+    // serialized order = (start, program index); the index makes every
+    // key distinct, so the unstable (in-place, allocation-free) sort is
+    // deterministic and identical to a stable one
+    order.sort_unstable();
+    scratch.cycles = free.iter().copied().max().unwrap_or(0);
+    scratch.busy = busy;
+    Ok(())
 }
 
 /// Cycle count only.
@@ -268,8 +371,7 @@ mod tests {
         let t = |idx: usize| {
             s.order.iter().find(|&&(_, i)| i == idx).unwrap().0
         };
-        let load_end =
-            t(1) + instr_cycles(&cfg(), &p, &p.instrs[1]);
+        let load_end = t(1) + instr_cycles(&cfg(), &p.instrs[1]);
         assert!(t(2) >= load_end, "gemm must wait for load");
     }
 
@@ -281,7 +383,7 @@ mod tests {
         let t = |idx: usize| {
             s.order.iter().find(|&&(_, i)| i == idx).unwrap().0
         };
-        let load_end = t(1) + instr_cycles(&cfg(), &p, &p.instrs[1]);
+        let load_end = t(1) + instr_cycles(&cfg(), &p.instrs[1]);
         assert!(t(2) < load_end, "gemm should overlap the load");
     }
 
@@ -314,25 +416,23 @@ mod tests {
             acc_base: 0, inp_base: 0, wgt_base: 0, reset: false,
             dep: Dep::NONE,
         };
-        let p = Program::default();
-        let small = instr_cycles(&c, &p, &mk(1, 1));
-        let big = instr_cycles(&c, &p, &mk(8, 4));
+        let small = instr_cycles(&c, &mk(1, 1));
+        let big = instr_cycles(&c, &mk(8, 4));
         assert_eq!(big - c.gemm_overhead, (small - c.gemm_overhead) * 32);
     }
 
     #[test]
     fn dma_cost_scales_with_bytes_and_rows() {
         let c = cfg();
-        let p = Program::default();
         let mk = |rows: usize, cols: usize| Instr::Load {
             buf: Buffer::Inp,
             dma: Dma { sram_base: 0, dram_base: 0, rows, cols,
                        dram_stride: cols },
             dep: Dep::NONE,
         };
-        let one = instr_cycles(&c, &p, &mk(1, 1));
-        let wide = instr_cycles(&c, &p, &mk(1, 64));
-        let tall = instr_cycles(&c, &p, &mk(64, 1));
+        let one = instr_cycles(&c, &mk(1, 1));
+        let wide = instr_cycles(&c, &mk(1, 64));
+        let tall = instr_cycles(&c, &mk(64, 1));
         assert!(wide > one);
         assert!(tall > wide, "row overhead should make tall DMAs slower");
     }

@@ -1,0 +1,629 @@
+//! Frozen pre-rewrite simulator check path, copied verbatim from the tree
+//! before the scratch-arena/sweep rewrite of `vta::timing` and
+//! `vta::functional`. Tests and benches pin the rewritten hot path against
+//! this reference: [`legacy_check`] must produce bit-identical verdicts and
+//! cycle counts, and [`legacy_schedule`] bit-identical serialized orders.
+//!
+//! Do NOT "fix" or modernise this file — its whole value is that it does not
+//! change when the library does. Shared public types (`VtaConfig`, the ISA,
+//! `Schedule`, `Fault`, `Verdict`) are imported from the library; only the
+//! *algorithms* are frozen here.
+#![allow(dead_code)]
+
+use ml2tuner::vta::config::VtaConfig;
+use ml2tuner::vta::isa::{buf_bytes, Buffer, Instr, Module, Program};
+use ml2tuner::vta::timing::Schedule;
+use ml2tuner::vta::{Fault, Verdict};
+
+// ------------------------------------------------------------------ check
+
+/// Frozen equivalent of the old `Simulator::check`: timing co-simulation,
+/// then address bounds, then the pending-set hazard pass — same fault
+/// precedence as the rewritten `Simulator::check_with`.
+pub fn legacy_check(cfg: &VtaConfig, prog: &Program) -> Verdict {
+    let schedule = match simulate_schedule(cfg, prog) {
+        Ok(s) => s,
+        Err(f) => return Verdict::Invalid { fault: f, cycles: 0 },
+    };
+    if let Err(fault) = check_addresses(cfg, prog) {
+        return Verdict::Invalid { fault, cycles: schedule.cycles };
+    }
+    if let Err(fault) = check_hazards(cfg, prog, &schedule) {
+        return Verdict::Invalid { fault, cycles: schedule.cycles };
+    }
+    Verdict::Valid { cycles: schedule.cycles }
+}
+
+/// Frozen timing model entry point (old `timing::simulate_schedule`).
+pub fn legacy_schedule(
+    cfg: &VtaConfig,
+    prog: &Program,
+) -> Result<Schedule, Fault> {
+    simulate_schedule(cfg, prog)
+}
+
+// ----------------------------------------------------------------- timing
+
+/// Duration of one instruction in cycles (old 3-argument signature — the
+/// `prog` parameter was never used; the rewrite dropped it).
+fn instr_cycles(cfg: &VtaConfig, prog: &Program, ins: &Instr) -> u64 {
+    match ins {
+        Instr::Load { buf, dma, .. } => {
+            let bytes = (dma.elems() * buf_bytes(cfg, *buf)) as u64;
+            cfg.dma_latency
+                + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+                + dma.rows as u64 * cfg.dma_row_overhead
+        }
+        Instr::Memset { count, .. } => {
+            8 + *count as u64 * cfg.memset_cycles_per_vec
+        }
+        Instr::LoadUop { uop_begin, uop_end, .. } => {
+            let bytes = ((uop_end - uop_begin) * cfg.uop_bytes()) as u64;
+            cfg.dma_latency + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+        }
+        Instr::Gemm { ubuf_begin, ubuf_end, lp0, lp1, .. } => {
+            // MXU issues one block-op per cycle once streaming.
+            let _ = prog; // uop table not needed for the op count
+            let ops = (ubuf_end - ubuf_begin) as u64
+                * lp0.extent.max(1) as u64
+                * lp1.extent.max(1) as u64;
+            cfg.gemm_overhead + ops
+        }
+        Instr::Alu { count, .. } => {
+            cfg.alu_overhead + *count as u64 * cfg.alu_cycles_per_vec
+        }
+        Instr::Store { dma, .. } => {
+            // store path writes int8 lanes: block bytes per vector
+            let bytes = (dma.elems() * cfg.block()) as u64;
+            cfg.dma_latency
+                + bytes.div_ceil(cfg.dma_bytes_per_cycle)
+                + dma.rows as u64 * cfg.dma_row_overhead
+        }
+        Instr::Finish => cfg.finish_cycles,
+    }
+}
+
+/// The four token FIFOs, as (queue of push-times).
+#[derive(Default)]
+struct Queues {
+    l2g: std::collections::VecDeque<u64>, // load → compute (data ready)
+    g2l: std::collections::VecDeque<u64>, // compute → load (buffer free)
+    g2s: std::collections::VecDeque<u64>, // compute → store (data ready)
+    s2g: std::collections::VecDeque<u64>, // store → compute (buffer free)
+}
+
+/// Run the co-simulation; returns the schedule or a deadlock fault.
+fn simulate_schedule(
+    cfg: &VtaConfig,
+    prog: &Program,
+) -> Result<Schedule, Fault> {
+    // split instruction indices per module (order preserved)
+    let mut streams: [Vec<usize>; 3] = Default::default();
+    for (i, ins) in prog.instrs.iter().enumerate() {
+        streams[ins.module() as usize].push(i);
+    }
+    let mut ptr = [0usize; 3]; // next instruction per module
+    let mut free = [0u64; 3]; // module-ready times
+    let mut busy = [0u64; 3];
+    let mut q = Queues::default();
+    let mut order: Vec<(u64, usize)> = Vec::with_capacity(prog.instrs.len());
+    let mut done = 0usize;
+    let total = prog.instrs.len();
+    while done < total {
+        let mut advanced = false;
+        // pick, among runnable modules, the one that can start earliest
+        let mut best: Option<(u64, usize)> = None; // (start, module)
+        for m in 0..3 {
+            if ptr[m] >= streams[m].len() {
+                continue;
+            }
+            let idx = streams[m][ptr[m]];
+            let dep = prog.instrs[idx].dep();
+            // peek required tokens
+            let mut start = free[m];
+            let mut ok = true;
+            let (prev_q, next_q): (
+                Option<&std::collections::VecDeque<u64>>,
+                Option<&std::collections::VecDeque<u64>>,
+            ) = match module_of(m) {
+                Module::Load => (None, Some(&q.g2l)),
+                Module::Compute => (Some(&q.l2g), Some(&q.s2g)),
+                Module::Store => (Some(&q.g2s), None),
+            };
+            if dep.pop_prev {
+                match prev_q.and_then(|qq| qq.front()) {
+                    Some(&t) => start = start.max(t),
+                    None => ok = false,
+                }
+            }
+            if dep.pop_next {
+                match next_q.and_then(|qq| qq.front()) {
+                    Some(&t) => start = start.max(t),
+                    None => ok = false,
+                }
+            }
+            let earliest = match best {
+                None => true,
+                Some((s, _)) => start < s,
+            };
+            if ok && earliest {
+                best = Some((start, m));
+            }
+        }
+        if let Some((start, m)) = best {
+            let idx = streams[m][ptr[m]];
+            let ins = &prog.instrs[idx];
+            let dep = ins.dep();
+            // consume tokens
+            match module_of(m) {
+                Module::Load => {
+                    if dep.pop_next {
+                        q.g2l.pop_front();
+                    }
+                }
+                Module::Compute => {
+                    if dep.pop_prev {
+                        q.l2g.pop_front();
+                    }
+                    if dep.pop_next {
+                        q.s2g.pop_front();
+                    }
+                }
+                Module::Store => {
+                    if dep.pop_prev {
+                        q.g2s.pop_front();
+                    }
+                }
+            }
+            let dur = instr_cycles(cfg, prog, ins);
+            let end = start + dur;
+            free[m] = end;
+            busy[m] += dur;
+            // publish tokens at end time
+            match module_of(m) {
+                Module::Load => {
+                    if dep.push_next {
+                        q.l2g.push_back(end);
+                    }
+                }
+                Module::Compute => {
+                    if dep.push_prev {
+                        q.g2l.push_back(end);
+                    }
+                    if dep.push_next {
+                        q.g2s.push_back(end);
+                    }
+                }
+                Module::Store => {
+                    if dep.push_prev {
+                        q.s2g.push_back(end);
+                    }
+                }
+            }
+            order.push((start, idx));
+            ptr[m] += 1;
+            done += 1;
+            advanced = true;
+        }
+        if !advanced {
+            let stuck: Vec<String> = (0..3)
+                .filter(|&m| ptr[m] < streams[m].len())
+                .map(|m| format!("{:?}@{}", module_of(m), ptr[m]))
+                .collect();
+            return Err(Fault::Deadlock(format!(
+                "dependency tokens never arrive: {}",
+                stuck.join(", ")
+            )));
+        }
+    }
+    // serialized order = (start, program index); stable tie-break on index
+    order.sort();
+    let cycles = free.iter().copied().max().unwrap_or(0);
+    Ok(Schedule { cycles, order, busy })
+}
+
+fn module_of(m: usize) -> Module {
+    match m {
+        0 => Module::Load,
+        1 => Module::Compute,
+        _ => Module::Store,
+    }
+}
+
+// ------------------------------------------------------------------ bounds
+
+/// Address-bounds pass: first crash or ACC-wrap corruption, program order.
+fn check_addresses(cfg: &VtaConfig, prog: &Program) -> Result<(), Fault> {
+    let mut corruption: Option<Fault> = None;
+    let windows = uop_windows(prog);
+    for (idx, ins) in prog.instrs.iter().enumerate() {
+        match ins {
+            Instr::Load { buf, dma, .. } => {
+                let cap = capacity(cfg, *buf);
+                let dram_cap = match buf {
+                    Buffer::Inp => prog.dram_inp_vecs,
+                    Buffer::Wgt => prog.dram_wgt_blocks,
+                    Buffer::Acc => prog.dram_inp_vecs, // acc loads read inp space
+                };
+                if dma.dram_end() > dram_cap {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: load DMA reads past DRAM \
+                         ({} > {dram_cap})",
+                        dma.dram_end()
+                    )));
+                }
+                if dma.sram_end() > cap {
+                    match buf {
+                        Buffer::Acc => hold_corruption(
+                            &mut corruption,
+                            format!(
+                                "instr {idx}: ACC load wraps ({} > {cap})",
+                                dma.sram_end()
+                            ),
+                        ),
+                        _ => {
+                            return Err(Fault::RegisterError(format!(
+                                "instr {idx}: {buf:?} load overflows \
+                                 scratchpad ({} > {cap})",
+                                dma.sram_end()
+                            )))
+                        }
+                    }
+                }
+            }
+            Instr::Memset { buf, sram_base, count, .. } => {
+                let cap = capacity(cfg, *buf);
+                if sram_base + count > cap {
+                    match buf {
+                        Buffer::Acc => hold_corruption(
+                            &mut corruption,
+                            format!("instr {idx}: ACC memset wraps"),
+                        ),
+                        _ => {
+                            return Err(Fault::RegisterError(format!(
+                                "instr {idx}: {buf:?} memset overflows \
+                                 scratchpad ({} > {cap})",
+                                sram_base + count
+                            )))
+                        }
+                    }
+                }
+            }
+            Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => {
+                if *uop_end > prog.uops.len() || uop_begin > uop_end {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: uop table range [{uop_begin},{uop_end}) \
+                         out of bounds"
+                    )));
+                }
+                if sram_base + (uop_end - uop_begin) > cfg.uop_capacity() {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: uop buffer overflow \
+                         ({} > {})",
+                        sram_base + (uop_end - uop_begin),
+                        cfg.uop_capacity()
+                    )));
+                }
+            }
+            Instr::Gemm { reset, .. } => {
+                let r = gemm_ranges(prog, ins, idx, &windows)?;
+                if !reset && r.inp.1 > cfg.inp_capacity() {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: GEMM reads INP past scratchpad \
+                         ({} > {})",
+                        r.inp.1,
+                        cfg.inp_capacity()
+                    )));
+                }
+                if !reset && r.wgt.1 > cfg.wgt_capacity() {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: GEMM reads WGT past scratchpad \
+                         ({} > {})",
+                        r.wgt.1,
+                        cfg.wgt_capacity()
+                    )));
+                }
+                if r.ubuf.1 > cfg.uop_capacity() {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: GEMM uop range past uop buffer"
+                    )));
+                }
+                if r.acc.1 > cfg.acc_capacity() {
+                    hold_corruption(
+                        &mut corruption,
+                        format!(
+                            "instr {idx}: GEMM ACC index wraps ({} > {})",
+                            r.acc.1,
+                            cfg.acc_capacity()
+                        ),
+                    );
+                }
+            }
+            Instr::Alu { acc_base, count, .. } => {
+                if acc_base + count > cfg.acc_capacity() {
+                    hold_corruption(
+                        &mut corruption,
+                        format!("instr {idx}: ALU ACC range wraps"),
+                    );
+                }
+            }
+            Instr::Store { dma, .. } => {
+                if dma.dram_end() > prog.dram_out_vecs {
+                    return Err(Fault::RegisterError(format!(
+                        "instr {idx}: store DMA writes past DRAM \
+                         ({} > {})",
+                        dma.dram_end(),
+                        prog.dram_out_vecs
+                    )));
+                }
+                if dma.sram_end() > cfg.acc_capacity() {
+                    hold_corruption(
+                        &mut corruption,
+                        format!("instr {idx}: store reads wrapped ACC"),
+                    );
+                }
+            }
+            Instr::Finish => {}
+        }
+    }
+    match corruption {
+        Some(f) => Err(f),
+        None => Ok(()),
+    }
+}
+
+fn hold_corruption(slot: &mut Option<Fault>, msg: String) {
+    if slot.is_none() {
+        *slot = Some(Fault::Corruption(msg));
+    }
+}
+
+fn capacity(cfg: &VtaConfig, buf: Buffer) -> usize {
+    match buf {
+        Buffer::Inp => cfg.inp_capacity(),
+        Buffer::Wgt => cfg.wgt_capacity(),
+        Buffer::Acc => cfg.acc_capacity(),
+    }
+}
+
+// ----------------------------------------------------------------- ranges
+
+/// Address spaces for hazard tracking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Space {
+    Inp,
+    Wgt,
+    Acc,
+    Ubuf,
+}
+
+/// One access: half-open element range with a write flag.
+#[derive(Clone, Copy, Debug)]
+struct Access {
+    space: Space,
+    lo: usize,
+    hi: usize,
+    write: bool,
+}
+
+struct GemmRanges {
+    acc: (usize, usize),
+    inp: (usize, usize),
+    wgt: (usize, usize),
+    ubuf: (usize, usize),
+}
+
+/// Uop-buffer windows established by LoadUop instructions, in program
+/// order: `(instr_idx, sram_base, uop_begin, uop_end)`.
+type UopWindows = Vec<(usize, usize, usize, usize)>;
+
+fn uop_windows(prog: &Program) -> UopWindows {
+    prog.instrs
+        .iter()
+        .enumerate()
+        .filter_map(|(i, ins)| match ins {
+            Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => {
+                Some((i, *sram_base, *uop_begin, *uop_end))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// Bounding element ranges a GEMM instruction touches (exact for the dense
+/// loops our compiler emits).
+fn gemm_ranges(
+    prog: &Program,
+    ins: &Instr,
+    idx: usize,
+    windows: &UopWindows,
+) -> Result<GemmRanges, Fault> {
+    let Instr::Gemm {
+        ubuf_begin, ubuf_end, lp0, lp1, acc_base, inp_base, wgt_base, ..
+    } = ins
+    else {
+        unreachable!()
+    };
+    // The uop-buffer contents are whatever the last covering LoadUop put
+    // there (our compiler emits one LoadUop up front).
+    let table = windows
+        .iter()
+        .rev()
+        .filter(|(i, ..)| *i < idx)
+        .find(|(_, sram, b, e)| {
+            *sram <= *ubuf_begin && *ubuf_end <= sram + (e - b)
+        })
+        .map(|(_, sram, b, e)| (*sram, *b, *e));
+    let Some((sram, tb, _te)) = table else {
+        return Err(Fault::RegisterError(format!(
+            "instr {idx}: GEMM reads uop buffer range \
+             [{ubuf_begin},{ubuf_end}) never loaded"
+        )));
+    };
+    let uops = &prog.uops[tb + (ubuf_begin - sram)..tb + (ubuf_end - sram)];
+    if uops.is_empty() || lp0.extent == 0 || lp1.extent == 0 {
+        return Ok(GemmRanges {
+            acc: (*acc_base, *acc_base),
+            inp: (*inp_base, *inp_base),
+            wgt: (*wgt_base, *wgt_base),
+            ubuf: (*ubuf_begin, *ubuf_end),
+        });
+    }
+    let span0 = |off: usize| (lp0.extent - 1) * off;
+    let span1 = |off: usize| (lp1.extent - 1) * off;
+    // single pass over the (small) uop window for all six extrema
+    let mut mins = [usize::MAX; 3];
+    let mut maxs = [0usize; 3];
+    for u in uops {
+        for (k, v) in [u.acc, u.inp, u.wgt].into_iter().enumerate() {
+            mins[k] = mins[k].min(v);
+            maxs[k] = maxs[k].max(v);
+        }
+    }
+    Ok(GemmRanges {
+        acc: (
+            acc_base + mins[0],
+            acc_base + maxs[0] + span0(lp0.acc_off) + span1(lp1.acc_off)
+                + 1,
+        ),
+        inp: (
+            inp_base + mins[1],
+            inp_base + maxs[1] + span0(lp0.inp_off) + span1(lp1.inp_off)
+                + 1,
+        ),
+        wgt: (
+            wgt_base + mins[2],
+            wgt_base + maxs[2] + span0(lp0.wgt_off) + span1(lp1.wgt_off)
+                + 1,
+        ),
+        ubuf: (*ubuf_begin, *ubuf_end),
+    })
+}
+
+fn accesses(prog: &Program, idx: usize, windows: &UopWindows) -> Vec<Access> {
+    match &prog.instrs[idx] {
+        Instr::Load { buf, dma, .. } => vec![Access {
+            space: space_of(*buf),
+            lo: dma.sram_base,
+            hi: dma.sram_end(),
+            write: true,
+        }],
+        Instr::Memset { buf, sram_base, count, .. } => vec![Access {
+            space: space_of(*buf),
+            lo: *sram_base,
+            hi: sram_base + count,
+            write: true,
+        }],
+        Instr::LoadUop { sram_base, uop_begin, uop_end, .. } => vec![Access {
+            space: Space::Ubuf,
+            lo: *sram_base,
+            hi: sram_base + (uop_end - uop_begin),
+            write: true,
+        }],
+        ins @ Instr::Gemm { reset, .. } => match gemm_ranges(prog, ins, idx, windows)
+        {
+            // reset-mode GEMM only zero-fills ACC: no INP/WGT reads.
+            Ok(r) if *reset => vec![
+                Access { space: Space::Acc, lo: r.acc.0, hi: r.acc.1,
+                         write: true },
+                Access { space: Space::Ubuf, lo: r.ubuf.0, hi: r.ubuf.1,
+                         write: false },
+            ],
+            Ok(r) => vec![
+                Access { space: Space::Acc, lo: r.acc.0, hi: r.acc.1,
+                         write: true },
+                Access { space: Space::Inp, lo: r.inp.0, hi: r.inp.1,
+                         write: false },
+                Access { space: Space::Wgt, lo: r.wgt.0, hi: r.wgt.1,
+                         write: false },
+                Access { space: Space::Ubuf, lo: r.ubuf.0, hi: r.ubuf.1,
+                         write: false },
+            ],
+            Err(_) => Vec::new(), // bounds pass reports this as a crash
+        },
+        Instr::Alu { acc_base, count, .. } => vec![Access {
+            space: Space::Acc,
+            lo: *acc_base,
+            hi: acc_base + count,
+            write: true,
+        }],
+        Instr::Store { dma, .. } => vec![Access {
+            space: Space::Acc,
+            lo: dma.sram_base,
+            hi: dma.sram_end(),
+            write: false,
+        }],
+        Instr::Finish => Vec::new(),
+    }
+}
+
+fn space_of(buf: Buffer) -> Space {
+    match buf {
+        Buffer::Inp => Space::Inp,
+        Buffer::Wgt => Space::Wgt,
+        Buffer::Acc => Space::Acc,
+    }
+}
+
+// ----------------------------------------------------------------- hazard
+
+/// Frozen pending-set hazard pass. `schedule.order` is the serialized
+/// execution order (by start time) from the timing model; any conflicting
+/// pair that executes out of *program* order corrupts data.
+fn check_hazards(
+    _cfg: &VtaConfig,
+    prog: &Program,
+    schedule: &Schedule,
+) -> Result<(), Fault> {
+    // pending = program-earlier instructions that have not yet executed.
+    // When instruction k executes while j < k is pending, (j, k) runs out of
+    // program order: conflict ⇒ corruption.
+    let mut executed = vec![false; prog.instrs.len()];
+    let mut frontier = 0usize; // all idx < frontier executed
+    let mut pending: Vec<usize> = Vec::new();
+    let windows = uop_windows(prog);
+    let acc_cache: Vec<Vec<Access>> = (0..prog.instrs.len())
+        .map(|i| accesses(prog, i, &windows))
+        .collect();
+    for &(_, k) in &schedule.order {
+        // instructions k jumps over become pending FIRST — k itself may
+        // invert against them
+        if k >= frontier {
+            for j in frontier..k {
+                if !executed[j] {
+                    pending.push(j);
+                }
+            }
+            frontier = k + 1;
+        }
+        for &j in &pending {
+            if j < k
+                && conflicts(acc_cache[j].as_slice(),
+                             acc_cache[k].as_slice())
+            {
+                return Err(Fault::Corruption(format!(
+                    "instr {k} executes before conflicting instr {j} \
+                     (cross-thread/double-buffer scratchpad aliasing)"
+                )));
+            }
+        }
+        executed[k] = true;
+        pending.retain(|&j| !executed[j]);
+    }
+    Ok(())
+}
+
+fn conflicts(a: &[Access], b: &[Access]) -> bool {
+    for x in a {
+        for y in b {
+            if x.space == y.space
+                && (x.write || y.write)
+                && x.lo < y.hi
+                && y.lo < x.hi
+            {
+                return true;
+            }
+        }
+    }
+    false
+}

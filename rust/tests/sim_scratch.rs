@@ -1,0 +1,157 @@
+//! Pin: the scratch-arena profiling hot path (`simulate_into` +
+//! sweep-based hazard checking + `check_with`) is bit-identical to the
+//! frozen pre-rewrite implementation in `tests/common/legacy_sim.rs` —
+//! verdicts, cycle counts, fault messages, and serialized execution
+//! orders — across both search spaces, all four targets, and arbitrary
+//! scratch reuse. Plus the check-vs-execute equivalence sweep: a
+//! `check`-valid program's pipelined execution matches program-order
+//! execution bit-for-bit (no hazard slipped through).
+
+#[path = "common/legacy_sim.rs"]
+mod legacy_sim;
+
+use ml2tuner::compiler::schedule::{space_for, SpaceKind};
+use ml2tuner::compiler::Compiler;
+use ml2tuner::tuner::TuningEnv;
+use ml2tuner::util::prop::{self, assert_prop};
+use ml2tuner::util::rng::Rng;
+use ml2tuner::vta::{
+    config::VtaConfig, functional, layout, targets, SimScratch, Simulator,
+};
+use ml2tuner::workloads::{resnet18, synth};
+
+/// Deterministic schedule-index corpus over a space (with replacement —
+/// duplicates deliberately re-exercise a warmed scratch on the same
+/// program).
+fn corpus(rng: &mut Rng, space_len: usize, n: usize) -> Vec<usize> {
+    (0..n).map(|_| rng.below(space_len)).collect()
+}
+
+#[test]
+fn check_with_matches_legacy_across_spaces_and_targets() {
+    let mut rng = Rng::new(0x5C12A7C4);
+    // ONE scratch reused across every target, space, layer, and program:
+    // arena reuse must be semantically invisible even across hardware
+    // configs with different buffer capacities.
+    let mut scratch = SimScratch::new();
+    let mut checked = 0usize;
+    let mut faults = 0usize;
+    for cfg in targets::all() {
+        let compiler = Compiler::new(cfg.clone());
+        let sim = Simulator::new(cfg.clone());
+        for kind in [SpaceKind::Paper, SpaceKind::Extended] {
+            for name in ["conv2", "conv5"] {
+                let layer = resnet18::layer(name).unwrap();
+                let space = space_for(&layer, kind);
+                for i in corpus(&mut rng, space.len(), 10) {
+                    let s = space.schedule(i);
+                    let prog = &compiler.compile(&layer, &s).program;
+                    let legacy = legacy_sim::legacy_check(&cfg, prog);
+                    let fresh = sim.check(prog);
+                    let reused = sim.check_with(prog, &mut scratch);
+                    assert_eq!(legacy, fresh,
+                               "{name} {kind:?} {s}: fresh-scratch \
+                                verdict diverged from legacy");
+                    assert_eq!(legacy, reused,
+                               "{name} {kind:?} {s}: reused-scratch \
+                                verdict diverged from legacy");
+                    if let Ok(sched) =
+                        legacy_sim::legacy_schedule(&cfg, prog)
+                    {
+                        assert_eq!(sched.order.as_slice(),
+                                   scratch.timing.order(),
+                                   "{name} {kind:?} {s}: execution \
+                                    order diverged");
+                        assert_eq!(sched.cycles, scratch.timing.cycles());
+                        assert_eq!(sched.busy, scratch.timing.busy());
+                    }
+                    if !legacy.is_valid() {
+                        faults += 1;
+                    }
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(checked, 4 * 2 * 2 * 10);
+    // the corpus must actually exercise the fault paths, not just Valid
+    assert!(faults > 0, "corpus never hit a fault path");
+}
+
+#[test]
+fn prop_check_with_matches_legacy_on_random_layers() {
+    // random layers × random extended-space schedules: same three-way
+    // agreement as the frozen corpus, beyond the resnet18 geometry
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let mut scratch = SimScratch::new();
+    prop::check(60, |g| {
+        let layer = synth::random_layer(g.rng());
+        let space = space_for(&layer, SpaceKind::Extended);
+        let s = space.schedule(g.usize_in(0, space.len() - 1));
+        let prog = &compiler.compile(&layer, &s).program;
+        let legacy = legacy_sim::legacy_check(&cfg, prog);
+        let reused = sim.check_with(prog, &mut scratch);
+        assert_prop(
+            legacy == reused,
+            &format!("{} {s}: {legacy:?} != {reused:?}", layer.name),
+        )
+    });
+}
+
+#[test]
+fn prop_check_valid_implies_pipelined_equals_program_order() {
+    // verdict-equivalence: if the hazard sweep says Valid, executing in
+    // the pipelined (serialized) order must produce the same bits as
+    // executing in program order — i.e. the sweep missed nothing that
+    // actually corrupts data.
+    let cfg = VtaConfig::zcu102();
+    let compiler = Compiler::new(cfg.clone());
+    let sim = Simulator::new(cfg.clone());
+    let mut scratch = SimScratch::new();
+    prop::check(25, |g| {
+        let layer = synth::random_layer(g.rng());
+        let space = space_for(&layer, SpaceKind::Extended);
+        let s = space.schedule(g.usize_in(0, space.len() - 1));
+        let prog = &compiler.compile(&layer, &s).program;
+        if !sim.check_with(prog, &mut scratch).is_valid() {
+            return Ok(()); // only Valid carries the guarantee
+        }
+        let seed = g.u64();
+        let x = synth::input_data(&layer, seed);
+        let w = synth::weight_data(&layer, seed);
+        let dram = functional::Dram {
+            inp: layout::pack_input(&cfg, &x, layer.h, layer.w, layer.c),
+            wgt: layout::pack_weights(&cfg, &w, layer.kh, layer.kw,
+                                      layer.c, layer.kc),
+            out_vecs: prog.dram_out_vecs,
+        };
+        let pipelined = functional::execute(&cfg, prog, &dram)
+            .map_err(|f| format!("valid program crashed: {f:?}"))?;
+        let serial = functional::execute_program_order(&cfg, prog, &dram)
+            .map_err(|f| format!("program-order run crashed: {f:?}"))?;
+        assert_prop(
+            pipelined == serial,
+            &format!("{} {s}: pipelined output differs from \
+                      program order", layer.name),
+        )
+    });
+}
+
+#[test]
+fn profile_batch_is_jobs_invariant_with_per_worker_scratch() {
+    use ml2tuner::engine::Engine;
+    // per-worker scratch arenas must not leak into records: the same
+    // batch profiled with 1 and 4 workers is record-for-record identical
+    let env = TuningEnv::with_space(
+        VtaConfig::zcu102(),
+        resnet18::layer("conv4").unwrap(),
+        SpaceKind::Extended,
+    );
+    let mut rng = Rng::new(0xBA7C);
+    let batch = corpus(&mut rng, env.space.len(), 48);
+    let r1 = Engine::with_jobs(1).profile_batch(&env, &batch);
+    let r4 = Engine::with_jobs(4).profile_batch(&env, &batch);
+    assert_eq!(format!("{r1:?}"), format!("{r4:?}"));
+}
